@@ -1,0 +1,20 @@
+//! Fig. 3 — oracle forecasts: baseline vs optimistic vs pessimistic.
+//!
+//!     cargo run --release --example fig3_oracle_policies [-- <num_apps>]
+
+use zoe_shaper::config::SimConfig;
+use zoe_shaper::experiments::fig3;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = SimConfig::small();
+    if let Some(n) = std::env::args().nth(1).and_then(|s| s.parse().ok()) {
+        cfg.workload.num_apps = n;
+    }
+    println!(
+        "Fig. 3 — oracle resource shaping, {} apps on {} hosts\n",
+        cfg.workload.num_apps, cfg.cluster.hosts
+    );
+    let reports = fig3::run(&cfg)?;
+    println!("{}", fig3::render(&reports));
+    Ok(())
+}

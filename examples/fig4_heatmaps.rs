@@ -1,0 +1,49 @@
+//! Fig. 4 — K1 x K2 heat maps for ARIMA (4a) and GP (4b) forecasting.
+//!
+//!     cargo run --release --example fig4_heatmaps [-- arima|gp|gp-pjrt|both]
+//!
+//! Default runs both ARIMA and native GP on a reduced grid; pass `gp-pjrt`
+//! to push the GP arm through the AOT artifact (slower).
+
+use std::sync::Arc;
+
+use zoe_shaper::config::{ForecasterKind, SimConfig};
+use zoe_shaper::experiments::fig4;
+use zoe_shaper::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let which = std::env::args().nth(1).unwrap_or_else(|| "both".into());
+    let mut cfg = SimConfig::small();
+    cfg.workload.num_apps = 250; // keep the 24-cell sweep tractable
+    let k1 = [0.0, 0.05, 0.10, 0.25, 0.50, 1.0];
+    let k2 = [0.0, 1.0, 2.0, 3.0];
+    let mut arms: Vec<ForecasterKind> = Vec::new();
+    match which.as_str() {
+        "arima" => arms.push(ForecasterKind::Arima),
+        "gp" => arms.push(ForecasterKind::GpNative),
+        "gp-pjrt" => arms.push(ForecasterKind::GpPjrt),
+        _ => {
+            arms.push(ForecasterKind::Arima);
+            arms.push(ForecasterKind::GpNative);
+        }
+    }
+    let runtime = if arms.contains(&ForecasterKind::GpPjrt) {
+        Some(Arc::new(Runtime::from_default_dir()?))
+    } else {
+        None
+    };
+    for fk in arms {
+        let sweep = fig4::run(&cfg, fk, runtime.clone(), &k1, &k2)?;
+        println!("{}", fig4::render(&sweep));
+        if let Some(best) = fig4::best_cell(&sweep, 0.05) {
+            println!(
+                "best cell (<=5% failures): K1={:.0}% K2={:.0} -> {:.2}x turnaround, {:.3} slack\n",
+                best.k1 * 100.0,
+                best.k2,
+                best.turnaround_ratio,
+                best.mem_slack
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,31 @@
+//! Fig. 5 — the §5.1 prototype experiment, paced against the wall clock:
+//! 10 servers x 8 cores x 64 GB, 100 apps (60% elastic / 40% rigid),
+//! arrivals ~ N(120 s, 40 s), monitor 60 s, grace 10 min, K1=5%, K2=3,
+//! GP forecasts through the AOT JAX/Pallas artifact over PJRT.
+//!
+//!     cargo run --release --example fig5_prototype [-- <accel>]
+//!
+//! Default acceleration 7200x compresses the ~half-day workload into a few
+//! seconds of wall-clock while keeping the closed monitor->forecast->shape
+//! loop real.
+
+use zoe_shaper::config::SimConfig;
+use zoe_shaper::experiments::fig5;
+
+fn main() -> anyhow::Result<()> {
+    let accel: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7200.0);
+    let cfg = SimConfig::prototype();
+    println!(
+        "Fig. 5 — prototype: {} hosts x {:.0} cores x {:.0} GB, {} apps, {accel}x real time\n",
+        cfg.cluster.hosts,
+        cfg.cluster.cores_per_host,
+        cfg.cluster.mem_per_host_gb,
+        cfg.workload.num_apps
+    );
+    let out = fig5::run(&cfg, None, accel)?;
+    println!("{}", fig5::render(&out));
+    Ok(())
+}

@@ -1,0 +1,161 @@
+"""AOT lowering: jax/Pallas GP forecaster -> HLO text artifacts for Rust.
+
+Emits one HLO module per (kernel kind, history window h, batch size)
+combination, plus ``manifest.json`` describing shapes so the Rust runtime
+(``rust/src/runtime``) can validate its inputs before execution.
+
+Interchange format is HLO **text**, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Usage (from ``make artifacts``):
+    cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The paper (Fig. 2) evaluates history windows h in {10, 20, 40} with
+# N = h stored patterns; pattern dim p = h + 1 (Eq. 5: time + h values).
+HISTORIES = (10, 20, 40)
+KINDS = ("exp", "rbf")
+# Hot-path batch: the Rust shaper slabs per-component forecasts into
+# fixed-size batches and pads the tail slab.
+BATCH = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text()
+    # The Rust-side xla_extension 0.5.1 cannot execute typed-FFI
+    # custom-calls (e.g. LAPACK lowerings); model.py uses unrolled pure-jnp
+    # linear algebra precisely to avoid them. Fail the build if one leaks.
+    assert "custom-call" not in text, (
+        "lowered HLO contains a custom-call; the Rust PJRT client cannot "
+        "run it — replace the offending op with pure-jnp code in model.py"
+    )
+    return text
+
+
+def lower_single(kind: str, h: int):
+    """Lower the single-series forecaster for history window ``h``."""
+    n, p = h, h + 1
+    f32 = jnp.float32
+    specs = (
+        jax.ShapeDtypeStruct((n, p), f32),   # x_train
+        jax.ShapeDtypeStruct((n,), f32),     # y_train
+        jax.ShapeDtypeStruct((p,), f32),     # x_query
+        jax.ShapeDtypeStruct((), f32),       # lengthscale
+        jax.ShapeDtypeStruct((), f32),       # noise
+    )
+    fn = lambda xt, yt, xq, ls, nz: model.gp_forecast(xt, yt, xq, ls, nz,
+                                                      kind=kind)
+    return jax.jit(fn).lower(*specs), {
+        "inputs": [
+            {"name": "x_train", "shape": [n, p]},
+            {"name": "y_train", "shape": [n]},
+            {"name": "x_query", "shape": [p]},
+            {"name": "lengthscale", "shape": []},
+            {"name": "noise", "shape": []},
+        ],
+        "outputs": [
+            {"name": "mean", "shape": []},
+            {"name": "var", "shape": []},
+            {"name": "lml", "shape": []},
+        ],
+    }
+
+
+def lower_batched(kind: str, h: int, b: int):
+    """Lower the batched forecaster: the Rust hot-path artifact."""
+    n, p = h, h + 1
+    f32 = jnp.float32
+    specs = (
+        jax.ShapeDtypeStruct((b, n, p), f32),
+        jax.ShapeDtypeStruct((b, n), f32),
+        jax.ShapeDtypeStruct((b, p), f32),
+        jax.ShapeDtypeStruct((b,), f32),
+        jax.ShapeDtypeStruct((b,), f32),
+    )
+    fn = lambda xt, yt, xq, ls, nz: model.gp_forecast_batched(
+        xt, yt, xq, ls, nz, kind=kind)
+    return jax.jit(fn).lower(*specs), {
+        "inputs": [
+            {"name": "x_train", "shape": [b, n, p]},
+            {"name": "y_train", "shape": [b, n]},
+            {"name": "x_query", "shape": [b, p]},
+            {"name": "lengthscale", "shape": [b]},
+            {"name": "noise", "shape": [b]},
+        ],
+        "outputs": [
+            {"name": "means", "shape": [b]},
+            {"name": "vars", "shape": [b]},
+            {"name": "lmls", "shape": [b]},
+        ],
+    }
+
+
+def build_all(out_dir: str, histories=HISTORIES, kinds=KINDS, batch=BATCH):
+    """Lower every artifact variant into ``out_dir``; return the manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for kind in kinds:
+        for h in histories:
+            for tag, (lowered, sig) in (
+                (f"gp_{kind}_h{h}", lower_single(kind, h)),
+                (f"gp_{kind}_h{h}_b{batch}", lower_batched(kind, h, batch)),
+            ):
+                path = os.path.join(out_dir, f"{tag}.hlo.txt")
+                text = to_hlo_text(lowered)
+                with open(path, "w") as f:
+                    f.write(text)
+                entry = {
+                    "name": tag,
+                    "file": f"{tag}.hlo.txt",
+                    "kind": kind,
+                    "history": h,
+                    "n_train": h,
+                    "pattern_dim": h + 1,
+                    "batch": batch if "_b" in tag else 1,
+                    **sig,
+                }
+                manifest["artifacts"].append(entry)
+                print(f"wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for *.hlo.txt + manifest.json")
+    ap.add_argument("--histories", default=",".join(map(str, HISTORIES)),
+                    help="comma-separated history windows")
+    ap.add_argument("--kinds", default=",".join(KINDS))
+    ap.add_argument("--batch", type=int, default=BATCH)
+    args = ap.parse_args()
+    build_all(
+        args.out,
+        histories=tuple(int(x) for x in args.histories.split(",")),
+        kinds=tuple(args.kinds.split(",")),
+        batch=args.batch,
+    )
+
+
+if __name__ == "__main__":
+    main()

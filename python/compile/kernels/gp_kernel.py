@@ -1,0 +1,111 @@
+"""L1 — Pallas kernels for the GP hot-spot: pairwise kernel matrices.
+
+The compute hot-spot of the paper's GP forecaster (§3.1.2) is building the
+history-pattern kernel matrix ``k_h(X, X')`` (Eq. 6) every shaping tick,
+for every running application component. We lower it as a Pallas kernel so
+the whole posterior computation (model.py) fuses into one HLO module that
+the Rust coordinator executes via PJRT.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): squared distances are
+computed with the ``‖a‖² + ‖b‖² − 2·a·bᵀ`` decomposition so the dominant
+term is a matmul that maps onto the MXU; row blocks of X1/X2 are staged
+into VMEM by BlockSpec. For the paper's shapes (N = h ≤ 40, P = h+1 ≤ 41)
+a single grid step holds everything in VMEM; the batched variant in
+model.py vmaps this kernel over B series, which is the realistic
+TPU-efficiency shape analyzed in EXPERIMENTS.md §Perf.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that both jax-CPU and the
+Rust xla-crate client run bit-identically.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["kernel_matrix_pallas", "KERNEL_KINDS"]
+
+KERNEL_KINDS = ("exp", "rbf")
+
+# Row-tile size. Shapes in this system are small (N <= 64); keep one tile
+# unless the first dimension grows beyond MAX_TILE rows.
+MAX_TILE = 128
+
+
+def _kernel_body(x1_ref, x2_ref, ls_ref, var_ref, o_ref, *, kind):
+    """Pallas body: one (tile_n, m) block of the kernel matrix.
+
+    x1_ref: (tile_n, p) block of left patterns   (VMEM)
+    x2_ref: (m, p)      all right patterns        (VMEM)
+    ls_ref, var_ref: (1, 1) scalar params in SMEM-like blocks
+    o_ref:  (tile_n, m) output block              (VMEM)
+    """
+    x1 = x1_ref[...]
+    x2 = x2_ref[...]
+    ls = ls_ref[0, 0]
+    var = var_ref[0, 0]
+
+    # ||a||^2 + ||b||^2 - 2 a.b^T : the 2ab^T term is the MXU matmul.
+    n1 = jnp.sum(x1 * x1, axis=-1, keepdims=True)          # (tile_n, 1)
+    n2 = jnp.sum(x2 * x2, axis=-1, keepdims=True).T        # (1, m)
+    cross = jax.lax.dot_general(
+        x1, x2,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                      # (tile_n, m)
+    d2 = jnp.maximum(n1 + n2 - 2.0 * cross, 0.0)
+
+    if kind == "exp":
+        d = jnp.sqrt(d2 + 1e-12)
+        o_ref[...] = var * jnp.exp(-d / ls)
+    else:  # rbf
+        o_ref[...] = var * jnp.exp(-0.5 * d2 / (ls * ls))
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def kernel_matrix_pallas(x1, x2, lengthscale, variance, kind="exp"):
+    """Pairwise kernel matrix via Pallas. Matches ``ref.kernel_matrix``.
+
+    Args:
+      x1: ``(n, p)`` float32 patterns.
+      x2: ``(m, p)`` float32 patterns.
+      lengthscale: scalar float32.
+      variance: scalar float32 signal variance.
+      kind: "exp" | "rbf" (static).
+
+    Returns:
+      ``(n, m)`` float32 kernel matrix.
+    """
+    if kind not in KERNEL_KINDS:
+        raise ValueError(f"unknown kernel kind: {kind!r}")
+    n, p = x1.shape
+    m, p2 = x2.shape
+    if p != p2:
+        raise ValueError(f"pattern dims differ: {p} vs {p2}")
+
+    x1 = x1.astype(jnp.float32)
+    x2 = x2.astype(jnp.float32)
+    ls = jnp.reshape(jnp.asarray(lengthscale, jnp.float32), (1, 1))
+    var = jnp.reshape(jnp.asarray(variance, jnp.float32), (1, 1))
+
+    tile_n = min(n, MAX_TILE)
+    # Grid over row tiles of x1; x2 is broadcast to every step. With the
+    # paper's shapes the grid is a single step and the whole working set
+    # sits in VMEM (see EXPERIMENTS.md §Perf for the footprint estimate).
+    grid = (pl.cdiv(n, tile_n),)
+
+    return pl.pallas_call(
+        functools.partial(_kernel_body, kind=kind),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((m, p), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(x1, x2, ls, var)

@@ -1,0 +1,139 @@
+"""Pure-jnp reference oracle for the GP forecasting math.
+
+This module is the single source of truth for correctness: the Pallas
+kernels in ``gp_kernel.py`` and the lowered L2 model in ``model.py`` are
+checked against these functions by pytest (``python/tests``) and, across
+the language boundary, by ``rust/tests/gp_cross_validation.rs`` (the
+native-Rust GP mirrors the same equations).
+
+The paper (§3.1.2) models a utilization time series with a GP over
+*history patterns*: each input is ``x̃_t = [t, y_{t-h}, ..., y_{t-1}]``
+(Eq. 5) and the kernel is a standard exponential / squared-exponential
+kernel applied to the transformed inputs (Eq. 6). The posterior mean and
+variance are the textbook GP regression equations (Eq. 7-8).
+"""
+
+import jax.numpy as jnp
+
+__all__ = [
+    "sqdist",
+    "kernel_exp",
+    "kernel_rbf",
+    "kernel_matrix",
+    "gp_posterior",
+    "solve_chol",
+    "make_patterns",
+]
+
+
+def sqdist(x1, x2):
+    """Pairwise squared Euclidean distances.
+
+    Args:
+      x1: ``(n, p)`` array.
+      x2: ``(m, p)`` array.
+    Returns:
+      ``(n, m)`` array of squared distances, clamped to ``>= 0`` so that
+      downstream ``sqrt`` never sees a tiny negative from cancellation.
+    """
+    n1 = jnp.sum(x1 * x1, axis=-1, keepdims=True)  # (n, 1)
+    n2 = jnp.sum(x2 * x2, axis=-1, keepdims=True).T  # (1, m)
+    d2 = n1 + n2 - 2.0 * (x1 @ x2.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def kernel_exp(x1, x2, lengthscale, variance):
+    """Exponential (Matern-1/2) kernel on history patterns.
+
+    ``k(a, b) = variance * exp(-|a - b| / lengthscale)``.
+    The paper's preferred kernel (GP-Exp in Fig. 2): utilization series are
+    not smooth, so the non-differentiable exponential kernel wins.
+    """
+    d = jnp.sqrt(sqdist(x1, x2) + 1e-12)
+    return variance * jnp.exp(-d / lengthscale)
+
+
+def kernel_rbf(x1, x2, lengthscale, variance):
+    """Squared-exponential (RBF) kernel: the GP-RBF comparator in Fig. 2."""
+    d2 = sqdist(x1, x2)
+    return variance * jnp.exp(-0.5 * d2 / (lengthscale * lengthscale))
+
+
+def kernel_matrix(x1, x2, lengthscale, variance, kind):
+    """Dispatch on kernel ``kind`` in {"exp", "rbf"}."""
+    if kind == "exp":
+        return kernel_exp(x1, x2, lengthscale, variance)
+    if kind == "rbf":
+        return kernel_rbf(x1, x2, lengthscale, variance)
+    raise ValueError(f"unknown kernel kind: {kind!r}")
+
+
+def gp_posterior(x_train, y_train, x_query, lengthscale, noise, kind,
+                 variance=1.0):
+    """GP regression posterior at a single query pattern (Eq. 7-8).
+
+    Args:
+      x_train: ``(n, p)`` history patterns (Eq. 5 rows).
+      y_train: ``(n,)`` observed next values.
+      x_query: ``(p,)`` query pattern.
+      lengthscale: kernel lengthscale (scalar).
+      noise: observation-noise *variance* sigma^2 (scalar).
+      kind: "exp" | "rbf".
+      variance: kernel signal variance.
+
+    Returns:
+      ``(mean, var, lml)`` scalars: posterior mean, posterior variance
+      (clamped >= 0) and the log marginal likelihood of the training set —
+      the evidence used for hyper-parameter selection (§3.1).
+    """
+    n = x_train.shape[0]
+    kxx = kernel_matrix(x_train, x_train, lengthscale, variance, kind)
+    kxx = kxx + (noise + 1e-6) * jnp.eye(n, dtype=x_train.dtype)
+    kxq = kernel_matrix(x_query[None, :], x_train, lengthscale, variance,
+                        kind)[0]  # (n,)
+    kqq = variance
+
+    chol = jnp.linalg.cholesky(kxx)
+    alpha = solve_chol(chol, y_train)
+    mean = kxq @ alpha
+    v = jnp.linalg.solve(chol, kxq)  # lower-triangular solve
+    var = jnp.maximum(kqq - v @ v, 0.0)
+
+    # log marginal likelihood: -1/2 yᵀ α - Σ log L_ii - n/2 log 2π
+    lml = (-0.5 * (y_train @ alpha)
+           - jnp.sum(jnp.log(jnp.diagonal(chol)))
+           - 0.5 * n * jnp.log(2.0 * jnp.pi))
+    return mean, var, lml
+
+
+def solve_chol(chol, b):
+    """Solve ``K x = b`` given the lower Cholesky factor of ``K``."""
+    z = jnp.linalg.solve(chol, b)
+    return jnp.linalg.solve(chol.T, z)
+
+
+def make_patterns(series, h):
+    """Build the (Eq. 5) training set from a raw utilization series.
+
+    Row ``i`` is ``[t_i, y_{i}, ..., y_{i+h-1}]`` with target
+    ``y_{i+h}``; times are scaled to [0, 1] so one lengthscale governs
+    both the time coordinate and the (standardized) history values.
+
+    Returns ``(X, y, q)`` where ``q`` is the query pattern predicting the
+    value after the final observation.
+    """
+    series = jnp.asarray(series)
+    t = series.shape[0]
+    if t <= h:
+        raise ValueError(f"series of length {t} too short for history {h}")
+    rows = []
+    targets = []
+    for i in range(t - h):
+        rows.append(jnp.concatenate(
+            [jnp.array([i / t], dtype=series.dtype), series[i:i + h]]))
+        targets.append(series[i + h])
+    x = jnp.stack(rows)
+    y = jnp.stack(targets)
+    q = jnp.concatenate(
+        [jnp.array([(t - h) / t], dtype=series.dtype), series[t - h:]])
+    return x, y, q

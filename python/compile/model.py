@@ -1,0 +1,141 @@
+"""L2 — the GP forecasting model (jax), calling the L1 Pallas kernel.
+
+This is the compute graph the Rust coordinator executes on its hot path
+(via the AOT HLO artifacts emitted by ``aot.py``). It implements the
+paper's §3.1.2 GP regression over history patterns:
+
+  * ``gp_forecast``         — one series: posterior (mean, var, lml)
+  * ``gp_forecast_batched`` — B series at once (the realistic hot-path
+    shape: the resource shaper forecasts every running component each
+    tick, so Rust batches components into fixed-size B slabs)
+
+Hyper-parameters (lengthscale, observation-noise variance) are *runtime
+inputs*, not baked constants: the Rust side performs the paper's evidence
+maximization (§3.1) by re-invoking the same artifact over a small grid and
+picking the lengthscale with the highest returned ``lml``.
+
+Shapes are static per artifact: history window ``h`` (pattern dim
+``p = h+1``), training-set size ``n`` (the paper uses N = h), batch ``b``.
+``aot.py`` emits one artifact per (kernel kind, h, batch) combination.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gp_kernel import kernel_matrix_pallas
+
+__all__ = ["gp_forecast", "gp_forecast_batched", "JITTER",
+           "cholesky_unrolled", "solve_lower_unrolled",
+           "solve_upper_unrolled"]
+
+# Numerical jitter added on top of the runtime noise input; keeps the
+# Cholesky factorization stable for near-duplicate history patterns.
+JITTER = 1e-6
+
+
+# --- pure-jnp linear algebra -------------------------------------------
+#
+# jax.lax.linalg.{cholesky,triangular_solve} lower to LAPACK custom-calls
+# on CPU (API_VERSION_TYPED_FFI), which the xla crate's xla_extension
+# 0.5.1 PJRT client rejects at compile time. The GP shapes are tiny and
+# *static* (n = h <= 40), so we unroll textbook column-Cholesky and
+# substitution into plain HLO ops instead — fully portable, and XLA still
+# fuses the column updates. aot.py asserts no custom-call survives.
+
+def cholesky_unrolled(a):
+    """Lower-Cholesky of a static-shape SPD matrix, plain jnp ops only."""
+    n = a.shape[0]
+    l = jnp.zeros_like(a)
+    for j in range(n):
+        if j == 0:
+            d = jnp.sqrt(a[0, 0])
+            l = l.at[0, 0].set(d)
+            if n > 1:
+                l = l.at[1:, 0].set(a[1:, 0] / d)
+        else:
+            d = jnp.sqrt(a[j, j] - jnp.sum(l[j, :j] * l[j, :j]))
+            l = l.at[j, j].set(d)
+            if j + 1 < n:
+                col = (a[j + 1:, j] - l[j + 1:, :j] @ l[j, :j]) / d
+                l = l.at[j + 1:, j].set(col)
+    return l
+
+
+def solve_lower_unrolled(l, b):
+    """Solve L x = b (L lower-triangular, static shape)."""
+    n = l.shape[0]
+    x = jnp.zeros_like(b)
+    for i in range(n):
+        s = b[i] if i == 0 else b[i] - l[i, :i] @ x[:i]
+        x = x.at[i].set(s / l[i, i])
+    return x
+
+
+def solve_upper_unrolled(l, b):
+    """Solve Lᵀ x = b (L lower-triangular, static shape)."""
+    n = l.shape[0]
+    x = jnp.zeros_like(b)
+    for i in reversed(range(n)):
+        s = b[i] if i == n - 1 else b[i] - l[i + 1:, i] @ x[i + 1:]
+        x = x.at[i].set(s / l[i, i])
+    return x
+
+
+def gp_forecast(x_train, y_train, x_query, lengthscale, noise, *, kind):
+    """Posterior (mean, var, lml) for one series. See ref.gp_posterior.
+
+    Args:
+      x_train: ``(n, p)`` history patterns (Eq. 5 rows).
+      y_train: ``(n,)`` targets (values following each pattern).
+      x_query: ``(p,)`` query pattern (most recent history).
+      lengthscale: scalar f32, runtime input.
+      noise: scalar f32, observation-noise variance, runtime input.
+      kind: "exp" | "rbf" — static; selects the Pallas kernel variant.
+
+    Returns:
+      Tuple of f32 scalars ``(mean, var, lml)``.
+    """
+    n = x_train.shape[0]
+    x_train = x_train.astype(jnp.float32)
+    y_train = y_train.astype(jnp.float32)
+    x_query = x_query.astype(jnp.float32)
+
+    # Signal variance fixed to 1: Rust standardizes y before the call, so
+    # unit signal variance is the correct prior scale (DESIGN.md §2).
+    variance = jnp.float32(1.0)
+
+    kxx = kernel_matrix_pallas(x_train, x_train, lengthscale, variance,
+                               kind=kind)
+    kxx = kxx + (noise + JITTER) * jnp.eye(n, dtype=jnp.float32)
+    kxq = kernel_matrix_pallas(x_query[None, :], x_train, lengthscale,
+                               variance, kind=kind)[0]          # (n,)
+
+    chol = cholesky_unrolled(kxx)
+    # alpha = K^{-1} y via two triangular solves.
+    z = solve_lower_unrolled(chol, y_train)
+    alpha = solve_upper_unrolled(chol, z)
+
+    mean = kxq @ alpha
+    v = solve_lower_unrolled(chol, kxq)
+    var = jnp.maximum(variance - v @ v, 0.0)
+
+    lml = (-0.5 * (y_train @ alpha)
+           - jnp.sum(jnp.log(jnp.diagonal(chol)))
+           - 0.5 * n * jnp.log(2.0 * jnp.pi).astype(jnp.float32))
+    return mean, var, lml
+
+
+def gp_forecast_batched(x_train, y_train, x_query, lengthscale, noise, *,
+                        kind):
+    """Vectorized ``gp_forecast`` over a leading batch dimension.
+
+    Args:
+      x_train: ``(b, n, p)``; y_train: ``(b, n)``; x_query: ``(b, p)``;
+      lengthscale, noise: ``(b,)`` per-series hyper-parameters.
+
+    Returns:
+      ``(means, vars, lmls)``, each ``(b,)`` f32.
+    """
+    fn = lambda xt, yt, xq, ls, nz: gp_forecast(xt, yt, xq, ls, nz,
+                                                kind=kind)
+    return jax.vmap(fn)(x_train, y_train, x_query, lengthscale, noise)

@@ -1,0 +1,95 @@
+"""AOT pipeline: artifacts lower, parse as HLO text, manifest is coherent.
+
+Executes a freshly lowered module through jax's own CPU client to confirm
+the HLO-text round trip preserves numerics (the Rust side repeats this via
+the xla crate in rust/tests/runtime_test.rs).
+"""
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def small_build(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build_all(str(out), histories=(5,), kinds=("exp",),
+                             batch=2)
+    return str(out), manifest
+
+
+def test_manifest_lists_all_files(small_build):
+    out, manifest = small_build
+    assert len(manifest["artifacts"]) == 2
+    for a in manifest["artifacts"]:
+        path = os.path.join(out, a["file"])
+        assert os.path.exists(path), a["file"]
+        text = open(path).read()
+        assert "ENTRY" in text and "HloModule" in text
+        # interchange must be text, never proto bytes
+        assert text.isprintable() or "\n" in text
+
+
+def test_manifest_shapes_consistent(small_build):
+    _, manifest = small_build
+    for a in manifest["artifacts"]:
+        h, b = a["history"], a["batch"]
+        p = a["pattern_dim"]
+        assert p == h + 1 and a["n_train"] == h
+        xt = next(i for i in a["inputs"] if i["name"] == "x_train")
+        if b == 1:
+            assert xt["shape"] == [h, p]
+        else:
+            assert xt["shape"] == [b, h, p]
+
+
+def test_hlo_text_has_no_64bit_id_issue(small_build):
+    """Text parse on jax's own client: ids must round-trip."""
+    from jax._src.lib import xla_client as xc
+    out, manifest = small_build
+    for a in manifest["artifacts"]:
+        text = open(os.path.join(out, a["file"])).read()
+        comp = xc.XlaComputation(
+            xc._xla.hlo_module_from_text(text).as_serialized_hlo_module_proto()
+        )
+        assert comp.program_shape() is not None
+
+
+def test_lowered_module_numerics_match_model():
+    """Execute the lowered single-series module via jax and compare."""
+    rng = np.random.default_rng(0)
+    h = 5
+    # artifact expects exactly n = h training patterns -> series length 2h
+    series = (0.4 * np.sin(np.arange(2 * h) / 3.0)
+              + 0.05 * rng.normal(size=2 * h)).astype(np.float32)
+    x, y, q = ref.make_patterns(series, h)
+    lowered, _ = aot.lower_single("exp", h)
+    compiled = lowered.compile()
+    ls = jnp.float32(1.0)
+    nz = jnp.float32(0.05)
+    got = compiled(x, y, q, ls, nz)
+    want = model.gp_forecast(x, y, q, ls, nz, kind="exp")
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(float(g), float(w), rtol=1e-5, atol=1e-5)
+
+
+def test_default_artifacts_if_present():
+    """When `make artifacts` has run, the shipped manifest must be sane."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(root, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts/ not built yet")
+    manifest = json.load(open(mpath))
+    names = {a["name"] for a in manifest["artifacts"]}
+    for kind in ("exp", "rbf"):
+        for h in (10, 20, 40):
+            assert f"gp_{kind}_h{h}" in names
+            assert f"gp_{kind}_h{h}_b32" in names
+    for a in manifest["artifacts"]:
+        assert os.path.exists(os.path.join(root, a["file"]))

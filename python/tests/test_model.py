@@ -1,0 +1,115 @@
+"""L2 correctness: GP forecaster vs oracle, batching, and shape checks."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+RTOL, ATOL = 2e-3, 2e-3
+
+
+def _series(rng, t):
+    """A plausible standardized utilization series."""
+    base = 0.5 * np.sin(np.arange(t) / 5.0) + 0.1 * rng.normal(size=t)
+    return base.astype(np.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.sampled_from([5, 10, 20]),
+    kind=st.sampled_from(["exp", "rbf"]),
+    ls=st.floats(0.3, 4.0),
+    noise=st.floats(1e-3, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_forecast_matches_ref(h, kind, ls, noise, seed):
+    rng = np.random.default_rng(seed)
+    x, y, q = ref.make_patterns(_series(rng, 2 * h + 1), h)
+    m, v, l = model.gp_forecast(x, y, q, jnp.float32(ls),
+                                jnp.float32(noise), kind=kind)
+    mr, vr, lr = ref.gp_posterior(x, y, q, ls, noise, kind)
+    np.testing.assert_allclose(float(m), float(mr), rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(float(v), float(vr), rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(float(l), float(lr), rtol=RTOL, atol=1e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    h=st.sampled_from([5, 10]),
+    kind=st.sampled_from(["exp", "rbf"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_batched_equals_loop(b, h, kind, seed):
+    rng = np.random.default_rng(seed)
+    xs, ys, qs, lss, nzs = [], [], [], [], []
+    for _ in range(b):
+        x, y, q = ref.make_patterns(_series(rng, 2 * h + 1), h)
+        xs.append(x); ys.append(y); qs.append(q)
+        lss.append(rng.uniform(0.5, 2.0)); nzs.append(rng.uniform(0.01, 0.2))
+    xb = jnp.stack(xs); yb = jnp.stack(ys); qb = jnp.stack(qs)
+    lsb = jnp.array(lss, jnp.float32); nzb = jnp.array(nzs, jnp.float32)
+    mb, vb, lb = model.gp_forecast_batched(xb, yb, qb, lsb, nzb, kind=kind)
+    for i in range(b):
+        m, v, l = model.gp_forecast(xs[i], ys[i], qs[i], lsb[i], nzb[i],
+                                    kind=kind)
+        np.testing.assert_allclose(float(mb[i]), float(m), rtol=1e-4,
+                                   atol=1e-4)
+        np.testing.assert_allclose(float(vb[i]), float(v), rtol=1e-4,
+                                   atol=1e-4)
+        np.testing.assert_allclose(float(lb[i]), float(l), rtol=1e-4,
+                                   atol=1e-3)
+
+
+def test_posterior_variance_shrinks_with_data():
+    """More (informative) observations must not increase posterior var."""
+    rng = np.random.default_rng(0)
+    s = _series(rng, 61)
+    h = 10
+    x, y, q = ref.make_patterns(s, h)
+    v_full = float(model.gp_forecast(x, y, q, jnp.float32(1.0),
+                                     jnp.float32(0.05), kind="exp")[1])
+    x5, y5 = x[:5], y[:5]
+    v_small = float(model.gp_forecast(x5, y5, q, jnp.float32(1.0),
+                                      jnp.float32(0.05), kind="exp")[1])
+    assert v_full <= v_small + 1e-4
+
+
+def test_variance_nonnegative_extreme_noise():
+    rng = np.random.default_rng(1)
+    x, y, q = ref.make_patterns(_series(rng, 21), 10)
+    for noise in (1e-6, 1e2):
+        v = float(model.gp_forecast(x, y, q, jnp.float32(0.5),
+                                    jnp.float32(noise), kind="rbf")[1])
+        assert v >= 0.0
+
+
+def test_interpolation_recovers_training_point():
+    """Query equal to a training pattern with tiny noise -> mean ~ target."""
+    rng = np.random.default_rng(2)
+    x, y, q = ref.make_patterns(_series(rng, 31), 10)
+    m = float(model.gp_forecast(x, y, x[7], jnp.float32(1.0),
+                                jnp.float32(1e-5), kind="exp")[0])
+    assert abs(m - float(y[7])) < 0.05
+
+
+def test_lml_prefers_true_noise_scale():
+    """Evidence maximization signal: lml at a sane noise beats absurd noise."""
+    rng = np.random.default_rng(3)
+    x, y, q = ref.make_patterns(_series(rng, 41), 10)
+    lml_good = float(model.gp_forecast(x, y, q, jnp.float32(1.0),
+                                       jnp.float32(0.05), kind="exp")[2])
+    lml_bad = float(model.gp_forecast(x, y, q, jnp.float32(1.0),
+                                      jnp.float32(50.0), kind="exp")[2])
+    assert lml_good > lml_bad
+
+
+def test_make_patterns_shapes_and_short_series():
+    rng = np.random.default_rng(4)
+    x, y, q = ref.make_patterns(_series(rng, 25), 10)
+    assert x.shape == (15, 11) and y.shape == (15,) and q.shape == (11,)
+    with pytest.raises(ValueError):
+        ref.make_patterns(_series(rng, 10), 10)

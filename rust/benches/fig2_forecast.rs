@@ -1,0 +1,19 @@
+//! Bench: regenerates Fig. 2 (prediction-error table) at reduced scale.
+
+use zoe_shaper::experiments::fig2;
+use zoe_shaper::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig2_forecast");
+    let params = fig2::Fig2Params {
+        num_series: 30,
+        series_len: 80,
+        histories: vec![10, 20],
+        seed: 7,
+        use_pjrt: false,
+    };
+    let (res, _) = b.run_once("fig2_corpus30_h{10,20}", || {
+        fig2::run(&params, None).unwrap()
+    });
+    println!("{}", fig2::render(&res));
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerates Fig. 3 (baseline/optimistic/pessimistic, oracle).
+
+use zoe_shaper::config::SimConfig;
+use zoe_shaper::experiments::fig3;
+use zoe_shaper::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig3_policies");
+    let mut cfg = SimConfig::small();
+    cfg.workload.num_apps = 250;
+    let (reports, _) = b.run_once("fig3_three_arms_250apps", || fig3::run(&cfg).unwrap());
+    println!("{}", fig3::render(&reports));
+}

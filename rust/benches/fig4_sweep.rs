@@ -1,0 +1,17 @@
+//! Bench: regenerates a reduced Fig. 4 sweep (GP + ARIMA corners).
+
+use zoe_shaper::config::{ForecasterKind, SimConfig};
+use zoe_shaper::experiments::fig4;
+use zoe_shaper::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig4_sweep");
+    let mut cfg = SimConfig::small();
+    cfg.workload.num_apps = 120;
+    for fk in [ForecasterKind::Arima, ForecasterKind::GpNative] {
+        let (sweep, _) = b.run_once(&format!("fig4_{}_2x2", fk.name()), || {
+            fig4::run(&cfg, fk, None, &[0.05, 1.0], &[0.0, 3.0]).unwrap()
+        });
+        println!("{}", fig4::render(&sweep));
+    }
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerates Fig. 5 (prototype, baseline vs shaped) at maximum
+//! acceleration. Uses the PJRT GP artifact when available.
+
+use zoe_shaper::config::SimConfig;
+use zoe_shaper::experiments::fig5;
+use zoe_shaper::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig5_prototype");
+    let mut cfg = SimConfig::prototype();
+    cfg.workload.num_apps = 60;
+    match fig5::run(&cfg, None, f64::INFINITY) {
+        Ok(out) => {
+            let (_, _) = b.run_once("fig5_rendered_above", || 0);
+            println!("{}", fig5::render(&out));
+        }
+        Err(e) => {
+            eprintln!("PJRT unavailable ({e:#}); skipping fig5 bench");
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Hot-path micro-benchmarks (§Perf): the paths the coordinator exercises
+//! every shaping tick. harness = false; uses util::bench.
+//!
+//!     cargo bench --bench hotpaths
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use zoe_shaper::cluster::Cluster;
+use zoe_shaper::config::{ClusterConfig, ForecasterKind, KernelKind, Policy, SimConfig};
+use zoe_shaper::forecast::{arima::Arima, gp_native::GpNative, gp_pjrt::GpPjrt, Forecaster};
+use zoe_shaper::runtime::Runtime;
+use zoe_shaper::shaper::{plan, Demand};
+use zoe_shaper::sim::engine::run_simulation;
+use zoe_shaper::trace::patterns::{Pattern, PatternKind};
+use zoe_shaper::util::bench::Bench;
+use zoe_shaper::util::rng::Pcg;
+use zoe_shaper::workload::{Application, AppState, Component};
+
+fn series(n: usize, len: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Pcg::seeded(seed);
+    (0..n)
+        .map(|_| {
+            let p = Pattern::sample(&mut rng, true);
+            (0..len as u64).map(|s| p.at_step(s)).collect()
+        })
+        .collect()
+}
+
+/// Big synthetic running cluster for the Algorithm 1 benchmark:
+/// 250 hosts, ~5000 components.
+fn big_world() -> (Vec<Application>, Cluster, Vec<usize>, HashMap<usize, Demand>) {
+    let mut rng = Pcg::seeded(1);
+    let hosts = 250;
+    let mut cluster = Cluster::new(&ClusterConfig {
+        hosts,
+        cores_per_host: 32.0,
+        mem_per_host_gb: 128.0,
+    });
+    let mut apps = Vec::new();
+    let mut cid = 0;
+    for a in 0..700 {
+        let n_comp = rng.int_range(3, 10) as usize;
+        let mut components = Vec::new();
+        for k in 0..n_comp {
+            let cpu = rng.uniform(0.2, 2.0);
+            let mem = rng.uniform(0.5, 6.0);
+            components.push(Component {
+                id: cid,
+                app: a,
+                is_core: k < 3,
+                cpu_req: cpu,
+                mem_req: mem,
+                cpu_pattern: Pattern::new(PatternKind::Constant { level: 0.4 }, cid as u64, 0.0),
+                mem_pattern: Pattern::new(PatternKind::Constant { level: 0.4 }, cid as u64, 0.0),
+            });
+            if let Some(h) = cluster.worst_fit(cpu * 0.5, mem * 0.5) {
+                cluster.place(cid, h, cpu * 0.5, mem * 0.5, a as f64);
+            }
+            cid += 1;
+        }
+        apps.push(Application {
+            id: a,
+            submit_time: a as f64,
+            components,
+            total_work: 100.0,
+            state: AppState::Running { since: 0.0 },
+            remaining_work: 50.0,
+            last_progress_at: 0.0,
+            failures: 0,
+            preemptions: 0,
+            shaping_disabled: false,
+        });
+    }
+    let mut demands = HashMap::new();
+    for app in &apps {
+        for c in &app.components {
+            if cluster.placement(c.id).is_some() {
+                demands.insert(
+                    c.id,
+                    Demand { cpus: c.cpu_req * 0.45, mem: c.mem_req * 0.45 },
+                );
+            }
+        }
+    }
+    let running = (0..apps.len()).collect();
+    (apps, cluster, running, demands)
+}
+
+fn main() {
+    let mut b = Bench::new("hotpaths").with_target(Duration::from_millis(700));
+
+    // L3: Algorithm 1 at paper scale (250 hosts, ~5k components)
+    let (apps, cluster, running, demands) = big_world();
+    b.run("algorithm1_plan_250hosts_5k_components", || {
+        plan(Policy::Pessimistic, &cluster, &apps, &running, &demands)
+    });
+    b.run("optimistic_plan_250hosts_5k_components", || {
+        plan(Policy::Optimistic, &cluster, &apps, &running, &demands)
+    });
+
+    // Forecasters: batch of 64 series, h=10 window
+    let corpus: Vec<Vec<f64>> = series(64, 20, 3);
+    let mut gp = GpNative::new(KernelKind::Exp, 10);
+    b.run("gp_native_batch64_h10_gridls4", || gp.forecast(&corpus));
+    let mut arima = Arima::auto();
+    b.run("arima_auto_batch64", || arima.forecast(&corpus));
+
+    // GP through the AOT PJRT artifact (the production path)
+    match Runtime::from_default_dir() {
+        Ok(rt) => {
+            let rt = Arc::new(rt);
+            let mut gp1 = GpPjrt::new(rt.clone(), KernelKind::Exp, 10, 32).unwrap();
+            let one = vec![corpus[0].clone()];
+            b.run("gp_pjrt_single_h10_gridls4", || gp1.forecast(&one));
+            let mut gpb = GpPjrt::new(rt, KernelKind::Exp, 10, 32).unwrap();
+            b.run("gp_pjrt_batch64_h10_gridls4(4 slab execs)", || {
+                gpb.forecast(&corpus)
+            });
+        }
+        Err(e) => eprintln!("skipping PJRT benches: {e:#}"),
+    }
+
+    // end-to-end simulator throughput
+    let mut cfg = SimConfig::small();
+    cfg.workload.num_apps = 150;
+    cfg.cluster.hosts = 4;
+    cfg.forecast.kind = ForecasterKind::Oracle;
+    cfg.shaper.policy = Policy::Pessimistic;
+    let (r, el) = b.run_once("sim_e2e_150apps_oracle_pessimistic", || {
+        run_simulation(&cfg, None, "bench").unwrap()
+    });
+    println!(
+        "  -> {:.0} simulated seconds/wall second; {} forecasts",
+        r.sim_time / el.as_secs_f64(),
+        r.forecasts_issued
+    );
+}

@@ -1,0 +1,275 @@
+//! Cluster state: hosts, per-component placements and allocations.
+//!
+//! Distinguishes the three quantities the paper is careful about (§1):
+//! **reservation** (what the user asked for, stored on the component),
+//! **allocation** (what the shaper currently grants — what admission
+//! control charges against host capacity), and **utilization** (what the
+//! component actually uses, sampled from its pattern by the monitor).
+
+use std::collections::HashMap;
+
+use crate::config::ClusterConfig;
+use crate::workload::{ComponentId, HostId};
+
+/// A single machine.
+#[derive(Debug, Clone)]
+pub struct Host {
+    pub id: HostId,
+    pub total_cpus: f64,
+    pub total_mem: f64,
+    /// Sum of current allocations charged to this host.
+    pub alloc_cpus: f64,
+    pub alloc_mem: f64,
+}
+
+impl Host {
+    /// Free (unallocated) CPU capacity.
+    pub fn free_cpus(&self) -> f64 {
+        self.total_cpus - self.alloc_cpus
+    }
+
+    /// Free (unallocated) memory capacity.
+    pub fn free_mem(&self) -> f64 {
+        self.total_mem - self.alloc_mem
+    }
+}
+
+/// A component's current placement + granted allocation.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub host: HostId,
+    pub alloc_cpus: f64,
+    pub alloc_mem: f64,
+    /// Simulated time the component started on this host (Algorithm 1
+    /// preempts the *youngest* elastic components first).
+    pub placed_at: f64,
+}
+
+/// The whole cluster: hosts plus the placement table.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub hosts: Vec<Host>,
+    placements: HashMap<ComponentId, Placement>,
+}
+
+impl Cluster {
+    /// Build an idle homogeneous cluster from the config.
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        Cluster {
+            hosts: (0..cfg.hosts)
+                .map(|id| Host {
+                    id,
+                    total_cpus: cfg.cores_per_host,
+                    total_mem: cfg.mem_per_host_gb,
+                    alloc_cpus: 0.0,
+                    alloc_mem: 0.0,
+                })
+                .collect(),
+            placements: HashMap::new(),
+        }
+    }
+
+    /// Number of hosts.
+    pub fn len(&self) -> usize {
+        self.hosts.len()
+    }
+
+    /// True if the cluster has no hosts (never, post-construction).
+    pub fn is_empty(&self) -> bool {
+        self.hosts.is_empty()
+    }
+
+    /// Current placement of a component, if any.
+    pub fn placement(&self, c: ComponentId) -> Option<&Placement> {
+        self.placements.get(&c)
+    }
+
+    /// Iterate placements.
+    pub fn placements(&self) -> impl Iterator<Item = (&ComponentId, &Placement)> {
+        self.placements.iter()
+    }
+
+    /// Number of placed components.
+    pub fn placed_count(&self) -> usize {
+        self.placements.len()
+    }
+
+    /// Place a component with an initial allocation. Panics if already
+    /// placed (programmer error); returns false if it does not fit.
+    pub fn place(
+        &mut self,
+        c: ComponentId,
+        host: HostId,
+        cpus: f64,
+        mem: f64,
+        now: f64,
+    ) -> bool {
+        assert!(!self.placements.contains_key(&c), "component {c} already placed");
+        let h = &mut self.hosts[host];
+        if h.free_cpus() + 1e-9 < cpus || h.free_mem() + 1e-9 < mem {
+            return false;
+        }
+        h.alloc_cpus += cpus;
+        h.alloc_mem += mem;
+        self.placements.insert(c, Placement { host, alloc_cpus: cpus, alloc_mem: mem, placed_at: now });
+        true
+    }
+
+    /// Remove a component, releasing its allocation. Returns its former
+    /// placement (None if it was not placed).
+    pub fn remove(&mut self, c: ComponentId) -> Option<Placement> {
+        let p = self.placements.remove(&c)?;
+        let h = &mut self.hosts[p.host];
+        h.alloc_cpus = (h.alloc_cpus - p.alloc_cpus).max(0.0);
+        h.alloc_mem = (h.alloc_mem - p.alloc_mem).max(0.0);
+        Some(p)
+    }
+
+    /// Resize a placed component's allocation. The new allocation must fit
+    /// the host (callers run Algorithm 1 first, so a failure here means a
+    /// shaper bug — hence the Result).
+    pub fn resize(&mut self, c: ComponentId, cpus: f64, mem: f64) -> Result<(), String> {
+        let p = self
+            .placements
+            .get_mut(&c)
+            .ok_or_else(|| format!("resize of unplaced component {c}"))?;
+        let h = &mut self.hosts[p.host];
+        let new_cpus = h.alloc_cpus - p.alloc_cpus + cpus;
+        let new_mem = h.alloc_mem - p.alloc_mem + mem;
+        if new_cpus > h.total_cpus + 1e-6 || new_mem > h.total_mem + 1e-6 {
+            return Err(format!(
+                "resize of {c} would overcommit host {} (cpus {new_cpus:.2}/{:.2}, mem {new_mem:.2}/{:.2})",
+                p.host, h.total_cpus, h.total_mem
+            ));
+        }
+        h.alloc_cpus = new_cpus;
+        h.alloc_mem = new_mem;
+        p.alloc_cpus = cpus;
+        p.alloc_mem = mem;
+        Ok(())
+    }
+
+    /// First-fit host able to hold (cpus, mem) of *new* allocation.
+    pub fn first_fit(&self, cpus: f64, mem: f64) -> Option<HostId> {
+        self.hosts
+            .iter()
+            .find(|h| h.free_cpus() + 1e-9 >= cpus && h.free_mem() + 1e-9 >= mem)
+            .map(|h| h.id)
+    }
+
+    /// Worst-fit host (most free memory) — spreads load, reducing the
+    /// chance that one host saturates on a utilization spike.
+    pub fn worst_fit(&self, cpus: f64, mem: f64) -> Option<HostId> {
+        self.hosts
+            .iter()
+            .filter(|h| h.free_cpus() + 1e-9 >= cpus && h.free_mem() + 1e-9 >= mem)
+            .max_by(|a, b| a.free_mem().partial_cmp(&b.free_mem()).unwrap())
+            .map(|h| h.id)
+    }
+
+    /// Aggregate allocated fraction of total capacity: (cpu, mem) in [0,1].
+    pub fn allocation_fraction(&self) -> (f64, f64) {
+        let (mut ac, mut tc, mut am, mut tm) = (0.0, 0.0, 0.0, 0.0);
+        for h in &self.hosts {
+            ac += h.alloc_cpus;
+            tc += h.total_cpus;
+            am += h.alloc_mem;
+            tm += h.total_mem;
+        }
+        (ac / tc.max(1e-9), am / tm.max(1e-9))
+    }
+
+    /// Debug invariant: per-host sums of placements match host ledgers.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut cpu = vec![0.0; self.hosts.len()];
+        let mut mem = vec![0.0; self.hosts.len()];
+        for p in self.placements.values() {
+            cpu[p.host] += p.alloc_cpus;
+            mem[p.host] += p.alloc_mem;
+        }
+        for h in &self.hosts {
+            if (cpu[h.id] - h.alloc_cpus).abs() > 1e-6 || (mem[h.id] - h.alloc_mem).abs() > 1e-6 {
+                return Err(format!(
+                    "host {} ledger drift: cpu {:.6} vs {:.6}, mem {:.6} vs {:.6}",
+                    h.id, cpu[h.id], h.alloc_cpus, mem[h.id], h.alloc_mem
+                ));
+            }
+            if h.alloc_cpus > h.total_cpus + 1e-6 || h.alloc_mem > h.total_mem + 1e-6 {
+                return Err(format!("host {} overcommitted", h.id));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn cluster(n: usize) -> Cluster {
+        Cluster::new(&ClusterConfig { hosts: n, cores_per_host: 8.0, mem_per_host_gb: 32.0 })
+    }
+
+    #[test]
+    fn place_remove_roundtrip() {
+        let mut c = cluster(2);
+        assert!(c.place(0, 0, 2.0, 4.0, 0.0));
+        assert_eq!(c.hosts[0].free_cpus(), 6.0);
+        assert_eq!(c.hosts[0].free_mem(), 28.0);
+        let p = c.remove(0).unwrap();
+        assert_eq!(p.host, 0);
+        assert_eq!(c.hosts[0].free_cpus(), 8.0);
+        assert!(c.remove(0).is_none());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn place_rejects_overflow() {
+        let mut c = cluster(1);
+        assert!(c.place(0, 0, 8.0, 32.0, 0.0));
+        assert!(!c.place(1, 0, 0.5, 0.5, 0.0));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn resize_updates_ledger() {
+        let mut c = cluster(1);
+        assert!(c.place(0, 0, 4.0, 16.0, 0.0));
+        c.resize(0, 1.0, 2.0).unwrap();
+        assert_eq!(c.hosts[0].alloc_cpus, 1.0);
+        assert_eq!(c.hosts[0].alloc_mem, 2.0);
+        // grow back within capacity
+        c.resize(0, 8.0, 32.0).unwrap();
+        assert!(c.resize(0, 9.0, 1.0).is_err());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn first_fit_and_worst_fit() {
+        let mut c = cluster(3);
+        assert!(c.place(0, 0, 6.0, 30.0, 0.0)); // host 0 nearly full
+        assert!(c.place(1, 1, 1.0, 4.0, 0.0)); // host 1 lightly loaded
+        assert_eq!(c.first_fit(4.0, 8.0), Some(1));
+        // worst fit prefers the emptiest host (2)
+        assert_eq!(c.worst_fit(1.0, 1.0), Some(2));
+        assert_eq!(c.first_fit(100.0, 1.0), None);
+    }
+
+    #[test]
+    fn allocation_fraction() {
+        let mut c = cluster(2);
+        assert!(c.place(0, 0, 8.0, 16.0, 0.0));
+        let (fc, fm) = c.allocation_fraction();
+        assert!((fc - 0.5).abs() < 1e-9);
+        assert!((fm - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_place_panics() {
+        let mut c = cluster(1);
+        assert!(c.place(0, 0, 1.0, 1.0, 0.0));
+        c.place(0, 0, 1.0, 1.0, 0.0);
+    }
+}

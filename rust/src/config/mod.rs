@@ -1,0 +1,438 @@
+//! Experiment configuration: presets matching the paper's two testbeds
+//! plus a fast "small" preset for CI, JSON-file overrides, and validation.
+
+use crate::util::json::Json;
+
+/// Which forecasting model drives the resource shaper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ForecasterKind {
+    /// Perfect future knowledge (Fig. 3 upper bound).
+    Oracle,
+    /// Last observed value, zero variance (naive baseline).
+    LastValue,
+    /// From-scratch ARIMA with stepwise AIC selection (§3.1.1).
+    Arima,
+    /// Native-Rust GP (mirrors the L2 math; fast path for huge sweeps).
+    GpNative,
+    /// GP via the AOT-compiled JAX/Pallas artifact over PJRT (§3.1.2).
+    GpPjrt,
+}
+
+impl ForecasterKind {
+    /// Parse from CLI text.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "oracle" => Some(Self::Oracle),
+            "last-value" | "lastvalue" | "last" => Some(Self::LastValue),
+            "arima" => Some(Self::Arima),
+            "gp-native" | "gpnative" => Some(Self::GpNative),
+            "gp" | "gp-pjrt" | "gppjrt" => Some(Self::GpPjrt),
+            _ => None,
+        }
+    }
+
+    /// Stable display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Oracle => "oracle",
+            Self::LastValue => "last-value",
+            Self::Arima => "arima",
+            Self::GpNative => "gp-native",
+            Self::GpPjrt => "gp-pjrt",
+        }
+    }
+}
+
+/// Preemption policy of the resource shaper (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Reservation-centric: allocation == reservation, never shaped.
+    Baseline,
+    /// Resources redeemed without explicit preemption; OOM handled by the
+    /// "OS" when contention hits (Borg-style, Omega-style optimistic).
+    Optimistic,
+    /// Algorithm 1: explicit, controlled preemption — elastic first,
+    /// youngest first; core overflow preempts the whole application.
+    Pessimistic,
+}
+
+impl Policy {
+    /// Parse from CLI text.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "baseline" => Some(Self::Baseline),
+            "optimistic" => Some(Self::Optimistic),
+            "pessimistic" => Some(Self::Pessimistic),
+            _ => None,
+        }
+    }
+
+    /// Stable display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Baseline => "baseline",
+            Self::Optimistic => "optimistic",
+            Self::Pessimistic => "pessimistic",
+        }
+    }
+}
+
+/// GP kernel choice (Fig. 2 compares exp vs rbf on history patterns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    Exp,
+    Rbf,
+}
+
+impl KernelKind {
+    /// Parse from CLI text.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "exp" => Some(Self::Exp),
+            "rbf" => Some(Self::Rbf),
+            _ => None,
+        }
+    }
+
+    /// Stable display name (matches artifact naming).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Exp => "exp",
+            Self::Rbf => "rbf",
+        }
+    }
+}
+
+/// Cluster shape.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub hosts: usize,
+    pub cores_per_host: f64,
+    pub mem_per_host_gb: f64,
+}
+
+/// Workload generator parameters (trace-derived; DESIGN.md §2).
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub num_apps: usize,
+    /// Fraction of applications with elastic components (paper: 0.6).
+    pub elastic_fraction: f64,
+    /// Upper bound on elastic components per app (paper: up to 10⁴;
+    /// scaled per preset).
+    pub max_elastic: usize,
+    /// Mean runtime scale factor (seconds).
+    pub runtime_scale: f64,
+    /// Multiplier on sampled per-component memory reservations (used to
+    /// match testbed pressure, e.g. the prototype's 8-32 GB flavors).
+    pub mem_scale: f64,
+    /// Inter-arrival: probability of being inside a fast burst.
+    pub burst_prob: f64,
+    /// Mean inter-arrival within a burst (seconds).
+    pub burst_mean_s: f64,
+    /// Mean inter-arrival between bursts (seconds).
+    pub gap_mean_s: f64,
+}
+
+/// Forecasting parameters (§3.1).
+#[derive(Debug, Clone)]
+pub struct ForecastConfig {
+    pub kind: ForecasterKind,
+    pub kernel: KernelKind,
+    /// History window h (pattern length); paper prototype uses 10.
+    pub history: usize,
+    /// Monitoring / forecast cadence in seconds (paper: 60 s).
+    pub monitor_interval_s: f64,
+    /// Grace period before shaping starts (paper: 10 min).
+    pub grace_period_s: f64,
+}
+
+/// Resource-shaper parameters (§3.2).
+#[derive(Debug, Clone)]
+pub struct ShaperConfig {
+    pub policy: Policy,
+    /// Static safe-guard term K1, as a fraction of the reservation [0,1].
+    pub k1: f64,
+    /// Dynamic term K2: multiplier on the predictive std-dev (0..=3,
+    /// "three-sigma rule" bands in the paper).
+    pub k2: f64,
+    /// Shaping cadence in seconds.
+    pub shaping_interval_s: f64,
+}
+
+/// Top-level simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub seed: u64,
+    pub cluster: ClusterConfig,
+    pub workload: WorkloadConfig,
+    pub forecast: ForecastConfig,
+    pub shaper: ShaperConfig,
+    /// Hard stop for simulated time (seconds); 0 = run to completion.
+    pub max_sim_time_s: f64,
+    /// Max failures per app before the shaper stops shaping it (§4.2).
+    pub max_failures_before_giveup: u32,
+}
+
+impl SimConfig {
+    /// CI-speed preset: small cluster, small workload, same dynamics.
+    pub fn small() -> Self {
+        SimConfig {
+            seed: 42,
+            cluster: ClusterConfig { hosts: 8, cores_per_host: 32.0, mem_per_host_gb: 128.0 },
+            workload: WorkloadConfig {
+                num_apps: 500,
+                elastic_fraction: 0.6,
+                max_elastic: 16,
+                runtime_scale: 2.0,
+                mem_scale: 2.0,
+                burst_prob: 0.7,
+                burst_mean_s: 5.0,
+                gap_mean_s: 60.0,
+            },
+            forecast: ForecastConfig {
+                kind: ForecasterKind::GpNative,
+                kernel: KernelKind::Exp,
+                history: 10,
+                monitor_interval_s: 60.0,
+                grace_period_s: 600.0,
+            },
+            shaper: ShaperConfig {
+                policy: Policy::Pessimistic,
+                k1: 0.05,
+                k2: 3.0,
+                shaping_interval_s: 60.0,
+            },
+            max_sim_time_s: 0.0,
+            max_failures_before_giveup: 5,
+        }
+    }
+
+    /// The paper's simulation testbed (§4.1): 250 hosts × 32 cores ×
+    /// 128 GB; 150 000 applications. Long: used by `--preset paper` runs.
+    pub fn paper() -> Self {
+        let mut c = Self::small();
+        c.cluster.hosts = 250;
+        c.workload.num_apps = 150_000;
+        c.workload.max_elastic = 1024;
+        c
+    }
+
+    /// Mid-size preset for the shipped experiment harnesses: the same
+    /// dynamics at a scale that completes in minutes on one CPU.
+    pub fn medium() -> Self {
+        let mut c = Self::small();
+        c.cluster.hosts = 25;
+        c.workload.num_apps = 600;
+        c.workload.max_elastic = 32;
+        c
+    }
+
+    /// The paper's prototype testbed (§5.1): 10 servers × 8 cores × 64 GB,
+    /// 100 apps, arrivals N(120 s, 40 s).
+    pub fn prototype() -> Self {
+        let mut c = Self::small();
+        c.cluster = ClusterConfig { hosts: 10, cores_per_host: 8.0, mem_per_host_gb: 64.0 };
+        c.workload.num_apps = 100;
+        c.workload.max_elastic = 8;
+        // §5.1: arrivals ~ N(120 s, 40 s) — no fast bursts; memory flavors
+        // 8-32 GB per app
+        c.workload.burst_prob = 0.0;
+        c.workload.gap_mean_s = 120.0;
+        c.workload.mem_scale = 1.5;
+        c.workload.runtime_scale = 6.0;
+        c.forecast.kind = ForecasterKind::GpPjrt;
+        c
+    }
+
+    /// Look up a preset by name.
+    pub fn preset(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "small" => Some(Self::small()),
+            "medium" => Some(Self::medium()),
+            "paper" => Some(Self::paper()),
+            "prototype" => Some(Self::prototype()),
+            _ => None,
+        }
+    }
+
+    /// Apply overrides from a JSON object, e.g.
+    /// `{"cluster": {"hosts": 100}, "shaper": {"k1": 0.1}}`.
+    pub fn apply_json(&mut self, j: &Json) -> Result<(), String> {
+        if let Some(v) = j.get("seed").and_then(Json::as_f64) {
+            self.seed = v as u64;
+        }
+        if let Some(c) = j.get("cluster") {
+            if let Some(v) = c.get("hosts").and_then(Json::as_usize) {
+                self.cluster.hosts = v;
+            }
+            if let Some(v) = c.get("cores_per_host").and_then(Json::as_f64) {
+                self.cluster.cores_per_host = v;
+            }
+            if let Some(v) = c.get("mem_per_host_gb").and_then(Json::as_f64) {
+                self.cluster.mem_per_host_gb = v;
+            }
+        }
+        if let Some(w) = j.get("workload") {
+            if let Some(v) = w.get("num_apps").and_then(Json::as_usize) {
+                self.workload.num_apps = v;
+            }
+            if let Some(v) = w.get("elastic_fraction").and_then(Json::as_f64) {
+                self.workload.elastic_fraction = v;
+            }
+            if let Some(v) = w.get("max_elastic").and_then(Json::as_usize) {
+                self.workload.max_elastic = v;
+            }
+            if let Some(v) = w.get("runtime_scale").and_then(Json::as_f64) {
+                self.workload.runtime_scale = v;
+            }
+            if let Some(v) = w.get("mem_scale").and_then(Json::as_f64) {
+                self.workload.mem_scale = v;
+            }
+            if let Some(v) = w.get("burst_prob").and_then(Json::as_f64) {
+                self.workload.burst_prob = v;
+            }
+            if let Some(v) = w.get("burst_mean_s").and_then(Json::as_f64) {
+                self.workload.burst_mean_s = v;
+            }
+            if let Some(v) = w.get("gap_mean_s").and_then(Json::as_f64) {
+                self.workload.gap_mean_s = v;
+            }
+        }
+        if let Some(f) = j.get("forecast") {
+            if let Some(v) = f.get("kind").and_then(Json::as_str) {
+                self.forecast.kind = ForecasterKind::parse(v)
+                    .ok_or_else(|| format!("bad forecaster kind '{v}'"))?;
+            }
+            if let Some(v) = f.get("kernel").and_then(Json::as_str) {
+                self.forecast.kernel = KernelKind::parse(v)
+                    .ok_or_else(|| format!("bad kernel '{v}'"))?;
+            }
+            if let Some(v) = f.get("history").and_then(Json::as_usize) {
+                self.forecast.history = v;
+            }
+            if let Some(v) = f.get("monitor_interval_s").and_then(Json::as_f64) {
+                self.forecast.monitor_interval_s = v;
+            }
+            if let Some(v) = f.get("grace_period_s").and_then(Json::as_f64) {
+                self.forecast.grace_period_s = v;
+            }
+        }
+        if let Some(s) = j.get("shaper") {
+            if let Some(v) = s.get("policy").and_then(Json::as_str) {
+                self.shaper.policy =
+                    Policy::parse(v).ok_or_else(|| format!("bad policy '{v}'"))?;
+            }
+            if let Some(v) = s.get("k1").and_then(Json::as_f64) {
+                self.shaper.k1 = v;
+            }
+            if let Some(v) = s.get("k2").and_then(Json::as_f64) {
+                self.shaper.k2 = v;
+            }
+            if let Some(v) = s.get("shaping_interval_s").and_then(Json::as_f64) {
+                self.shaper.shaping_interval_s = v;
+            }
+        }
+        if let Some(v) = j.get("max_sim_time_s").and_then(Json::as_f64) {
+            self.max_sim_time_s = v;
+        }
+        self.validate()
+    }
+
+    /// Check invariants; returns an explanation on violation.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.cluster.hosts == 0 {
+            return Err("cluster.hosts must be > 0".into());
+        }
+        if self.cluster.cores_per_host <= 0.0 || self.cluster.mem_per_host_gb <= 0.0 {
+            return Err("host resources must be positive".into());
+        }
+        if !(0.0..=1.0).contains(&self.workload.elastic_fraction) {
+            return Err("elastic_fraction must be in [0,1]".into());
+        }
+        if !(0.0..=1.0).contains(&self.shaper.k1) {
+            return Err("k1 must be in [0,1] (fraction of reservation)".into());
+        }
+        if self.shaper.k2 < 0.0 {
+            return Err("k2 must be >= 0".into());
+        }
+        if self.forecast.history < 2 {
+            return Err("forecast.history must be >= 2".into());
+        }
+        if self.forecast.monitor_interval_s <= 0.0 {
+            return Err("monitor_interval_s must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_valid() {
+        for p in ["small", "medium", "paper", "prototype"] {
+            SimConfig::preset(p).unwrap().validate().unwrap();
+        }
+        assert!(SimConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn paper_preset_matches_section_4_1() {
+        let c = SimConfig::paper();
+        assert_eq!(c.cluster.hosts, 250);
+        assert_eq!(c.cluster.cores_per_host, 32.0);
+        assert_eq!(c.cluster.mem_per_host_gb, 128.0);
+        assert_eq!(c.workload.num_apps, 150_000);
+        assert!((c.workload.elastic_fraction - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prototype_preset_matches_section_5_1() {
+        let c = SimConfig::prototype();
+        assert_eq!(c.cluster.hosts, 10);
+        assert_eq!(c.cluster.cores_per_host, 8.0);
+        assert_eq!(c.cluster.mem_per_host_gb, 64.0);
+        assert_eq!(c.workload.num_apps, 100);
+        assert_eq!(c.forecast.kind, ForecasterKind::GpPjrt);
+        // paper: K1=5%, K2=3, monitor every minute, 10 min grace
+        assert!((c.shaper.k1 - 0.05).abs() < 1e-9);
+        assert!((c.shaper.k2 - 3.0).abs() < 1e-9);
+        assert!((c.forecast.monitor_interval_s - 60.0).abs() < 1e-9);
+        assert!((c.forecast.grace_period_s - 600.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let mut c = SimConfig::small();
+        let j = Json::parse(
+            r#"{"cluster":{"hosts":7},"shaper":{"k1":0.25,"policy":"optimistic"},
+                "forecast":{"kind":"arima","history":20}}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.cluster.hosts, 7);
+        assert_eq!(c.shaper.policy, Policy::Optimistic);
+        assert!((c.shaper.k1 - 0.25).abs() < 1e-12);
+        assert_eq!(c.forecast.kind, ForecasterKind::Arima);
+        assert_eq!(c.forecast.history, 20);
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        let mut c = SimConfig::small();
+        let j = Json::parse(r#"{"shaper":{"k1":2.0}}"#).unwrap();
+        assert!(c.apply_json(&j).is_err());
+        let j2 = Json::parse(r#"{"forecast":{"kind":"nonsense"}}"#).unwrap();
+        let mut c2 = SimConfig::small();
+        assert!(c2.apply_json(&j2).is_err());
+    }
+
+    #[test]
+    fn enum_parsing() {
+        assert_eq!(Policy::parse("PESSIMISTIC"), Some(Policy::Pessimistic));
+        assert_eq!(ForecasterKind::parse("gp"), Some(ForecasterKind::GpPjrt));
+        assert_eq!(KernelKind::parse("rbf"), Some(KernelKind::Rbf));
+        assert_eq!(Policy::Baseline.name(), "baseline");
+    }
+}

@@ -1,0 +1,82 @@
+//! Live prototype mode (§5): the closed loop — monitor every minute,
+//! GP forecasts through the AOT PJRT artifact, Algorithm 1 shaping with a
+//! 10-minute grace period — paced against the wall clock.
+//!
+//! The paper deploys on 10 Docker servers for ~24 h; here components are
+//! in-process utilization processes (their patterns), and real time is
+//! compressed by an acceleration factor (default 120×: the 24 h workload
+//! replays in ~12 min; tests use much higher factors). Docker soft/hard
+//! memory limits map to the allocation ledger + the OOM check
+//! (DESIGN.md §2).
+
+use std::sync::Arc;
+
+use crate::config::{ForecasterKind, Policy, SimConfig};
+use crate::metrics::RunReport;
+use crate::runtime::Runtime;
+use crate::sim::engine::{Engine, ForecastSource};
+
+/// Outcome of a live session: the two §5.1 arms on the same workload.
+#[derive(Debug, Clone)]
+pub struct LiveOutcome {
+    pub baseline: RunReport,
+    pub shaped: RunReport,
+}
+
+/// Run the §5.1 experiment: baseline vs pessimistic+GP on the identical
+/// workload, paced at `accel`× real time. `runtime` may be shared.
+pub fn run_live(
+    base: &SimConfig,
+    runtime: Option<Arc<Runtime>>,
+    accel: f64,
+) -> anyhow::Result<LiveOutcome> {
+    let rt = match runtime {
+        Some(rt) => rt,
+        None => Arc::new(Runtime::from_default_dir()?),
+    };
+
+    let mut cfg_base = base.clone();
+    cfg_base.shaper.policy = Policy::Baseline;
+    crate::info!("live: baseline arm at {accel}x real time");
+    let eng = Engine::new(cfg_base, ForecastSource::Oracle); // source unused by baseline
+    let baseline = eng.run_paced("live/baseline", accel);
+
+    let mut cfg_shaped = base.clone();
+    cfg_shaped.shaper.policy = Policy::Pessimistic;
+    cfg_shaped.forecast.kind = ForecasterKind::GpPjrt;
+    crate::info!(
+        "live: shaped arm (GP artifact on PJRT platform '{}') at {accel}x",
+        rt.platform()
+    );
+    let gp = crate::forecast::gp_pjrt::GpPjrt::new(
+        rt,
+        cfg_shaped.forecast.kernel,
+        cfg_shaped.forecast.history,
+        32,
+    )?;
+    let eng = Engine::new(cfg_shaped, ForecastSource::Model(Box::new(gp)));
+    let shaped = eng.run_paced("live/pessimistic-gp", accel);
+
+    Ok(LiveOutcome { baseline, shaped })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The pacing path itself (sleep arithmetic) on a micro run without
+    /// PJRT: exercised via Engine::run_paced directly.
+    #[test]
+    fn paced_run_terminates_quickly_at_high_accel() {
+        let mut cfg = SimConfig::small();
+        cfg.workload.num_apps = 5;
+        cfg.cluster.hosts = 3;
+        cfg.workload.runtime_scale = 0.05;
+        cfg.shaper.policy = Policy::Baseline;
+        let eng = Engine::new(cfg, ForecastSource::Oracle);
+        let start = std::time::Instant::now();
+        let r = eng.run_paced("paced", 1e9);
+        assert_eq!(r.completed, 5);
+        assert!(start.elapsed().as_secs() < 30);
+    }
+}

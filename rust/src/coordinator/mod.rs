@@ -1,0 +1,105 @@
+//! The L3 coordinator: experiment orchestration around the engine.
+//!
+//! * `compare` — run the same seeded workload under several
+//!   (policy, forecaster) setups and report side by side — the pattern
+//!   behind Figs. 3 and 5.
+//! * `live` — the §5 prototype mode: the identical closed loop
+//!   (monitor → forecast via the AOT PJRT artifact → Algorithm 1) paced
+//!   against the wall clock at an acceleration factor.
+
+pub mod live;
+
+use std::sync::Arc;
+
+use crate::config::{ForecasterKind, Policy, SimConfig};
+use crate::metrics::RunReport;
+use crate::runtime::Runtime;
+use crate::sim::engine::run_simulation;
+
+/// One comparison arm: a label plus config deltas.
+#[derive(Debug, Clone)]
+pub struct Arm {
+    pub label: String,
+    pub policy: Policy,
+    pub forecaster: ForecasterKind,
+}
+
+impl Arm {
+    /// Convenience constructor.
+    pub fn new(label: &str, policy: Policy, forecaster: ForecasterKind) -> Self {
+        Arm { label: label.to_string(), policy, forecaster }
+    }
+}
+
+/// Run every arm on the same workload (same seed) and return the reports
+/// in arm order. A shared PJRT runtime is created lazily if any arm needs
+/// the GP artifact.
+pub fn compare(base: &SimConfig, arms: &[Arm]) -> anyhow::Result<Vec<RunReport>> {
+    let needs_rt = arms.iter().any(|a| a.forecaster == ForecasterKind::GpPjrt);
+    let runtime: Option<Arc<Runtime>> = if needs_rt {
+        Some(Arc::new(Runtime::from_default_dir()?))
+    } else {
+        None
+    };
+    let mut out = Vec::with_capacity(arms.len());
+    for arm in arms {
+        let mut cfg = base.clone();
+        cfg.shaper.policy = arm.policy;
+        cfg.forecast.kind = arm.forecaster;
+        crate::info!("running arm '{}'", arm.label);
+        out.push(run_simulation(&cfg, runtime.clone(), &arm.label)?);
+    }
+    Ok(out)
+}
+
+/// Average several seeded repetitions of the same arm (the paper uses 10
+/// simulation runs); returns per-seed reports.
+pub fn repeat_seeds(
+    base: &SimConfig,
+    runtime: Option<Arc<Runtime>>,
+    name: &str,
+    seeds: &[u64],
+) -> anyhow::Result<Vec<RunReport>> {
+    let mut out = Vec::with_capacity(seeds.len());
+    for &s in seeds {
+        let mut cfg = base.clone();
+        cfg.seed = s;
+        out.push(run_simulation(&cfg, runtime.clone(), &format!("{name}/seed{s}"))?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compare_runs_all_arms_same_workload() {
+        let mut cfg = SimConfig::small();
+        cfg.workload.num_apps = 12;
+        cfg.cluster.hosts = 4;
+        cfg.workload.runtime_scale = 0.2;
+        let arms = vec![
+            Arm::new("baseline", Policy::Baseline, ForecasterKind::Oracle),
+            Arm::new("pessimistic", Policy::Pessimistic, ForecasterKind::Oracle),
+        ];
+        let reports = compare(&cfg, &arms).unwrap();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].num_apps, reports[1].num_apps);
+        assert_eq!(reports[0].name, "baseline");
+    }
+
+    #[test]
+    fn repeat_seeds_vary() {
+        let mut cfg = SimConfig::small();
+        cfg.workload.num_apps = 10;
+        cfg.cluster.hosts = 4;
+        cfg.workload.runtime_scale = 0.2;
+        cfg.forecast.kind = crate::config::ForecasterKind::Oracle;
+        cfg.shaper.policy = Policy::Baseline;
+        let rs = repeat_seeds(&cfg, None, "b", &[1, 2]).unwrap();
+        assert_eq!(rs.len(), 2);
+        // different seeds -> different workloads -> different turnaround
+        assert_ne!(rs[0].turnaround.mean, rs[1].turnaround.mean);
+    }
+}

@@ -1,0 +1,179 @@
+//! Fig. 2 — prediction-error distributions of ARIMA vs GP (exp / rbf
+//! kernels, h ∈ {10, 20, 40}) over a corpus of memory-utilization series.
+//!
+//! Protocol (matching §3.1 "Numerical results"): for each series, walk
+//! forward in time issuing one-step-ahead forecasts from each model and
+//! record |error|. The paper's observations to reproduce:
+//!   * GP-Exp beats GP-RBF at every h;
+//!   * errors shrink as h grows;
+//!   * ARIMA's median error is competitive but its *predictive variance*
+//!     is much smaller — over-confidence (the Fig. 4a failure cause).
+
+use std::sync::Arc;
+
+use crate::config::KernelKind;
+use crate::forecast::{arima::Arima, gp_native::GpNative, gp_pjrt::GpPjrt, Forecaster};
+use crate::runtime::Runtime;
+use crate::trace::patterns::Pattern;
+use crate::util::rng::Pcg;
+use crate::util::stats::{boxstats, BoxStats};
+
+/// Result for one model configuration.
+#[derive(Debug, Clone)]
+pub struct ModelErrors {
+    pub label: String,
+    pub abs_error: BoxStats,
+    /// Mean predictive std-dev — the over-confidence indicator.
+    pub mean_pred_std: f64,
+}
+
+/// Fig. 2 parameters.
+#[derive(Debug, Clone)]
+pub struct Fig2Params {
+    pub num_series: usize,
+    pub series_len: usize,
+    pub histories: Vec<usize>,
+    pub seed: u64,
+    /// Use the AOT PJRT artifact for GP (otherwise native mirror).
+    pub use_pjrt: bool,
+}
+
+impl Default for Fig2Params {
+    fn default() -> Self {
+        Fig2Params {
+            num_series: 120,
+            series_len: 100,
+            histories: vec![10, 20, 40],
+            seed: 7,
+            use_pjrt: false,
+        }
+    }
+}
+
+/// Generate the evaluation corpus: memory-usage series from the pattern
+/// mixture (the stand-in for the paper's ~6000 academic-cluster series).
+pub fn corpus(n: usize, len: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Pcg::seeded(seed);
+    (0..n)
+        .map(|_| {
+            let p = Pattern::sample(&mut rng, true);
+            (0..len as u64).map(|s| p.at_step(s)).collect()
+        })
+        .collect()
+}
+
+/// Walk-forward one-step evaluation of a forecaster over the corpus.
+pub fn evaluate(
+    model: &mut dyn Forecaster,
+    corpus: &[Vec<f64>],
+    min_history: usize,
+) -> (BoxStats, f64) {
+    let mut errs = Vec::new();
+    let mut stds = Vec::new();
+    // batch per time offset: all series forecast in one call (exercises
+    // the batched artifact path when the model is GpPjrt)
+    let len = corpus.first().map(|s| s.len()).unwrap_or(0);
+    let start = min_history.max(4);
+    let stride = 4; // every 4th step keeps the harness fast without bias
+    let mut t = start;
+    while t < len {
+        let views: Vec<Vec<f64>> = corpus.iter().map(|s| s[..t].to_vec()).collect();
+        let fs = model.forecast(&views);
+        for (i, f) in fs.iter().enumerate() {
+            errs.push((f.mean - corpus[i][t]).abs());
+            stds.push(f.std());
+        }
+        t += stride;
+    }
+    (boxstats(&errs), crate::util::stats::mean(&stds))
+}
+
+/// Run the full Fig. 2 comparison.
+pub fn run(params: &Fig2Params, runtime: Option<Arc<Runtime>>) -> anyhow::Result<Vec<ModelErrors>> {
+    let corpus = corpus(params.num_series, params.series_len, params.seed);
+    let mut out = Vec::new();
+
+    // ARIMA: h-independent (the paper: order selection caps p <= 3)
+    let mut arima = Arima::auto();
+    let (abs_error, mean_pred_std) = evaluate(&mut arima, &corpus, 10);
+    out.push(ModelErrors { label: "ARIMA".into(), abs_error, mean_pred_std });
+
+    for &h in &params.histories {
+        for kernel in [KernelKind::Exp, KernelKind::Rbf] {
+            let label = format!(
+                "GP-{}-h{h}",
+                match kernel {
+                    KernelKind::Exp => "Exp",
+                    KernelKind::Rbf => "RBF",
+                }
+            );
+            let (abs_error, mean_pred_std) = if params.use_pjrt {
+                let rt = runtime
+                    .clone()
+                    .ok_or_else(|| anyhow::anyhow!("PJRT requested but no runtime"))?;
+                let mut gp = GpPjrt::new(rt, kernel, h, 32)?;
+                evaluate(&mut gp, &corpus, h / 2)
+            } else {
+                let mut gp = GpNative::new(kernel, h);
+                evaluate(&mut gp, &corpus, h / 2)
+            };
+            out.push(ModelErrors { label, abs_error, mean_pred_std });
+        }
+    }
+    Ok(out)
+}
+
+/// Render the results as the paper's boxplot table.
+pub fn render(results: &[ModelErrors]) -> String {
+    let mut t = crate::util::table::Table::new(&[
+        "model", "med |err|", "mean |err|", "q3 |err|", "max |err|", "mean pred σ",
+    ]);
+    for r in results {
+        t.row(&[
+            r.label.clone(),
+            format!("{:.4}", r.abs_error.median),
+            format!("{:.4}", r.abs_error.mean),
+            format!("{:.4}", r.abs_error.q3),
+            format!("{:.4}", r.abs_error.max),
+            format!("{:.4}", r.mean_pred_std),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_deterministic_and_bounded() {
+        let a = corpus(5, 50, 1);
+        let b = corpus(5, 50, 1);
+        assert_eq!(a, b);
+        for s in &a {
+            assert_eq!(s.len(), 50);
+            assert!(s.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn small_run_has_expected_structure() {
+        let params = Fig2Params {
+            num_series: 10,
+            series_len: 50,
+            histories: vec![10],
+            seed: 3,
+            use_pjrt: false,
+        };
+        let res = run(&params, None).unwrap();
+        // ARIMA + 2 kernels × 1 history
+        assert_eq!(res.len(), 3);
+        assert_eq!(res[0].label, "ARIMA");
+        for r in &res {
+            assert!(r.abs_error.n > 0);
+            assert!(r.abs_error.median.is_finite());
+        }
+        let rendered = render(&res);
+        assert!(rendered.contains("GP-Exp-h10"));
+    }
+}

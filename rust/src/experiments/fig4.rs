@@ -1,0 +1,154 @@
+//! Fig. 4 — heat maps of the safe-guard buffer parameters: K1 (static
+//! fraction of the reservation) × K2 (sigma multiplier) under ARIMA (4a)
+//! and GP (4b) forecasting, pessimistic policy. Three metrics per cell:
+//! mean turnaround ratio over baseline (higher better), mean memory slack
+//! (lower better), failed-app percentage (lower better).
+
+use std::sync::Arc;
+
+use crate::config::{ForecasterKind, Policy, SimConfig};
+use crate::metrics::RunReport;
+use crate::runtime::Runtime;
+use crate::sim::engine::run_simulation;
+
+/// The paper's sweep values.
+pub const K1_GRID: [f64; 6] = [0.0, 0.05, 0.10, 0.25, 0.50, 1.0];
+pub const K2_GRID: [f64; 4] = [0.0, 1.0, 2.0, 3.0];
+
+/// One heat-map cell.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub k1: f64,
+    pub k2: f64,
+    pub turnaround_ratio: f64,
+    pub mem_slack: f64,
+    pub failed_fraction: f64,
+}
+
+/// Full sweep result.
+#[derive(Debug, Clone)]
+pub struct Sweep {
+    pub forecaster: ForecasterKind,
+    pub baseline: RunReport,
+    /// cells[k2_index][k1_index]
+    pub cells: Vec<Vec<Cell>>,
+}
+
+/// Run the K1×K2 sweep for one forecaster kind.
+pub fn run(
+    base: &SimConfig,
+    forecaster: ForecasterKind,
+    runtime: Option<Arc<Runtime>>,
+    k1_grid: &[f64],
+    k2_grid: &[f64],
+) -> anyhow::Result<Sweep> {
+    // baseline once (same workload/seed for every cell)
+    let mut bcfg = base.clone();
+    bcfg.shaper.policy = Policy::Baseline;
+    bcfg.forecast.kind = ForecasterKind::Oracle; // unused by baseline
+    let baseline = run_simulation(&bcfg, None, "baseline")?;
+
+    let mut cells = Vec::with_capacity(k2_grid.len());
+    for &k2 in k2_grid {
+        let mut row = Vec::with_capacity(k1_grid.len());
+        for &k1 in k1_grid {
+            let mut cfg = base.clone();
+            cfg.shaper.policy = Policy::Pessimistic;
+            cfg.forecast.kind = forecaster;
+            cfg.shaper.k1 = k1;
+            cfg.shaper.k2 = k2;
+            let name = format!("{}-k1={k1}-k2={k2}", forecaster.name());
+            let r = run_simulation(&cfg, runtime.clone(), &name)?;
+            row.push(Cell {
+                k1,
+                k2,
+                turnaround_ratio: baseline.turnaround.mean / r.turnaround.mean.max(1e-9),
+                mem_slack: r.mem_slack.mean,
+                failed_fraction: r.failed_app_fraction,
+            });
+            crate::info!(
+                "cell k1={k1:.2} k2={k2:.0}: ratio {:.2}x slack {:.3} failures {:.1}%",
+                row.last().unwrap().turnaround_ratio,
+                row.last().unwrap().mem_slack,
+                row.last().unwrap().failed_fraction * 100.0
+            );
+        }
+        cells.push(row);
+    }
+    Ok(Sweep { forecaster, baseline, cells })
+}
+
+/// Render the three heat maps like Fig. 4 ("bright cells are better").
+pub fn render(sweep: &Sweep) -> String {
+    let k1_labels: Vec<String> = sweep.cells[0]
+        .iter()
+        .map(|c| format!("K1={:.0}%", c.k1 * 100.0))
+        .collect();
+    let k2_labels: Vec<String> =
+        sweep.cells.iter().map(|row| format!("K2={:.0}", row[0].k2)).collect();
+    let grid = |f: &dyn Fn(&Cell) -> f64| -> Vec<Vec<f64>> {
+        sweep.cells.iter().map(|row| row.iter().map(f).collect()).collect()
+    };
+    let mut out = format!("Fig. 4 sweep — forecaster: {}\n\n", sweep.forecaster.name());
+    out.push_str(&crate::util::table::heatmap(
+        "turnaround ratio over baseline (higher = better)",
+        &k1_labels,
+        &k2_labels,
+        &grid(&|c| c.turnaround_ratio),
+        false,
+    ));
+    out.push('\n');
+    out.push_str(&crate::util::table::heatmap(
+        "mean memory slack (lower = better)",
+        &k1_labels,
+        &k2_labels,
+        &grid(&|c| c.mem_slack),
+        true,
+    ));
+    out.push('\n');
+    out.push_str(&crate::util::table::heatmap(
+        "failed applications fraction (lower = better)",
+        &k1_labels,
+        &k2_labels,
+        &grid(&|c| c.failed_fraction),
+        true,
+    ));
+    out
+}
+
+/// Best cell by turnaround ratio subject to a failure budget.
+pub fn best_cell(sweep: &Sweep, max_failures: f64) -> Option<&Cell> {
+    sweep
+        .cells
+        .iter()
+        .flatten()
+        .filter(|c| c.failed_fraction <= max_failures)
+        .max_by(|a, b| a.turnaround_ratio.partial_cmp(&b.turnaround_ratio).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_sweep_shapes() {
+        let mut cfg = SimConfig::small();
+        cfg.workload.num_apps = 10;
+        cfg.cluster.hosts = 4;
+        cfg.workload.runtime_scale = 0.15;
+        let sweep =
+            run(&cfg, ForecasterKind::LastValue, None, &[0.05, 1.0], &[0.0, 2.0]).unwrap();
+        assert_eq!(sweep.cells.len(), 2);
+        assert_eq!(sweep.cells[0].len(), 2);
+        // K1=100% degenerates to baseline: ratio ~1, no failures
+        for row in &sweep.cells {
+            let degenerate = row.last().unwrap();
+            assert!(degenerate.failed_fraction <= 1e-9);
+            assert!((degenerate.turnaround_ratio - 1.0).abs() < 0.35,
+                "K1=1 ratio {}", degenerate.turnaround_ratio);
+        }
+        let s = render(&sweep);
+        assert!(s.contains("turnaround ratio"));
+        assert!(best_cell(&sweep, 1.0).is_some());
+    }
+}

@@ -1,0 +1,9 @@
+//! Experiment harnesses: one module per figure of the paper's evaluation
+//! (DESIGN.md §4 experiment index). Each exposes a `run(...)` that
+//! returns printable results and is shared by examples, benches and
+//! integration tests.
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;

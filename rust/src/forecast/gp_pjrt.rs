@@ -1,0 +1,197 @@
+//! GP forecasting through the AOT JAX/Pallas artifact over PJRT — the
+//! production path (§3.1.2): python lowers the model once at build time;
+//! this module feeds it batches of component histories at runtime.
+//!
+//! Batching strategy: the shaper forecasts *every* running component each
+//! tick, so series are packed into fixed `B`-sized slabs (the batched
+//! artifact shape), padding the tail slab by repeating its last series.
+//! Evidence maximization runs the slab once per grid lengthscale and
+//! keeps, per series, the result with the best log-marginal-likelihood —
+//! G batch executions replace G·B single calls.
+
+use std::sync::Arc;
+
+use super::{build_patterns, naive_forecast, Forecast, Forecaster, Standardizer};
+use crate::config::KernelKind;
+use crate::forecast::gp_native::{LS_GRID, NOISE};
+use crate::runtime::{Executable, GpInputs, Runtime};
+
+/// GP forecaster executing the batched AOT artifact.
+pub struct GpPjrt {
+    runtime: Arc<Runtime>,
+    single: Arc<Executable>,
+    batched: Arc<Executable>,
+    pub kernel: KernelKind,
+    pub history: usize,
+    pub ls_grid: Vec<f64>,
+    pub noise: f64,
+    /// Executions performed (perf accounting).
+    pub calls: u64,
+}
+
+impl GpPjrt {
+    /// Load (and compile, cached) the artifacts for `kernel`/`history`.
+    pub fn new(
+        runtime: Arc<Runtime>,
+        kernel: KernelKind,
+        history: usize,
+        batch: usize,
+    ) -> anyhow::Result<Self> {
+        let single = runtime.load(kernel, history, 1)?;
+        let batched = runtime.load(kernel, history, batch)?;
+        Ok(GpPjrt {
+            runtime,
+            single,
+            batched,
+            kernel,
+            history,
+            ls_grid: LS_GRID.to_vec(),
+            noise: NOISE,
+            calls: 0,
+        })
+    }
+
+    /// Batch capacity of the batched artifact.
+    pub fn batch_size(&self) -> usize {
+        self.batched.info.batch
+    }
+
+    /// Forecast a single series through the B=1 artifact (used by tests
+    /// and the Fig. 2 harness; the shaper prefers `forecast` batches).
+    pub fn forecast_one(&mut self, series: &[f64]) -> anyhow::Result<Forecast> {
+        if series.len() < 2 {
+            return Ok(naive_forecast(series));
+        }
+        let (x, y, q, std) = build_patterns(series, self.history);
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+        let qf: Vec<f32> = q.iter().map(|&v| v as f32).collect();
+        // per-dimension lengthscales, matching GpNative (see its doc)
+        let dim_scale = ((self.history + 1) as f64).sqrt();
+        let mut best: Option<(f32, f32, f32)> = None; // (mean, var, lml)
+        for &ls_rel in &self.ls_grid {
+            let ls = ls_rel * dim_scale;
+            let out = self.runtime.run_gp(
+                &self.single,
+                &GpInputs {
+                    x_train: &xf,
+                    y_train: &yf,
+                    x_query: &qf,
+                    lengthscale: &[ls as f32],
+                    noise: &[self.noise as f32],
+                },
+            )?;
+            self.calls += 1;
+            let cand = (out.means[0], out.vars[0], out.lmls[0]);
+            if best.map(|b| cand.2 > b.2).unwrap_or(true) {
+                best = Some(cand);
+            }
+        }
+        let (m, v, _) = best.expect("grid non-empty");
+        Ok(Forecast {
+            mean: std.inv_mean(m as f64),
+            var: std.inv_var(v as f64).max(1e-8),
+        })
+    }
+
+    /// Forecast a batch of series using B-sized slabs of the batched
+    /// artifact, one execution per grid lengthscale per slab.
+    pub fn forecast_batch(&mut self, series: &[Vec<f64>]) -> anyhow::Result<Vec<Forecast>> {
+        let b = self.batch_size();
+        let h = self.history;
+        let p = h + 1;
+        let n = h;
+        let mut out = Vec::with_capacity(series.len());
+        for slab in series.chunks(b) {
+            // build patterns for each series; pad the slab to B by
+            // repeating the last entry
+            let mut xs = vec![0f32; b * n * p];
+            let mut ys = vec![0f32; b * n];
+            let mut qs = vec![0f32; b * p];
+            let mut stds: Vec<Standardizer> = Vec::with_capacity(b);
+            let mut too_short = vec![false; b];
+            for i in 0..b {
+                let s = slab.get(i).unwrap_or_else(|| slab.last().unwrap());
+                if s.len() < 2 {
+                    too_short[i] = true;
+                    stds.push(Standardizer { mean: 0.0, std: 1.0 });
+                    continue;
+                }
+                let (x, y, q, std) = build_patterns(s, h);
+                for (j, &v) in x.iter().enumerate() {
+                    xs[i * n * p + j] = v as f32;
+                }
+                for (j, &v) in y.iter().enumerate() {
+                    ys[i * n + j] = v as f32;
+                }
+                for (j, &v) in q.iter().enumerate() {
+                    qs[i * p + j] = v as f32;
+                }
+                stds.push(std);
+            }
+            let noise = vec![self.noise as f32; b];
+            // grid: one artifact execution per lengthscale (per-dimension
+            // scaling matches GpNative)
+            let dim_scale = ((self.history + 1) as f64).sqrt();
+            let mut best: Vec<Option<(f32, f32, f32)>> = vec![None; b];
+            for &ls_rel in &self.ls_grid {
+                let ls = ls_rel * dim_scale;
+                let lsv = vec![ls as f32; b];
+                let o = self.runtime.run_gp(
+                    &self.batched,
+                    &GpInputs {
+                        x_train: &xs,
+                        y_train: &ys,
+                        x_query: &qs,
+                        lengthscale: &lsv,
+                        noise: &noise,
+                    },
+                )?;
+                self.calls += 1;
+                for i in 0..b {
+                    let cand = (o.means[i], o.vars[i], o.lmls[i]);
+                    if best[i].map(|x| cand.2 > x.2).unwrap_or(true) {
+                        best[i] = Some(cand);
+                    }
+                }
+            }
+            for (i, s) in slab.iter().enumerate() {
+                if too_short[i] {
+                    out.push(naive_forecast(s));
+                } else {
+                    let (m, v, _) = best[i].expect("grid non-empty");
+                    out.push(Forecast {
+                        mean: stds[i].inv_mean(m as f64),
+                        var: stds[i].inv_var(v as f64).max(1e-8),
+                    });
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Forecaster for GpPjrt {
+    fn name(&self) -> String {
+        format!("gp-pjrt-{}-h{}", self.kernel.name(), self.history)
+    }
+
+    fn min_history(&self) -> usize {
+        (self.history / 2).max(3)
+    }
+
+    fn forecast(&mut self, series: &[Vec<f64>]) -> Vec<Forecast> {
+        match self.forecast_batch(series) {
+            Ok(f) => f,
+            Err(e) => {
+                crate::error_log!("pjrt forecast failed ({e:#}); using naive fallback");
+                series.iter().map(|s| naive_forecast(s)).collect()
+            }
+        }
+    }
+}
+
+// The PJRT client wrapper is used from a single coordinator thread at a
+// time; Runtime is Send+Sync-safe for this pattern (compile-once,
+// sequential execute).
+unsafe impl Send for GpPjrt {}

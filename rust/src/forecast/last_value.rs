@@ -1,0 +1,53 @@
+//! Naive last-value (random-walk) forecaster: the sanity baseline every
+//! time-series comparison needs. Mean = last observation; variance = the
+//! empirical variance of one-step changes.
+
+use super::{naive_forecast, Forecast, Forecaster};
+
+/// Last-value forecaster (stateless).
+#[derive(Debug, Default, Clone)]
+pub struct LastValue;
+
+impl LastValue {
+    /// Construct.
+    pub fn new() -> Self {
+        LastValue
+    }
+}
+
+impl Forecaster for LastValue {
+    fn name(&self) -> String {
+        "last-value".into()
+    }
+
+    fn min_history(&self) -> usize {
+        1
+    }
+
+    fn forecast(&mut self, series: &[Vec<f64>]) -> Vec<Forecast> {
+        series.iter().map(|s| naive_forecast(s)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predicts_last() {
+        let mut lv = LastValue::new();
+        let out = lv.forecast(&[vec![0.1, 0.4, 0.7], vec![0.9]]);
+        assert_eq!(out[0].mean, 0.7);
+        assert_eq!(out[1].mean, 0.9);
+        assert!(out[0].var > 0.0);
+    }
+
+    #[test]
+    fn variance_tracks_noise() {
+        let mut lv = LastValue::new();
+        let smooth: Vec<f64> = (0..50).map(|i| 0.5 + 1e-4 * i as f64).collect();
+        let noisy: Vec<f64> = (0..50).map(|i| 0.5 + 0.3 * ((i * 7919) % 13) as f64 / 13.0).collect();
+        let out = lv.forecast(&[smooth, noisy]);
+        assert!(out[1].var > out[0].var * 10.0);
+    }
+}

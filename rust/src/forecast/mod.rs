@@ -1,0 +1,211 @@
+//! Utilization forecasting (§3.1): a common `Forecaster` interface over
+//! ARIMA (parametric, §3.1.1), GP regression with history-dependent
+//! kernels (non-parametric Bayesian, §3.1.2) — in both a native-Rust and
+//! an AOT JAX/Pallas-via-PJRT implementation — plus naive baselines.
+//!
+//! All forecasters consume raw utilization-fraction series (oldest first)
+//! and produce a one-step-ahead predictive **mean and variance**; the
+//! variance is the uncertainty signal the shaper's β buffer consumes
+//! (Eq. 9). Standardization happens inside each forecaster.
+
+pub mod arima;
+pub mod gp_native;
+pub mod gp_pjrt;
+pub mod last_value;
+
+use crate::config::{ForecasterKind, KernelKind};
+
+/// One-step-ahead predictive distribution (utilization-fraction units).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Forecast {
+    pub mean: f64,
+    pub var: f64,
+}
+
+impl Forecast {
+    /// Predictive standard deviation.
+    pub fn std(&self) -> f64 {
+        self.var.max(0.0).sqrt()
+    }
+}
+
+/// A forecasting model over utilization series.
+pub trait Forecaster: Send {
+    /// Display name for reports.
+    fn name(&self) -> String;
+
+    /// Minimum history length before forecasts are meaningful.
+    fn min_history(&self) -> usize;
+
+    /// One-step-ahead forecast for each series in the batch. Series
+    /// shorter than `min_history` get a degenerate last-value forecast.
+    fn forecast(&mut self, series: &[Vec<f64>]) -> Vec<Forecast>;
+}
+
+/// Construct a forecaster by config. GP-PJRT needs a `runtime::Runtime`;
+/// callers holding one should use `gp_pjrt::GpPjrt::new` directly — this
+/// factory covers the self-contained kinds.
+pub fn build(
+    kind: ForecasterKind,
+    kernel: KernelKind,
+    history: usize,
+) -> Box<dyn Forecaster> {
+    match kind {
+        ForecasterKind::LastValue => Box::new(last_value::LastValue::new()),
+        ForecasterKind::Arima => Box::new(arima::Arima::auto()),
+        ForecasterKind::GpNative => Box::new(gp_native::GpNative::new(kernel, history)),
+        ForecasterKind::GpPjrt => {
+            panic!("GP-PJRT requires a Runtime; use gp_pjrt::GpPjrt::new")
+        }
+        ForecasterKind::Oracle => {
+            panic!("the oracle is pattern-driven and lives in the engine")
+        }
+    }
+}
+
+/// Fallback forecast for too-short series: last value, variance from the
+/// observed step-to-step changes (or a broad prior if fewer than 2).
+pub fn naive_forecast(series: &[f64]) -> Forecast {
+    match series.len() {
+        0 => Forecast { mean: 0.5, var: 0.25 },
+        1 => Forecast { mean: series[0], var: 0.05 },
+        _ => {
+            let last = *series.last().unwrap();
+            let diffs: Vec<f64> = series.windows(2).map(|w| w[1] - w[0]).collect();
+            let var = crate::util::stats::variance(&diffs).max(1e-6);
+            Forecast { mean: last, var }
+        }
+    }
+}
+
+/// Standardization parameters of a series window.
+#[derive(Debug, Clone, Copy)]
+pub struct Standardizer {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Standardizer {
+    /// Fit over a window; guards the degenerate constant-series case.
+    pub fn fit(series: &[f64]) -> Self {
+        let mean = crate::util::stats::mean(series);
+        let std = crate::util::stats::stddev(series).max(1e-4);
+        Standardizer { mean, std }
+    }
+
+    /// To standardized units.
+    pub fn fwd(&self, y: f64) -> f64 {
+        (y - self.mean) / self.std
+    }
+
+    /// Mean back to raw units.
+    pub fn inv_mean(&self, z: f64) -> f64 {
+        z * self.std + self.mean
+    }
+
+    /// Variance back to raw units.
+    pub fn inv_var(&self, v: f64) -> f64 {
+        v * self.std * self.std
+    }
+}
+
+/// Build the GP history patterns (Eq. 5) exactly as the L2 python does
+/// (`ref.make_patterns`), with **front padding**: the artifact shapes are
+/// fixed at `n = h` training rows over a `2h` window, so shorter series
+/// are padded by repeating their first value. Returns flattened
+/// `(x_train[n*p], y_train[n], x_query[p])` in *standardized* units plus
+/// the standardizer.
+pub fn build_patterns(
+    series: &[f64],
+    h: usize,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>, Standardizer) {
+    let window = 2 * h;
+    let mut win: Vec<f64> = Vec::with_capacity(window);
+    if series.len() >= window {
+        win.extend_from_slice(&series[series.len() - window..]);
+    } else {
+        let pad = window - series.len();
+        let first = series.first().copied().unwrap_or(0.0);
+        win.extend(std::iter::repeat(first).take(pad));
+        win.extend_from_slice(series);
+    }
+    let std = Standardizer::fit(&win);
+    let z: Vec<f64> = win.iter().map(|&y| std.fwd(y)).collect();
+
+    let t = window; // series length used for time scaling, as in ref.py
+    let n = h;
+    let p = h + 1;
+    let mut x_train = Vec::with_capacity(n * p);
+    let mut y_train = Vec::with_capacity(n);
+    for i in 0..n {
+        x_train.push(i as f64 / t as f64);
+        x_train.extend_from_slice(&z[i..i + h]);
+        y_train.push(z[i + h]);
+    }
+    let mut x_query = Vec::with_capacity(p);
+    x_query.push((t - h) as f64 / t as f64);
+    x_query.extend_from_slice(&z[t - h..]);
+    (x_train, y_train, x_query, std)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_forecast_cases() {
+        assert_eq!(naive_forecast(&[]).mean, 0.5);
+        assert_eq!(naive_forecast(&[0.3]).mean, 0.3);
+        let f = naive_forecast(&[0.1, 0.2, 0.3]);
+        assert_eq!(f.mean, 0.3);
+        assert!(f.var > 0.0);
+    }
+
+    #[test]
+    fn standardizer_roundtrip() {
+        let s = Standardizer::fit(&[1.0, 2.0, 3.0, 4.0]);
+        let z = s.fwd(2.5);
+        assert!((s.inv_mean(z) - 2.5).abs() < 1e-12);
+        assert!(s.inv_var(1.0) > 0.0);
+    }
+
+    #[test]
+    fn standardizer_constant_series_guard() {
+        let s = Standardizer::fit(&[0.4; 10]);
+        assert!(s.std >= 1e-4);
+        assert!(s.fwd(0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn patterns_shapes() {
+        let h = 5;
+        let series: Vec<f64> = (0..12).map(|i| 0.1 * i as f64).collect();
+        let (x, y, q, _) = build_patterns(&series, h);
+        assert_eq!(x.len(), h * (h + 1));
+        assert_eq!(y.len(), h);
+        assert_eq!(q.len(), h + 1);
+    }
+
+    #[test]
+    fn patterns_pad_short_series() {
+        let h = 5;
+        let series = vec![0.2, 0.3, 0.4];
+        let (x, y, q, _) = build_patterns(&series, h);
+        assert_eq!(x.len(), h * (h + 1));
+        assert_eq!(y.len(), h);
+        assert_eq!(q.len(), h + 1);
+        // query history tail must end with the standardized last values
+        assert!(q[q.len() - 1].is_finite());
+    }
+
+    #[test]
+    fn patterns_use_latest_window() {
+        let h = 3;
+        // long series: only the last 2h values matter
+        let mut series = vec![9.0; 50];
+        series.extend_from_slice(&[0.1, 0.2, 0.3, 0.4, 0.5, 0.6]);
+        let (_, _, q, std) = build_patterns(&series, h);
+        // query's last history value = standardized 0.6
+        assert!((std.inv_mean(q[h]) - 0.6).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,45 @@
+//! # zoe-shaper
+//!
+//! Production-quality reproduction of **Pace et al. 2018, "A Data-Driven
+//! Approach to Dynamically Adjust Resource Allocation for Compute
+//! Clusters"** as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the cluster coordinator: discrete-event
+//!   simulator, FIFO application scheduler with core/elastic components,
+//!   resource monitor, and the paper's contribution, the *resource shaper*
+//!   (Algorithm 1 pessimistic preemption + optimistic + baseline).
+//! * **L2 (python/compile/model.py)** — GP forecasting posterior in JAX,
+//!   AOT-lowered once to HLO text.
+//! * **L1 (python/compile/kernels/gp_kernel.py)** — the Pallas kernel for
+//!   the GP's pairwise kernel-matrix hot-spot.
+//!
+//! Python never runs on the decision path: Rust loads the HLO artifacts
+//! via PJRT (`runtime`) and drives all forecasting natively or through the
+//! compiled artifacts.
+//!
+//! See `DESIGN.md` for the module map and the per-figure experiment index,
+//! and `EXPERIMENTS.md` for reproduced results.
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod forecast;
+pub mod metrics;
+pub mod monitor;
+pub mod runtime;
+pub mod scheduler;
+pub mod shaper;
+pub mod sim;
+pub mod trace;
+pub mod util;
+pub mod workload;
+
+/// Convenience re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::config::{ForecasterKind, KernelKind, Policy, SimConfig};
+    pub use crate::metrics::RunReport;
+    pub use crate::sim::engine::run_simulation;
+    pub use crate::util::rng::Pcg;
+    pub use crate::util::stats::{boxstats, BoxStats};
+}

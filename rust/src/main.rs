@@ -1,0 +1,265 @@
+//! `zoe-shaper` — CLI for the cluster resource-shaping system.
+//!
+//! Subcommands:
+//!   simulate       one simulation run (policy/forecaster/preset flags)
+//!   compare        baseline vs optimistic vs pessimistic (Fig. 3)
+//!   forecast-eval  prediction-error comparison (Fig. 2)
+//!   sweep          K1×K2 heat maps (Fig. 4)
+//!   live           paced prototype run, baseline vs shaped (Fig. 5)
+//!   artifacts      list AOT artifacts visible to the runtime
+
+use std::sync::Arc;
+
+use zoe_shaper::config::{ForecasterKind, KernelKind, Policy, SimConfig};
+use zoe_shaper::experiments::{fig2, fig3, fig4, fig5};
+use zoe_shaper::runtime::Runtime;
+use zoe_shaper::sim::engine::run_simulation;
+use zoe_shaper::util::cli::Args;
+use zoe_shaper::util::json::Json;
+use zoe_shaper::util::logger;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(String::as_str) {
+        Some("simulate") => dispatch(cmd_simulate, &argv[1..]),
+        Some("compare") => dispatch(cmd_compare, &argv[1..]),
+        Some("forecast-eval") => dispatch(cmd_forecast_eval, &argv[1..]),
+        Some("sweep") => dispatch(cmd_sweep, &argv[1..]),
+        Some("live") => dispatch(cmd_live, &argv[1..]),
+        Some("artifacts") => dispatch(cmd_artifacts, &argv[1..]),
+        Some("--help") | Some("-h") | None => {
+            println!("{}", top_help());
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n\n{}", top_help());
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn top_help() -> &'static str {
+    "zoe-shaper — data-driven dynamic resource allocation (Pace et al. 2018)\n\n\
+     USAGE:\n  zoe-shaper <subcommand> [options]\n\n\
+     SUBCOMMANDS:\n\
+       simulate        run one simulation (—policy, --forecaster, --preset...)\n\
+       compare         Fig. 3: baseline vs optimistic vs pessimistic (oracle)\n\
+       forecast-eval   Fig. 2: ARIMA vs GP prediction-error distributions\n\
+       sweep           Fig. 4: K1 x K2 heat maps (ARIMA or GP)\n\
+       live            Fig. 5: paced prototype, baseline vs shaped\n\
+       artifacts       list AOT artifacts and PJRT platform\n\n\
+     Run `zoe-shaper <subcommand> --help` for options."
+}
+
+/// Run a subcommand, mapping help/errors to exit codes.
+fn dispatch(f: fn(&[String]) -> Result<(), String>, argv: &[String]) -> i32 {
+    match f(argv) {
+        Ok(()) => 0,
+        Err(e) if e == "help" => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+/// Common options shared by simulation-flavored subcommands.
+fn sim_args(name: &str, about: &str) -> Args {
+    Args::new(name, about)
+        .opt("preset", "small", "config preset: small|medium|paper|prototype")
+        .opt("config", "", "JSON config override file")
+        .opt("seed", "", "workload seed (overrides preset)")
+        .opt("apps", "", "number of applications (overrides preset)")
+        .opt("hosts", "", "number of hosts (overrides preset)")
+        .opt("log", "info", "log level: error|warn|info|debug")
+}
+
+/// Build a SimConfig from parsed common args.
+fn load_cfg(a: &Args) -> Result<SimConfig, String> {
+    if let Some(level) = logger::parse_level(a.get("log")) {
+        logger::set_level(level);
+    }
+    let mut cfg = SimConfig::preset(a.get("preset"))
+        .ok_or_else(|| format!("unknown preset '{}'", a.get("preset")))?;
+    let path = a.get("config");
+    if !path.is_empty() {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| format!("parsing {path}: {e}"))?;
+        cfg.apply_json(&j)?;
+    }
+    if !a.get("seed").is_empty() {
+        cfg.seed = a.get_u64("seed")?;
+    }
+    if !a.get("apps").is_empty() {
+        cfg.workload.num_apps = a.get_usize("apps")?;
+    }
+    if !a.get("hosts").is_empty() {
+        cfg.cluster.hosts = a.get_usize("hosts")?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn parse_or_help(spec: Args, argv: &[String]) -> Result<Args, String> {
+    match spec.clone().parse(argv) {
+        Ok(a) => Ok(a),
+        Err(e) if e == "help" => {
+            println!("{}", spec.help_text());
+            Err("help".into())
+        }
+        Err(e) => Err(e),
+    }
+}
+
+fn cmd_simulate(argv: &[String]) -> Result<(), String> {
+    let spec = sim_args("zoe-shaper simulate", "run one simulation")
+        .opt("policy", "pessimistic", "baseline|optimistic|pessimistic")
+        .opt("forecaster", "gp-native", "oracle|last-value|arima|gp-native|gp")
+        .opt("kernel", "exp", "GP kernel: exp|rbf")
+        .opt("k1", "", "static buffer fraction [0,1]")
+        .opt("k2", "", "sigma multiplier")
+        .opt("json-out", "", "write the RunReport JSON to this path");
+    let a = parse_or_help(spec, argv)?;
+    let mut cfg = load_cfg(&a)?;
+    cfg.shaper.policy =
+        Policy::parse(a.get("policy")).ok_or_else(|| format!("bad --policy {}", a.get("policy")))?;
+    cfg.forecast.kind = ForecasterKind::parse(a.get("forecaster"))
+        .ok_or_else(|| format!("bad --forecaster {}", a.get("forecaster")))?;
+    cfg.forecast.kernel = KernelKind::parse(a.get("kernel"))
+        .ok_or_else(|| format!("bad --kernel {}", a.get("kernel")))?;
+    if !a.get("k1").is_empty() {
+        cfg.shaper.k1 = a.get_f64("k1")?;
+    }
+    if !a.get("k2").is_empty() {
+        cfg.shaper.k2 = a.get_f64("k2")?;
+    }
+    cfg.validate()?;
+    let report = run_simulation(&cfg, None, "simulate").map_err(|e| format!("{e:#}"))?;
+    println!("{}", report.summary());
+    let out = a.get("json-out");
+    if !out.is_empty() {
+        std::fs::write(out, report.to_json().to_string_pretty())
+            .map_err(|e| format!("writing {out}: {e}"))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_compare(argv: &[String]) -> Result<(), String> {
+    let spec = sim_args(
+        "zoe-shaper compare",
+        "Fig. 3: baseline vs optimistic vs pessimistic with oracle forecasts",
+    );
+    let a = parse_or_help(spec, argv)?;
+    let cfg = load_cfg(&a)?;
+    let reports = fig3::run(&cfg).map_err(|e| format!("{e:#}"))?;
+    println!("{}", fig3::render(&reports));
+    Ok(())
+}
+
+fn cmd_forecast_eval(argv: &[String]) -> Result<(), String> {
+    let spec = Args::new(
+        "zoe-shaper forecast-eval",
+        "Fig. 2: prediction-error distributions (ARIMA vs GP-Exp vs GP-RBF)",
+    )
+    .opt("series", "120", "number of evaluation series")
+    .opt("len", "100", "series length (samples)")
+    .opt("histories", "10,20,40", "comma-separated GP history windows")
+    .opt("seed", "7", "corpus seed")
+    .flag("pjrt", "run GP through the AOT PJRT artifact (needs `make artifacts`)")
+    .opt("log", "info", "log level");
+    let a = parse_or_help(spec, argv)?;
+    if let Some(level) = logger::parse_level(a.get("log")) {
+        logger::set_level(level);
+    }
+    let histories: Result<Vec<usize>, _> =
+        a.get("histories").split(',').map(|s| s.trim().parse::<usize>()).collect();
+    let params = fig2::Fig2Params {
+        num_series: a.get_usize("series")?,
+        series_len: a.get_usize("len")?,
+        histories: histories.map_err(|e| format!("--histories: {e}"))?,
+        seed: a.get_u64("seed")?,
+        use_pjrt: a.is_set("pjrt"),
+    };
+    let runtime = if params.use_pjrt {
+        Some(Arc::new(Runtime::from_default_dir().map_err(|e| format!("{e:#}"))?))
+    } else {
+        None
+    };
+    let results = fig2::run(&params, runtime).map_err(|e| format!("{e:#}"))?;
+    println!("{}", fig2::render(&results));
+    Ok(())
+}
+
+fn cmd_sweep(argv: &[String]) -> Result<(), String> {
+    let spec = sim_args("zoe-shaper sweep", "Fig. 4: K1 x K2 heat maps")
+        .opt("forecaster", "gp-native", "arima|gp-native|gp|last-value")
+        .opt("k1-grid", "0,0.05,0.1,0.25,0.5,1.0", "comma-separated K1 values")
+        .opt("k2-grid", "0,1,2,3", "comma-separated K2 values");
+    let a = parse_or_help(spec, argv)?;
+    let cfg = load_cfg(&a)?;
+    let fk = ForecasterKind::parse(a.get("forecaster"))
+        .ok_or_else(|| format!("bad --forecaster {}", a.get("forecaster")))?;
+    let parse_grid = |s: &str| -> Result<Vec<f64>, String> {
+        s.split(',')
+            .map(|x| x.trim().parse::<f64>().map_err(|e| format!("bad grid value: {e}")))
+            .collect()
+    };
+    let k1 = parse_grid(a.get("k1-grid"))?;
+    let k2 = parse_grid(a.get("k2-grid"))?;
+    let runtime = if fk == ForecasterKind::GpPjrt {
+        Some(Arc::new(Runtime::from_default_dir().map_err(|e| format!("{e:#}"))?))
+    } else {
+        None
+    };
+    let sweep = fig4::run(&cfg, fk, runtime, &k1, &k2).map_err(|e| format!("{e:#}"))?;
+    println!("{}", fig4::render(&sweep));
+    if let Some(best) = fig4::best_cell(&sweep, 0.05) {
+        println!(
+            "best cell (<=5% failures): K1={:.0}% K2={:.0} -> {:.2}x turnaround, {:.3} slack",
+            best.k1 * 100.0,
+            best.k2,
+            best.turnaround_ratio,
+            best.mem_slack
+        );
+    }
+    Ok(())
+}
+
+fn cmd_live(argv: &[String]) -> Result<(), String> {
+    let spec = sim_args("zoe-shaper live", "Fig. 5: paced prototype run (baseline vs shaped)")
+        .opt("accel", "7200", "wall-clock acceleration factor");
+    let a = parse_or_help(spec, argv)?;
+    let mut cfg = load_cfg(&a)?;
+    if a.get("preset") == "small" {
+        // live defaults to the prototype testbed unless overridden
+        cfg = SimConfig::prototype();
+    }
+    let accel = a.get_f64("accel")?;
+    let out = fig5::run(&cfg, None, accel).map_err(|e| format!("{e:#}"))?;
+    println!("{}", fig5::render(&out));
+    Ok(())
+}
+
+fn cmd_artifacts(argv: &[String]) -> Result<(), String> {
+    let spec = Args::new("zoe-shaper artifacts", "list AOT artifacts and PJRT platform");
+    let _a = parse_or_help(spec, argv)?;
+    let rt = Runtime::from_default_dir().map_err(|e| format!("{e:#}"))?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut t = zoe_shaper::util::table::Table::new(&[
+        "name", "kernel", "history", "n", "pattern dim", "batch",
+    ]);
+    for a in &rt.manifest().artifacts {
+        t.row(&[
+            a.name.clone(),
+            a.kind.name().to_string(),
+            a.history.to_string(),
+            a.n_train.to_string(),
+            a.pattern_dim.to_string(),
+            a.batch.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

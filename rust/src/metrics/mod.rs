@@ -1,0 +1,293 @@
+//! Run metrics: the three quantities the paper evaluates (§4.1) —
+//! application **turnaround**, **resource slack** (allocated − used, as a
+//! fraction of allocated, for CPU and memory), and **failures** — plus
+//! operational counters (preemptions, wasted work, utilization).
+
+use crate::util::json::{num_arr, obj, Json};
+use crate::util::stats::{boxstats, BoxStats, Welford};
+
+/// Per-application slack accumulators.
+#[derive(Debug, Clone, Default)]
+struct AppSlack {
+    cpu: Welford,
+    mem: Welford,
+}
+
+/// Metrics collector, updated by the engine during a run.
+#[derive(Debug)]
+pub struct Metrics {
+    /// turnaround per finished app (seconds).
+    turnarounds: Vec<f64>,
+    /// per-app slack accumulators (indexed by app id).
+    slack: Vec<AppSlack>,
+    /// ids of apps that experienced >= 1 OOM failure.
+    failed_apps: std::collections::HashSet<usize>,
+    /// total OOM kill events (component granularity).
+    pub oom_events: u64,
+    /// controlled full-application preemptions (pessimistic policy).
+    pub app_preemptions: u64,
+    /// controlled elastic-component preemptions.
+    pub elastic_preemptions: u64,
+    /// work units destroyed by kills/preemptions.
+    pub wasted_work: f64,
+    /// allocation-fraction samples (cluster level), for utilization plots.
+    alloc_cpu_samples: Vec<f64>,
+    alloc_mem_samples: Vec<f64>,
+    /// forecasts issued (perf accounting).
+    pub forecasts_issued: u64,
+    /// peak single-host memory usage as a fraction of capacity.
+    pub peak_host_usage: f64,
+    /// number of apps in the run.
+    num_apps: usize,
+}
+
+impl Metrics {
+    /// Collector for `num_apps` applications.
+    pub fn new(num_apps: usize) -> Self {
+        Metrics {
+            turnarounds: Vec::new(),
+            slack: vec![AppSlack::default(); num_apps],
+            failed_apps: std::collections::HashSet::new(),
+            oom_events: 0,
+            app_preemptions: 0,
+            elastic_preemptions: 0,
+            wasted_work: 0.0,
+            alloc_cpu_samples: Vec::new(),
+            alloc_mem_samples: Vec::new(),
+            forecasts_issued: 0,
+            peak_host_usage: 0.0,
+            num_apps,
+        }
+    }
+
+    /// Record an app completion.
+    pub fn record_finish(&mut self, submit_time: f64, finish_time: f64) {
+        self.turnarounds.push((finish_time - submit_time).max(0.0));
+    }
+
+    /// Record one slack sample for an app: fractions in [0,1].
+    pub fn record_slack(&mut self, app: usize, cpu_slack: f64, mem_slack: f64) {
+        self.slack[app].cpu.push(cpu_slack.clamp(0.0, 1.0));
+        self.slack[app].mem.push(mem_slack.clamp(0.0, 1.0));
+    }
+
+    /// Record an OOM kill affecting `app`; `core` kills are app failures.
+    pub fn record_oom(&mut self, app: usize, core: bool, lost_work: f64) {
+        self.oom_events += 1;
+        self.wasted_work += lost_work;
+        if core {
+            self.failed_apps.insert(app);
+        }
+    }
+
+    /// Record a controlled preemption.
+    pub fn record_preemption(&mut self, full_app: bool, lost_work: f64) {
+        if full_app {
+            self.app_preemptions += 1;
+        } else {
+            self.elastic_preemptions += 1;
+        }
+        self.wasted_work += lost_work;
+    }
+
+    /// Record cluster-level allocation fractions (cpu, mem).
+    pub fn record_allocation(&mut self, cpu: f64, mem: f64) {
+        self.alloc_cpu_samples.push(cpu);
+        self.alloc_mem_samples.push(mem);
+    }
+
+    /// Finalize into a report.
+    pub fn report(&self, name: &str, sim_time: f64) -> RunReport {
+        let mem_slack: Vec<f64> = self
+            .slack
+            .iter()
+            .filter(|s| s.mem.count() > 0)
+            .map(|s| s.mem.mean())
+            .collect();
+        let cpu_slack: Vec<f64> = self
+            .slack
+            .iter()
+            .filter(|s| s.cpu.count() > 0)
+            .map(|s| s.cpu.mean())
+            .collect();
+        RunReport {
+            name: name.to_string(),
+            turnaround: boxstats(&self.turnarounds),
+            turnarounds: self.turnarounds.clone(),
+            cpu_slack: boxstats(&cpu_slack),
+            mem_slack: boxstats(&mem_slack),
+            mem_slacks: mem_slack,
+            completed: self.turnarounds.len(),
+            num_apps: self.num_apps,
+            failed_app_fraction: self.failed_apps.len() as f64 / self.num_apps.max(1) as f64,
+            oom_events: self.oom_events,
+            app_preemptions: self.app_preemptions,
+            elastic_preemptions: self.elastic_preemptions,
+            wasted_work: self.wasted_work,
+            mean_alloc_cpu: crate::util::stats::mean(&self.alloc_cpu_samples),
+            mean_alloc_mem: crate::util::stats::mean(&self.alloc_mem_samples),
+            forecasts_issued: self.forecasts_issued,
+            peak_host_usage: self.peak_host_usage,
+            sim_time,
+        }
+    }
+}
+
+/// Summary of one simulation run — what the experiment harnesses print
+/// and EXPERIMENTS.md records.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub name: String,
+    pub turnaround: BoxStats,
+    pub turnarounds: Vec<f64>,
+    pub cpu_slack: BoxStats,
+    pub mem_slack: BoxStats,
+    pub mem_slacks: Vec<f64>,
+    pub completed: usize,
+    pub num_apps: usize,
+    /// Fraction of applications that suffered >= 1 OOM failure.
+    pub failed_app_fraction: f64,
+    pub oom_events: u64,
+    pub app_preemptions: u64,
+    pub elastic_preemptions: u64,
+    pub wasted_work: f64,
+    pub mean_alloc_cpu: f64,
+    pub mean_alloc_mem: f64,
+    pub forecasts_issued: u64,
+    pub peak_host_usage: f64,
+    pub sim_time: f64,
+}
+
+impl RunReport {
+    /// Multi-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "run '{}': {}/{} completed in {:.0}s sim-time\n\
+             turnaround  med {:.0}s mean {:.0}s p75 {:.0}s max {:.0}s\n\
+             mem slack   med {:.3} mean {:.3}   cpu slack med {:.3} mean {:.3}\n\
+             failures    {:.2}% of apps ({} OOM events)  preemptions: {} full / {} elastic\n\
+             wasted work {:.0} units; mean alloc cpu {:.2} mem {:.2}; peak host usage {:.2}; {} forecasts",
+            self.name,
+            self.completed,
+            self.num_apps,
+            self.sim_time,
+            self.turnaround.median,
+            self.turnaround.mean,
+            self.turnaround.q3,
+            self.turnaround.max,
+            self.mem_slack.median,
+            self.mem_slack.mean,
+            self.cpu_slack.median,
+            self.cpu_slack.mean,
+            self.failed_app_fraction * 100.0,
+            self.oom_events,
+            self.app_preemptions,
+            self.elastic_preemptions,
+            self.wasted_work,
+            self.mean_alloc_cpu,
+            self.mean_alloc_mem,
+            self.peak_host_usage,
+            self.forecasts_issued,
+        )
+    }
+
+    /// JSON export for EXPERIMENTS.md regeneration.
+    pub fn to_json(&self) -> Json {
+        let bs = |b: &BoxStats| {
+            obj(vec![
+                ("min", Json::Num(b.min)),
+                ("q1", Json::Num(b.q1)),
+                ("median", Json::Num(b.median)),
+                ("q3", Json::Num(b.q3)),
+                ("max", Json::Num(b.max)),
+                ("mean", Json::Num(b.mean)),
+                ("n", Json::Num(b.n as f64)),
+            ])
+        };
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("turnaround", bs(&self.turnaround)),
+            ("cpu_slack", bs(&self.cpu_slack)),
+            ("mem_slack", bs(&self.mem_slack)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("num_apps", Json::Num(self.num_apps as f64)),
+            ("failed_app_fraction", Json::Num(self.failed_app_fraction)),
+            ("oom_events", Json::Num(self.oom_events as f64)),
+            ("app_preemptions", Json::Num(self.app_preemptions as f64)),
+            ("elastic_preemptions", Json::Num(self.elastic_preemptions as f64)),
+            ("wasted_work", Json::Num(self.wasted_work)),
+            ("mean_alloc_cpu", Json::Num(self.mean_alloc_cpu)),
+            ("mean_alloc_mem", Json::Num(self.mean_alloc_mem)),
+            ("sim_time", Json::Num(self.sim_time)),
+            ("turnarounds_sample", num_arr(&sample(&self.turnarounds, 200))),
+            ("mem_slacks_sample", num_arr(&sample(&self.mem_slacks, 200))),
+        ])
+    }
+}
+
+/// Evenly-spaced subsample for compact JSON export.
+fn sample(xs: &[f64], cap: usize) -> Vec<f64> {
+    if xs.len() <= cap {
+        return xs.to_vec();
+    }
+    (0..cap)
+        .map(|i| xs[i * xs.len() / cap])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_and_reports() {
+        let mut m = Metrics::new(3);
+        m.record_finish(10.0, 110.0);
+        m.record_finish(20.0, 70.0);
+        m.record_slack(0, 0.5, 0.6);
+        m.record_slack(0, 0.3, 0.4);
+        m.record_slack(1, 0.2, 0.2);
+        m.record_oom(2, true, 42.0);
+        m.record_preemption(false, 5.0);
+        m.record_allocation(0.5, 0.7);
+        let r = m.report("test", 1000.0);
+        assert_eq!(r.completed, 2);
+        assert_eq!(r.turnaround.max, 100.0);
+        assert!((r.mem_slack.mean - (0.5 + 0.2) / 2.0).abs() < 1e-12);
+        assert!((r.failed_app_fraction - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(r.oom_events, 1);
+        assert_eq!(r.elastic_preemptions, 1);
+        assert!((r.wasted_work - 47.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut m = Metrics::new(1);
+        m.record_finish(0.0, 50.0);
+        let r = m.report("j", 100.0);
+        let j = r.to_json();
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("completed").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            parsed.get("turnaround").unwrap().get("max").unwrap().as_f64(),
+            Some(50.0)
+        );
+    }
+
+    #[test]
+    fn slack_clamped() {
+        let mut m = Metrics::new(1);
+        m.record_slack(0, -0.5, 1.5);
+        let r = m.report("c", 1.0);
+        assert_eq!(r.cpu_slack.mean, 0.0);
+        assert_eq!(r.mem_slack.mean, 1.0);
+    }
+
+    #[test]
+    fn summary_contains_key_fields() {
+        let m = Metrics::new(2);
+        let s = m.report("hello", 5.0).summary();
+        assert!(s.contains("hello"));
+        assert!(s.contains("turnaround"));
+    }
+}

@@ -1,0 +1,119 @@
+//! Resource monitor (§3): samples per-component CPU/memory utilization at
+//! a fixed cadence and keeps bounded history ring buffers — the data the
+//! forecasting module consumes. Application-agnostic by design: it reads
+//! the "OS view" (here, the component's utilization pattern), never
+//! instrumenting applications.
+
+use std::collections::VecDeque;
+
+use crate::workload::ComponentId;
+
+/// Bounded utilization history for one component (fractions of request).
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub cpu: VecDeque<f64>,
+    pub mem: VecDeque<f64>,
+}
+
+/// Monitor: per-component ring buffers, capacity-bounded.
+#[derive(Debug)]
+pub struct Monitor {
+    histories: Vec<History>,
+    capacity: usize,
+    samples_taken: u64,
+}
+
+impl Monitor {
+    /// Create for `num_components` components keeping `capacity` samples
+    /// each (the forecaster needs `2h`; we keep a margin for h sweeps).
+    pub fn new(num_components: usize, capacity: usize) -> Self {
+        Monitor {
+            histories: vec![History::default(); num_components],
+            capacity: capacity.max(2),
+            samples_taken: 0,
+        }
+    }
+
+    /// Record one (cpu, mem) utilization-fraction sample for a component.
+    pub fn record(&mut self, c: ComponentId, cpu_frac: f64, mem_frac: f64) {
+        let h = &mut self.histories[c];
+        if h.cpu.len() == self.capacity {
+            h.cpu.pop_front();
+        }
+        if h.mem.len() == self.capacity {
+            h.mem.pop_front();
+        }
+        h.cpu.push_back(cpu_frac);
+        h.mem.push_back(mem_frac);
+        self.samples_taken += 1;
+    }
+
+    /// Clear a component's history (on preemption/restart: the next
+    /// attempt is a fresh process with fresh behavior).
+    pub fn reset(&mut self, c: ComponentId) {
+        self.histories[c] = History::default();
+    }
+
+    /// Borrow a component's history.
+    pub fn history(&self, c: ComponentId) -> &History {
+        &self.histories[c]
+    }
+
+    /// Number of memory samples currently held for a component.
+    pub fn len(&self, c: ComponentId) -> usize {
+        self.histories[c].mem.len()
+    }
+
+    /// Memory history as a contiguous Vec (oldest first).
+    pub fn mem_series(&self, c: ComponentId) -> Vec<f64> {
+        self.histories[c].mem.iter().copied().collect()
+    }
+
+    /// CPU history as a contiguous Vec (oldest first).
+    pub fn cpu_series(&self, c: ComponentId) -> Vec<f64> {
+        self.histories[c].cpu.iter().copied().collect()
+    }
+
+    /// Total samples recorded over the run (monitor overhead metric).
+    pub fn samples_taken(&self) -> u64 {
+        self.samples_taken
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_bounds() {
+        let mut m = Monitor::new(2, 4);
+        for i in 0..10 {
+            m.record(0, i as f64 * 0.1, i as f64 * 0.05);
+        }
+        assert_eq!(m.len(0), 4);
+        // ring keeps the latest 4
+        assert_eq!(m.mem_series(0), vec![0.30000000000000004, 0.35000000000000003, 0.4, 0.45]);
+        assert_eq!(m.len(1), 0);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut m = Monitor::new(1, 8);
+        m.record(0, 0.5, 0.5);
+        m.record(0, 0.6, 0.6);
+        assert_eq!(m.len(0), 2);
+        m.reset(0);
+        assert_eq!(m.len(0), 0);
+        assert_eq!(m.samples_taken(), 2); // counter is cumulative
+    }
+
+    #[test]
+    fn series_order_oldest_first() {
+        let mut m = Monitor::new(1, 3);
+        m.record(0, 0.1, 1.0);
+        m.record(0, 0.2, 2.0);
+        m.record(0, 0.3, 3.0);
+        assert_eq!(m.cpu_series(0), vec![0.1, 0.2, 0.3]);
+        assert_eq!(m.mem_series(0), vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,256 @@
+//! PJRT runtime bridge: load AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them on the CPU PJRT client.
+//!
+//! This is the only place the crate touches the `xla` FFI. The interchange
+//! format is HLO *text* (never serialized protos): jax >= 0.5 emits protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids. See /opt/xla-example/README.md.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::KernelKind;
+use crate::util::json::Json;
+
+/// Description of one AOT artifact from `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub kind: KernelKind,
+    pub history: usize,
+    pub n_train: usize,
+    pub pattern_dim: usize,
+    pub batch: usize,
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?
+        {
+            let gets = |k: &str| -> Result<String> {
+                Ok(a.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact missing '{k}'"))?
+                    .to_string())
+            };
+            let getn = |k: &str| -> Result<usize> {
+                a.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("artifact missing '{k}'"))
+            };
+            let kind = KernelKind::parse(&gets("kind")?)
+                .ok_or_else(|| anyhow!("bad kernel kind in manifest"))?;
+            artifacts.push(ArtifactInfo {
+                name: gets("name")?,
+                file: gets("file")?,
+                kind,
+                history: getn("history")?,
+                n_train: getn("n_train")?,
+                pattern_dim: getn("pattern_dim")?,
+                batch: getn("batch")?,
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Find an artifact by (kernel kind, history, batch).
+    pub fn find(&self, kind: KernelKind, history: usize, batch: usize) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind && a.history == history && a.batch == batch)
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, a: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+/// The default artifacts directory: `$ZOE_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("ZOE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// A compiled executable plus its artifact metadata.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub info: ArtifactInfo,
+}
+
+/// PJRT CPU client wrapper with an executable cache keyed by artifact name.
+///
+/// Compilation is expensive (tens of ms); the coordinator compiles each
+/// artifact once and reuses it for every forecast call on the hot path.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(artifact_dir)?;
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Create from the default artifact directory.
+    pub fn from_default_dir() -> Result<Runtime> {
+        Self::new(default_artifact_dir())
+    }
+
+    /// The manifest describing available artifacts.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(
+        &self,
+        kind: KernelKind,
+        history: usize,
+        batch: usize,
+    ) -> Result<std::sync::Arc<Executable>> {
+        let info = self
+            .manifest
+            .find(kind, history, batch)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for kind={} h={history} b={batch}; run `make artifacts`",
+                    kind.name()
+                )
+            })?
+            .clone();
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(e) = cache.get(&info.name) {
+                return Ok(e.clone());
+            }
+        }
+        let path = self.manifest.path_of(&info);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", info.name))?;
+        let arc = std::sync::Arc::new(Executable { exe, info: info.clone() });
+        self.cache.lock().unwrap().insert(info.name, arc.clone());
+        Ok(arc)
+    }
+
+    /// Execute a compiled GP artifact.
+    ///
+    /// Inputs are flattened f32 buffers in artifact order:
+    /// `x_train, y_train, x_query, lengthscale, noise` (shapes per
+    /// `Executable::info`). Output is the flattened tuple
+    /// `(mean(s), var(s), lml(s))` — scalars for batch=1, `(batch,)`
+    /// vectors otherwise.
+    pub fn run_gp(&self, exe: &Executable, inp: &GpInputs<'_>) -> Result<GpOutputs> {
+        let info = &exe.info;
+        let (n, p, b) = (info.n_train, info.pattern_dim, info.batch);
+        if inp.x_train.len() != b * n * p
+            || inp.y_train.len() != b * n
+            || inp.x_query.len() != b * p
+            || inp.lengthscale.len() != b
+            || inp.noise.len() != b
+        {
+            bail!(
+                "gp input shape mismatch for {} (b={b}, n={n}, p={p}): got x={} y={} q={} ls={} nz={}",
+                info.name,
+                inp.x_train.len(),
+                inp.y_train.len(),
+                inp.x_query.len(),
+                inp.lengthscale.len(),
+                inp.noise.len()
+            );
+        }
+        let lit = |data: &[f32], dims: &[i64]| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(data).reshape(dims)?)
+        };
+        let (xt, yt, xq, ls, nz) = if b == 1 {
+            (
+                lit(inp.x_train, &[n as i64, p as i64])?,
+                lit(inp.y_train, &[n as i64])?,
+                lit(inp.x_query, &[p as i64])?,
+                xla::Literal::vec1(inp.lengthscale).reshape(&[])?,
+                xla::Literal::vec1(inp.noise).reshape(&[])?,
+            )
+        } else {
+            (
+                lit(inp.x_train, &[b as i64, n as i64, p as i64])?,
+                lit(inp.y_train, &[b as i64, n as i64])?,
+                lit(inp.x_query, &[b as i64, p as i64])?,
+                lit(inp.lengthscale, &[b as i64])?,
+                lit(inp.noise, &[b as i64])?,
+            )
+        };
+        let result = exe.exe.execute::<xla::Literal>(&[xt, yt, xq, ls, nz])?[0][0]
+            .to_literal_sync()?;
+        let (m, v, l) = result.to_tuple3()?;
+        Ok(GpOutputs {
+            means: m.to_vec::<f32>()?,
+            vars: v.to_vec::<f32>()?,
+            lmls: l.to_vec::<f32>()?,
+        })
+    }
+}
+
+/// Borrowed, flattened inputs for one GP artifact execution.
+pub struct GpInputs<'a> {
+    pub x_train: &'a [f32],
+    pub y_train: &'a [f32],
+    pub x_query: &'a [f32],
+    pub lengthscale: &'a [f32],
+    pub noise: &'a [f32],
+}
+
+/// Flattened outputs of one GP artifact execution.
+#[derive(Debug, Clone)]
+pub struct GpOutputs {
+    pub means: Vec<f32>,
+    pub vars: Vec<f32>,
+    pub lmls: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_missing_is_clear_error() {
+        let err = Manifest::load("/definitely/not/here").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

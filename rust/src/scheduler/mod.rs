@@ -1,0 +1,252 @@
+//! FIFO application scheduler (the "existing scheduler" of §3 / [42]).
+//!
+//! Reservation-centric admission: an application is admitted when all its
+//! **core** components can be placed, charged against current host
+//! *allocations* (so shaping that trims allocations directly increases
+//! admission capacity — the paper's efficiency mechanism). Elastic
+//! components are placed best-effort. Strict FIFO: head-of-line blocking
+//! by original submit time, which is also the priority a resubmitted
+//! (preempted/failed) application retains (§3.2).
+
+use crate::cluster::Cluster;
+use crate::workload::{AppId, Application, AppState};
+
+/// Outcome of a placement attempt for one application.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementOutcome {
+    pub app: AppId,
+    /// Components actually placed.
+    pub placed: Vec<usize>,
+    /// Elastic components that did not fit (app still runs, slower).
+    pub skipped_elastic: Vec<usize>,
+}
+
+/// FIFO queue keyed by original submit time.
+#[derive(Debug, Default)]
+pub struct FifoScheduler {
+    /// Queued app ids, kept sorted by (submit_time, id).
+    queue: Vec<AppId>,
+}
+
+impl FifoScheduler {
+    /// Empty scheduler.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue an application, keeping FIFO-by-submit-time order. A
+    /// resubmitted app re-enters at its *original* priority (§3.2).
+    pub fn enqueue(&mut self, apps: &[Application], id: AppId) {
+        debug_assert!(!self.queue.contains(&id), "app {id} double-enqueued");
+        let key = |a: AppId| (apps[a].submit_time, a);
+        let pos = self
+            .queue
+            .binary_search_by(|&q| key(q).partial_cmp(&key(id)).unwrap())
+            .unwrap_or_else(|p| p);
+        self.queue.insert(pos, id);
+    }
+
+    /// Number of queued applications.
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// True when the queue is empty.
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Queued ids in priority order (head first).
+    pub fn queued(&self) -> &[AppId] {
+        &self.queue
+    }
+
+    /// Attempt to start queued applications in FIFO order, placing their
+    /// components on the cluster. Stops at the first application whose
+    /// core components cannot all be placed (strict FIFO, no backfill).
+    ///
+    /// Placement allocates `price` x the *reservation*: 1.0 for the
+    /// reservation-centric admission the paper's system keeps (the shaper
+    /// trims afterwards), < 1.0 for Borg/Omega-style optimistic
+    /// over-commitment, where new work is admitted against reclaimed
+    /// capacity and collisions are left to the OS ([62], [6]).
+    /// Returns the applications started.
+    pub fn try_schedule(
+        &mut self,
+        apps: &mut [Application],
+        cluster: &mut Cluster,
+        now: f64,
+        price: f64,
+    ) -> Vec<PlacementOutcome> {
+        let mut started = Vec::new();
+        while let Some(&head) = self.queue.first() {
+            match place_app(&apps[head], cluster, now, price) {
+                Some(outcome) => {
+                    apps[head].state = AppState::Running { since: now };
+                    apps[head].last_progress_at = now;
+                    self.queue.remove(0);
+                    started.push(outcome);
+                }
+                None => break, // head-of-line blocking
+            }
+        }
+        started
+    }
+}
+
+/// Try to place one application: all cores must fit (else rollback and
+/// return None); elastic components are best-effort.
+fn place_app(
+    app: &Application,
+    cluster: &mut Cluster,
+    now: f64,
+    price: f64,
+) -> Option<PlacementOutcome> {
+    let price = price.clamp(0.05, 1.0);
+    let mut placed = Vec::new();
+    // Cores first — all-or-nothing.
+    for c in app.components.iter().filter(|c| c.is_core) {
+        // Worst-fit spreads load across hosts, which reduces correlated
+        // OOM pressure when several components spike together.
+        let (pc, pm) = (c.cpu_req * price, c.mem_req * price);
+        match cluster.worst_fit(pc, pm) {
+            Some(h) => {
+                let ok = cluster.place(c.id, h, pc, pm, now);
+                debug_assert!(ok);
+                placed.push(c.id);
+            }
+            None => {
+                for &p in &placed {
+                    cluster.remove(p);
+                }
+                return None;
+            }
+        }
+    }
+    // Elastic best-effort.
+    let mut skipped = Vec::new();
+    for c in app.components.iter().filter(|c| !c.is_core) {
+        let (pc, pm) = (c.cpu_req * price, c.mem_req * price);
+        match cluster.worst_fit(pc, pm) {
+            Some(h) => {
+                let ok = cluster.place(c.id, h, pc, pm, now);
+                debug_assert!(ok);
+                placed.push(c.id);
+            }
+            None => skipped.push(c.id),
+        }
+    }
+    Some(PlacementOutcome { app: app.id, placed, skipped_elastic: skipped })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, SimConfig};
+    use crate::workload::generate;
+
+    fn setup(hosts: usize) -> (Vec<Application>, Cluster, FifoScheduler) {
+        let wl = generate(&SimConfig::small().workload, 3);
+        let cluster = Cluster::new(&ClusterConfig {
+            hosts,
+            cores_per_host: 32.0,
+            mem_per_host_gb: 128.0,
+        });
+        (wl.apps, cluster, FifoScheduler::new())
+    }
+
+    #[test]
+    fn fifo_order_by_submit_time() {
+        let (apps, _c, mut s) = setup(4);
+        // enqueue out of order
+        s.enqueue(&apps, 5);
+        s.enqueue(&apps, 1);
+        s.enqueue(&apps, 3);
+        let order: Vec<_> = s.queued().to_vec();
+        assert_eq!(order, vec![1, 3, 5]); // submit_time increases with id
+    }
+
+    #[test]
+    fn resubmission_preserves_priority() {
+        let (apps, _c, mut s) = setup(4);
+        s.enqueue(&apps, 10);
+        s.enqueue(&apps, 20);
+        // app 5 failed and is resubmitted later: still goes to the head
+        s.enqueue(&apps, 5);
+        assert_eq!(s.queued()[0], 5);
+    }
+
+    #[test]
+    fn schedules_until_blocked_then_stops() {
+        let (mut apps, mut c, mut s) = setup(1);
+        for id in 0..30 {
+            s.enqueue(&apps, id);
+        }
+        let started = s.try_schedule(&mut apps, &mut c, 0.0, 1.0);
+        assert!(!started.is_empty());
+        c.check_invariants().unwrap();
+        // everything started is Running, head of remaining queue is blocked
+        for o in &started {
+            assert!(matches!(apps[o.app].state, AppState::Running { .. }));
+        }
+        if let Some(&head) = s.queued().first() {
+            assert!(matches!(apps[head].state, AppState::Queued));
+        }
+    }
+
+    #[test]
+    fn core_placement_all_or_nothing() {
+        let (mut apps, mut c, mut s) = setup(1);
+        // Fill the cluster almost completely with app 0
+        let started = s.try_schedule(&mut apps, &mut c, 0.0, 1.0); // empty queue: no-op
+        assert!(started.is_empty());
+        // Find a multi-core app and a tiny cluster that cannot host it
+        let big = apps
+            .iter()
+            .find(|a| {
+                a.components.iter().filter(|x| x.is_core).count() >= 2
+                    && a.components.iter().any(|x| x.mem_req > 1.0)
+            })
+            .unwrap()
+            .id;
+        let mut tiny = Cluster::new(&ClusterConfig {
+            hosts: 1,
+            cores_per_host: 0.2,
+            mem_per_host_gb: 0.01,
+        });
+        s.enqueue(&apps, big);
+        let started = s.try_schedule(&mut apps, &mut tiny, 0.0, 1.0);
+        assert!(started.is_empty());
+        assert_eq!(tiny.placed_count(), 0, "rollback must free partial cores");
+    }
+
+    #[test]
+    fn skipped_elastic_reported() {
+        let (mut apps, _c, mut s) = setup(1);
+        let el = apps.iter().find(|a| a.elastic_count() >= 4).unwrap().id;
+        // cluster sized to fit the cores but not all elastic
+        let app = &apps[el];
+        let core_mem: f64 = app
+            .components
+            .iter()
+            .filter(|c| c.is_core)
+            .map(|c| c.mem_req)
+            .sum();
+        let core_cpu: f64 = app
+            .components
+            .iter()
+            .filter(|c| c.is_core)
+            .map(|c| c.cpu_req)
+            .sum();
+        let mut snug = Cluster::new(&ClusterConfig {
+            hosts: 1,
+            cores_per_host: core_cpu + 0.05,
+            mem_per_host_gb: core_mem + 0.001,
+        });
+        s.enqueue(&apps, el);
+        let started = s.try_schedule(&mut apps, &mut snug, 1.0, 1.0);
+        assert_eq!(started.len(), 1);
+        assert_eq!(started[0].skipped_elastic.len(), apps[el].elastic_count());
+        snug.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,65 @@
+//! The safe-guard buffer β (Eq. 9): `β = K1·R + K2·V`.
+//!
+//! * `K1·R` — static floor, a fraction of the original reservation that is
+//!   always granted (K1 = 100% degenerates to the baseline).
+//! * `K2·V` — dynamic term driven by the forecaster's uncertainty. The
+//!   paper sweeps K2 ∈ {0,1,2,3}, describing the values as bands around
+//!   the predictive mean "according to the three-sigma rule" — i.e. K2
+//!   multiplies the predictive *standard deviation* σ; we follow that
+//!   reading (σ has the units of the resource, variance does not).
+
+use crate::forecast::Forecast;
+
+/// β buffer in utilization-fraction units for a component with a given
+/// forecast. `k1` is the static fraction of the reservation, `k2` the
+/// sigma multiplier.
+pub fn beta_fraction(forecast: &Forecast, k1: f64, k2: f64) -> f64 {
+    k1 + k2 * forecast.std()
+}
+
+/// Desired allocation fraction: predicted (peak) demand plus β, clamped to
+/// [floor, 1.0] of the reservation. The floor prevents zero allocations
+/// on confident zero forecasts (a process always needs some memory).
+pub fn desired_fraction(forecast: &Forecast, k1: f64, k2: f64) -> f64 {
+    const FLOOR: f64 = 0.02;
+    (forecast.mean + beta_fraction(forecast, k1, k2)).clamp(FLOOR, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k1_is_static_floor() {
+        let f = Forecast { mean: 0.3, var: 0.0 };
+        assert!((desired_fraction(&f, 0.05, 3.0) - 0.35).abs() < 1e-12);
+        assert!((desired_fraction(&f, 0.0, 0.0) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn k1_100_percent_degenerates_to_reservation() {
+        // K1=1.0: mean + 1.0 >= 1.0 always -> full reservation (baseline)
+        for mean in [0.0, 0.3, 0.9] {
+            let f = Forecast { mean, var: 0.2 };
+            assert_eq!(desired_fraction(&f, 1.0, 0.0), 1.0);
+        }
+    }
+
+    #[test]
+    fn k2_scales_with_uncertainty() {
+        let lo = Forecast { mean: 0.3, var: 0.0001 };
+        let hi = Forecast { mean: 0.3, var: 0.09 };
+        let d_lo = desired_fraction(&lo, 0.0, 2.0);
+        let d_hi = desired_fraction(&hi, 0.0, 2.0);
+        assert!(d_hi > d_lo);
+        assert!((d_hi - (0.3 + 2.0 * 0.3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clamped_to_reservation_and_floor() {
+        let f = Forecast { mean: 2.0, var: 1.0 };
+        assert_eq!(desired_fraction(&f, 0.5, 3.0), 1.0);
+        let g = Forecast { mean: -1.0, var: 0.0 };
+        assert_eq!(desired_fraction(&g, 0.0, 0.0), 0.02);
+    }
+}

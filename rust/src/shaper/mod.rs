@@ -1,0 +1,407 @@
+//! The resource shaper (§3.2): the paper's contribution. Adjusts every
+//! running component's allocation toward its forecast utilization plus a
+//! safe-guard buffer β (Eq. 9), and decides preemption:
+//!
+//! * **Baseline** — never shapes; allocation stays at reservation.
+//! * **Optimistic** — redeems slack and grows allocations only where room
+//!   exists, *without* taking explicit action on contention: when demand
+//!   collides, the "OS" OOM-kills at monitor time ([62]-style).
+//! * **Pessimistic** — Algorithm 1: recomputes a feasible allocation in
+//!   scheduler-priority order, fully preempting applications whose core
+//!   components no longer fit and partially preempting elastic components
+//!   (youngest first), then resizes the survivors.
+
+pub mod beta;
+
+use std::collections::HashMap;
+
+use crate::cluster::Cluster;
+use crate::config::Policy;
+use crate::workload::{AppId, Application, AppState, ComponentId};
+
+/// Per-component demand as computed from the forecast + β buffer, in
+/// absolute units (cores / GB).
+#[derive(Debug, Clone, Copy)]
+pub struct Demand {
+    pub cpus: f64,
+    pub mem: f64,
+}
+
+/// What the shaping pass decided.
+#[derive(Debug, Clone, Default)]
+pub struct ShapeActions {
+    /// Applications to preempt fully (kill + resubmit at original
+    /// priority). Controlled preemption — not a failure.
+    pub preempt_apps: Vec<AppId>,
+    /// Elastic components to preempt individually (partial preemption).
+    pub preempt_elastic: Vec<ComponentId>,
+    /// New allocations to impose on surviving components.
+    pub resizes: Vec<(ComponentId, Demand)>,
+}
+
+/// Compute shaping actions for the current tick.
+///
+/// `demands` maps every *placed* component to its desired allocation
+/// (forecast peak + β, clamped to the reservation); components absent
+/// from the map (e.g. still in grace period) are charged at their current
+/// allocation and never preempted partially.
+pub fn plan(
+    policy: Policy,
+    cluster: &Cluster,
+    apps: &[Application],
+    running: &[AppId],
+    demands: &HashMap<ComponentId, Demand>,
+) -> ShapeActions {
+    match policy {
+        Policy::Baseline => ShapeActions::default(),
+        Policy::Optimistic => plan_optimistic(cluster, apps, running, demands),
+        Policy::Pessimistic => plan_pessimistic(cluster, apps, running, demands),
+    }
+}
+
+/// Demand (or current allocation fallback) for a placed component.
+fn demand_of(
+    cluster: &Cluster,
+    demands: &HashMap<ComponentId, Demand>,
+    c: ComponentId,
+) -> Option<Demand> {
+    let p = cluster.placement(c)?;
+    Some(demands.get(&c).copied().unwrap_or(Demand {
+        cpus: p.alloc_cpus,
+        mem: p.alloc_mem,
+    }))
+}
+
+/// Optimistic: per-host, shrinks are applied unconditionally; growth is
+/// granted first-come in app order only up to the host's free room. No
+/// preemption — contention surfaces later as OOM kills.
+fn plan_optimistic(
+    cluster: &Cluster,
+    apps: &[Application],
+    running: &[AppId],
+    demands: &HashMap<ComponentId, Demand>,
+) -> ShapeActions {
+    let mut actions = ShapeActions::default();
+    // free room per host after accounting current allocations
+    let mut free_cpu: Vec<f64> = cluster.hosts.iter().map(|h| h.free_cpus()).collect();
+    let mut free_mem: Vec<f64> = cluster.hosts.iter().map(|h| h.free_mem()).collect();
+    let order = priority_order(apps, running);
+    for &a in &order {
+        for comp in &apps[a].components {
+            let Some(p) = cluster.placement(comp.id) else { continue };
+            let Some(d) = demand_of(cluster, demands, comp.id) else { continue };
+            let grow_cpu = (d.cpus - p.alloc_cpus).max(0.0);
+            let grow_mem = (d.mem - p.alloc_mem).max(0.0);
+            // grant growth only up to what's free; shrink always granted
+            let gc = grow_cpu.min(free_cpu[p.host].max(0.0));
+            let gm = grow_mem.min(free_mem[p.host].max(0.0));
+            let new = Demand {
+                cpus: if d.cpus >= p.alloc_cpus { p.alloc_cpus + gc } else { d.cpus },
+                mem: if d.mem >= p.alloc_mem { p.alloc_mem + gm } else { d.mem },
+            };
+            free_cpu[p.host] -= new.cpus - p.alloc_cpus;
+            free_mem[p.host] -= new.mem - p.alloc_mem;
+            if (new.cpus - p.alloc_cpus).abs() > 1e-9 || (new.mem - p.alloc_mem).abs() > 1e-9 {
+                actions.resizes.push((comp.id, new));
+            }
+        }
+    }
+    actions
+}
+
+/// Running apps in scheduler-priority order (FIFO by submit time).
+fn priority_order(apps: &[Application], running: &[AppId]) -> Vec<AppId> {
+    let mut order: Vec<AppId> = running.to_vec();
+    order.sort_by(|&x, &y| {
+        apps[x]
+            .submit_time
+            .partial_cmp(&apps[y].submit_time)
+            .unwrap()
+            .then(x.cmp(&y))
+    });
+    order
+}
+
+/// Pessimistic: Algorithm 1 of the paper, verbatim structure.
+///
+/// Walk applications in scheduler order against *fresh* per-host free
+/// arrays (lines 1-6). For each app, charge its core components' future
+/// demand (lines 11-19): any host overflow ⇒ the whole app goes to K
+/// (full preemption, lines 20-21). Otherwise commit and charge its
+/// elastic components sorted by time alive — oldest first (line 25) —
+/// sending overflowing ones to K_E (partial preemption, lines 26-33).
+/// Finally emit preemptions and resizes (lines 34-41).
+fn plan_pessimistic(
+    cluster: &Cluster,
+    apps: &[Application],
+    running: &[AppId],
+    demands: &HashMap<ComponentId, Demand>,
+) -> ShapeActions {
+    let mut actions = ShapeActions::default();
+    let mut free_cpu: Vec<f64> = cluster.hosts.iter().map(|h| h.total_cpus).collect();
+    let mut free_mem: Vec<f64> = cluster.hosts.iter().map(|h| h.total_mem).collect();
+
+    for &a in &priority_order(apps, running) {
+        let app = &apps[a];
+        // --- core components: all-or-nothing ---
+        let mut trial_cpu = free_cpu.clone();
+        let mut trial_mem = free_mem.clone();
+        let mut remove = false;
+        let mut core_resizes: Vec<(ComponentId, Demand)> = Vec::new();
+        for comp in app.components.iter().filter(|c| c.is_core) {
+            let Some(p) = cluster.placement(comp.id) else {
+                // unplaced core: app is restarting; skip
+                continue;
+            };
+            let Some(d) = demand_of(cluster, demands, comp.id) else { continue };
+            trial_cpu[p.host] -= d.cpus;
+            trial_mem[p.host] -= d.mem;
+            if trial_cpu[p.host] < -1e-9 || trial_mem[p.host] < -1e-9 {
+                remove = true;
+                break;
+            }
+            core_resizes.push((comp.id, d));
+        }
+        if remove {
+            actions.preempt_apps.push(a);
+            continue; // do not commit trial arrays (lines 20-21)
+        }
+        free_cpu = trial_cpu;
+        free_mem = trial_mem;
+        actions.resizes.extend(core_resizes);
+
+        // --- elastic components: oldest-lived keep resources first ---
+        let mut elastic: Vec<&crate::workload::Component> = app
+            .components
+            .iter()
+            .filter(|c| !c.is_core && cluster.placement(c.id).is_some())
+            .collect();
+        elastic.sort_by(|x, y| {
+            let px = cluster.placement(x.id).unwrap().placed_at;
+            let py = cluster.placement(y.id).unwrap().placed_at;
+            px.partial_cmp(&py).unwrap().then(x.id.cmp(&y.id))
+        });
+        for comp in elastic {
+            let p = cluster.placement(comp.id).unwrap();
+            let Some(d) = demand_of(cluster, demands, comp.id) else { continue };
+            let c_after = free_cpu[p.host] - d.cpus;
+            let m_after = free_mem[p.host] - d.mem;
+            if c_after < -1e-9 || m_after < -1e-9 {
+                actions.preempt_elastic.push(comp.id);
+            } else {
+                free_cpu[p.host] = c_after;
+                free_mem[p.host] = m_after;
+                actions.resizes.push((comp.id, d));
+            }
+        }
+    }
+    actions
+}
+
+/// Sanity check used by tests and debug builds: resizes must never
+/// overcommit any host once preemptions are applied.
+pub fn validate_actions(
+    cluster: &Cluster,
+    apps: &[Application],
+    actions: &ShapeActions,
+) -> Result<(), String> {
+    let preempted_apps: std::collections::HashSet<AppId> =
+        actions.preempt_apps.iter().copied().collect();
+    let preempted_elastic: std::collections::HashSet<ComponentId> =
+        actions.preempt_elastic.iter().copied().collect();
+    let resized: HashMap<ComponentId, Demand> =
+        actions.resizes.iter().copied().collect();
+    let mut cpu = vec![0.0; cluster.hosts.len()];
+    let mut mem = vec![0.0; cluster.hosts.len()];
+    for (&c, p) in cluster.placements() {
+        // find owning app
+        let app = apps.iter().find(|a| a.components.iter().any(|x| x.id == c));
+        if let Some(a) = app {
+            if preempted_apps.contains(&a.id) {
+                continue;
+            }
+            if !matches!(a.state, AppState::Running { .. }) {
+                continue;
+            }
+        }
+        if preempted_elastic.contains(&c) {
+            continue;
+        }
+        let d = resized
+            .get(&c)
+            .copied()
+            .unwrap_or(Demand { cpus: p.alloc_cpus, mem: p.alloc_mem });
+        cpu[p.host] += d.cpus;
+        mem[p.host] += d.mem;
+    }
+    for h in &cluster.hosts {
+        if cpu[h.id] > h.total_cpus + 1e-6 || mem[h.id] > h.total_mem + 1e-6 {
+            return Err(format!(
+                "planned allocation overcommits host {}: cpu {:.3}/{:.3} mem {:.3}/{:.3}",
+                h.id, cpu[h.id], h.total_cpus, mem[h.id], h.total_mem
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::trace::patterns::{Pattern, PatternKind};
+    use crate::workload::Component;
+
+    /// Build a toy world: `napps` single-host apps; each app has one core
+    /// plus `nel` elastic components of (1 cpu, 4 GB) on a 1-host cluster.
+    fn toy(napps: usize, nel: usize, cpus: f64, mem: f64) -> (Vec<Application>, Cluster) {
+        let mut apps = Vec::new();
+        let mut cluster = Cluster::new(&ClusterConfig {
+            hosts: 1,
+            cores_per_host: cpus,
+            mem_per_host_gb: mem,
+        });
+        let mut cid = 0;
+        for a in 0..napps {
+            let mut components = Vec::new();
+            for k in 0..1 + nel {
+                components.push(Component {
+                    id: cid,
+                    app: a,
+                    is_core: k == 0,
+                    cpu_req: 1.0,
+                    mem_req: 4.0,
+                    cpu_pattern: Pattern::new(PatternKind::Constant { level: 0.4 }, 1, 0.0),
+                    mem_pattern: Pattern::new(PatternKind::Constant { level: 0.4 }, 2, 0.0),
+                });
+                let ok = cluster.place(cid, 0, 1.0, 4.0, a as f64 * 10.0 + k as f64);
+                assert!(ok, "toy cluster too small");
+                cid += 1;
+            }
+            apps.push(Application {
+                id: a,
+                submit_time: a as f64,
+                components,
+                total_work: 100.0,
+                state: AppState::Running { since: 0.0 },
+                remaining_work: 50.0,
+                last_progress_at: 0.0,
+                failures: 0,
+                preemptions: 0,
+                shaping_disabled: false,
+            });
+        }
+        (apps, cluster)
+    }
+
+    fn uniform_demand(apps: &[Application], cpus: f64, mem: f64) -> HashMap<ComponentId, Demand> {
+        apps.iter()
+            .flat_map(|a| a.components.iter())
+            .map(|c| (c.id, Demand { cpus, mem }))
+            .collect()
+    }
+
+    #[test]
+    fn baseline_never_acts() {
+        let (apps, cluster) = toy(2, 1, 8.0, 32.0);
+        let running = vec![0, 1];
+        let d = uniform_demand(&apps, 0.1, 0.5);
+        let a = plan(Policy::Baseline, &cluster, &apps, &running, &d);
+        assert!(a.preempt_apps.is_empty());
+        assert!(a.preempt_elastic.is_empty());
+        assert!(a.resizes.is_empty());
+    }
+
+    #[test]
+    fn pessimistic_shrinks_when_demand_low() {
+        let (apps, cluster) = toy(2, 1, 8.0, 32.0);
+        let running = vec![0, 1];
+        let d = uniform_demand(&apps, 0.5, 1.0);
+        let a = plan(Policy::Pessimistic, &cluster, &apps, &running, &d);
+        assert!(a.preempt_apps.is_empty());
+        assert!(a.preempt_elastic.is_empty());
+        assert_eq!(a.resizes.len(), 4); // every component resized down
+        for (_, dem) in &a.resizes {
+            assert_eq!(dem.mem, 1.0);
+        }
+        validate_actions(&cluster, &apps, &a).unwrap();
+    }
+
+    #[test]
+    fn pessimistic_preempts_youngest_elastic_on_pressure() {
+        // contend on the CPU axis: capacity 8 cores, memory roomy
+        let (apps, cluster) = toy(2, 1, 8.0, 64.0);
+        let running = vec![0, 1];
+        let d = uniform_demand(&apps, 3.0, 0.5);
+        let a = plan(Policy::Pessimistic, &cluster, &apps, &running, &d);
+        // cpu capacity 8: core0(3)+elastic0(3)=6, core1(3) -> 9 > 8:
+        // app1's core does not fit => app1 fully preempted
+        assert_eq!(a.preempt_apps, vec![1]);
+        validate_actions(&cluster, &apps, &a).unwrap();
+    }
+
+    #[test]
+    fn pessimistic_sheds_elastic_before_core() {
+        // one app, lots of elastic: demand grows so only some fit
+        let (apps, cluster) = toy(1, 5, 6.0, 64.0);
+        let running = vec![0];
+        let d = uniform_demand(&apps, 1.5, 1.0);
+        // cpu capacity 6: core 1.5 + 3 elastic × 1.5 = 6.0 fits exactly,
+        // remaining 2 elastic overflow -> preempted, youngest last placed
+        let a = plan(Policy::Pessimistic, &cluster, &apps, &running, &d);
+        assert!(a.preempt_apps.is_empty());
+        assert_eq!(a.preempt_elastic.len(), 2);
+        // youngest = highest placed_at = components 4,5 (placed later)
+        let mut got = a.preempt_elastic.clone();
+        got.sort();
+        assert_eq!(got, vec![4, 5]);
+        validate_actions(&cluster, &apps, &a).unwrap();
+    }
+
+    #[test]
+    fn fifo_priority_protects_older_apps() {
+        let (apps, cluster) = toy(3, 0, 4.0, 64.0);
+        let running = vec![2, 0, 1]; // shuffled input order
+        let d = uniform_demand(&apps, 1.8, 1.0);
+        // capacity 4 cpus: apps in FIFO order 0 (1.8), 1 (3.6), 2 -> 5.4
+        let a = plan(Policy::Pessimistic, &cluster, &apps, &running, &d);
+        assert_eq!(a.preempt_apps, vec![2]);
+        validate_actions(&cluster, &apps, &a).unwrap();
+    }
+
+    #[test]
+    fn optimistic_never_preempts_and_caps_growth() {
+        let (apps, cluster) = toy(2, 1, 8.0, 32.0);
+        let running = vec![0, 1];
+        // demand above capacity: 4 comps × 4 cpu = 16 > 8 free 4
+        let d = uniform_demand(&apps, 4.0, 8.0);
+        let a = plan(Policy::Optimistic, &cluster, &apps, &running, &d);
+        assert!(a.preempt_apps.is_empty());
+        assert!(a.preempt_elastic.is_empty());
+        // growth grants must not exceed free room in aggregate
+        let total_cpu: f64 = a
+            .resizes
+            .iter()
+            .map(|(c, dem)| dem.cpus - cluster.placement(*c).unwrap().alloc_cpus)
+            .sum();
+        assert!(total_cpu <= 8.0 - 4.0 + 1e-9, "granted {total_cpu}");
+        validate_actions(&cluster, &apps, &a).unwrap();
+    }
+
+    #[test]
+    fn grace_period_components_keep_allocation() {
+        let (apps, cluster) = toy(1, 1, 8.0, 32.0);
+        let running = vec![0];
+        // empty demand map: everything charged at current allocation
+        let d = HashMap::new();
+        let a = plan(Policy::Pessimistic, &cluster, &apps, &running, &d);
+        assert!(a.preempt_apps.is_empty());
+        assert!(a.preempt_elastic.is_empty());
+        // resizes to the same value are emitted; ensure they are no-ops
+        for (c, dem) in &a.resizes {
+            let p = cluster.placement(*c).unwrap();
+            assert_eq!(dem.cpus, p.alloc_cpus);
+            assert_eq!(dem.mem, p.alloc_mem);
+        }
+    }
+}

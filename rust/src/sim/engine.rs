@@ -1,0 +1,670 @@
+//! The simulation engine: wires workload, scheduler, monitor, forecaster
+//! and resource shaper over the discrete-event queue. One `Engine::run`
+//! is one experiment run; `run_simulation` is the one-call entry point
+//! used by examples, benches and tests.
+//!
+//! Semantics (matching §3-§4 of the paper):
+//! * arrivals enter the FIFO scheduler; admission charges *allocations*;
+//! * running apps progress at `1 + 0.8·(active elastic / total elastic)`
+//!   work units/s; preempting elastic components slows them;
+//! * the monitor samples each placed component's utilization pattern
+//!   every `monitor_interval_s` and the "OS" OOM-kills over-limit
+//!   components on saturated hosts (failures);
+//! * the shaper runs every `shaping_interval_s` after a grace period,
+//!   forecasting demand and imposing Algorithm 1 / optimistic resizing;
+//! * full preemptions and OOM-failed apps are resubmitted at their
+//!   original FIFO priority with all work lost; after
+//!   `max_failures_before_giveup` failures an app is no longer shaped.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::cluster::Cluster;
+use crate::config::{ForecasterKind, Policy, SimConfig};
+use crate::forecast::{Forecast, Forecaster};
+use crate::metrics::{Metrics, RunReport};
+use crate::monitor::Monitor;
+use crate::scheduler::FifoScheduler;
+use crate::shaper::{self, beta, Demand};
+use crate::sim::{Event, EventQueue};
+use crate::workload::{self, AppId, Application, AppState, ComponentId};
+
+/// Where forecasts come from.
+pub enum ForecastSource {
+    /// Perfect knowledge of each pattern's future (Fig. 3).
+    Oracle,
+    /// A statistical model over monitored history.
+    Model(Box<dyn Forecaster>),
+}
+
+/// Hard cap on processed events (runaway guard; generously above any
+/// legitimate run at the supported scales).
+const MAX_EVENTS: u64 = 200_000_000;
+
+/// Default max simulated time when the config leaves it at 0: 120 days.
+const DEFAULT_MAX_SIM_TIME: f64 = 120.0 * 86_400.0;
+
+/// Fraction of the reservation charged at admission under the optimistic
+/// policy. 1.0 = reservation-centric admission (all policies by default):
+/// optimism enters through usage-based reclamation + hard limits instead.
+/// The scheduler keeps the knob for over-commit ablations.
+const OPTIMISTIC_ADMISSION_PRICE: f64 = 1.0;
+
+/// The simulation engine.
+pub struct Engine {
+    cfg: SimConfig,
+    apps: Vec<Application>,
+    cluster: Cluster,
+    scheduler: FifoScheduler,
+    monitor: Monitor,
+    metrics: Metrics,
+    queue: EventQueue,
+    source: ForecastSource,
+    /// component id -> (owning app, index within app.components)
+    comp_index: Vec<(AppId, usize)>,
+    /// per-app finish-event version (invalidates stale finish events)
+    finish_version: Vec<u64>,
+    /// per-app count of currently placed elastic components
+    placed_elastic: Vec<usize>,
+    /// apps not yet finished
+    unfinished: usize,
+    /// scratch: reusable demand map (allocation-free hot loop)
+    demands: HashMap<ComponentId, Demand>,
+}
+
+impl Engine {
+    /// Build an engine for a config and forecast source.
+    pub fn new(cfg: SimConfig, source: ForecastSource) -> Self {
+        let wl = workload::generate(&cfg.workload, cfg.seed);
+        let mut comp_index = vec![(0usize, 0usize); wl.num_components];
+        for app in &wl.apps {
+            for (k, c) in app.components.iter().enumerate() {
+                comp_index[c.id] = (app.id, k);
+            }
+        }
+        let history_cap = (cfg.forecast.history * 2).max(64);
+        let n_apps = wl.apps.len();
+        let n_comp = wl.num_components;
+        Engine {
+            cluster: Cluster::new(&cfg.cluster),
+            monitor: Monitor::new(n_comp, history_cap),
+            metrics: Metrics::new(n_apps),
+            scheduler: FifoScheduler::new(),
+            queue: EventQueue::new(),
+            apps: wl.apps,
+            comp_index,
+            finish_version: vec![0; n_apps],
+            placed_elastic: vec![0; n_apps],
+            unfinished: n_apps,
+            demands: HashMap::new(),
+            source,
+            cfg,
+        }
+    }
+
+    /// Current simulated time.
+    pub fn now(&self) -> f64 {
+        self.queue.now()
+    }
+
+    /// Run to completion; returns the metrics report.
+    pub fn run(self, run_name: &str) -> RunReport {
+        self.run_paced(run_name, f64::INFINITY)
+    }
+
+    /// Run pacing simulated time against the wall clock at `accel`×
+    /// real time (the live prototype mode of §5; `accel = ∞` degenerates
+    /// to as-fast-as-possible discrete-event execution).
+    pub fn run_paced(mut self, run_name: &str, accel: f64) -> RunReport {
+        let max_t = if self.cfg.max_sim_time_s > 0.0 {
+            self.cfg.max_sim_time_s
+        } else {
+            DEFAULT_MAX_SIM_TIME
+        };
+        for app in &self.apps {
+            self.queue.push(app.submit_time, Event::Arrival(app.id));
+        }
+        self.queue
+            .push(self.cfg.forecast.monitor_interval_s, Event::MonitorTick);
+        if self.cfg.shaper.policy != Policy::Baseline {
+            self.queue
+                .push(self.cfg.shaper.shaping_interval_s, Event::ShaperTick);
+        }
+        let mut events: u64 = 0;
+        let wall_start = std::time::Instant::now();
+        while let Some((t, ev)) = self.queue.pop() {
+            if t > max_t || self.unfinished == 0 {
+                break;
+            }
+            if accel.is_finite() && accel > 0.0 {
+                // pace: wall-clock deadline for this event
+                let deadline = t / accel;
+                let elapsed = wall_start.elapsed().as_secs_f64();
+                if deadline > elapsed {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        (deadline - elapsed).min(5.0),
+                    ));
+                }
+            }
+            events += 1;
+            if events > MAX_EVENTS {
+                crate::warn_log!("event cap hit at t={t:.0}; aborting run");
+                break;
+            }
+            match ev {
+                Event::Arrival(a) => self.on_arrival(a),
+                Event::SchedulerWake => self.on_scheduler_wake(),
+                Event::Finish { app, version } => self.on_finish(app, version),
+                Event::MonitorTick => self.on_monitor_tick(),
+                Event::ShaperTick => self.on_shaper_tick(),
+            }
+        }
+        // the final popped event may lie past the horizon; report the
+        // effective simulated span
+        let sim_time = self.now().min(max_t);
+        self.metrics.report(run_name, sim_time)
+    }
+
+    // ----- event handlers -------------------------------------------------
+
+    fn on_arrival(&mut self, a: AppId) {
+        self.scheduler.enqueue(&self.apps, a);
+        self.queue.push(self.now(), Event::SchedulerWake);
+    }
+
+    fn on_scheduler_wake(&mut self) {
+        let now = self.now();
+        // Optimistic reclamation admits new work against *reclaimed*
+        // capacity (over-commit, Borg [62]); the paper's system and the
+        // baseline keep reservation-centric admission.
+        let price = if self.cfg.shaper.policy == Policy::Optimistic {
+            OPTIMISTIC_ADMISSION_PRICE
+        } else {
+            1.0
+        };
+        let started = self
+            .scheduler
+            .try_schedule(&mut self.apps, &mut self.cluster, now, price);
+        for outcome in started {
+            let a = outcome.app;
+            let elastic_placed = outcome
+                .placed
+                .iter()
+                .filter(|&&c| {
+                    let (app, k) = self.comp_index[c];
+                    !self.apps[app].components[k].is_core
+                })
+                .count();
+            self.placed_elastic[a] = elastic_placed;
+            self.schedule_finish(a);
+        }
+    }
+
+    fn on_finish(&mut self, a: AppId, version: u64) {
+        if self.finish_version[a] != version {
+            return; // stale
+        }
+        if !matches!(self.apps[a].state, AppState::Running { .. }) {
+            return;
+        }
+        let now = self.now();
+        self.update_progress(a, now);
+        if self.apps[a].remaining_work <= 1e-6 {
+            // completed
+            for k in 0..self.apps[a].components.len() {
+                let cid = self.apps[a].components[k].id;
+                self.cluster.remove(cid);
+                self.monitor.reset(cid);
+            }
+            self.placed_elastic[a] = 0;
+            self.apps[a].state = AppState::Finished { at: now };
+            self.metrics.record_finish(self.apps[a].submit_time, now);
+            self.unfinished -= 1;
+            self.queue.push(now, Event::SchedulerWake);
+        } else {
+            // rate changed since the event was scheduled; rearm
+            self.schedule_finish(a);
+        }
+    }
+
+    fn on_monitor_tick(&mut self) {
+        let now = self.now();
+        let interval = self.cfg.forecast.monitor_interval_s;
+        // 1) sample utilization + slack
+        let mut host_usage_mem: Vec<f64> = vec![0.0; self.cluster.len()];
+        // (component, host, used_mem, alloc_mem, is_core, app)
+        let mut samples: Vec<(ComponentId, usize, f64, f64, bool, AppId)> = Vec::new();
+        for a in 0..self.apps.len() {
+            let AppState::Running { since } = self.apps[a].state else { continue };
+            let step = ((now - since) / interval).max(0.0) as u64;
+            for k in 0..self.apps[a].components.len() {
+                let comp = &self.apps[a].components[k];
+                let Some(p) = self.cluster.placement(comp.id) else { continue };
+                let cpu_frac = comp.cpu_pattern.at_step(step);
+                let mem_frac = comp.mem_pattern.at_step(step);
+                let used_cpu = cpu_frac * comp.cpu_req;
+                let used_mem = mem_frac * comp.mem_req;
+                let cpu_slack = ((p.alloc_cpus - used_cpu) / p.alloc_cpus.max(1e-9)).max(0.0);
+                let mem_slack = ((p.alloc_mem - used_mem) / p.alloc_mem.max(1e-9)).max(0.0);
+                let host = p.host;
+                let alloc_mem = p.alloc_mem;
+                self.monitor.record(comp.id, cpu_frac, mem_frac);
+                self.metrics.record_slack(a, cpu_slack, mem_slack);
+                host_usage_mem[host] += used_mem;
+                samples.push((comp.id, host, used_mem, alloc_mem, comp.is_core, a));
+            }
+        }
+        // 2a) hard-limit semantics (§5): under *optimistic* reclamation
+        //     the container memory limit is a hard limit — any component
+        //     exceeding its (reclaimed) allocation is killed by the OS
+        //     outright. The paper's system uses Docker *soft* limits, so
+        //     pessimistic/baseline kills happen only under host pressure
+        //     (step 2b).
+        if self.cfg.shaper.policy == Policy::Optimistic {
+            const HARD_LIMIT_TOLERANCE: f64 = 1.10;
+            let victims: Vec<(ComponentId, bool, AppId)> = samples
+                .iter()
+                .filter(|s| s.2 > s.3 * HARD_LIMIT_TOLERANCE)
+                .map(|s| (s.0, s.4, s.5))
+                .collect();
+            for (cid, is_core, app) in victims {
+                if self.cluster.placement(cid).is_none() {
+                    continue; // already gone via its app
+                }
+                self.kill_oom(app, cid, is_core, now);
+            }
+        }
+        // 2b) OOM check per host: kill over-limit components on saturated
+        //     hosts, largest overage first, until usage fits (the "OS").
+        for h in 0..self.cluster.len() {
+            let capacity = self.cluster.hosts[h].total_mem;
+            let frac = host_usage_mem[h] / capacity;
+            if frac > self.metrics.peak_host_usage {
+                self.metrics.peak_host_usage = frac;
+            }
+            if host_usage_mem[h] <= capacity + 1e-9 {
+                continue;
+            }
+            let mut on_host: Vec<&(ComponentId, usize, f64, f64, bool, AppId)> = samples
+                .iter()
+                .filter(|s| s.1 == h && s.2 > s.3 + 1e-9) // over its limit
+                .collect();
+            on_host.sort_by(|x, y| (y.2 - y.3).partial_cmp(&(x.2 - x.3)).unwrap());
+            let mut usage = host_usage_mem[h];
+            let victims: Vec<(ComponentId, f64, bool, AppId)> = on_host
+                .iter()
+                .map(|s| (s.0, s.2, s.4, s.5))
+                .collect();
+            for (cid, used, is_core, app) in victims {
+                if usage <= capacity + 1e-9 {
+                    break;
+                }
+                if self.cluster.placement(cid).is_none() {
+                    continue; // already killed via its app
+                }
+                usage -= used;
+                self.kill_oom(app, cid, is_core, now);
+            }
+        }
+        // 3) cluster-level allocation accounting
+        let (fc, fm) = self.cluster.allocation_fraction();
+        self.metrics.record_allocation(fc, fm);
+
+        if self.unfinished > 0 {
+            self.queue.push_in(interval, Event::MonitorTick);
+        }
+    }
+
+    fn on_shaper_tick(&mut self) {
+        let now = self.now();
+        // copy config scalars out so `self` stays free for mutation below
+        let monitor_interval = self.cfg.forecast.monitor_interval_s;
+        let shaping_interval = self.cfg.shaper.shaping_interval_s;
+        let (k1, k2) = (self.cfg.shaper.k1, self.cfg.shaper.k2);
+        let policy = self.cfg.shaper.policy;
+        // The grace period exists to accumulate training history (§5);
+        // the oracle needs none and shapes from the first tick.
+        let grace_steps = match &self.source {
+            ForecastSource::Oracle => 0,
+            ForecastSource::Model(_) => {
+                (self.cfg.forecast.grace_period_s / monitor_interval).ceil() as usize
+            }
+        };
+        let lookahead_steps = (shaping_interval / monitor_interval).ceil().max(1.0) as u64;
+
+        // gather the components to shape
+        let running: Vec<AppId> = (0..self.apps.len())
+            .filter(|&a| matches!(self.apps[a].state, AppState::Running { .. }))
+            .collect();
+        self.demands.clear();
+        let mut model_batch_ids: Vec<(ComponentId, f64, f64)> = Vec::new(); // (comp, cpu_req, mem_req)
+        let mut model_cpu_series: Vec<Vec<f64>> = Vec::new();
+        let mut model_mem_series: Vec<Vec<f64>> = Vec::new();
+
+        for &a in &running {
+            if self.apps[a].shaping_disabled {
+                continue; // too many failures: allocation stays put
+            }
+            let AppState::Running { since } = self.apps[a].state else { unreachable!() };
+            for comp in &self.apps[a].components {
+                if self.cluster.placement(comp.id).is_none() {
+                    continue;
+                }
+                if self.monitor.len(comp.id) < grace_steps {
+                    continue; // grace period: keep current allocation
+                }
+                match &self.source {
+                    ForecastSource::Oracle => {
+                        let step = ((now - since) / monitor_interval) as u64;
+                        // The pessimistic shaper anticipates the coming
+                        // interval's peak; the optimistic comparator (Borg/
+                        // Omega-style reclamation) redeems against *current*
+                        // usage without anticipating the consequences —
+                        // that asymmetry is the paper's §3.2 distinction.
+                        let (cpu_peak, mem_peak) = if policy == Policy::Optimistic {
+                            (comp.cpu_pattern.at_step(step), comp.mem_pattern.at_step(step))
+                        } else {
+                            (
+                                comp.cpu_pattern.peak_over(step + 1, step + lookahead_steps),
+                                comp.mem_pattern.peak_over(step + 1, step + lookahead_steps),
+                            )
+                        };
+                        let fc = Forecast { mean: cpu_peak, var: 0.0 };
+                        let fm = Forecast { mean: mem_peak, var: 0.0 };
+                        self.demands.insert(
+                            comp.id,
+                            Demand {
+                                cpus: beta::desired_fraction(&fc, k1, k2) * comp.cpu_req,
+                                mem: beta::desired_fraction(&fm, k1, k2) * comp.mem_req,
+                            },
+                        );
+                    }
+                    ForecastSource::Model(_) => {
+                        model_batch_ids.push((comp.id, comp.cpu_req, comp.mem_req));
+                        model_cpu_series.push(self.monitor.cpu_series(comp.id));
+                        model_mem_series.push(self.monitor.mem_series(comp.id));
+                    }
+                }
+            }
+        }
+        if let ForecastSource::Model(model) = &mut self.source {
+            if !model_batch_ids.is_empty() {
+                let fc = model.forecast(&model_cpu_series);
+                let fm = model.forecast(&model_mem_series);
+                self.metrics.forecasts_issued += 2 * model_batch_ids.len() as u64;
+                for (i, &(cid, cpu_req, mem_req)) in model_batch_ids.iter().enumerate() {
+                    self.demands.insert(
+                        cid,
+                        Demand {
+                            cpus: beta::desired_fraction(&fc[i], k1, k2) * cpu_req,
+                            mem: beta::desired_fraction(&fm[i], k1, k2) * mem_req,
+                        },
+                    );
+                }
+            }
+        } else {
+            self.metrics.forecasts_issued += 2 * self.demands.len() as u64;
+        }
+
+        let actions = shaper::plan(
+            policy,
+            &self.cluster,
+            &self.apps,
+            &running,
+            &self.demands,
+        );
+        debug_assert!(
+            shaper::validate_actions(&self.cluster, &self.apps, &actions).is_ok(),
+            "shaper planned an overcommit"
+        );
+
+        // apply: full preemptions first (controlled, not failures)
+        for &a in &actions.preempt_apps {
+            self.preempt_app(a, now, /*is_failure=*/ false);
+        }
+        // partial elastic preemptions
+        for &cid in &actions.preempt_elastic {
+            let (a, k) = self.comp_index[cid];
+            if self.cluster.placement(cid).is_none() {
+                continue; // its app was already fully preempted
+            }
+            if !matches!(self.apps[a].state, AppState::Running { .. }) {
+                continue;
+            }
+            debug_assert!(!self.apps[a].components[k].is_core);
+            self.remove_elastic(a, cid, now);
+            self.metrics.record_preemption(false, 0.0);
+        }
+        // resizes on the survivors
+        for &(cid, d) in &actions.resizes {
+            if self.cluster.placement(cid).is_none() {
+                continue;
+            }
+            let (a, _) = self.comp_index[cid];
+            if !matches!(self.apps[a].state, AppState::Running { .. }) {
+                continue;
+            }
+            if let Err(e) = self.cluster.resize(cid, d.cpus, d.mem) {
+                crate::warn_log!("resize rejected: {e}");
+            }
+        }
+        self.queue.push(now, Event::SchedulerWake);
+        if self.unfinished > 0 {
+            self.queue.push_in(shaping_interval, Event::ShaperTick);
+        }
+    }
+
+    // ----- mechanics ------------------------------------------------------
+
+    /// Bring an app's remaining work up to date at time `now`.
+    fn update_progress(&mut self, a: AppId, now: f64) {
+        let app = &mut self.apps[a];
+        if let AppState::Running { .. } = app.state {
+            let dt = (now - app.last_progress_at).max(0.0);
+            let rate = app.rate(self.placed_elastic[a]);
+            app.remaining_work = (app.remaining_work - rate * dt).max(0.0);
+            app.last_progress_at = now;
+        }
+    }
+
+    /// (Re)arm the finish event from current remaining work and rate.
+    fn schedule_finish(&mut self, a: AppId) {
+        let now = self.now();
+        self.update_progress(a, now);
+        self.finish_version[a] += 1;
+        let app = &self.apps[a];
+        let rate = app.rate(self.placed_elastic[a]);
+        let eta = now + app.remaining_work / rate.max(1e-9);
+        self.queue.push(
+            eta,
+            Event::Finish { app: a, version: self.finish_version[a] },
+        );
+    }
+
+    /// Remove one placed elastic component (preemption or OOM), charging
+    /// the proportional loss of the work it contributed so far.
+    fn remove_elastic(&mut self, a: AppId, cid: ComponentId, now: f64) {
+        self.update_progress(a, now);
+        let app = &self.apps[a];
+        let e_total = app.elastic_count().max(1);
+        let rate = app.rate(self.placed_elastic[a]);
+        // share of progress attributable to this single elastic component
+        let share = (workload::ELASTIC_SPEEDUP / e_total as f64) / rate;
+        let done = app.total_work - app.remaining_work;
+        let lost = done * share;
+        let app = &mut self.apps[a];
+        app.remaining_work = (app.remaining_work + lost).min(app.total_work);
+        self.metrics.wasted_work += lost;
+        self.cluster.remove(cid);
+        self.monitor.reset(cid);
+        self.placed_elastic[a] = self.placed_elastic[a].saturating_sub(1);
+        self.schedule_finish(a);
+    }
+
+    /// Fully preempt (or fail) an app: all components removed, all work
+    /// lost, resubmitted at original priority.
+    fn preempt_app(&mut self, a: AppId, now: f64, is_failure: bool) {
+        if !matches!(self.apps[a].state, AppState::Running { .. }) {
+            return;
+        }
+        self.update_progress(a, now);
+        let done = self.apps[a].total_work - self.apps[a].remaining_work;
+        for k in 0..self.apps[a].components.len() {
+            let cid = self.apps[a].components[k].id;
+            self.cluster.remove(cid);
+            self.monitor.reset(cid);
+        }
+        self.placed_elastic[a] = 0;
+        let app = &mut self.apps[a];
+        app.remaining_work = app.total_work; // work lost
+        app.state = AppState::Queued;
+        app.last_progress_at = now;
+        self.finish_version[a] += 1; // invalidate in-flight finish
+        if is_failure {
+            app.failures += 1;
+            if app.failures >= self.cfg.max_failures_before_giveup {
+                app.shaping_disabled = true;
+            }
+        } else {
+            app.preemptions += 1;
+            self.metrics.record_preemption(true, done);
+        }
+        self.scheduler.enqueue(&self.apps, a);
+    }
+
+    /// OOM kill decided by the "OS" on a saturated host.
+    fn kill_oom(&mut self, a: AppId, cid: ComponentId, is_core: bool, now: f64) {
+        self.update_progress(a, now);
+        let done = self.apps[a].total_work - self.apps[a].remaining_work;
+        if is_core {
+            // core death kills the application
+            self.metrics.record_oom(a, true, done);
+            self.preempt_app(a, now, /*is_failure=*/ true);
+        } else {
+            self.metrics.record_oom(a, false, 0.0);
+            self.remove_elastic(a, cid, now);
+        }
+        self.queue.push(now, Event::SchedulerWake);
+    }
+}
+
+/// One-call entry point: build the forecast source per config and run.
+///
+/// `runtime` is required only for `ForecasterKind::GpPjrt`; pass `None`
+/// for the self-contained kinds.
+pub fn run_simulation(
+    cfg: &SimConfig,
+    runtime: Option<Arc<crate::runtime::Runtime>>,
+    run_name: &str,
+) -> anyhow::Result<RunReport> {
+    let source = match cfg.forecast.kind {
+        ForecasterKind::Oracle => ForecastSource::Oracle,
+        ForecasterKind::GpPjrt => {
+            let rt = match runtime {
+                Some(rt) => rt,
+                None => Arc::new(crate::runtime::Runtime::from_default_dir()?),
+            };
+            let gp = crate::forecast::gp_pjrt::GpPjrt::new(
+                rt,
+                cfg.forecast.kernel,
+                cfg.forecast.history,
+                32,
+            )?;
+            ForecastSource::Model(Box::new(gp))
+        }
+        kind => ForecastSource::Model(crate::forecast::build(
+            kind,
+            cfg.forecast.kernel,
+            cfg.forecast.history,
+        )),
+    };
+    let engine = Engine::new(cfg.clone(), source);
+    Ok(engine.run(run_name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> SimConfig {
+        let mut cfg = SimConfig::small();
+        cfg.workload.num_apps = 30;
+        cfg.cluster.hosts = 6;
+        cfg.workload.runtime_scale = 0.2;
+        cfg.max_sim_time_s = 30.0 * 86_400.0;
+        cfg
+    }
+
+    #[test]
+    fn baseline_completes_without_failures() {
+        let mut cfg = tiny_cfg();
+        cfg.shaper.policy = Policy::Baseline;
+        cfg.forecast.kind = ForecasterKind::Oracle;
+        let r = run_simulation(&cfg, None, "baseline").unwrap();
+        assert_eq!(r.completed, 30, "{}", r.summary());
+        assert_eq!(r.oom_events, 0);
+        assert_eq!(r.failed_app_fraction, 0.0);
+        assert!(r.turnaround.mean > 0.0);
+    }
+
+    #[test]
+    fn pessimistic_oracle_no_failures_and_less_slack() {
+        let mut base_cfg = tiny_cfg();
+        base_cfg.shaper.policy = Policy::Baseline;
+        base_cfg.forecast.kind = ForecasterKind::Oracle;
+        let base = run_simulation(&base_cfg, None, "baseline").unwrap();
+
+        let mut cfg = tiny_cfg();
+        cfg.shaper.policy = Policy::Pessimistic;
+        cfg.forecast.kind = ForecasterKind::Oracle;
+        let r = run_simulation(&cfg, None, "pessimistic").unwrap();
+        assert_eq!(r.completed, 30, "{}", r.summary());
+        // the paper's headline: zero failures under oracle + pessimistic
+        assert_eq!(r.failed_app_fraction, 0.0, "{}", r.summary());
+        assert_eq!(r.oom_events, 0);
+        // and materially lower slack than baseline
+        assert!(
+            r.mem_slack.mean < base.mem_slack.mean,
+            "shaped {} vs baseline {}",
+            r.mem_slack.mean,
+            base.mem_slack.mean
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut cfg = tiny_cfg();
+        cfg.forecast.kind = ForecasterKind::Oracle;
+        cfg.shaper.policy = Policy::Pessimistic;
+        let a = run_simulation(&cfg, None, "a").unwrap();
+        let b = run_simulation(&cfg, None, "b").unwrap();
+        assert_eq!(a.turnaround.mean, b.turnaround.mean);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.oom_events, b.oom_events);
+    }
+
+    #[test]
+    fn gp_native_run_completes() {
+        let mut cfg = tiny_cfg();
+        cfg.workload.num_apps = 15;
+        cfg.shaper.policy = Policy::Pessimistic;
+        cfg.forecast.kind = ForecasterKind::GpNative;
+        // short-running workload: shorten the grace period so forecasting
+        // actually engages before apps finish
+        cfg.forecast.grace_period_s = 180.0;
+        cfg.workload.runtime_scale = 1.0;
+        let r = run_simulation(&cfg, None, "gp").unwrap();
+        assert_eq!(r.completed, 15, "{}", r.summary());
+        assert!(r.forecasts_issued > 0);
+    }
+
+    #[test]
+    fn max_sim_time_respected() {
+        let mut cfg = tiny_cfg();
+        cfg.max_sim_time_s = 500.0;
+        cfg.forecast.kind = ForecasterKind::Oracle;
+        cfg.shaper.policy = Policy::Baseline;
+        let r = run_simulation(&cfg, None, "short").unwrap();
+        assert!(r.sim_time <= 500.0 + 1e-6);
+    }
+}

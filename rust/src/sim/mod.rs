@@ -1,0 +1,160 @@
+//! Discrete-event simulation core: time-ordered event queue + the engine
+//! (`engine`) that drives scheduler, monitor and resource shaper — the
+//! from-scratch replacement for the Omega simulator [54]/[42] the paper
+//! extends (DESIGN.md §2).
+
+pub mod engine;
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::workload::AppId;
+
+/// Simulation events.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// An application arrives at the scheduler queue.
+    Arrival(AppId),
+    /// A running application may have completed; `version` invalidates
+    /// stale finish events after rate changes or restarts.
+    Finish { app: AppId, version: u64 },
+    /// Periodic resource-utilization sampling (§3, resource monitor).
+    MonitorTick,
+    /// Periodic resource-shaper pass (§3.2, Algorithm 1).
+    ShaperTick,
+    /// Try to dequeue applications (resources may have been freed).
+    SchedulerWake,
+}
+
+/// Queue entry ordered by (time, sequence) — sequence keeps FIFO order of
+/// simultaneous events deterministic.
+#[derive(Debug, Clone)]
+struct Entry {
+    time: f64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: reverse for earliest-first.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Time-ordered event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+    now: f64,
+}
+
+impl EventQueue {
+    /// Empty queue at time 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current simulated time (time of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Schedule `event` at absolute time `at` (clamped to now).
+    pub fn push(&mut self, at: f64, event: Event) {
+        let t = if at < self.now { self.now } else { at };
+        self.heap.push(Entry { time: t, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Schedule `event` after a delay.
+    pub fn push_in(&mut self, delay: f64, event: Event) {
+        self.push(self.now + delay.max(0.0), event);
+    }
+
+    /// Pop the next event, advancing the clock. None when exhausted.
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        let e = self.heap.pop()?;
+        debug_assert!(e.time >= self.now, "time went backwards");
+        self.now = e.time;
+        Some((e.time, e.event))
+    }
+
+    /// Events still pending.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when no events remain.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(5.0, Event::MonitorTick);
+        q.push(1.0, Event::Arrival(0));
+        q.push(3.0, Event::SchedulerWake);
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(times, vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn simultaneous_events_fifo() {
+        let mut q = EventQueue::new();
+        q.push(2.0, Event::Arrival(1));
+        q.push(2.0, Event::Arrival(2));
+        q.push(2.0, Event::Arrival(3));
+        let ids: Vec<_> = std::iter::from_fn(|| q.pop())
+            .map(|(_, e)| match e {
+                Event::Arrival(i) => i,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn clock_monotone_and_clamped() {
+        let mut q = EventQueue::new();
+        q.push(10.0, Event::MonitorTick);
+        assert_eq!(q.pop().unwrap().0, 10.0);
+        assert_eq!(q.now(), 10.0);
+        // scheduling in the past clamps to now
+        q.push(1.0, Event::SchedulerWake);
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 10.0);
+    }
+
+    #[test]
+    fn push_in_relative() {
+        let mut q = EventQueue::new();
+        q.push(10.0, Event::MonitorTick);
+        q.pop();
+        q.push_in(5.0, Event::ShaperTick);
+        assert_eq!(q.pop().unwrap().0, 15.0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Synthetic Google-trace-like workload distributions.
+//!
+//! The paper's simulator samples arrivals, sizes and runtimes from
+//! empirical distributions of the 2011 Google cluster traces [52, 53, 63].
+//! Those files are not available offline, so we *fit* `Empirical`
+//! distributions from parametric samples whose published moments match the
+//! trace analyses (DESIGN.md §2):
+//!
+//! * inter-arrival: bi-modal — fast-paced bursts (exp, mean ≈ seconds)
+//!   mixed with long gaps (exp, mean ≈ minutes), per §4.1;
+//! * per-component memory: log-normal spanning a few MB to dozens of GB;
+//! * per-component CPU: 0.1–6 cores with a mass near small values;
+//! * runtime: heavy-tailed log-normal, tens of seconds to weeks;
+//! * component count: log-uniform, a few to `max_elastic`.
+//!
+//! The generator consumes only the `Empirical` interface, so swapping in
+//! the real trace CSVs later is a data change, not a code change.
+
+use crate::config::WorkloadConfig;
+use crate::util::rng::{Empirical, Pcg};
+
+/// Fitted empirical distributions driving the workload generator.
+#[derive(Debug, Clone)]
+pub struct TraceDistributions {
+    pub interarrival_s: Empirical,
+    pub mem_gb: Empirical,
+    pub cpus: Empirical,
+    pub runtime_s: Empirical,
+}
+
+/// Number of synthetic observations backing each empirical distribution.
+const FIT_SAMPLES: usize = 20_000;
+
+impl TraceDistributions {
+    /// Fit the synthetic-trace distributions for a workload config.
+    pub fn fit(cfg: &WorkloadConfig, rng: &mut Pcg) -> Self {
+        let mut inter = Vec::with_capacity(FIT_SAMPLES);
+        let mut mem = Vec::with_capacity(FIT_SAMPLES);
+        let mut cpus = Vec::with_capacity(FIT_SAMPLES);
+        let mut runtime = Vec::with_capacity(FIT_SAMPLES);
+        for _ in 0..FIT_SAMPLES {
+            // bi-modal inter-arrival (bursts + gaps)
+            let ia = if rng.chance(cfg.burst_prob) {
+                rng.exponential(cfg.burst_mean_s)
+            } else {
+                rng.exponential(cfg.gap_mean_s)
+            };
+            inter.push(ia.max(0.01));
+
+            // memory: lognormal centered near ~1 GB, few MB .. ~64 GB
+            mem.push((rng.lognormal(0.0, 1.3) * cfg.mem_scale).clamp(0.004, 64.0));
+
+            // cpus: mostly fractional-to-2 cores, up to 6
+            cpus.push(rng.lognormal(-0.4, 0.8).clamp(0.1, 6.0));
+
+            // runtime: heavy tail, 30 s .. 3 weeks (scaled per preset)
+            runtime.push(
+                (rng.lognormal(6.2, 1.6) * cfg.runtime_scale)
+                    .clamp(30.0, 3.0 * 7.0 * 86_400.0),
+            );
+        }
+        TraceDistributions {
+            interarrival_s: Empirical::fit(inter),
+            mem_gb: Empirical::fit(mem),
+            cpus: Empirical::fit(cpus),
+            runtime_s: Empirical::fit(runtime),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::util::stats;
+
+    fn fitted() -> TraceDistributions {
+        let cfg = SimConfig::small().workload;
+        let mut rng = Pcg::seeded(1);
+        TraceDistributions::fit(&cfg, &mut rng)
+    }
+
+    #[test]
+    fn ranges_match_paper_description() {
+        let d = fitted();
+        // memory: a few MB to a few dozen GB (§4.1)
+        assert!(d.mem_gb.quantile(0.0) >= 0.004);
+        assert!(d.mem_gb.quantile(1.0) <= 64.0);
+        // up to 6 CPU cores
+        assert!(d.cpus.quantile(1.0) <= 6.0);
+        // runtimes from dozens of seconds to weeks
+        assert!(d.runtime_s.quantile(0.0) >= 30.0);
+        assert!(d.runtime_s.quantile(1.0) <= 21.0 * 86_400.0 + 1.0);
+    }
+
+    #[test]
+    fn interarrival_is_bimodal() {
+        let d = fitted();
+        // bursts dominate the low quantiles, gaps the high ones
+        let q20 = d.interarrival_s.quantile(0.2);
+        let q95 = d.interarrival_s.quantile(0.95);
+        assert!(q20 < 5.0, "q20 {q20}");
+        assert!(q95 > 100.0, "q95 {q95}");
+    }
+
+    #[test]
+    fn sampling_reproducible() {
+        let cfg = SimConfig::small().workload;
+        let mut r1 = Pcg::seeded(9);
+        let mut r2 = Pcg::seeded(9);
+        let mut d1 = TraceDistributions::fit(&cfg, &mut r1);
+        let mut d2 = TraceDistributions::fit(&cfg, &mut r2);
+        let a: Vec<f64> = (0..50).map(|_| d1.mem_gb.sample(&mut r1)).collect();
+        let b: Vec<f64> = (0..50).map(|_| d2.mem_gb.sample(&mut r2)).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn runtime_is_heavy_tailed() {
+        let d = fitted();
+        let med = d.runtime_s.quantile(0.5);
+        let q99 = d.runtime_s.quantile(0.99);
+        assert!(q99 / med > 20.0, "tail ratio {}", q99 / med);
+    }
+
+    #[test]
+    fn cpu_mass_near_small_values() {
+        let d = fitted();
+        let mut rng = Pcg::seeded(3);
+        let mut dd = d.cpus.clone();
+        let xs: Vec<f64> = (0..2000).map(|_| dd.sample(&mut rng)).collect();
+        let m = stats::mean(&xs);
+        assert!((0.3..2.0).contains(&m), "cpu mean {m}");
+    }
+}

@@ -1,0 +1,264 @@
+//! Deterministic utilization time-series generators.
+//!
+//! Every component owns a `Pattern`: a pure function `step -> utilization
+//! fraction in (0, 1]` of its reservation. Purity matters twice over:
+//! the oracle forecaster evaluates the *future* of the same function the
+//! monitor samples, and repeated queries at the same simulated time must
+//! agree. Stateful processes (the quasi-random-walk) are built from
+//! counter-hashed noise so they remain pure.
+//!
+//! Classes follow what real clusters exhibit (Zhang et al. [66] find
+//! periodic / constant / unpredictable classes; Reiss et al. [53] report
+//! ~40% typical utilization of reservation): Constant, Periodic, Ramp,
+//! Bursty (sudden spikes — the failure-inducing case the paper's β buffer
+//! guards against), and QuasiWalk (band-limited noise, "unpredictable").
+
+use crate::util::rng::Pcg;
+
+/// Utilization pattern class with its parameters (fractions of request).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PatternKind {
+    /// Flat base level plus small noise.
+    Constant { level: f64 },
+    /// Sinusoidal demand (daily/periodic jobs).
+    Periodic { base: f64, amp: f64, period_steps: f64, phase: f64 },
+    /// Linear growth from `from` to `to` over `len_steps` (memory-accreting
+    /// jobs like iterative Spark caching).
+    Ramp { from: f64, to: f64, len_steps: f64 },
+    /// Low base with occasional multi-step spikes to near the reservation —
+    /// the pattern that makes under-provisioning dangerous.
+    Bursty { base: f64, spike: f64, spike_every: u64, spike_len: u64 },
+    /// Band-limited pseudo-random wander (the "unpredictable" class).
+    QuasiWalk { center: f64, swing: f64 },
+}
+
+/// A deterministic utilization series: kind + private noise streams.
+/// `seed` drives the *structural* randomness (bursty spike schedule,
+/// quasi-walk phases) and is shared by sibling components of one
+/// application; `noise_seed` drives per-component observation noise.
+#[derive(Debug, Clone)]
+pub struct Pattern {
+    pub kind: PatternKind,
+    seed: u64,
+    noise_seed: u64,
+    /// Multiplicative observation noise amplitude.
+    noise_amp: f64,
+}
+
+/// Hash a (seed, counter) pair to a uniform f64 in [0, 1).
+/// SplitMix64 finalizer: cheap, well-distributed, pure.
+fn hash01(seed: u64, ctr: u64) -> f64 {
+    let mut z = seed ^ ctr.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^= z >> 31;
+    (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Hash to approximately standard normal (sum of 4 uniforms, CLT;
+/// adequate tails for observation noise).
+fn hashn(seed: u64, ctr: u64) -> f64 {
+    let s: f64 = (0..4).map(|i| hash01(seed ^ (i + 1), ctr)).sum();
+    (s - 2.0) * (12.0f64 / 4.0).sqrt()
+}
+
+impl Pattern {
+    /// Build a pattern with a private seed.
+    pub fn new(kind: PatternKind, seed: u64, noise_amp: f64) -> Self {
+        Pattern { kind, seed, noise_seed: seed ^ 0x5EED, noise_amp }
+    }
+
+    /// Clone the pattern with a different observation-noise stream: same
+    /// class, same phase, same structural schedule (components of one
+    /// application move together); only the noise differs per component.
+    pub fn with_noise_seed(&self, noise_seed: u64) -> Self {
+        Pattern { kind: self.kind.clone(), seed: self.seed, noise_seed, noise_amp: self.noise_amp }
+    }
+
+    /// Sample a pattern kind from the class mixture observed in real
+    /// clusters; `mem` patterns ramp more, `cpu` patterns oscillate more.
+    pub fn sample(rng: &mut Pcg, is_memory: bool) -> Self {
+        let weights = if is_memory {
+            // constant, periodic, ramp, bursty, quasiwalk
+            [0.20, 0.15, 0.30, 0.25, 0.10]
+        } else {
+            [0.25, 0.30, 0.10, 0.20, 0.15]
+        };
+        let kind = match rng.weighted(&weights) {
+            0 => PatternKind::Constant { level: rng.uniform(0.15, 0.55) },
+            1 => PatternKind::Periodic {
+                base: rng.uniform(0.2, 0.45),
+                amp: rng.uniform(0.1, 0.3),
+                period_steps: rng.uniform(8.0, 60.0),
+                phase: rng.uniform(0.0, std::f64::consts::TAU),
+            },
+            2 => {
+                let from = rng.uniform(0.08, 0.25);
+                PatternKind::Ramp {
+                    from,
+                    to: rng.uniform(0.55, 0.98),
+                    len_steps: rng.uniform(30.0, 200.0),
+                }
+            }
+            3 => PatternKind::Bursty {
+                base: rng.uniform(0.08, 0.3),
+                spike: rng.uniform(0.8, 0.98),
+                spike_every: rng.int_range(20, 80) as u64,
+                spike_len: rng.int_range(3, 9) as u64,
+            },
+            _ => PatternKind::QuasiWalk {
+                center: rng.uniform(0.25, 0.5),
+                swing: rng.uniform(0.1, 0.3),
+            },
+        };
+        Pattern::new(kind, rng.next_u64(), rng.uniform(0.03, 0.10))
+    }
+
+    /// Utilization fraction at integer step (monitor-interval granularity).
+    /// Always in (0.01, 1.0].
+    pub fn at_step(&self, step: u64) -> f64 {
+        let base = match &self.kind {
+            PatternKind::Constant { level } => *level,
+            PatternKind::Periodic { base, amp, period_steps, phase } => {
+                base + amp
+                    * (std::f64::consts::TAU * step as f64 / period_steps + phase).sin()
+            }
+            PatternKind::Ramp { from, to, len_steps } => {
+                let frac = (step as f64 / len_steps).min(1.0);
+                from + (to - from) * frac
+            }
+            PatternKind::Bursty { base, spike, spike_every, spike_len } => {
+                // deterministic spike onset: hash decides whether a spike
+                // train starts at each multiple of spike_every
+                let cycle = step / spike_every;
+                let in_cycle = step % spike_every;
+                let fires = hash01(self.seed ^ 0xB0057, cycle) < 0.6;
+                if fires && in_cycle < *spike_len {
+                    *spike
+                } else {
+                    *base
+                }
+            }
+            PatternKind::QuasiWalk { center, swing } => {
+                // band-limited noise: 3 incommensurate slow sinusoids with
+                // hashed phases + a small hashed step component
+                let s = step as f64;
+                let p1 = hash01(self.seed, 1) * std::f64::consts::TAU;
+                let p2 = hash01(self.seed, 2) * std::f64::consts::TAU;
+                let p3 = hash01(self.seed, 3) * std::f64::consts::TAU;
+                center
+                    + swing
+                        * (0.5 * (s / 23.0 + p1).sin()
+                            + 0.3 * (s / 7.3 + p2).sin()
+                            + 0.2 * (s / 41.0 + p3).sin())
+            }
+        };
+        let noisy = base * (1.0 + self.noise_amp * hashn(self.noise_seed, step));
+        noisy.clamp(0.01, 1.0)
+    }
+
+    /// Utilization at a continuous sim time given the monitor interval.
+    pub fn at_time(&self, t: f64, interval_s: f64) -> f64 {
+        self.at_step((t / interval_s).max(0.0) as u64)
+    }
+
+    /// Peak utilization over steps [from, to] inclusive — what the oracle
+    /// forecaster reports as the next-interval peak demand.
+    pub fn peak_over(&self, from: u64, to: u64) -> f64 {
+        (from..=to).map(|s| self.at_step(s)).fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn every_kind() -> Vec<Pattern> {
+        vec![
+            Pattern::new(PatternKind::Constant { level: 0.4 }, 1, 0.02),
+            Pattern::new(
+                PatternKind::Periodic { base: 0.4, amp: 0.2, period_steps: 20.0, phase: 0.3 },
+                2,
+                0.02,
+            ),
+            Pattern::new(PatternKind::Ramp { from: 0.1, to: 0.9, len_steps: 50.0 }, 3, 0.02),
+            Pattern::new(
+                PatternKind::Bursty { base: 0.2, spike: 0.95, spike_every: 30, spike_len: 3 },
+                4,
+                0.02,
+            ),
+            Pattern::new(PatternKind::QuasiWalk { center: 0.4, swing: 0.2 }, 5, 0.02),
+        ]
+    }
+
+    #[test]
+    fn deterministic_and_bounded() {
+        for p in every_kind() {
+            for step in 0..500 {
+                let a = p.at_step(step);
+                let b = p.at_step(step);
+                assert_eq!(a, b, "pure function violated");
+                assert!((0.01..=1.0).contains(&a), "{a} out of range");
+            }
+        }
+    }
+
+    #[test]
+    fn ramp_monotone_on_average() {
+        let p = Pattern::new(PatternKind::Ramp { from: 0.1, to: 0.9, len_steps: 100.0 }, 9, 0.0);
+        assert!(p.at_step(0) < p.at_step(50));
+        assert!(p.at_step(50) < p.at_step(100));
+        // saturates
+        assert!((p.at_step(100) - p.at_step(400)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bursty_has_spikes_and_base() {
+        let p = Pattern::new(
+            PatternKind::Bursty { base: 0.2, spike: 0.95, spike_every: 25, spike_len: 3 },
+            11,
+            0.0,
+        );
+        let vals: Vec<f64> = (0..500).map(|s| p.at_step(s)).collect();
+        let spikes = vals.iter().filter(|&&v| v > 0.8).count();
+        let bases = vals.iter().filter(|&&v| v < 0.3).count();
+        assert!(spikes > 10, "spikes {spikes}");
+        assert!(bases > 300, "bases {bases}");
+    }
+
+    #[test]
+    fn peak_over_sees_spike() {
+        let p = Pattern::new(
+            PatternKind::Bursty { base: 0.2, spike: 0.9, spike_every: 10, spike_len: 2 },
+            13,
+            0.0,
+        );
+        // peak across several full cycles must reach the spike (hash fires
+        // with p=0.6 per cycle, 10 cycles -> virtually certain)
+        assert!(p.peak_over(0, 100) > 0.8);
+    }
+
+    #[test]
+    fn sampled_mixture_means_are_trace_like() {
+        // Reiss et al.: most utilization sits well below reservation.
+        let mut rng = Pcg::seeded(17);
+        let mut total = 0.0;
+        let mut count = 0.0;
+        for _ in 0..200 {
+            let p = Pattern::sample(&mut rng, true);
+            for s in 0..100 {
+                total += p.at_step(s);
+                count += 1.0;
+            }
+        }
+        let mean = total / count;
+        assert!((0.2..0.6).contains(&mean), "mixture mean {mean}");
+    }
+
+    #[test]
+    fn at_time_maps_steps() {
+        let p = Pattern::new(PatternKind::Constant { level: 0.5 }, 19, 0.02);
+        assert_eq!(p.at_time(120.0, 60.0), p.at_step(2));
+        assert_eq!(p.at_time(0.0, 60.0), p.at_step(0));
+    }
+}

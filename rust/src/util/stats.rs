@@ -1,0 +1,211 @@
+//! Descriptive statistics: summaries, percentiles, boxplot stats — the
+//! primitives every experiment harness uses to print the paper's figures.
+
+/// Five-number boxplot summary plus mean (the paper's red triangle).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoxStats {
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub n: usize,
+}
+
+impl BoxStats {
+    /// Render as a compact single-line summary.
+    pub fn line(&self) -> String {
+        format!(
+            "min={:<10.3} q1={:<10.3} med={:<10.3} q3={:<10.3} max={:<10.3} mean={:<10.3} n={}",
+            self.min, self.q1, self.median, self.q3, self.max, self.mean, self.n
+        )
+    }
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Linear-interpolated percentile, p in [0, 100]. Sorts a copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile over pre-sorted data (no copy).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    let n = sorted.len();
+    if n == 0 {
+        return 0.0;
+    }
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = (p / 100.0).clamp(0.0, 1.0) * (n - 1) as f64;
+    let i = pos.floor() as usize;
+    let frac = pos - i as f64;
+    if i + 1 >= n {
+        sorted[n - 1]
+    } else {
+        sorted[i] * (1.0 - frac) + sorted[i + 1] * frac
+    }
+}
+
+/// Full boxplot summary of a sample.
+pub fn boxstats(xs: &[f64]) -> BoxStats {
+    if xs.is_empty() {
+        return BoxStats { min: 0.0, q1: 0.0, median: 0.0, q3: 0.0, max: 0.0, mean: 0.0, n: 0 };
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BoxStats {
+        min: v[0],
+        q1: percentile_sorted(&v, 25.0),
+        median: percentile_sorted(&v, 50.0),
+        q3: percentile_sorted(&v, 75.0),
+        max: v[v.len() - 1],
+        mean: mean(&v),
+        n: v.len(),
+    }
+}
+
+/// Mean absolute error between paired slices.
+pub fn mae(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f64>() / a.len() as f64
+}
+
+/// Root mean squared error between paired slices.
+pub fn rmse(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    (a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>()
+        / a.len() as f64)
+        .sqrt()
+}
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    /// Fresh accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold in one observation.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    /// Count of observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Running mean.
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Running population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Running standard deviation.
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn boxstats_sane() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let b = boxstats(&xs);
+        assert_eq!(b.min, 1.0);
+        assert_eq!(b.max, 100.0);
+        assert!((b.median - 50.5).abs() < 1e-9);
+        assert!((b.mean - 50.5).abs() < 1e-9);
+        assert_eq!(b.n, 100);
+    }
+
+    #[test]
+    fn empty_inputs_do_not_panic() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(boxstats(&[]).n, 0);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64).sin()).collect();
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.variance() - variance(&xs)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn error_metrics() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [2.0, 2.0, 1.0];
+        assert!((mae(&a, &b) - 1.0).abs() < 1e-12);
+        assert!((rmse(&a, &b) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+}

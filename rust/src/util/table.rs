@@ -1,0 +1,146 @@
+//! ASCII rendering of the paper's figures: aligned tables, boxplot rows,
+//! and the Fig. 4 heat maps ("bright cells are better").
+
+use crate::util::stats::BoxStats;
+
+/// Simple aligned-column table builder.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a header row.
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Render with column alignment.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:<w$}", cells[i], w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// Render a labeled boxplot row (the paper's Figs. 3 & 5 are boxplots).
+pub fn boxplot_row(label: &str, b: &BoxStats) -> String {
+    format!("{label:<26} {}", b.line())
+}
+
+/// Render a heat map like Fig. 4: rows = K2 values, cols = K1 values.
+/// `brighter_is_better` controls the shade ramp direction; values are
+/// shaded relative to the min/max of the provided grid.
+pub fn heatmap(
+    title: &str,
+    col_labels: &[String],
+    row_labels: &[String],
+    values: &[Vec<f64>],
+    lower_is_better: bool,
+) -> String {
+    const SHADES: [&str; 5] = ["█", "▓", "▒", "░", " "]; // dark -> bright
+    let flat: Vec<f64> = values.iter().flatten().copied().filter(|v| v.is_finite()).collect();
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in &flat {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if !lo.is_finite() || hi <= lo {
+        lo = 0.0;
+        hi = lo + 1.0;
+    }
+    let mut out = format!("{title}\n");
+    out.push_str(&format!("{:>8} ", ""));
+    for c in col_labels {
+        out.push_str(&format!("{c:>12} "));
+    }
+    out.push('\n');
+    for (ri, r) in row_labels.iter().enumerate() {
+        out.push_str(&format!("{r:>8} "));
+        for v in &values[ri] {
+            let norm = ((v - lo) / (hi - lo)).clamp(0.0, 1.0);
+            // "bright cells are better": map goodness -> brightness
+            let goodness = if lower_is_better { 1.0 - norm } else { norm };
+            let shade = SHADES[(goodness * (SHADES.len() - 1) as f64).round() as usize];
+            out.push_str(&format!("{:>9.3} {shade}{shade} ", v));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::boxstats;
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "2.5".into()]);
+        let r = t.render();
+        assert!(r.contains("long-name"));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        Table::new(&["a", "b"]).row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn heatmap_renders_all_cells() {
+        let hm = heatmap(
+            "t",
+            &["0".into(), "5".into()],
+            &["k2=0".into(), "k2=1".into()],
+            &[vec![1.0, 2.0], vec![3.0, 4.0]],
+            true,
+        );
+        assert_eq!(hm.lines().count(), 4);
+        assert!(hm.contains("1.000"));
+        assert!(hm.contains("4.000"));
+    }
+
+    #[test]
+    fn boxplot_row_contains_stats() {
+        let b = boxstats(&[1.0, 2.0, 3.0]);
+        let s = boxplot_row("demo", &b);
+        assert!(s.contains("med="));
+        assert!(s.starts_with("demo"));
+    }
+}

@@ -1,0 +1,264 @@
+//! Application / component model and the trace-driven workload generator.
+//!
+//! An *application* (§1) is a distributed-framework instance: a set of
+//! **core** components (compulsory — e.g. Spark controller/master/worker)
+//! plus optional **elastic** components that accelerate it (§3, [42]).
+//! Rigid apps (e.g. a single TensorFlow trainer) have only core
+//! components; the paper's workloads are 60% elastic / 40% rigid.
+
+use crate::config::WorkloadConfig;
+use crate::trace::google::TraceDistributions;
+use crate::trace::patterns::Pattern;
+use crate::util::rng::Pcg;
+
+/// Identifier types (indices into the simulation's arenas).
+pub type AppId = usize;
+pub type ComponentId = usize;
+pub type HostId = usize;
+
+/// Elastic components accelerate an app: progress rate is
+/// `1 + SPEEDUP * active_elastic / total_elastic` (work units per second).
+pub const ELASTIC_SPEEDUP: f64 = 0.8;
+
+/// One schedulable unit (a container in the prototype).
+#[derive(Debug, Clone)]
+pub struct Component {
+    pub id: ComponentId,
+    pub app: AppId,
+    pub is_core: bool,
+    /// Reserved CPU cores.
+    pub cpu_req: f64,
+    /// Reserved memory (GB).
+    pub mem_req: f64,
+    /// Deterministic CPU utilization pattern (fraction of cpu_req).
+    pub cpu_pattern: Pattern,
+    /// Deterministic memory utilization pattern (fraction of mem_req).
+    pub mem_pattern: Pattern,
+}
+
+/// Lifecycle state of an application.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AppState {
+    /// Waiting in the scheduler queue.
+    Queued,
+    /// Running; `since` is the start of the current attempt.
+    Running { since: f64 },
+    /// Completed successfully at the given time.
+    Finished { at: f64 },
+}
+
+/// An application: components + work model + bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Application {
+    pub id: AppId,
+    /// Original submission time — FIFO priority even across resubmits.
+    pub submit_time: f64,
+    pub components: Vec<Component>,
+    /// Total work units; with all elastic components active the app
+    /// completes in `base_runtime` seconds.
+    pub total_work: f64,
+    pub state: AppState,
+    /// Work units still to do in the current attempt.
+    pub remaining_work: f64,
+    /// Last time `remaining_work` was brought up to date.
+    pub last_progress_at: f64,
+    /// Number of OOM failures suffered (paper: shaping gives up after a
+    /// threshold).
+    pub failures: u32,
+    /// Number of controlled (pessimistic) full preemptions.
+    pub preemptions: u32,
+    /// True once the shaper stops shaping this app (too many failures).
+    pub shaping_disabled: bool,
+}
+
+impl Application {
+    /// Number of elastic components.
+    pub fn elastic_count(&self) -> usize {
+        self.components.iter().filter(|c| !c.is_core).count()
+    }
+
+    /// True if the app has any elastic components.
+    pub fn is_elastic(&self) -> bool {
+        self.elastic_count() > 0
+    }
+
+    /// Progress rate (work units / s) given the number of active elastic
+    /// components.
+    pub fn rate(&self, active_elastic: usize) -> f64 {
+        let total = self.elastic_count();
+        if total == 0 {
+            1.0
+        } else {
+            1.0 + ELASTIC_SPEEDUP * active_elastic as f64 / total as f64
+        }
+    }
+
+    /// Full-speed runtime in seconds (all elastic components active).
+    pub fn full_speed_runtime(&self) -> f64 {
+        self.total_work / self.rate(self.elastic_count())
+    }
+}
+
+/// Generated workload: applications sorted by submit time.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub apps: Vec<Application>,
+    /// Total number of components across all apps.
+    pub num_components: usize,
+}
+
+/// Generate a seeded workload per the config + trace distributions.
+pub fn generate(cfg: &WorkloadConfig, seed: u64) -> Workload {
+    let mut rng = Pcg::seeded(seed);
+    let mut dists = TraceDistributions::fit(cfg, &mut rng);
+    let mut apps = Vec::with_capacity(cfg.num_apps);
+    let mut t = 0.0;
+    let mut next_component = 0;
+    for app_id in 0..cfg.num_apps {
+        t += dists.interarrival_s.sample(&mut rng);
+        let elastic = rng.chance(cfg.elastic_fraction);
+        // cores: rigid apps have 1-3 components; elastic frameworks have
+        // controller+master+worker (3) like the paper's Spark template
+        let n_core = if elastic { 3 } else { rng.int_range(1, 3) as usize };
+        let n_elastic = if elastic {
+            // log-uniform in [1, max_elastic]
+            let lo = 1.0f64;
+            let hi = cfg.max_elastic.max(2) as f64;
+            (lo * (hi / lo).powf(rng.f64())).round() as usize
+        } else {
+            0
+        };
+        // Components of one application share their utilization pattern
+        // class and phase (the stages of a distributed job drive all its
+        // workers together); only the observation noise differs. This
+        // correlation is what makes under-provisioning dangerous: a whole
+        // application ramps or spikes at once.
+        let mut arng = rng.fork(app_id as u64);
+        let app_cpu_pattern = Pattern::sample(&mut arng, false);
+        let app_mem_pattern = Pattern::sample(&mut arng, true);
+        let mut components = Vec::with_capacity(n_core + n_elastic);
+        for k in 0..n_core + n_elastic {
+            let mut crng = rng.fork(next_component as u64);
+            components.push(Component {
+                id: next_component,
+                app: app_id,
+                is_core: k < n_core,
+                cpu_req: dists.cpus.sample(&mut rng),
+                mem_req: dists.mem_gb.sample(&mut rng),
+                cpu_pattern: app_cpu_pattern.with_noise_seed(crng.next_u64()),
+                mem_pattern: app_mem_pattern.with_noise_seed(crng.next_u64()),
+            });
+            next_component += 1;
+        }
+        let base_runtime = dists.runtime_s.sample(&mut rng);
+        // total work calibrated so the *full-speed* runtime equals the
+        // sampled runtime
+        let tmp = Application {
+            id: app_id,
+            submit_time: t,
+            components,
+            total_work: 0.0,
+            state: AppState::Queued,
+            remaining_work: 0.0,
+            last_progress_at: 0.0,
+            failures: 0,
+            preemptions: 0,
+            shaping_disabled: false,
+        };
+        let full_rate = tmp.rate(tmp.elastic_count());
+        let total_work = base_runtime * full_rate;
+        let mut app = tmp;
+        app.total_work = total_work;
+        app.remaining_work = total_work;
+        apps.push(app);
+    }
+    Workload { apps, num_components: next_component }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn wl() -> Workload {
+        generate(&SimConfig::small().workload, 7)
+    }
+
+    #[test]
+    fn generates_requested_count_sorted() {
+        let w = wl();
+        assert_eq!(w.apps.len(), SimConfig::small().workload.num_apps);
+        for pair in w.apps.windows(2) {
+            assert!(pair[0].submit_time <= pair[1].submit_time);
+        }
+    }
+
+    #[test]
+    fn elastic_fraction_approximate() {
+        let w = wl();
+        let elastic = w.apps.iter().filter(|a| a.is_elastic()).count();
+        let frac = elastic as f64 / w.apps.len() as f64;
+        assert!((frac - 0.6).abs() < 0.12, "elastic fraction {frac}");
+    }
+
+    #[test]
+    fn elastic_apps_have_three_cores() {
+        let w = wl();
+        for a in w.apps.iter().filter(|a| a.is_elastic()) {
+            assert_eq!(a.components.iter().filter(|c| c.is_core).count(), 3);
+        }
+        for a in w.apps.iter().filter(|a| !a.is_elastic()) {
+            let n = a.components.len();
+            assert!((1..=3).contains(&n));
+            assert!(a.components.iter().all(|c| c.is_core));
+        }
+    }
+
+    #[test]
+    fn component_ids_are_unique_and_dense() {
+        let w = wl();
+        let mut seen = vec![false; w.num_components];
+        for a in &w.apps {
+            for c in &a.components {
+                assert!(!seen[c.id], "duplicate component id");
+                seen[c.id] = true;
+                assert_eq!(c.app, a.id);
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn rate_model() {
+        let w = wl();
+        let a = w.apps.iter().find(|a| a.elastic_count() >= 2).unwrap();
+        assert_eq!(a.rate(0), 1.0);
+        let full = a.rate(a.elastic_count());
+        assert!((full - (1.0 + ELASTIC_SPEEDUP)).abs() < 1e-9);
+        // full-speed runtime equals sampled base runtime by calibration
+        assert!((a.total_work / full - a.full_speed_runtime()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let w1 = generate(&SimConfig::small().workload, 99);
+        let w2 = generate(&SimConfig::small().workload, 99);
+        assert_eq!(w1.apps.len(), w2.apps.len());
+        for (a, b) in w1.apps.iter().zip(&w2.apps) {
+            assert_eq!(a.submit_time, b.submit_time);
+            assert_eq!(a.total_work, b.total_work);
+            assert_eq!(a.components.len(), b.components.len());
+        }
+    }
+
+    #[test]
+    fn resource_requests_in_range() {
+        let w = wl();
+        for a in &w.apps {
+            for c in &a.components {
+                assert!((0.1..=6.0).contains(&c.cpu_req));
+                assert!((0.004..=64.0).contains(&c.mem_req));
+            }
+        }
+    }
+}

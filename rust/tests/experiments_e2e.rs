@@ -1,0 +1,91 @@
+//! Experiment harness end-to-end: each figure harness runs at tiny scale
+//! and produces structurally complete, shape-consistent output.
+
+use zoe_shaper::config::{ForecasterKind, SimConfig};
+use zoe_shaper::experiments::{fig2, fig3, fig4};
+
+fn tiny() -> SimConfig {
+    let mut cfg = SimConfig::small();
+    cfg.workload.num_apps = 60;
+    cfg.cluster.hosts = 3;
+    cfg
+}
+
+#[test]
+fn fig2_harness_end_to_end() {
+    let params = fig2::Fig2Params {
+        num_series: 12,
+        series_len: 60,
+        histories: vec![10],
+        seed: 2,
+        use_pjrt: false,
+    };
+    let res = fig2::run(&params, None).unwrap();
+    assert_eq!(res.len(), 3); // ARIMA + GP-Exp + GP-RBF at h=10
+    let text = fig2::render(&res);
+    for label in ["ARIMA", "GP-Exp-h10", "GP-RBF-h10"] {
+        assert!(text.contains(label), "missing {label} in:\n{text}");
+    }
+}
+
+#[test]
+fn fig3_harness_end_to_end() {
+    let reports = fig3::run(&tiny()).unwrap();
+    assert_eq!(reports.len(), 3);
+    let text = fig3::render(&reports);
+    assert!(text.contains("memory slack"));
+    assert!(text.contains("turnaround improvement"));
+    // all three arms completed the whole workload
+    for r in &reports {
+        assert_eq!(r.completed, 60, "{}", r.summary());
+    }
+}
+
+#[test]
+fn fig4_harness_shapes_and_degeneracy() {
+    let sweep = fig4::run(
+        &tiny(),
+        ForecasterKind::GpNative,
+        None,
+        &[0.05, 1.0],
+        &[0.0, 3.0],
+    )
+    .unwrap();
+    assert_eq!(sweep.cells.len(), 2);
+    assert_eq!(sweep.cells[0].len(), 2);
+    // K1=100%: no failures, ratio near 1 (baseline-degenerate)
+    for row in &sweep.cells {
+        let k1_full = &row[1];
+        assert_eq!(k1_full.failed_fraction, 0.0);
+        assert!(
+            (k1_full.turnaround_ratio - 1.0).abs() < 0.4,
+            "K1=1 ratio {}",
+            k1_full.turnaround_ratio
+        );
+    }
+    // shaped cells (K1=5%) improve turnaround over baseline
+    for row in &sweep.cells {
+        assert!(row[0].turnaround_ratio > 1.0, "ratio {}", row[0].turnaround_ratio);
+    }
+    let text = fig4::render(&sweep);
+    assert!(text.contains("turnaround ratio"));
+    assert!(text.contains("failed applications"));
+    assert!(fig4::best_cell(&sweep, 1.0).is_some());
+}
+
+#[test]
+fn fig4_gp_uncertainty_reduces_failures_vs_k2_zero() {
+    // the paper's central Fig. 4b observation: for the GP, raising K2
+    // (using uncertainty) must not increase failures — typically reduces
+    // them — at fixed small K1.
+    let mut cfg = tiny();
+    cfg.workload.num_apps = 80;
+    let sweep =
+        fig4::run(&cfg, ForecasterKind::GpNative, None, &[0.05], &[0.0, 3.0]).unwrap();
+    let f_k2_0 = sweep.cells[0][0].failed_fraction;
+    let f_k2_3 = sweep.cells[1][0].failed_fraction;
+    assert!(
+        f_k2_3 <= f_k2_0 + 1e-9,
+        "K2=3 failures {f_k2_3} vs K2=0 {f_k2_0}"
+    );
+}

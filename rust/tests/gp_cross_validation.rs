@@ -1,0 +1,125 @@
+//! Cross-language validation: the native-Rust GP (f64) and the AOT
+//! JAX/Pallas artifact (f32 via PJRT) must agree on the same inputs —
+//! the strongest signal that L1/L2/L3 implement the same math.
+
+use std::sync::Arc;
+
+use zoe_shaper::config::KernelKind;
+use zoe_shaper::forecast::gp_native::{gp_posterior, GpNative, NOISE};
+use zoe_shaper::forecast::gp_pjrt::GpPjrt;
+use zoe_shaper::forecast::{build_patterns, Forecaster};
+use zoe_shaper::runtime::{GpInputs, Runtime};
+use zoe_shaper::trace::patterns::Pattern;
+use zoe_shaper::util::rng::Pcg;
+
+fn runtime_or_skip() -> Option<Arc<Runtime>> {
+    match Runtime::from_default_dir() {
+        Ok(rt) => Some(Arc::new(rt)),
+        Err(e) => {
+            eprintln!("skipping cross-validation: {e:#}");
+            None
+        }
+    }
+}
+
+fn corpus(n: usize, len: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Pcg::seeded(seed);
+    (0..n)
+        .map(|_| {
+            let p = Pattern::sample(&mut rng, true);
+            (0..len as u64).map(|s| p.at_step(s)).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn posterior_native_vs_pjrt_on_raw_inputs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for kind in [KernelKind::Exp, KernelKind::Rbf] {
+        for h in [10usize, 20] {
+            let exe = rt.load(kind, h, 1).unwrap();
+            for (i, series) in corpus(6, 2 * h + 5, 42 + h as u64).iter().enumerate() {
+                let (x, y, q, _) = build_patterns(series, h);
+                // native f64
+                let native =
+                    gp_posterior(kind, &x, &y, &q, h + 1, 1.0, NOISE).unwrap();
+                // artifact f32
+                let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+                let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+                let qf: Vec<f32> = q.iter().map(|&v| v as f32).collect();
+                let out = rt
+                    .run_gp(
+                        &exe,
+                        &GpInputs {
+                            x_train: &xf,
+                            y_train: &yf,
+                            x_query: &qf,
+                            lengthscale: &[1.0],
+                            noise: &[NOISE as f32],
+                        },
+                    )
+                    .unwrap();
+                let tol = 2e-3;
+                assert!(
+                    (out.means[0] as f64 - native.mean).abs() < tol,
+                    "{kind:?} h{h} series{i}: mean pjrt {} vs native {}",
+                    out.means[0],
+                    native.mean
+                );
+                assert!(
+                    (out.vars[0] as f64 - native.var).abs() < tol,
+                    "{kind:?} h{h} series{i}: var pjrt {} vs native {}",
+                    out.vars[0],
+                    native.var
+                );
+                assert!(
+                    (out.lmls[0] as f64 - native.lml).abs() < 0.05 * native.lml.abs().max(1.0),
+                    "{kind:?} h{h} series{i}: lml pjrt {} vs native {}",
+                    out.lmls[0],
+                    native.lml
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn forecaster_outputs_agree_end_to_end() {
+    // full Forecaster pipeline: standardization + evidence grid + batching
+    let Some(rt) = runtime_or_skip() else { return };
+    let h = 10;
+    let series = corpus(40, 35, 7); // > one slab to exercise chunking
+    let mut native = GpNative::new(KernelKind::Exp, h);
+    let mut pjrt = GpPjrt::new(rt, KernelKind::Exp, h, 32).unwrap();
+    let fn_ = native.forecast(&series);
+    let fp = pjrt.forecast(&series);
+    assert_eq!(fn_.len(), fp.len());
+    for (i, (a, b)) in fn_.iter().zip(&fp).enumerate() {
+        assert!(
+            (a.mean - b.mean).abs() < 5e-3 * a.mean.abs().max(1.0),
+            "series {i}: native mean {} vs pjrt {}",
+            a.mean,
+            b.mean
+        );
+        assert!(
+            (a.var - b.var).abs() < 5e-3,
+            "series {i}: native var {} vs pjrt {}",
+            a.var,
+            b.var
+        );
+    }
+}
+
+#[test]
+fn pjrt_single_vs_batch_paths_agree() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let h = 10;
+    let series = corpus(5, 30, 9);
+    let mut gp = GpPjrt::new(rt, KernelKind::Rbf, h, 32).unwrap();
+    let batch = gp.forecast_batch(&series).unwrap();
+    for (i, s) in series.iter().enumerate() {
+        let single = gp.forecast_one(s).unwrap();
+        assert!((single.mean - batch[i].mean).abs() < 1e-4, "series {i} mean");
+        assert!((single.var - batch[i].var).abs() < 1e-4, "series {i} var");
+    }
+}

@@ -1,0 +1,149 @@
+//! Runtime integration: load every AOT artifact, compile on the PJRT CPU
+//! client, execute, and sanity-check outputs. Requires `make artifacts`.
+
+use zoe_shaper::config::KernelKind;
+use zoe_shaper::forecast::build_patterns;
+use zoe_shaper::runtime::{GpInputs, Runtime};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::from_default_dir() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping runtime tests: {e:#}");
+            None
+        }
+    }
+}
+
+fn demo_series(len: usize) -> Vec<f64> {
+    (0..len)
+        .map(|i| 0.4 + 0.2 * (i as f64 / 5.0).sin() + 0.01 * ((i * 37 % 11) as f64 / 11.0))
+        .collect()
+}
+
+#[test]
+fn manifest_covers_all_variants() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for kind in [KernelKind::Exp, KernelKind::Rbf] {
+        for h in [10usize, 20, 40] {
+            assert!(rt.manifest().find(kind, h, 1).is_some(), "missing {kind:?} h{h} b1");
+            assert!(rt.manifest().find(kind, h, 32).is_some(), "missing {kind:?} h{h} b32");
+        }
+    }
+}
+
+#[test]
+fn single_artifact_executes_with_sane_outputs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for kind in [KernelKind::Exp, KernelKind::Rbf] {
+        let h = 10;
+        let exe = rt.load(kind, h, 1).unwrap();
+        let (x, y, q, _std) = build_patterns(&demo_series(2 * h), h);
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+        let qf: Vec<f32> = q.iter().map(|&v| v as f32).collect();
+        let out = rt
+            .run_gp(
+                &exe,
+                &GpInputs {
+                    x_train: &xf,
+                    y_train: &yf,
+                    x_query: &qf,
+                    lengthscale: &[1.0],
+                    noise: &[0.05],
+                },
+            )
+            .unwrap();
+        assert_eq!(out.means.len(), 1);
+        assert!(out.means[0].is_finite());
+        assert!(out.vars[0] >= 0.0 && out.vars[0] <= 1.0 + 1e-4, "var {}", out.vars[0]);
+        assert!(out.lmls[0].is_finite());
+    }
+}
+
+#[test]
+fn batched_artifact_matches_single() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let h = 10;
+    let b = 32;
+    let exe1 = rt.load(KernelKind::Exp, h, 1).unwrap();
+    let exeb = rt.load(KernelKind::Exp, h, b).unwrap();
+    let n = h;
+    let p = h + 1;
+    // build B different series
+    let mut xs = vec![0f32; b * n * p];
+    let mut ys = vec![0f32; b * n];
+    let mut qs = vec![0f32; b * p];
+    let mut singles = Vec::new();
+    for i in 0..b {
+        let series: Vec<f64> =
+            demo_series(2 * h).iter().map(|v| v + 0.005 * i as f64).collect();
+        let (x, y, q, _) = build_patterns(&series, h);
+        for (j, &v) in x.iter().enumerate() {
+            xs[i * n * p + j] = v as f32;
+        }
+        for (j, &v) in y.iter().enumerate() {
+            ys[i * n + j] = v as f32;
+        }
+        for (j, &v) in q.iter().enumerate() {
+            qs[i * p + j] = v as f32;
+        }
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+        let qf: Vec<f32> = q.iter().map(|&v| v as f32).collect();
+        let o = rt
+            .run_gp(
+                &exe1,
+                &GpInputs {
+                    x_train: &xf,
+                    y_train: &yf,
+                    x_query: &qf,
+                    lengthscale: &[1.0],
+                    noise: &[0.05],
+                },
+            )
+            .unwrap();
+        singles.push((o.means[0], o.vars[0], o.lmls[0]));
+    }
+    let ls = vec![1.0f32; b];
+    let nz = vec![0.05f32; b];
+    let ob = rt
+        .run_gp(
+            &exeb,
+            &GpInputs { x_train: &xs, y_train: &ys, x_query: &qs, lengthscale: &ls, noise: &nz },
+        )
+        .unwrap();
+    assert_eq!(ob.means.len(), b);
+    for i in 0..b {
+        assert!((ob.means[i] - singles[i].0).abs() < 1e-4, "mean[{i}]");
+        assert!((ob.vars[i] - singles[i].1).abs() < 1e-4, "var[{i}]");
+        assert!((ob.lmls[i] - singles[i].2).abs() < 1e-2, "lml[{i}]");
+    }
+}
+
+#[test]
+fn shape_mismatch_rejected() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = rt.load(KernelKind::Exp, 10, 1).unwrap();
+    let err = rt
+        .run_gp(
+            &exe,
+            &GpInputs {
+                x_train: &[0.0; 10],
+                y_train: &[0.0; 10],
+                x_query: &[0.0; 11],
+                lengthscale: &[1.0],
+                noise: &[0.05],
+            },
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("shape mismatch"));
+}
+
+#[test]
+fn executable_cache_returns_same_instance() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let a = rt.load(KernelKind::Exp, 10, 1).unwrap();
+    let b = rt.load(KernelKind::Exp, 10, 1).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+}

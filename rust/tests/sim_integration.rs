@@ -1,0 +1,153 @@
+//! End-to-end simulation integration: full runs at reduced scale checking
+//! the system-level invariants and the paper's qualitative claims.
+
+use zoe_shaper::config::{ForecasterKind, Policy, SimConfig};
+use zoe_shaper::sim::engine::run_simulation;
+
+fn base_cfg() -> SimConfig {
+    let mut cfg = SimConfig::small();
+    cfg.workload.num_apps = 120;
+    cfg.cluster.hosts = 4;
+    cfg
+}
+
+#[test]
+fn all_apps_complete_under_every_policy() {
+    for policy in [Policy::Baseline, Policy::Optimistic, Policy::Pessimistic] {
+        let mut cfg = base_cfg();
+        cfg.shaper.policy = policy;
+        cfg.forecast.kind = ForecasterKind::Oracle;
+        let r = run_simulation(&cfg, None, policy.name()).unwrap();
+        assert_eq!(r.completed, 120, "{}: {}", policy.name(), r.summary());
+    }
+}
+
+#[test]
+fn headline_shape_oracle() {
+    // the Fig. 3 acceptance criteria (DESIGN.md §4) at integration scale
+    let mut cfg = base_cfg();
+    cfg.shaper.policy = Policy::Baseline;
+    cfg.forecast.kind = ForecasterKind::Oracle;
+    let base = run_simulation(&cfg, None, "baseline").unwrap();
+
+    cfg.shaper.policy = Policy::Pessimistic;
+    let pess = run_simulation(&cfg, None, "pessimistic").unwrap();
+
+    cfg.shaper.policy = Policy::Optimistic;
+    let opt = run_simulation(&cfg, None, "optimistic").unwrap();
+
+    // slack: pessimistic much lower than baseline
+    assert!(
+        pess.mem_slack.mean < base.mem_slack.mean * 0.6,
+        "slack: pess {} vs base {}",
+        pess.mem_slack.mean,
+        base.mem_slack.mean
+    );
+    // turnaround: pessimistic substantially better (median)
+    assert!(
+        pess.turnaround.median < base.turnaround.median * 0.7,
+        "turnaround: pess {} vs base {}",
+        pess.turnaround.median,
+        base.turnaround.median
+    );
+    // failures: baseline and pessimistic zero; optimistic may fail
+    assert_eq!(base.failed_app_fraction, 0.0);
+    assert_eq!(pess.failed_app_fraction, 0.0, "{}", pess.summary());
+    assert!(opt.failed_app_fraction >= 0.0); // often > 0; never negative
+    // optimistic must never do controlled preemption
+    assert_eq!(opt.app_preemptions, 0);
+    assert_eq!(opt.elastic_preemptions, 0);
+}
+
+#[test]
+fn forecast_models_keep_failures_moderate_with_beta() {
+    // paper Fig. 4: with K1=5%, K2=3 and a real forecaster, failures stay
+    // far below the no-buffer case
+    let mut cfg = base_cfg();
+    cfg.workload.num_apps = 80;
+    cfg.shaper.policy = Policy::Pessimistic;
+    cfg.forecast.kind = ForecasterKind::GpNative;
+    cfg.shaper.k1 = 0.05;
+    cfg.shaper.k2 = 3.0;
+    let buffered = run_simulation(&cfg, None, "buffered").unwrap();
+    cfg.shaper.k1 = 0.0;
+    cfg.shaper.k2 = 0.0;
+    let bare = run_simulation(&cfg, None, "bare").unwrap();
+    assert!(
+        buffered.failed_app_fraction <= bare.failed_app_fraction,
+        "beta should not increase failures: {} vs {}",
+        buffered.failed_app_fraction,
+        bare.failed_app_fraction
+    );
+    assert_eq!(buffered.completed, 80);
+}
+
+#[test]
+fn k1_one_degenerates_to_baseline_behavior() {
+    let mut cfg = base_cfg();
+    cfg.workload.num_apps = 60;
+    cfg.shaper.policy = Policy::Pessimistic;
+    cfg.forecast.kind = ForecasterKind::Oracle;
+    cfg.shaper.k1 = 1.0;
+    let degenerate = run_simulation(&cfg, None, "k1=1").unwrap();
+    cfg.shaper.policy = Policy::Baseline;
+    let base = run_simulation(&cfg, None, "baseline").unwrap();
+    // K1=100% means desired allocation = reservation: no failures and no
+    // preemptions, slack equals baseline's
+    assert_eq!(degenerate.failed_app_fraction, 0.0);
+    assert_eq!(degenerate.app_preemptions, 0);
+    assert!(
+        (degenerate.mem_slack.mean - base.mem_slack.mean).abs() < 0.05,
+        "{} vs {}",
+        degenerate.mem_slack.mean,
+        base.mem_slack.mean
+    );
+}
+
+#[test]
+fn wasted_work_accounted_only_when_preempting() {
+    let mut cfg = base_cfg();
+    cfg.workload.num_apps = 60;
+    cfg.shaper.policy = Policy::Baseline;
+    cfg.forecast.kind = ForecasterKind::Oracle;
+    let r = run_simulation(&cfg, None, "b").unwrap();
+    assert_eq!(r.wasted_work, 0.0);
+    assert_eq!(r.oom_events, 0);
+}
+
+#[test]
+fn seeds_change_outcomes_but_not_invariants() {
+    for seed in [7u64, 77, 777] {
+        let mut cfg = base_cfg();
+        cfg.seed = seed;
+        cfg.workload.num_apps = 50;
+        cfg.shaper.policy = Policy::Pessimistic;
+        cfg.forecast.kind = ForecasterKind::Oracle;
+        let r = run_simulation(&cfg, None, &format!("seed{seed}")).unwrap();
+        assert_eq!(r.completed, 50);
+        assert_eq!(r.failed_app_fraction, 0.0);
+        assert!(r.turnaround.min >= 30.0 * 0.9); // runtimes clamped >= 30s
+    }
+}
+
+#[test]
+fn last_value_forecaster_runs_end_to_end() {
+    let mut cfg = base_cfg();
+    cfg.workload.num_apps = 50;
+    cfg.shaper.policy = Policy::Pessimistic;
+    cfg.forecast.kind = ForecasterKind::LastValue;
+    let r = run_simulation(&cfg, None, "lv").unwrap();
+    assert_eq!(r.completed, 50, "{}", r.summary());
+    assert!(r.forecasts_issued > 0);
+}
+
+#[test]
+fn arima_forecaster_runs_end_to_end() {
+    let mut cfg = base_cfg();
+    cfg.workload.num_apps = 40;
+    cfg.shaper.policy = Policy::Pessimistic;
+    cfg.forecast.kind = ForecasterKind::Arima;
+    let r = run_simulation(&cfg, None, "arima").unwrap();
+    assert_eq!(r.completed, 40, "{}", r.summary());
+    assert!(r.forecasts_issued > 0);
+}
