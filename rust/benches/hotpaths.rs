@@ -2,6 +2,12 @@
 //! every shaping tick. harness = false; uses util::bench.
 //!
 //!     cargo bench --bench hotpaths
+//!
+//! Besides the human-readable table this writes machine-readable results
+//! to `BENCH_hotpaths.json` (name, ns/iter, throughput) so the perf
+//! trajectory is tracked across PRs, and prints the speedup of the
+//! workspace/parallel GP engine over the pre-workspace reference path.
+//! `ZOE_WORKERS` caps the worker threads (default: available cores).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -100,10 +106,34 @@ fn main() {
         plan(Policy::Optimistic, &cluster, &apps, &running, &demands)
     });
 
-    // Forecasters: batch of 64 series, h=10 window
+    // Forecasters: batch of 64 series, h=10 window. The reference case is
+    // the pre-workspace implementation (fresh matrices per grid entry,
+    // serial); the headline case is the shared-workspace parallel engine.
     let corpus: Vec<Vec<f64>> = series(64, 20, 3);
+    let gp_ref = GpNative::new(KernelKind::Exp, 10);
+    let ref64 = b
+        .run("gp_native_reference_batch64_h10_gridls4", || {
+            corpus.iter().map(|s| gp_ref.forecast_one_reference(s)).collect::<Vec<_>>()
+        })
+        .ns_per_iter();
     let mut gp = GpNative::new(KernelKind::Exp, 10);
-    b.run("gp_native_batch64_h10_gridls4", || gp.forecast(&corpus));
+    let new64 = b.run("gp_native_batch64_h10_gridls4", || gp.forecast(&corpus)).ns_per_iter();
+    println!(
+        "  -> workspace+parallel engine is {:.2}x the reference on batch64 ({} workers available)",
+        ref64 / new64,
+        zoe_shaper::util::pool::num_workers()
+    );
+
+    // Paper scale: one fused shaping tick at 250 hosts / ~5k components
+    // is ~10k series (cpu + mem per component); the 1000-host scenario is
+    // 4x that. These are the numbers that bound coordinator capacity.
+    let tick_250 = series(10_000, 20, 11);
+    let gp250 = GpNative::new(KernelKind::Exp, 10);
+    b.run("gp_native_fused_tick_250hosts_10k_series", || gp250.forecast_batch(&tick_250));
+    let tick_1000 = series(40_000, 20, 13);
+    let gp1000 = GpNative::new(KernelKind::Exp, 10);
+    b.run("gp_native_fused_tick_1000hosts_40k_series", || gp1000.forecast_batch(&tick_1000));
+
     let mut arima = Arima::auto();
     b.run("arima_auto_batch64", || arima.forecast(&corpus));
 
@@ -136,4 +166,10 @@ fn main() {
         r.sim_time / el.as_secs_f64(),
         r.forecasts_issued
     );
+
+    let json_path = "BENCH_hotpaths.json";
+    match b.write_json(json_path) {
+        Ok(()) => println!("\nwrote {} results to {json_path}", b.results().len()),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
 }

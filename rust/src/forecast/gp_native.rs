@@ -10,10 +10,35 @@
 //! reference the PJRT path is checked against. Hyper-parameters follow
 //! the paper's evidence maximization: a small lengthscale grid scored by
 //! the LML on standardized data.
+//!
+//! # Hot-path architecture
+//!
+//! The shaping loop forecasts every monitored component each tick, so the
+//! per-series cost is engineered around [`GpWorkspace`]:
+//!
+//! * the pairwise squared-distance Gram matrix is computed **once per
+//!   series** and every grid lengthscale's kernel matrix is derived from
+//!   it — the distance term is lengthscale-independent, so the O(n²·p)
+//!   distance work is paid once instead of once per grid entry;
+//! * Cholesky and the triangular solves run **in place** on workspace
+//!   buffers (`util::linalg::*_in_place`), so the steady state allocates
+//!   nothing;
+//! * [`GpNative::forecast_batch`] shards a batch across cores with the
+//!   scoped-thread pool (`util::pool`), one workspace per worker, with
+//!   results identical for any worker count.
+//!
+//! [`gp_posterior`] is the slow-but-obvious reference implementation the
+//! workspace path is property-tested against (<= 1e-10; in practice the
+//! two are bit-identical because they perform the same float ops in the
+//! same order).
 
-use super::{build_patterns, naive_forecast, Forecast, Forecaster};
+use super::{build_patterns, build_patterns_into, naive_forecast, Forecast, Forecaster, PatternBufs};
 use crate::config::KernelKind;
-use crate::util::linalg::{solve_chol, solve_lower, Mat};
+use crate::util::linalg::{
+    cholesky_in_place, solve_chol, solve_lower, solve_lower_in_place, solve_lower_t_in_place,
+    LinalgError, Mat,
+};
+use crate::util::pool;
 
 /// Jitter matching `model.JITTER` on the python side.
 pub const JITTER: f64 = 1e-6;
@@ -25,6 +50,10 @@ pub const LS_GRID: [f64; 4] = [0.15, 0.3, 0.6, 1.2];
 /// Default observation-noise variance (standardized units).
 pub const NOISE: f64 = 0.05;
 
+/// Below this many series per worker, extra threads cost more than they
+/// save (thread spawn is tens of µs; one series is ~10 µs of GP math).
+const MIN_SERIES_PER_WORKER: usize = 16;
+
 /// GP posterior output for one query.
 #[derive(Debug, Clone, Copy)]
 pub struct GpPosterior {
@@ -33,17 +62,33 @@ pub struct GpPosterior {
     pub lml: f64,
 }
 
-/// Kernel function on flattened pattern rows.
-fn kval(kind: KernelKind, a: &[f64], b: &[f64], ls: f64) -> f64 {
-    let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+/// Squared euclidean distance between two flattened pattern rows.
+#[inline]
+fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Kernel value from a precomputed squared distance.
+#[inline]
+fn kern(kind: KernelKind, d2: f64, ls: f64) -> f64 {
     match kind {
         KernelKind::Exp => (-(d2 + 1e-12).sqrt() / ls).exp(),
         KernelKind::Rbf => (-0.5 * d2 / (ls * ls)).exp(),
     }
 }
 
+/// Kernel function on flattened pattern rows.
+fn kval(kind: KernelKind, a: &[f64], b: &[f64], ls: f64) -> f64 {
+    kern(kind, sqdist(a, b), ls)
+}
+
 /// Exact GP posterior (mean, var, lml) for flattened inputs:
 /// `x_train` is n rows of length p; unit signal variance (standardized y).
+///
+/// This is the reference implementation: one fresh kernel matrix and
+/// factorization per call. The hot path ([`GpWorkspace`]) reuses the
+/// distance Gram and scratch buffers across the lengthscale grid and is
+/// property-tested to agree with this function to <= 1e-10.
 pub fn gp_posterior(
     kind: KernelKind,
     x_train: &[f64],
@@ -78,6 +123,110 @@ pub fn gp_posterior(
     Ok(GpPosterior { mean, var, lml })
 }
 
+/// Reusable per-series scratch for the GP hot path.
+///
+/// `load` builds the Eq. 5 patterns and the pairwise squared-distance
+/// Gram matrix once; `posterior` then evaluates any number of
+/// lengthscales against that shared state, factoring and solving in
+/// place. After the first series of a given window size, no call here
+/// touches the allocator.
+#[derive(Debug, Clone, Default)]
+pub struct GpWorkspace {
+    /// Pattern buffers (x: n*p, y: n, q: p), standardized units.
+    pat: PatternBufs,
+    /// n*n pairwise squared distances between training rows.
+    d2: Vec<f64>,
+    /// n squared distances query -> training row.
+    d2q: Vec<f64>,
+    /// n x n kernel matrix, factored in place per lengthscale.
+    kxx: Mat,
+    /// Query-to-train kernel vector.
+    kxq: Vec<f64>,
+    /// K⁻¹ y solve buffer.
+    alpha: Vec<f64>,
+    /// L⁻¹ k* solve buffer (predictive variance).
+    v: Vec<f64>,
+    /// Training-row count of the loaded series (0 = nothing loaded).
+    n: usize,
+}
+
+impl GpWorkspace {
+    /// Empty workspace; buffers grow on first use and are reused after.
+    pub fn new() -> Self {
+        GpWorkspace::default()
+    }
+
+    /// Load a series: build patterns for history `h` and compute the
+    /// lengthscale-independent squared-distance Gram (training pairs and
+    /// query-to-training). Returns the window standardizer.
+    pub fn load(&mut self, series: &[f64], h: usize) -> super::Standardizer {
+        let std = build_patterns_into(series, h, &mut self.pat);
+        let p = h + 1;
+        let n = self.pat.y.len();
+        self.n = n;
+        // lower triangle only (incl. diagonal): `posterior` reads
+        // d2[i*n + j] exclusively for j <= i
+        self.d2.clear();
+        self.d2.resize(n * n, 0.0);
+        for i in 0..n {
+            let row_i = &self.pat.x[i * p..(i + 1) * p];
+            for j in 0..=i {
+                self.d2[i * n + j] = sqdist(row_i, &self.pat.x[j * p..(j + 1) * p]);
+            }
+        }
+        self.d2q.clear();
+        for i in 0..n {
+            self.d2q.push(sqdist(&self.pat.q, &self.pat.x[i * p..(i + 1) * p]));
+        }
+        std
+    }
+
+    /// Posterior at one absolute lengthscale for the loaded series,
+    /// deriving the kernel matrix from the shared distance Gram and
+    /// solving entirely in workspace buffers.
+    pub fn posterior(
+        &mut self,
+        kind: KernelKind,
+        ls: f64,
+        noise: f64,
+    ) -> Result<GpPosterior, LinalgError> {
+        let n = self.n;
+        assert!(n > 0, "posterior before load");
+        // only the lower triangle is materialized: the in-place Cholesky
+        // and both triangular solves never read above the diagonal
+        self.kxx.reset(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                self.kxx[(i, j)] = kern(kind, self.d2[i * n + j], ls);
+            }
+            self.kxx[(i, i)] += noise + JITTER;
+        }
+        cholesky_in_place(&mut self.kxx)?;
+        self.alpha.clear();
+        self.alpha.extend_from_slice(&self.pat.y);
+        solve_lower_in_place(&self.kxx, &mut self.alpha);
+        solve_lower_t_in_place(&self.kxx, &mut self.alpha);
+        self.kxq.clear();
+        for i in 0..n {
+            self.kxq.push(kern(kind, self.d2q[i], ls));
+        }
+        let mean: f64 = self.kxq.iter().zip(&self.alpha).map(|(a, b)| a * b).sum();
+        self.v.clear();
+        self.v.extend_from_slice(&self.kxq);
+        solve_lower_in_place(&self.kxx, &mut self.v);
+        let var = (1.0 - self.v.iter().map(|x| x * x).sum::<f64>()).max(0.0);
+        let mut logdet_half = 0.0;
+        for i in 0..n {
+            logdet_half += self.kxx[(i, i)].ln();
+        }
+        let lml = -0.5
+            * self.pat.y.iter().zip(&self.alpha).map(|(a, b)| a * b).sum::<f64>()
+            - logdet_half
+            - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln();
+        Ok(GpPosterior { mean, var, lml })
+    }
+}
+
 /// Native GP forecaster with per-series evidence-maximized lengthscale.
 #[derive(Debug, Clone)]
 pub struct GpNative {
@@ -85,22 +234,107 @@ pub struct GpNative {
     pub history: usize,
     pub ls_grid: Vec<f64>,
     pub noise: f64,
+    /// Worker-thread cap for `forecast_batch`: 0 = auto (available
+    /// parallelism / `ZOE_WORKERS`); the effective count is additionally
+    /// clamped so each worker gets a worthwhile shard.
+    pub workers: usize,
 }
 
 impl GpNative {
     /// Standard configuration (paper: h past observations, exp kernel).
     pub fn new(kernel: KernelKind, history: usize) -> Self {
-        GpNative { kernel, history, ls_grid: LS_GRID.to_vec(), noise: NOISE }
+        GpNative {
+            kernel,
+            history,
+            ls_grid: LS_GRID.to_vec(),
+            noise: NOISE,
+            workers: 0,
+        }
     }
 
-    /// Forecast one series: returns the grid-best posterior.
+    /// Set the worker-thread cap (0 = auto). Results are identical for
+    /// any setting; only throughput changes.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Worker count actually used for a batch of `batch` series.
+    fn effective_workers(&self, batch: usize) -> usize {
+        let cap = if self.workers == 0 { pool::num_workers() } else { self.workers };
+        cap.min(batch / MIN_SERIES_PER_WORKER).max(1)
+    }
+
+    /// Forecast one series into caller-provided workspace scratch:
+    /// returns the grid-best posterior. This is the hot path.
     ///
     /// Grid lengthscales are *per-dimension*: the absolute lengthscale is
     /// `ls * sqrt(p)` so that pattern-space distances (which grow like
     /// sqrt(p) for p-dimensional standardized patterns) stay comparable
     /// across history windows — without this, larger h systematically
     /// underfits.
+    ///
+    /// Grid entries whose Cholesky fails are skipped individually; when
+    /// any fail, one warning is logged for the series (not one per
+    /// entry, not silence) so sweeps can see ill-conditioned windows.
+    pub fn forecast_one_with(&self, ws: &mut GpWorkspace, series: &[f64]) -> Forecast {
+        if series.len() < 2 {
+            return naive_forecast(series);
+        }
+        let dim_scale = ((self.history + 1) as f64).sqrt();
+        let std = ws.load(series, self.history);
+        let mut best: Option<GpPosterior> = None;
+        let mut failed = 0usize;
+        let mut last_err: Option<LinalgError> = None;
+        for &ls_rel in &self.ls_grid {
+            let ls = ls_rel * dim_scale;
+            match ws.posterior(self.kernel, ls, self.noise) {
+                Ok(post) => {
+                    if best.as_ref().map(|b| post.lml > b.lml).unwrap_or(true) {
+                        best = Some(post);
+                    }
+                }
+                Err(e) => {
+                    failed += 1;
+                    last_err = Some(e);
+                }
+            }
+        }
+        if failed > 0 {
+            crate::warn_log!(
+                "gp: {}/{} grid lengthscales failed Cholesky on a {}-point series ({}); {}",
+                failed,
+                self.ls_grid.len(),
+                series.len(),
+                last_err.expect("failed > 0"),
+                if failed == self.ls_grid.len() {
+                    "falling back to the naive forecast"
+                } else {
+                    "using the surviving grid entries"
+                }
+            );
+        }
+        match best {
+            Some(post) => Forecast {
+                mean: std.inv_mean(post.mean),
+                var: std.inv_var(post.var).max(1e-8),
+            },
+            None => naive_forecast(series),
+        }
+    }
+
+    /// Forecast one series with a throwaway workspace. Prefer
+    /// [`GpNative::forecast_batch`] (or hold a [`GpWorkspace`] and call
+    /// `forecast_one_with`) on hot paths.
     pub fn forecast_one(&self, series: &[f64]) -> Forecast {
+        self.forecast_one_with(&mut GpWorkspace::new(), series)
+    }
+
+    /// Reference forecast: the pre-workspace implementation, one fresh
+    /// `gp_posterior` per grid entry. Kept as the correctness oracle and
+    /// the old-vs-new baseline in `benches/hotpaths.rs`; not used on any
+    /// hot path.
+    pub fn forecast_one_reference(&self, series: &[f64]) -> Forecast {
         if series.len() < 2 {
             return naive_forecast(series);
         }
@@ -125,6 +359,16 @@ impl GpNative {
             None => naive_forecast(series),
         }
     }
+
+    /// Forecast a batch, sharded across worker threads (one workspace per
+    /// worker). Output order matches input order and every value is
+    /// identical regardless of the worker count.
+    pub fn forecast_batch(&self, series: &[Vec<f64>]) -> Vec<Forecast> {
+        let workers = self.effective_workers(series.len());
+        pool::shard_map(series, workers, GpWorkspace::new, |ws, _i, s| {
+            self.forecast_one_with(ws, s)
+        })
+    }
 }
 
 impl Forecaster for GpNative {
@@ -139,7 +383,7 @@ impl Forecaster for GpNative {
     }
 
     fn forecast(&mut self, series: &[Vec<f64>]) -> Vec<Forecast> {
-        series.iter().map(|s| self.forecast_one(s)).collect()
+        self.forecast_batch(series)
     }
 }
 
@@ -181,6 +425,25 @@ mod tests {
                 let post = gp_posterior(kind, &x, &y, &q, h + 1, ls, 0.05).unwrap();
                 assert!(post.var >= 0.0 && post.var <= 1.0 + 1e-9);
                 assert!(post.lml.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_posterior_matches_reference() {
+        let h = 8;
+        let s = periodic_series(3 * h, 12);
+        let (x, y, q, _) = build_patterns(&s, h);
+        let p = h + 1;
+        let mut ws = GpWorkspace::new();
+        for kind in [KernelKind::Exp, KernelKind::Rbf] {
+            ws.load(&s, h);
+            for &ls in &LS_GRID {
+                let a = ws.posterior(kind, ls, 0.05).unwrap();
+                let b = gp_posterior(kind, &x, &y, &q, p, ls, 0.05).unwrap();
+                assert!((a.mean - b.mean).abs() <= 1e-10, "{kind:?} ls={ls}");
+                assert!((a.var - b.var).abs() <= 1e-10, "{kind:?} ls={ls}");
+                assert!((a.lml - b.lml).abs() <= 1e-10, "{kind:?} ls={ls}");
             }
         }
     }
@@ -236,6 +499,32 @@ mod tests {
         assert_eq!(out.len(), 3);
         for f in &out {
             assert!(f.mean.is_finite() && f.var >= 0.0);
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_across_series_is_clean() {
+        // leftover state from a longer series must not leak into the next
+        let gp = GpNative::new(KernelKind::Exp, 10);
+        let long = periodic_series(64, 6);
+        let short = periodic_series(18, 7);
+        let mut ws = GpWorkspace::new();
+        let _ = gp.forecast_one_with(&mut ws, &long);
+        let reused = gp.forecast_one_with(&mut ws, &short);
+        let fresh = gp.forecast_one(&short);
+        assert_eq!(reused.mean, fresh.mean);
+        assert_eq!(reused.var, fresh.var);
+    }
+
+    #[test]
+    fn batch_matches_forecast_one() {
+        let gp = GpNative::new(KernelKind::Exp, 10);
+        let batch: Vec<Vec<f64>> = (0..20).map(|i| periodic_series(40, 100 + i)).collect();
+        let out = gp.forecast_batch(&batch);
+        for (i, s) in batch.iter().enumerate() {
+            let one = gp.forecast_one(s);
+            assert_eq!(out[i].mean, one.mean, "series {i}");
+            assert_eq!(out[i].var, one.var, "series {i}");
         }
     }
 }

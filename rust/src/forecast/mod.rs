@@ -7,6 +7,31 @@
 //! and produce a one-step-ahead predictive **mean and variance**; the
 //! variance is the uncertainty signal the shaper's β buffer consumes
 //! (Eq. 9). Standardization happens inside each forecaster.
+//!
+//! # The batched workspace engine
+//!
+//! Forecast throughput bounds how many components one coordinator can
+//! shape per tick, so the native GP hot path is built around three pieces:
+//!
+//! * [`gp_native::GpWorkspace`] — per-series scratch that computes the
+//!   pairwise squared-distance Gram matrix **once** and derives every
+//!   grid-lengthscale kernel from it (the distance term is
+//!   lengthscale-independent), with in-place Cholesky/triangular solves
+//!   (`util::linalg`) into reused buffers: the steady state performs no
+//!   allocation.
+//! * [`gp_native::GpNative::forecast_batch`] — shards a tick's series
+//!   across cores via the scoped-thread pool in `util::pool`, one
+//!   workspace per worker, with output order (and values) identical for
+//!   any worker count.
+//! * the engine issues **one fused cpu+mem batch per shaping tick**
+//!   (`sim::engine`), so batched forecasters see the whole tick's work in
+//!   a single call.
+//!
+//! The slow-but-obvious reference (`gp_native::gp_posterior`, one fresh
+//! matrix per grid entry) is kept both as the correctness oracle — the
+//! workspace path must match it to <= 1e-10 (`tests/gp_workspace_prop.rs`)
+//! — and as the baseline `cargo bench --bench hotpaths` reports speedups
+//! against.
 
 pub mod arima;
 pub mod gp_native;
@@ -109,18 +134,29 @@ impl Standardizer {
     }
 }
 
+/// Reusable output buffers for [`build_patterns_into`] — flattened
+/// `x[n*p]`, `y[n]`, `q[p]` in standardized units, plus the private
+/// window scratch. Holding one of these across calls makes steady-state
+/// pattern construction allocation-free.
+#[derive(Debug, Clone, Default)]
+pub struct PatternBufs {
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+    pub q: Vec<f64>,
+    win: Vec<f64>,
+}
+
 /// Build the GP history patterns (Eq. 5) exactly as the L2 python does
 /// (`ref.make_patterns`), with **front padding**: the artifact shapes are
 /// fixed at `n = h` training rows over a `2h` window, so shorter series
-/// are padded by repeating their first value. Returns flattened
-/// `(x_train[n*p], y_train[n], x_query[p])` in *standardized* units plus
-/// the standardizer.
-pub fn build_patterns(
-    series: &[f64],
-    h: usize,
-) -> (Vec<f64>, Vec<f64>, Vec<f64>, Standardizer) {
+/// are padded by repeating their first value. Writes flattened
+/// `(x[n*p], y[n], q[p])` in *standardized* units into `out` and returns
+/// the standardizer. Identical math to [`build_patterns`], minus the
+/// allocations.
+pub fn build_patterns_into(series: &[f64], h: usize, out: &mut PatternBufs) -> Standardizer {
     let window = 2 * h;
-    let mut win: Vec<f64> = Vec::with_capacity(window);
+    let win = &mut out.win;
+    win.clear();
     if series.len() >= window {
         win.extend_from_slice(&series[series.len() - window..]);
     } else {
@@ -129,23 +165,39 @@ pub fn build_patterns(
         win.extend(std::iter::repeat(first).take(pad));
         win.extend_from_slice(series);
     }
-    let std = Standardizer::fit(&win);
-    let z: Vec<f64> = win.iter().map(|&y| std.fwd(y)).collect();
+    let std = Standardizer::fit(win);
+    for v in win.iter_mut() {
+        *v = std.fwd(*v);
+    }
 
     let t = window; // series length used for time scaling, as in ref.py
     let n = h;
     let p = h + 1;
-    let mut x_train = Vec::with_capacity(n * p);
-    let mut y_train = Vec::with_capacity(n);
+    out.x.clear();
+    out.x.reserve(n * p);
+    out.y.clear();
+    out.y.reserve(n);
     for i in 0..n {
-        x_train.push(i as f64 / t as f64);
-        x_train.extend_from_slice(&z[i..i + h]);
-        y_train.push(z[i + h]);
+        out.x.push(i as f64 / t as f64);
+        out.x.extend_from_slice(&out.win[i..i + h]);
+        out.y.push(out.win[i + h]);
     }
-    let mut x_query = Vec::with_capacity(p);
-    x_query.push((t - h) as f64 / t as f64);
-    x_query.extend_from_slice(&z[t - h..]);
-    (x_train, y_train, x_query, std)
+    out.q.clear();
+    out.q.reserve(p);
+    out.q.push((t - h) as f64 / t as f64);
+    out.q.extend_from_slice(&out.win[t - h..]);
+    std
+}
+
+/// Allocating wrapper over [`build_patterns_into`]: returns owned
+/// `(x_train[n*p], y_train[n], x_query[p])` plus the standardizer.
+pub fn build_patterns(
+    series: &[f64],
+    h: usize,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>, Standardizer) {
+    let mut bufs = PatternBufs::default();
+    let std = build_patterns_into(series, h, &mut bufs);
+    (bufs.x, bufs.y, bufs.q, std)
 }
 
 #[cfg(test)]
@@ -196,6 +248,21 @@ mod tests {
         assert_eq!(q.len(), h + 1);
         // query history tail must end with the standardized last values
         assert!(q[q.len() - 1].is_finite());
+    }
+
+    #[test]
+    fn patterns_into_matches_allocating_and_reuses_buffers() {
+        let mut bufs = PatternBufs::default();
+        for (len, h) in [(25usize, 5usize), (3, 5), (40, 10), (12, 10)] {
+            let series: Vec<f64> = (0..len).map(|i| 0.3 + 0.02 * (i as f64).sin()).collect();
+            let (x, y, q, s1) = build_patterns(&series, h);
+            let s2 = build_patterns_into(&series, h, &mut bufs);
+            assert_eq!(bufs.x, x, "len={len} h={h}");
+            assert_eq!(bufs.y, y, "len={len} h={h}");
+            assert_eq!(bufs.q, q, "len={len} h={h}");
+            assert_eq!(s1.mean, s2.mean);
+            assert_eq!(s1.std, s2.std);
+        }
     }
 
     #[test]

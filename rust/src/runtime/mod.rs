@@ -5,12 +5,18 @@
 //! format is HLO *text* (never serialized protos): jax >= 0.5 emits protos
 //! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids. See /opt/xla-example/README.md.
+//!
+//! The `xla` bridge only exists in the offline build image, so the real
+//! `Runtime`/`Executable` are compiled under `--features pjrt`. Default
+//! builds get an uninhabited stub whose constructors return a clear
+//! "PJRT support not compiled in" error — every PJRT-dependent test and
+//! bench already treats a `Runtime` construction failure as "skip", so
+//! tier-1 stays green on a bare Rust toolchain while the manifest layer
+//! (artifact discovery) remains fully functional and tested.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::config::KernelKind;
 use crate::util::json::Json;
@@ -94,137 +100,216 @@ pub fn default_artifact_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-/// A compiled executable plus its artifact metadata.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub info: ArtifactInfo,
-}
+#[cfg(feature = "pjrt")]
+mod backend {
+    use super::*;
+    use anyhow::bail;
+    use std::collections::HashMap;
+    use std::sync::Mutex;
 
-/// PJRT CPU client wrapper with an executable cache keyed by artifact name.
-///
-/// Compilation is expensive (tens of ms); the coordinator compiles each
-/// artifact once and reuses it for every forecast call on the hot path.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client and load the artifact manifest.
-    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let manifest = Manifest::load(artifact_dir)?;
-        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    /// A compiled executable plus its artifact metadata.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub info: ArtifactInfo,
     }
 
-    /// Create from the default artifact directory.
-    pub fn from_default_dir() -> Result<Runtime> {
-        Self::new(default_artifact_dir())
-    }
-
-    /// The manifest describing available artifacts.
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// PJRT platform name (e.g. "cpu").
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an artifact (cached).
-    pub fn load(
-        &self,
-        kind: KernelKind,
-        history: usize,
-        batch: usize,
-    ) -> Result<std::sync::Arc<Executable>> {
-        let info = self
-            .manifest
-            .find(kind, history, batch)
-            .ok_or_else(|| {
-                anyhow!(
-                    "no artifact for kind={} h={history} b={batch}; run `make artifacts`",
-                    kind.name()
-                )
-            })?
-            .clone();
-        {
-            let cache = self.cache.lock().unwrap();
-            if let Some(e) = cache.get(&info.name) {
-                return Ok(e.clone());
-            }
-        }
-        let path = self.manifest.path_of(&info);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", info.name))?;
-        let arc = std::sync::Arc::new(Executable { exe, info: info.clone() });
-        self.cache.lock().unwrap().insert(info.name, arc.clone());
-        Ok(arc)
-    }
-
-    /// Execute a compiled GP artifact.
+    /// PJRT CPU client wrapper with an executable cache keyed by artifact
+    /// name.
     ///
-    /// Inputs are flattened f32 buffers in artifact order:
-    /// `x_train, y_train, x_query, lengthscale, noise` (shapes per
-    /// `Executable::info`). Output is the flattened tuple
-    /// `(mean(s), var(s), lml(s))` — scalars for batch=1, `(batch,)`
-    /// vectors otherwise.
-    pub fn run_gp(&self, exe: &Executable, inp: &GpInputs<'_>) -> Result<GpOutputs> {
-        let info = &exe.info;
-        let (n, p, b) = (info.n_train, info.pattern_dim, info.batch);
-        if inp.x_train.len() != b * n * p
-            || inp.y_train.len() != b * n
-            || inp.x_query.len() != b * p
-            || inp.lengthscale.len() != b
-            || inp.noise.len() != b
-        {
-            bail!(
-                "gp input shape mismatch for {} (b={b}, n={n}, p={p}): got x={} y={} q={} ls={} nz={}",
-                info.name,
-                inp.x_train.len(),
-                inp.y_train.len(),
-                inp.x_query.len(),
-                inp.lengthscale.len(),
-                inp.noise.len()
-            );
+    /// Compilation is expensive (tens of ms); the coordinator compiles
+    /// each artifact once and reuses it for every forecast call on the
+    /// hot path.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+    }
+
+    impl Runtime {
+        /// Create a CPU PJRT client and load the artifact manifest.
+        pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let manifest = Manifest::load(artifact_dir)?;
+            Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
         }
-        let lit = |data: &[f32], dims: &[i64]| -> Result<xla::Literal> {
-            Ok(xla::Literal::vec1(data).reshape(dims)?)
-        };
-        let (xt, yt, xq, ls, nz) = if b == 1 {
-            (
-                lit(inp.x_train, &[n as i64, p as i64])?,
-                lit(inp.y_train, &[n as i64])?,
-                lit(inp.x_query, &[p as i64])?,
-                xla::Literal::vec1(inp.lengthscale).reshape(&[])?,
-                xla::Literal::vec1(inp.noise).reshape(&[])?,
-            )
-        } else {
-            (
-                lit(inp.x_train, &[b as i64, n as i64, p as i64])?,
-                lit(inp.y_train, &[b as i64, n as i64])?,
-                lit(inp.x_query, &[b as i64, p as i64])?,
-                lit(inp.lengthscale, &[b as i64])?,
-                lit(inp.noise, &[b as i64])?,
-            )
-        };
-        let result = exe.exe.execute::<xla::Literal>(&[xt, yt, xq, ls, nz])?[0][0]
-            .to_literal_sync()?;
-        let (m, v, l) = result.to_tuple3()?;
-        Ok(GpOutputs {
-            means: m.to_vec::<f32>()?,
-            vars: v.to_vec::<f32>()?,
-            lmls: l.to_vec::<f32>()?,
-        })
+
+        /// Create from the default artifact directory.
+        pub fn from_default_dir() -> Result<Runtime> {
+            Self::new(default_artifact_dir())
+        }
+
+        /// The manifest describing available artifacts.
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// PJRT platform name (e.g. "cpu").
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an artifact (cached).
+        pub fn load(
+            &self,
+            kind: KernelKind,
+            history: usize,
+            batch: usize,
+        ) -> Result<std::sync::Arc<Executable>> {
+            let info = self
+                .manifest
+                .find(kind, history, batch)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "no artifact for kind={} h={history} b={batch}; run `make artifacts`",
+                        kind.name()
+                    )
+                })?
+                .clone();
+            {
+                let cache = self.cache.lock().unwrap();
+                if let Some(e) = cache.get(&info.name) {
+                    return Ok(e.clone());
+                }
+            }
+            let path = self.manifest.path_of(&info);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", info.name))?;
+            let arc = std::sync::Arc::new(Executable { exe, info: info.clone() });
+            self.cache.lock().unwrap().insert(info.name, arc.clone());
+            Ok(arc)
+        }
+
+        /// Execute a compiled GP artifact.
+        ///
+        /// Inputs are flattened f32 buffers in artifact order:
+        /// `x_train, y_train, x_query, lengthscale, noise` (shapes per
+        /// `Executable::info`). Output is the flattened tuple
+        /// `(mean(s), var(s), lml(s))` — scalars for batch=1, `(batch,)`
+        /// vectors otherwise.
+        pub fn run_gp(&self, exe: &Executable, inp: &GpInputs<'_>) -> Result<GpOutputs> {
+            let info = &exe.info;
+            let (n, p, b) = (info.n_train, info.pattern_dim, info.batch);
+            if inp.x_train.len() != b * n * p
+                || inp.y_train.len() != b * n
+                || inp.x_query.len() != b * p
+                || inp.lengthscale.len() != b
+                || inp.noise.len() != b
+            {
+                bail!(
+                    "gp input shape mismatch for {} (b={b}, n={n}, p={p}): got x={} y={} q={} ls={} nz={}",
+                    info.name,
+                    inp.x_train.len(),
+                    inp.y_train.len(),
+                    inp.x_query.len(),
+                    inp.lengthscale.len(),
+                    inp.noise.len()
+                );
+            }
+            let lit = |data: &[f32], dims: &[i64]| -> Result<xla::Literal> {
+                Ok(xla::Literal::vec1(data).reshape(dims)?)
+            };
+            let (xt, yt, xq, ls, nz) = if b == 1 {
+                (
+                    lit(inp.x_train, &[n as i64, p as i64])?,
+                    lit(inp.y_train, &[n as i64])?,
+                    lit(inp.x_query, &[p as i64])?,
+                    xla::Literal::vec1(inp.lengthscale).reshape(&[])?,
+                    xla::Literal::vec1(inp.noise).reshape(&[])?,
+                )
+            } else {
+                (
+                    lit(inp.x_train, &[b as i64, n as i64, p as i64])?,
+                    lit(inp.y_train, &[b as i64, n as i64])?,
+                    lit(inp.x_query, &[b as i64, p as i64])?,
+                    lit(inp.lengthscale, &[b as i64])?,
+                    lit(inp.noise, &[b as i64])?,
+                )
+            };
+            let result = exe.exe.execute::<xla::Literal>(&[xt, yt, xq, ls, nz])?[0][0]
+                .to_literal_sync()?;
+            let (m, v, l) = result.to_tuple3()?;
+            Ok(GpOutputs {
+                means: m.to_vec::<f32>()?,
+                vars: v.to_vec::<f32>()?,
+                lmls: l.to_vec::<f32>()?,
+            })
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use super::*;
+    use anyhow::bail;
+    use std::convert::Infallible;
+
+    /// Stub executable: uninhabited without the `pjrt` feature.
+    pub struct Executable {
+        pub info: ArtifactInfo,
+        #[allow(dead_code)]
+        _never: Infallible,
+    }
+
+    /// Stub runtime: constructors always fail with an actionable message,
+    /// so PJRT-dependent tests/benches skip and the native GP path is
+    /// used instead. The type is uninhabited — the methods below exist
+    /// only to keep callers type-checking.
+    pub struct Runtime {
+        _never: Infallible,
+    }
+
+    impl Runtime {
+        /// Always fails: reports missing artifacts first (the more
+        /// actionable error), then the missing feature.
+        pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+            let manifest = Manifest::load(artifact_dir)?;
+            bail!(
+                "PJRT support not compiled in (artifacts found at {:?}); \
+                 rebuild with `--features pjrt` in the XLA-enabled image to \
+                 run the AOT path — the native GP forecaster is unaffected",
+                manifest.dir
+            )
+        }
+
+        /// Create from the default artifact directory (always fails; see
+        /// [`Runtime::new`]).
+        pub fn from_default_dir() -> Result<Runtime> {
+            Self::new(default_artifact_dir())
+        }
+
+        /// The manifest describing available artifacts.
+        pub fn manifest(&self) -> &Manifest {
+            match self._never {}
+        }
+
+        /// PJRT platform name.
+        pub fn platform(&self) -> String {
+            match self._never {}
+        }
+
+        /// Load + compile an artifact.
+        pub fn load(
+            &self,
+            _kind: KernelKind,
+            _history: usize,
+            _batch: usize,
+        ) -> Result<std::sync::Arc<Executable>> {
+            match self._never {}
+        }
+
+        /// Execute a compiled GP artifact.
+        pub fn run_gp(&self, _exe: &Executable, _inp: &GpInputs<'_>) -> Result<GpOutputs> {
+            match self._never {}
+        }
+    }
+}
+
+pub use backend::{Executable, Runtime};
 
 /// Borrowed, flattened inputs for one GP artifact execution.
 pub struct GpInputs<'a> {
@@ -252,5 +337,20 @@ mod tests {
         let err = Manifest::load("/definitely/not/here").unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_missing_feature_when_artifacts_exist() {
+        // with a valid manifest on disk, the stub must point at the
+        // missing `pjrt` feature rather than at the artifacts
+        let dir = std::env::temp_dir().join("zoe_stub_runtime_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+        let err = Runtime::new(&dir).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pjrt"), "{msg}");
+        let _ = std::fs::remove_file(dir.join("manifest.json"));
+        let _ = std::fs::remove_dir(&dir);
     }
 }

@@ -389,15 +389,21 @@ impl Engine {
         }
         if let ForecastSource::Model(model) = &mut self.source {
             if !model_batch_ids.is_empty() {
-                let fc = model.forecast(&model_cpu_series);
-                let fm = model.forecast(&model_mem_series);
-                self.metrics.forecasts_issued += 2 * model_batch_ids.len() as u64;
+                // one fused batch per tick — cpu series then mem series —
+                // so batched/parallel forecasters see the tick's entire
+                // workload in a single call instead of two serial halves
+                let k = model_batch_ids.len();
+                let mut fused = model_cpu_series;
+                fused.append(&mut model_mem_series);
+                let all = model.forecast(&fused);
+                debug_assert_eq!(all.len(), 2 * k, "forecaster dropped series");
+                self.metrics.forecasts_issued += 2 * k as u64;
                 for (i, &(cid, cpu_req, mem_req)) in model_batch_ids.iter().enumerate() {
                     self.demands.insert(
                         cid,
                         Demand {
-                            cpus: beta::desired_fraction(&fc[i], k1, k2) * cpu_req,
-                            mem: beta::desired_fraction(&fm[i], k1, k2) * mem_req,
+                            cpus: beta::desired_fraction(&all[i], k1, k2) * cpu_req,
+                            mem: beta::desired_fraction(&all[k + i], k1, k2) * mem_req,
                         },
                     );
                 }

@@ -158,6 +158,34 @@ impl Bench {
     pub fn group(&self) -> &str {
         &self.group
     }
+
+    /// Write all collected results as machine-readable JSON —
+    /// `{group, results: [{name, ns_per_iter, per_sec, iters}]}` — so the
+    /// perf trajectory can be tracked across PRs (e.g.
+    /// `BENCH_hotpaths.json`).
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(r.name.clone()));
+                o.insert("ns_per_iter".to_string(), Json::Num(r.ns_per_iter()));
+                // a zero-median case yields per_sec = inf; the Json
+                // writer emits non-finite numbers as null, which is the
+                // honest value for trackers (never 0.0 = "slowest")
+                o.insert("per_sec".to_string(), Json::Num(r.per_sec()));
+                o.insert("iters".to_string(), Json::Num(r.iters as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("group".to_string(), Json::Str(self.group.clone()));
+        top.insert("results".to_string(), Json::Arr(results));
+        std::fs::write(path, Json::Obj(top).to_string_pretty() + "\n")
+    }
 }
 
 /// Optimization barrier (std::hint::black_box is stable since 1.66).
@@ -182,6 +210,22 @@ mod tests {
         assert!(r.iters > 0);
         assert!(r.max >= r.min);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn json_emission_roundtrips() {
+        let mut b = Bench::new("jsontest").with_target(Duration::from_millis(10));
+        b.run("noop", || 1 + 1);
+        let path = std::env::temp_dir().join("zoe_bench_json_test.json");
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(j.get("group").and_then(|g| g.as_str()), Some("jsontest"));
+        let results = j.get("results").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").and_then(|n| n.as_str()), Some("noop"));
+        assert!(results[0].get("ns_per_iter").and_then(|n| n.as_f64()).is_some());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

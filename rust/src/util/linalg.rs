@@ -1,6 +1,12 @@
 //! Minimal dense linear algebra: exactly what the native GP and ARIMA
 //! estimators need — row-major matrices, Cholesky, triangular solves, and
 //! ordinary least squares via normal equations with ridge fallback.
+//!
+//! The GP hot path uses the `*_in_place` variants ([`cholesky_in_place`],
+//! [`solve_lower_in_place`], [`solve_lower_t_in_place`]) together with
+//! [`Mat::reset`]: they write into caller-owned scratch so a steady-state
+//! forecasting loop performs no allocation. The allocating wrappers are
+//! thin shims over them, so both paths compute bit-identical results.
 
 /// Row-major dense matrix of f64.
 #[derive(Debug, Clone, PartialEq)]
@@ -102,29 +108,37 @@ impl Mat {
             .collect()
     }
 
-    /// In-place Cholesky factorization (lower). Returns Err on a
-    /// non-positive-definite matrix.
+    /// Reshape in place to `rows x cols`, reusing the existing allocation
+    /// and zero-filling all entries. The workhorse of allocation-free
+    /// scratch reuse: after the first call at a given size, subsequent
+    /// `reset`s never touch the allocator.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Cholesky factorization (lower), allocating a fresh factor. Returns
+    /// Err on a non-positive-definite matrix.
     pub fn cholesky(&self) -> Result<Mat, LinalgError> {
-        assert_eq!(self.rows, self.cols, "cholesky needs square");
-        let n = self.rows;
-        let mut l = Mat::zeros(n, n);
-        for i in 0..n {
-            for j in 0..=i {
-                let mut sum = self[(i, j)];
-                for k in 0..j {
-                    sum -= l[(i, k)] * l[(j, k)];
-                }
-                if i == j {
-                    if sum <= 0.0 {
-                        return Err(LinalgError::NotPositiveDefinite(i, sum));
-                    }
-                    l[(i, j)] = sum.sqrt();
-                } else {
-                    l[(i, j)] = sum / l[(j, j)];
-                }
+        let mut l = self.clone();
+        cholesky_in_place(&mut l)?;
+        // clear the strict upper triangle (cholesky_in_place leaves the
+        // input's upper entries untouched) so L is a clean lower factor
+        for i in 0..l.rows {
+            for j in i + 1..l.cols {
+                l[(i, j)] = 0.0;
             }
         }
         Ok(l)
+    }
+}
+
+impl Default for Mat {
+    /// Empty 0x0 matrix (grown later via [`Mat::reset`]).
+    fn default() -> Self {
+        Mat::zeros(0, 0)
     }
 }
 
@@ -165,33 +179,72 @@ impl std::fmt::Display for LinalgError {
 
 impl std::error::Error for LinalgError {}
 
-/// Solve L x = b with L lower-triangular.
-pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
-    let n = l.rows();
-    assert_eq!(b.len(), n);
-    let mut x = vec![0.0; n];
+/// Factor a symmetric positive-definite matrix in place: on success the
+/// lower triangle (diagonal included) holds L with `m = L Lᵀ`; the strict
+/// upper triangle is left untouched. Performs the exact operation sequence
+/// of [`Mat::cholesky`], so results are bit-identical — without the
+/// allocation.
+pub fn cholesky_in_place(m: &mut Mat) -> Result<(), LinalgError> {
+    assert_eq!(m.rows(), m.cols(), "cholesky needs square");
+    let n = m.rows();
     for i in 0..n {
-        let mut sum = b[i];
+        for j in 0..=i {
+            let mut sum = m[(i, j)];
+            for k in 0..j {
+                sum -= m[(i, k)] * m[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(LinalgError::NotPositiveDefinite(i, sum));
+                }
+                m[(i, j)] = sum.sqrt();
+            } else {
+                m[(i, j)] = sum / m[(j, j)];
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Solve L x = b in place (`x` holds b on entry, the solution on exit),
+/// with L lower-triangular. Only the lower triangle of `l` is read.
+pub fn solve_lower_in_place(l: &Mat, x: &mut [f64]) {
+    let n = l.rows();
+    assert_eq!(x.len(), n);
+    for i in 0..n {
+        let mut sum = x[i];
         for k in 0..i {
             sum -= l[(i, k)] * x[k];
         }
         x[i] = sum / l[(i, i)];
     }
-    x
 }
 
-/// Solve Lᵀ x = b with L lower-triangular.
-pub fn solve_lower_t(l: &Mat, b: &[f64]) -> Vec<f64> {
+/// Solve Lᵀ x = b in place (`x` holds b on entry, the solution on exit),
+/// with L lower-triangular. Only the lower triangle of `l` is read.
+pub fn solve_lower_t_in_place(l: &Mat, x: &mut [f64]) {
     let n = l.rows();
-    assert_eq!(b.len(), n);
-    let mut x = vec![0.0; n];
+    assert_eq!(x.len(), n);
     for i in (0..n).rev() {
-        let mut sum = b[i];
+        let mut sum = x[i];
         for k in i + 1..n {
             sum -= l[(k, i)] * x[k];
         }
         x[i] = sum / l[(i, i)];
     }
+}
+
+/// Solve L x = b with L lower-triangular.
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let mut x = b.to_vec();
+    solve_lower_in_place(l, &mut x);
+    x
+}
+
+/// Solve Lᵀ x = b with L lower-triangular.
+pub fn solve_lower_t(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let mut x = b.to_vec();
+    solve_lower_t_in_place(l, &mut x);
     x
 }
 
@@ -346,6 +399,64 @@ mod tests {
     fn singular_detected() {
         let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
         assert_eq!(solve(&a, &[1.0, 2.0]), Err(LinalgError::Singular));
+    }
+
+    #[test]
+    fn in_place_cholesky_matches_allocating() {
+        let a = Mat::from_rows(&[
+            vec![1.0, 0.3, -0.2],
+            vec![0.5, 2.0, 0.1],
+            vec![-0.4, 0.2, 1.5],
+        ]);
+        let mut k = a.matmul(&a.t());
+        for i in 0..3 {
+            k[(i, i)] += 1.0;
+        }
+        let l = k.cholesky().unwrap();
+        let mut m = k.clone();
+        cholesky_in_place(&mut m).unwrap();
+        for i in 0..3 {
+            for j in 0..=i {
+                assert_eq!(m[(i, j)], l[(i, j)], "lower triangles must be bit-identical");
+            }
+            for j in i + 1..3 {
+                assert_eq!(m[(i, j)], k[(i, j)], "upper triangle left untouched");
+            }
+        }
+    }
+
+    #[test]
+    fn in_place_cholesky_rejects_indefinite() {
+        let mut m = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]);
+        assert!(matches!(
+            cholesky_in_place(&mut m),
+            Err(LinalgError::NotPositiveDefinite(..))
+        ));
+    }
+
+    #[test]
+    fn in_place_solves_match_allocating() {
+        let l = Mat::from_rows(&[vec![2.0, 0.0], vec![1.0, 3.0]]);
+        let b = [4.0, 11.0];
+        let mut x = b;
+        solve_lower_in_place(&l, &mut x);
+        assert_eq!(x.to_vec(), solve_lower(&l, &b));
+        let bt = [7.0, 9.0];
+        let mut xt = bt;
+        solve_lower_t_in_place(&l, &mut xt);
+        assert_eq!(xt.to_vec(), solve_lower_t(&l, &bt));
+    }
+
+    #[test]
+    fn reset_reuses_allocation() {
+        let mut m = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        m.reset(3, 3);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 3);
+        assert!(m.data().iter().all(|&v| v == 0.0));
+        m.reset(2, 2);
+        assert_eq!(m.data().len(), 4);
+        assert!(m.data().iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -1,0 +1,134 @@
+//! Minimal scoped-thread worker pool (std-only; no rayon offline).
+//!
+//! [`shard_map`] splits a batch into contiguous index shards, runs one
+//! scoped thread per shard, and stitches the outputs back in input order —
+//! so results are **deterministic and independent of the worker count**.
+//! Each worker gets its own scratch state from an `init` closure (e.g. a
+//! `GpWorkspace`), which is how per-thread allocation reuse composes with
+//! parallelism without any synchronization on the hot path.
+//!
+//! Worker count resolution: `ZOE_WORKERS` (if set and >= 1) overrides the
+//! detected `available_parallelism`.
+
+/// Default worker count: `ZOE_WORKERS` env override, else the machine's
+/// available parallelism, else 1.
+pub fn num_workers() -> usize {
+    if let Ok(s) = std::env::var("ZOE_WORKERS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over `inputs` on up to `workers` scoped threads, returning
+/// outputs in input order. `init` builds one scratch state per worker;
+/// `f` receives `(scratch, global_index, item)`.
+///
+/// `workers <= 1` (or a batch of <= 1 item) runs inline on the caller's
+/// thread with a single scratch state — the zero-overhead degenerate case.
+pub fn shard_map<I, O, S, FI, F>(inputs: &[I], workers: usize, init: FI, f: F) -> Vec<O>
+where
+    I: Sync,
+    O: Send,
+    FI: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &I) -> O + Sync,
+{
+    let n = inputs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let w = workers.max(1).min(n);
+    if w == 1 {
+        let mut scratch = init();
+        return inputs
+            .iter()
+            .enumerate()
+            .map(|(i, item)| f(&mut scratch, i, item))
+            .collect();
+    }
+    let chunk = (n + w - 1) / w;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = inputs
+            .chunks(chunk)
+            .enumerate()
+            .map(|(ci, shard)| {
+                let f = &f;
+                let init = &init;
+                scope.spawn(move || {
+                    let mut scratch = init();
+                    shard
+                        .iter()
+                        .enumerate()
+                        .map(|(j, item)| f(&mut scratch, ci * chunk + j, item))
+                        .collect::<Vec<O>>()
+                })
+            })
+            .collect();
+        let mut out = Vec::with_capacity(n);
+        for h in handles {
+            out.extend(h.join().expect("pool worker panicked"));
+        }
+        out
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_single() {
+        let empty: Vec<i32> = shard_map(&[] as &[i32], 4, || (), |_, _, &x| x);
+        assert!(empty.is_empty());
+        assert_eq!(shard_map(&[7], 4, || (), |_, _, &x| x * 2), vec![14]);
+    }
+
+    #[test]
+    fn preserves_input_order() {
+        let inputs: Vec<usize> = (0..103).collect();
+        for w in [1, 2, 3, 8, 64, 200] {
+            let out = shard_map(&inputs, w, || (), |_, i, &x| {
+                assert_eq!(i, x, "global index must match input position");
+                x * 3
+            });
+            assert_eq!(out, inputs.iter().map(|x| x * 3).collect::<Vec<_>>(), "w={w}");
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let inputs: Vec<f64> = (0..57).map(|i| i as f64 * 0.37).collect();
+        let reference = shard_map(&inputs, 1, || (), |_, _, &x| (x.sin() * 1e6).round());
+        for w in [2, 5, 16] {
+            let out = shard_map(&inputs, w, || (), |_, _, &x| (x.sin() * 1e6).round());
+            assert_eq!(out, reference, "w={w}");
+        }
+    }
+
+    #[test]
+    fn scratch_state_is_per_worker() {
+        // each worker's scratch counts only its own shard
+        let inputs: Vec<u32> = (0..40).collect();
+        let counts = shard_map(
+            &inputs,
+            4,
+            || 0usize,
+            |seen, _, _| {
+                *seen += 1;
+                *seen
+            },
+        );
+        // within any contiguous shard the counter restarts from 1
+        assert_eq!(counts[0], 1);
+        let restarts = counts.iter().filter(|&&c| c == 1).count();
+        assert_eq!(restarts, 4, "one counter restart per worker: {counts:?}");
+    }
+
+    #[test]
+    fn num_workers_positive() {
+        assert!(num_workers() >= 1);
+    }
+}

@@ -16,7 +16,9 @@ fn runtime_or_skip() -> Option<Arc<Runtime>> {
     match Runtime::from_default_dir() {
         Ok(rt) => Some(Arc::new(rt)),
         Err(e) => {
-            eprintln!("skipping cross-validation: {e:#}");
+            // graceful tier-1 skip: no AOT artifact dir / no `pjrt`
+            // feature is an expected environment, not a failure
+            eprintln!("SKIPPED (PJRT runtime unavailable): {e:#}");
             None
         }
     }

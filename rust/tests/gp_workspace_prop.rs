@@ -1,0 +1,140 @@
+//! Property tests for the shared-workspace GP engine: the hot path must
+//! be numerically indistinguishable (<= 1e-10) from the slow-but-obvious
+//! `gp_posterior` reference on random series, for both kernels and every
+//! grid lengthscale — and `forecast_batch` must be bit-deterministic
+//! across worker counts.
+
+use zoe_shaper::config::KernelKind;
+use zoe_shaper::forecast::gp_native::{gp_posterior, GpNative, GpWorkspace, LS_GRID, NOISE};
+use zoe_shaper::forecast::{build_patterns, Forecaster};
+use zoe_shaper::trace::patterns::Pattern;
+use zoe_shaper::util::rng::Pcg;
+
+const TOL: f64 = 1e-10;
+
+fn random_series(rng: &mut Pcg, len: usize) -> Vec<f64> {
+    // mix of realistic utilization patterns and raw noise walks
+    if rng.chance(0.7) {
+        let p = Pattern::sample(rng, true);
+        (0..len as u64).map(|s| p.at_step(s)).collect()
+    } else {
+        let mut v = rng.uniform(0.1, 0.9);
+        (0..len)
+            .map(|_| {
+                v = (v + 0.05 * rng.normal()).clamp(0.0, 1.0);
+                v
+            })
+            .collect()
+    }
+}
+
+#[test]
+fn workspace_matches_gp_posterior_reference() {
+    let mut rng = Pcg::seeded(2024);
+    let mut ws = GpWorkspace::new();
+    let mut checked = 0usize;
+    for case in 0..60 {
+        let h = [5usize, 10, 20][case % 3];
+        let len = 2 + (rng.next_u64() as usize) % (3 * h);
+        let series = random_series(&mut rng, len);
+        let (x, y, q, _) = build_patterns(&series, h);
+        let p = h + 1;
+        let dim_scale = (p as f64).sqrt();
+        for kind in [KernelKind::Exp, KernelKind::Rbf] {
+            ws.load(&series, h);
+            for &ls_rel in &LS_GRID {
+                let ls = ls_rel * dim_scale;
+                let fast = ws.posterior(kind, ls, NOISE);
+                let slow = gp_posterior(kind, &x, &y, &q, p, ls, NOISE);
+                match (fast, slow) {
+                    (Ok(a), Ok(b)) => {
+                        assert!(
+                            (a.mean - b.mean).abs() <= TOL,
+                            "case {case} {kind:?} h={h} ls={ls_rel}: mean {} vs {}",
+                            a.mean,
+                            b.mean
+                        );
+                        assert!(
+                            (a.var - b.var).abs() <= TOL,
+                            "case {case} {kind:?} h={h} ls={ls_rel}: var {} vs {}",
+                            a.var,
+                            b.var
+                        );
+                        assert!(
+                            (a.lml - b.lml).abs() <= TOL,
+                            "case {case} {kind:?} h={h} ls={ls_rel}: lml {} vs {}",
+                            a.lml,
+                            b.lml
+                        );
+                        checked += 1;
+                    }
+                    (Err(_), Err(_)) => {} // both reject the same window
+                    (a, b) => panic!(
+                        "case {case} {kind:?} h={h} ls={ls_rel}: \
+                         workspace {a:?} disagrees with reference {b:?} on failure"
+                    ),
+                }
+            }
+        }
+    }
+    assert!(checked > 300, "too few successful comparisons: {checked}");
+}
+
+#[test]
+fn forecast_matches_reference_forecaster_end_to_end() {
+    // full pipeline (standardize + evidence grid + inverse transform):
+    // the workspace forecaster must reproduce the pre-workspace
+    // implementation exactly
+    let mut rng = Pcg::seeded(7);
+    for kind in [KernelKind::Exp, KernelKind::Rbf] {
+        let gp = GpNative::new(kind, 10);
+        for case in 0..30 {
+            let len = 2 + (rng.next_u64() as usize) % 60;
+            let series = random_series(&mut rng, len);
+            let fast = gp.forecast_one(&series);
+            let slow = gp.forecast_one_reference(&series);
+            assert!(
+                (fast.mean - slow.mean).abs() <= TOL,
+                "{kind:?} case {case}: mean {} vs {}",
+                fast.mean,
+                slow.mean
+            );
+            assert!(
+                (fast.var - slow.var).abs() <= TOL,
+                "{kind:?} case {case}: var {} vs {}",
+                fast.var,
+                slow.var
+            );
+        }
+    }
+}
+
+#[test]
+fn batch_deterministic_across_worker_counts() {
+    let mut rng = Pcg::seeded(99);
+    // big enough that 8 workers actually shard (>= 16 series per worker)
+    let batch: Vec<Vec<f64>> = (0..160)
+        .map(|_| {
+            let len = 5 + (rng.next_u64() as usize) % 40;
+            random_series(&mut rng, len)
+        })
+        .collect();
+    for kind in [KernelKind::Exp, KernelKind::Rbf] {
+        let reference = GpNative::new(kind, 10).with_workers(1).forecast_batch(&batch);
+        assert_eq!(reference.len(), batch.len());
+        for w in [2usize, 8] {
+            let out = GpNative::new(kind, 10).with_workers(w).forecast_batch(&batch);
+            assert_eq!(out, reference, "{kind:?} with {w} workers diverged");
+        }
+    }
+}
+
+#[test]
+fn trait_batch_equals_direct_batch() {
+    let mut rng = Pcg::seeded(17);
+    let batch: Vec<Vec<f64>> = (0..24).map(|_| random_series(&mut rng, 35)).collect();
+    let mut gp = GpNative::new(KernelKind::Exp, 10);
+    let via_trait = gp.forecast(&batch);
+    let direct = gp.forecast_batch(&batch);
+    assert_eq!(via_trait, direct);
+}

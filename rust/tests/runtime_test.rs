@@ -9,7 +9,9 @@ fn runtime_or_skip() -> Option<Runtime> {
     match Runtime::from_default_dir() {
         Ok(rt) => Some(rt),
         Err(e) => {
-            eprintln!("skipping runtime tests: {e:#}");
+            // graceful tier-1 skip: no AOT artifact dir / no `pjrt`
+            // feature is an expected environment, not a failure
+            eprintln!("SKIPPED (PJRT runtime unavailable): {e:#}");
             None
         }
     }

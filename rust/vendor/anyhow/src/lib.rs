@@ -1,0 +1,202 @@
+//! Vendored, dependency-free subset of the `anyhow` error-handling API.
+//!
+//! The offline build image has no crates.io access, so this crate provides
+//! exactly the surface `zoe-shaper` uses — `Error`, `Result`, `anyhow!`,
+//! `bail!`, and the `Context` extension trait — with the same formatting
+//! contract: `{}` shows the outermost message, `{:#}` the full
+//! colon-separated cause chain (what the CLI and tests rely on).
+//!
+//! Not implemented (unused here): downcasting, backtraces, `ensure!`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result` defaulting to [`Error`], mirroring `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error made of a message plus an optional chain of causes, outermost
+/// first. Like `anyhow::Error`, it deliberately does **not** implement
+/// `std::error::Error`, which is what lets [`Context`] have impls for both
+/// std errors and `Error` results without overlap.
+pub struct Error {
+    /// Outermost message first; earlier entries wrap later ones.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from a plain message (the `anyhow!` macro's constructor).
+    pub fn msg(message: impl fmt::Display) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Build from any std error, capturing its `source()` chain.
+    pub fn new<E: StdError>(err: E) -> Self {
+        let mut chain = vec![err.to_string()];
+        let mut src = err.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, ctx: impl fmt::Display) -> Self {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The cause messages, outermost first.
+    pub fn chain_messages(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain, `outer: cause: root`
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError> From<E> for Error {
+    fn from(err: E) -> Self {
+        Error::new(err)
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+mod private {
+    /// Sealed marker: the error shapes `Context` knows how to wrap.
+    pub trait Sealed {}
+    impl<T, E> Sealed for Result<T, E> {}
+    impl<T> Sealed for Option<T> {}
+}
+
+/// Attach context to errors, mirroring `anyhow::Context`.
+pub trait Context<T>: private::Sealed {
+    /// Wrap the error value with a new message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+
+    /// Wrap the error value with a lazily evaluated message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_outer_only_alternate_full_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: no such file");
+    }
+
+    #[test]
+    fn macro_and_bail() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("bad value {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "bad value 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(format!("{e}"), "missing field");
+    }
+
+    #[test]
+    fn nested_context_orders_outermost_first() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("inner")
+            .context("outer")
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner: no such file");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+}

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 gate: release build + full test suite (ROADMAP.md).
+#
+# PJRT-dependent tests self-skip when no AOT artifact dir / `pjrt`
+# feature is present, so this runs green on a bare Rust toolchain.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+cargo build --release
+# compile coverage for harness=false benches and the examples, which
+# `build`/`test` alone never touch
+cargo build --release --benches --examples
+cargo test -q
