@@ -1,0 +1,80 @@
+//! Engine-tick benchmarks at paper scale (§Perf): the per-tick
+//! simulation-loop cost that bounds how many hosts/components one
+//! coordinator can shape, now that PR 1 made forecasting cheap.
+//! harness = false; uses util::bench.
+//!
+//!     cargo bench --bench engine
+//!
+//! Each case warms a cluster to a running steady state (arrivals +
+//! scheduling + shaping via `pump_until`), then times individual
+//! monitor and shaper passes: 250 hosts (the paper's simulation testbed)
+//! and 1000 hosts (the scale-up scenario). Placer select queries are
+//! timed on the warm 1000-host cluster as well. Results are written to
+//! `BENCH_engine.json` for cross-PR tracking. `ZOE_WORKERS` caps the
+//! sampling-pass worker threads.
+
+use std::time::Duration;
+
+use zoe_shaper::config::{ForecasterKind, Policy, SimConfig};
+use zoe_shaper::sim::engine::{Engine, ForecastSource};
+use zoe_shaper::util::bench::Bench;
+
+/// Build and warm an engine: dense arrivals of long-running apps fill
+/// the cluster, then several monitor/shaper cycles reach steady state.
+fn warm_engine(hosts: usize, apps: usize) -> Engine {
+    let mut cfg = SimConfig::small();
+    cfg.cluster.hosts = hosts;
+    cfg.workload.num_apps = apps;
+    cfg.workload.max_elastic = 32;
+    // one arrival per simulated second, long runtimes: the cluster
+    // saturates quickly and stays busy for the whole measurement
+    cfg.workload.burst_prob = 1.0;
+    cfg.workload.burst_mean_s = 1.0;
+    cfg.workload.runtime_scale = 50.0;
+    cfg.forecast.kind = ForecasterKind::Oracle;
+    cfg.shaper.policy = Policy::Pessimistic;
+    let mut eng = Engine::new(cfg, ForecastSource::Oracle);
+    // arrivals span ~`apps` seconds; warm a comfortable margin past them
+    eng.pump_until(apps as f64 + 1800.0);
+    eng
+}
+
+fn bench_scale(b: &mut Bench, hosts: usize, apps: usize) {
+    let mut eng = warm_engine(hosts, apps);
+    println!(
+        "  [{hosts} hosts] warm state: {} components placed, {} apps running",
+        eng.cluster().placed_count(),
+        eng.running_apps()
+    );
+    assert!(eng.cluster().placed_count() > 0, "warmup placed nothing");
+    b.run(&format!("engine_monitor_tick_{hosts}hosts"), || eng.monitor_tick_once());
+    b.run(&format!("engine_shaper_tick_{hosts}hosts"), || eng.shaper_tick_once());
+    eng.cluster().check_invariants().expect("bench left the cluster inconsistent");
+
+    if hosts >= 1000 {
+        let cluster = eng.cluster();
+        b.run("placer_worst_fit_select_1000hosts", || cluster.worst_fit(1.0, 4.0));
+        b.run("placer_first_fit_select_1000hosts", || cluster.first_fit(1.0, 4.0));
+        b.run("placer_best_fit_select_1000hosts", || cluster.best_fit(1.0, 4.0));
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("engine").with_target(Duration::from_millis(700));
+
+    // paper simulation testbed scale (§4.1): 250 hosts
+    bench_scale(&mut b, 250, 3000);
+    // scale-up scenario: 1000 hosts
+    bench_scale(&mut b, 1000, 10_000);
+
+    println!(
+        "  ({} workers available for the sampling pass)",
+        zoe_shaper::util::pool::num_workers()
+    );
+
+    let json_path = "BENCH_engine.json";
+    match b.write_json(json_path) {
+        Ok(()) => println!("\nwrote {} results to {json_path}", b.results().len()),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
+}

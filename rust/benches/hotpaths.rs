@@ -39,11 +39,7 @@ fn series(n: usize, len: usize, seed: u64) -> Vec<Vec<f64>> {
 fn big_world() -> (Vec<Application>, Cluster, Vec<usize>, HashMap<usize, Demand>) {
     let mut rng = Pcg::seeded(1);
     let hosts = 250;
-    let mut cluster = Cluster::new(&ClusterConfig {
-        hosts,
-        cores_per_host: 32.0,
-        mem_per_host_gb: 128.0,
-    });
+    let mut cluster = Cluster::new(&ClusterConfig::uniform(hosts, 32.0, 128.0));
     let mut apps = Vec::new();
     let mut cid = 0;
     for a in 0..700 {

@@ -5,11 +5,37 @@
 //! **allocation** (what the shaper currently grants — what admission
 //! control charges against host capacity), and **utilization** (what the
 //! component actually uses, sampled from its pattern by the monitor).
+//!
+//! ## Columnar state (PR 2)
+//!
+//! The placement table is a dense `ComponentId`-indexed arena (`slots`)
+//! plus an ordered set of placed ids, so `placement()` is O(1) and the
+//! monitor can walk the live-component set without rescanning every
+//! application. Each host keeps its own placement list (swap-remove
+//! maintained in O(1)) for the per-host OOM pass, and free capacity is
+//! indexed twice: a free-memory-ordered B-tree serving `worst_fit` /
+//! `best_fit` (walks only memory-feasible hosts, largest/smallest
+//! first) and a segment tree over host ids (max free cpu/mem per node)
+//! serving `first_fit` (prunes to ~O(log n) typically; worst case
+//! O(n) — see `FitTree`). Heterogeneous host classes come straight
+//! from `ClusterConfig`.
+//!
+//! `hosts` stays a public field for read access (shaper, monitor,
+//! benches); all mutation must go through `place`/`remove`/`resize` so
+//! the capacity indexes stay in sync — `check_invariants` verifies that.
 
-use std::collections::HashMap;
+use std::collections::BTreeSet;
 
 use crate::config::ClusterConfig;
+use crate::util::order;
 use crate::workload::{ComponentId, HostId};
+
+/// Capacity comparison tolerance shared by every admission fit check,
+/// resize guard and ledger invariant in this module. The seed mixed
+/// `1e-9` (fit checks) and `1e-6` (resize/invariants); one constant at
+/// the looser value keeps resize-after-plan from spuriously rejecting
+/// allocations the shaper proved feasible within float error.
+pub const CAPACITY_EPS: f64 = 1e-6;
 
 /// A single machine.
 #[derive(Debug, Clone)]
@@ -43,29 +69,130 @@ pub struct Placement {
     /// Simulated time the component started on this host (Algorithm 1
     /// preempts the *youngest* elastic components first).
     pub placed_at: f64,
+    /// Index of this component within its host's placement list
+    /// (swap-remove bookkeeping; cluster-internal).
+    host_slot: usize,
 }
 
-/// The whole cluster: hosts plus the placement table.
+/// Segment tree over host ids storing per-node maxima of free cpu and
+/// free memory. `first_fit` descends left-first with pruning on the node
+/// maxima and returns the lowest-id host that actually fits — exact,
+/// because a leaf's "maxima" are its own values. Note the prune is
+/// per-dimension: a node's max cpu and max mem may come from different
+/// leaves, so a query can explore a subtree that holds no single
+/// fitting host. Typical queries touch O(log n) nodes; the worst case
+/// (anti-correlated free cpu/mem across hosts) degenerates to O(n).
+#[derive(Debug, Clone)]
+struct FitTree {
+    /// Number of real hosts (leaves beyond this stay at -inf).
+    n: usize,
+    /// Leaf offset (power of two).
+    base: usize,
+    cpu: Vec<f64>,
+    mem: Vec<f64>,
+}
+
+impl FitTree {
+    fn new(n: usize) -> Self {
+        let base = n.max(1).next_power_of_two();
+        FitTree {
+            n,
+            base,
+            cpu: vec![f64::NEG_INFINITY; 2 * base],
+            mem: vec![f64::NEG_INFINITY; 2 * base],
+        }
+    }
+
+    /// Refresh the leaf for host `i` and its ancestors.
+    fn update(&mut self, i: usize, free_cpu: f64, free_mem: f64) {
+        let mut k = self.base + i;
+        self.cpu[k] = free_cpu;
+        self.mem[k] = free_mem;
+        while k > 1 {
+            k /= 2;
+            self.cpu[k] = self.cpu[2 * k].max(self.cpu[2 * k + 1]);
+            self.mem[k] = self.mem[2 * k].max(self.mem[2 * k + 1]);
+        }
+    }
+
+    /// Does the subtree under `k` possibly hold a fitting host? (At a
+    /// leaf this is the exact host fit predicate.)
+    fn fits(&self, k: usize, cpus: f64, mem: f64) -> bool {
+        self.cpu[k] + CAPACITY_EPS >= cpus && self.mem[k] + CAPACITY_EPS >= mem
+    }
+
+    /// Lowest host id whose free capacity fits (cpus, mem), or None.
+    fn first_fit(&self, cpus: f64, mem: f64) -> Option<usize> {
+        self.search(1, cpus, mem)
+    }
+
+    fn search(&self, k: usize, cpus: f64, mem: f64) -> Option<usize> {
+        if !self.fits(k, cpus, mem) {
+            return None;
+        }
+        if k >= self.base {
+            let i = k - self.base;
+            return if i < self.n { Some(i) } else { None };
+        }
+        self.search(2 * k, cpus, mem)
+            .or_else(|| self.search(2 * k + 1, cpus, mem))
+    }
+}
+
+/// The whole cluster: hosts plus the arena-backed placement table and
+/// the free-capacity indexes.
 #[derive(Debug, Clone)]
 pub struct Cluster {
     pub hosts: Vec<Host>,
-    placements: HashMap<ComponentId, Placement>,
+    /// Dense `ComponentId`-indexed arena (grows on demand).
+    slots: Vec<Option<Placement>>,
+    /// Placed component ids, ascending (the monitor's live set).
+    placed: BTreeSet<ComponentId>,
+    /// Per-host placement lists (unordered; swap-remove maintained).
+    host_comps: Vec<Vec<ComponentId>>,
+    /// (total-order key of free_mem, host id), ascending by free memory.
+    mem_index: BTreeSet<(u64, HostId)>,
+    fit_tree: FitTree,
 }
 
 impl Cluster {
-    /// Build an idle homogeneous cluster from the config.
+    /// Build an idle cluster from the config: `hosts` homogeneous
+    /// machines followed by any heterogeneous extra classes.
     pub fn new(cfg: &ClusterConfig) -> Self {
+        let mut shapes: Vec<(f64, f64)> = Vec::with_capacity(cfg.hosts);
+        shapes.extend((0..cfg.hosts).map(|_| (cfg.cores_per_host, cfg.mem_per_host_gb)));
+        for class in &cfg.extra_classes {
+            shapes.extend((0..class.count).map(|_| (class.cores, class.mem_gb)));
+        }
+        Self::from_shapes(&shapes)
+    }
+
+    /// Build an idle cluster from explicit per-host (cpus, mem) shapes.
+    pub fn from_shapes(shapes: &[(f64, f64)]) -> Self {
+        let hosts: Vec<Host> = shapes
+            .iter()
+            .enumerate()
+            .map(|(id, &(total_cpus, total_mem))| Host {
+                id,
+                total_cpus,
+                total_mem,
+                alloc_cpus: 0.0,
+                alloc_mem: 0.0,
+            })
+            .collect();
+        let mut mem_index = BTreeSet::new();
+        let mut fit_tree = FitTree::new(hosts.len());
+        for h in &hosts {
+            mem_index.insert((order::key(h.free_mem()), h.id));
+            fit_tree.update(h.id, h.free_cpus(), h.free_mem());
+        }
         Cluster {
-            hosts: (0..cfg.hosts)
-                .map(|id| Host {
-                    id,
-                    total_cpus: cfg.cores_per_host,
-                    total_mem: cfg.mem_per_host_gb,
-                    alloc_cpus: 0.0,
-                    alloc_mem: 0.0,
-                })
-                .collect(),
-            placements: HashMap::new(),
+            host_comps: vec![Vec::new(); hosts.len()],
+            hosts,
+            slots: Vec::new(),
+            placed: BTreeSet::new(),
+            mem_index,
+            fit_tree,
         }
     }
 
@@ -79,19 +206,43 @@ impl Cluster {
         self.hosts.is_empty()
     }
 
-    /// Current placement of a component, if any.
+    /// Current placement of a component, if any. O(1).
     pub fn placement(&self, c: ComponentId) -> Option<&Placement> {
-        self.placements.get(&c)
+        self.slots.get(c)?.as_ref()
     }
 
-    /// Iterate placements.
+    /// Iterate placements in ascending component-id order.
     pub fn placements(&self) -> impl Iterator<Item = (&ComponentId, &Placement)> {
-        self.placements.iter()
+        self.placed
+            .iter()
+            .map(move |c| (c, self.slots[*c].as_ref().expect("placed set out of sync")))
+    }
+
+    /// Placed component ids, ascending — the monitor's live set,
+    /// maintained incrementally on place/remove.
+    pub fn placed_ids(&self) -> impl Iterator<Item = ComponentId> + '_ {
+        self.placed.iter().copied()
+    }
+
+    /// Component ids currently placed on a host (unordered).
+    pub fn components_on(&self, h: HostId) -> &[ComponentId] {
+        &self.host_comps[h]
     }
 
     /// Number of placed components.
     pub fn placed_count(&self) -> usize {
-        self.placements.len()
+        self.placed.len()
+    }
+
+    /// Mutate one host's ledger, keeping both capacity indexes in sync.
+    fn update_host<F: FnOnce(&mut Host)>(&mut self, h: HostId, f: F) {
+        let old_key = (order::key(self.hosts[h].free_mem()), h);
+        let removed = self.mem_index.remove(&old_key);
+        debug_assert!(removed, "mem index out of sync for host {h}");
+        f(&mut self.hosts[h]);
+        let host = &self.hosts[h];
+        self.mem_index.insert((order::key(host.free_mem()), h));
+        self.fit_tree.update(h, host.free_cpus(), host.free_mem());
     }
 
     /// Place a component with an initial allocation. Panics if already
@@ -104,24 +255,53 @@ impl Cluster {
         mem: f64,
         now: f64,
     ) -> bool {
-        assert!(!self.placements.contains_key(&c), "component {c} already placed");
-        let h = &mut self.hosts[host];
-        if h.free_cpus() + 1e-9 < cpus || h.free_mem() + 1e-9 < mem {
+        if c >= self.slots.len() {
+            self.slots.resize_with(c + 1, || None);
+        }
+        assert!(self.slots[c].is_none(), "component {c} already placed");
+        let h = &self.hosts[host];
+        if h.free_cpus() + CAPACITY_EPS < cpus || h.free_mem() + CAPACITY_EPS < mem {
             return false;
         }
-        h.alloc_cpus += cpus;
-        h.alloc_mem += mem;
-        self.placements.insert(c, Placement { host, alloc_cpus: cpus, alloc_mem: mem, placed_at: now });
+        self.update_host(host, |h| {
+            h.alloc_cpus += cpus;
+            h.alloc_mem += mem;
+        });
+        let host_slot = self.host_comps[host].len();
+        self.host_comps[host].push(c);
+        self.slots[c] = Some(Placement { host, alloc_cpus: cpus, alloc_mem: mem, placed_at: now, host_slot });
+        self.placed.insert(c);
         true
     }
 
     /// Remove a component, releasing its allocation. Returns its former
-    /// placement (None if it was not placed).
+    /// placement (None if it was not placed). The ledger is *not*
+    /// clamped: release is exact subtraction, and drift beyond the
+    /// tolerance is a bookkeeping bug surfaced by the debug assert.
     pub fn remove(&mut self, c: ComponentId) -> Option<Placement> {
-        let p = self.placements.remove(&c)?;
-        let h = &mut self.hosts[p.host];
-        h.alloc_cpus = (h.alloc_cpus - p.alloc_cpus).max(0.0);
-        h.alloc_mem = (h.alloc_mem - p.alloc_mem).max(0.0);
+        let p = self.slots.get_mut(c)?.take()?;
+        self.placed.remove(&c);
+        let list = &mut self.host_comps[p.host];
+        let last = list.len() - 1;
+        list.swap_remove(p.host_slot);
+        if p.host_slot < last {
+            let moved = list[p.host_slot];
+            self.slots[moved]
+                .as_mut()
+                .expect("moved component must be placed")
+                .host_slot = p.host_slot;
+        }
+        self.update_host(p.host, |h| {
+            h.alloc_cpus -= p.alloc_cpus;
+            h.alloc_mem -= p.alloc_mem;
+            debug_assert!(
+                h.alloc_cpus > -CAPACITY_EPS && h.alloc_mem > -CAPACITY_EPS,
+                "host {} ledger drifted negative: cpu {:.9} mem {:.9}",
+                h.id,
+                h.alloc_cpus,
+                h.alloc_mem
+            );
+        });
         Some(p)
     }
 
@@ -130,41 +310,68 @@ impl Cluster {
     /// shaper bug — hence the Result).
     pub fn resize(&mut self, c: ComponentId, cpus: f64, mem: f64) -> Result<(), String> {
         let p = self
-            .placements
-            .get_mut(&c)
+            .slots
+            .get_mut(c)
+            .and_then(Option::as_mut)
             .ok_or_else(|| format!("resize of unplaced component {c}"))?;
-        let h = &mut self.hosts[p.host];
-        let new_cpus = h.alloc_cpus - p.alloc_cpus + cpus;
-        let new_mem = h.alloc_mem - p.alloc_mem + mem;
-        if new_cpus > h.total_cpus + 1e-6 || new_mem > h.total_mem + 1e-6 {
+        let host = p.host;
+        let (old_cpus, old_mem) = (p.alloc_cpus, p.alloc_mem);
+        let h = &self.hosts[host];
+        let new_cpus = h.alloc_cpus - old_cpus + cpus;
+        let new_mem = h.alloc_mem - old_mem + mem;
+        if new_cpus > h.total_cpus + CAPACITY_EPS || new_mem > h.total_mem + CAPACITY_EPS {
             return Err(format!(
-                "resize of {c} would overcommit host {} (cpus {new_cpus:.2}/{:.2}, mem {new_mem:.2}/{:.2})",
-                p.host, h.total_cpus, h.total_mem
+                "resize of {c} would overcommit host {host} (cpus {new_cpus:.2}/{:.2}, mem {new_mem:.2}/{:.2})",
+                h.total_cpus, h.total_mem
             ));
         }
-        h.alloc_cpus = new_cpus;
-        h.alloc_mem = new_mem;
         p.alloc_cpus = cpus;
         p.alloc_mem = mem;
+        self.update_host(host, |h| {
+            h.alloc_cpus = new_cpus;
+            h.alloc_mem = new_mem;
+        });
         Ok(())
     }
 
-    /// First-fit host able to hold (cpus, mem) of *new* allocation.
+    /// First-fit: lowest-id host able to hold (cpus, mem) of *new*
+    /// allocation. Served by the segment tree (no full-host scan).
     pub fn first_fit(&self, cpus: f64, mem: f64) -> Option<HostId> {
-        self.hosts
-            .iter()
-            .find(|h| h.free_cpus() + 1e-9 >= cpus && h.free_mem() + 1e-9 >= mem)
-            .map(|h| h.id)
+        self.fit_tree.first_fit(cpus, mem)
     }
 
     /// Worst-fit host (most free memory) — spreads load, reducing the
-    /// chance that one host saturates on a utilization spike.
+    /// chance that one host saturates on a utilization spike. Served by
+    /// the free-memory index: walk hosts from most free memory down and
+    /// take the first whose CPU also fits (ties on free memory resolve
+    /// to the highest host id, matching the seed's `max_by` semantics).
     pub fn worst_fit(&self, cpus: f64, mem: f64) -> Option<HostId> {
-        self.hosts
-            .iter()
-            .filter(|h| h.free_cpus() + 1e-9 >= cpus && h.free_mem() + 1e-9 >= mem)
-            .max_by(|a, b| a.free_mem().partial_cmp(&b.free_mem()).unwrap())
-            .map(|h| h.id)
+        for &(k, h) in self.mem_index.iter().rev() {
+            if order::unkey(k) + CAPACITY_EPS < mem {
+                break; // every remaining host has less free memory
+            }
+            if self.hosts[h].free_cpus() + CAPACITY_EPS >= cpus {
+                return Some(h);
+            }
+        }
+        None
+    }
+
+    /// Best-fit host (least free memory that still fits) — packs tightly,
+    /// leaving large holes for large components. Ties on free memory
+    /// resolve to the lowest host id.
+    pub fn best_fit(&self, cpus: f64, mem: f64) -> Option<HostId> {
+        // the range start prunes hosts that cannot fit; the exact fit
+        // predicate is re-checked per candidate so the two epsilon forms
+        // can never disagree
+        let lo = (order::key(mem - CAPACITY_EPS), 0usize);
+        for &(_, h) in self.mem_index.range(lo..) {
+            let host = &self.hosts[h];
+            if host.free_cpus() + CAPACITY_EPS >= cpus && host.free_mem() + CAPACITY_EPS >= mem {
+                return Some(h);
+            }
+        }
+        None
     }
 
     /// Aggregate allocated fraction of total capacity: (cpu, mem) in [0,1].
@@ -179,24 +386,65 @@ impl Cluster {
         (ac / tc.max(1e-9), am / tm.max(1e-9))
     }
 
-    /// Debug invariant: per-host sums of placements match host ledgers.
+    /// Debug invariant: per-host sums of placements match host ledgers,
+    /// no host is overcommitted, and the arena, per-host lists and both
+    /// capacity indexes agree with each other.
     pub fn check_invariants(&self) -> Result<(), String> {
         let mut cpu = vec![0.0; self.hosts.len()];
         let mut mem = vec![0.0; self.hosts.len()];
-        for p in self.placements.values() {
+        for (&c, p) in self.placements() {
             cpu[p.host] += p.alloc_cpus;
             mem[p.host] += p.alloc_mem;
+            let slot = self.host_comps[p.host].get(p.host_slot).copied();
+            if slot != Some(c) {
+                return Err(format!(
+                    "component {c}: host_slot {} on host {} holds {slot:?}",
+                    p.host_slot, p.host
+                ));
+            }
+        }
+        let listed: usize = self.host_comps.iter().map(Vec::len).sum();
+        if listed != self.placed.len() {
+            return Err(format!(
+                "host lists hold {listed} components but {} are placed",
+                self.placed.len()
+            ));
         }
         for h in &self.hosts {
-            if (cpu[h.id] - h.alloc_cpus).abs() > 1e-6 || (mem[h.id] - h.alloc_mem).abs() > 1e-6 {
+            if (cpu[h.id] - h.alloc_cpus).abs() > CAPACITY_EPS
+                || (mem[h.id] - h.alloc_mem).abs() > CAPACITY_EPS
+            {
                 return Err(format!(
                     "host {} ledger drift: cpu {:.6} vs {:.6}, mem {:.6} vs {:.6}",
                     h.id, cpu[h.id], h.alloc_cpus, mem[h.id], h.alloc_mem
                 ));
             }
-            if h.alloc_cpus > h.total_cpus + 1e-6 || h.alloc_mem > h.total_mem + 1e-6 {
+            if h.alloc_cpus > h.total_cpus + CAPACITY_EPS || h.alloc_mem > h.total_mem + CAPACITY_EPS {
                 return Err(format!("host {} overcommitted", h.id));
             }
+            if !self.mem_index.contains(&(order::key(h.free_mem()), h.id)) {
+                return Err(format!("host {} missing from the free-memory index", h.id));
+            }
+            let leaf = self.fit_tree.base + h.id;
+            if self.fit_tree.cpu[leaf].to_bits() != h.free_cpus().to_bits()
+                || self.fit_tree.mem[leaf].to_bits() != h.free_mem().to_bits()
+            {
+                return Err(format!(
+                    "host {} fit-tree leaf stale: ({}, {}) vs ({}, {})",
+                    h.id,
+                    self.fit_tree.cpu[leaf],
+                    self.fit_tree.mem[leaf],
+                    h.free_cpus(),
+                    h.free_mem()
+                ));
+            }
+        }
+        if self.mem_index.len() != self.hosts.len() {
+            return Err(format!(
+                "free-memory index holds {} entries for {} hosts",
+                self.mem_index.len(),
+                self.hosts.len()
+            ));
         }
         Ok(())
     }
@@ -208,7 +456,7 @@ mod tests {
     use crate::config::ClusterConfig;
 
     fn cluster(n: usize) -> Cluster {
-        Cluster::new(&ClusterConfig { hosts: n, cores_per_host: 8.0, mem_per_host_gb: 32.0 })
+        Cluster::new(&ClusterConfig::uniform(n, 8.0, 32.0))
     }
 
     #[test]
@@ -257,6 +505,59 @@ mod tests {
     }
 
     #[test]
+    fn best_fit_packs_tightest() {
+        let mut c = cluster(3);
+        assert!(c.place(0, 0, 6.0, 30.0, 0.0)); // host 0: 2 free mem
+        assert!(c.place(1, 1, 1.0, 4.0, 0.0)); // host 1: 28 free mem
+        // host 0 fits a (1, 2) request and has the least room
+        assert_eq!(c.best_fit(1.0, 2.0), Some(0));
+        // too big for host 0's memory -> host 1 is the tightest fit
+        assert_eq!(c.best_fit(1.0, 8.0), Some(1));
+        assert_eq!(c.best_fit(100.0, 1.0), None);
+    }
+
+    #[test]
+    fn worst_fit_tie_breaks_to_highest_id() {
+        let c = cluster(4); // all hosts identical
+        assert_eq!(c.worst_fit(1.0, 1.0), Some(3));
+        assert_eq!(c.best_fit(1.0, 1.0), Some(0));
+        assert_eq!(c.first_fit(1.0, 1.0), Some(0));
+    }
+
+    #[test]
+    fn heterogeneous_classes_extend_the_cluster() {
+        let mut cfg = ClusterConfig::uniform(2, 8.0, 32.0);
+        cfg.extra_classes.push(crate::config::HostClass { count: 2, cores: 64.0, mem_gb: 256.0 });
+        let c = Cluster::new(&cfg);
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.hosts[1].total_cpus, 8.0);
+        assert_eq!(c.hosts[2].total_cpus, 64.0);
+        assert_eq!(c.hosts[3].total_mem, 256.0);
+        // only the big hosts can take a 32-core component
+        assert_eq!(c.first_fit(32.0, 100.0), Some(2));
+        assert_eq!(c.worst_fit(32.0, 100.0), Some(3));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn placed_ids_ascending_and_host_lists_consistent() {
+        let mut c = cluster(2);
+        for id in [5usize, 1, 9, 3] {
+            assert!(c.place(id, id % 2, 0.5, 1.0, 0.0));
+        }
+        let ids: Vec<usize> = c.placed_ids().collect();
+        assert_eq!(ids, vec![1, 3, 5, 9]);
+        assert_eq!(c.placed_count(), 4);
+        c.remove(5);
+        let ids: Vec<usize> = c.placed_ids().collect();
+        assert_eq!(ids, vec![1, 3, 9]);
+        let mut on0: Vec<usize> = c.components_on(0).to_vec();
+        on0.sort_unstable();
+        assert!(on0.iter().all(|&x| x % 2 == 0 || c.placement(x).unwrap().host == 0));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
     fn allocation_fraction() {
         let mut c = cluster(2);
         assert!(c.place(0, 0, 8.0, 16.0, 0.0));
@@ -272,4 +573,8 @@ mod tests {
         assert!(c.place(0, 0, 1.0, 1.0, 0.0));
         c.place(0, 0, 1.0, 1.0, 0.0);
     }
+
+    // The churn property comparing every indexed fit query against a
+    // brute-force linear scan lives in tests/placer_prop.rs (one oracle,
+    // 200 seeds) — not duplicated here.
 }

@@ -103,12 +103,118 @@ impl KernelKind {
     }
 }
 
-/// Cluster shape.
+/// Which application scheduler runs admission (control-plane trait
+/// `scheduler::Scheduler`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Strict FIFO by submit time with head-of-line blocking (§3 / [42]).
+    Fifo,
+    /// FIFO with aggressive backfill: when the head is blocked, later
+    /// queued applications that fit may start (no reservations).
+    Backfill,
+}
+
+impl SchedulerKind {
+    /// Parse from CLI text.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Some(Self::Fifo),
+            "backfill" => Some(Self::Backfill),
+            _ => None,
+        }
+    }
+
+    /// Stable display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Fifo => "fifo",
+            Self::Backfill => "backfill",
+        }
+    }
+}
+
+/// Which placement heuristic picks a host for each new component
+/// (control-plane trait `scheduler::Placer`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacerKind {
+    /// Most free memory — spreads load (the seed's only policy).
+    WorstFit,
+    /// Lowest host id that fits — fast, fragmenting.
+    FirstFit,
+    /// Least free memory that fits — packs tightly.
+    BestFit,
+}
+
+impl PlacerKind {
+    /// Parse from CLI text.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "worst-fit" | "worstfit" | "worst" => Some(Self::WorstFit),
+            "first-fit" | "firstfit" | "first" => Some(Self::FirstFit),
+            "best-fit" | "bestfit" | "best" => Some(Self::BestFit),
+            _ => None,
+        }
+    }
+
+    /// Stable display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::WorstFit => "worst-fit",
+            Self::FirstFit => "first-fit",
+            Self::BestFit => "best-fit",
+        }
+    }
+}
+
+/// Scheduling-policy selection: which scheduler and placer the engine
+/// instantiates. Defaults reproduce the seed system's policies (strict
+/// FIFO over worst-fit; decisions match the seed up to the unified
+/// `cluster::CAPACITY_EPS` tolerance).
 #[derive(Debug, Clone)]
+pub struct SchedConfig {
+    pub scheduler: SchedulerKind,
+    pub placer: PlacerKind,
+    /// Max blocked applications the backfill scheduler scans past
+    /// before giving up for the tick (bounds head-of-line starvation
+    /// scanning; ignored by strict FIFO).
+    pub backfill_depth: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig { scheduler: SchedulerKind::Fifo, placer: PlacerKind::WorstFit, backfill_depth: 16 }
+    }
+}
+
+/// A batch of identical hosts appended to the homogeneous base cluster.
+#[derive(Debug, Clone)]
+pub struct HostClass {
+    pub count: usize,
+    pub cores: f64,
+    pub mem_gb: f64,
+}
+
+/// Cluster shape: `hosts` homogeneous machines plus optional
+/// heterogeneous extra classes (appended in order, so host ids stay
+/// stable: base hosts first, then each class).
+#[derive(Debug, Clone, Default)]
 pub struct ClusterConfig {
     pub hosts: usize,
     pub cores_per_host: f64,
     pub mem_per_host_gb: f64,
+    pub extra_classes: Vec<HostClass>,
+}
+
+impl ClusterConfig {
+    /// Homogeneous cluster shorthand (what every seed call site meant).
+    pub fn uniform(hosts: usize, cores_per_host: f64, mem_per_host_gb: f64) -> Self {
+        ClusterConfig { hosts, cores_per_host, mem_per_host_gb, extra_classes: Vec::new() }
+    }
+
+    /// Total number of hosts across the base class and extras.
+    pub fn total_hosts(&self) -> usize {
+        self.hosts + self.extra_classes.iter().map(|c| c.count).sum::<usize>()
+    }
 }
 
 /// Workload generator parameters (trace-derived; DESIGN.md §2).
@@ -167,6 +273,7 @@ pub struct SimConfig {
     pub workload: WorkloadConfig,
     pub forecast: ForecastConfig,
     pub shaper: ShaperConfig,
+    pub sched: SchedConfig,
     /// Hard stop for simulated time (seconds); 0 = run to completion.
     pub max_sim_time_s: f64,
     /// Max failures per app before the shaper stops shaping it (§4.2).
@@ -178,7 +285,7 @@ impl SimConfig {
     pub fn small() -> Self {
         SimConfig {
             seed: 42,
-            cluster: ClusterConfig { hosts: 8, cores_per_host: 32.0, mem_per_host_gb: 128.0 },
+            cluster: ClusterConfig::uniform(8, 32.0, 128.0),
             workload: WorkloadConfig {
                 num_apps: 500,
                 elastic_fraction: 0.6,
@@ -202,6 +309,7 @@ impl SimConfig {
                 k2: 3.0,
                 shaping_interval_s: 60.0,
             },
+            sched: SchedConfig::default(),
             max_sim_time_s: 0.0,
             max_failures_before_giveup: 5,
         }
@@ -231,7 +339,7 @@ impl SimConfig {
     /// 100 apps, arrivals N(120 s, 40 s).
     pub fn prototype() -> Self {
         let mut c = Self::small();
-        c.cluster = ClusterConfig { hosts: 10, cores_per_host: 8.0, mem_per_host_gb: 64.0 };
+        c.cluster = ClusterConfig::uniform(10, 8.0, 64.0);
         c.workload.num_apps = 100;
         c.workload.max_elastic = 8;
         // §5.1: arrivals ~ N(120 s, 40 s) — no fast bursts; memory flavors
@@ -270,6 +378,37 @@ impl SimConfig {
             }
             if let Some(v) = c.get("mem_per_host_gb").and_then(Json::as_f64) {
                 self.cluster.mem_per_host_gb = v;
+            }
+            if let Some(classes) = c.get("classes").and_then(Json::as_arr) {
+                self.cluster.extra_classes.clear();
+                for cl in classes {
+                    let count = cl
+                        .get("count")
+                        .and_then(Json::as_usize)
+                        .ok_or("cluster class needs a 'count'")?;
+                    let cores = cl
+                        .get("cores")
+                        .and_then(Json::as_f64)
+                        .ok_or("cluster class needs 'cores'")?;
+                    let mem_gb = cl
+                        .get("mem_gb")
+                        .and_then(Json::as_f64)
+                        .ok_or("cluster class needs 'mem_gb'")?;
+                    self.cluster.extra_classes.push(HostClass { count, cores, mem_gb });
+                }
+            }
+        }
+        if let Some(s) = j.get("sched") {
+            if let Some(v) = s.get("scheduler").and_then(Json::as_str) {
+                self.sched.scheduler = SchedulerKind::parse(v)
+                    .ok_or_else(|| format!("bad scheduler '{v}'"))?;
+            }
+            if let Some(v) = s.get("placer").and_then(Json::as_str) {
+                self.sched.placer =
+                    PlacerKind::parse(v).ok_or_else(|| format!("bad placer '{v}'"))?;
+            }
+            if let Some(v) = s.get("backfill_depth").and_then(Json::as_usize) {
+                self.sched.backfill_depth = v;
             }
         }
         if let Some(w) = j.get("workload") {
@@ -345,6 +484,14 @@ impl SimConfig {
         }
         if self.cluster.cores_per_host <= 0.0 || self.cluster.mem_per_host_gb <= 0.0 {
             return Err("host resources must be positive".into());
+        }
+        for (i, c) in self.cluster.extra_classes.iter().enumerate() {
+            if c.count == 0 {
+                return Err(format!("cluster class {i} has count 0"));
+            }
+            if c.cores <= 0.0 || c.mem_gb <= 0.0 {
+                return Err(format!("cluster class {i} resources must be positive"));
+            }
         }
         if !(0.0..=1.0).contains(&self.workload.elastic_fraction) {
             return Err("elastic_fraction must be in [0,1]".into());
@@ -434,5 +581,39 @@ mod tests {
         assert_eq!(ForecasterKind::parse("gp"), Some(ForecasterKind::GpPjrt));
         assert_eq!(KernelKind::parse("rbf"), Some(KernelKind::Rbf));
         assert_eq!(Policy::Baseline.name(), "baseline");
+        assert_eq!(SchedulerKind::parse("Backfill"), Some(SchedulerKind::Backfill));
+        assert_eq!(PlacerKind::parse("best-fit"), Some(PlacerKind::BestFit));
+        assert_eq!(PlacerKind::parse("worstfit"), Some(PlacerKind::WorstFit));
+        assert_eq!(PlacerKind::FirstFit.name(), "first-fit");
+        assert!(SchedulerKind::parse("srpt").is_none());
+    }
+
+    #[test]
+    fn sched_defaults_reproduce_seed_system() {
+        let c = SimConfig::small();
+        assert_eq!(c.sched.scheduler, SchedulerKind::Fifo);
+        assert_eq!(c.sched.placer, PlacerKind::WorstFit);
+    }
+
+    #[test]
+    fn sched_and_classes_json_overrides() {
+        let mut c = SimConfig::small();
+        let j = Json::parse(
+            r#"{"sched":{"scheduler":"backfill","placer":"best-fit","backfill_depth":4},
+                "cluster":{"classes":[{"count":2,"cores":64,"mem_gb":256}]}}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.sched.scheduler, SchedulerKind::Backfill);
+        assert_eq!(c.sched.placer, PlacerKind::BestFit);
+        assert_eq!(c.sched.backfill_depth, 4);
+        assert_eq!(c.cluster.extra_classes.len(), 1);
+        assert_eq!(c.cluster.total_hosts(), 8 + 2);
+
+        let bad = Json::parse(r#"{"sched":{"placer":"random"}}"#).unwrap();
+        assert!(SimConfig::small().apply_json(&bad).is_err());
+        let bad_class = Json::parse(r#"{"cluster":{"classes":[{"count":0,"cores":1,"mem_gb":1}]}}"#)
+            .unwrap();
+        assert!(SimConfig::small().apply_json(&bad_class).is_err());
     }
 }

@@ -7,3 +7,4 @@ pub mod fig2;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
+pub mod sched_sweep;

@@ -1,0 +1,108 @@
+//! Scheduler × placer policy sweep — the scenario axis the control-plane
+//! traits open up (PR 2). Runs the same seeded workload under every
+//! (scheduler, placer) combination and reports turnaround, slack,
+//! failures and admission behavior side by side, the way Fig. 3 compares
+//! shaping policies.
+
+use crate::config::{PlacerKind, SchedulerKind, SimConfig};
+use crate::metrics::RunReport;
+use crate::sim::engine::run_simulation;
+
+/// All scheduler kinds, sweep order.
+pub const SCHEDULERS: [SchedulerKind; 2] = [SchedulerKind::Fifo, SchedulerKind::Backfill];
+
+/// All placer kinds, sweep order.
+pub const PLACERS: [PlacerKind; 3] =
+    [PlacerKind::WorstFit, PlacerKind::FirstFit, PlacerKind::BestFit];
+
+/// Run every (scheduler, placer) combination on the same workload.
+/// Reports come back in sweep order, named `<scheduler>/<placer>`.
+pub fn run(base: &SimConfig) -> anyhow::Result<Vec<RunReport>> {
+    run_filtered(base, None, None)
+}
+
+/// Like [`run`], but restricted to one scheduler and/or one placer when
+/// given (`--scheduler`/`--placer` on the `sched-sweep` subcommand sweep
+/// only the other axis).
+pub fn run_filtered(
+    base: &SimConfig,
+    only_scheduler: Option<SchedulerKind>,
+    only_placer: Option<PlacerKind>,
+) -> anyhow::Result<Vec<RunReport>> {
+    let mut out = Vec::with_capacity(SCHEDULERS.len() * PLACERS.len());
+    for sched in SCHEDULERS {
+        if only_scheduler.map_or(false, |s| s != sched) {
+            continue;
+        }
+        for placer in PLACERS {
+            if only_placer.map_or(false, |p| p != placer) {
+                continue;
+            }
+            let mut cfg = base.clone();
+            cfg.sched.scheduler = sched;
+            cfg.sched.placer = placer;
+            let label = format!("{}/{}", sched.name(), placer.name());
+            crate::info!("running sweep cell '{label}'");
+            out.push(run_simulation(&cfg, None, &label)?);
+        }
+    }
+    Ok(out)
+}
+
+/// Render the sweep as a comparison table.
+pub fn render(reports: &[RunReport]) -> String {
+    let mut t = crate::util::table::Table::new(&[
+        "scheduler/placer",
+        "turnaround med (s)",
+        "mem slack mean",
+        "failed %",
+        "oom",
+        "preempt full/el",
+        "alloc mem",
+    ]);
+    for r in reports {
+        t.row(&[
+            r.name.clone(),
+            format!("{:.0}", r.turnaround.median),
+            format!("{:.3}", r.mem_slack.mean),
+            format!("{:.2}", r.failed_app_fraction * 100.0),
+            r.oom_events.to_string(),
+            format!("{}/{}", r.app_preemptions, r.elastic_preemptions),
+            format!("{:.3}", r.mean_alloc_mem),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ForecasterKind, Policy};
+
+    #[test]
+    fn sweep_runs_all_cells() {
+        let mut cfg = SimConfig::small();
+        cfg.workload.num_apps = 10;
+        cfg.cluster.hosts = 4;
+        cfg.workload.runtime_scale = 0.2;
+        cfg.forecast.kind = ForecasterKind::Oracle;
+        cfg.shaper.policy = Policy::Pessimistic;
+        let reports = run(&cfg).unwrap();
+        assert_eq!(reports.len(), 6);
+        assert_eq!(reports[0].name, "fifo/worst-fit");
+        assert_eq!(reports[5].name, "backfill/best-fit");
+        for r in &reports {
+            assert_eq!(r.completed, 10, "{}", r.summary());
+        }
+        let rendered = render(&reports);
+        assert!(rendered.contains("backfill/first-fit"));
+
+        // filters restrict the sweep to one axis
+        let only = run_filtered(&cfg, Some(SchedulerKind::Fifo), None).unwrap();
+        assert_eq!(only.len(), 3);
+        assert!(only.iter().all(|r| r.name.starts_with("fifo/")));
+        let one = run_filtered(&cfg, None, Some(PlacerKind::BestFit)).unwrap();
+        assert_eq!(one.len(), 2);
+        assert!(one.iter().all(|r| r.name.ends_with("/best-fit")));
+    }
+}

@@ -10,8 +10,8 @@
 
 use std::sync::Arc;
 
-use zoe_shaper::config::{ForecasterKind, KernelKind, Policy, SimConfig};
-use zoe_shaper::experiments::{fig2, fig3, fig4, fig5};
+use zoe_shaper::config::{ForecasterKind, KernelKind, PlacerKind, Policy, SchedulerKind, SimConfig};
+use zoe_shaper::experiments::{fig2, fig3, fig4, fig5, sched_sweep};
 use zoe_shaper::runtime::Runtime;
 use zoe_shaper::sim::engine::run_simulation;
 use zoe_shaper::util::cli::Args;
@@ -23,6 +23,7 @@ fn main() {
     let code = match argv.first().map(String::as_str) {
         Some("simulate") => dispatch(cmd_simulate, &argv[1..]),
         Some("compare") => dispatch(cmd_compare, &argv[1..]),
+        Some("sched-sweep") => dispatch(cmd_sched_sweep, &argv[1..]),
         Some("forecast-eval") => dispatch(cmd_forecast_eval, &argv[1..]),
         Some("sweep") => dispatch(cmd_sweep, &argv[1..]),
         Some("live") => dispatch(cmd_live, &argv[1..]),
@@ -45,6 +46,7 @@ fn top_help() -> &'static str {
      SUBCOMMANDS:\n\
        simulate        run one simulation (—policy, --forecaster, --preset...)\n\
        compare         Fig. 3: baseline vs optimistic vs pessimistic (oracle)\n\
+       sched-sweep     scheduler x placer policy sweep on one workload\n\
        forecast-eval   Fig. 2: ARIMA vs GP prediction-error distributions\n\
        sweep           Fig. 4: K1 x K2 heat maps (ARIMA or GP)\n\
        live            Fig. 5: paced prototype, baseline vs shaped\n\
@@ -72,6 +74,8 @@ fn sim_args(name: &str, about: &str) -> Args {
         .opt("seed", "", "workload seed (overrides preset)")
         .opt("apps", "", "number of applications (overrides preset)")
         .opt("hosts", "", "number of hosts (overrides preset)")
+        .opt("scheduler", "", "application scheduler: fifo|backfill")
+        .opt("placer", "", "component placer: worst-fit|first-fit|best-fit")
         .opt("log", "info", "log level: error|warn|info|debug")
 }
 
@@ -96,6 +100,14 @@ fn load_cfg(a: &Args) -> Result<SimConfig, String> {
     }
     if !a.get("hosts").is_empty() {
         cfg.cluster.hosts = a.get_usize("hosts")?;
+    }
+    if !a.get("scheduler").is_empty() {
+        cfg.sched.scheduler = SchedulerKind::parse(a.get("scheduler"))
+            .ok_or_else(|| format!("bad --scheduler {}", a.get("scheduler")))?;
+    }
+    if !a.get("placer").is_empty() {
+        cfg.sched.placer = PlacerKind::parse(a.get("placer"))
+            .ok_or_else(|| format!("bad --placer {}", a.get("placer")))?;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -155,6 +167,29 @@ fn cmd_compare(argv: &[String]) -> Result<(), String> {
     let cfg = load_cfg(&a)?;
     let reports = fig3::run(&cfg).map_err(|e| format!("{e:#}"))?;
     println!("{}", fig3::render(&reports));
+    Ok(())
+}
+
+fn cmd_sched_sweep(argv: &[String]) -> Result<(), String> {
+    let spec = sim_args(
+        "zoe-shaper sched-sweep",
+        "run every scheduler x placer combination on one seeded workload",
+    )
+    .opt("policy", "pessimistic", "baseline|optimistic|pessimistic")
+    .opt("forecaster", "oracle", "oracle|last-value|arima|gp-native|gp");
+    let a = parse_or_help(spec, argv)?;
+    let mut cfg = load_cfg(&a)?;
+    cfg.shaper.policy =
+        Policy::parse(a.get("policy")).ok_or_else(|| format!("bad --policy {}", a.get("policy")))?;
+    cfg.forecast.kind = ForecasterKind::parse(a.get("forecaster"))
+        .ok_or_else(|| format!("bad --forecaster {}", a.get("forecaster")))?;
+    cfg.validate()?;
+    // --scheduler/--placer pin one axis; the sweep covers the other
+    let only_sched = if a.get("scheduler").is_empty() { None } else { Some(cfg.sched.scheduler) };
+    let only_placer = if a.get("placer").is_empty() { None } else { Some(cfg.sched.placer) };
+    let reports =
+        sched_sweep::run_filtered(&cfg, only_sched, only_placer).map_err(|e| format!("{e:#}"))?;
+    println!("{}", sched_sweep::render(&reports));
     Ok(())
 }
 

@@ -35,6 +35,10 @@ pub struct Metrics {
     alloc_mem_samples: Vec<f64>,
     /// forecasts issued (perf accounting).
     pub forecasts_issued: u64,
+    /// monitor sampling passes executed (perf accounting).
+    pub monitor_ticks: u64,
+    /// shaper passes executed (perf accounting).
+    pub shaper_ticks: u64,
     /// peak single-host memory usage as a fraction of capacity.
     pub peak_host_usage: f64,
     /// number of apps in the run.
@@ -55,6 +59,8 @@ impl Metrics {
             alloc_cpu_samples: Vec::new(),
             alloc_mem_samples: Vec::new(),
             forecasts_issued: 0,
+            monitor_ticks: 0,
+            shaper_ticks: 0,
             peak_host_usage: 0.0,
             num_apps,
         }
@@ -127,6 +133,8 @@ impl Metrics {
             mean_alloc_cpu: crate::util::stats::mean(&self.alloc_cpu_samples),
             mean_alloc_mem: crate::util::stats::mean(&self.alloc_mem_samples),
             forecasts_issued: self.forecasts_issued,
+            monitor_ticks: self.monitor_ticks,
+            shaper_ticks: self.shaper_ticks,
             peak_host_usage: self.peak_host_usage,
             sim_time,
         }
@@ -154,6 +162,8 @@ pub struct RunReport {
     pub mean_alloc_cpu: f64,
     pub mean_alloc_mem: f64,
     pub forecasts_issued: u64,
+    pub monitor_ticks: u64,
+    pub shaper_ticks: u64,
     pub peak_host_usage: f64,
     pub sim_time: f64,
 }
@@ -218,6 +228,8 @@ impl RunReport {
             ("wasted_work", Json::Num(self.wasted_work)),
             ("mean_alloc_cpu", Json::Num(self.mean_alloc_cpu)),
             ("mean_alloc_mem", Json::Num(self.mean_alloc_mem)),
+            ("monitor_ticks", Json::Num(self.monitor_ticks as f64)),
+            ("shaper_ticks", Json::Num(self.shaper_ticks as f64)),
             ("sim_time", Json::Num(self.sim_time)),
             ("turnarounds_sample", num_arr(&sample(&self.turnarounds, 200))),
             ("mem_slacks_sample", num_arr(&sample(&self.mem_slacks, 200))),

@@ -3,10 +3,114 @@
 //! forecasting module consumes. Application-agnostic by design: it reads
 //! the "OS view" (here, the component's utilization pattern), never
 //! instrumenting applications.
+//!
+//! [`TickBuffers`] is the columnar scratch for one sampling pass: the
+//! engine fills one row per live component (walking the cluster's
+//! incrementally-maintained placed set instead of rescanning every
+//! application), the pattern evaluation is sharded over `util::pool`
+//! into the `fracs` column, and the per-host accumulators feed the OOM
+//! pass without re-filtering a global samples vector. All columns are
+//! reused across ticks — the steady state is allocation-free, mirroring
+//! the `GpWorkspace` discipline of the forecasting engine.
 
 use std::collections::VecDeque;
 
-use crate::workload::ComponentId;
+use crate::workload::{AppId, ComponentId, HostId};
+
+/// Columnar per-tick sampling scratch, reused across monitor ticks.
+/// One row per placed component, in ascending component-id order (which
+/// is also ascending application order — workload ids are dense), so
+/// per-host sums and OOM-victim ordering are deterministic and identical
+/// to a sequential full rescan.
+#[derive(Debug, Default)]
+pub struct TickBuffers {
+    pub comp: Vec<ComponentId>,
+    pub app: Vec<AppId>,
+    /// Pattern step of the owning app at this tick.
+    pub step: Vec<u64>,
+    pub host: Vec<HostId>,
+    pub cpu_req: Vec<f64>,
+    pub mem_req: Vec<f64>,
+    pub alloc_cpus: Vec<f64>,
+    pub alloc_mem: Vec<f64>,
+    pub is_core: Vec<bool>,
+    /// (cpu, mem) utilization fractions — filled by the (sharded)
+    /// pattern-evaluation pass.
+    pub fracs: Vec<(f64, f64)>,
+    pub used_mem: Vec<f64>,
+    /// Per-host memory usage accumulated this tick.
+    pub host_usage_mem: Vec<f64>,
+    /// Per-host row indices (ascending, so per-host victim candidates
+    /// keep global sampling order).
+    pub host_samples: Vec<Vec<u32>>,
+}
+
+impl TickBuffers {
+    /// Scratch sized for a cluster of `num_hosts` hosts.
+    pub fn new(num_hosts: usize) -> Self {
+        TickBuffers {
+            host_usage_mem: vec![0.0; num_hosts],
+            host_samples: vec![Vec::new(); num_hosts],
+            ..Default::default()
+        }
+    }
+
+    /// Reset for a new tick, keeping every column's capacity.
+    pub fn clear(&mut self) {
+        self.comp.clear();
+        self.app.clear();
+        self.step.clear();
+        self.host.clear();
+        self.cpu_req.clear();
+        self.mem_req.clear();
+        self.alloc_cpus.clear();
+        self.alloc_mem.clear();
+        self.is_core.clear();
+        self.fracs.clear();
+        self.used_mem.clear();
+        for x in &mut self.host_usage_mem {
+            *x = 0.0;
+        }
+        for v in &mut self.host_samples {
+            v.clear();
+        }
+    }
+
+    /// Append one sample row's metadata (fractions are filled later).
+    #[allow(clippy::too_many_arguments)]
+    pub fn push_row(
+        &mut self,
+        comp: ComponentId,
+        app: AppId,
+        step: u64,
+        host: HostId,
+        cpu_req: f64,
+        mem_req: f64,
+        alloc_cpus: f64,
+        alloc_mem: f64,
+        is_core: bool,
+    ) {
+        self.comp.push(comp);
+        self.app.push(app);
+        self.step.push(step);
+        self.host.push(host);
+        self.cpu_req.push(cpu_req);
+        self.mem_req.push(mem_req);
+        self.alloc_cpus.push(alloc_cpus);
+        self.alloc_mem.push(alloc_mem);
+        self.is_core.push(is_core);
+    }
+
+    /// Number of sample rows this tick.
+    pub fn len(&self) -> usize {
+        self.comp.len()
+    }
+
+    /// True when no rows were sampled.
+    pub fn is_empty(&self) -> bool {
+        self.comp.is_empty()
+    }
+}
 
 /// Bounded utilization history for one component (fractions of request).
 #[derive(Debug, Clone, Default)]
@@ -105,6 +209,24 @@ mod tests {
         m.reset(0);
         assert_eq!(m.len(0), 0);
         assert_eq!(m.samples_taken(), 2); // counter is cumulative
+    }
+
+    #[test]
+    fn tick_buffers_clear_keeps_shape() {
+        let mut t = TickBuffers::new(2);
+        t.push_row(3, 1, 0, 0, 1.0, 2.0, 1.0, 2.0, true);
+        t.push_row(4, 1, 0, 1, 1.0, 2.0, 1.0, 2.0, false);
+        t.fracs.push((0.5, 0.5));
+        t.fracs.push((0.5, 0.5));
+        t.used_mem.extend([1.0, 1.0]);
+        t.host_usage_mem[0] += 1.0;
+        t.host_samples[0].push(0);
+        assert_eq!(t.len(), 2);
+        t.clear();
+        assert!(t.is_empty());
+        assert_eq!(t.host_usage_mem, vec![0.0, 0.0]);
+        assert!(t.host_samples[0].is_empty());
+        assert_eq!(t.host_samples.len(), 2);
     }
 
     #[test]

@@ -1,15 +1,39 @@
-//! FIFO application scheduler (the "existing scheduler" of §3 / [42]).
+//! Application scheduling: the pluggable control-plane traits.
 //!
-//! Reservation-centric admission: an application is admitted when all its
-//! **core** components can be placed, charged against current host
+//! The seed hard-wired one FIFO scheduler over one worst-fit placer;
+//! this module splits the two decisions into traits so experiments can
+//! sweep policies (Flex [arXiv 2006.01354] and ADARES [arXiv 1812.01837]
+//! both locate the interesting design space here, *on top of* the
+//! usage-tracking substrate):
+//!
+//! * [`Scheduler`] — admission order: which queued application starts
+//!   next. [`FifoScheduler`] is the paper's strict FIFO (§3 / [42]);
+//!   [`BackfillScheduler`] lets later applications jump a blocked head.
+//! * [`Placer`] — host choice for each new component. [`WorstFitPlacer`]
+//!   (most free memory, the seed default) spreads load;
+//!   [`FirstFitPlacer`] and [`BestFitPlacer`] trade spread for packing.
+//!   All three are served by the cluster's capacity indexes — no
+//!   full-host scans.
+//!
+//! Admission is reservation-centric: an application is admitted when all
+//! its **core** components can be placed, charged against current host
 //! *allocations* (so shaping that trims allocations directly increases
 //! admission capacity — the paper's efficiency mechanism). Elastic
-//! components are placed best-effort. Strict FIFO: head-of-line blocking
-//! by original submit time, which is also the priority a resubmitted
-//! (preempted/failed) application retains (§3.2).
+//! components are placed best-effort. A resubmitted (preempted/failed)
+//! application retains its *original* submit-time priority (§3.2).
+//!
+//! Queue keys order by `(submit_time, app id)` through
+//! [`crate::util::order::key`], so a NaN submit time sorts to the back
+//! deterministically instead of panicking mid-`binary_search` the way
+//! the seed's `partial_cmp(..).unwrap()` did; enqueue/dequeue are
+//! O(log n) B-tree operations instead of `Vec::remove(0)` shifts.
+
+use std::collections::BTreeSet;
 
 use crate::cluster::Cluster;
-use crate::workload::{AppId, Application, AppState};
+use crate::config::{PlacerKind, SchedConfig, SchedulerKind};
+use crate::util::order;
+use crate::workload::{AppId, Application, AppState, HostId};
 
 /// Outcome of a placement attempt for one application.
 #[derive(Debug, Clone, PartialEq)]
@@ -21,11 +45,109 @@ pub struct PlacementOutcome {
     pub skipped_elastic: Vec<usize>,
 }
 
-/// FIFO queue keyed by original submit time.
+/// Host-selection policy for one new component allocation.
+pub trait Placer: Send + Sync {
+    /// Stable display name (experiment labels).
+    fn name(&self) -> &'static str;
+
+    /// Choose a host able to hold (cpus, mem) of *new* allocation.
+    fn select(&self, cluster: &Cluster, cpus: f64, mem: f64) -> Option<HostId>;
+}
+
+/// Most free memory first (the seed's only policy): spreads load, which
+/// reduces correlated OOM pressure when sibling components spike together.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct WorstFitPlacer;
+
+impl Placer for WorstFitPlacer {
+    fn name(&self) -> &'static str {
+        "worst-fit"
+    }
+
+    fn select(&self, cluster: &Cluster, cpus: f64, mem: f64) -> Option<HostId> {
+        cluster.worst_fit(cpus, mem)
+    }
+}
+
+/// Lowest host id that fits: cheap and cache-friendly, fragments more.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FirstFitPlacer;
+
+impl Placer for FirstFitPlacer {
+    fn name(&self) -> &'static str {
+        "first-fit"
+    }
+
+    fn select(&self, cluster: &Cluster, cpus: f64, mem: f64) -> Option<HostId> {
+        cluster.first_fit(cpus, mem)
+    }
+}
+
+/// Least free memory that still fits: packs tightly, keeping large holes
+/// available for large components.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct BestFitPlacer;
+
+impl Placer for BestFitPlacer {
+    fn name(&self) -> &'static str {
+        "best-fit"
+    }
+
+    fn select(&self, cluster: &Cluster, cpus: f64, mem: f64) -> Option<HostId> {
+        cluster.best_fit(cpus, mem)
+    }
+}
+
+/// Admission-order policy over the queued applications.
+pub trait Scheduler: Send {
+    /// Stable display name (experiment labels).
+    fn name(&self) -> &'static str;
+
+    /// Enqueue an application. A resubmitted app re-enters at its
+    /// *original* submit-time priority (§3.2).
+    fn enqueue(&mut self, apps: &[Application], id: AppId);
+
+    /// Number of queued applications.
+    fn len(&self) -> usize;
+
+    /// True when the queue is empty.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Queued ids in priority order (head first).
+    fn queued(&self) -> Vec<AppId>;
+
+    /// Attempt to start queued applications, placing their components on
+    /// the cluster through `placer`. Returns the applications started
+    /// (their state is set to Running).
+    ///
+    /// Placement allocates `price` × the *reservation*: 1.0 for the
+    /// reservation-centric admission the paper's system keeps (the shaper
+    /// trims afterwards), < 1.0 for Borg/Omega-style optimistic
+    /// over-commitment ([62], [6]).
+    fn try_schedule(
+        &mut self,
+        apps: &mut [Application],
+        cluster: &mut Cluster,
+        placer: &dyn Placer,
+        now: f64,
+        price: f64,
+    ) -> Vec<PlacementOutcome>;
+}
+
+/// Queue key: total-order submit time then app id — NaN-safe, unique.
+type QueueKey = (u64, AppId);
+
+fn queue_key(apps: &[Application], id: AppId) -> QueueKey {
+    (order::key(apps[id].submit_time), id)
+}
+
+/// Strict FIFO queue keyed by original submit time: head-of-line
+/// blocking, no backfill.
 #[derive(Debug, Default)]
 pub struct FifoScheduler {
-    /// Queued app ids, kept sorted by (submit_time, id).
-    queue: Vec<AppId>,
+    queue: BTreeSet<QueueKey>,
 }
 
 impl FifoScheduler {
@@ -33,58 +155,41 @@ impl FifoScheduler {
     pub fn new() -> Self {
         Self::default()
     }
+}
 
-    /// Enqueue an application, keeping FIFO-by-submit-time order. A
-    /// resubmitted app re-enters at its *original* priority (§3.2).
-    pub fn enqueue(&mut self, apps: &[Application], id: AppId) {
-        debug_assert!(!self.queue.contains(&id), "app {id} double-enqueued");
-        let key = |a: AppId| (apps[a].submit_time, a);
-        let pos = self
-            .queue
-            .binary_search_by(|&q| key(q).partial_cmp(&key(id)).unwrap())
-            .unwrap_or_else(|p| p);
-        self.queue.insert(pos, id);
+impl Scheduler for FifoScheduler {
+    fn name(&self) -> &'static str {
+        "fifo"
     }
 
-    /// Number of queued applications.
-    pub fn len(&self) -> usize {
+    fn enqueue(&mut self, apps: &[Application], id: AppId) {
+        let inserted = self.queue.insert(queue_key(apps, id));
+        debug_assert!(inserted, "app {id} double-enqueued");
+    }
+
+    fn len(&self) -> usize {
         self.queue.len()
     }
 
-    /// True when the queue is empty.
-    pub fn is_empty(&self) -> bool {
-        self.queue.is_empty()
+    fn queued(&self) -> Vec<AppId> {
+        self.queue.iter().map(|&(_, id)| id).collect()
     }
 
-    /// Queued ids in priority order (head first).
-    pub fn queued(&self) -> &[AppId] {
-        &self.queue
-    }
-
-    /// Attempt to start queued applications in FIFO order, placing their
-    /// components on the cluster. Stops at the first application whose
-    /// core components cannot all be placed (strict FIFO, no backfill).
-    ///
-    /// Placement allocates `price` x the *reservation*: 1.0 for the
-    /// reservation-centric admission the paper's system keeps (the shaper
-    /// trims afterwards), < 1.0 for Borg/Omega-style optimistic
-    /// over-commitment, where new work is admitted against reclaimed
-    /// capacity and collisions are left to the OS ([62], [6]).
-    /// Returns the applications started.
-    pub fn try_schedule(
+    fn try_schedule(
         &mut self,
         apps: &mut [Application],
         cluster: &mut Cluster,
+        placer: &dyn Placer,
         now: f64,
         price: f64,
     ) -> Vec<PlacementOutcome> {
         let mut started = Vec::new();
-        while let Some(&head) = self.queue.first() {
-            match place_app(&apps[head], cluster, now, price) {
+        while let Some(&(k, head)) = self.queue.iter().next() {
+            match place_app(&apps[head], cluster, placer, now, price) {
                 Some(outcome) => {
                     apps[head].state = AppState::Running { since: now };
                     apps[head].last_progress_at = now;
-                    self.queue.remove(0);
+                    self.queue.remove(&(k, head));
                     started.push(outcome);
                 }
                 None => break, // head-of-line blocking
@@ -94,11 +199,112 @@ impl FifoScheduler {
     }
 }
 
+/// FIFO order with aggressive backfill: when the head application is
+/// blocked, up to `depth` later queued applications are examined and any
+/// that fit start immediately. No reservations are taken for blocked
+/// apps, so large applications can starve under a steady stream of small
+/// ones — the classic trade the policy sweep is meant to expose.
+#[derive(Debug)]
+pub struct BackfillScheduler {
+    queue: BTreeSet<QueueKey>,
+    depth: usize,
+}
+
+impl BackfillScheduler {
+    /// Empty scheduler scanning past at most `depth` blocked apps.
+    pub fn new(depth: usize) -> Self {
+        BackfillScheduler { queue: BTreeSet::new(), depth }
+    }
+}
+
+impl Scheduler for BackfillScheduler {
+    fn name(&self) -> &'static str {
+        "backfill"
+    }
+
+    fn enqueue(&mut self, apps: &[Application], id: AppId) {
+        let inserted = self.queue.insert(queue_key(apps, id));
+        debug_assert!(inserted, "app {id} double-enqueued");
+    }
+
+    fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn queued(&self) -> Vec<AppId> {
+        self.queue.iter().map(|&(_, id)| id).collect()
+    }
+
+    fn try_schedule(
+        &mut self,
+        apps: &mut [Application],
+        cluster: &mut Cluster,
+        placer: &dyn Placer,
+        now: f64,
+        price: f64,
+    ) -> Vec<PlacementOutcome> {
+        use std::ops::Bound;
+        let mut started = Vec::new();
+        let mut blocked = 0usize;
+        // Cursor walk instead of a full-queue snapshot: the scan is
+        // bounded by `depth` blocked apps, so a wake must not pay
+        // O(queue) to examine a handful of candidates. Re-resolving the
+        // cursor through `range` stays correct across the removals below
+        // (only already-visited keys are ever removed).
+        let mut cursor: Option<QueueKey> = None;
+        loop {
+            let next = match cursor {
+                None => self.queue.iter().next().copied(),
+                Some(last) => self
+                    .queue
+                    .range((Bound::Excluded(last), Bound::Unbounded))
+                    .next()
+                    .copied(),
+            };
+            let Some(key @ (_, id)) = next else { break };
+            cursor = Some(key);
+            match place_app(&apps[id], cluster, placer, now, price) {
+                Some(outcome) => {
+                    apps[id].state = AppState::Running { since: now };
+                    apps[id].last_progress_at = now;
+                    self.queue.remove(&key);
+                    started.push(outcome);
+                }
+                None => {
+                    blocked += 1;
+                    if blocked > self.depth {
+                        break;
+                    }
+                }
+            }
+        }
+        started
+    }
+}
+
+/// Instantiate the configured scheduler.
+pub fn build_scheduler(cfg: &SchedConfig) -> Box<dyn Scheduler> {
+    match cfg.scheduler {
+        SchedulerKind::Fifo => Box::new(FifoScheduler::new()),
+        SchedulerKind::Backfill => Box::new(BackfillScheduler::new(cfg.backfill_depth)),
+    }
+}
+
+/// Instantiate the configured placer.
+pub fn build_placer(kind: PlacerKind) -> Box<dyn Placer> {
+    match kind {
+        PlacerKind::WorstFit => Box::new(WorstFitPlacer),
+        PlacerKind::FirstFit => Box::new(FirstFitPlacer),
+        PlacerKind::BestFit => Box::new(BestFitPlacer),
+    }
+}
+
 /// Try to place one application: all cores must fit (else rollback and
 /// return None); elastic components are best-effort.
 fn place_app(
     app: &Application,
     cluster: &mut Cluster,
+    placer: &dyn Placer,
     now: f64,
     price: f64,
 ) -> Option<PlacementOutcome> {
@@ -106,10 +312,8 @@ fn place_app(
     let mut placed = Vec::new();
     // Cores first — all-or-nothing.
     for c in app.components.iter().filter(|c| c.is_core) {
-        // Worst-fit spreads load across hosts, which reduces correlated
-        // OOM pressure when several components spike together.
         let (pc, pm) = (c.cpu_req * price, c.mem_req * price);
-        match cluster.worst_fit(pc, pm) {
+        match placer.select(cluster, pc, pm) {
             Some(h) => {
                 let ok = cluster.place(c.id, h, pc, pm, now);
                 debug_assert!(ok);
@@ -127,7 +331,7 @@ fn place_app(
     let mut skipped = Vec::new();
     for c in app.components.iter().filter(|c| !c.is_core) {
         let (pc, pm) = (c.cpu_req * price, c.mem_req * price);
-        match cluster.worst_fit(pc, pm) {
+        match placer.select(cluster, pc, pm) {
             Some(h) => {
                 let ok = cluster.place(c.id, h, pc, pm, now);
                 debug_assert!(ok);
@@ -147,11 +351,7 @@ mod tests {
 
     fn setup(hosts: usize) -> (Vec<Application>, Cluster, FifoScheduler) {
         let wl = generate(&SimConfig::small().workload, 3);
-        let cluster = Cluster::new(&ClusterConfig {
-            hosts,
-            cores_per_host: 32.0,
-            mem_per_host_gb: 128.0,
-        });
+        let cluster = Cluster::new(&ClusterConfig::uniform(hosts, 32.0, 128.0));
         (wl.apps, cluster, FifoScheduler::new())
     }
 
@@ -162,8 +362,7 @@ mod tests {
         s.enqueue(&apps, 5);
         s.enqueue(&apps, 1);
         s.enqueue(&apps, 3);
-        let order: Vec<_> = s.queued().to_vec();
-        assert_eq!(order, vec![1, 3, 5]); // submit_time increases with id
+        assert_eq!(s.queued(), vec![1, 3, 5]); // submit_time increases with id
     }
 
     #[test]
@@ -177,12 +376,22 @@ mod tests {
     }
 
     #[test]
+    fn nan_submit_time_sorts_last_instead_of_panicking() {
+        let (mut apps, _c, mut s) = setup(4);
+        apps[7].submit_time = f64::NAN;
+        s.enqueue(&apps, 7);
+        s.enqueue(&apps, 1);
+        s.enqueue(&apps, 3);
+        assert_eq!(s.queued(), vec![1, 3, 7]);
+    }
+
+    #[test]
     fn schedules_until_blocked_then_stops() {
         let (mut apps, mut c, mut s) = setup(1);
         for id in 0..30 {
             s.enqueue(&apps, id);
         }
-        let started = s.try_schedule(&mut apps, &mut c, 0.0, 1.0);
+        let started = s.try_schedule(&mut apps, &mut c, &WorstFitPlacer, 0.0, 1.0);
         assert!(!started.is_empty());
         c.check_invariants().unwrap();
         // everything started is Running, head of remaining queue is blocked
@@ -198,7 +407,7 @@ mod tests {
     fn core_placement_all_or_nothing() {
         let (mut apps, mut c, mut s) = setup(1);
         // Fill the cluster almost completely with app 0
-        let started = s.try_schedule(&mut apps, &mut c, 0.0, 1.0); // empty queue: no-op
+        let started = s.try_schedule(&mut apps, &mut c, &WorstFitPlacer, 0.0, 1.0); // empty queue: no-op
         assert!(started.is_empty());
         // Find a multi-core app and a tiny cluster that cannot host it
         let big = apps
@@ -209,13 +418,9 @@ mod tests {
             })
             .unwrap()
             .id;
-        let mut tiny = Cluster::new(&ClusterConfig {
-            hosts: 1,
-            cores_per_host: 0.2,
-            mem_per_host_gb: 0.01,
-        });
+        let mut tiny = Cluster::new(&ClusterConfig::uniform(1, 0.2, 0.01));
         s.enqueue(&apps, big);
-        let started = s.try_schedule(&mut apps, &mut tiny, 0.0, 1.0);
+        let started = s.try_schedule(&mut apps, &mut tiny, &WorstFitPlacer, 0.0, 1.0);
         assert!(started.is_empty());
         assert_eq!(tiny.placed_count(), 0, "rollback must free partial cores");
     }
@@ -238,15 +443,93 @@ mod tests {
             .filter(|c| c.is_core)
             .map(|c| c.cpu_req)
             .sum();
-        let mut snug = Cluster::new(&ClusterConfig {
-            hosts: 1,
-            cores_per_host: core_cpu + 0.05,
-            mem_per_host_gb: core_mem + 0.001,
-        });
+        let mut snug = Cluster::new(&ClusterConfig::uniform(1, core_cpu + 0.05, core_mem + 0.001));
         s.enqueue(&apps, el);
-        let started = s.try_schedule(&mut apps, &mut snug, 1.0, 1.0);
+        let started = s.try_schedule(&mut apps, &mut snug, &WorstFitPlacer, 1.0, 1.0);
         assert_eq!(started.len(), 1);
         assert_eq!(started[0].skipped_elastic.len(), apps[el].elastic_count());
         snug.check_invariants().unwrap();
+    }
+
+    /// Synthetic app: `n_core` core components of (1 cpu, 4 GB) each,
+    /// with component ids starting at `first_cid`.
+    fn toy_app(id: AppId, submit: f64, n_core: usize, first_cid: usize) -> Application {
+        use crate::trace::patterns::{Pattern, PatternKind};
+        let components = (0..n_core)
+            .map(|k| crate::workload::Component {
+                id: first_cid + k,
+                app: id,
+                is_core: true,
+                cpu_req: 1.0,
+                mem_req: 4.0,
+                cpu_pattern: Pattern::new(PatternKind::Constant { level: 0.4 }, 1, 0.0),
+                mem_pattern: Pattern::new(PatternKind::Constant { level: 0.4 }, 2, 0.0),
+            })
+            .collect();
+        Application {
+            id,
+            submit_time: submit,
+            components,
+            total_work: 100.0,
+            state: AppState::Queued,
+            remaining_work: 100.0,
+            last_progress_at: 0.0,
+            failures: 0,
+            preemptions: 0,
+            shaping_disabled: false,
+        }
+    }
+
+    #[test]
+    fn backfill_starts_later_apps_past_blocked_head() {
+        // Head (2 cores = 8 GB) cannot fit the 6 GB host; the later
+        // single-core app (4 GB) can. Strict FIFO starts nothing;
+        // backfill starts the later one and keeps the head queued.
+        let mut apps = vec![toy_app(0, 0.0, 2, 0), toy_app(1, 1.0, 1, 2)];
+        let mut c = Cluster::new(&ClusterConfig::uniform(1, 4.0, 6.0));
+
+        let mut fifo = FifoScheduler::new();
+        fifo.enqueue(&apps, 0);
+        fifo.enqueue(&apps, 1);
+        assert!(fifo.try_schedule(&mut apps, &mut c, &WorstFitPlacer, 0.0, 1.0).is_empty());
+
+        let mut bf = BackfillScheduler::new(16);
+        bf.enqueue(&apps, 0);
+        bf.enqueue(&apps, 1);
+        let started = bf.try_schedule(&mut apps, &mut c, &WorstFitPlacer, 0.0, 1.0);
+        let started_ids: Vec<AppId> = started.iter().map(|o| o.app).collect();
+        assert_eq!(started_ids, vec![1], "backfill must start the fitting app");
+        assert_eq!(bf.queued(), vec![0]);
+        assert_eq!(c.placed_count(), 1, "head must be rolled back");
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn backfill_depth_bounds_the_scan() {
+        // Ten two-core apps on a host that fits exactly one core: every
+        // candidate blocks, and the scan stops after depth+1 attempts
+        // (observable as: nothing starts, everything stays queued).
+        let mut apps: Vec<Application> =
+            (0..10).map(|i| toy_app(i, i as f64, 2, 2 * i)).collect();
+        let mut c = Cluster::new(&ClusterConfig::uniform(1, 1.0, 4.0));
+        let mut bf = BackfillScheduler::new(2);
+        for id in 0..10 {
+            bf.enqueue(&apps, id);
+        }
+        let started = bf.try_schedule(&mut apps, &mut c, &WorstFitPlacer, 0.0, 1.0);
+        assert!(started.is_empty());
+        assert_eq!(bf.len(), 10);
+        assert_eq!(c.placed_count(), 0);
+    }
+
+    #[test]
+    fn factories_match_config() {
+        let mut sc = SchedConfig::default();
+        assert_eq!(build_scheduler(&sc).name(), "fifo");
+        sc.scheduler = crate::config::SchedulerKind::Backfill;
+        assert_eq!(build_scheduler(&sc).name(), "backfill");
+        assert_eq!(build_placer(PlacerKind::WorstFit).name(), "worst-fit");
+        assert_eq!(build_placer(PlacerKind::FirstFit).name(), "first-fit");
+        assert_eq!(build_placer(PlacerKind::BestFit).name(), "best-fit");
     }
 }

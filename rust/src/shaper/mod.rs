@@ -110,13 +110,13 @@ fn plan_optimistic(
 }
 
 /// Running apps in scheduler-priority order (FIFO by submit time).
+/// `total_cmp` keys: a NaN submit time sorts last instead of panicking.
 fn priority_order(apps: &[Application], running: &[AppId]) -> Vec<AppId> {
     let mut order: Vec<AppId> = running.to_vec();
     order.sort_by(|&x, &y| {
         apps[x]
             .submit_time
-            .partial_cmp(&apps[y].submit_time)
-            .unwrap()
+            .total_cmp(&apps[y].submit_time)
             .then(x.cmp(&y))
     });
     order
@@ -179,7 +179,7 @@ fn plan_pessimistic(
         elastic.sort_by(|x, y| {
             let px = cluster.placement(x.id).unwrap().placed_at;
             let py = cluster.placement(y.id).unwrap().placed_at;
-            px.partial_cmp(&py).unwrap().then(x.id.cmp(&y.id))
+            px.total_cmp(&py).then(x.id.cmp(&y.id))
         });
         for comp in elastic {
             let p = cluster.placement(comp.id).unwrap();
@@ -211,12 +211,15 @@ pub fn validate_actions(
         actions.preempt_elastic.iter().copied().collect();
     let resized: HashMap<ComponentId, Demand> =
         actions.resizes.iter().copied().collect();
+    // component -> owning app, built once (placements carry no app link)
+    let owner: HashMap<ComponentId, AppId> = apps
+        .iter()
+        .flat_map(|a| a.components.iter().map(|c| (c.id, a.id)))
+        .collect();
     let mut cpu = vec![0.0; cluster.hosts.len()];
     let mut mem = vec![0.0; cluster.hosts.len()];
     for (&c, p) in cluster.placements() {
-        // find owning app
-        let app = apps.iter().find(|a| a.components.iter().any(|x| x.id == c));
-        if let Some(a) = app {
+        if let Some(a) = owner.get(&c).map(|&a| &apps[a]) {
             if preempted_apps.contains(&a.id) {
                 continue;
             }
@@ -256,11 +259,7 @@ mod tests {
     /// plus `nel` elastic components of (1 cpu, 4 GB) on a 1-host cluster.
     fn toy(napps: usize, nel: usize, cpus: f64, mem: f64) -> (Vec<Application>, Cluster) {
         let mut apps = Vec::new();
-        let mut cluster = Cluster::new(&ClusterConfig {
-            hosts: 1,
-            cores_per_host: cpus,
-            mem_per_host_gb: mem,
-        });
+        let mut cluster = Cluster::new(&ClusterConfig::uniform(1, cpus, mem));
         let mut cid = 0;
         for a in 0..napps {
             let mut components = Vec::new();

@@ -4,7 +4,12 @@
 //! used by examples, benches and tests.
 //!
 //! Semantics (matching §3-§4 of the paper):
-//! * arrivals enter the FIFO scheduler; admission charges *allocations*;
+//! * arrivals enter the configured scheduler (`SimConfig::sched` selects
+//!   the `Scheduler` and `Placer` implementations; the defaults — strict
+//!   FIFO over worst-fit — keep the seed system's policies, with
+//!   decisions matching the seed up to the unified
+//!   `cluster::CAPACITY_EPS` tolerance); admission charges
+//!   *allocations*;
 //! * running apps progress at `1 + 0.8·(active elastic / total elastic)`
 //!   work units/s; preempting elastic components slows them;
 //! * the monitor samples each placed component's utilization pattern
@@ -15,18 +20,30 @@
 //! * full preemptions and OOM-failed apps are resubmitted at their
 //!   original FIFO priority with all work lost; after
 //!   `max_failures_before_giveup` failures an app is no longer shaped.
+//!
+//! ## Incremental monitor pass (PR 2)
+//!
+//! The monitor tick walks the cluster's placed-component set (maintained
+//! on place/remove) instead of rescanning every application, samples
+//! into reused columnar [`TickBuffers`], and shards the pattern
+//! evaluation over `util::pool` (pure per-row work; all accumulation
+//! stays sequential in row order, so results are bit-identical for any
+//! `ZOE_WORKERS`). [`MonitorMode::ReferenceScan`] keeps the seed's
+//! scan-all-apps gather as a correctness oracle: the golden-equivalence
+//! suite asserts both modes produce identical `RunReport`s.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::sync::Arc;
 
 use crate::cluster::Cluster;
 use crate::config::{ForecasterKind, Policy, SimConfig};
 use crate::forecast::{Forecast, Forecaster};
 use crate::metrics::{Metrics, RunReport};
-use crate::monitor::Monitor;
-use crate::scheduler::FifoScheduler;
+use crate::monitor::{Monitor, TickBuffers};
+use crate::scheduler::{build_placer, build_scheduler, Placer, Scheduler};
 use crate::shaper::{self, beta, Demand};
 use crate::sim::{Event, EventQueue};
+use crate::util::pool;
 use crate::workload::{self, AppId, Application, AppState, ComponentId};
 
 /// Where forecasts come from.
@@ -35,6 +52,17 @@ pub enum ForecastSource {
     Oracle,
     /// A statistical model over monitored history.
     Model(Box<dyn Forecaster>),
+}
+
+/// How the monitor tick gathers its samples.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MonitorMode {
+    /// Walk the cluster's incrementally-maintained placed set and shard
+    /// the pattern evaluation (the production path).
+    Incremental,
+    /// Rescan every application sequentially (the seed's gather) — the
+    /// correctness oracle for golden-equivalence tests.
+    ReferenceScan,
 }
 
 /// Hard cap on processed events (runaway guard; generously above any
@@ -50,12 +78,26 @@ const DEFAULT_MAX_SIM_TIME: f64 = 120.0 * 86_400.0;
 /// The scheduler keeps the knob for over-commit ablations.
 const OPTIMISTIC_ADMISSION_PRICE: f64 = 1.0;
 
+/// Below this many sampled rows a tick runs the pattern evaluation
+/// inline: thread hand-off costs more than it saves (results are
+/// identical either way). `ZOE_SHARD_THRESHOLD` overrides (tests force
+/// the parallel path on small worlds with `=1`).
+const SHARD_THRESHOLD: usize = 1024;
+
+fn shard_threshold() -> usize {
+    std::env::var("ZOE_SHARD_THRESHOLD")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(SHARD_THRESHOLD)
+}
+
 /// The simulation engine.
 pub struct Engine {
     cfg: SimConfig,
     apps: Vec<Application>,
     cluster: Cluster,
-    scheduler: FifoScheduler,
+    scheduler: Box<dyn Scheduler>,
+    placer: Box<dyn Placer>,
     monitor: Monitor,
     metrics: Metrics,
     queue: EventQueue,
@@ -66,15 +108,31 @@ pub struct Engine {
     finish_version: Vec<u64>,
     /// per-app count of currently placed elastic components
     placed_elastic: Vec<usize>,
+    /// running apps, ascending — maintained on every state transition so
+    /// the shaper never rescans the full app table
+    running: BTreeSet<AppId>,
     /// apps not yet finished
     unfinished: usize,
     /// scratch: reusable demand map (allocation-free hot loop)
     demands: HashMap<ComponentId, Demand>,
+    /// scratch: columnar per-tick sample buffers (allocation-free)
+    tick: TickBuffers,
+    /// min sampled rows before the pattern pass is sharded
+    shard_threshold: usize,
+    monitor_mode: MonitorMode,
+    /// initial events pushed (idempotence guard for `pump_until`/`run`)
+    primed: bool,
 }
 
 impl Engine {
     /// Build an engine for a config and forecast source.
     pub fn new(cfg: SimConfig, source: ForecastSource) -> Self {
+        Self::with_monitor_mode(cfg, source, MonitorMode::Incremental)
+    }
+
+    /// Build an engine with an explicit monitor gather mode (tests and
+    /// benches; `new` defaults to the incremental path).
+    pub fn with_monitor_mode(cfg: SimConfig, source: ForecastSource, mode: MonitorMode) -> Self {
         let wl = workload::generate(&cfg.workload, cfg.seed);
         let mut comp_index = vec![(0usize, 0usize); wl.num_components];
         for app in &wl.apps {
@@ -85,26 +143,43 @@ impl Engine {
         let history_cap = (cfg.forecast.history * 2).max(64);
         let n_apps = wl.apps.len();
         let n_comp = wl.num_components;
+        let cluster = Cluster::new(&cfg.cluster);
         Engine {
-            cluster: Cluster::new(&cfg.cluster),
+            tick: TickBuffers::new(cluster.len()),
+            cluster,
             monitor: Monitor::new(n_comp, history_cap),
             metrics: Metrics::new(n_apps),
-            scheduler: FifoScheduler::new(),
+            scheduler: build_scheduler(&cfg.sched),
+            placer: build_placer(cfg.sched.placer),
             queue: EventQueue::new(),
             apps: wl.apps,
             comp_index,
             finish_version: vec![0; n_apps],
             placed_elastic: vec![0; n_apps],
+            running: BTreeSet::new(),
             unfinished: n_apps,
             demands: HashMap::new(),
             source,
             cfg,
+            shard_threshold: shard_threshold(),
+            monitor_mode: mode,
+            primed: false,
         }
     }
 
     /// Current simulated time.
     pub fn now(&self) -> f64 {
         self.queue.now()
+    }
+
+    /// The cluster state (read-only; benches report placement counts).
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    /// Number of currently running applications.
+    pub fn running_apps(&self) -> usize {
+        self.running.len()
     }
 
     /// Run to completion; returns the metrics report.
@@ -121,15 +196,7 @@ impl Engine {
         } else {
             DEFAULT_MAX_SIM_TIME
         };
-        for app in &self.apps {
-            self.queue.push(app.submit_time, Event::Arrival(app.id));
-        }
-        self.queue
-            .push(self.cfg.forecast.monitor_interval_s, Event::MonitorTick);
-        if self.cfg.shaper.policy != Policy::Baseline {
-            self.queue
-                .push(self.cfg.shaper.shaping_interval_s, Event::ShaperTick);
-        }
+        self.prime();
         let mut events: u64 = 0;
         let wall_start = std::time::Instant::now();
         while let Some((t, ev)) = self.queue.pop() {
@@ -151,18 +218,66 @@ impl Engine {
                 crate::warn_log!("event cap hit at t={t:.0}; aborting run");
                 break;
             }
-            match ev {
-                Event::Arrival(a) => self.on_arrival(a),
-                Event::SchedulerWake => self.on_scheduler_wake(),
-                Event::Finish { app, version } => self.on_finish(app, version),
-                Event::MonitorTick => self.on_monitor_tick(),
-                Event::ShaperTick => self.on_shaper_tick(),
-            }
+            self.dispatch(ev);
         }
         // the final popped event may lie past the horizon; report the
         // effective simulated span
         let sim_time = self.now().min(max_t);
         self.metrics.report(run_name, sim_time)
+    }
+
+    /// Push the initial event set exactly once.
+    fn prime(&mut self) {
+        if self.primed {
+            return;
+        }
+        self.primed = true;
+        for app in &self.apps {
+            self.queue.push(app.submit_time, Event::Arrival(app.id));
+        }
+        self.queue
+            .push(self.cfg.forecast.monitor_interval_s, Event::MonitorTick);
+        if self.cfg.shaper.policy != Policy::Baseline {
+            self.queue
+                .push(self.cfg.shaper.shaping_interval_s, Event::ShaperTick);
+        }
+    }
+
+    fn dispatch(&mut self, ev: Event) {
+        match ev {
+            Event::Arrival(a) => self.on_arrival(a),
+            Event::SchedulerWake => self.on_scheduler_wake(),
+            Event::Finish { app, version } => self.on_finish(app, version),
+            Event::MonitorTick => self.on_monitor_tick(),
+            Event::ShaperTick => self.on_shaper_tick(),
+        }
+    }
+
+    /// Process events up to simulated time `t_stop` (no pacing, no event
+    /// cap). Benches use this to reach a warm steady state before timing
+    /// individual ticks; unlike `run`, the engine remains usable after.
+    #[doc(hidden)]
+    pub fn pump_until(&mut self, t_stop: f64) {
+        self.prime();
+        while let Some(t) = self.queue.peek_time() {
+            if t > t_stop || self.unfinished == 0 {
+                break;
+            }
+            let (_, ev) = self.queue.pop().expect("peeked event vanished");
+            self.dispatch(ev);
+        }
+    }
+
+    /// Bench hook: one monitor pass at the current simulated time.
+    #[doc(hidden)]
+    pub fn monitor_tick_once(&mut self) {
+        self.on_monitor_tick();
+    }
+
+    /// Bench hook: one shaper pass at the current simulated time.
+    #[doc(hidden)]
+    pub fn shaper_tick_once(&mut self) {
+        self.on_shaper_tick();
     }
 
     // ----- event handlers -------------------------------------------------
@@ -182,9 +297,13 @@ impl Engine {
         } else {
             1.0
         };
-        let started = self
-            .scheduler
-            .try_schedule(&mut self.apps, &mut self.cluster, now, price);
+        let started = self.scheduler.try_schedule(
+            &mut self.apps,
+            &mut self.cluster,
+            self.placer.as_ref(),
+            now,
+            price,
+        );
         for outcome in started {
             let a = outcome.app;
             let elastic_placed = outcome
@@ -196,6 +315,7 @@ impl Engine {
                 })
                 .count();
             self.placed_elastic[a] = elastic_placed;
+            self.running.insert(a);
             self.schedule_finish(a);
         }
     }
@@ -210,7 +330,8 @@ impl Engine {
         let now = self.now();
         self.update_progress(a, now);
         if self.apps[a].remaining_work <= 1e-6 {
-            // completed
+            // completed; index loop: the removals need `&mut self`
+            #[allow(clippy::needless_range_loop)]
             for k in 0..self.apps[a].components.len() {
                 let cid = self.apps[a].components[k].id;
                 self.cluster.remove(cid);
@@ -218,6 +339,7 @@ impl Engine {
             }
             self.placed_elastic[a] = 0;
             self.apps[a].state = AppState::Finished { at: now };
+            self.running.remove(&a);
             self.metrics.record_finish(self.apps[a].submit_time, now);
             self.unfinished -= 1;
             self.queue.push(now, Event::SchedulerWake);
@@ -227,32 +349,94 @@ impl Engine {
         }
     }
 
-    fn on_monitor_tick(&mut self) {
-        let now = self.now();
-        let interval = self.cfg.forecast.monitor_interval_s;
-        // 1) sample utilization + slack
-        let mut host_usage_mem: Vec<f64> = vec![0.0; self.cluster.len()];
-        // (component, host, used_mem, alloc_mem, is_core, app)
-        let mut samples: Vec<(ComponentId, usize, f64, f64, bool, AppId)> = Vec::new();
+    /// Fill the tick buffers by walking the cluster's placed set — no
+    /// per-app rescan; every placed component's app is Running (placement
+    /// and state transition are atomic within one event).
+    fn gather_incremental(&mut self, now: f64, interval: f64) {
+        self.tick.clear();
+        let tick = &mut self.tick;
+        for cid in self.cluster.placed_ids() {
+            let (a, k) = self.comp_index[cid];
+            let AppState::Running { since } = self.apps[a].state else {
+                debug_assert!(
+                    matches!(self.apps[a].state, AppState::Running { .. }),
+                    "placed component {cid} on non-running app {a}"
+                );
+                continue;
+            };
+            let step = ((now - since) / interval).max(0.0) as u64;
+            let comp = &self.apps[a].components[k];
+            let p = self.cluster.placement(cid).expect("placed id without placement");
+            tick.push_row(
+                cid, a, step, p.host, comp.cpu_req, comp.mem_req, p.alloc_cpus, p.alloc_mem,
+                comp.is_core,
+            );
+        }
+        // pattern evaluation: pure per-row work, sharded when large
+        let n = tick.len();
+        let workers = if n >= self.shard_threshold { pool::num_workers() } else { 1 };
+        let apps = &self.apps;
+        let comp_index = &self.comp_index;
+        let TickBuffers { comp, step, fracs, .. } = tick;
+        let steps: &[u64] = step.as_slice();
+        fracs.clear();
+        fracs.resize(n, (0.0, 0.0));
+        pool::shard_map_into(comp.as_slice(), fracs.as_mut_slice(), workers, || (), |_, i, &cid| {
+            let (a, k) = comp_index[cid];
+            let c = &apps[a].components[k];
+            (c.cpu_pattern.at_step(steps[i]), c.mem_pattern.at_step(steps[i]))
+        });
+    }
+
+    /// The seed's gather: sequential rescan of every application. Kept
+    /// as the correctness oracle for the incremental path.
+    fn gather_reference(&mut self, now: f64, interval: f64) {
+        self.tick.clear();
         for a in 0..self.apps.len() {
             let AppState::Running { since } = self.apps[a].state else { continue };
             let step = ((now - since) / interval).max(0.0) as u64;
-            for k in 0..self.apps[a].components.len() {
-                let comp = &self.apps[a].components[k];
+            for comp in &self.apps[a].components {
                 let Some(p) = self.cluster.placement(comp.id) else { continue };
-                let cpu_frac = comp.cpu_pattern.at_step(step);
-                let mem_frac = comp.mem_pattern.at_step(step);
-                let used_cpu = cpu_frac * comp.cpu_req;
-                let used_mem = mem_frac * comp.mem_req;
-                let cpu_slack = ((p.alloc_cpus - used_cpu) / p.alloc_cpus.max(1e-9)).max(0.0);
-                let mem_slack = ((p.alloc_mem - used_mem) / p.alloc_mem.max(1e-9)).max(0.0);
-                let host = p.host;
-                let alloc_mem = p.alloc_mem;
-                self.monitor.record(comp.id, cpu_frac, mem_frac);
-                self.metrics.record_slack(a, cpu_slack, mem_slack);
-                host_usage_mem[host] += used_mem;
-                samples.push((comp.id, host, used_mem, alloc_mem, comp.is_core, a));
+                self.tick.push_row(
+                    comp.id, a, step, p.host, comp.cpu_req, comp.mem_req, p.alloc_cpus,
+                    p.alloc_mem, comp.is_core,
+                );
+                self.tick
+                    .fracs
+                    .push((comp.cpu_pattern.at_step(step), comp.mem_pattern.at_step(step)));
             }
+        }
+    }
+
+    fn on_monitor_tick(&mut self) {
+        let now = self.now();
+        let interval = self.cfg.forecast.monitor_interval_s;
+        self.metrics.monitor_ticks += 1;
+        // 1) sample utilization into the columnar buffers
+        match self.monitor_mode {
+            MonitorMode::Incremental => self.gather_incremental(now, interval),
+            MonitorMode::ReferenceScan => self.gather_reference(now, interval),
+        }
+        // 1b) sequential accumulation in row order (= ascending component
+        //     id = the seed's app-scan order): slack metrics, history,
+        //     per-host usage sums and per-host row lists. Keeping every
+        //     float addition in this order makes the pass bit-identical
+        //     to the reference for any worker count.
+        let n = self.tick.len();
+        for i in 0..n {
+            let (cpu_frac, mem_frac) = self.tick.fracs[i];
+            let used_cpu = cpu_frac * self.tick.cpu_req[i];
+            let used_mem = mem_frac * self.tick.mem_req[i];
+            let alloc_cpus = self.tick.alloc_cpus[i];
+            let alloc_mem = self.tick.alloc_mem[i];
+            let cpu_slack = ((alloc_cpus - used_cpu) / alloc_cpus.max(1e-9)).max(0.0);
+            let mem_slack = ((alloc_mem - used_mem) / alloc_mem.max(1e-9)).max(0.0);
+            self.monitor.record(self.tick.comp[i], cpu_frac, mem_frac);
+            self.metrics.record_slack(self.tick.app[i], cpu_slack, mem_slack);
+            let h = self.tick.host[i];
+            self.tick.used_mem.push(used_mem);
+            self.tick.host_usage_mem[h] += used_mem;
+            self.tick.host_samples[h].push(i as u32);
         }
         // 2a) hard-limit semantics (§5): under *optimistic* reclamation
         //     the container memory limit is a hard limit — any component
@@ -262,10 +446,9 @@ impl Engine {
         //     (step 2b).
         if self.cfg.shaper.policy == Policy::Optimistic {
             const HARD_LIMIT_TOLERANCE: f64 = 1.10;
-            let victims: Vec<(ComponentId, bool, AppId)> = samples
-                .iter()
-                .filter(|s| s.2 > s.3 * HARD_LIMIT_TOLERANCE)
-                .map(|s| (s.0, s.4, s.5))
+            let victims: Vec<(ComponentId, bool, AppId)> = (0..n)
+                .filter(|&i| self.tick.used_mem[i] > self.tick.alloc_mem[i] * HARD_LIMIT_TOLERANCE)
+                .map(|i| (self.tick.comp[i], self.tick.is_core[i], self.tick.app[i]))
                 .collect();
             for (cid, is_core, app) in victims {
                 if self.cluster.placement(cid).is_none() {
@@ -276,34 +459,42 @@ impl Engine {
         }
         // 2b) OOM check per host: kill over-limit components on saturated
         //     hosts, largest overage first, until usage fits (the "OS").
+        //     Candidates come from the per-host row lists built in 1b —
+        //     no re-filtering of a global samples vector.
         for h in 0..self.cluster.len() {
             let capacity = self.cluster.hosts[h].total_mem;
-            let frac = host_usage_mem[h] / capacity;
+            let frac = self.tick.host_usage_mem[h] / capacity;
             if frac > self.metrics.peak_host_usage {
                 self.metrics.peak_host_usage = frac;
             }
-            if host_usage_mem[h] <= capacity + 1e-9 {
+            if self.tick.host_usage_mem[h] <= capacity + 1e-9 {
                 continue;
             }
-            let mut on_host: Vec<&(ComponentId, usize, f64, f64, bool, AppId)> = samples
+            let mut over: Vec<u32> = self.tick.host_samples[h]
                 .iter()
-                .filter(|s| s.1 == h && s.2 > s.3 + 1e-9) // over its limit
+                .copied()
+                .filter(|&i| {
+                    let i = i as usize;
+                    self.tick.used_mem[i] > self.tick.alloc_mem[i] + 1e-9 // over its limit
+                })
                 .collect();
-            on_host.sort_by(|x, y| (y.2 - y.3).partial_cmp(&(x.2 - x.3)).unwrap());
-            let mut usage = host_usage_mem[h];
-            let victims: Vec<(ComponentId, f64, bool, AppId)> = on_host
-                .iter()
-                .map(|s| (s.0, s.2, s.4, s.5))
-                .collect();
-            for (cid, used, is_core, app) in victims {
+            over.sort_by(|&x, &y| {
+                let ox = self.tick.used_mem[x as usize] - self.tick.alloc_mem[x as usize];
+                let oy = self.tick.used_mem[y as usize] - self.tick.alloc_mem[y as usize];
+                oy.total_cmp(&ox)
+            });
+            let mut usage = self.tick.host_usage_mem[h];
+            for &i in &over {
                 if usage <= capacity + 1e-9 {
                     break;
                 }
+                let i = i as usize;
+                let cid = self.tick.comp[i];
                 if self.cluster.placement(cid).is_none() {
                     continue; // already killed via its app
                 }
-                usage -= used;
-                self.kill_oom(app, cid, is_core, now);
+                usage -= self.tick.used_mem[i];
+                self.kill_oom(self.tick.app[i], cid, self.tick.is_core[i], now);
             }
         }
         // 3) cluster-level allocation accounting
@@ -317,6 +508,7 @@ impl Engine {
 
     fn on_shaper_tick(&mut self) {
         let now = self.now();
+        self.metrics.shaper_ticks += 1;
         // copy config scalars out so `self` stays free for mutation below
         let monitor_interval = self.cfg.forecast.monitor_interval_s;
         let shaping_interval = self.cfg.shaper.shaping_interval_s;
@@ -332,10 +524,9 @@ impl Engine {
         };
         let lookahead_steps = (shaping_interval / monitor_interval).ceil().max(1.0) as u64;
 
-        // gather the components to shape
-        let running: Vec<AppId> = (0..self.apps.len())
-            .filter(|&a| matches!(self.apps[a].state, AppState::Running { .. }))
-            .collect();
+        // gather the components to shape, from the maintained running set
+        // (ascending app id — the seed's scan order)
+        let running: Vec<AppId> = self.running.iter().copied().collect();
         self.demands.clear();
         let mut model_batch_ids: Vec<(ComponentId, f64, f64)> = Vec::new(); // (comp, cpu_req, mem_req)
         let mut model_cpu_series: Vec<Vec<f64>> = Vec::new();
@@ -515,6 +706,8 @@ impl Engine {
         }
         self.update_progress(a, now);
         let done = self.apps[a].total_work - self.apps[a].remaining_work;
+        // index loop: the removals need `&mut self`
+        #[allow(clippy::needless_range_loop)]
         for k in 0..self.apps[a].components.len() {
             let cid = self.apps[a].components[k].id;
             self.cluster.remove(cid);
@@ -525,14 +718,16 @@ impl Engine {
         app.remaining_work = app.total_work; // work lost
         app.state = AppState::Queued;
         app.last_progress_at = now;
+        self.running.remove(&a);
         self.finish_version[a] += 1; // invalidate in-flight finish
         if is_failure {
+            let app = &mut self.apps[a];
             app.failures += 1;
             if app.failures >= self.cfg.max_failures_before_giveup {
                 app.shaping_disabled = true;
             }
         } else {
-            app.preemptions += 1;
+            self.apps[a].preemptions += 1;
             self.metrics.record_preemption(true, done);
         }
         self.scheduler.enqueue(&self.apps, a);
@@ -563,6 +758,17 @@ pub fn run_simulation(
     runtime: Option<Arc<crate::runtime::Runtime>>,
     run_name: &str,
 ) -> anyhow::Result<RunReport> {
+    run_simulation_with(cfg, runtime, run_name, MonitorMode::Incremental)
+}
+
+/// `run_simulation` with an explicit monitor gather mode (the golden-
+/// equivalence suite runs both modes and compares reports).
+pub fn run_simulation_with(
+    cfg: &SimConfig,
+    runtime: Option<Arc<crate::runtime::Runtime>>,
+    run_name: &str,
+    mode: MonitorMode,
+) -> anyhow::Result<RunReport> {
     let source = match cfg.forecast.kind {
         ForecasterKind::Oracle => ForecastSource::Oracle,
         ForecasterKind::GpPjrt => {
@@ -584,7 +790,7 @@ pub fn run_simulation(
             cfg.forecast.history,
         )),
     };
-    let engine = Engine::new(cfg.clone(), source);
+    let engine = Engine::with_monitor_mode(cfg.clone(), source, mode);
     Ok(engine.run(run_name))
 }
 
@@ -611,6 +817,7 @@ mod tests {
         assert_eq!(r.oom_events, 0);
         assert_eq!(r.failed_app_fraction, 0.0);
         assert!(r.turnaround.mean > 0.0);
+        assert!(r.monitor_ticks > 0);
     }
 
     #[test]
@@ -635,6 +842,7 @@ mod tests {
             r.mem_slack.mean,
             base.mem_slack.mean
         );
+        assert!(r.shaper_ticks > 0);
     }
 
     #[test]
@@ -672,5 +880,40 @@ mod tests {
         cfg.shaper.policy = Policy::Baseline;
         let r = run_simulation(&cfg, None, "short").unwrap();
         assert!(r.sim_time <= 500.0 + 1e-6);
+    }
+
+    #[test]
+    fn all_scheduler_placer_combos_run_end_to_end() {
+        use crate::config::{PlacerKind, SchedulerKind};
+        let mut cfg = tiny_cfg();
+        cfg.workload.num_apps = 20;
+        cfg.forecast.kind = ForecasterKind::Oracle;
+        cfg.shaper.policy = Policy::Pessimistic;
+        for sched in [SchedulerKind::Fifo, SchedulerKind::Backfill] {
+            for placer in [PlacerKind::WorstFit, PlacerKind::FirstFit, PlacerKind::BestFit] {
+                cfg.sched.scheduler = sched;
+                cfg.sched.placer = placer;
+                let name = format!("{}-{}", sched.name(), placer.name());
+                let r = run_simulation(&cfg, None, &name).unwrap();
+                assert_eq!(r.completed, 20, "{name}: {}", r.summary());
+            }
+        }
+    }
+
+    #[test]
+    fn pump_until_reaches_a_warm_state() {
+        let mut cfg = tiny_cfg();
+        cfg.forecast.kind = ForecasterKind::Oracle;
+        cfg.shaper.policy = Policy::Pessimistic;
+        let mut eng = Engine::new(cfg, ForecastSource::Oracle);
+        eng.pump_until(4.0 * 3600.0);
+        assert!(eng.now() > 0.0);
+        assert!(eng.cluster().placed_count() > 0, "nothing placed after warmup");
+        assert!(eng.running_apps() > 0);
+        eng.cluster().check_invariants().unwrap();
+        // ticking manually keeps the engine consistent
+        eng.monitor_tick_once();
+        eng.shaper_tick_once();
+        eng.cluster().check_invariants().unwrap();
     }
 }

@@ -89,6 +89,11 @@ impl EventQueue {
         self.push(self.now + delay.max(0.0), event);
     }
 
+    /// Time of the next event without popping it (None when exhausted).
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
     /// Pop the next event, advancing the clock. None when exhausted.
     pub fn pop(&mut self) -> Option<(f64, Event)> {
         let e = self.heap.pop()?;
@@ -147,6 +152,17 @@ mod tests {
         q.push(1.0, Event::SchedulerWake);
         let (t, _) = q.pop().unwrap();
         assert_eq!(t, 10.0);
+    }
+
+    #[test]
+    fn peek_does_not_advance() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.push(4.0, Event::MonitorTick);
+        assert_eq!(q.peek_time(), Some(4.0));
+        assert_eq!(q.now(), 0.0);
+        q.pop();
+        assert_eq!(q.peek_time(), None);
     }
 
     #[test]

@@ -7,6 +7,7 @@ pub mod cli;
 pub mod json;
 pub mod linalg;
 pub mod logger;
+pub mod order;
 pub mod pool;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,89 @@
+//! Total-order keys for `f64` — the NaN-safe substrate under every
+//! ordered structure in the control plane (scheduler queues, the
+//! cluster's free-capacity index, priority sorts).
+//!
+//! `f64` is only `PartialOrd`; the seed code papered over that with
+//! `partial_cmp(..).unwrap()`, which panics the moment a NaN slips into a
+//! submit time or a capacity ledger. [`key`] maps an `f64` to a `u64`
+//! whose natural ordering equals IEEE 754 `totalOrder` (the same order
+//! `f64::total_cmp` implements): -NaN < -inf < ... < -0.0 < +0.0 < ... <
+//! +inf < +NaN. Keys are bijective, so `unkey` recovers the exact value.
+
+/// Map an `f64` to a `u64` that sorts in IEEE 754 total order.
+#[inline]
+pub fn key(x: f64) -> u64 {
+    let b = x.to_bits();
+    // Negative values: flip all bits (reverses their order and puts them
+    // below positives). Positive values: set the sign bit (puts them
+    // above all flipped negatives).
+    if b & (1 << 63) != 0 {
+        !b
+    } else {
+        b | (1 << 63)
+    }
+}
+
+/// Inverse of [`key`]: recover the exact `f64`.
+#[inline]
+pub fn unkey(k: u64) -> f64 {
+    if k & (1 << 63) != 0 {
+        f64::from_bits(k & !(1 << 63))
+    } else {
+        f64::from_bits(!k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cmp::Ordering;
+
+    #[test]
+    fn matches_total_cmp() {
+        let vals = [
+            f64::NEG_INFINITY,
+            -1e300,
+            -2.5,
+            -1.0,
+            -1e-300,
+            -0.0,
+            0.0,
+            1e-300,
+            0.5,
+            1.0,
+            1e300,
+            f64::INFINITY,
+            f64::NAN,
+            -f64::NAN,
+        ];
+        for &a in &vals {
+            for &b in &vals {
+                let by_key = key(a).cmp(&key(b));
+                let by_total = a.total_cmp(&b);
+                assert_eq!(by_key, by_total, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn distinguishes_signed_zero() {
+        assert_eq!(key(-0.0).cmp(&key(0.0)), Ordering::Less);
+    }
+
+    #[test]
+    fn roundtrips() {
+        for &x in &[0.0, -0.0, 1.5, -1.5, f64::INFINITY, f64::NEG_INFINITY, 1e-308] {
+            assert_eq!(unkey(key(x)).to_bits(), x.to_bits());
+        }
+        assert!(unkey(key(f64::NAN)).is_nan());
+    }
+
+    #[test]
+    fn sorts_like_floats() {
+        let mut xs = vec![3.0, -1.0, 0.25, -7.5, 2.0];
+        let mut by_key = xs.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        by_key.sort_by_key(|&x| key(x));
+        assert_eq!(xs, by_key);
+    }
+}

@@ -23,6 +23,17 @@ pub fn num_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// `ceil(n / w)` (not the `(n + w - 1) / w` idiom, and not
+/// `usize::div_ceil`, which needs Rust >= 1.73).
+fn chunk_size(n: usize, w: usize) -> usize {
+    let q = n / w;
+    if n % w == 0 {
+        q
+    } else {
+        q + 1
+    }
+}
+
 /// Map `f` over `inputs` on up to `workers` scoped threads, returning
 /// outputs in input order. `init` builds one scratch state per worker;
 /// `f` receives `(scratch, global_index, item)`.
@@ -49,7 +60,7 @@ where
             .map(|(i, item)| f(&mut scratch, i, item))
             .collect();
     }
-    let chunk = (n + w - 1) / w;
+    let chunk = chunk_size(n, w);
     std::thread::scope(|scope| {
         let handles: Vec<_> = inputs
             .chunks(chunk)
@@ -73,6 +84,51 @@ where
         }
         out
     })
+}
+
+/// Like [`shard_map`], but writes outputs into a caller-owned buffer —
+/// the allocation-free variant for hot loops that run every tick (the
+/// monitor's sampling pass reuses its columnar buffers across ticks).
+///
+/// `out` must be exactly `inputs.len()` long; `out[i]` receives
+/// `f(scratch, i, &inputs[i])`. Input and output slices are split into
+/// the same contiguous shards, so results are deterministic and
+/// worker-count independent, exactly as for `shard_map`.
+pub fn shard_map_into<I, O, S, FI, F>(inputs: &[I], out: &mut [O], workers: usize, init: FI, f: F)
+where
+    I: Sync,
+    O: Send,
+    FI: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &I) -> O + Sync,
+{
+    assert_eq!(inputs.len(), out.len(), "shard_map_into: length mismatch");
+    let n = inputs.len();
+    if n == 0 {
+        return;
+    }
+    let w = workers.max(1).min(n);
+    if w == 1 {
+        let mut scratch = init();
+        for (i, (item, slot)) in inputs.iter().zip(out.iter_mut()).enumerate() {
+            *slot = f(&mut scratch, i, item);
+        }
+        return;
+    }
+    let chunk = chunk_size(n, w);
+    std::thread::scope(|scope| {
+        for (ci, (shard_in, shard_out)) in
+            inputs.chunks(chunk).zip(out.chunks_mut(chunk)).enumerate()
+        {
+            let f = &f;
+            let init = &init;
+            scope.spawn(move || {
+                let mut scratch = init();
+                for (j, (item, slot)) in shard_in.iter().zip(shard_out.iter_mut()).enumerate() {
+                    *slot = f(&mut scratch, ci * chunk + j, item);
+                }
+            });
+        }
+    });
 }
 
 #[cfg(test)]
@@ -130,5 +186,30 @@ mod tests {
     #[test]
     fn num_workers_positive() {
         assert!(num_workers() >= 1);
+    }
+
+    #[test]
+    fn shard_map_into_matches_shard_map() {
+        let inputs: Vec<f64> = (0..97).map(|i| i as f64 * 0.11).collect();
+        let expect = shard_map(&inputs, 3, || (), |_, i, &x| x * 2.0 + i as f64);
+        for w in [1, 2, 4, 16, 200] {
+            let mut out = vec![0.0; inputs.len()];
+            shard_map_into(&inputs, &mut out, w, || (), |_, i, &x| x * 2.0 + i as f64);
+            assert_eq!(out, expect, "w={w}");
+        }
+    }
+
+    #[test]
+    fn shard_map_into_empty_ok() {
+        let mut out: Vec<i32> = Vec::new();
+        shard_map_into(&[] as &[i32], &mut out, 4, || (), |_, _, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn shard_map_into_length_mismatch_panics() {
+        let mut out = vec![0; 2];
+        shard_map_into(&[1, 2, 3], &mut out, 2, || (), |_, _, &x| x);
     }
 }

@@ -1,0 +1,110 @@
+//! Golden-equivalence suite for the PR 2 control-plane refactor.
+//!
+//! The engine's incremental monitor path (placed-set walk + columnar
+//! buffers + sharded pattern evaluation) must reproduce the seed
+//! engine's behavior *bit for bit* under default policies. The seed's
+//! scan-every-app gather is kept in-tree as
+//! `MonitorMode::ReferenceScan`; these tests run both modes on the
+//! tier-1 configurations and demand identical `RunReport`s, and run the
+//! sharded pass under several `ZOE_WORKERS` settings to pin down
+//! worker-count independence.
+
+use zoe_shaper::config::{ForecasterKind, Policy, SimConfig};
+use zoe_shaper::metrics::RunReport;
+use zoe_shaper::sim::engine::{run_simulation_with, MonitorMode};
+
+fn tier1_cfg() -> SimConfig {
+    let mut cfg = SimConfig::small();
+    cfg.workload.num_apps = 120;
+    cfg.cluster.hosts = 4;
+    cfg
+}
+
+/// Bit-for-bit comparison of every numeric field the report carries.
+fn assert_reports_identical(a: &RunReport, b: &RunReport, ctx: &str) {
+    assert_eq!(a.completed, b.completed, "{ctx}: completed");
+    assert_eq!(a.num_apps, b.num_apps, "{ctx}: num_apps");
+    assert_eq!(a.oom_events, b.oom_events, "{ctx}: oom_events");
+    assert_eq!(a.app_preemptions, b.app_preemptions, "{ctx}: app_preemptions");
+    assert_eq!(
+        a.elastic_preemptions, b.elastic_preemptions,
+        "{ctx}: elastic_preemptions"
+    );
+    assert_eq!(a.forecasts_issued, b.forecasts_issued, "{ctx}: forecasts_issued");
+    assert_eq!(a.monitor_ticks, b.monitor_ticks, "{ctx}: monitor_ticks");
+    assert_eq!(a.shaper_ticks, b.shaper_ticks, "{ctx}: shaper_ticks");
+    // f64 fields: to_bits comparison = true bit-for-bit equality
+    let exact = [
+        (a.turnaround.mean, b.turnaround.mean, "turnaround.mean"),
+        (a.turnaround.median, b.turnaround.median, "turnaround.median"),
+        (a.turnaround.max, b.turnaround.max, "turnaround.max"),
+        (a.cpu_slack.mean, b.cpu_slack.mean, "cpu_slack.mean"),
+        (a.mem_slack.mean, b.mem_slack.mean, "mem_slack.mean"),
+        (a.failed_app_fraction, b.failed_app_fraction, "failed_app_fraction"),
+        (a.wasted_work, b.wasted_work, "wasted_work"),
+        (a.mean_alloc_cpu, b.mean_alloc_cpu, "mean_alloc_cpu"),
+        (a.mean_alloc_mem, b.mean_alloc_mem, "mean_alloc_mem"),
+        (a.peak_host_usage, b.peak_host_usage, "peak_host_usage"),
+        (a.sim_time, b.sim_time, "sim_time"),
+    ];
+    for (x, y, name) in exact {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {name} {x} vs {y}");
+    }
+    assert_eq!(a.turnarounds.len(), b.turnarounds.len(), "{ctx}: turnarounds len");
+    for (i, (x, y)) in a.turnarounds.iter().zip(&b.turnarounds).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: turnarounds[{i}]");
+    }
+    assert_eq!(a.mem_slacks.len(), b.mem_slacks.len(), "{ctx}: mem_slacks len");
+    for (i, (x, y)) in a.mem_slacks.iter().zip(&b.mem_slacks).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: mem_slacks[{i}]");
+    }
+}
+
+#[test]
+fn incremental_matches_reference_for_all_oracle_policies() {
+    for policy in [Policy::Baseline, Policy::Optimistic, Policy::Pessimistic] {
+        let mut cfg = tier1_cfg();
+        cfg.shaper.policy = policy;
+        cfg.forecast.kind = ForecasterKind::Oracle;
+        let inc = run_simulation_with(&cfg, None, policy.name(), MonitorMode::Incremental)
+            .unwrap();
+        let reference =
+            run_simulation_with(&cfg, None, policy.name(), MonitorMode::ReferenceScan).unwrap();
+        assert_reports_identical(&inc, &reference, policy.name());
+        assert_eq!(inc.completed, 120, "{}", inc.summary());
+    }
+}
+
+#[test]
+fn incremental_matches_reference_with_model_forecaster() {
+    // a real forecaster exercises the monitor-history path (grace
+    // period, per-component series) on top of the sampling pass
+    let mut cfg = tier1_cfg();
+    cfg.workload.num_apps = 60;
+    cfg.shaper.policy = Policy::Pessimistic;
+    cfg.forecast.kind = ForecasterKind::LastValue;
+    let inc = run_simulation_with(&cfg, None, "lv", MonitorMode::Incremental).unwrap();
+    let reference = run_simulation_with(&cfg, None, "lv", MonitorMode::ReferenceScan).unwrap();
+    assert_reports_identical(&inc, &reference, "last-value");
+}
+
+#[test]
+fn incremental_matches_reference_across_seeds() {
+    for seed in [7u64, 77, 777] {
+        let mut cfg = tier1_cfg();
+        cfg.seed = seed;
+        cfg.workload.num_apps = 50;
+        cfg.shaper.policy = Policy::Pessimistic;
+        cfg.forecast.kind = ForecasterKind::Oracle;
+        let inc =
+            run_simulation_with(&cfg, None, "inc", MonitorMode::Incremental).unwrap();
+        let reference =
+            run_simulation_with(&cfg, None, "ref", MonitorMode::ReferenceScan).unwrap();
+        assert_reports_identical(&inc, &reference, &format!("seed {seed}"));
+    }
+}
+
+// The ZOE_WORKERS sweep lives in tests/monitor_shard_workers.rs: it
+// mutates process-global env vars, so it gets a test binary of its own
+// (Rust runs same-binary tests on parallel threads, and concurrent
+// setenv/getenv is undefined behavior in glibc).

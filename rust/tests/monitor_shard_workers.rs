@@ -1,0 +1,70 @@
+//! Worker-count independence of the sharded monitor sampling pass:
+//! `ZOE_WORKERS` ∈ {1, 2, 8} must yield bit-identical `RunReport`s, and
+//! all of them must equal the sequential `ReferenceScan` gather.
+//!
+//! This is the only test in this binary ON PURPOSE: it mutates
+//! process-global environment variables (`ZOE_WORKERS`,
+//! `ZOE_SHARD_THRESHOLD`), and Rust runs same-binary tests on parallel
+//! threads, where concurrent setenv/getenv is undefined behavior in
+//! glibc. A separate integration-test file = a separate process.
+
+use zoe_shaper::config::{ForecasterKind, Policy, SimConfig};
+use zoe_shaper::sim::engine::{run_simulation_with, MonitorMode};
+
+#[test]
+fn sharded_monitor_pass_is_worker_count_independent() {
+    let mut cfg = SimConfig::small();
+    cfg.workload.num_apps = 80;
+    cfg.cluster.hosts = 4;
+    cfg.shaper.policy = Policy::Pessimistic;
+    cfg.forecast.kind = ForecasterKind::Oracle;
+    // force the sharded path even on this small world (the default
+    // threshold of 1024 rows would keep everything inline)
+    std::env::set_var("ZOE_SHARD_THRESHOLD", "1");
+    let mut reports = Vec::new();
+    for workers in ["1", "2", "8"] {
+        std::env::set_var("ZOE_WORKERS", workers);
+        reports.push((
+            workers,
+            run_simulation_with(&cfg, None, "w", MonitorMode::Incremental).unwrap(),
+        ));
+    }
+    std::env::remove_var("ZOE_WORKERS");
+    std::env::remove_var("ZOE_SHARD_THRESHOLD");
+
+    let (_, first) = &reports[0];
+    for (workers, r) in &reports[1..] {
+        assert_eq!(first.completed, r.completed, "ZOE_WORKERS={workers}");
+        assert_eq!(first.oom_events, r.oom_events, "ZOE_WORKERS={workers}");
+        assert_eq!(
+            first.turnaround.mean.to_bits(),
+            r.turnaround.mean.to_bits(),
+            "ZOE_WORKERS={workers}: turnaround.mean"
+        );
+        assert_eq!(
+            first.mem_slack.mean.to_bits(),
+            r.mem_slack.mean.to_bits(),
+            "ZOE_WORKERS={workers}: mem_slack.mean"
+        );
+        assert_eq!(
+            first.mean_alloc_mem.to_bits(),
+            r.mean_alloc_mem.to_bits(),
+            "ZOE_WORKERS={workers}: mean_alloc_mem"
+        );
+        assert_eq!(first.wasted_work.to_bits(), r.wasted_work.to_bits(), "ZOE_WORKERS={workers}");
+    }
+    // and the sharded result equals the sequential reference scan
+    let reference = run_simulation_with(&cfg, None, "w", MonitorMode::ReferenceScan).unwrap();
+    assert_eq!(first.completed, reference.completed, "vs reference");
+    assert_eq!(first.oom_events, reference.oom_events, "vs reference");
+    assert_eq!(
+        first.turnaround.mean.to_bits(),
+        reference.turnaround.mean.to_bits(),
+        "vs reference: turnaround.mean"
+    );
+    assert_eq!(
+        first.mem_slack.mean.to_bits(),
+        reference.mem_slack.mean.to_bits(),
+        "vs reference: mem_slack.mean"
+    );
+}

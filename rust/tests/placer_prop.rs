@@ -1,0 +1,149 @@
+//! Property tests for the arena-backed cluster and the placer family
+//! (hand-rolled driver: proptest is not in the offline crate set).
+//! Hundreds of randomized churn worlds per property; every indexed
+//! query is checked against a brute-force linear scan, and the cluster
+//! invariants (ledgers, arena, per-host lists, capacity indexes) must
+//! hold after every mutation.
+
+use zoe_shaper::cluster::{Cluster, CAPACITY_EPS};
+use zoe_shaper::config::{ClusterConfig, HostClass};
+use zoe_shaper::scheduler::{BestFitPlacer, FirstFitPlacer, Placer, WorstFitPlacer};
+use zoe_shaper::util::rng::Pcg;
+
+const CASES: u64 = 200;
+
+/// A random cluster, possibly heterogeneous.
+fn random_cluster(rng: &mut Pcg) -> Cluster {
+    let mut cfg = ClusterConfig::uniform(
+        rng.int_range(1, 8) as usize,
+        rng.uniform(4.0, 32.0),
+        rng.uniform(8.0, 128.0),
+    );
+    if rng.chance(0.5) {
+        cfg.extra_classes.push(HostClass {
+            count: rng.int_range(1, 4) as usize,
+            cores: rng.uniform(32.0, 128.0),
+            mem_gb: rng.uniform(128.0, 512.0),
+        });
+    }
+    Cluster::new(&cfg)
+}
+
+/// Brute-force fit predicate matching the cluster's tolerance.
+fn fits(c: &Cluster, h: usize, cpus: f64, mem: f64) -> bool {
+    c.hosts[h].free_cpus() + CAPACITY_EPS >= cpus && c.hosts[h].free_mem() + CAPACITY_EPS >= mem
+}
+
+#[test]
+fn prop_placers_agree_with_linear_reference_under_churn() {
+    let placers: [&dyn Placer; 3] = [&WorstFitPlacer, &FirstFitPlacer, &BestFitPlacer];
+    for seed in 0..CASES {
+        let mut rng = Pcg::seeded(seed);
+        let mut cluster = random_cluster(&mut rng);
+        let mut live: Vec<usize> = Vec::new();
+        let mut next_cid = 0usize;
+        for _op in 0..60 {
+            // mutate: place via a random placer, remove, or resize
+            let roll = rng.f64();
+            if roll < 0.5 || live.is_empty() {
+                let (cpus, mem) = (rng.uniform(0.1, 8.0), rng.uniform(0.1, 24.0));
+                let placer = placers[rng.index(3)];
+                if let Some(h) = placer.select(&cluster, cpus, mem) {
+                    assert!(
+                        fits(&cluster, h, cpus, mem),
+                        "seed {seed}: {} chose an unfitting host",
+                        placer.name()
+                    );
+                    assert!(cluster.place(next_cid, h, cpus, mem, 0.0), "seed {seed}");
+                    live.push(next_cid);
+                    next_cid += 1;
+                }
+            } else if roll < 0.75 {
+                let id = live.swap_remove(rng.index(live.len()));
+                assert!(cluster.remove(id).is_some(), "seed {seed}");
+            } else {
+                let id = live[rng.index(live.len())];
+                let p = cluster.placement(id).unwrap();
+                let (nc, nm) = (p.alloc_cpus * rng.uniform(0.2, 1.1), p.alloc_mem * rng.uniform(0.2, 1.1));
+                let _ = cluster.resize(id, nc, nm); // may legitimately reject
+            }
+            cluster
+                .check_invariants()
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+
+            // indexed queries == linear reference
+            let (qc, qm) = (rng.uniform(0.1, 16.0), rng.uniform(0.1, 64.0));
+            let first_ref = (0..cluster.len()).find(|&h| fits(&cluster, h, qc, qm));
+            assert_eq!(cluster.first_fit(qc, qm), first_ref, "seed {seed}: first_fit");
+            let worst_ref = cluster
+                .hosts
+                .iter()
+                .filter(|h| fits(&cluster, h.id, qc, qm))
+                .max_by(|a, b| a.free_mem().total_cmp(&b.free_mem()))
+                .map(|h| h.id);
+            assert_eq!(cluster.worst_fit(qc, qm), worst_ref, "seed {seed}: worst_fit");
+            let best_ref = cluster
+                .hosts
+                .iter()
+                .filter(|h| fits(&cluster, h.id, qc, qm))
+                .min_by(|a, b| {
+                    a.free_mem()
+                        .total_cmp(&b.free_mem())
+                        .then(a.id.cmp(&b.id))
+                })
+                .map(|h| h.id);
+            assert_eq!(cluster.best_fit(qc, qm), best_ref, "seed {seed}: best_fit");
+        }
+    }
+}
+
+#[test]
+fn prop_placer_none_means_no_host_fits() {
+    let placers: [&dyn Placer; 3] = [&WorstFitPlacer, &FirstFitPlacer, &BestFitPlacer];
+    for seed in 0..CASES {
+        let mut rng = Pcg::seeded(10_000 + seed);
+        let mut cluster = random_cluster(&mut rng);
+        // load the cluster up
+        let mut cid = 0;
+        for _ in 0..40 {
+            let (cpus, mem) = (rng.uniform(0.5, 12.0), rng.uniform(0.5, 48.0));
+            if let Some(h) = cluster.worst_fit(cpus, mem) {
+                assert!(cluster.place(cid, h, cpus, mem, 0.0));
+                cid += 1;
+            }
+        }
+        for placer in placers {
+            let (qc, qm) = (rng.uniform(0.1, 64.0), rng.uniform(0.1, 256.0));
+            let got = placer.select(&cluster, qc, qm);
+            let any = (0..cluster.len()).any(|h| fits(&cluster, h, qc, qm));
+            match got {
+                Some(h) => assert!(fits(&cluster, h, qc, qm), "seed {seed}: {}", placer.name()),
+                None => assert!(!any, "seed {seed}: {} missed a fitting host", placer.name()),
+            }
+        }
+        cluster.check_invariants().unwrap();
+    }
+}
+
+#[test]
+fn heterogeneous_placers_respect_per_host_capacity() {
+    // 2 small + 2 big hosts: a component bigger than any small host must
+    // always land on a big one, under every placer.
+    let mut cfg = ClusterConfig::uniform(2, 4.0, 8.0);
+    cfg.extra_classes.push(HostClass { count: 2, cores: 64.0, mem_gb: 256.0 });
+    let mut cluster = Cluster::new(&cfg);
+    let placers: [&dyn Placer; 3] = [&WorstFitPlacer, &FirstFitPlacer, &BestFitPlacer];
+    let mut cid = 0;
+    for placer in placers {
+        for _ in 0..3 {
+            let h = placer
+                .select(&cluster, 8.0, 16.0)
+                .unwrap_or_else(|| panic!("{} found no host", placer.name()));
+            assert!(h >= 2, "{}: component placed on an undersized host", placer.name());
+            assert!(cluster.place(cid, h, 8.0, 16.0, 0.0));
+            cid += 1;
+        }
+    }
+    cluster.check_invariants().unwrap();
+    assert_eq!(cluster.placed_count(), 9);
+}

@@ -3,7 +3,7 @@
 
 use zoe_shaper::cluster::Cluster;
 use zoe_shaper::config::{ClusterConfig, SimConfig};
-use zoe_shaper::scheduler::FifoScheduler;
+use zoe_shaper::scheduler::{FifoScheduler, Scheduler, WorstFitPlacer};
 use zoe_shaper::util::rng::Pcg;
 use zoe_shaper::workload::{generate, AppState};
 
@@ -13,11 +13,7 @@ fn churn_preserves_ledger_invariants() {
     cfg.num_apps = 60;
     let wl = generate(&cfg, 11);
     let mut apps = wl.apps;
-    let mut cluster = Cluster::new(&ClusterConfig {
-        hosts: 4,
-        cores_per_host: 32.0,
-        mem_per_host_gb: 128.0,
-    });
+    let mut cluster = Cluster::new(&ClusterConfig::uniform(4, 32.0, 128.0));
     let mut sched = FifoScheduler::new();
     let mut rng = Pcg::seeded(99);
     for id in 0..apps.len() {
@@ -26,7 +22,7 @@ fn churn_preserves_ledger_invariants() {
     let mut t = 0.0;
     for _round in 0..50 {
         t += 60.0;
-        let started = sched.try_schedule(&mut apps, &mut cluster, t, 1.0);
+        let started = sched.try_schedule(&mut apps, &mut cluster, &WorstFitPlacer, t, 1.0);
         cluster.check_invariants().unwrap();
         // randomly retire or preempt some running apps
         let running: Vec<usize> = apps
@@ -84,16 +80,12 @@ fn shaped_allocations_admit_more_apps() {
     cfg.num_apps = 80;
     let wl = generate(&cfg, 17);
     let mut apps = wl.apps;
-    let mut cluster = Cluster::new(&ClusterConfig {
-        hosts: 1,
-        cores_per_host: 16.0,
-        mem_per_host_gb: 32.0,
-    });
+    let mut cluster = Cluster::new(&ClusterConfig::uniform(1, 16.0, 32.0));
     let mut sched = FifoScheduler::new();
     for id in 0..apps.len() {
         sched.enqueue(&apps, id);
     }
-    let _ = sched.try_schedule(&mut apps, &mut cluster, 0.0, 1.0);
+    let _ = sched.try_schedule(&mut apps, &mut cluster, &WorstFitPlacer, 0.0, 1.0);
     let before = sched.len();
     if before == 0 {
         return; // everything fit; nothing to prove on this seed
@@ -105,7 +97,7 @@ fn shaped_allocations_admit_more_apps() {
         let (nc, nm) = (p.alloc_cpus * 0.3, p.alloc_mem * 0.3);
         cluster.resize(c, nc, nm).unwrap();
     }
-    let started = sched.try_schedule(&mut apps, &mut cluster, 60.0, 1.0);
+    let started = sched.try_schedule(&mut apps, &mut cluster, &WorstFitPlacer, 60.0, 1.0);
     assert!(
         !started.is_empty(),
         "shrinking allocations must unlock admissions"

@@ -23,11 +23,7 @@ fn random_world(rng: &mut Pcg) -> World {
     let hosts = rng.int_range(1, 6) as usize;
     let cap_cpu = rng.uniform(8.0, 32.0);
     let cap_mem = rng.uniform(16.0, 128.0);
-    let mut cluster = Cluster::new(&ClusterConfig {
-        hosts,
-        cores_per_host: cap_cpu,
-        mem_per_host_gb: cap_mem,
-    });
+    let mut cluster = Cluster::new(&ClusterConfig::uniform(hosts, cap_cpu, cap_mem));
     let napps = rng.int_range(1, 10) as usize;
     let mut apps = Vec::new();
     let mut cid = 0;

@@ -11,3 +11,11 @@ cargo build --release
 # `build`/`test` alone never touch
 cargo build --release --benches --examples
 cargo test -q
+
+# lint gate: clippy across every target (skipped gracefully on
+# toolchains without the clippy component)
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "cargo clippy unavailable; skipping lint gate"
+fi
