@@ -9,15 +9,22 @@
 //! scheduling + shaping via `pump_until`), then times individual
 //! monitor and shaper passes: 250 hosts (the paper's simulation testbed)
 //! and 1000 hosts (the scale-up scenario). Placer select queries are
-//! timed on the warm 1000-host cluster as well. Results are written to
-//! `BENCH_engine.json` for cross-PR tracking. `ZOE_WORKERS` caps the
-//! sampling-pass worker threads.
+//! timed on the warm 1000-host cluster as well, and the sliding-window
+//! GP's warm tick is timed in both factor-maintenance modes (rank-1
+//! slide vs per-tick refactorization) at the 250-host ≈ 10k-series
+//! paper scale. Results are appended to `BENCH_engine.json` keyed by
+//! git revision, so the cross-PR trajectory accumulates. `ZOE_WORKERS`
+//! caps the sampling-pass worker threads.
 
 use std::time::Duration;
 
-use zoe_shaper::config::{ForecasterKind, Policy, SimConfig};
+use zoe_shaper::config::{ForecasterKind, KernelKind, Policy, SimConfig};
+use zoe_shaper::forecast::gp_incremental::{GpIncremental, SlideMode};
+use zoe_shaper::forecast::{Forecaster, SeriesRef};
 use zoe_shaper::sim::engine::{Engine, ForecastSource};
+use zoe_shaper::trace::patterns::Pattern;
 use zoe_shaper::util::bench::Bench;
+use zoe_shaper::util::rng::Pcg;
 
 /// Build and warm an engine: dense arrivals of long-running apps fill
 /// the cluster, then several monitor/shaper cycles reach steady state.
@@ -59,6 +66,81 @@ fn bench_scale(b: &mut Bench, hosts: usize, apps: usize) {
     }
 }
 
+/// A synthetic corpus of keyed sliding windows: every `tick()` advances
+/// each series by one sample, exactly the contract the engine's monitor
+/// arena provides to the forecaster each shaping tick.
+struct SlidingCorpus {
+    wins: Vec<Vec<f64>>,
+    pats: Vec<Pattern>,
+    t: u64,
+    seq: u64,
+}
+
+impl SlidingCorpus {
+    fn new(n: usize, window: usize, seed: u64) -> Self {
+        let mut rng = Pcg::seeded(seed);
+        let pats: Vec<Pattern> = (0..n).map(|_| Pattern::sample(&mut rng, true)).collect();
+        let wins = pats
+            .iter()
+            .map(|p| (0..window as u64).map(|s| p.at_step(s)).collect())
+            .collect();
+        SlidingCorpus { wins, pats, t: window as u64, seq: window as u64 }
+    }
+
+    fn tick(&mut self) {
+        for (w, p) in self.wins.iter_mut().zip(&self.pats) {
+            w.rotate_left(1);
+            *w.last_mut().unwrap() = p.at_step(self.t);
+        }
+        self.t += 1;
+        self.seq += 1;
+    }
+
+    fn refs(&self) -> Vec<SeriesRef<'_>> {
+        self.wins
+            .iter()
+            .enumerate()
+            .map(|(i, w)| SeriesRef::keyed(i as u64, self.seq, w))
+            .collect()
+    }
+}
+
+/// Warm-tick sliding GP at paper scale (250 hosts ≈ 10k series): the
+/// rank-1 incremental path vs the same model refactorized every tick.
+/// Acceptance tracker for the PR 3 pipeline — expected ≥ 2x.
+fn bench_incremental_gp(b: &mut Bench) {
+    const SERIES: usize = 10_000;
+    const H: usize = 10;
+    let mut ratios = Vec::new();
+    for (label, mode) in [
+        ("gp_refactorize_warm_tick_10k_series_h10", SlideMode::Refactorize),
+        ("gp_incremental_warm_tick_10k_series_h10", SlideMode::Incremental),
+    ] {
+        let mut gp = GpIncremental::new(KernelKind::Exp, H).with_mode(mode);
+        let mut corpus = SlidingCorpus::new(SERIES, 2 * H, 42);
+        // prime the caches so the measured region is the steady state
+        let _ = gp.forecast(&corpus.refs());
+        let r = b
+            .run(label, || {
+                corpus.tick();
+                gp.forecast(&corpus.refs())
+            })
+            .ns_per_iter();
+        ratios.push(r);
+        let st = gp.stats();
+        println!(
+            "    ({label}: {} slides, {} refits, {} per-tick refactorizations)",
+            st.slides, st.refits, st.refactorizations
+        );
+    }
+    let speedup = ratios[0] / ratios[1];
+    println!(
+        "  -> rank-1 slide path speedup over per-tick refactorization: {speedup:.2}x \
+         on the warm tick {}",
+        if speedup >= 2.0 { "(meets the >= 2x PR 3 expectation)" } else { "(below the >= 2x PR 3 expectation)" }
+    );
+}
+
 fn main() {
     let mut b = Bench::new("engine").with_target(Duration::from_millis(700));
 
@@ -67,14 +149,21 @@ fn main() {
     // scale-up scenario: 1000 hosts
     bench_scale(&mut b, 1000, 10_000);
 
+    // the forecast pipeline's warm tick: incremental vs refactorize
+    bench_incremental_gp(&mut b);
+
     println!(
         "  ({} workers available for the sampling pass)",
         zoe_shaper::util::pool::num_workers()
     );
 
     let json_path = "BENCH_engine.json";
-    match b.write_json(json_path) {
-        Ok(()) => println!("\nwrote {} results to {json_path}", b.results().len()),
+    match b.append_json(json_path) {
+        Ok(()) => println!(
+            "\nappended {} results to {json_path} (rev {})",
+            b.results().len(),
+            zoe_shaper::util::bench::git_rev()
+        ),
         Err(e) => eprintln!("could not write {json_path}: {e}"),
     }
 }

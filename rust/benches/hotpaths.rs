@@ -3,9 +3,10 @@
 //!
 //!     cargo bench --bench hotpaths
 //!
-//! Besides the human-readable table this writes machine-readable results
-//! to `BENCH_hotpaths.json` (name, ns/iter, throughput) so the perf
-//! trajectory is tracked across PRs, and prints the speedup of the
+//! Besides the human-readable table this appends machine-readable
+//! results to `BENCH_hotpaths.json` (name, ns/iter, throughput — one
+//! entry per run, keyed by git revision) so the perf trajectory
+//! accumulates across PRs, and prints the speedup of the
 //! workspace/parallel GP engine over the pre-workspace reference path.
 //! `ZOE_WORKERS` caps the worker threads (default: available cores).
 
@@ -15,9 +16,9 @@ use std::time::Duration;
 
 use zoe_shaper::cluster::Cluster;
 use zoe_shaper::config::{ClusterConfig, ForecasterKind, KernelKind, Policy, SimConfig};
-use zoe_shaper::forecast::{arima::Arima, gp_native::GpNative, gp_pjrt::GpPjrt, Forecaster};
+use zoe_shaper::forecast::{anon_refs, arima::Arima, gp_native::GpNative, gp_pjrt::GpPjrt, Forecaster};
 use zoe_shaper::runtime::Runtime;
-use zoe_shaper::shaper::{plan, Demand};
+use zoe_shaper::shaper::{plan_into, Demand, PlanScratch, ShapeActions};
 use zoe_shaper::sim::engine::run_simulation;
 use zoe_shaper::trace::patterns::{Pattern, PatternKind};
 use zoe_shaper::util::bench::Bench;
@@ -93,19 +94,23 @@ fn big_world() -> (Vec<Application>, Cluster, Vec<usize>, HashMap<usize, Demand>
 fn main() {
     let mut b = Bench::new("hotpaths").with_target(Duration::from_millis(700));
 
-    // L3: Algorithm 1 at paper scale (250 hosts, ~5k components)
+    // L3: Algorithm 1 at paper scale (250 hosts, ~5k components), through
+    // the engine's allocation-free plan_into + reused scratch path
     let (apps, cluster, running, demands) = big_world();
+    let mut scratch = PlanScratch::default();
+    let mut actions = ShapeActions::default();
     b.run("algorithm1_plan_250hosts_5k_components", || {
-        plan(Policy::Pessimistic, &cluster, &apps, &running, &demands)
+        plan_into(Policy::Pessimistic, &cluster, &apps, &running, &demands, &mut scratch, &mut actions)
     });
     b.run("optimistic_plan_250hosts_5k_components", || {
-        plan(Policy::Optimistic, &cluster, &apps, &running, &demands)
+        plan_into(Policy::Optimistic, &cluster, &apps, &running, &demands, &mut scratch, &mut actions)
     });
 
     // Forecasters: batch of 64 series, h=10 window. The reference case is
     // the pre-workspace implementation (fresh matrices per grid entry,
     // serial); the headline case is the shared-workspace parallel engine.
     let corpus: Vec<Vec<f64>> = series(64, 20, 3);
+    let corpus_refs = anon_refs(&corpus);
     let gp_ref = GpNative::new(KernelKind::Exp, 10);
     let ref64 = b
         .run("gp_native_reference_batch64_h10_gridls4", || {
@@ -113,7 +118,8 @@ fn main() {
         })
         .ns_per_iter();
     let mut gp = GpNative::new(KernelKind::Exp, 10);
-    let new64 = b.run("gp_native_batch64_h10_gridls4", || gp.forecast(&corpus)).ns_per_iter();
+    let new64 =
+        b.run("gp_native_batch64_h10_gridls4", || gp.forecast(&corpus_refs)).ns_per_iter();
     println!(
         "  -> workspace+parallel engine is {:.2}x the reference on batch64 ({} workers available)",
         ref64 / new64,
@@ -124,14 +130,18 @@ fn main() {
     // is ~10k series (cpu + mem per component); the 1000-host scenario is
     // 4x that. These are the numbers that bound coordinator capacity.
     let tick_250 = series(10_000, 20, 11);
+    let tick_250_refs = anon_refs(&tick_250);
     let gp250 = GpNative::new(KernelKind::Exp, 10);
-    b.run("gp_native_fused_tick_250hosts_10k_series", || gp250.forecast_batch(&tick_250));
+    b.run("gp_native_fused_tick_250hosts_10k_series", || gp250.forecast_batch(&tick_250_refs));
     let tick_1000 = series(40_000, 20, 13);
+    let tick_1000_refs = anon_refs(&tick_1000);
     let gp1000 = GpNative::new(KernelKind::Exp, 10);
-    b.run("gp_native_fused_tick_1000hosts_40k_series", || gp1000.forecast_batch(&tick_1000));
+    b.run("gp_native_fused_tick_1000hosts_40k_series", || {
+        gp1000.forecast_batch(&tick_1000_refs)
+    });
 
     let mut arima = Arima::auto();
-    b.run("arima_auto_batch64", || arima.forecast(&corpus));
+    b.run("arima_auto_batch64", || arima.forecast(&corpus_refs));
 
     // GP through the AOT PJRT artifact (the production path)
     match Runtime::from_default_dir() {
@@ -139,10 +149,11 @@ fn main() {
             let rt = Arc::new(rt);
             let mut gp1 = GpPjrt::new(rt.clone(), KernelKind::Exp, 10, 32).unwrap();
             let one = vec![corpus[0].clone()];
-            b.run("gp_pjrt_single_h10_gridls4", || gp1.forecast(&one));
+            let one_refs = anon_refs(&one);
+            b.run("gp_pjrt_single_h10_gridls4", || gp1.forecast(&one_refs));
             let mut gpb = GpPjrt::new(rt, KernelKind::Exp, 10, 32).unwrap();
             b.run("gp_pjrt_batch64_h10_gridls4(4 slab execs)", || {
-                gpb.forecast(&corpus)
+                gpb.forecast(&corpus_refs)
             });
         }
         Err(e) => eprintln!("skipping PJRT benches: {e:#}"),
@@ -164,8 +175,12 @@ fn main() {
     );
 
     let json_path = "BENCH_hotpaths.json";
-    match b.write_json(json_path) {
-        Ok(()) => println!("\nwrote {} results to {json_path}", b.results().len()),
+    match b.append_json(json_path) {
+        Ok(()) => println!(
+            "\nappended {} results to {json_path} (rev {})",
+            b.results().len(),
+            zoe_shaper::util::bench::git_rev()
+        ),
         Err(e) => eprintln!("could not write {json_path}: {e}"),
     }
 }

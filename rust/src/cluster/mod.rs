@@ -361,10 +361,14 @@ impl Cluster {
     /// leaving large holes for large components. Ties on free memory
     /// resolve to the lowest host id.
     pub fn best_fit(&self, cpus: f64, mem: f64) -> Option<HostId> {
-        // the range start prunes hosts that cannot fit; the exact fit
-        // predicate is re-checked per candidate so the two epsilon forms
-        // can never disagree
-        let lo = (order::key(mem - CAPACITY_EPS), 0usize);
+        // The range start prunes hosts that cannot fit; the exact fit
+        // predicate (`free + EPS >= mem`, the form every other path
+        // uses) is re-checked per candidate. The start is widened by a
+        // full extra epsilon so float asymmetry between `mem - EPS` and
+        // `free + EPS >= mem` (≈1 ulp) can never prune a host the exact
+        // predicate would accept — at worst the walk visits the sliver
+        // of hosts within one epsilon below the threshold and skips them.
+        let lo = (order::key(mem - 2.0 * CAPACITY_EPS), 0usize);
         for &(_, h) in self.mem_index.range(lo..) {
             let host = &self.hosts[h];
             if host.free_cpus() + CAPACITY_EPS >= cpus && host.free_mem() + CAPACITY_EPS >= mem {

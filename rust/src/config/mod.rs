@@ -14,6 +14,10 @@ pub enum ForecasterKind {
     Arima,
     /// Native-Rust GP (mirrors the L2 math; fast path for huge sweeps).
     GpNative,
+    /// Native GP with per-(component, resource) cached sliding-window
+    /// Cholesky factors: rank-1 updates instead of per-tick
+    /// refactorization (forecast::gp_incremental).
+    GpIncremental,
     /// GP via the AOT-compiled JAX/Pallas artifact over PJRT (§3.1.2).
     GpPjrt,
 }
@@ -26,6 +30,7 @@ impl ForecasterKind {
             "last-value" | "lastvalue" | "last" => Some(Self::LastValue),
             "arima" => Some(Self::Arima),
             "gp-native" | "gpnative" => Some(Self::GpNative),
+            "gp-incr" | "gpincr" | "gp-incremental" | "incremental" => Some(Self::GpIncremental),
             "gp" | "gp-pjrt" | "gppjrt" => Some(Self::GpPjrt),
             _ => None,
         }
@@ -38,6 +43,7 @@ impl ForecasterKind {
             Self::LastValue => "last-value",
             Self::Arima => "arima",
             Self::GpNative => "gp-native",
+            Self::GpIncremental => "gp-incr",
             Self::GpPjrt => "gp-pjrt",
         }
     }
@@ -579,6 +585,8 @@ mod tests {
     fn enum_parsing() {
         assert_eq!(Policy::parse("PESSIMISTIC"), Some(Policy::Pessimistic));
         assert_eq!(ForecasterKind::parse("gp"), Some(ForecasterKind::GpPjrt));
+        assert_eq!(ForecasterKind::parse("gp-incr"), Some(ForecasterKind::GpIncremental));
+        assert_eq!(ForecasterKind::GpIncremental.name(), "gp-incr");
         assert_eq!(KernelKind::parse("rbf"), Some(KernelKind::Rbf));
         assert_eq!(Policy::Baseline.name(), "baseline");
         assert_eq!(SchedulerKind::parse("Backfill"), Some(SchedulerKind::Backfill));

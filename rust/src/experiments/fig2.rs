@@ -77,7 +77,14 @@ pub fn evaluate(
     let stride = 4; // every 4th step keeps the harness fast without bias
     let mut t = start;
     while t < len {
-        let views: Vec<Vec<f64>> = corpus.iter().map(|s| s[..t].to_vec()).collect();
+        // walk-forward prefixes are borrowed views, keyed by series index
+        // with t as the sample counter: stateful forecasters see the same
+        // sliding contract the engine provides
+        let views: Vec<crate::forecast::SeriesRef<'_>> = corpus
+            .iter()
+            .enumerate()
+            .map(|(i, s)| crate::forecast::SeriesRef::keyed(i as u64, t as u64, &s[..t]))
+            .collect();
         let fs = model.forecast(&views);
         for (i, f) in fs.iter().enumerate() {
             errs.push((f.mean - corpus[i][t]).abs());

@@ -11,7 +11,7 @@
 //! so the reproduction exhibits the same failure mode. The full
 //! prediction variance is available as `Prediction::pred_var` for tests.
 
-use super::{naive_forecast, Forecast, Forecaster};
+use super::{naive_forecast, Forecast, Forecaster, SeriesRef};
 use crate::util::linalg::{least_squares, Mat};
 
 
@@ -318,14 +318,14 @@ impl Forecaster for Arima {
         8
     }
 
-    fn forecast(&mut self, series: &[Vec<f64>]) -> Vec<Forecast> {
+    fn forecast(&mut self, series: &[SeriesRef<'_>]) -> Vec<Forecast> {
         series
             .iter()
             .map(|s| {
-                let window = if s.len() > self.max_history {
-                    &s[s.len() - self.max_history..]
+                let window = if s.data.len() > self.max_history {
+                    &s.data[s.data.len() - self.max_history..]
                 } else {
-                    &s[..]
+                    s.data
                 };
                 if window.len() < self.min_history() {
                     return naive_forecast(window);
@@ -434,7 +434,7 @@ mod tests {
     #[test]
     fn short_series_fall_back() {
         let mut a = Arima::auto();
-        let out = a.forecast(&[vec![0.4, 0.5]]);
+        let out = a.forecast(&crate::forecast::anon_refs(&[vec![0.4, 0.5]]));
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].mean, 0.5); // naive fallback
     }
@@ -444,7 +444,7 @@ mod tests {
         let mut a = Arima::auto();
         let s1 = ar1(60, 0.6, 0.2, 0.03, 8);
         let s2 = ar1(60, 0.3, 0.4, 0.05, 9);
-        let out = a.forecast(&[s1, s2]);
+        let out = a.forecast(&crate::forecast::anon_refs(&[s1, s2]));
         assert_eq!(out.len(), 2);
         for f in out {
             assert!(f.mean.is_finite() && f.var > 0.0);
@@ -454,7 +454,7 @@ mod tests {
     #[test]
     fn constant_series_is_stable() {
         let mut a = Arima::auto();
-        let out = a.forecast(&[vec![0.4; 30]]);
+        let out = a.forecast(&crate::forecast::anon_refs(&[vec![0.4; 30]]));
         assert!((out[0].mean - 0.4).abs() < 0.02);
         assert!(out[0].var < 1e-3);
     }

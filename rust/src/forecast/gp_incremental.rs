@@ -1,0 +1,640 @@
+//! Sliding-window incremental GP forecasting: per-(component, resource)
+//! cached Cholesky factors updated by rank-1 operations (§3.1.2 made
+//! cheap enough for continuous control — the axis ADARES and Flex argue
+//! bounds control-loop frequency).
+//!
+//! # Why a slide is possible at all
+//!
+//! The Eq. 5 pattern kernel depends on two ingredients per training-row
+//! pair: the *time-coordinate* difference `((i − j)/t)²` — invariant
+//! under a window shift, because every row's coordinate shifts by the
+//! same `1/t` — and the squared distance between the rows' *history
+//! values*. With the standardizer frozen, the value distance of retained
+//! row pairs is exactly the distance of the same raw samples one slot
+//! earlier. So when the monitor appends one sample, the kernel matrix
+//! changes **only** by dropping training row 0 and appending a new last
+//! row: `util::linalg::chol_delete_first` (a rank-1 *update* of the
+//! shifted factor — see its docs; downdates would arise only when
+//! removing the newest row, which a sliding window never does) plus
+//! `chol_append_row`. O(h²) per tick per lengthscale instead of the
+//! O(h³) Gram rebuild + refactorization.
+//!
+//! # The epoch model
+//!
+//! Per-tick re-standardization would perturb every kernel entry and
+//! forbid factor reuse, so this forecaster freezes the standardizer per
+//! *epoch*: it is refit — together with a full O(h³) refactorization —
+//! when the cached state is created, when the window has slid
+//! `refresh_every` times since the last refit (default `2h`: one full
+//! window turnover, which also bounds rank-1 rounding drift), when the
+//! series resets (monitor epoch change in `SeriesRef::seq`), when the
+//! slide gap is too large to be worth replaying, or on any numerical
+//! failure. Between refits, **zero full Cholesky refactorizations and
+//! zero series copies** happen on the slide path.
+//!
+//! This is a deliberate, documented model variant: `GpNative` refits the
+//! standardizer every call, `GpIncremental` per epoch. The stateless
+//! `GpNative` math is untouched and remains the repo's bit-exact oracle;
+//! this engine is pinned against *its own* per-tick-refactorize twin
+//! ([`SlideMode::Refactorize`] — same epochs, same standardizer, factor
+//! rebuilt from scratch every tick) to ≤ 1e-9 in
+//! `tests/gp_incremental_prop.rs`, and `benches/engine.rs` reports the
+//! warm-tick speedup of slide over refactorize.
+//!
+//! Batches are processed sequentially: the per-key cache is the point,
+//! and a slide tick is O(h²) per series — cheap enough that sharding
+//! would buy little (parallel key-laning is a ROADMAP open item).
+
+use std::collections::HashMap;
+
+use super::gp_native::{kern, GpNative, GpWorkspace, JITTER, LS_GRID, NOISE};
+use super::{naive_forecast, Forecast, Forecaster, SeriesRef, Standardizer};
+use crate::config::KernelKind;
+use crate::util::linalg::{
+    chol_append_row, chol_delete_first, cholesky_in_place, solve_lower_in_place,
+    solve_lower_t_in_place, Mat,
+};
+
+/// How the cached factor is maintained when the window slides.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlideMode {
+    /// Rank-1 delete-first + append-last on the cached factor (O(h²)).
+    Incremental,
+    /// Rebuild the kernel matrix and refactorize from scratch every tick
+    /// (O(h³)) — same epochs and standardizer, so it computes the same
+    /// model. The correctness baseline and bench comparator.
+    Refactorize,
+}
+
+/// Telemetry for tests, benches and capacity planning.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IncrStats {
+    /// Single-sample window slides performed on the rank-1 path.
+    pub slides: u64,
+    /// Full refits: standardizer refresh + O(h³) factorization (epoch
+    /// starts, resets, large gaps, numerical fallbacks).
+    pub refits: u64,
+    /// Per-tick full refactorizations (only in [`SlideMode::Refactorize`]).
+    pub refactorizations: u64,
+    /// Stateless fallbacks (anonymous keys / windows not yet full).
+    pub fallbacks: u64,
+    /// Cached states dropped by the size-bound eviction.
+    pub evictions: u64,
+}
+
+/// One grid lengthscale's cached factor.
+#[derive(Debug, Clone, Default)]
+struct LsFactor {
+    /// n×n lower Cholesky factor of the kernel matrix.
+    l: Mat,
+    /// False when this lengthscale's factorization failed this epoch
+    /// (skipped until the next refit, mirroring `GpNative`'s per-entry
+    /// grid skips).
+    valid: bool,
+}
+
+/// Cached per-(component, resource) sliding state.
+#[derive(Debug, Clone)]
+struct SeriesState {
+    /// `SeriesRef::seq` at the last forecast (epoch-tagged).
+    seq: u64,
+    /// Batch clock at the last use (eviction generation).
+    last_used: u64,
+    /// Frozen for the epoch.
+    std: Standardizer,
+    inv_std2: f64,
+    /// Raw sample window, length `2h`, oldest first.
+    win: Vec<f64>,
+    /// Standardized training targets, length `h`.
+    y: Vec<f64>,
+    grid: Vec<LsFactor>,
+    slides_since_refit: u32,
+}
+
+/// Reused numeric scratch (allocation-free steady state).
+#[derive(Debug, Default)]
+struct Scratch {
+    /// Raw squared-distance Gram, lower triangle (refits only).
+    d2: Vec<f64>,
+    /// Old first factor column (`chol_delete_first`).
+    col: Vec<f64>,
+    /// New kernel row (`chol_append_row`).
+    row: Vec<f64>,
+    alpha: Vec<f64>,
+    v: Vec<f64>,
+    kxq: Vec<f64>,
+}
+
+/// Copy-out of the scalar configuration, so the per-series math can run
+/// on split borrows of the cache without re-borrowing `self`.
+#[derive(Clone, Copy)]
+struct Cfg {
+    kernel: KernelKind,
+    noise: f64,
+    h: usize,
+    dim_scale: f64,
+    mode: SlideMode,
+    refresh_every: u32,
+}
+
+/// Sum of squared differences between two h-sample stretches of the raw
+/// window: rows `i` and `j` cover `w[i..i+h]` and `w[j..j+h]`.
+#[inline]
+fn rawd2(w: &[f64], i: usize, j: usize, h: usize) -> f64 {
+    let (a, b) = (&w[i..i + h], &w[j..j + h]);
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Incremental GP forecaster. Config fields mirror [`GpNative`].
+#[derive(Debug)]
+pub struct GpIncremental {
+    pub kernel: KernelKind,
+    pub history: usize,
+    /// Relative grid lengthscales (absolute = `· sqrt(h+1)`, as in
+    /// `GpNative`).
+    pub ls_grid: Vec<f64>,
+    pub noise: f64,
+    mode: SlideMode,
+    /// Slides between standardizer refreshes / full refactorizations.
+    pub refresh_every: u32,
+    /// Cache size bound: when the cache outgrows this after a batch,
+    /// every state not touched by that batch is dropped (a dropped
+    /// series simply refits on its next appearance). Bounds memory on
+    /// workloads that churn through many components.
+    pub max_cached: usize,
+    /// Monotone batch counter (eviction generations).
+    clock: u64,
+    /// Squared time-coordinate distances `((d)/2h)²` for d in `0..=h`.
+    tgrid: Vec<f64>,
+    states: HashMap<u64, SeriesState>,
+    stats: IncrStats,
+    /// Stateless path for anonymous keys and not-yet-full windows —
+    /// exactly `GpNative`'s math, so those forecasts are bit-identical
+    /// to the batched engine's.
+    fallback: GpNative,
+    ws: GpWorkspace,
+    scratch: Scratch,
+}
+
+impl GpIncremental {
+    /// Standard configuration; refresh cadence defaults to one full
+    /// window turnover (`2h` slides).
+    pub fn new(kernel: KernelKind, history: usize) -> Self {
+        let h = history.max(2);
+        let t = (2 * h) as f64;
+        GpIncremental {
+            kernel,
+            history: h,
+            ls_grid: LS_GRID.to_vec(),
+            noise: NOISE,
+            mode: SlideMode::Incremental,
+            refresh_every: (2 * h) as u32,
+            max_cached: 65_536,
+            clock: 0,
+            tgrid: (0..=h).map(|d| (d as f64 / t) * (d as f64 / t)).collect(),
+            states: HashMap::new(),
+            stats: IncrStats::default(),
+            fallback: GpNative::new(kernel, h),
+            ws: GpWorkspace::new(),
+            scratch: Scratch::default(),
+        }
+    }
+
+    /// Select the factor-maintenance mode (tests and benches; production
+    /// is [`SlideMode::Incremental`]).
+    pub fn with_mode(mut self, mode: SlideMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Telemetry counters.
+    pub fn stats(&self) -> IncrStats {
+        self.stats
+    }
+
+    /// Cached series count (capacity planning; bounded by live
+    /// component count × 2 resources).
+    pub fn cached_series(&self) -> usize {
+        self.states.len()
+    }
+
+    /// Drop cached state (e.g. between unrelated workloads).
+    pub fn clear_cache(&mut self) {
+        self.states.clear();
+    }
+
+    /// Forecast one view through the cache.
+    fn forecast_view(&mut self, r: &SeriesRef<'_>) -> Forecast {
+        let h = self.history;
+        let window = 2 * h;
+        if r.data.len() < 2 {
+            return naive_forecast(r.data);
+        }
+        if r.key == SeriesRef::ANON || r.data.len() < window {
+            // no identity to cache under, or the window is still filling:
+            // the stateless workspace path (== GpNative bit for bit)
+            self.stats.fallbacks += 1;
+            return self.fallback.forecast_one_with(&mut self.ws, r.data);
+        }
+        let cfg = Cfg {
+            kernel: self.kernel,
+            noise: self.noise,
+            h,
+            dim_scale: ((h + 1) as f64).sqrt(),
+            mode: self.mode,
+            refresh_every: self.refresh_every,
+        };
+        let tail = &r.data[r.data.len() - window..];
+        let clock = self.clock;
+        // split borrows: the cache, scratch and stats move independently
+        let GpIncremental { states, stats, scratch, tgrid, ls_grid, .. } = self;
+
+        let st = states.entry(r.key).or_insert_with(|| SeriesState {
+            seq: u64::MAX, // forces the refit branch below
+            last_used: clock,
+            std: Standardizer { mean: 0.0, std: 1.0 },
+            inv_std2: 1.0,
+            win: Vec::with_capacity(window),
+            y: Vec::with_capacity(h),
+            grid: vec![LsFactor::default(); ls_grid.len()],
+            slides_since_refit: 0,
+        });
+        st.last_used = clock;
+
+        // decide: how many samples did this series advance since we last
+        // saw it, and is replaying them cheaper than refitting?
+        let same_epoch = (r.seq >> 32) == (st.seq >> 32);
+        let delta = r.seq.wrapping_sub(st.seq);
+        let slide_ok = st.seq != u64::MAX
+            && same_epoch
+            && r.seq >= st.seq
+            && (delta as usize) < h
+            && st.slides_since_refit.saturating_add(delta as u32) <= cfg.refresh_every;
+
+        let mut ok = true;
+        if slide_ok {
+            let s = delta as usize;
+            for &v in &tail[window - s..] {
+                slide_window_one(st, v);
+                if cfg.mode == SlideMode::Incremental {
+                    stats.slides += 1;
+                    if !slide_factors_one(st, cfg, ls_grid, tgrid, scratch) {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if ok {
+                debug_assert_eq!(st.win.as_slice(), tail, "sliding-window desync");
+            }
+            if ok && cfg.mode == SlideMode::Refactorize && s > 0 {
+                stats.refactorizations += 1;
+                build_factors(st, cfg, ls_grid, tgrid, scratch);
+            }
+            st.slides_since_refit += delta as u32;
+        }
+        if !slide_ok || !ok {
+            if !ok {
+                crate::warn_log!(
+                    "gp-incr: rank-1 slide lost positive definiteness on series {}; refitting",
+                    r.key
+                );
+            }
+            stats.refits += 1;
+            refit_state(st, tail, cfg, ls_grid, tgrid, scratch);
+        }
+        st.seq = r.seq;
+
+        match posterior_best(st, cfg, ls_grid, tgrid, scratch) {
+            Some((mean_z, var_z)) => Forecast {
+                mean: st.std.inv_mean(mean_z),
+                var: st.std.inv_var(var_z).max(1e-8),
+            },
+            None => naive_forecast(r.data),
+        }
+    }
+}
+
+/// Advance the raw window and standardized targets by one sample under
+/// the frozen standardizer.
+fn slide_window_one(st: &mut SeriesState, v: f64) {
+    st.win.rotate_left(1);
+    *st.win.last_mut().expect("window non-empty") = v;
+    st.y.rotate_left(1);
+    // new last target: row h-1's target is win[2h-1] = the new sample
+    *st.y.last_mut().expect("targets non-empty") = st.std.fwd(v);
+}
+
+/// One rank-1 slide of every valid grid factor against the (already
+/// advanced) window. Returns false when any append loses positive
+/// definiteness — the caller refits everything.
+fn slide_factors_one(
+    st: &mut SeriesState,
+    cfg: Cfg,
+    ls_grid: &[f64],
+    tgrid: &[f64],
+    scratch: &mut Scratch,
+) -> bool {
+    let n = cfg.h;
+    for (g, &ls_rel) in ls_grid.iter().enumerate() {
+        let lst = &mut st.grid[g];
+        if !lst.valid {
+            continue;
+        }
+        let ls = ls_rel * cfg.dim_scale;
+        chol_delete_first(&mut lst.l, n, &mut scratch.col);
+        scratch.row.clear();
+        for j in 0..n - 1 {
+            let d = tgrid[n - 1 - j] + rawd2(&st.win, j, n - 1, cfg.h) * st.inv_std2;
+            scratch.row.push(kern(cfg.kernel, d, ls));
+        }
+        scratch.row.push(kern(cfg.kernel, 0.0, ls) + cfg.noise + JITTER);
+        if chol_append_row(&mut lst.l, &mut scratch.row).is_err() {
+            return false;
+        }
+    }
+    true
+}
+
+/// Full O(h³) factor build for every grid lengthscale from the current
+/// window (shared by refits and the Refactorize baseline).
+fn build_factors(
+    st: &mut SeriesState,
+    cfg: Cfg,
+    ls_grid: &[f64],
+    tgrid: &[f64],
+    scratch: &mut Scratch,
+) {
+    let n = cfg.h;
+    // raw squared-distance Gram once; every lengthscale derives from it
+    scratch.d2.clear();
+    scratch.d2.resize(n * n, 0.0);
+    for i in 0..n {
+        for j in 0..i {
+            scratch.d2[i * n + j] = rawd2(&st.win, i, j, cfg.h);
+        }
+    }
+    let mut failed = 0usize;
+    for (g, &ls_rel) in ls_grid.iter().enumerate() {
+        let ls = ls_rel * cfg.dim_scale;
+        let lst = &mut st.grid[g];
+        lst.l.reset(n, n);
+        for i in 0..n {
+            for j in 0..i {
+                let d = tgrid[i - j] + scratch.d2[i * n + j] * st.inv_std2;
+                lst.l[(i, j)] = kern(cfg.kernel, d, ls);
+            }
+            lst.l[(i, i)] = kern(cfg.kernel, 0.0, ls) + cfg.noise + JITTER;
+        }
+        lst.valid = cholesky_in_place(&mut lst.l).is_ok();
+        if !lst.valid {
+            failed += 1;
+        }
+    }
+    if failed > 0 {
+        crate::warn_log!(
+            "gp-incr: {failed}/{} grid lengthscales failed Cholesky at refit",
+            ls_grid.len()
+        );
+    }
+}
+
+/// Start a fresh epoch: refit the standardizer over the window, rebuild
+/// targets, refactorize every lengthscale.
+fn refit_state(
+    st: &mut SeriesState,
+    tail: &[f64],
+    cfg: Cfg,
+    ls_grid: &[f64],
+    tgrid: &[f64],
+    scratch: &mut Scratch,
+) {
+    st.std = Standardizer::fit(tail);
+    st.inv_std2 = 1.0 / (st.std.std * st.std.std);
+    st.win.clear();
+    st.win.extend_from_slice(tail);
+    st.y.clear();
+    for i in 0..cfg.h {
+        st.y.push(st.std.fwd(st.win[i + cfg.h]));
+    }
+    st.slides_since_refit = 0;
+    build_factors(st, cfg, ls_grid, tgrid, scratch);
+}
+
+/// Evidence-maximized posterior over the valid grid entries:
+/// standardized (mean, var) of the best-LML lengthscale.
+fn posterior_best(
+    st: &SeriesState,
+    cfg: Cfg,
+    ls_grid: &[f64],
+    tgrid: &[f64],
+    scratch: &mut Scratch,
+) -> Option<(f64, f64)> {
+    let n = cfg.h;
+    let mut best: Option<(f64, f64, f64)> = None; // (lml, mean, var)
+    for (g, &ls_rel) in ls_grid.iter().enumerate() {
+        let lst = &st.grid[g];
+        if !lst.valid {
+            continue;
+        }
+        let ls = ls_rel * cfg.dim_scale;
+        // query row: time coord (t-h)/t, history win[h..2h]
+        scratch.kxq.clear();
+        for j in 0..n {
+            let d = tgrid[n - j] + rawd2(&st.win, j, cfg.h, cfg.h) * st.inv_std2;
+            scratch.kxq.push(kern(cfg.kernel, d, ls));
+        }
+        scratch.alpha.clear();
+        scratch.alpha.extend_from_slice(&st.y);
+        solve_lower_in_place(&lst.l, &mut scratch.alpha);
+        solve_lower_t_in_place(&lst.l, &mut scratch.alpha);
+        let mean: f64 = scratch.kxq.iter().zip(&scratch.alpha).map(|(a, b)| a * b).sum();
+        scratch.v.clear();
+        scratch.v.extend_from_slice(&scratch.kxq);
+        solve_lower_in_place(&lst.l, &mut scratch.v);
+        let var = (1.0 - scratch.v.iter().map(|x| x * x).sum::<f64>()).max(0.0);
+        let mut logdet_half = 0.0;
+        for i in 0..n {
+            logdet_half += lst.l[(i, i)].ln();
+        }
+        let lml = -0.5 * st.y.iter().zip(&scratch.alpha).map(|(a, b)| a * b).sum::<f64>()
+            - logdet_half
+            - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln();
+        if best.map(|(b, _, _)| lml > b).unwrap_or(true) {
+            best = Some((lml, mean, var));
+        }
+    }
+    best.map(|(_, m, v)| (m, v))
+}
+
+impl Forecaster for GpIncremental {
+    fn name(&self) -> String {
+        format!("gp-incr-{}-h{}", self.kernel.name(), self.history)
+    }
+
+    fn min_history(&self) -> usize {
+        (self.history / 2).max(3)
+    }
+
+    fn forecast(&mut self, series: &[SeriesRef<'_>]) -> Vec<Forecast> {
+        self.clock += 1;
+        let out = series.iter().map(|r| self.forecast_view(r)).collect();
+        if self.states.len() > self.max_cached {
+            // keep only the states this batch touched: components that
+            // left the shaped set (finished, gave up, long-preempted)
+            // stop costing memory; a returner simply refits
+            let clock = self.clock;
+            let before = self.states.len();
+            self.states.retain(|_, st| st.last_used == clock);
+            self.stats.evictions += (before - self.states.len()) as u64;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn periodic(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg::seeded(seed);
+        (0..n)
+            .map(|i| 0.45 + 0.2 * (i as f64 / 7.0).sin() + 0.01 * rng.normal())
+            .collect()
+    }
+
+    #[test]
+    fn anonymous_views_match_gp_native_exactly() {
+        let mut gp = GpIncremental::new(KernelKind::Exp, 10);
+        let native = GpNative::new(KernelKind::Exp, 10);
+        for len in [5usize, 15, 19, 40] {
+            let s = periodic(len, len as u64);
+            let inc = gp.forecast_view(&SeriesRef::anon(&s));
+            let nat = native.forecast_one(&s);
+            assert_eq!(inc.mean, nat.mean, "len={len}");
+            assert_eq!(inc.var, nat.var, "len={len}");
+        }
+        assert_eq!(gp.cached_series(), 0, "anonymous views must not cache");
+        assert!(gp.stats().fallbacks > 0);
+    }
+
+    #[test]
+    fn short_keyed_views_fall_back_until_window_fills() {
+        let h = 10;
+        let mut gp = GpIncremental::new(KernelKind::Rbf, h);
+        let s = periodic(2 * h - 1, 3); // one short of a full window
+        let f = gp.forecast_view(&SeriesRef::keyed(0, s.len() as u64, &s));
+        assert!(f.mean.is_finite());
+        assert_eq!(gp.cached_series(), 0);
+        assert_eq!(gp.stats().fallbacks, 1);
+    }
+
+    #[test]
+    fn keyed_full_window_builds_cache_and_slides() {
+        let h = 10;
+        let mut gp = GpIncremental::new(KernelKind::Exp, h);
+        let s = periodic(60, 9);
+        // first sight: refit
+        let f0 = gp.forecast_view(&SeriesRef::keyed(1, 2 * h as u64, &s[..2 * h]));
+        assert!(f0.mean.is_finite() && f0.var > 0.0);
+        assert_eq!(gp.cached_series(), 1);
+        assert_eq!(gp.stats().refits, 1);
+        assert_eq!(gp.stats().slides, 0);
+        // next ticks: pure slides, no refits
+        for t in (2 * h + 1)..(2 * h + 8) {
+            let f = gp.forecast_view(&SeriesRef::keyed(1, t as u64, &s[..t]));
+            assert!(f.mean.is_finite() && f.var > 0.0);
+        }
+        assert_eq!(gp.stats().refits, 1, "steady state must not refit");
+        assert_eq!(gp.stats().slides, 7);
+        assert_eq!(gp.stats().refactorizations, 0);
+    }
+
+    #[test]
+    fn refresh_cadence_bounds_epoch_length() {
+        let h = 5;
+        let mut gp = GpIncremental::new(KernelKind::Exp, h);
+        gp.refresh_every = 4;
+        let s = periodic(120, 21);
+        for t in (2 * h)..60 {
+            gp.forecast_view(&SeriesRef::keyed(2, t as u64, &s[..t]));
+        }
+        let st = gp.stats();
+        // 50 ticks after the first: a refit at least every 5 ticks
+        assert!(st.refits >= 10, "refits {} too rare for cadence 4", st.refits);
+        assert!(st.slides > 0);
+    }
+
+    #[test]
+    fn epoch_change_forces_refit_and_matches_fresh_instance() {
+        let h = 8;
+        let s = periodic(2 * h, 5);
+        let mut warm = GpIncremental::new(KernelKind::Exp, h);
+        // warm cache under epoch 0
+        warm.forecast_view(&SeriesRef::keyed(3, 2 * h as u64, &s));
+        // the component restarted: same key, new epoch in the seq tag
+        let s2 = periodic(2 * h, 6);
+        let seq2 = (1u64 << 32) | (2 * h as u64);
+        let warm_f = warm.forecast_view(&SeriesRef::keyed(3, seq2, &s2));
+        let mut fresh = GpIncremental::new(KernelKind::Exp, h);
+        let fresh_f = fresh.forecast_view(&SeriesRef::keyed(3, seq2, &s2));
+        assert_eq!(warm_f.mean, fresh_f.mean, "refit must ignore stale state");
+        assert_eq!(warm_f.var, fresh_f.var);
+        assert_eq!(warm.stats().refits, 2);
+    }
+
+    #[test]
+    fn large_gap_refits_instead_of_replaying() {
+        let h = 6;
+        let mut gp = GpIncremental::new(KernelKind::Exp, h);
+        let s = periodic(100, 13);
+        gp.forecast_view(&SeriesRef::keyed(4, 2 * h as u64, &s[..2 * h]));
+        // jump far ahead: delta >= h → refit, not h slides
+        gp.forecast_view(&SeriesRef::keyed(4, 90, &s[..90]));
+        assert_eq!(gp.stats().refits, 2);
+        assert_eq!(gp.stats().slides, 0);
+    }
+
+    #[test]
+    fn cache_eviction_bounds_memory_across_batches() {
+        let h = 5;
+        let window = 2 * h;
+        let mut gp = GpIncremental::new(KernelKind::Exp, h);
+        gp.max_cached = 8;
+        let corpus: Vec<Vec<f64>> = (0..12).map(|i| periodic(window, 100 + i as u64)).collect();
+        // batch A: keys 0..6 — under the bound, nothing evicted
+        let views_a: Vec<SeriesRef<'_>> = corpus[..6]
+            .iter()
+            .enumerate()
+            .map(|(i, s)| SeriesRef::keyed(i as u64, window as u64, s))
+            .collect();
+        gp.forecast(&views_a);
+        assert_eq!(gp.cached_series(), 6);
+        assert_eq!(gp.stats().evictions, 0);
+        // batch B: keys 6..12 — cache would hold 12 > 8, so batch A's
+        // untouched states are dropped
+        let views_b: Vec<SeriesRef<'_>> = corpus[6..]
+            .iter()
+            .enumerate()
+            .map(|(i, s)| SeriesRef::keyed((6 + i) as u64, window as u64, s))
+            .collect();
+        gp.forecast(&views_b);
+        assert_eq!(gp.cached_series(), 6, "only batch B survives");
+        assert_eq!(gp.stats().evictions, 6);
+    }
+
+    #[test]
+    fn same_seq_reuses_factors_verbatim() {
+        let h = 8;
+        let mut gp = GpIncremental::new(KernelKind::Rbf, h);
+        let s = periodic(3 * h, 17);
+        let r = SeriesRef::keyed(5, s.len() as u64, &s);
+        let a = gp.forecast_view(&r);
+        let b = gp.forecast_view(&r);
+        assert_eq!(a.mean, b.mean);
+        assert_eq!(a.var, b.var);
+        assert_eq!(gp.stats().refits, 1);
+        assert_eq!(gp.stats().slides, 0);
+    }
+}

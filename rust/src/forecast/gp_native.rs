@@ -32,7 +32,10 @@
 //! two are bit-identical because they perform the same float ops in the
 //! same order).
 
-use super::{build_patterns, build_patterns_into, naive_forecast, Forecast, Forecaster, PatternBufs};
+use super::{
+    build_patterns, build_patterns_into, naive_forecast, Forecast, Forecaster, PatternBufs,
+    SeriesRef,
+};
 use crate::config::KernelKind;
 use crate::util::linalg::{
     cholesky_in_place, solve_chol, solve_lower, solve_lower_in_place, solve_lower_t_in_place,
@@ -68,9 +71,11 @@ fn sqdist(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
 }
 
-/// Kernel value from a precomputed squared distance.
+/// Kernel value from a precomputed squared distance. Shared with the
+/// sliding-window engine (`gp_incremental`), which derives its distances
+/// from raw-window sums instead of standardized pattern rows.
 #[inline]
-fn kern(kind: KernelKind, d2: f64, ls: f64) -> f64 {
+pub(crate) fn kern(kind: KernelKind, d2: f64, ls: f64) -> f64 {
     match kind {
         KernelKind::Exp => (-(d2 + 1e-12).sqrt() / ls).exp(),
         KernelKind::Rbf => (-0.5 * d2 / (ls * ls)).exp(),
@@ -360,13 +365,13 @@ impl GpNative {
         }
     }
 
-    /// Forecast a batch, sharded across worker threads (one workspace per
-    /// worker). Output order matches input order and every value is
-    /// identical regardless of the worker count.
-    pub fn forecast_batch(&self, series: &[Vec<f64>]) -> Vec<Forecast> {
+    /// Forecast a batch of borrowed views, sharded across worker threads
+    /// (one workspace per worker). Output order matches input order and
+    /// every value is identical regardless of the worker count.
+    pub fn forecast_batch(&self, series: &[SeriesRef<'_>]) -> Vec<Forecast> {
         let workers = self.effective_workers(series.len());
         pool::shard_map(series, workers, GpWorkspace::new, |ws, _i, s| {
-            self.forecast_one_with(ws, s)
+            self.forecast_one_with(ws, s.data)
         })
     }
 }
@@ -382,7 +387,7 @@ impl Forecaster for GpNative {
         (self.history / 2).max(3)
     }
 
-    fn forecast(&mut self, series: &[Vec<f64>]) -> Vec<Forecast> {
+    fn forecast(&mut self, series: &[SeriesRef<'_>]) -> Vec<Forecast> {
         self.forecast_batch(series)
     }
 }
@@ -495,7 +500,8 @@ mod tests {
     #[test]
     fn forecaster_trait_batch() {
         let mut gp = GpNative::new(KernelKind::Rbf, 10);
-        let out = gp.forecast(&[periodic_series(40, 4), vec![0.3], periodic_series(15, 5)]);
+        let batch = [periodic_series(40, 4), vec![0.3], periodic_series(15, 5)];
+        let out = gp.forecast(&crate::forecast::anon_refs(&batch));
         assert_eq!(out.len(), 3);
         for f in &out {
             assert!(f.mean.is_finite() && f.var >= 0.0);
@@ -520,7 +526,7 @@ mod tests {
     fn batch_matches_forecast_one() {
         let gp = GpNative::new(KernelKind::Exp, 10);
         let batch: Vec<Vec<f64>> = (0..20).map(|i| periodic_series(40, 100 + i)).collect();
-        let out = gp.forecast_batch(&batch);
+        let out = gp.forecast_batch(&crate::forecast::anon_refs(&batch));
         for (i, s) in batch.iter().enumerate() {
             let one = gp.forecast_one(s);
             assert_eq!(out[i].mean, one.mean, "series {i}");

@@ -11,7 +11,7 @@
 
 use std::sync::Arc;
 
-use super::{build_patterns, naive_forecast, Forecast, Forecaster, Standardizer};
+use super::{build_patterns, naive_forecast, Forecast, Forecaster, SeriesRef, Standardizer};
 use crate::config::KernelKind;
 use crate::forecast::gp_native::{LS_GRID, NOISE};
 use crate::runtime::{Executable, GpInputs, Runtime};
@@ -94,9 +94,9 @@ impl GpPjrt {
         })
     }
 
-    /// Forecast a batch of series using B-sized slabs of the batched
-    /// artifact, one execution per grid lengthscale per slab.
-    pub fn forecast_batch(&mut self, series: &[Vec<f64>]) -> anyhow::Result<Vec<Forecast>> {
+    /// Forecast a batch of series views using B-sized slabs of the
+    /// batched artifact, one execution per grid lengthscale per slab.
+    pub fn forecast_batch(&mut self, series: &[SeriesRef<'_>]) -> anyhow::Result<Vec<Forecast>> {
         let b = self.batch_size();
         let h = self.history;
         let p = h + 1;
@@ -111,7 +111,7 @@ impl GpPjrt {
             let mut stds: Vec<Standardizer> = Vec::with_capacity(b);
             let mut too_short = vec![false; b];
             for i in 0..b {
-                let s = slab.get(i).unwrap_or_else(|| slab.last().unwrap());
+                let s = slab.get(i).unwrap_or_else(|| slab.last().unwrap()).data;
                 if s.len() < 2 {
                     too_short[i] = true;
                     stds.push(Standardizer { mean: 0.0, std: 1.0 });
@@ -157,7 +157,7 @@ impl GpPjrt {
             }
             for (i, s) in slab.iter().enumerate() {
                 if too_short[i] {
-                    out.push(naive_forecast(s));
+                    out.push(naive_forecast(s.data));
                 } else {
                     let (m, v, _) = best[i].expect("grid non-empty");
                     out.push(Forecast {
@@ -180,12 +180,12 @@ impl Forecaster for GpPjrt {
         (self.history / 2).max(3)
     }
 
-    fn forecast(&mut self, series: &[Vec<f64>]) -> Vec<Forecast> {
+    fn forecast(&mut self, series: &[SeriesRef<'_>]) -> Vec<Forecast> {
         match self.forecast_batch(series) {
             Ok(f) => f,
             Err(e) => {
                 crate::error_log!("pjrt forecast failed ({e:#}); using naive fallback");
-                series.iter().map(|s| naive_forecast(s)).collect()
+                series.iter().map(|s| naive_forecast(s.data)).collect()
             }
         }
     }

@@ -2,7 +2,7 @@
 //! time-series comparison needs. Mean = last observation; variance = the
 //! empirical variance of one-step changes.
 
-use super::{naive_forecast, Forecast, Forecaster};
+use super::{naive_forecast, Forecast, Forecaster, SeriesRef};
 
 /// Last-value forecaster (stateless).
 #[derive(Debug, Default, Clone)]
@@ -24,8 +24,8 @@ impl Forecaster for LastValue {
         1
     }
 
-    fn forecast(&mut self, series: &[Vec<f64>]) -> Vec<Forecast> {
-        series.iter().map(|s| naive_forecast(s)).collect()
+    fn forecast(&mut self, series: &[SeriesRef<'_>]) -> Vec<Forecast> {
+        series.iter().map(|s| naive_forecast(s.data)).collect()
     }
 }
 
@@ -33,10 +33,12 @@ impl Forecaster for LastValue {
 mod tests {
     use super::*;
 
+    use crate::forecast::anon_refs;
+
     #[test]
     fn predicts_last() {
         let mut lv = LastValue::new();
-        let out = lv.forecast(&[vec![0.1, 0.4, 0.7], vec![0.9]]);
+        let out = lv.forecast(&anon_refs(&[vec![0.1, 0.4, 0.7], vec![0.9]]));
         assert_eq!(out[0].mean, 0.7);
         assert_eq!(out[1].mean, 0.9);
         assert!(out[0].var > 0.0);
@@ -47,7 +49,7 @@ mod tests {
         let mut lv = LastValue::new();
         let smooth: Vec<f64> = (0..50).map(|i| 0.5 + 1e-4 * i as f64).collect();
         let noisy: Vec<f64> = (0..50).map(|i| 0.5 + 0.3 * ((i * 7919) % 13) as f64 / 13.0).collect();
-        let out = lv.forecast(&[smooth, noisy]);
+        let out = lv.forecast(&anon_refs(&[smooth, noisy]));
         assert!(out[1].var > out[0].var * 10.0);
     }
 }

@@ -3,10 +3,16 @@
 //! kernels (non-parametric Bayesian, §3.1.2) — in both a native-Rust and
 //! an AOT JAX/Pallas-via-PJRT implementation — plus naive baselines.
 //!
-//! All forecasters consume raw utilization-fraction series (oldest first)
-//! and produce a one-step-ahead predictive **mean and variance**; the
-//! variance is the uncertainty signal the shaper's β buffer consumes
-//! (Eq. 9). Standardization happens inside each forecaster.
+//! All forecasters consume **borrowed series views** ([`SeriesRef`]:
+//! raw utilization-fraction samples, oldest first, zero-copy into the
+//! monitor's arena) and produce a one-step-ahead predictive **mean and
+//! variance**; the variance is the uncertainty signal the shaper's β
+//! buffer consumes (Eq. 9). Standardization happens inside each
+//! forecaster. A view optionally carries a stable identity (`key`) and
+//! an epoch-tagged sample counter (`seq`) so stateful forecasters
+//! ([`gp_incremental`]) can cache per-series state across ticks and
+//! detect sliding windows; identity-free batches use
+//! [`SeriesRef::anon`] / [`anon_refs`].
 //!
 //! # The batched workspace engine
 //!
@@ -32,13 +38,80 @@
 //! workspace path must match it to <= 1e-10 (`tests/gp_workspace_prop.rs`)
 //! — and as the baseline `cargo bench --bench hotpaths` reports speedups
 //! against.
+//!
+//! On top of the batched engine, [`gp_incremental`] adds the *sliding-
+//! window* tier: per-(component, resource) cached Cholesky factors that
+//! are slid by rank-1 update when a tick advances the training window by
+//! a few samples — O(h²) per tick instead of the O(h³) refactorization —
+//! with a full refactorization fallback on window resets or numerical
+//! failure (`tests/gp_incremental_prop.rs` pins it against per-tick
+//! refactorization).
 
 pub mod arima;
+pub mod gp_incremental;
 pub mod gp_native;
 pub mod gp_pjrt;
 pub mod last_value;
 
 use crate::config::{ForecasterKind, KernelKind};
+
+/// A borrowed view of one utilization series (oldest first) — typically
+/// a zero-copy window straight into the monitor's `SeriesBatch` arena.
+///
+/// `key` is a stable per-series identity (`SeriesRef::cpu_key`/`mem_key`
+/// of the component id, or [`SeriesRef::ANON`] for identity-free
+/// batches); `seq` is the monitor's epoch-tagged sample counter. A
+/// stateful forecaster that saw `(key, seq0)` last tick and `(key, seq)`
+/// now with the same epoch bits knows the series is the same one,
+/// advanced by exactly `seq - seq0` samples — the precondition for the
+/// O(h²) sliding-window update path in [`gp_incremental`].
+#[derive(Debug, Clone, Copy)]
+pub struct SeriesRef<'a> {
+    pub key: u64,
+    pub seq: u64,
+    pub data: &'a [f64],
+}
+
+impl<'a> SeriesRef<'a> {
+    /// Key for batches with no stable identity (tests, offline sweeps):
+    /// stateful forecasters fall back to their stateless path.
+    pub const ANON: u64 = u64::MAX;
+
+    /// Identity-free view.
+    pub fn anon(data: &'a [f64]) -> Self {
+        SeriesRef { key: Self::ANON, seq: 0, data }
+    }
+
+    /// View with a stable identity and sample counter.
+    pub fn keyed(key: u64, seq: u64, data: &'a [f64]) -> Self {
+        SeriesRef { key, seq, data }
+    }
+
+    /// Series key for a component's CPU history.
+    pub fn cpu_key(c: usize) -> u64 {
+        (c as u64) << 1
+    }
+
+    /// Series key for a component's memory history.
+    pub fn mem_key(c: usize) -> u64 {
+        ((c as u64) << 1) | 1
+    }
+}
+
+impl std::ops::Deref for SeriesRef<'_> {
+    type Target = [f64];
+    fn deref(&self) -> &[f64] {
+        self.data
+    }
+}
+
+/// Borrow a batch of owned series as identity-free views. The shim for
+/// call sites that hold `Vec<Vec<f64>>` corpora (experiments, tests,
+/// benches); the engine's hot path builds keyed views directly over the
+/// monitor arena instead.
+pub fn anon_refs(series: &[Vec<f64>]) -> Vec<SeriesRef<'_>> {
+    series.iter().map(|s| SeriesRef::anon(s)).collect()
+}
 
 /// One-step-ahead predictive distribution (utilization-fraction units).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -62,9 +135,9 @@ pub trait Forecaster: Send {
     /// Minimum history length before forecasts are meaningful.
     fn min_history(&self) -> usize;
 
-    /// One-step-ahead forecast for each series in the batch. Series
+    /// One-step-ahead forecast for each series view in the batch. Series
     /// shorter than `min_history` get a degenerate last-value forecast.
-    fn forecast(&mut self, series: &[Vec<f64>]) -> Vec<Forecast>;
+    fn forecast(&mut self, series: &[SeriesRef<'_>]) -> Vec<Forecast>;
 }
 
 /// Construct a forecaster by config. GP-PJRT needs a `runtime::Runtime`;
@@ -79,6 +152,9 @@ pub fn build(
         ForecasterKind::LastValue => Box::new(last_value::LastValue::new()),
         ForecasterKind::Arima => Box::new(arima::Arima::auto()),
         ForecasterKind::GpNative => Box::new(gp_native::GpNative::new(kernel, history)),
+        ForecasterKind::GpIncremental => {
+            Box::new(gp_incremental::GpIncremental::new(kernel, history))
+        }
         ForecasterKind::GpPjrt => {
             panic!("GP-PJRT requires a Runtime; use gp_pjrt::GpPjrt::new")
         }
@@ -203,6 +279,23 @@ pub fn build_patterns(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn series_ref_views_and_keys() {
+        let owned = vec![vec![0.1, 0.2], vec![0.3]];
+        let refs = anon_refs(&owned);
+        assert_eq!(refs.len(), 2);
+        assert_eq!(refs[0].data, &[0.1, 0.2][..]);
+        assert_eq!(refs[0].key, SeriesRef::ANON);
+        // deref lets views drop into slice APIs
+        assert_eq!(refs[1].len(), 1);
+        // cpu/mem keys never collide across components or resources
+        assert_ne!(SeriesRef::cpu_key(3), SeriesRef::mem_key(3));
+        assert_ne!(SeriesRef::mem_key(3), SeriesRef::cpu_key(4));
+        let k = SeriesRef::keyed(SeriesRef::cpu_key(7), 42, &owned[1]);
+        assert_eq!(k.key, 14);
+        assert_eq!(k.seq, 42);
+    }
 
     #[test]
     fn naive_forecast_cases() {

@@ -127,7 +127,7 @@ fn parse_or_help(spec: Args, argv: &[String]) -> Result<Args, String> {
 fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let spec = sim_args("zoe-shaper simulate", "run one simulation")
         .opt("policy", "pessimistic", "baseline|optimistic|pessimistic")
-        .opt("forecaster", "gp-native", "oracle|last-value|arima|gp-native|gp")
+        .opt("forecaster", "gp-native", "oracle|last-value|arima|gp-native|gp-incr|gp")
         .opt("kernel", "exp", "GP kernel: exp|rbf")
         .opt("k1", "", "static buffer fraction [0,1]")
         .opt("k2", "", "sigma multiplier")
@@ -176,7 +176,7 @@ fn cmd_sched_sweep(argv: &[String]) -> Result<(), String> {
         "run every scheduler x placer combination on one seeded workload",
     )
     .opt("policy", "pessimistic", "baseline|optimistic|pessimistic")
-    .opt("forecaster", "oracle", "oracle|last-value|arima|gp-native|gp");
+    .opt("forecaster", "oracle", "oracle|last-value|arima|gp-native|gp-incr|gp");
     let a = parse_or_help(spec, argv)?;
     let mut cfg = load_cfg(&a)?;
     cfg.shaper.policy =
@@ -229,7 +229,7 @@ fn cmd_forecast_eval(argv: &[String]) -> Result<(), String> {
 
 fn cmd_sweep(argv: &[String]) -> Result<(), String> {
     let spec = sim_args("zoe-shaper sweep", "Fig. 4: K1 x K2 heat maps")
-        .opt("forecaster", "gp-native", "arima|gp-native|gp|last-value")
+        .opt("forecaster", "gp-native", "arima|gp-native|gp-incr|gp|last-value")
         .opt("k1-grid", "0,0.05,0.1,0.25,0.5,1.0", "comma-separated K1 values")
         .opt("k2-grid", "0,1,2,3", "comma-separated K2 values");
     let a = parse_or_help(spec, argv)?;

@@ -4,16 +4,34 @@
 //! the "OS view" (here, the component's utilization pattern), never
 //! instrumenting applications.
 //!
+//! # The `SeriesBatch` arena (PR 3)
+//!
+//! Histories live in one columnar arena instead of per-component
+//! `VecDeque`s: every component gets a lazily-assigned *slot* — a
+//! contiguous `2 × capacity` region per resource — and each push either
+//! appends in place or, once the region's slack is exhausted, compacts
+//! the window back to the region start (one memmove every `capacity`
+//! pushes, so amortized O(1) and allocation-free after the slot exists).
+//! The payoff is that a series window is always **one contiguous slice**:
+//! [`Monitor::cpu_series`]/[`Monitor::mem_series`] return borrowed views
+//! straight into the arena, replacing the seed's clone-out
+//! `Vec<f64>`-per-component-per-tick gather (~2 allocations + copies per
+//! component per shaping tick — an allocation storm at paper scale).
+//!
+//! Each series also carries an epoch-tagged sequence number
+//! ([`Monitor::seq`]): the count of samples recorded, with the high bits
+//! bumped on [`Monitor::reset`]. Sliding-window forecaster caches
+//! (`forecast::gp_incremental`) use `seq` deltas to detect "same series,
+//! advanced by s samples" and take their O(h²) rank-1 slide path instead
+//! of refactorizing.
+//!
 //! [`TickBuffers`] is the columnar scratch for one sampling pass: the
 //! engine fills one row per live component (walking the cluster's
 //! incrementally-maintained placed set instead of rescanning every
 //! application), the pattern evaluation is sharded over `util::pool`
 //! into the `fracs` column, and the per-host accumulators feed the OOM
 //! pass without re-filtering a global samples vector. All columns are
-//! reused across ticks — the steady state is allocation-free, mirroring
-//! the `GpWorkspace` discipline of the forecasting engine.
-
-use std::collections::VecDeque;
+//! reused across ticks — the steady state is allocation-free.
 
 use crate::workload::{AppId, ComponentId, HostId};
 
@@ -112,70 +130,171 @@ impl TickBuffers {
     }
 }
 
-/// Bounded utilization history for one component (fractions of request).
-#[derive(Debug, Clone, Default)]
-pub struct History {
-    pub cpu: VecDeque<f64>,
-    pub mem: VecDeque<f64>,
+/// Sentinel: component has no arena slot yet (never recorded).
+const SLOT_NONE: u32 = u32::MAX;
+
+/// Per-slot window bookkeeping. cpu and mem are recorded in lockstep, so
+/// one (start, len) pair positions the window in **both** resource
+/// regions of the slot.
+#[derive(Debug, Clone, Copy, Default)]
+struct SlotMeta {
+    /// Window start within the region.
+    start: u32,
+    /// Window length (≤ capacity).
+    len: u32,
+    /// Bumped on every `reset` — distinguishes a restarted component's
+    /// samples from its previous life in `seq`.
+    epoch: u32,
+    /// Samples recorded this epoch.
+    count: u32,
 }
 
-/// Monitor: per-component ring buffers, capacity-bounded.
+/// Monitor: per-component bounded utilization histories (fractions of
+/// request) in a columnar slot arena. See the module docs for layout.
 #[derive(Debug)]
 pub struct Monitor {
-    histories: Vec<History>,
-    capacity: usize,
+    /// Samples kept per series (the forecast window bound).
+    cap: usize,
+    /// Region size per resource: `2 * cap` — the slack that makes the
+    /// sliding window amortized-O(1) while staying contiguous.
+    region: usize,
+    /// The arena: per slot, `[cpu region | mem region]`.
+    data: Vec<f64>,
+    /// component id -> slot index (`SLOT_NONE` until the first record).
+    slots: Vec<u32>,
+    meta: Vec<SlotMeta>,
     samples_taken: u64,
 }
 
 impl Monitor {
     /// Create for `num_components` components keeping `capacity` samples
     /// each (the forecaster needs `2h`; we keep a margin for h sweeps).
+    /// Slots are assigned lazily on first record, so a mostly-idle
+    /// workload never pays for arena space it does not use.
     pub fn new(num_components: usize, capacity: usize) -> Self {
+        let cap = capacity.max(2);
         Monitor {
-            histories: vec![History::default(); num_components],
-            capacity: capacity.max(2),
+            cap,
+            region: 2 * cap,
+            data: Vec::new(),
+            slots: vec![SLOT_NONE; num_components],
+            meta: Vec::new(),
             samples_taken: 0,
         }
     }
 
+    /// Slot for a component, assigned (arena extended) on first use.
+    fn slot_for(&mut self, c: ComponentId) -> usize {
+        let s = self.slots[c];
+        if s != SLOT_NONE {
+            return s as usize;
+        }
+        let slot = self.meta.len();
+        self.slots[c] = slot as u32;
+        self.meta.push(SlotMeta::default());
+        self.data.resize(self.data.len() + 2 * self.region, 0.0);
+        slot
+    }
+
     /// Record one (cpu, mem) utilization-fraction sample for a component.
+    /// In-place arena write; allocation-free after the component's first
+    /// sample.
     pub fn record(&mut self, c: ComponentId, cpu_frac: f64, mem_frac: f64) {
-        let h = &mut self.histories[c];
-        if h.cpu.len() == self.capacity {
-            h.cpu.pop_front();
+        let cap = self.cap;
+        let region = self.region;
+        let slot = self.slot_for(c);
+        let m = &mut self.meta[slot];
+        let off = slot * 2 * region;
+        let (start, len) = (m.start as usize, m.len as usize);
+        if len < cap {
+            // filling phase: append at the window end
+            let i = off + start + len;
+            self.data[i] = cpu_frac;
+            self.data[i + region] = mem_frac;
+            m.len += 1;
+        } else if start + cap < region {
+            // sliding phase: write past the window, advance the start
+            let i = off + start + cap;
+            self.data[i] = cpu_frac;
+            self.data[i + region] = mem_frac;
+            m.start += 1;
+        } else {
+            // region exhausted: compact the window back to the region
+            // start (drops the oldest sample). One memmove per `cap`
+            // pushes — amortized O(1), never an allocation.
+            self.data.copy_within(off + start + 1..off + start + cap, off);
+            self.data[off + cap - 1] = cpu_frac;
+            let mo = off + region;
+            self.data.copy_within(mo + start + 1..mo + start + cap, mo);
+            self.data[mo + cap - 1] = mem_frac;
+            m.start = 0;
         }
-        if h.mem.len() == self.capacity {
-            h.mem.pop_front();
-        }
-        h.cpu.push_back(cpu_frac);
-        h.mem.push_back(mem_frac);
+        m.count = m.count.wrapping_add(1);
         self.samples_taken += 1;
     }
 
     /// Clear a component's history (on preemption/restart: the next
-    /// attempt is a fresh process with fresh behavior).
+    /// attempt is a fresh process with fresh behavior). The slot is kept;
+    /// the epoch bump makes the new life's `seq` disjoint from the old.
     pub fn reset(&mut self, c: ComponentId) {
-        self.histories[c] = History::default();
+        let s = self.slots[c];
+        if s == SLOT_NONE {
+            return;
+        }
+        let m = &mut self.meta[s as usize];
+        m.start = 0;
+        m.len = 0;
+        m.count = 0;
+        m.epoch = m.epoch.wrapping_add(1);
     }
 
-    /// Borrow a component's history.
-    pub fn history(&self, c: ComponentId) -> &History {
-        &self.histories[c]
-    }
-
-    /// Number of memory samples currently held for a component.
+    /// Number of samples currently held for a component.
     pub fn len(&self, c: ComponentId) -> usize {
-        self.histories[c].mem.len()
+        match self.slots[c] {
+            SLOT_NONE => 0,
+            s => self.meta[s as usize].len as usize,
+        }
     }
 
-    /// Memory history as a contiguous Vec (oldest first).
-    pub fn mem_series(&self, c: ComponentId) -> Vec<f64> {
-        self.histories[c].mem.iter().copied().collect()
+    /// Epoch-tagged monotone sample counter: `(epoch << 32) | count`.
+    /// Two calls with the same high bits and a delta of `s` mean "the
+    /// same series, advanced by exactly s samples" — the contract the
+    /// sliding-window GP cache slides on. A `reset` changes the high
+    /// bits, so a restarted component can never alias a slide.
+    pub fn seq(&self, c: ComponentId) -> u64 {
+        match self.slots[c] {
+            SLOT_NONE => 0,
+            s => {
+                let m = &self.meta[s as usize];
+                ((m.epoch as u64) << 32) | m.count as u64
+            }
+        }
     }
 
-    /// CPU history as a contiguous Vec (oldest first).
-    pub fn cpu_series(&self, c: ComponentId) -> Vec<f64> {
-        self.histories[c].cpu.iter().copied().collect()
+    /// Memory history as a contiguous borrowed view (oldest first) —
+    /// zero-copy into the arena.
+    pub fn mem_series(&self, c: ComponentId) -> &[f64] {
+        match self.slots[c] {
+            SLOT_NONE => &[],
+            s => {
+                let m = &self.meta[s as usize];
+                let off = s as usize * 2 * self.region + self.region + m.start as usize;
+                &self.data[off..off + m.len as usize]
+            }
+        }
+    }
+
+    /// CPU history as a contiguous borrowed view (oldest first) —
+    /// zero-copy into the arena.
+    pub fn cpu_series(&self, c: ComponentId) -> &[f64] {
+        match self.slots[c] {
+            SLOT_NONE => &[],
+            s => {
+                let m = &self.meta[s as usize];
+                let off = s as usize * 2 * self.region + m.start as usize;
+                &self.data[off..off + m.len as usize]
+            }
+        }
     }
 
     /// Total samples recorded over the run (monitor overhead metric).
@@ -196,8 +315,12 @@ mod tests {
         }
         assert_eq!(m.len(0), 4);
         // ring keeps the latest 4
-        assert_eq!(m.mem_series(0), vec![0.30000000000000004, 0.35000000000000003, 0.4, 0.45]);
+        assert_eq!(
+            m.mem_series(0),
+            &[0.30000000000000004, 0.35000000000000003, 0.4, 0.45][..]
+        );
         assert_eq!(m.len(1), 0);
+        assert!(m.cpu_series(1).is_empty());
     }
 
     #[test]
@@ -208,6 +331,7 @@ mod tests {
         assert_eq!(m.len(0), 2);
         m.reset(0);
         assert_eq!(m.len(0), 0);
+        assert!(m.cpu_series(0).is_empty());
         assert_eq!(m.samples_taken(), 2); // counter is cumulative
     }
 
@@ -235,7 +359,69 @@ mod tests {
         m.record(0, 0.1, 1.0);
         m.record(0, 0.2, 2.0);
         m.record(0, 0.3, 3.0);
-        assert_eq!(m.cpu_series(0), vec![0.1, 0.2, 0.3]);
-        assert_eq!(m.mem_series(0), vec![1.0, 2.0, 3.0]);
+        assert_eq!(m.cpu_series(0), &[0.1, 0.2, 0.3][..]);
+        assert_eq!(m.mem_series(0), &[1.0, 2.0, 3.0][..]);
+    }
+
+    #[test]
+    fn long_streams_slide_and_compact_exactly() {
+        // push far past the compaction boundary; the window must always
+        // equal the last `cap` recorded values, bit for bit
+        let cap = 5;
+        let mut m = Monitor::new(3, cap);
+        let mut recorded: Vec<(f64, f64)> = Vec::new();
+        for i in 0..57 {
+            let cpu = (i as f64 * 0.37).sin();
+            let mem = (i as f64 * 0.11).cos();
+            m.record(1, cpu, mem);
+            recorded.push((cpu, mem));
+            let lo = recorded.len().saturating_sub(cap);
+            let want_cpu: Vec<f64> = recorded[lo..].iter().map(|&(c, _)| c).collect();
+            let want_mem: Vec<f64> = recorded[lo..].iter().map(|&(_, v)| v).collect();
+            assert_eq!(m.cpu_series(1), &want_cpu[..], "after {} pushes", i + 1);
+            assert_eq!(m.mem_series(1), &want_mem[..], "after {} pushes", i + 1);
+        }
+        // arena stayed bounded: one slot, two regions of 2*cap
+        assert_eq!(m.data.len(), 2 * 2 * cap);
+    }
+
+    #[test]
+    fn seq_is_monotone_and_epoch_tagged() {
+        let mut m = Monitor::new(2, 4);
+        assert_eq!(m.seq(0), 0);
+        m.record(0, 0.1, 0.1);
+        m.record(0, 0.2, 0.2);
+        let s2 = m.seq(0);
+        assert_eq!(s2, 2);
+        m.record(0, 0.3, 0.3);
+        assert_eq!(m.seq(0) - s2, 1, "delta counts new samples");
+        // reset: high bits change, so no delta against the old life is small
+        m.reset(0);
+        let after = m.seq(0);
+        assert_eq!(after >> 32, 1, "epoch bumped");
+        assert_eq!(after & 0xffff_ffff, 0, "count restarts");
+        // the other component is independent
+        assert_eq!(m.seq(1), 0);
+        m.record(1, 0.5, 0.5);
+        assert_eq!(m.seq(1), 1);
+    }
+
+    #[test]
+    fn slots_are_lazy_and_stable() {
+        let mut m = Monitor::new(100, 4);
+        assert!(m.data.is_empty(), "no arena before first record");
+        m.record(42, 0.1, 0.2);
+        let one_slot = m.data.len();
+        assert_eq!(one_slot, 2 * 2 * 4);
+        m.record(7, 0.3, 0.4);
+        assert_eq!(m.data.len(), 2 * one_slot);
+        // recording more to existing slots never grows the arena
+        for i in 0..50 {
+            m.record(42, i as f64, i as f64);
+            m.record(7, i as f64, i as f64);
+        }
+        assert_eq!(m.data.len(), 2 * one_slot);
+        assert_eq!(m.cpu_series(42).len(), 4);
+        assert_eq!(m.cpu_series(7).len(), 4);
     }
 }

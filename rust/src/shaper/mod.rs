@@ -10,12 +10,18 @@
 //!   scheduler-priority order, fully preempting applications whose core
 //!   components no longer fit and partially preempting elastic components
 //!   (youngest first), then resizes the survivors.
+//!
+//! The planner runs every shaping tick, so its hot form is [`plan_into`]:
+//! per-host free/trial arrays, sort keys and the output action lists all
+//! live in caller-owned scratch ([`PlanScratch`] + [`ShapeActions`])
+//! reused across ticks — zero allocations once warm. Every capacity
+//! comparison uses the unified `cluster::CAPACITY_EPS`.
 
 pub mod beta;
 
 use std::collections::HashMap;
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, CAPACITY_EPS};
 use crate::config::Policy;
 use crate::workload::{AppId, Application, AppState, ComponentId};
 
@@ -39,12 +45,42 @@ pub struct ShapeActions {
     pub resizes: Vec<(ComponentId, Demand)>,
 }
 
+impl ShapeActions {
+    /// Empty the decision lists, keeping their capacity for reuse.
+    pub fn clear(&mut self) {
+        self.preempt_apps.clear();
+        self.preempt_elastic.clear();
+        self.resizes.clear();
+    }
+}
+
+/// Cross-tick scratch for [`plan_into`]: Algorithm 1's per-host free and
+/// trial arrays, the per-app core-resize staging list, the elastic sort
+/// keys, and the priority order. Holding one of these across ticks makes
+/// the planning pass allocation-free in steady state — the seed cloned
+/// the full per-host arrays once per running application per tick.
+#[derive(Debug, Default)]
+pub struct PlanScratch {
+    free_cpu: Vec<f64>,
+    free_mem: Vec<f64>,
+    trial_cpu: Vec<f64>,
+    trial_mem: Vec<f64>,
+    core_resizes: Vec<(ComponentId, Demand)>,
+    /// (placed_at, id) sort keys for one app's elastic components.
+    elastic: Vec<(f64, ComponentId)>,
+    order: Vec<AppId>,
+}
+
 /// Compute shaping actions for the current tick.
 ///
 /// `demands` maps every *placed* component to its desired allocation
 /// (forecast peak + β, clamped to the reservation); components absent
 /// from the map (e.g. still in grace period) are charged at their current
 /// allocation and never preempted partially.
+///
+/// Allocating convenience wrapper over [`plan_into`] (tests, one-shot
+/// callers); the engine holds a [`PlanScratch`] + [`ShapeActions`] pair
+/// and calls `plan_into` directly.
 pub fn plan(
     policy: Policy,
     cluster: &Cluster,
@@ -52,10 +88,29 @@ pub fn plan(
     running: &[AppId],
     demands: &HashMap<ComponentId, Demand>,
 ) -> ShapeActions {
+    let mut scratch = PlanScratch::default();
+    let mut out = ShapeActions::default();
+    plan_into(policy, cluster, apps, running, demands, &mut scratch, &mut out);
+    out
+}
+
+/// [`plan`] writing into caller-owned scratch and output buffers: the
+/// allocation-free form for the per-tick hot loop. `out` is cleared
+/// first; results are identical to [`plan`] for any scratch history.
+pub fn plan_into(
+    policy: Policy,
+    cluster: &Cluster,
+    apps: &[Application],
+    running: &[AppId],
+    demands: &HashMap<ComponentId, Demand>,
+    scratch: &mut PlanScratch,
+    out: &mut ShapeActions,
+) {
+    out.clear();
     match policy {
-        Policy::Baseline => ShapeActions::default(),
-        Policy::Optimistic => plan_optimistic(cluster, apps, running, demands),
-        Policy::Pessimistic => plan_pessimistic(cluster, apps, running, demands),
+        Policy::Baseline => {}
+        Policy::Optimistic => plan_optimistic(cluster, apps, running, demands, scratch, out),
+        Policy::Pessimistic => plan_pessimistic(cluster, apps, running, demands, scratch, out),
     }
 }
 
@@ -80,13 +135,17 @@ fn plan_optimistic(
     apps: &[Application],
     running: &[AppId],
     demands: &HashMap<ComponentId, Demand>,
-) -> ShapeActions {
-    let mut actions = ShapeActions::default();
+    scratch: &mut PlanScratch,
+    out: &mut ShapeActions,
+) {
+    let PlanScratch { free_cpu, free_mem, order, .. } = scratch;
     // free room per host after accounting current allocations
-    let mut free_cpu: Vec<f64> = cluster.hosts.iter().map(|h| h.free_cpus()).collect();
-    let mut free_mem: Vec<f64> = cluster.hosts.iter().map(|h| h.free_mem()).collect();
-    let order = priority_order(apps, running);
-    for &a in &order {
+    free_cpu.clear();
+    free_cpu.extend(cluster.hosts.iter().map(|h| h.free_cpus()));
+    free_mem.clear();
+    free_mem.extend(cluster.hosts.iter().map(|h| h.free_mem()));
+    priority_order_into(apps, running, order);
+    for &a in order.iter() {
         for comp in &apps[a].components {
             let Some(p) = cluster.placement(comp.id) else { continue };
             let Some(d) = demand_of(cluster, demands, comp.id) else { continue };
@@ -101,25 +160,27 @@ fn plan_optimistic(
             };
             free_cpu[p.host] -= new.cpus - p.alloc_cpus;
             free_mem[p.host] -= new.mem - p.alloc_mem;
-            if (new.cpus - p.alloc_cpus).abs() > 1e-9 || (new.mem - p.alloc_mem).abs() > 1e-9 {
-                actions.resizes.push((comp.id, new));
+            if (new.cpus - p.alloc_cpus).abs() > CAPACITY_EPS
+                || (new.mem - p.alloc_mem).abs() > CAPACITY_EPS
+            {
+                out.resizes.push((comp.id, new));
             }
         }
     }
-    actions
 }
 
-/// Running apps in scheduler-priority order (FIFO by submit time).
-/// `total_cmp` keys: a NaN submit time sorts last instead of panicking.
-fn priority_order(apps: &[Application], running: &[AppId]) -> Vec<AppId> {
-    let mut order: Vec<AppId> = running.to_vec();
+/// Running apps in scheduler-priority order (FIFO by submit time),
+/// written into reused scratch. `total_cmp` keys: a NaN submit time
+/// sorts last instead of panicking.
+fn priority_order_into(apps: &[Application], running: &[AppId], order: &mut Vec<AppId>) {
+    order.clear();
+    order.extend_from_slice(running);
     order.sort_by(|&x, &y| {
         apps[x]
             .submit_time
             .total_cmp(&apps[y].submit_time)
             .then(x.cmp(&y))
     });
-    order
 }
 
 /// Pessimistic: Algorithm 1 of the paper, verbatim structure.
@@ -131,23 +192,35 @@ fn priority_order(apps: &[Application], running: &[AppId]) -> Vec<AppId> {
 /// elastic components sorted by time alive — oldest first (line 25) —
 /// sending overflowing ones to K_E (partial preemption, lines 26-33).
 /// Finally emit preemptions and resizes (lines 34-41).
+///
+/// The trial arrays live in `scratch` and are refreshed by
+/// `copy_from_slice`/`swap` instead of the seed's per-app `clone()`, so
+/// the pass never allocates once warm.
 fn plan_pessimistic(
     cluster: &Cluster,
     apps: &[Application],
     running: &[AppId],
     demands: &HashMap<ComponentId, Demand>,
-) -> ShapeActions {
-    let mut actions = ShapeActions::default();
-    let mut free_cpu: Vec<f64> = cluster.hosts.iter().map(|h| h.total_cpus).collect();
-    let mut free_mem: Vec<f64> = cluster.hosts.iter().map(|h| h.total_mem).collect();
+    scratch: &mut PlanScratch,
+    out: &mut ShapeActions,
+) {
+    let PlanScratch { free_cpu, free_mem, trial_cpu, trial_mem, core_resizes, elastic, order } =
+        scratch;
+    free_cpu.clear();
+    free_cpu.extend(cluster.hosts.iter().map(|h| h.total_cpus));
+    free_mem.clear();
+    free_mem.extend(cluster.hosts.iter().map(|h| h.total_mem));
+    priority_order_into(apps, running, order);
 
-    for &a in &priority_order(apps, running) {
+    for &a in order.iter() {
         let app = &apps[a];
         // --- core components: all-or-nothing ---
-        let mut trial_cpu = free_cpu.clone();
-        let mut trial_mem = free_mem.clone();
+        trial_cpu.clear();
+        trial_cpu.extend_from_slice(free_cpu);
+        trial_mem.clear();
+        trial_mem.extend_from_slice(free_mem);
         let mut remove = false;
-        let mut core_resizes: Vec<(ComponentId, Demand)> = Vec::new();
+        core_resizes.clear();
         for comp in app.components.iter().filter(|c| c.is_core) {
             let Some(p) = cluster.placement(comp.id) else {
                 // unplaced core: app is restarting; skip
@@ -156,46 +229,42 @@ fn plan_pessimistic(
             let Some(d) = demand_of(cluster, demands, comp.id) else { continue };
             trial_cpu[p.host] -= d.cpus;
             trial_mem[p.host] -= d.mem;
-            if trial_cpu[p.host] < -1e-9 || trial_mem[p.host] < -1e-9 {
+            if trial_cpu[p.host] < -CAPACITY_EPS || trial_mem[p.host] < -CAPACITY_EPS {
                 remove = true;
                 break;
             }
             core_resizes.push((comp.id, d));
         }
         if remove {
-            actions.preempt_apps.push(a);
+            out.preempt_apps.push(a);
             continue; // do not commit trial arrays (lines 20-21)
         }
-        free_cpu = trial_cpu;
-        free_mem = trial_mem;
-        actions.resizes.extend(core_resizes);
+        std::mem::swap(free_cpu, trial_cpu);
+        std::mem::swap(free_mem, trial_mem);
+        out.resizes.extend_from_slice(core_resizes);
 
         // --- elastic components: oldest-lived keep resources first ---
-        let mut elastic: Vec<&crate::workload::Component> = app
-            .components
-            .iter()
-            .filter(|c| !c.is_core && cluster.placement(c.id).is_some())
-            .collect();
-        elastic.sort_by(|x, y| {
-            let px = cluster.placement(x.id).unwrap().placed_at;
-            let py = cluster.placement(y.id).unwrap().placed_at;
-            px.total_cmp(&py).then(x.id.cmp(&y.id))
-        });
-        for comp in elastic {
-            let p = cluster.placement(comp.id).unwrap();
-            let Some(d) = demand_of(cluster, demands, comp.id) else { continue };
+        elastic.clear();
+        for c in app.components.iter().filter(|c| !c.is_core) {
+            if let Some(p) = cluster.placement(c.id) {
+                elastic.push((p.placed_at, c.id));
+            }
+        }
+        elastic.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+        for &(_, cid) in elastic.iter() {
+            let p = cluster.placement(cid).expect("elastic candidate was placed");
+            let Some(d) = demand_of(cluster, demands, cid) else { continue };
             let c_after = free_cpu[p.host] - d.cpus;
             let m_after = free_mem[p.host] - d.mem;
-            if c_after < -1e-9 || m_after < -1e-9 {
-                actions.preempt_elastic.push(comp.id);
+            if c_after < -CAPACITY_EPS || m_after < -CAPACITY_EPS {
+                out.preempt_elastic.push(cid);
             } else {
                 free_cpu[p.host] = c_after;
                 free_mem[p.host] = m_after;
-                actions.resizes.push((comp.id, d));
+                out.resizes.push((cid, d));
             }
         }
     }
-    actions
 }
 
 /// Sanity check used by tests and debug builds: resizes must never
@@ -238,7 +307,7 @@ pub fn validate_actions(
         mem[p.host] += d.mem;
     }
     for h in &cluster.hosts {
-        if cpu[h.id] > h.total_cpus + 1e-6 || mem[h.id] > h.total_mem + 1e-6 {
+        if cpu[h.id] > h.total_cpus + CAPACITY_EPS || mem[h.id] > h.total_mem + CAPACITY_EPS {
             return Err(format!(
                 "planned allocation overcommits host {}: cpu {:.3}/{:.3} mem {:.3}/{:.3}",
                 h.id, cpu[h.id], h.total_cpus, mem[h.id], h.total_mem
@@ -385,6 +454,40 @@ mod tests {
             .sum();
         assert!(total_cpu <= 8.0 - 4.0 + 1e-9, "granted {total_cpu}");
         validate_actions(&cluster, &apps, &a).unwrap();
+    }
+
+    #[test]
+    fn plan_into_with_dirty_scratch_matches_plan() {
+        // scratch reuse across ticks (and across policies, and across
+        // differently-sized worlds) must never change decisions
+        let (apps_a, cluster_a) = toy(2, 3, 8.0, 32.0);
+        let (apps_b, cluster_b) = toy(3, 1, 4.0, 24.0);
+        let running_a = vec![0, 1];
+        let running_b = vec![2, 0, 1];
+        let da = uniform_demand(&apps_a, 1.1, 2.0);
+        let db = uniform_demand(&apps_b, 1.8, 5.5);
+        let mut scratch = PlanScratch::default();
+        let mut out = ShapeActions::default();
+        for _ in 0..3 {
+            for policy in [Policy::Baseline, Policy::Optimistic, Policy::Pessimistic] {
+                plan_into(policy, &cluster_a, &apps_a, &running_a, &da, &mut scratch, &mut out);
+                let fresh = plan(policy, &cluster_a, &apps_a, &running_a, &da);
+                assert_eq!(out.preempt_apps, fresh.preempt_apps, "{policy:?} A");
+                assert_eq!(out.preempt_elastic, fresh.preempt_elastic, "{policy:?} A");
+                assert_eq!(out.resizes.len(), fresh.resizes.len(), "{policy:?} A");
+                for (x, y) in out.resizes.iter().zip(&fresh.resizes) {
+                    assert_eq!(x.0, y.0);
+                    assert_eq!(x.1.cpus.to_bits(), y.1.cpus.to_bits());
+                    assert_eq!(x.1.mem.to_bits(), y.1.mem.to_bits());
+                }
+                // interleave a differently-shaped world into the same scratch
+                plan_into(policy, &cluster_b, &apps_b, &running_b, &db, &mut scratch, &mut out);
+                let fresh_b = plan(policy, &cluster_b, &apps_b, &running_b, &db);
+                assert_eq!(out.preempt_apps, fresh_b.preempt_apps, "{policy:?} B");
+                assert_eq!(out.preempt_elastic, fresh_b.preempt_elastic, "{policy:?} B");
+                assert_eq!(out.resizes.len(), fresh_b.resizes.len(), "{policy:?} B");
+            }
+        }
     }
 
     #[test]

@@ -31,17 +31,33 @@
 //! `ZOE_WORKERS`). [`MonitorMode::ReferenceScan`] keeps the seed's
 //! scan-all-apps gather as a correctness oracle: the golden-equivalence
 //! suite asserts both modes produce identical `RunReport`s.
+//!
+//! ## Zero-copy shaper tick (PR 3)
+//!
+//! The shaper tick is allocation-free in steady state end to end:
+//! forecast inputs are borrowed [`SeriesRef`] views straight into the
+//! monitor's series arena (the seed cloned two `Vec<f64>` per component
+//! per tick), carrying the component key + sample counter that let the
+//! incremental GP slide cached factors; the oracle path's per-component
+//! peak/β demand computation is sharded over `util::pool::shard_map_into`
+//! into a reused column (pure per-row work — worker-count-independent by
+//! construction); and Algorithm 1 plans through a reused
+//! [`PlanScratch`]/[`ShapeActions`] pair instead of reallocating its
+//! per-host trial arrays per app. A forecaster that returns the wrong
+//! batch length is now a logged release-mode event that falls back to
+//! current-allocation demands for the tick instead of a silent cpu/mem
+//! misalignment.
 
 use std::collections::{BTreeSet, HashMap};
 use std::sync::Arc;
 
 use crate::cluster::Cluster;
 use crate::config::{ForecasterKind, Policy, SimConfig};
-use crate::forecast::{Forecast, Forecaster};
+use crate::forecast::{Forecast, Forecaster, SeriesRef};
 use crate::metrics::{Metrics, RunReport};
 use crate::monitor::{Monitor, TickBuffers};
 use crate::scheduler::{build_placer, build_scheduler, Placer, Scheduler};
-use crate::shaper::{self, beta, Demand};
+use crate::shaper::{self, beta, Demand, PlanScratch, ShapeActions};
 use crate::sim::{Event, EventQueue};
 use crate::util::pool;
 use crate::workload::{self, AppId, Application, AppState, ComponentId};
@@ -117,6 +133,19 @@ pub struct Engine {
     demands: HashMap<ComponentId, Demand>,
     /// scratch: columnar per-tick sample buffers (allocation-free)
     tick: TickBuffers,
+    /// scratch: fused-batch rows for model forecasts —
+    /// (component, cpu_req, mem_req)
+    batch_ids: Vec<(ComponentId, f64, f64)>,
+    /// scratch: oracle rows — (component, step, cpu_req, mem_req)
+    oracle_rows: Vec<(ComponentId, u64, f64, f64)>,
+    /// scratch: per-row demand column (sharded oracle fill)
+    demand_rows: Vec<Demand>,
+    /// scratch: running apps snapshot for the shaper
+    running_ids: Vec<AppId>,
+    /// scratch: Algorithm 1 trial arrays, reused across ticks
+    plan_scratch: PlanScratch,
+    /// scratch: planned actions, reused across ticks
+    actions: ShapeActions,
     /// min sampled rows before the pattern pass is sharded
     shard_threshold: usize,
     monitor_mode: MonitorMode,
@@ -159,6 +188,12 @@ impl Engine {
             running: BTreeSet::new(),
             unfinished: n_apps,
             demands: HashMap::new(),
+            batch_ids: Vec::new(),
+            oracle_rows: Vec::new(),
+            demand_rows: Vec::new(),
+            running_ids: Vec::new(),
+            plan_scratch: PlanScratch::default(),
+            actions: ShapeActions::default(),
             source,
             cfg,
             shard_threshold: shard_threshold(),
@@ -358,10 +393,9 @@ impl Engine {
         for cid in self.cluster.placed_ids() {
             let (a, k) = self.comp_index[cid];
             let AppState::Running { since } = self.apps[a].state else {
-                debug_assert!(
-                    matches!(self.apps[a].state, AppState::Running { .. }),
-                    "placed component {cid} on non-running app {a}"
-                );
+                // unreachable by the placement/state atomicity invariant;
+                // surface loudly in debug, skip the row in release
+                debug_assert!(false, "placed component {cid} on non-running app {a}");
                 continue;
             };
             let step = ((now - since) / interval).max(0.0) as u64;
@@ -516,23 +550,23 @@ impl Engine {
         let policy = self.cfg.shaper.policy;
         // The grace period exists to accumulate training history (§5);
         // the oracle needs none and shapes from the first tick.
-        let grace_steps = match &self.source {
-            ForecastSource::Oracle => 0,
-            ForecastSource::Model(_) => {
-                (self.cfg.forecast.grace_period_s / monitor_interval).ceil() as usize
-            }
+        let is_oracle = matches!(self.source, ForecastSource::Oracle);
+        let grace_steps = if is_oracle {
+            0
+        } else {
+            (self.cfg.forecast.grace_period_s / monitor_interval).ceil() as usize
         };
         let lookahead_steps = (shaping_interval / monitor_interval).ceil().max(1.0) as u64;
 
         // gather the components to shape, from the maintained running set
-        // (ascending app id — the seed's scan order)
-        let running: Vec<AppId> = self.running.iter().copied().collect();
+        // (ascending app id — the seed's scan order). No series data is
+        // touched here: rows carry ids + requests only.
+        self.running_ids.clear();
+        self.running_ids.extend(self.running.iter().copied());
         self.demands.clear();
-        let mut model_batch_ids: Vec<(ComponentId, f64, f64)> = Vec::new(); // (comp, cpu_req, mem_req)
-        let mut model_cpu_series: Vec<Vec<f64>> = Vec::new();
-        let mut model_mem_series: Vec<Vec<f64>> = Vec::new();
-
-        for &a in &running {
+        self.batch_ids.clear();
+        self.oracle_rows.clear();
+        for &a in &self.running_ids {
             if self.apps[a].shaping_disabled {
                 continue; // too many failures: allocation stays put
             }
@@ -544,71 +578,114 @@ impl Engine {
                 if self.monitor.len(comp.id) < grace_steps {
                     continue; // grace period: keep current allocation
                 }
-                match &self.source {
-                    ForecastSource::Oracle => {
-                        let step = ((now - since) / monitor_interval) as u64;
-                        // The pessimistic shaper anticipates the coming
-                        // interval's peak; the optimistic comparator (Borg/
-                        // Omega-style reclamation) redeems against *current*
-                        // usage without anticipating the consequences —
-                        // that asymmetry is the paper's §3.2 distinction.
-                        let (cpu_peak, mem_peak) = if policy == Policy::Optimistic {
-                            (comp.cpu_pattern.at_step(step), comp.mem_pattern.at_step(step))
-                        } else {
-                            (
-                                comp.cpu_pattern.peak_over(step + 1, step + lookahead_steps),
-                                comp.mem_pattern.peak_over(step + 1, step + lookahead_steps),
-                            )
-                        };
-                        let fc = Forecast { mean: cpu_peak, var: 0.0 };
-                        let fm = Forecast { mean: mem_peak, var: 0.0 };
+                if is_oracle {
+                    let step = ((now - since) / monitor_interval) as u64;
+                    self.oracle_rows.push((comp.id, step, comp.cpu_req, comp.mem_req));
+                } else {
+                    self.batch_ids.push((comp.id, comp.cpu_req, comp.mem_req));
+                }
+            }
+        }
+
+        if is_oracle && !self.oracle_rows.is_empty() {
+            // Oracle demand building: pure per-row work (pattern peaks +
+            // β buffer), sharded like the monitor's pattern pass. The
+            // sequential map insertion keeps ordering effects nil —
+            // results are bit-identical for any worker count.
+            let n = self.oracle_rows.len();
+            let workers = if n >= self.shard_threshold { pool::num_workers() } else { 1 };
+            self.demand_rows.clear();
+            self.demand_rows.resize(n, Demand { cpus: 0.0, mem: 0.0 });
+            let apps = &self.apps;
+            let comp_index = &self.comp_index;
+            pool::shard_map_into(
+                self.oracle_rows.as_slice(),
+                self.demand_rows.as_mut_slice(),
+                workers,
+                || (),
+                |_, _i, &(cid, step, cpu_req, mem_req)| {
+                    let (a, k) = comp_index[cid];
+                    let comp = &apps[a].components[k];
+                    // The pessimistic shaper anticipates the coming
+                    // interval's peak; the optimistic comparator (Borg/
+                    // Omega-style reclamation) redeems against *current*
+                    // usage without anticipating the consequences — that
+                    // asymmetry is the paper's §3.2 distinction.
+                    let (cpu_peak, mem_peak) = if policy == Policy::Optimistic {
+                        (comp.cpu_pattern.at_step(step), comp.mem_pattern.at_step(step))
+                    } else {
+                        (
+                            comp.cpu_pattern.peak_over(step + 1, step + lookahead_steps),
+                            comp.mem_pattern.peak_over(step + 1, step + lookahead_steps),
+                        )
+                    };
+                    let fc = Forecast { mean: cpu_peak, var: 0.0 };
+                    let fm = Forecast { mean: mem_peak, var: 0.0 };
+                    Demand {
+                        cpus: beta::desired_fraction(&fc, k1, k2) * cpu_req,
+                        mem: beta::desired_fraction(&fm, k1, k2) * mem_req,
+                    }
+                },
+            );
+            for (&(cid, _, _, _), &d) in self.oracle_rows.iter().zip(&self.demand_rows) {
+                self.demands.insert(cid, d);
+            }
+            self.metrics.forecasts_issued += 2 * n as u64;
+        }
+
+        if let ForecastSource::Model(model) = &mut self.source {
+            if !self.batch_ids.is_empty() {
+                // one fused batch per tick — cpu series then mem series —
+                // so batched/parallel forecasters see the tick's entire
+                // workload in a single call instead of two serial halves.
+                // Inputs are zero-copy views into the monitor arena,
+                // keyed so sliding-window caches persist across ticks.
+                let k = self.batch_ids.len();
+                let monitor = &self.monitor;
+                let mut views: Vec<SeriesRef<'_>> = Vec::with_capacity(2 * k);
+                views.extend(self.batch_ids.iter().map(|&(cid, _, _)| {
+                    SeriesRef::keyed(SeriesRef::cpu_key(cid), monitor.seq(cid), monitor.cpu_series(cid))
+                }));
+                views.extend(self.batch_ids.iter().map(|&(cid, _, _)| {
+                    SeriesRef::keyed(SeriesRef::mem_key(cid), monitor.seq(cid), monitor.mem_series(cid))
+                }));
+                let all = model.forecast(&views);
+                if all.len() != 2 * k {
+                    // a forecaster that drops series would silently
+                    // misalign every cpu/mem pair after the gap; charge
+                    // current allocations this tick instead (components
+                    // absent from `demands` keep their allocation)
+                    crate::error_log!(
+                        "forecaster '{}' returned {} forecasts for {} series; \
+                         keeping current allocations this tick",
+                        model.name(),
+                        all.len(),
+                        2 * k
+                    );
+                } else {
+                    self.metrics.forecasts_issued += 2 * k as u64;
+                    for (i, &(cid, cpu_req, mem_req)) in self.batch_ids.iter().enumerate() {
                         self.demands.insert(
-                            comp.id,
+                            cid,
                             Demand {
-                                cpus: beta::desired_fraction(&fc, k1, k2) * comp.cpu_req,
-                                mem: beta::desired_fraction(&fm, k1, k2) * comp.mem_req,
+                                cpus: beta::desired_fraction(&all[i], k1, k2) * cpu_req,
+                                mem: beta::desired_fraction(&all[k + i], k1, k2) * mem_req,
                             },
                         );
                     }
-                    ForecastSource::Model(_) => {
-                        model_batch_ids.push((comp.id, comp.cpu_req, comp.mem_req));
-                        model_cpu_series.push(self.monitor.cpu_series(comp.id));
-                        model_mem_series.push(self.monitor.mem_series(comp.id));
-                    }
                 }
             }
-        }
-        if let ForecastSource::Model(model) = &mut self.source {
-            if !model_batch_ids.is_empty() {
-                // one fused batch per tick — cpu series then mem series —
-                // so batched/parallel forecasters see the tick's entire
-                // workload in a single call instead of two serial halves
-                let k = model_batch_ids.len();
-                let mut fused = model_cpu_series;
-                fused.append(&mut model_mem_series);
-                let all = model.forecast(&fused);
-                debug_assert_eq!(all.len(), 2 * k, "forecaster dropped series");
-                self.metrics.forecasts_issued += 2 * k as u64;
-                for (i, &(cid, cpu_req, mem_req)) in model_batch_ids.iter().enumerate() {
-                    self.demands.insert(
-                        cid,
-                        Demand {
-                            cpus: beta::desired_fraction(&all[i], k1, k2) * cpu_req,
-                            mem: beta::desired_fraction(&all[k + i], k1, k2) * mem_req,
-                        },
-                    );
-                }
-            }
-        } else {
-            self.metrics.forecasts_issued += 2 * self.demands.len() as u64;
         }
 
-        let actions = shaper::plan(
+        let mut actions = std::mem::take(&mut self.actions);
+        shaper::plan_into(
             policy,
             &self.cluster,
             &self.apps,
-            &running,
+            &self.running_ids,
             &self.demands,
+            &mut self.plan_scratch,
+            &mut actions,
         );
         debug_assert!(
             shaper::validate_actions(&self.cluster, &self.apps, &actions).is_ok(),
@@ -645,6 +722,8 @@ impl Engine {
                 crate::warn_log!("resize rejected: {e}");
             }
         }
+        // hand the action buffers back for reuse next tick
+        self.actions = actions;
         self.queue.push(now, Event::SchedulerWake);
         if self.unfinished > 0 {
             self.queue.push_in(shaping_interval, Event::ShaperTick);
@@ -870,6 +949,51 @@ mod tests {
         let r = run_simulation(&cfg, None, "gp").unwrap();
         assert_eq!(r.completed, 15, "{}", r.summary());
         assert!(r.forecasts_issued > 0);
+    }
+
+    #[test]
+    fn gp_incremental_run_completes() {
+        let mut cfg = tiny_cfg();
+        cfg.workload.num_apps = 15;
+        cfg.shaper.policy = Policy::Pessimistic;
+        cfg.forecast.kind = ForecasterKind::GpIncremental;
+        cfg.forecast.grace_period_s = 180.0;
+        cfg.workload.runtime_scale = 1.0;
+        let r = run_simulation(&cfg, None, "gp-incr").unwrap();
+        assert_eq!(r.completed, 15, "{}", r.summary());
+        assert!(r.forecasts_issued > 0);
+    }
+
+    /// A forecaster that silently drops one series from every batch —
+    /// the failure mode the release-mode length guard exists for.
+    struct DroppingForecaster;
+    impl Forecaster for DroppingForecaster {
+        fn name(&self) -> String {
+            "dropper".into()
+        }
+        fn min_history(&self) -> usize {
+            1
+        }
+        fn forecast(&mut self, series: &[SeriesRef<'_>]) -> Vec<Forecast> {
+            series
+                .iter()
+                .skip(1)
+                .map(|s| crate::forecast::naive_forecast(s.data))
+                .collect()
+        }
+    }
+
+    #[test]
+    fn misbehaving_forecaster_falls_back_to_current_allocation() {
+        let mut cfg = tiny_cfg();
+        cfg.shaper.policy = Policy::Pessimistic;
+        cfg.forecast.grace_period_s = 120.0;
+        let eng = Engine::new(cfg, ForecastSource::Model(Box::new(DroppingForecaster)));
+        let r = eng.run("dropper");
+        // the run must survive (demands fall back to current allocation)
+        // and mismatched batches must never count as issued forecasts
+        assert_eq!(r.completed, 30, "{}", r.summary());
+        assert_eq!(r.forecasts_issued, 0);
     }
 
     #[test]

@@ -159,33 +159,81 @@ impl Bench {
         &self.group
     }
 
+    /// Collected results as a JSON array of
+    /// `{name, ns_per_iter, per_sec, iters}` objects.
+    fn results_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    let mut o = BTreeMap::new();
+                    o.insert("name".to_string(), Json::Str(r.name.clone()));
+                    o.insert("ns_per_iter".to_string(), Json::Num(r.ns_per_iter()));
+                    // a zero-median case yields per_sec = inf; the Json
+                    // writer emits non-finite numbers as null, which is the
+                    // honest value for trackers (never 0.0 = "slowest")
+                    o.insert("per_sec".to_string(), Json::Num(r.per_sec()));
+                    o.insert("iters".to_string(), Json::Num(r.iters as f64));
+                    Json::Obj(o)
+                })
+                .collect(),
+        )
+    }
+
     /// Write all collected results as machine-readable JSON —
-    /// `{group, results: [{name, ns_per_iter, per_sec, iters}]}` — so the
-    /// perf trajectory can be tracked across PRs (e.g.
-    /// `BENCH_hotpaths.json`).
+    /// `{group, results: [{name, ns_per_iter, per_sec, iters}]}`,
+    /// overwriting `path`. Prefer [`Bench::append_json`] for cross-PR
+    /// trajectory files.
     pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
         use crate::util::json::Json;
         use std::collections::BTreeMap;
-        let results: Vec<Json> = self
-            .results
-            .iter()
-            .map(|r| {
-                let mut o = BTreeMap::new();
-                o.insert("name".to_string(), Json::Str(r.name.clone()));
-                o.insert("ns_per_iter".to_string(), Json::Num(r.ns_per_iter()));
-                // a zero-median case yields per_sec = inf; the Json
-                // writer emits non-finite numbers as null, which is the
-                // honest value for trackers (never 0.0 = "slowest")
-                o.insert("per_sec".to_string(), Json::Num(r.per_sec()));
-                o.insert("iters".to_string(), Json::Num(r.iters as f64));
-                Json::Obj(o)
-            })
-            .collect();
         let mut top = BTreeMap::new();
         top.insert("group".to_string(), Json::Str(self.group.clone()));
-        top.insert("results".to_string(), Json::Arr(results));
+        top.insert("results".to_string(), self.results_json());
         std::fs::write(path, Json::Obj(top).to_string_pretty() + "\n")
     }
+
+    /// Append this run to a cross-PR trajectory file —
+    /// `{group, runs: [{rev, results}, ...]}` keyed by git revision — so
+    /// successive bench runs accumulate instead of overwriting each
+    /// other. A missing, legacy-format (`write_json`) or unparseable
+    /// file starts a fresh trajectory with this run as its only entry.
+    pub fn append_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let path = path.as_ref();
+        let mut runs: Vec<Json> = match std::fs::read_to_string(path) {
+            Ok(text) => Json::parse(&text)
+                .ok()
+                .and_then(|j| j.get("runs").and_then(|r| r.as_arr().map(|a| a.to_vec())))
+                .unwrap_or_default(),
+            Err(_) => Vec::new(),
+        };
+        let mut run = BTreeMap::new();
+        run.insert("rev".to_string(), Json::Str(git_rev()));
+        run.insert("results".to_string(), self.results_json());
+        runs.push(Json::Obj(run));
+        let mut top = BTreeMap::new();
+        top.insert("group".to_string(), Json::Str(self.group.clone()));
+        top.insert("runs".to_string(), Json::Arr(runs));
+        std::fs::write(path, Json::Obj(top).to_string_pretty() + "\n")
+    }
+}
+
+/// Short git revision of the working tree, or "unknown" outside a repo /
+/// without git. Benches key their trajectory entries by this.
+pub fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
 }
 
 /// Optimization barrier (std::hint::black_box is stable since 1.66).
@@ -225,6 +273,31 @@ mod tests {
         assert_eq!(results.len(), 1);
         assert_eq!(results[0].get("name").and_then(|n| n.as_str()), Some("noop"));
         assert!(results[0].get("ns_per_iter").and_then(|n| n.as_f64()).is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn append_json_accumulates_runs() {
+        let path = std::env::temp_dir().join("zoe_bench_append_test.json");
+        let _ = std::fs::remove_file(&path);
+        let mut b = Bench::new("appendtest").with_target(Duration::from_millis(10));
+        b.run("noop", || 1 + 1);
+        b.append_json(&path).unwrap();
+        b.append_json(&path).unwrap();
+        let j = crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("group").and_then(|g| g.as_str()), Some("appendtest"));
+        let runs = j.get("runs").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(runs.len(), 2, "each append adds one run entry");
+        for run in runs {
+            assert!(run.get("rev").and_then(|r| r.as_str()).is_some());
+            let results = run.get("results").and_then(|r| r.as_arr()).unwrap();
+            assert_eq!(results[0].get("name").and_then(|n| n.as_str()), Some("noop"));
+        }
+        // a legacy overwrite-format file is replaced, not corrupted
+        b.write_json(&path).unwrap();
+        b.append_json(&path).unwrap();
+        let j = crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("runs").and_then(|r| r.as_arr()).unwrap().len(), 1);
         let _ = std::fs::remove_file(&path);
     }
 

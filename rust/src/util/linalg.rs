@@ -7,6 +7,14 @@
 //! [`Mat::reset`]: they write into caller-owned scratch so a steady-state
 //! forecasting loop performs no allocation. The allocating wrappers are
 //! thin shims over them, so both paths compute bit-identical results.
+//!
+//! The sliding-window tier ([`chol_update_in_place`],
+//! [`chol_downdate_in_place`], [`chol_delete_first`],
+//! [`chol_append_row`]) maintains an existing factor under rank-1
+//! perturbations and training-row turnover in O(n²) instead of the O(n³)
+//! refactorization — the primitive behind the incremental GP forecaster
+//! (`forecast::gp_incremental`). All of them are property-tested against
+//! full refactorization to ≤ 1e-9 (`tests/gp_incremental_prop.rs`).
 
 /// Row-major dense matrix of f64.
 #[derive(Debug, Clone, PartialEq)]
@@ -234,6 +242,113 @@ pub fn solve_lower_t_in_place(l: &Mat, x: &mut [f64]) {
     }
 }
 
+/// Rank-1 **update** of a lower Cholesky factor, in place: given L with
+/// A = L Lᵀ in the leading `x.len()` × `x.len()` block of `l`, rewrites
+/// that block to the factor of `A + x xᵀ`. O(m²); never fails (adding
+/// x xᵀ keeps A positive definite). `x` is consumed as scratch.
+///
+/// The block size is taken from `x.len()` so a factor embedded in a
+/// larger scratch matrix (the sliding-window GP keeps an n×n `Mat` and
+/// shrinks/regrows the active block by one row per slide) can be updated
+/// without copying it out.
+pub fn chol_update_in_place(l: &mut Mat, x: &mut [f64]) {
+    let m = x.len();
+    assert!(m <= l.rows().min(l.cols()), "update block exceeds factor");
+    for k in 0..m {
+        let lkk = l[(k, k)];
+        let r = (lkk * lkk + x[k] * x[k]).sqrt();
+        let c = r / lkk;
+        let s = x[k] / lkk;
+        l[(k, k)] = r;
+        for i in k + 1..m {
+            l[(i, k)] = (l[(i, k)] + s * x[i]) / c;
+            x[i] = c * x[i] - s * l[(i, k)];
+        }
+    }
+}
+
+/// Rank-1 **downdate** of a lower Cholesky factor, in place: the leading
+/// `x.len()` × `x.len()` block of `l` becomes the factor of `A − x xᵀ`.
+/// O(m²). Fails when `A − x xᵀ` is not positive definite — the factor is
+/// then partially modified and must be treated as poisoned: refactorize
+/// from the matrix (the incremental GP's documented fallback). `x` is
+/// consumed as scratch.
+pub fn chol_downdate_in_place(l: &mut Mat, x: &mut [f64]) -> Result<(), LinalgError> {
+    let m = x.len();
+    assert!(m <= l.rows().min(l.cols()), "downdate block exceeds factor");
+    for k in 0..m {
+        let lkk = l[(k, k)];
+        let d = lkk * lkk - x[k] * x[k];
+        if d <= 0.0 {
+            return Err(LinalgError::NotPositiveDefinite(k, d));
+        }
+        let r = d.sqrt();
+        let c = r / lkk;
+        let s = x[k] / lkk;
+        l[(k, k)] = r;
+        for i in k + 1..m {
+            l[(i, k)] = (l[(i, k)] - s * x[i]) / c;
+            x[i] = c * x[i] - s * l[(i, k)];
+        }
+    }
+    Ok(())
+}
+
+/// Remove training row/column 0 from a factored system: with the leading
+/// `n × n` block of `l` holding the factor of A, shifts the trailing
+/// block up-left and rank-1-updates it with the old first column, leaving
+/// the leading `(n−1) × (n−1)` block holding the factor of `A[1.., 1..]`.
+/// O(n²). `scratch` is caller-owned storage reused across calls.
+///
+/// Why this works: writing A = [[a, bᵀ], [b, C]] and L = [[λ, 0],
+/// [c, S]], we have C = S Sᵀ + c cᵀ — so the factor of C is exactly the
+/// rank-1 *update* of S with the old sub-diagonal column c. (No downdate
+/// is involved in dropping the oldest row; downdates arise when removing
+/// the *newest* row, which the sliding window never does.)
+pub fn chol_delete_first(l: &mut Mat, n: usize, scratch: &mut Vec<f64>) {
+    assert!(n >= 1 && n <= l.rows().min(l.cols()), "block exceeds factor");
+    scratch.clear();
+    for i in 1..n {
+        scratch.push(l[(i, 0)]);
+    }
+    for i in 1..n {
+        for j in 1..=i {
+            l[(i - 1, j - 1)] = l[(i, j)];
+        }
+    }
+    chol_update_in_place(l, scratch);
+}
+
+/// Append one training row to a factored system: with the leading
+/// `(n−1) × (n−1)` block of `l` already factoring A's leading block,
+/// writes factor row `n−1` so the leading `n × n` block factors the
+/// bordered matrix. `row` carries the new kernel row — cross-covariances
+/// to rows `0..n−1`, diagonal entry at `row[n−1]` — and is consumed as
+/// scratch. O(n²). Fails (factor unmodified) when the Schur complement
+/// is non-positive, i.e. the bordered matrix is not positive definite.
+pub fn chol_append_row(l: &mut Mat, row: &mut [f64]) -> Result<(), LinalgError> {
+    let n = row.len();
+    assert!(n >= 1 && n <= l.rows().min(l.cols()), "block exceeds factor");
+    let m = n - 1;
+    // forward solve on the leading block: w = L⁻¹ k
+    for i in 0..m {
+        let mut sum = row[i];
+        for k in 0..i {
+            sum -= l[(i, k)] * row[k];
+        }
+        row[i] = sum / l[(i, i)];
+    }
+    let d = row[m] - row[..m].iter().map(|w| w * w).sum::<f64>();
+    if d <= 0.0 {
+        return Err(LinalgError::NotPositiveDefinite(m, d));
+    }
+    for (j, &w) in row[..m].iter().enumerate() {
+        l[(m, j)] = w;
+    }
+    l[(m, m)] = d.sqrt();
+    Ok(())
+}
+
 /// Solve L x = b with L lower-triangular.
 pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
     let mut x = b.to_vec();
@@ -445,6 +560,135 @@ mod tests {
         let mut xt = bt;
         solve_lower_t_in_place(&l, &mut xt);
         assert_eq!(xt.to_vec(), solve_lower_t(&l, &bt));
+    }
+
+    /// Random-ish SPD matrix: A Aᵀ + d·I from a deterministic generator.
+    fn spd(n: usize, seed: u64, diag: f64) -> Mat {
+        let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                a[(i, j)] = (s >> 11) as f64 / (1u64 << 53) as f64 - 0.5;
+            }
+        }
+        let mut k = a.matmul(&a.t());
+        for i in 0..n {
+            k[(i, i)] += diag;
+        }
+        k
+    }
+
+    fn assert_lower_close(a: &Mat, b: &Mat, n: usize, tol: f64, ctx: &str) {
+        for i in 0..n {
+            for j in 0..=i {
+                assert!(
+                    (a[(i, j)] - b[(i, j)]).abs() < tol,
+                    "{ctx}: ({i},{j}) {} vs {}",
+                    a[(i, j)],
+                    b[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rank1_update_matches_refactorization() {
+        for n in [1usize, 2, 5, 9] {
+            let k = spd(n, 7 + n as u64, 1.0);
+            let v: Vec<f64> = (0..n).map(|i| 0.1 + 0.05 * i as f64).collect();
+            let mut l = k.cholesky().unwrap();
+            let mut x = v.clone();
+            chol_update_in_place(&mut l, &mut x);
+            let mut kv = k.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    kv[(i, j)] += v[i] * v[j];
+                }
+            }
+            let full = kv.cholesky().unwrap();
+            assert_lower_close(&l, &full, n, 1e-10, &format!("update n={n}"));
+        }
+    }
+
+    #[test]
+    fn rank1_downdate_inverts_update() {
+        for n in [2usize, 6, 10] {
+            let k = spd(n, 31 + n as u64, 2.0);
+            let v: Vec<f64> = (0..n).map(|i| 0.2 * ((i as f64) * 0.7).sin()).collect();
+            let l0 = k.cholesky().unwrap();
+            let mut l = l0.clone();
+            let mut x = v.clone();
+            chol_update_in_place(&mut l, &mut x);
+            let mut x = v.clone();
+            chol_downdate_in_place(&mut l, &mut x).unwrap();
+            assert_lower_close(&l, &l0, n, 1e-9, &format!("downdate n={n}"));
+        }
+    }
+
+    #[test]
+    fn downdate_detects_indefinite_result() {
+        // removing more mass than the matrix holds must fail, not NaN
+        let k = spd(4, 3, 0.5);
+        let mut l = k.cholesky().unwrap();
+        let mut x = vec![100.0, 0.0, 0.0, 0.0];
+        assert!(matches!(
+            chol_downdate_in_place(&mut l, &mut x),
+            Err(LinalgError::NotPositiveDefinite(..))
+        ));
+    }
+
+    #[test]
+    fn delete_first_matches_submatrix_factor() {
+        for n in [2usize, 5, 8] {
+            let k = spd(n, 11 + n as u64, 1.5);
+            let mut l = k.cholesky().unwrap();
+            let mut scratch = Vec::new();
+            chol_delete_first(&mut l, n, &mut scratch);
+            let sub = Mat::from_fn(n - 1, n - 1, |i, j| k[(i + 1, j + 1)]);
+            let full = sub.cholesky().unwrap();
+            assert_lower_close(&l, &full, n - 1, 1e-10, &format!("delete_first n={n}"));
+        }
+    }
+
+    #[test]
+    fn append_row_matches_bordered_factor() {
+        for n in [2usize, 5, 9] {
+            let k = spd(n, 23 + n as u64, 1.2);
+            // factor the leading (n-1) block inside an n×n scratch
+            let lead = Mat::from_fn(n - 1, n - 1, |i, j| k[(i, j)]);
+            let lf = lead.cholesky().unwrap();
+            let mut l = Mat::zeros(n, n);
+            for i in 0..n - 1 {
+                for j in 0..=i {
+                    l[(i, j)] = lf[(i, j)];
+                }
+            }
+            let mut row: Vec<f64> = (0..n).map(|j| k[(n - 1, j)]).collect();
+            chol_append_row(&mut l, &mut row).unwrap();
+            let full = k.cholesky().unwrap();
+            assert_lower_close(&l, &full, n, 1e-10, &format!("append n={n}"));
+        }
+    }
+
+    #[test]
+    fn delete_then_append_slides_a_window() {
+        // the exact sliding-window composite the incremental GP performs:
+        // factor over rows 0..n of a big SPD matrix, slide to rows 1..n+1
+        let big = spd(7, 77, 1.5);
+        let n = 5;
+        let window = |s: usize| Mat::from_fn(n, n, |i, j| big[(i + s, j + s)]);
+        let mut l = window(0).cholesky().unwrap();
+        let mut scratch = Vec::new();
+        for s in 1..3 {
+            chol_delete_first(&mut l, n, &mut scratch);
+            let mut row: Vec<f64> = (0..n).map(|j| big[(s + n - 1, s + j)]).collect();
+            chol_append_row(&mut l, &mut row).unwrap();
+            let full = window(s).cholesky().unwrap();
+            assert_lower_close(&l, &full, n, 1e-9, &format!("slide s={s}"));
+        }
     }
 
     #[test]

@@ -3,7 +3,9 @@
 
 use zoe_shaper::config::KernelKind;
 use zoe_shaper::experiments::fig2;
-use zoe_shaper::forecast::{arima::Arima, gp_native::GpNative, last_value::LastValue, Forecaster};
+use zoe_shaper::forecast::{
+    anon_refs, arima::Arima, gp_native::GpNative, last_value::LastValue, Forecaster,
+};
 
 fn corpus(n: usize, len: usize, seed: u64) -> Vec<Vec<f64>> {
     fig2::corpus(n, len, seed)
@@ -22,7 +24,7 @@ fn all_models() -> Vec<Box<dyn Forecaster>> {
 fn all_models_produce_finite_forecasts() {
     let series = corpus(20, 60, 1);
     for mut m in all_models() {
-        let fs = m.forecast(&series);
+        let fs = m.forecast(&anon_refs(&series));
         assert_eq!(fs.len(), series.len(), "{}", m.name());
         for f in fs {
             assert!(f.mean.is_finite(), "{}", m.name());
@@ -35,7 +37,7 @@ fn all_models_produce_finite_forecasts() {
 fn models_beat_noise_on_constant_series() {
     let series: Vec<Vec<f64>> = (0..5).map(|i| vec![0.3 + 0.01 * i as f64; 40]).collect();
     for mut m in all_models() {
-        let fs = m.forecast(&series);
+        let fs = m.forecast(&anon_refs(&series));
         for (i, f) in fs.iter().enumerate() {
             let truth = 0.3 + 0.01 * i as f64;
             assert!(
@@ -69,7 +71,7 @@ fn gp_and_arima_beat_last_value_on_periodic() {
         let mut errs = Vec::new();
         for t in 60..80 {
             let views: Vec<Vec<f64>> = series.iter().map(|s| s[..t].to_vec()).collect();
-            let fs = m.forecast(&views);
+            let fs = m.forecast(&anon_refs(&views));
             for (i, f) in fs.iter().enumerate() {
                 errs.push((f.mean - series[i][t]).abs());
             }
@@ -139,6 +141,6 @@ fn variance_rises_on_regime_change() {
     for (i, v) in shocked.iter_mut().enumerate().skip(25) {
         *v = 0.4 + 0.12 * (i as f64 - 24.0);
     }
-    let fs = gp.forecast(&[calm, shocked]);
+    let fs = gp.forecast(&anon_refs(&[calm, shocked]));
     assert!(fs[1].var > fs[0].var * 2.0, "{} vs {}", fs[1].var, fs[0].var);
 }

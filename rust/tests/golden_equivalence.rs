@@ -89,6 +89,42 @@ fn incremental_matches_reference_with_model_forecaster() {
 }
 
 #[test]
+fn incremental_matches_reference_with_gp_native() {
+    // PR 3's zero-copy view pipeline under the batched GP: both monitor
+    // gather modes feed the forecaster identical arena views in
+    // identical order, so the RunReports must be bit-for-bit equal
+    let mut cfg = tier1_cfg();
+    cfg.workload.num_apps = 25;
+    cfg.workload.runtime_scale = 0.5;
+    cfg.shaper.policy = Policy::Pessimistic;
+    cfg.forecast.kind = ForecasterKind::GpNative;
+    cfg.forecast.grace_period_s = 180.0;
+    let inc = run_simulation_with(&cfg, None, "gp", MonitorMode::Incremental).unwrap();
+    let reference = run_simulation_with(&cfg, None, "gp", MonitorMode::ReferenceScan).unwrap();
+    assert_reports_identical(&inc, &reference, "gp-native");
+    assert!(inc.forecasts_issued > 0, "grace period never ended: {}", inc.summary());
+}
+
+#[test]
+fn incremental_matches_reference_with_gp_incremental() {
+    // the cached sliding-GP pipeline: per-(component, resource) factor
+    // caches evolve with the run, so this additionally pins that cache
+    // state (slides, epochs, resets on preemption) is a pure function of
+    // the series stream — identical under both monitor gather modes
+    let mut cfg = tier1_cfg();
+    cfg.workload.num_apps = 25;
+    cfg.workload.runtime_scale = 0.5;
+    cfg.shaper.policy = Policy::Pessimistic;
+    cfg.forecast.kind = ForecasterKind::GpIncremental;
+    cfg.forecast.grace_period_s = 180.0;
+    let inc = run_simulation_with(&cfg, None, "gp-incr", MonitorMode::Incremental).unwrap();
+    let reference =
+        run_simulation_with(&cfg, None, "gp-incr", MonitorMode::ReferenceScan).unwrap();
+    assert_reports_identical(&inc, &reference, "gp-incremental");
+    assert!(inc.forecasts_issued > 0, "grace period never ended: {}", inc.summary());
+}
+
+#[test]
 fn incremental_matches_reference_across_seeds() {
     for seed in [7u64, 77, 777] {
         let mut cfg = tier1_cfg();

@@ -7,7 +7,7 @@ use std::sync::Arc;
 use zoe_shaper::config::KernelKind;
 use zoe_shaper::forecast::gp_native::{gp_posterior, GpNative, NOISE};
 use zoe_shaper::forecast::gp_pjrt::GpPjrt;
-use zoe_shaper::forecast::{build_patterns, Forecaster};
+use zoe_shaper::forecast::{anon_refs, build_patterns, Forecaster};
 use zoe_shaper::runtime::{GpInputs, Runtime};
 use zoe_shaper::trace::patterns::Pattern;
 use zoe_shaper::util::rng::Pcg;
@@ -93,8 +93,9 @@ fn forecaster_outputs_agree_end_to_end() {
     let series = corpus(40, 35, 7); // > one slab to exercise chunking
     let mut native = GpNative::new(KernelKind::Exp, h);
     let mut pjrt = GpPjrt::new(rt, KernelKind::Exp, h, 32).unwrap();
-    let fn_ = native.forecast(&series);
-    let fp = pjrt.forecast(&series);
+    let refs = anon_refs(&series);
+    let fn_ = native.forecast(&refs);
+    let fp = pjrt.forecast(&refs);
     assert_eq!(fn_.len(), fp.len());
     for (i, (a, b)) in fn_.iter().zip(&fp).enumerate() {
         assert!(
@@ -118,7 +119,7 @@ fn pjrt_single_vs_batch_paths_agree() {
     let h = 10;
     let series = corpus(5, 30, 9);
     let mut gp = GpPjrt::new(rt, KernelKind::Rbf, h, 32).unwrap();
-    let batch = gp.forecast_batch(&series).unwrap();
+    let batch = gp.forecast_batch(&anon_refs(&series)).unwrap();
     for (i, s) in series.iter().enumerate() {
         let single = gp.forecast_one(s).unwrap();
         assert!((single.mean - batch[i].mean).abs() < 1e-4, "series {i} mean");

@@ -1,0 +1,203 @@
+//! Property tests for the sliding-window incremental GP (PR 3):
+//!
+//! 1. the rank-1 Cholesky update/downdate primitives must agree with
+//!    full refactorization to ≤ 1e-9 on kernel matrices built from
+//!    random utilization windows, for both kernels and every grid
+//!    lengthscale;
+//! 2. the end-to-end incremental forecaster (`SlideMode::Incremental`)
+//!    must agree with its per-tick-refactorize twin
+//!    (`SlideMode::Refactorize` — same epochs, same frozen
+//!    standardizer, factor rebuilt from scratch every tick) to ≤ 1e-9
+//!    over long random sliding drives, while performing **zero** full
+//!    refactorizations on the slide path (refits only at the epoch
+//!    cadence).
+
+use zoe_shaper::config::KernelKind;
+use zoe_shaper::forecast::gp_incremental::{GpIncremental, SlideMode};
+use zoe_shaper::forecast::gp_native::{LS_GRID, NOISE};
+use zoe_shaper::forecast::{build_patterns, Forecaster, SeriesRef};
+use zoe_shaper::trace::patterns::Pattern;
+use zoe_shaper::util::linalg::{chol_downdate_in_place, chol_update_in_place, Mat};
+use zoe_shaper::util::rng::Pcg;
+
+const TOL: f64 = 1e-9;
+
+fn random_series(rng: &mut Pcg, len: usize) -> Vec<f64> {
+    if rng.chance(0.7) {
+        let p = Pattern::sample(rng, true);
+        (0..len as u64).map(|s| p.at_step(s)).collect()
+    } else {
+        let mut v = rng.uniform(0.1, 0.9);
+        (0..len)
+            .map(|_| {
+                v = (v + 0.05 * rng.normal()).clamp(0.0, 1.0);
+                v
+            })
+            .collect()
+    }
+}
+
+/// The GP kernels, restated (gp_native keeps them crate-private).
+fn kern(kind: KernelKind, d2: f64, ls: f64) -> f64 {
+    match kind {
+        KernelKind::Exp => (-(d2 + 1e-12).sqrt() / ls).exp(),
+        KernelKind::Rbf => (-0.5 * d2 / (ls * ls)).exp(),
+    }
+}
+
+/// Kernel matrix over the Eq. 5 patterns of a series window, exactly as
+/// the forecasting engines build it (unit signal variance + noise +
+/// jitter on the diagonal).
+fn kernel_matrix(kind: KernelKind, series: &[f64], h: usize, ls: f64) -> Mat {
+    let (x, y, _, _) = build_patterns(series, h);
+    let n = y.len();
+    let p = h + 1;
+    let row = |i: usize| &x[i * p..(i + 1) * p];
+    let mut k = Mat::from_fn(n, n, |i, j| {
+        let d2: f64 = row(i).iter().zip(row(j)).map(|(a, b)| (a - b) * (a - b)).sum();
+        kern(kind, d2, ls)
+    });
+    for i in 0..n {
+        k[(i, i)] += NOISE + 1e-6;
+    }
+    k
+}
+
+fn assert_lower_close(a: &Mat, b: &Mat, n: usize, ctx: &str) {
+    for i in 0..n {
+        for j in 0..=i {
+            let (x, y) = (a[(i, j)], b[(i, j)]);
+            assert!(
+                (x - y).abs() <= TOL * y.abs().max(1.0),
+                "{ctx}: ({i},{j}) {x} vs {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn rank1_update_and_downdate_match_refactorization_on_gp_kernels() {
+    let mut rng = Pcg::seeded(404);
+    let h = 10;
+    let dim_scale = ((h + 1) as f64).sqrt();
+    let mut checked = 0usize;
+    for case in 0..12 {
+        let series = random_series(&mut rng, 2 * h + case);
+        for kind in [KernelKind::Exp, KernelKind::Rbf] {
+            for &ls_rel in &LS_GRID {
+                let ls = ls_rel * dim_scale;
+                let k = kernel_matrix(kind, &series, h, ls);
+                let n = k.rows();
+                let Ok(l0) = k.cholesky() else { continue };
+                // a perturbation of plausible kernel magnitude
+                let v: Vec<f64> =
+                    (0..n).map(|i| 0.15 * ((i as f64 + case as f64) * 0.9).sin()).collect();
+                // update: chol(K + vvᵀ) via rank-1 vs refactorization
+                let mut up = l0.clone();
+                let mut x = v.clone();
+                chol_update_in_place(&mut up, &mut x);
+                let mut kv = k.clone();
+                for i in 0..n {
+                    for j in 0..n {
+                        kv[(i, j)] += v[i] * v[j];
+                    }
+                }
+                let full = kv.cholesky().expect("K + vvᵀ stays PD");
+                assert_lower_close(&up, &full, n, &format!("update {kind:?} ls={ls_rel}"));
+                // downdate: remove vvᵀ again, recovering chol(K)
+                let mut x = v.clone();
+                chol_downdate_in_place(&mut up, &mut x)
+                    .expect("downdating what was updated stays PD");
+                assert_lower_close(&up, &l0, n, &format!("downdate {kind:?} ls={ls_rel}"));
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked >= 80, "too few successful cases: {checked}");
+}
+
+/// Drive two GpIncremental instances — rank-1 slide vs per-tick full
+/// refactorization — over identical keyed sliding series and demand
+/// ≤ 1e-9 agreement on every forecast.
+#[test]
+fn incremental_slide_matches_per_tick_refactorization() {
+    let h = 10;
+    let window = 2 * h;
+    let ticks = 50usize;
+    let n_series = 8usize;
+    for kind in [KernelKind::Exp, KernelKind::Rbf] {
+        let mut rng = Pcg::seeded(77 + kind as u64);
+        let corpus: Vec<Vec<f64>> =
+            (0..n_series).map(|_| random_series(&mut rng, window + ticks)).collect();
+        let mut inc = GpIncremental::new(kind, h); // SlideMode::Incremental
+        let mut refac = GpIncremental::new(kind, h).with_mode(SlideMode::Refactorize);
+        let mut compared = 0usize;
+        let mut t = window;
+        while t <= window + ticks {
+            let views: Vec<SeriesRef<'_>> = corpus
+                .iter()
+                .enumerate()
+                .map(|(i, s)| SeriesRef::keyed(i as u64, t as u64, &s[..t]))
+                .collect();
+            let a = inc.forecast(&views);
+            let b = refac.forecast(&views);
+            assert_eq!(a.len(), b.len());
+            for (i, (fa, fb)) in a.iter().zip(&b).enumerate() {
+                assert!(
+                    (fa.mean - fb.mean).abs() <= TOL * fb.mean.abs().max(1.0),
+                    "{kind:?} t={t} series {i}: mean {} vs {}",
+                    fa.mean,
+                    fb.mean
+                );
+                assert!(
+                    (fa.var - fb.var).abs() <= TOL * fb.var.abs().max(1.0),
+                    "{kind:?} t={t} series {i}: var {} vs {}",
+                    fa.var,
+                    fb.var
+                );
+                compared += 1;
+            }
+            // vary the stride: multi-sample slides must replay exactly
+            t += 1 + (t % 3);
+        }
+        assert!(compared > 100, "{kind:?}: too few comparisons: {compared}");
+
+        // the slide path must never refactorize per tick, and refit only
+        // at the epoch cadence (refresh_every slides per series)
+        let si = inc.stats();
+        let sr = refac.stats();
+        assert_eq!(si.refactorizations, 0, "{kind:?}: slide path refactorized");
+        assert!(si.slides > 0, "{kind:?}: no slides exercised");
+        assert!(sr.refactorizations > 0, "{kind:?}: baseline never refactorized");
+        // identical epoch schedules: both modes refit in lockstep
+        assert_eq!(si.refits, sr.refits, "{kind:?}: epoch schedules diverged");
+        let max_epochs = n_series as u64 * (2 + ticks as u64 / inc.refresh_every as u64);
+        assert!(
+            si.refits <= max_epochs,
+            "{kind:?}: {} refits exceeds the epoch cadence bound {max_epochs}",
+            si.refits
+        );
+    }
+}
+
+/// Forecast quality sanity: the incremental engine must track a
+/// predictable periodic signal about as well as anything in-tree.
+#[test]
+fn incremental_forecasts_periodic_signal() {
+    let h = 10;
+    let n = 80;
+    let mut rng = Pcg::seeded(5);
+    let s: Vec<f64> =
+        (0..n).map(|i| 0.45 + 0.2 * (i as f64 / 6.0).sin() + 0.01 * rng.normal()).collect();
+    let mut gp = GpIncremental::new(KernelKind::Exp, h);
+    let mut worst: f64 = 0.0;
+    for t in (2 * h)..(n - 1) {
+        let f = gp.forecast(&[SeriesRef::keyed(0, t as u64, &s[..t])]);
+        let err = (f[0].mean - s[t]).abs();
+        worst = worst.max(err);
+        assert!(f[0].var > 0.0);
+    }
+    assert!(worst < 0.25, "worst one-step error {worst} too large");
+    let st = gp.stats();
+    assert!(st.slides > 0 && st.refits > 0);
+}

@@ -6,7 +6,7 @@
 
 use zoe_shaper::config::KernelKind;
 use zoe_shaper::forecast::gp_native::{gp_posterior, GpNative, GpWorkspace, LS_GRID, NOISE};
-use zoe_shaper::forecast::{build_patterns, Forecaster};
+use zoe_shaper::forecast::{anon_refs, build_patterns, Forecaster};
 use zoe_shaper::trace::patterns::Pattern;
 use zoe_shaper::util::rng::Pcg;
 
@@ -119,11 +119,12 @@ fn batch_deterministic_across_worker_counts() {
             random_series(&mut rng, len)
         })
         .collect();
+    let refs = anon_refs(&batch);
     for kind in [KernelKind::Exp, KernelKind::Rbf] {
-        let reference = GpNative::new(kind, 10).with_workers(1).forecast_batch(&batch);
+        let reference = GpNative::new(kind, 10).with_workers(1).forecast_batch(&refs);
         assert_eq!(reference.len(), batch.len());
         for w in [2usize, 8] {
-            let out = GpNative::new(kind, 10).with_workers(w).forecast_batch(&batch);
+            let out = GpNative::new(kind, 10).with_workers(w).forecast_batch(&refs);
             assert_eq!(out, reference, "{kind:?} with {w} workers diverged");
         }
     }
@@ -133,8 +134,9 @@ fn batch_deterministic_across_worker_counts() {
 fn trait_batch_equals_direct_batch() {
     let mut rng = Pcg::seeded(17);
     let batch: Vec<Vec<f64>> = (0..24).map(|_| random_series(&mut rng, 35)).collect();
+    let refs = anon_refs(&batch);
     let mut gp = GpNative::new(KernelKind::Exp, 10);
-    let via_trait = gp.forecast(&batch);
-    let direct = gp.forecast_batch(&batch);
+    let via_trait = gp.forecast(&refs);
+    let direct = gp.forecast_batch(&refs);
     assert_eq!(via_trait, direct);
 }

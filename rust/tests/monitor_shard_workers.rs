@@ -19,7 +19,8 @@ fn sharded_monitor_pass_is_worker_count_independent() {
     cfg.shaper.policy = Policy::Pessimistic;
     cfg.forecast.kind = ForecasterKind::Oracle;
     // force the sharded path even on this small world (the default
-    // threshold of 1024 rows would keep everything inline)
+    // threshold of 1024 rows would keep everything inline). This now
+    // also exercises the sharded oracle demand-building pass (PR 3).
     std::env::set_var("ZOE_SHARD_THRESHOLD", "1");
     let mut reports = Vec::new();
     for workers in ["1", "2", "8"] {
@@ -29,8 +30,42 @@ fn sharded_monitor_pass_is_worker_count_independent() {
             run_simulation_with(&cfg, None, "w", MonitorMode::Incremental).unwrap(),
         ));
     }
+
+    // and with a real batched forecaster: the GP forecast batch itself
+    // shards by ZOE_WORKERS on top of the monitor + demand passes
+    let mut gp_cfg = SimConfig::small();
+    gp_cfg.workload.num_apps = 20;
+    gp_cfg.cluster.hosts = 4;
+    gp_cfg.workload.runtime_scale = 0.5;
+    gp_cfg.shaper.policy = Policy::Pessimistic;
+    gp_cfg.forecast.kind = ForecasterKind::GpNative;
+    gp_cfg.forecast.grace_period_s = 180.0;
+    let mut gp_reports = Vec::new();
+    for workers in ["1", "2", "8"] {
+        std::env::set_var("ZOE_WORKERS", workers);
+        gp_reports.push((
+            workers,
+            run_simulation_with(&gp_cfg, None, "gpw", MonitorMode::Incremental).unwrap(),
+        ));
+    }
     std::env::remove_var("ZOE_WORKERS");
     std::env::remove_var("ZOE_SHARD_THRESHOLD");
+
+    let (_, gp_first) = &gp_reports[0];
+    for (workers, r) in &gp_reports[1..] {
+        assert_eq!(gp_first.completed, r.completed, "gp ZOE_WORKERS={workers}");
+        assert_eq!(gp_first.oom_events, r.oom_events, "gp ZOE_WORKERS={workers}");
+        assert_eq!(
+            gp_first.turnaround.mean.to_bits(),
+            r.turnaround.mean.to_bits(),
+            "gp ZOE_WORKERS={workers}: turnaround.mean"
+        );
+        assert_eq!(
+            gp_first.mem_slack.mean.to_bits(),
+            r.mem_slack.mean.to_bits(),
+            "gp ZOE_WORKERS={workers}: mem_slack.mean"
+        );
+    }
 
     let (_, first) = &reports[0];
     for (workers, r) in &reports[1..] {

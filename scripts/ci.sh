@@ -10,6 +10,8 @@ cargo build --release
 # compile coverage for harness=false benches and the examples, which
 # `build`/`test` alone never touch
 cargo build --release --benches --examples
+# and under the bench profile specifically, so bench-only code can't rot
+cargo bench --no-run
 cargo test -q
 
 # lint gate: clippy across every target (skipped gracefully on
