@@ -63,6 +63,8 @@ fn bench_scale(b: &mut Bench, hosts: usize, apps: usize) {
         b.run("placer_worst_fit_select_1000hosts", || cluster.worst_fit(1.0, 4.0));
         b.run("placer_first_fit_select_1000hosts", || cluster.first_fit(1.0, 4.0));
         b.run("placer_best_fit_select_1000hosts", || cluster.best_fit(1.0, 4.0));
+        b.run("placer_cpu_aware_select_1000hosts", || cluster.cpu_aware_fit(1.0, 4.0));
+        b.run("placer_dot_product_select_1000hosts", || cluster.dot_product_fit(1.0, 4.0));
     }
 }
 

@@ -137,6 +137,54 @@ impl FitTree {
         self.search(2 * k, cpus, mem)
             .or_else(|| self.search(2 * k + 1, cpus, mem))
     }
+
+    /// Fitting host maximizing `wc·free_cpu + wm·free_mem` (weights must
+    /// be non-negative), ties resolved to the highest host id. Branch &
+    /// bound on the per-node maxima: `wc·max_cpu + wm·max_mem` is an
+    /// upper bound on any leaf's score below, exact at leaves. The
+    /// right-first descent visits higher host ids before lower ones, so
+    /// requiring a *strictly* better score to replace the incumbent
+    /// yields the highest-id maximizer. Typically logarithmic; worst
+    /// case O(n) like `first_fit` (the per-dimension maxima and the
+    /// score bound prune imperfectly).
+    fn max_weighted_fit(&self, cpus: f64, mem: f64, wc: f64, wm: f64) -> Option<usize> {
+        debug_assert!(wc >= 0.0 && wm >= 0.0, "weights must be non-negative");
+        let mut best: Option<(f64, usize)> = None;
+        self.weighted_search(1, cpus, mem, wc, wm, &mut best);
+        best.map(|(_, h)| h)
+    }
+
+    fn weighted_search(
+        &self,
+        k: usize,
+        cpus: f64,
+        mem: f64,
+        wc: f64,
+        wm: f64,
+        best: &mut Option<(f64, usize)>,
+    ) {
+        if !self.fits(k, cpus, mem) {
+            return; // also prunes padding leaves (-inf maxima)
+        }
+        // `fits` passed, so both maxima are finite: no 0 · inf = NaN
+        let bound = wc * self.cpu[k] + wm * self.mem[k];
+        if let Some((score, _)) = *best {
+            if bound <= score {
+                return;
+            }
+        }
+        if k >= self.base {
+            let i = k - self.base;
+            if i < self.n {
+                *best = Some((bound, i));
+            }
+            return;
+        }
+        // higher ids first, strict improvement required: ties keep the
+        // highest host id (mirrors `worst_fit`'s tie-break)
+        self.weighted_search(2 * k + 1, cpus, mem, wc, wm, best);
+        self.weighted_search(2 * k, cpus, mem, wc, wm, best);
+    }
 }
 
 /// The whole cluster: hosts plus the arena-backed placement table and
@@ -378,6 +426,25 @@ impl Cluster {
         None
     }
 
+    /// CPU-aware fit: the fitting host with the most free CPU — the CPU
+    /// analogue of `worst_fit`, for CPU-bound workloads where memory
+    /// spread matters less than core spread. Served by the segment
+    /// tree's weighted search (weights (1, 0)); ties on free CPU resolve
+    /// to the highest host id, matching `worst_fit`'s tie-break.
+    pub fn cpu_aware_fit(&self, cpus: f64, mem: f64) -> Option<HostId> {
+        self.fit_tree.max_weighted_fit(cpus, mem, 1.0, 0.0)
+    }
+
+    /// Dot-product fit: the fitting host maximizing the alignment
+    /// `cpus·free_cpu + mem·free_mem` between the request vector and the
+    /// host's free-capacity vector (Tetris-style vector packing: demand
+    /// lands where capacity is shaped like it). Served by the segment
+    /// tree's weighted search (weights = the request itself); ties
+    /// resolve to the highest host id.
+    pub fn dot_product_fit(&self, cpus: f64, mem: f64) -> Option<HostId> {
+        self.fit_tree.max_weighted_fit(cpus, mem, cpus.max(0.0), mem.max(0.0))
+    }
+
     /// Aggregate allocated fraction of total capacity: (cpu, mem) in [0,1].
     pub fn allocation_fraction(&self) -> (f64, f64) {
         let (mut ac, mut tc, mut am, mut tm) = (0.0, 0.0, 0.0, 0.0);
@@ -526,6 +593,39 @@ mod tests {
         assert_eq!(c.worst_fit(1.0, 1.0), Some(3));
         assert_eq!(c.best_fit(1.0, 1.0), Some(0));
         assert_eq!(c.first_fit(1.0, 1.0), Some(0));
+        // the weighted searches share worst_fit's highest-id tie-break
+        assert_eq!(c.cpu_aware_fit(1.0, 1.0), Some(3));
+        assert_eq!(c.dot_product_fit(1.0, 1.0), Some(3));
+    }
+
+    #[test]
+    fn cpu_aware_fit_follows_free_cpu_not_free_mem() {
+        let mut c = cluster(3);
+        assert!(c.place(0, 2, 6.0, 1.0, 0.0)); // host 2: little cpu, much mem
+        assert!(c.place(1, 0, 1.0, 20.0, 0.0)); // host 0: much cpu, little mem
+        // worst_fit (memory) prefers host 1 or 2; cpu-aware prefers 0 vs 1:
+        // host 0 has 7 free cpus, host 1 has 8 -> host 1; after loading
+        // host 1's cpu, host 0 wins despite its low free memory
+        assert_eq!(c.cpu_aware_fit(1.0, 1.0), Some(1));
+        assert!(c.place(2, 1, 4.0, 1.0, 0.0)); // host 1 down to 4 free cpus
+        assert_eq!(c.cpu_aware_fit(1.0, 1.0), Some(0));
+        // infeasible memory on host 0 pushes the choice to host 1
+        assert_eq!(c.cpu_aware_fit(1.0, 16.0), Some(1));
+        assert_eq!(c.cpu_aware_fit(100.0, 1.0), None);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dot_product_fit_aligns_request_with_free_vector() {
+        let mut c = cluster(2);
+        assert!(c.place(0, 0, 6.0, 2.0, 0.0)); // host 0 free: (2, 30)
+        assert!(c.place(1, 1, 1.0, 26.0, 0.0)); // host 1 free: (7, 6)
+        // memory-heavy request aligns with host 0's memory-rich residue
+        assert_eq!(c.dot_product_fit(0.5, 4.0), Some(0)); // 1+120 vs 3.5+24
+        // cpu-heavy request aligns with host 1's cpu-rich residue
+        assert_eq!(c.dot_product_fit(2.0, 0.1), Some(1)); // 4+3 vs 14+0.6
+        assert_eq!(c.dot_product_fit(8.0, 1.0), None);
+        c.check_invariants().unwrap();
     }
 
     #[test]

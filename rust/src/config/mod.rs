@@ -116,8 +116,18 @@ pub enum SchedulerKind {
     /// Strict FIFO by submit time with head-of-line blocking (§3 / [42]).
     Fifo,
     /// FIFO with aggressive backfill: when the head is blocked, later
-    /// queued applications that fit may start (no reservations).
+    /// queued applications that fit may start (no reservations; bounded
+    /// overtaking — see `scheduler::MAX_HEAD_OVERTAKES`).
     Backfill,
+    /// FIFO with conservative backfill: the blocked head holds a
+    /// start-time reservation and only applications whose worst-case
+    /// completion precedes it may jump the queue.
+    ReservationBackfill,
+    /// Shortest job first: least *total* reserved work, then submit time.
+    Sjf,
+    /// Shortest remaining processing time: least *remaining* reserved
+    /// work at (re-)enqueue, then submit time.
+    Srpt,
 }
 
 impl SchedulerKind {
@@ -126,6 +136,11 @@ impl SchedulerKind {
         match s.to_ascii_lowercase().as_str() {
             "fifo" => Some(Self::Fifo),
             "backfill" => Some(Self::Backfill),
+            "reservation-backfill" | "reservationbackfill" | "resv-backfill" => {
+                Some(Self::ReservationBackfill)
+            }
+            "sjf" | "shortest-job-first" => Some(Self::Sjf),
+            "srpt" => Some(Self::Srpt),
             _ => None,
         }
     }
@@ -135,8 +150,20 @@ impl SchedulerKind {
         match self {
             Self::Fifo => "fifo",
             Self::Backfill => "backfill",
+            Self::ReservationBackfill => "reservation-backfill",
+            Self::Sjf => "sjf",
+            Self::Srpt => "srpt",
         }
     }
+
+    /// All kinds, in sweep/display order (defaults first).
+    pub const ALL: [SchedulerKind; 5] = [
+        SchedulerKind::Fifo,
+        SchedulerKind::Backfill,
+        SchedulerKind::ReservationBackfill,
+        SchedulerKind::Sjf,
+        SchedulerKind::Srpt,
+    ];
 }
 
 /// Which placement heuristic picks a host for each new component
@@ -149,6 +176,11 @@ pub enum PlacerKind {
     FirstFit,
     /// Least free memory that fits — packs tightly.
     BestFit,
+    /// Most free CPU that fits — spreads CPU-bound load.
+    CpuAware,
+    /// Request vector aligned with per-host free (cpu, mem) — largest
+    /// dot product wins (Tetris-style vector packing).
+    DotProduct,
 }
 
 impl PlacerKind {
@@ -158,6 +190,8 @@ impl PlacerKind {
             "worst-fit" | "worstfit" | "worst" => Some(Self::WorstFit),
             "first-fit" | "firstfit" | "first" => Some(Self::FirstFit),
             "best-fit" | "bestfit" | "best" => Some(Self::BestFit),
+            "cpu-aware" | "cpuaware" | "cpu" => Some(Self::CpuAware),
+            "dot-product" | "dotproduct" | "dot" => Some(Self::DotProduct),
             _ => None,
         }
     }
@@ -168,8 +202,19 @@ impl PlacerKind {
             Self::WorstFit => "worst-fit",
             Self::FirstFit => "first-fit",
             Self::BestFit => "best-fit",
+            Self::CpuAware => "cpu-aware",
+            Self::DotProduct => "dot-product",
         }
     }
+
+    /// All kinds, in sweep/display order (defaults first).
+    pub const ALL: [PlacerKind; 5] = [
+        PlacerKind::WorstFit,
+        PlacerKind::FirstFit,
+        PlacerKind::BestFit,
+        PlacerKind::CpuAware,
+        PlacerKind::DotProduct,
+    ];
 }
 
 /// Scheduling-policy selection: which scheduler and placer the engine
@@ -590,10 +635,28 @@ mod tests {
         assert_eq!(KernelKind::parse("rbf"), Some(KernelKind::Rbf));
         assert_eq!(Policy::Baseline.name(), "baseline");
         assert_eq!(SchedulerKind::parse("Backfill"), Some(SchedulerKind::Backfill));
+        assert_eq!(SchedulerKind::parse("srpt"), Some(SchedulerKind::Srpt));
+        assert_eq!(SchedulerKind::parse("SJF"), Some(SchedulerKind::Sjf));
+        assert_eq!(
+            SchedulerKind::parse("reservation-backfill"),
+            Some(SchedulerKind::ReservationBackfill)
+        );
+        assert_eq!(SchedulerKind::ReservationBackfill.name(), "reservation-backfill");
         assert_eq!(PlacerKind::parse("best-fit"), Some(PlacerKind::BestFit));
         assert_eq!(PlacerKind::parse("worstfit"), Some(PlacerKind::WorstFit));
+        assert_eq!(PlacerKind::parse("cpu-aware"), Some(PlacerKind::CpuAware),);
+        assert_eq!(PlacerKind::parse("dot-product"), Some(PlacerKind::DotProduct));
         assert_eq!(PlacerKind::FirstFit.name(), "first-fit");
-        assert!(SchedulerKind::parse("srpt").is_none());
+        assert_eq!(PlacerKind::DotProduct.name(), "dot-product");
+        assert!(SchedulerKind::parse("lottery").is_none());
+        assert!(PlacerKind::parse("random").is_none());
+        // every kind round-trips through its display name
+        for k in SchedulerKind::ALL {
+            assert_eq!(SchedulerKind::parse(k.name()), Some(k));
+        }
+        for p in PlacerKind::ALL {
+            assert_eq!(PlacerKind::parse(p.name()), Some(p));
+        }
     }
 
     #[test]

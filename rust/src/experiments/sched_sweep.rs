@@ -1,69 +1,183 @@
 //! Scheduler × placer policy sweep — the scenario axis the control-plane
-//! traits open up (PR 2). Runs the same seeded workload under every
-//! (scheduler, placer) combination and reports turnaround, slack,
-//! failures and admission behavior side by side, the way Fig. 3 compares
-//! shaping policies.
+//! traits open up (PR 2, grown into a policy laboratory in PR 4). Runs
+//! the same seeded workload under every (scheduler, placer) combination,
+//! on the configured cluster **and** on a derived heterogeneous variant
+//! (host-class skew is where placement policies separate), and reports
+//! turnaround, the fairness pair (wait, stretch), slack, failures and
+//! admission behavior side by side, the way Fig. 3 compares shaping
+//! policies.
+//!
+//! Besides the rendered table, [`append_json`] appends one machine-
+//! readable run entry — every cell's summary keyed by the git revision,
+//! like `util::bench::Bench::append_json` — so successive sweeps
+//! accumulate a cross-PR trajectory in `SCHED_SWEEP.json`.
 
-use crate::config::{PlacerKind, SchedulerKind, SimConfig};
+use crate::config::{HostClass, PlacerKind, SchedulerKind, SimConfig};
 use crate::metrics::RunReport;
 use crate::sim::engine::run_simulation;
+use crate::util::json::{obj, Json};
 
 /// All scheduler kinds, sweep order.
-pub const SCHEDULERS: [SchedulerKind; 2] = [SchedulerKind::Fifo, SchedulerKind::Backfill];
+pub const SCHEDULERS: [SchedulerKind; 5] = SchedulerKind::ALL;
 
 /// All placer kinds, sweep order.
-pub const PLACERS: [PlacerKind; 3] =
-    [PlacerKind::WorstFit, PlacerKind::FirstFit, PlacerKind::BestFit];
+pub const PLACERS: [PlacerKind; 5] = PlacerKind::ALL;
 
-/// Run every (scheduler, placer) combination on the same workload.
-/// Reports come back in sweep order, named `<scheduler>/<placer>`.
-pub fn run(base: &SimConfig) -> anyhow::Result<Vec<RunReport>> {
-    run_filtered(base, None, None)
+/// Cluster-shape scenarios the sweep covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// The configured cluster as-is (homogeneous unless the config
+    /// already declares extra classes).
+    Uniform,
+    /// The configured cluster reshaped into three host classes (see
+    /// [`heterogeneous_variant`]).
+    Heterogeneous,
 }
 
-/// Like [`run`], but restricted to one scheduler and/or one placer when
-/// given (`--scheduler`/`--placer` on the `sched-sweep` subcommand sweep
-/// only the other axis).
+impl Scenario {
+    /// Parse from CLI text ("both" is handled by the caller).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "uniform" => Some(Self::Uniform),
+            "heterogeneous" | "hetero" => Some(Self::Heterogeneous),
+            _ => None,
+        }
+    }
+
+    /// Stable display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Uniform => "uniform",
+            Self::Heterogeneous => "heterogeneous",
+        }
+    }
+}
+
+/// Both scenarios, sweep order.
+pub const SCENARIOS: [Scenario; 2] = [Scenario::Uniform, Scenario::Heterogeneous];
+
+/// One sweep cell: the policy pair, the cluster scenario and its run.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    pub scenario: Scenario,
+    pub scheduler: SchedulerKind,
+    pub placer: PlacerKind,
+    pub report: RunReport,
+}
+
+/// Reshape the configured cluster into host classes at **exactly** the
+/// same total capacity — capacity parity is what makes the uniform vs
+/// heterogeneous cells comparable: a quarter of the base hosts (rounded
+/// down to pairs) are fused pairwise into double-size hosts, a quarter
+/// (at least one, from 2 hosts up) are each split into two half-size
+/// hosts, and the rest keep the base shape. Both reshapes conserve
+/// capacity exactly, so any turnaround/wait difference against the
+/// uniform scenario is placement policy, not cluster size.
+/// Deterministic in the base config, so sweep labels stay comparable
+/// across runs. Any `extra_classes` the config already declares are
+/// preserved on top; a 1-host cluster is returned unchanged (nothing to
+/// reshape without altering capacity).
+pub fn heterogeneous_variant(base: &SimConfig) -> SimConfig {
+    let mut cfg = base.clone();
+    let c = &mut cfg.cluster;
+    let quarter = c.hosts / 4;
+    // fused pairwise: consumes an even number of base hosts
+    let pair_src = 2 * (quarter / 2);
+    // split in two: any count works; force >= 1 so the variant is
+    // actually heterogeneous from 2 hosts up
+    let split_src = if c.hosts >= 2 { quarter.max(1) } else { 0 };
+    let keep = c.hosts - pair_src - split_src;
+    if split_src > 0 {
+        c.extra_classes.insert(
+            0,
+            HostClass {
+                count: 2 * split_src,
+                cores: c.cores_per_host / 2.0,
+                mem_gb: c.mem_per_host_gb / 2.0,
+            },
+        );
+    }
+    if pair_src > 0 {
+        c.extra_classes.insert(
+            0,
+            HostClass {
+                count: pair_src / 2,
+                cores: c.cores_per_host * 2.0,
+                mem_gb: c.mem_per_host_gb * 2.0,
+            },
+        );
+    }
+    c.hosts = keep;
+    cfg
+}
+
+/// Run the full scenario × scheduler × placer grid on the same seeded
+/// workload. Cells come back in sweep order, named
+/// `<scenario>/<scheduler>/<placer>`.
+pub fn run(base: &SimConfig) -> anyhow::Result<Vec<SweepCell>> {
+    run_filtered(base, &SCENARIOS, None, None)
+}
+
+/// Like [`run`], but restricted to the given scenarios and, when given,
+/// one scheduler and/or one placer (`--scheduler`/`--placer` on the
+/// `sched-sweep` subcommand sweep only the other axis).
 pub fn run_filtered(
     base: &SimConfig,
+    scenarios: &[Scenario],
     only_scheduler: Option<SchedulerKind>,
     only_placer: Option<PlacerKind>,
-) -> anyhow::Result<Vec<RunReport>> {
-    let mut out = Vec::with_capacity(SCHEDULERS.len() * PLACERS.len());
-    for sched in SCHEDULERS {
-        if only_scheduler.map_or(false, |s| s != sched) {
-            continue;
-        }
-        for placer in PLACERS {
-            if only_placer.map_or(false, |p| p != placer) {
+) -> anyhow::Result<Vec<SweepCell>> {
+    let mut out = Vec::new();
+    for &scenario in scenarios {
+        let scenario_cfg = match scenario {
+            Scenario::Uniform => base.clone(),
+            Scenario::Heterogeneous => heterogeneous_variant(base),
+        };
+        for sched in SCHEDULERS {
+            if only_scheduler.map_or(false, |s| s != sched) {
                 continue;
             }
-            let mut cfg = base.clone();
-            cfg.sched.scheduler = sched;
-            cfg.sched.placer = placer;
-            let label = format!("{}/{}", sched.name(), placer.name());
-            crate::info!("running sweep cell '{label}'");
-            out.push(run_simulation(&cfg, None, &label)?);
+            for placer in PLACERS {
+                if only_placer.map_or(false, |p| p != placer) {
+                    continue;
+                }
+                let mut cfg = scenario_cfg.clone();
+                cfg.sched.scheduler = sched;
+                cfg.sched.placer = placer;
+                let label = format!("{}/{}/{}", scenario.name(), sched.name(), placer.name());
+                crate::info!("running sweep cell '{label}'");
+                out.push(SweepCell {
+                    scenario,
+                    scheduler: sched,
+                    placer,
+                    report: run_simulation(&cfg, None, &label)?,
+                });
+            }
         }
     }
     Ok(out)
 }
 
 /// Render the sweep as a comparison table.
-pub fn render(reports: &[RunReport]) -> String {
+pub fn render(cells: &[SweepCell]) -> String {
     let mut t = crate::util::table::Table::new(&[
-        "scheduler/placer",
+        "scenario/scheduler/placer",
         "turnaround med (s)",
+        "wait med (s)",
+        "stretch med",
         "mem slack mean",
         "failed %",
         "oom",
         "preempt full/el",
         "alloc mem",
     ]);
-    for r in reports {
+    for c in cells {
+        let r = &c.report;
         t.row(&[
             r.name.clone(),
             format!("{:.0}", r.turnaround.median),
+            format!("{:.0}", r.wait.median),
+            format!("{:.2}", r.stretch.median),
             format!("{:.3}", r.mem_slack.mean),
             format!("{:.2}", r.failed_app_fraction * 100.0),
             r.oom_events.to_string(),
@@ -74,35 +188,176 @@ pub fn render(reports: &[RunReport]) -> String {
     t.render()
 }
 
+/// Compact per-cell JSON: the policy coordinates plus the summary
+/// numbers EXPERIMENTS.md tracks (no per-app samples).
+fn cell_json(c: &SweepCell) -> Json {
+    let bs = |b: &crate::util::stats::BoxStats| {
+        obj(vec![
+            ("median", Json::Num(b.median)),
+            ("mean", Json::Num(b.mean)),
+            ("max", Json::Num(b.max)),
+        ])
+    };
+    let r = &c.report;
+    obj(vec![
+        ("scenario", Json::Str(c.scenario.name().to_string())),
+        ("scheduler", Json::Str(c.scheduler.name().to_string())),
+        ("placer", Json::Str(c.placer.name().to_string())),
+        ("turnaround", bs(&r.turnaround)),
+        ("wait", bs(&r.wait)),
+        ("stretch", bs(&r.stretch)),
+        ("mem_slack_mean", Json::Num(r.mem_slack.mean)),
+        ("completed", Json::Num(r.completed as f64)),
+        ("num_apps", Json::Num(r.num_apps as f64)),
+        ("failed_app_fraction", Json::Num(r.failed_app_fraction)),
+        ("oom_events", Json::Num(r.oom_events as f64)),
+        ("app_preemptions", Json::Num(r.app_preemptions as f64)),
+        ("elastic_preemptions", Json::Num(r.elastic_preemptions as f64)),
+        ("mean_alloc_mem", Json::Num(r.mean_alloc_mem)),
+        ("sim_time", Json::Num(r.sim_time)),
+    ])
+}
+
+/// Append this sweep to a cross-PR trajectory file —
+/// `{group: "sched_sweep", runs: [{rev, results: [cell...]}]}` keyed by
+/// git revision, exactly like `Bench::append_json`: a missing,
+/// legacy-format or unparseable file starts a fresh trajectory.
+pub fn append_json(cells: &[SweepCell], path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+    let path = path.as_ref();
+    let mut runs: Vec<Json> = match std::fs::read_to_string(path) {
+        Ok(text) => Json::parse(&text)
+            .ok()
+            .and_then(|j| j.get("runs").and_then(|r| r.as_arr().map(|a| a.to_vec())))
+            .unwrap_or_default(),
+        Err(_) => Vec::new(),
+    };
+    runs.push(obj(vec![
+        ("rev", Json::Str(crate::util::bench::git_rev())),
+        ("results", Json::Arr(cells.iter().map(cell_json).collect())),
+    ]));
+    let top = obj(vec![
+        ("group", Json::Str("sched_sweep".to_string())),
+        ("runs", Json::Arr(runs)),
+    ]);
+    std::fs::write(path, top.to_string_pretty() + "\n")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::{ForecasterKind, Policy};
 
-    #[test]
-    fn sweep_runs_all_cells() {
+    fn tiny_base() -> SimConfig {
         let mut cfg = SimConfig::small();
-        cfg.workload.num_apps = 10;
+        cfg.workload.num_apps = 8;
         cfg.cluster.hosts = 4;
         cfg.workload.runtime_scale = 0.2;
         cfg.forecast.kind = ForecasterKind::Oracle;
         cfg.shaper.policy = Policy::Pessimistic;
-        let reports = run(&cfg).unwrap();
-        assert_eq!(reports.len(), 6);
-        assert_eq!(reports[0].name, "fifo/worst-fit");
-        assert_eq!(reports[5].name, "backfill/best-fit");
-        for r in &reports {
-            assert_eq!(r.completed, 10, "{}", r.summary());
-        }
-        let rendered = render(&reports);
-        assert!(rendered.contains("backfill/first-fit"));
+        cfg
+    }
 
-        // filters restrict the sweep to one axis
-        let only = run_filtered(&cfg, Some(SchedulerKind::Fifo), None).unwrap();
-        assert_eq!(only.len(), 3);
-        assert!(only.iter().all(|r| r.name.starts_with("fifo/")));
-        let one = run_filtered(&cfg, None, Some(PlacerKind::BestFit)).unwrap();
-        assert_eq!(one.len(), 2);
-        assert!(one.iter().all(|r| r.name.ends_with("/best-fit")));
+    #[test]
+    fn sweep_runs_the_full_grid() {
+        let cfg = tiny_base();
+        let cells = run(&cfg).unwrap();
+        assert_eq!(cells.len(), 2 * SCHEDULERS.len() * PLACERS.len());
+        assert_eq!(cells[0].report.name, "uniform/fifo/worst-fit");
+        assert_eq!(
+            cells.last().unwrap().report.name,
+            "heterogeneous/srpt/dot-product"
+        );
+        for c in &cells {
+            assert_eq!(c.report.completed, 8, "{}", c.report.summary());
+            assert!(c.report.stretch.min >= 1.0 - 1e-9, "{}", c.report.name);
+        }
+        let rendered = render(&cells);
+        assert!(rendered.contains("uniform/backfill/first-fit"));
+        assert!(rendered.contains("heterogeneous/reservation-backfill/cpu-aware"));
+        assert!(rendered.contains("stretch med"));
+    }
+
+    #[test]
+    fn filters_restrict_the_grid() {
+        let cfg = tiny_base();
+        let only = run_filtered(
+            &cfg,
+            &[Scenario::Uniform],
+            Some(SchedulerKind::Fifo),
+            None,
+        )
+        .unwrap();
+        assert_eq!(only.len(), PLACERS.len());
+        assert!(only.iter().all(|c| c.report.name.starts_with("uniform/fifo/")));
+        let one = run_filtered(
+            &cfg,
+            &[Scenario::Heterogeneous],
+            Some(SchedulerKind::Sjf),
+            Some(PlacerKind::DotProduct),
+        )
+        .unwrap();
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].report.name, "heterogeneous/sjf/dot-product");
+    }
+
+    #[test]
+    fn heterogeneous_variant_preserves_total_capacity_exactly() {
+        let total = |c: &crate::config::ClusterConfig| {
+            let mut cores = c.hosts as f64 * c.cores_per_host;
+            let mut mem = c.hosts as f64 * c.mem_per_host_gb;
+            for cl in &c.extra_classes {
+                cores += cl.count as f64 * cl.cores;
+                mem += cl.count as f64 * cl.mem_gb;
+            }
+            (cores, mem)
+        };
+        // capacity parity must hold at every cluster size, or the
+        // uniform-vs-heterogeneous comparison measures cluster size
+        // instead of placement policy
+        for hosts in 1..=33 {
+            let mut base = SimConfig::small();
+            base.cluster.hosts = hosts;
+            let het = heterogeneous_variant(&base);
+            het.validate().unwrap();
+            let (bc, bm) = total(&base.cluster);
+            let (hc, hm) = total(&het.cluster);
+            assert!((hc - bc).abs() < 1e-9, "{hosts} hosts: cores {hc} vs {bc}");
+            assert!((hm - bm).abs() < 1e-9, "{hosts} hosts: mem {hm} vs {bm}");
+            if hosts >= 2 {
+                assert!(!het.cluster.extra_classes.is_empty(), "{hosts} hosts: not reshaped");
+            }
+        }
+        // the default preset gets both a fused and a split class
+        let het = heterogeneous_variant(&SimConfig::small()); // 8 hosts
+        assert_eq!(het.cluster.extra_classes.len(), 2);
+        // deterministic
+        let het2 = heterogeneous_variant(&SimConfig::small());
+        assert_eq!(het.cluster.total_hosts(), het2.cluster.total_hosts());
+    }
+
+    #[test]
+    fn append_json_accumulates_runs_keyed_by_rev() {
+        let mut cfg = tiny_base();
+        cfg.workload.num_apps = 3;
+        let cells =
+            run_filtered(&cfg, &[Scenario::Uniform], Some(SchedulerKind::Fifo), Some(PlacerKind::WorstFit))
+                .unwrap();
+        let path = std::env::temp_dir().join("zoe_sched_sweep_append_test.json");
+        let _ = std::fs::remove_file(&path);
+        append_json(&cells, &path).unwrap();
+        append_json(&cells, &path).unwrap();
+        let j = crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("group").and_then(|g| g.as_str()), Some("sched_sweep"));
+        let runs = j.get("runs").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(runs.len(), 2, "each append adds one run entry");
+        for run in runs {
+            assert!(run.get("rev").and_then(|r| r.as_str()).is_some());
+            let results = run.get("results").and_then(|r| r.as_arr()).unwrap();
+            assert_eq!(results.len(), 1);
+            assert_eq!(results[0].get("scheduler").and_then(|s| s.as_str()), Some("fifo"));
+            assert_eq!(results[0].get("scenario").and_then(|s| s.as_str()), Some("uniform"));
+            assert!(results[0].get("stretch").and_then(|s| s.get("median")).is_some());
+        }
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -46,7 +46,7 @@ fn top_help() -> &'static str {
      SUBCOMMANDS:\n\
        simulate        run one simulation (—policy, --forecaster, --preset...)\n\
        compare         Fig. 3: baseline vs optimistic vs pessimistic (oracle)\n\
-       sched-sweep     scheduler x placer policy sweep on one workload\n\
+       sched-sweep     scenario x scheduler x placer policy sweep on one workload\n\
        forecast-eval   Fig. 2: ARIMA vs GP prediction-error distributions\n\
        sweep           Fig. 4: K1 x K2 heat maps (ARIMA or GP)\n\
        live            Fig. 5: paced prototype, baseline vs shaped\n\
@@ -74,8 +74,16 @@ fn sim_args(name: &str, about: &str) -> Args {
         .opt("seed", "", "workload seed (overrides preset)")
         .opt("apps", "", "number of applications (overrides preset)")
         .opt("hosts", "", "number of hosts (overrides preset)")
-        .opt("scheduler", "", "application scheduler: fifo|backfill")
-        .opt("placer", "", "component placer: worst-fit|first-fit|best-fit")
+        .opt(
+            "scheduler",
+            "",
+            "application scheduler: fifo|backfill|reservation-backfill|sjf|srpt",
+        )
+        .opt(
+            "placer",
+            "",
+            "component placer: worst-fit|first-fit|best-fit|cpu-aware|dot-product",
+        )
         .opt("log", "info", "log level: error|warn|info|debug")
 }
 
@@ -173,10 +181,16 @@ fn cmd_compare(argv: &[String]) -> Result<(), String> {
 fn cmd_sched_sweep(argv: &[String]) -> Result<(), String> {
     let spec = sim_args(
         "zoe-shaper sched-sweep",
-        "run every scheduler x placer combination on one seeded workload",
+        "run the scenario x scheduler x placer grid on one seeded workload",
     )
     .opt("policy", "pessimistic", "baseline|optimistic|pessimistic")
-    .opt("forecaster", "oracle", "oracle|last-value|arima|gp-native|gp-incr|gp");
+    .opt("forecaster", "oracle", "oracle|last-value|arima|gp-native|gp-incr|gp")
+    .opt("scenario", "both", "cluster shape axis: uniform|heterogeneous|both")
+    .opt(
+        "json-out",
+        "SCHED_SWEEP.json",
+        "append per-cell JSON keyed by git rev to this path ('' disables)",
+    );
     let a = parse_or_help(spec, argv)?;
     let mut cfg = load_cfg(&a)?;
     cfg.shaper.policy =
@@ -184,12 +198,22 @@ fn cmd_sched_sweep(argv: &[String]) -> Result<(), String> {
     cfg.forecast.kind = ForecasterKind::parse(a.get("forecaster"))
         .ok_or_else(|| format!("bad --forecaster {}", a.get("forecaster")))?;
     cfg.validate()?;
-    // --scheduler/--placer pin one axis; the sweep covers the other
+    let scenarios: Vec<sched_sweep::Scenario> = match a.get("scenario").to_ascii_lowercase().as_str()
+    {
+        "both" => sched_sweep::SCENARIOS.to_vec(),
+        s => vec![sched_sweep::Scenario::parse(s).ok_or_else(|| format!("bad --scenario {s}"))?],
+    };
+    // --scheduler/--placer pin one axis; the sweep covers the others
     let only_sched = if a.get("scheduler").is_empty() { None } else { Some(cfg.sched.scheduler) };
     let only_placer = if a.get("placer").is_empty() { None } else { Some(cfg.sched.placer) };
-    let reports =
-        sched_sweep::run_filtered(&cfg, only_sched, only_placer).map_err(|e| format!("{e:#}"))?;
-    println!("{}", sched_sweep::render(&reports));
+    let cells = sched_sweep::run_filtered(&cfg, &scenarios, only_sched, only_placer)
+        .map_err(|e| format!("{e:#}"))?;
+    println!("{}", sched_sweep::render(&cells));
+    let out = a.get("json-out");
+    if !out.is_empty() {
+        sched_sweep::append_json(&cells, out).map_err(|e| format!("writing {out}: {e}"))?;
+        println!("appended {} cells to {out}", cells.len());
+    }
     Ok(())
 }
 

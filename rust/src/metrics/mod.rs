@@ -1,7 +1,16 @@
 //! Run metrics: the three quantities the paper evaluates (§4.1) —
 //! application **turnaround**, **resource slack** (allocated − used, as a
 //! fraction of allocated, for CPU and memory), and **failures** — plus
-//! operational counters (preemptions, wasted work, utilization).
+//! operational counters (preemptions, wasted work, utilization) and the
+//! per-application **fairness** pair the policy sweep compares schedulers
+//! on (Stillwell et al.'s yield/stretch framing):
+//!
+//! * **wait** — turnaround minus service: total time spent queued
+//!   (initial wait plus any requeued spans after preemption/failure).
+//! * **stretch** — (wait + service) / service = turnaround / service,
+//!   where *service* is the total time spent running across attempts.
+//!   1.0 means the application never waited; size-blind policies inflate
+//!   it most for short applications.
 
 use crate::util::json::{num_arr, obj, Json};
 use crate::util::stats::{boxstats, BoxStats, Welford};
@@ -18,6 +27,10 @@ struct AppSlack {
 pub struct Metrics {
     /// turnaround per finished app (seconds).
     turnarounds: Vec<f64>,
+    /// queued time per finished app (turnaround − service; seconds).
+    waits: Vec<f64>,
+    /// slowdown per finished app: turnaround / service time.
+    stretches: Vec<f64>,
     /// per-app slack accumulators (indexed by app id).
     slack: Vec<AppSlack>,
     /// ids of apps that experienced >= 1 OOM failure.
@@ -50,6 +63,8 @@ impl Metrics {
     pub fn new(num_apps: usize) -> Self {
         Metrics {
             turnarounds: Vec::new(),
+            waits: Vec::new(),
+            stretches: Vec::new(),
             slack: vec![AppSlack::default(); num_apps],
             failed_apps: std::collections::HashSet::new(),
             oom_events: 0,
@@ -66,9 +81,21 @@ impl Metrics {
         }
     }
 
-    /// Record an app completion.
-    pub fn record_finish(&mut self, submit_time: f64, finish_time: f64) {
-        self.turnarounds.push((finish_time - submit_time).max(0.0));
+    /// Record an app completion. `service_time` is the total time the
+    /// app spent running across all attempts; wait (queued time) and
+    /// stretch (turnaround over service) follow from it.
+    pub fn record_finish(&mut self, submit_time: f64, finish_time: f64, service_time: f64) {
+        let turnaround = (finish_time - submit_time).max(0.0);
+        self.turnarounds.push(turnaround);
+        let service = service_time.clamp(0.0, turnaround);
+        self.waits.push(turnaround - service);
+        // stretch >= 1 by construction; a zero-length run never waited,
+        // so the degenerate 0/0 records the floor, not 0
+        self.stretches.push(if turnaround <= 0.0 {
+            1.0
+        } else {
+            turnaround / service.max(1e-9)
+        });
     }
 
     /// Record one slack sample for an app: fractions in [0,1].
@@ -120,6 +147,8 @@ impl Metrics {
             name: name.to_string(),
             turnaround: boxstats(&self.turnarounds),
             turnarounds: self.turnarounds.clone(),
+            wait: boxstats(&self.waits),
+            stretch: boxstats(&self.stretches),
             cpu_slack: boxstats(&cpu_slack),
             mem_slack: boxstats(&mem_slack),
             mem_slacks: mem_slack,
@@ -148,6 +177,11 @@ pub struct RunReport {
     pub name: String,
     pub turnaround: BoxStats,
     pub turnarounds: Vec<f64>,
+    /// Queued time per finished app (fairness axis 1).
+    pub wait: BoxStats,
+    /// Turnaround over service time per finished app (fairness axis 2;
+    /// 1.0 = never waited).
+    pub stretch: BoxStats,
     pub cpu_slack: BoxStats,
     pub mem_slack: BoxStats,
     pub mem_slacks: Vec<f64>,
@@ -174,6 +208,7 @@ impl RunReport {
         format!(
             "run '{}': {}/{} completed in {:.0}s sim-time\n\
              turnaround  med {:.0}s mean {:.0}s p75 {:.0}s max {:.0}s\n\
+             wait        med {:.0}s mean {:.0}s max {:.0}s   stretch med {:.2} mean {:.2} max {:.2}\n\
              mem slack   med {:.3} mean {:.3}   cpu slack med {:.3} mean {:.3}\n\
              failures    {:.2}% of apps ({} OOM events)  preemptions: {} full / {} elastic\n\
              wasted work {:.0} units; mean alloc cpu {:.2} mem {:.2}; peak host usage {:.2}; {} forecasts",
@@ -185,6 +220,12 @@ impl RunReport {
             self.turnaround.mean,
             self.turnaround.q3,
             self.turnaround.max,
+            self.wait.median,
+            self.wait.mean,
+            self.wait.max,
+            self.stretch.median,
+            self.stretch.mean,
+            self.stretch.max,
             self.mem_slack.median,
             self.mem_slack.mean,
             self.cpu_slack.median,
@@ -217,6 +258,8 @@ impl RunReport {
         obj(vec![
             ("name", Json::Str(self.name.clone())),
             ("turnaround", bs(&self.turnaround)),
+            ("wait", bs(&self.wait)),
+            ("stretch", bs(&self.stretch)),
             ("cpu_slack", bs(&self.cpu_slack)),
             ("mem_slack", bs(&self.mem_slack)),
             ("completed", Json::Num(self.completed as f64)),
@@ -254,8 +297,8 @@ mod tests {
     #[test]
     fn collects_and_reports() {
         let mut m = Metrics::new(3);
-        m.record_finish(10.0, 110.0);
-        m.record_finish(20.0, 70.0);
+        m.record_finish(10.0, 110.0, 80.0);
+        m.record_finish(20.0, 70.0, 50.0);
         m.record_slack(0, 0.5, 0.6);
         m.record_slack(0, 0.3, 0.4);
         m.record_slack(1, 0.2, 0.2);
@@ -265,6 +308,11 @@ mod tests {
         let r = m.report("test", 1000.0);
         assert_eq!(r.completed, 2);
         assert_eq!(r.turnaround.max, 100.0);
+        // waits: 100-80=20 and 50-50=0; stretches: 100/80 and 50/50
+        assert_eq!(r.wait.max, 20.0);
+        assert_eq!(r.wait.min, 0.0);
+        assert!((r.stretch.max - 1.25).abs() < 1e-12);
+        assert!((r.stretch.min - 1.0).abs() < 1e-12);
         assert!((r.mem_slack.mean - (0.5 + 0.2) / 2.0).abs() < 1e-12);
         assert!((r.failed_app_fraction - 1.0 / 3.0).abs() < 1e-12);
         assert_eq!(r.oom_events, 1);
@@ -275,7 +323,7 @@ mod tests {
     #[test]
     fn json_roundtrips() {
         let mut m = Metrics::new(1);
-        m.record_finish(0.0, 50.0);
+        m.record_finish(0.0, 50.0, 40.0);
         let r = m.report("j", 100.0);
         let j = r.to_json();
         let parsed = Json::parse(&j.to_string_pretty()).unwrap();
@@ -284,6 +332,22 @@ mod tests {
             parsed.get("turnaround").unwrap().get("max").unwrap().as_f64(),
             Some(50.0)
         );
+        assert_eq!(parsed.get("wait").unwrap().get("max").unwrap().as_f64(), Some(10.0));
+        assert_eq!(parsed.get("stretch").unwrap().get("max").unwrap().as_f64(), Some(1.25));
+    }
+
+    #[test]
+    fn service_time_clamped_to_turnaround() {
+        let mut m = Metrics::new(2);
+        // clock-skew / rounding guard: service can never exceed turnaround
+        m.record_finish(0.0, 50.0, 60.0);
+        // a zero-length run never waited: stretch records its floor of 1
+        m.record_finish(10.0, 10.0, 0.0);
+        let r = m.report("c", 100.0);
+        assert_eq!(r.wait.min, 0.0);
+        assert_eq!(r.wait.max, 0.0);
+        assert_eq!(r.stretch.max, 1.0);
+        assert_eq!(r.stretch.min, 1.0);
     }
 
     #[test]

@@ -8,12 +8,34 @@
 //!
 //! * [`Scheduler`] — admission order: which queued application starts
 //!   next. [`FifoScheduler`] is the paper's strict FIFO (§3 / [42]);
-//!   [`BackfillScheduler`] lets later applications jump a blocked head.
+//!   [`BackfillScheduler`] lets later applications jump a blocked head;
+//!   [`ReservationBackfillScheduler`] only lets them jump when they
+//!   cannot delay the head's reserved start; [`SjfScheduler`] and
+//!   [`SrptScheduler`] order by job size instead of arrival (Stillwell
+//!   et al.-style size-aware admission — the fairness trade the
+//!   `sched-sweep` experiment quantifies via wait/stretch).
 //! * [`Placer`] — host choice for each new component. [`WorstFitPlacer`]
 //!   (most free memory, the seed default) spreads load;
-//!   [`FirstFitPlacer`] and [`BestFitPlacer`] trade spread for packing.
-//!   All three are served by the cluster's capacity indexes — no
-//!   full-host scans.
+//!   [`FirstFitPlacer`] and [`BestFitPlacer`] trade spread for packing;
+//!   [`CpuAwareFitPlacer`] spreads by free CPU instead of free memory;
+//!   [`DotProductFitPlacer`] aligns the request vector with each host's
+//!   free-capacity vector (Tetris-style vector packing). All five are
+//!   served by the cluster's capacity indexes — no full-host scans.
+//!
+//! ## Starvation guarantee (both backfill variants)
+//!
+//! Backfill admits later applications past a blocked head, which can
+//! starve a large head under a steady stream of small arrivals. Both
+//! variants therefore share one **bounded-overtake invariant**: a
+//! blocked head-of-queue application is overtaken by at most
+//! [`MAX_HEAD_OVERTAKES`] later placements; after that, backfill is
+//! suspended (the scheduler degenerates to strict FIFO) until that head
+//! starts. [`BackfillScheduler`] relies on the bound alone;
+//! [`ReservationBackfillScheduler`] additionally holds a start-time
+//! reservation for the head, so overtaking is doubly limited to
+//! applications whose worst-case completion precedes the head's
+//! estimated start. `tests` pins the invariant with a
+//! huge-head-under-churn regression for both variants.
 //!
 //! Admission is reservation-centric: an application is admitted when all
 //! its **core** components can be placed, charged against current host
@@ -30,10 +52,24 @@
 
 use std::collections::BTreeSet;
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, CAPACITY_EPS};
 use crate::config::{PlacerKind, SchedConfig, SchedulerKind};
 use crate::util::order;
 use crate::workload::{AppId, Application, AppState, HostId};
+
+/// Maximum number of later placements that may overtake one blocked
+/// head-of-queue application before backfill suspends (see the module
+/// docs' starvation guarantee). Large enough that ordinary backfill is
+/// unaffected at the supported scales; small enough that a starving
+/// head degrades the scheduler to strict FIFO within a few hundred
+/// admissions.
+pub const MAX_HEAD_OVERTAKES: u64 = 256;
+
+/// Admission price clamp `(min, max)` shared by real placement
+/// ([`place_app`]'s internal use) and the reservation estimate
+/// (`shadow_start_time`), so the shadow is always computed for the same
+/// priced requests placement will charge.
+const PRICE_CLAMP: (f64, f64) = (0.05, 1.0);
 
 /// Outcome of a placement attempt for one application.
 #[derive(Debug, Clone, PartialEq)]
@@ -98,6 +134,39 @@ impl Placer for BestFitPlacer {
     }
 }
 
+/// Most free CPU that fits: the CPU analogue of worst-fit, for workloads
+/// whose contention is cores rather than memory. Ties on free CPU go to
+/// the highest host id (mirroring worst-fit).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CpuAwareFitPlacer;
+
+impl Placer for CpuAwareFitPlacer {
+    fn name(&self) -> &'static str {
+        "cpu-aware"
+    }
+
+    fn select(&self, cluster: &Cluster, cpus: f64, mem: f64) -> Option<HostId> {
+        cluster.cpu_aware_fit(cpus, mem)
+    }
+}
+
+/// Largest dot product between the request vector (cpus, mem) and the
+/// host's free-capacity vector: demand lands where the remaining
+/// capacity is shaped like it, reducing stranded capacity on skewed
+/// (heterogeneous) clusters. Ties go to the highest host id.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct DotProductFitPlacer;
+
+impl Placer for DotProductFitPlacer {
+    fn name(&self) -> &'static str {
+        "dot-product"
+    }
+
+    fn select(&self, cluster: &Cluster, cpus: f64, mem: f64) -> Option<HostId> {
+        cluster.dot_product_fit(cpus, mem)
+    }
+}
+
 /// Admission-order policy over the queued applications.
 pub trait Scheduler: Send {
     /// Stable display name (experiment labels).
@@ -143,6 +212,39 @@ fn queue_key(apps: &[Application], id: AppId) -> QueueKey {
     (order::key(apps[id].submit_time), id)
 }
 
+/// Size-ordered queue key: total-order job size, then submit time, then
+/// app id — NaN-safe, unique (SJF/SRPT).
+type SizedKey = (u64, u64, AppId);
+
+/// Drain the queue strictly head-first: start applications while the
+/// head places; stop at the first blocked head (all-or-nothing core
+/// placement). Shared by every non-backfill scheduler — the policies
+/// differ only in their key, i.e. in *who* the head is.
+fn drain_head_of_line<K: Ord + Copy>(
+    queue: &mut BTreeSet<K>,
+    id_of: impl Fn(K) -> AppId,
+    apps: &mut [Application],
+    cluster: &mut Cluster,
+    placer: &dyn Placer,
+    now: f64,
+    price: f64,
+) -> Vec<PlacementOutcome> {
+    let mut started = Vec::new();
+    while let Some(&k) = queue.iter().next() {
+        let head = id_of(k);
+        match place_app(&apps[head], cluster, placer, now, price) {
+            Some(outcome) => {
+                apps[head].state = AppState::Running { since: now };
+                apps[head].last_progress_at = now;
+                queue.remove(&k);
+                started.push(outcome);
+            }
+            None => break, // head-of-line blocking
+        }
+    }
+    started
+}
+
 /// Strict FIFO queue keyed by original submit time: head-of-line
 /// blocking, no backfill.
 #[derive(Debug, Default)]
@@ -183,37 +285,235 @@ impl Scheduler for FifoScheduler {
         now: f64,
         price: f64,
     ) -> Vec<PlacementOutcome> {
-        let mut started = Vec::new();
-        while let Some(&(k, head)) = self.queue.iter().next() {
-            match place_app(&apps[head], cluster, placer, now, price) {
-                Some(outcome) => {
-                    apps[head].state = AppState::Running { since: now };
-                    apps[head].last_progress_at = now;
-                    self.queue.remove(&(k, head));
-                    started.push(outcome);
-                }
-                None => break, // head-of-line blocking
-            }
-        }
-        started
+        drain_head_of_line(&mut self.queue, |(_, id)| id, apps, cluster, placer, now, price)
     }
 }
 
+/// The job-size notion a [`SizeOrderedScheduler`] keys its queue on.
+pub trait SizePolicy: Send + Default {
+    /// Stable display name (experiment labels).
+    const NAME: &'static str;
+
+    /// The size read at (re-)enqueue time.
+    fn size(app: &Application) -> f64;
+}
+
+/// Shortest job first: sizes by **total** reserved work — the job's
+/// full size, stable across resubmits.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct TotalWork;
+
+impl SizePolicy for TotalWork {
+    const NAME: &'static str = "sjf";
+
+    fn size(app: &Application) -> f64 {
+        app.total_work
+    }
+}
+
+/// Shortest remaining processing time, restricted to admission: sizes
+/// by **remaining** reserved work sampled at (re-)enqueue time. Running
+/// applications are never preempted by the scheduler (preemption
+/// belongs to the shaper), and a queued application's remaining work
+/// cannot change while it waits, so the enqueue-time key stays
+/// live-accurate. SRPT diverges from SJF the moment resubmission
+/// preserves partial progress; under today's lose-all-work resubmission
+/// the two differ only in key provenance.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RemainingWork;
+
+impl SizePolicy for RemainingWork {
+    const NAME: &'static str = "srpt";
+
+    fn size(app: &Application) -> f64 {
+        app.remaining_work
+    }
+}
+
+/// Size-ordered admission: queue ordered by `P::size` (NaN-safe total
+/// order), then submit time, then app id. Head-of-line blocking like
+/// FIFO, so a small blocked job still gates larger ones; the ordering,
+/// not backfill, is the policy.
+#[derive(Debug, Default)]
+pub struct SizeOrderedScheduler<P: SizePolicy> {
+    queue: BTreeSet<SizedKey>,
+    _policy: std::marker::PhantomData<P>,
+}
+
+/// Shortest job first (see [`TotalWork`]).
+pub type SjfScheduler = SizeOrderedScheduler<TotalWork>;
+
+/// Shortest remaining processing time (see [`RemainingWork`]).
+pub type SrptScheduler = SizeOrderedScheduler<RemainingWork>;
+
+impl<P: SizePolicy> SizeOrderedScheduler<P> {
+    /// Empty scheduler.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn key(apps: &[Application], id: AppId) -> SizedKey {
+        (order::key(P::size(&apps[id])), order::key(apps[id].submit_time), id)
+    }
+}
+
+impl<P: SizePolicy> Scheduler for SizeOrderedScheduler<P> {
+    fn name(&self) -> &'static str {
+        P::NAME
+    }
+
+    fn enqueue(&mut self, apps: &[Application], id: AppId) {
+        let inserted = self.queue.insert(Self::key(apps, id));
+        debug_assert!(inserted, "app {id} double-enqueued");
+    }
+
+    fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn queued(&self) -> Vec<AppId> {
+        self.queue.iter().map(|&(_, _, id)| id).collect()
+    }
+
+    fn try_schedule(
+        &mut self,
+        apps: &mut [Application],
+        cluster: &mut Cluster,
+        placer: &dyn Placer,
+        now: f64,
+        price: f64,
+    ) -> Vec<PlacementOutcome> {
+        drain_head_of_line(&mut self.queue, |(_, _, id)| id, apps, cluster, placer, now, price)
+    }
+}
+
+/// Bounded-overtake starvation guard shared by both backfill variants
+/// (see the module docs): for every queued application that has been the
+/// blocked head, it remembers how many later applications have started
+/// past it. The budget is keyed by queue key and **persists while the
+/// app stays queued** — a head that is briefly displaced (e.g. an
+/// earlier-submitted app is preempted and re-queued ahead of it) resumes
+/// its spent budget rather than getting a fresh one — and is discharged
+/// only when the app starts (leaves the queue), so a later re-queue of
+/// the same app begins a fresh wait with a fresh budget.
+#[derive(Debug, Default)]
+struct OvertakeGuard {
+    spent: std::collections::HashMap<QueueKey, u64>,
+}
+
+impl OvertakeGuard {
+    /// Drop the budgets of apps that have since started (left the
+    /// queue). The map only ever holds once-blocked heads still queued,
+    /// so the prune is cheap.
+    fn prune_started(&mut self, queue: &BTreeSet<QueueKey>) {
+        self.spent.retain(|k, _| queue.contains(k));
+    }
+
+    /// No head is blocked (the queue drained): every budget discharges.
+    fn clear(&mut self) {
+        self.spent.clear();
+    }
+
+    /// True while this head's overtake budget lasts.
+    fn backfill_allowed(&self, head: QueueKey) -> bool {
+        self.spent.get(&head).copied().unwrap_or(0) < MAX_HEAD_OVERTAKES
+    }
+
+    fn note_overtake(&mut self, head: QueueKey) {
+        *self.spent.entry(head).or_insert(0) += 1;
+    }
+
+    /// An app started: its budget discharges immediately, so a re-queue
+    /// under the identical key (preemption before the next wake) begins
+    /// a fresh wait with a fresh budget.
+    fn discharge(&mut self, key: QueueKey) {
+        self.spent.remove(&key);
+    }
+}
+
+/// Walk the FIFO queue past the (already blocked) head, starting any
+/// candidate that `eligible` accepts and that places. Shared cursor walk
+/// of both backfill variants: the scan examines at most `depth` blocked
+/// applications per wake **counting the already-blocked head** — the
+/// seed semantics, so `depth = 0` still means strict FIFO (a per-wake
+/// cost bound; the starvation bound is the [`OvertakeGuard`], not
+/// this). Stops when the guard's budget runs out; re-resolving the
+/// cursor through `range` stays correct across removals (only
+/// already-visited keys are ever removed).
+#[allow(clippy::too_many_arguments)]
+fn backfill_past_head(
+    queue: &mut BTreeSet<QueueKey>,
+    head_key: QueueKey,
+    guard: &mut OvertakeGuard,
+    depth: usize,
+    mut eligible: impl FnMut(&Application) -> bool,
+    apps: &mut [Application],
+    cluster: &mut Cluster,
+    placer: &dyn Placer,
+    now: f64,
+    price: f64,
+    started: &mut Vec<PlacementOutcome>,
+) {
+    let mut blocked = 1usize; // the head
+    if blocked > depth {
+        return; // depth 0: strict FIFO
+    }
+    let mut cursor = head_key;
+    while guard.backfill_allowed(head_key) {
+        let next = next_after(queue, cursor);
+        let Some(key @ (_, id)) = next else { break };
+        cursor = key;
+        let outcome = if eligible(&apps[id]) {
+            place_app(&apps[id], cluster, placer, now, price)
+        } else {
+            None
+        };
+        match outcome {
+            Some(outcome) => {
+                apps[id].state = AppState::Running { since: now };
+                apps[id].last_progress_at = now;
+                queue.remove(&key);
+                started.push(outcome);
+                guard.note_overtake(head_key);
+                guard.discharge(key);
+            }
+            None => {
+                blocked += 1;
+                if blocked > depth {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Next queue key strictly after `last`.
+fn next_after(queue: &BTreeSet<QueueKey>, last: QueueKey) -> Option<QueueKey> {
+    use std::ops::Bound;
+    queue.range((Bound::Excluded(last), Bound::Unbounded)).next().copied()
+}
+
 /// FIFO order with aggressive backfill: when the head application is
-/// blocked, up to `depth` later queued applications are examined and any
-/// that fit start immediately. No reservations are taken for blocked
-/// apps, so large applications can starve under a steady stream of small
-/// ones — the classic trade the policy sweep is meant to expose.
+/// blocked, later queued applications are examined (at most `depth`
+/// blocked applications per wake, counting the head — the seed
+/// semantics, so `depth = 0` is strict FIFO) and any that fit start
+/// immediately.
+/// No reservation is taken for the blocked head, so its only starvation
+/// protection is the module-level bounded-overtake invariant: after
+/// [`MAX_HEAD_OVERTAKES`] placements jump one head, backfill suspends
+/// until that head starts.
 #[derive(Debug)]
 pub struct BackfillScheduler {
     queue: BTreeSet<QueueKey>,
     depth: usize,
+    guard: OvertakeGuard,
 }
 
 impl BackfillScheduler {
-    /// Empty scheduler scanning past at most `depth` blocked apps.
+    /// Empty scheduler examining at most `depth` blocked applications
+    /// per wake (counting the head; 0 = strict FIFO).
     pub fn new(depth: usize) -> Self {
-        BackfillScheduler { queue: BTreeSet::new(), depth }
+        BackfillScheduler { queue: BTreeSet::new(), depth, guard: OvertakeGuard::default() }
     }
 }
 
@@ -243,43 +543,249 @@ impl Scheduler for BackfillScheduler {
         now: f64,
         price: f64,
     ) -> Vec<PlacementOutcome> {
-        use std::ops::Bound;
-        let mut started = Vec::new();
-        let mut blocked = 0usize;
-        // Cursor walk instead of a full-queue snapshot: the scan is
-        // bounded by `depth` blocked apps, so a wake must not pay
-        // O(queue) to examine a handful of candidates. Re-resolving the
-        // cursor through `range` stays correct across the removals below
-        // (only already-visited keys are ever removed).
-        let mut cursor: Option<QueueKey> = None;
-        loop {
-            let next = match cursor {
-                None => self.queue.iter().next().copied(),
-                Some(last) => self
-                    .queue
-                    .range((Bound::Excluded(last), Bound::Unbounded))
-                    .next()
-                    .copied(),
-            };
-            let Some(key @ (_, id)) = next else { break };
-            cursor = Some(key);
-            match place_app(&apps[id], cluster, placer, now, price) {
-                Some(outcome) => {
-                    apps[id].state = AppState::Running { since: now };
-                    apps[id].last_progress_at = now;
-                    self.queue.remove(&key);
-                    started.push(outcome);
-                }
-                None => {
-                    blocked += 1;
-                    if blocked > self.depth {
-                        break;
-                    }
+        let mut started =
+            drain_head_of_line(&mut self.queue, |(_, id)| id, apps, cluster, placer, now, price);
+        let Some(&head_key) = self.queue.iter().next() else {
+            self.guard.clear();
+            return started;
+        };
+        self.guard.prune_started(&self.queue);
+        backfill_past_head(
+            &mut self.queue,
+            head_key,
+            &mut self.guard,
+            self.depth,
+            |_| true, // aggressive: any fitting candidate may jump
+            apps,
+            cluster,
+            placer,
+            now,
+            price,
+            &mut started,
+        );
+        started
+    }
+}
+
+/// FIFO order with **conservative backfill**: a blocked head holds a
+/// start-time reservation — the earliest time its core set could be
+/// placed, estimated by draining currently running applications in
+/// completion-time order — and a later application may jump the queue
+/// only if its worst-case completion (remaining work at the guaranteed
+/// minimum progress rate of 1 work unit/s) precedes that reserved start.
+/// Backfilled work therefore vacates the cluster before the head's
+/// capacity materializes instead of re-consuming it, which is what
+/// replaces [`BackfillScheduler`]'s unconditioned depth-bounded skipping.
+///
+/// The reservation is an *estimate*: completion times assume no further
+/// preemption/failure churn (lost work extends a running app past its
+/// ETA), and the head still actually starts only when a real placement
+/// succeeds. The module-level bounded-overtake invariant backstops the
+/// estimate: even with a churn-degraded reservation, one head is jumped
+/// at most [`MAX_HEAD_OVERTAKES`] times before backfill suspends. A head
+/// whose core set cannot fit even an idle cluster holds a void
+/// reservation — such an application can never start anywhere, so
+/// backfill past it is unrestricted (up to the same overtake bound).
+#[derive(Debug)]
+pub struct ReservationBackfillScheduler {
+    queue: BTreeSet<QueueKey>,
+    depth: usize,
+    guard: OvertakeGuard,
+}
+
+impl ReservationBackfillScheduler {
+    /// Empty scheduler examining at most `depth` blocked applications
+    /// per wake, counting the head (a cost bound, not the starvation
+    /// mechanism; 0 = strict FIFO).
+    pub fn new(depth: usize) -> Self {
+        ReservationBackfillScheduler {
+            queue: BTreeSet::new(),
+            depth,
+            guard: OvertakeGuard::default(),
+        }
+    }
+}
+
+impl Scheduler for ReservationBackfillScheduler {
+    fn name(&self) -> &'static str {
+        "reservation-backfill"
+    }
+
+    fn enqueue(&mut self, apps: &[Application], id: AppId) {
+        let inserted = self.queue.insert(queue_key(apps, id));
+        debug_assert!(inserted, "app {id} double-enqueued");
+    }
+
+    fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn queued(&self) -> Vec<AppId> {
+        self.queue.iter().map(|&(_, id)| id).collect()
+    }
+
+    fn try_schedule(
+        &mut self,
+        apps: &mut [Application],
+        cluster: &mut Cluster,
+        placer: &dyn Placer,
+        now: f64,
+        price: f64,
+    ) -> Vec<PlacementOutcome> {
+        let mut started =
+            drain_head_of_line(&mut self.queue, |(_, id)| id, apps, cluster, placer, now, price);
+        let Some(&head_key) = self.queue.iter().next() else {
+            self.guard.clear();
+            return started;
+        };
+        self.guard.prune_started(&self.queue);
+        if !self.guard.backfill_allowed(head_key) || self.queue.len() == 1 || self.depth == 0 {
+            // budget spent, nothing queued to backfill, or strict FIFO:
+            // don't pay for a reservation estimate nobody will consult
+            return started;
+        }
+        let shadow = shadow_start_time(apps, cluster, head_key.1, now, price);
+        backfill_past_head(
+            &mut self.queue,
+            head_key,
+            &mut self.guard,
+            self.depth,
+            |candidate: &Application| match shadow {
+                // worst-case completion: remaining work at the minimum
+                // progress rate (1 work unit/s, zero elastic speedup)
+                Some(t) => now + candidate.remaining_work <= t + CAPACITY_EPS,
+                None => true, // void reservation: head can never fit
+            },
+            apps,
+            cluster,
+            placer,
+            now,
+            price,
+            &mut started,
+        );
+        started
+    }
+}
+
+/// Earliest estimated time the head's core set could be placed, assuming
+/// currently running applications release their allocations at their
+/// estimated completion times and nothing else arrives. Returns `None`
+/// when the cores do not fit even with every running allocation released
+/// (void reservation — the head can never start on this cluster).
+///
+/// The feasibility check is a greedy worst-fit packing of the head's
+/// priced core requests over scratch per-host free capacity — an
+/// estimate consistent with, but not identical to, the live placer; the
+/// head still only starts when a real placement succeeds. The release
+/// prefix is probed by **binary search**. Capacity only grows as
+/// releases accumulate, but greedy packing is not strictly monotone in
+/// capacity, so the probe is guaranteed to return *a* prefix the greedy
+/// estimate verifies as feasible (`hi` only ever moves to
+/// verified-feasible probes) — the smallest one under monotonicity,
+/// possibly a later one on adversarial host/core shapes. A late shadow
+/// only makes backfill more permissive, which the overtake bound
+/// backstops. Cost: O(log running) greedy packs of O(hosts · cores)
+/// plus O(log running) prefix replays of O(placed components), on top
+/// of one O(apps + running · components) ETA scan + sort — paid only on
+/// wakes with a blocked head and a non-empty backfill queue.
+fn shadow_start_time(
+    apps: &[Application],
+    cluster: &Cluster,
+    head: AppId,
+    now: f64,
+    price: f64,
+) -> Option<f64> {
+    let price = price.clamp(PRICE_CLAMP.0, PRICE_CLAMP.1);
+    let cores: Vec<(f64, f64)> = apps[head]
+        .components
+        .iter()
+        .filter(|c| c.is_core)
+        .map(|c| (c.cpu_req * price, c.mem_req * price))
+        .collect();
+    let base_free: Vec<(f64, f64)> =
+        cluster.hosts.iter().map(|h| (h.free_cpus(), h.free_mem())).collect();
+    if greedy_cores_fit(&base_free, &cores) {
+        // the estimate disagrees with the live placer (different
+        // packing): treat the start as imminent — nothing may jump
+        return Some(now);
+    }
+    // (total-order ETA, app id): deterministic release order, NaN-safe
+    let mut releases: Vec<(u64, AppId)> = apps
+        .iter()
+        .filter(|a| matches!(a.state, AppState::Running { .. }))
+        .map(|a| (order::key(estimated_completion(a, cluster)), a.id))
+        .collect();
+    releases.sort_unstable();
+    // free capacity after the first `k` releases have drained
+    let free_after = |k: usize| -> Vec<(f64, f64)> {
+        let mut free = base_free.clone();
+        for &(_, id) in &releases[..k] {
+            for c in &apps[id].components {
+                if let Some(p) = cluster.placement(c.id) {
+                    free[p.host].0 += p.alloc_cpus;
+                    free[p.host].1 += p.alloc_mem;
                 }
             }
         }
-        started
+        free
+    };
+    if releases.is_empty() || !greedy_cores_fit(&free_after(releases.len()), &cores) {
+        return None; // void: unplaceable even on a fully drained cluster
     }
+    // smallest release prefix whose drained capacity fits the head
+    // (k = 0 is known infeasible from the check above)
+    let (mut lo, mut hi) = (1usize, releases.len());
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if greedy_cores_fit(&free_after(mid), &cores) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    Some(order::unkey(releases[lo - 1].0))
+}
+
+/// Estimated completion time of a running application from its lazily
+/// updated progress ledger: remaining work at the current progress rate
+/// (the same arithmetic the engine's finish events use), counted from
+/// the last progress update.
+fn estimated_completion(app: &Application, cluster: &Cluster) -> f64 {
+    let active_elastic = app
+        .components
+        .iter()
+        .filter(|c| !c.is_core && cluster.placement(c.id).is_some())
+        .count();
+    app.last_progress_at + app.remaining_work / app.rate(active_elastic).max(1e-9)
+}
+
+/// Can `cores` be packed onto the scratch free-capacity vector? Greedy
+/// worst-fit (most free memory first, component order), mirroring the
+/// default placer's spreading bias. Pure estimate — no cluster mutation.
+fn greedy_cores_fit(free: &[(f64, f64)], cores: &[(f64, f64)]) -> bool {
+    let mut scratch = free.to_vec();
+    for &(cpus, mem) in cores {
+        let mut pick: Option<usize> = None;
+        for (h, &(fc, fm)) in scratch.iter().enumerate() {
+            if fc + CAPACITY_EPS >= cpus && fm + CAPACITY_EPS >= mem {
+                let better = match pick {
+                    Some(p) => fm > scratch[p].1,
+                    None => true,
+                };
+                if better {
+                    pick = Some(h);
+                }
+            }
+        }
+        match pick {
+            Some(h) => {
+                scratch[h].0 -= cpus;
+                scratch[h].1 -= mem;
+            }
+            None => return false,
+        }
+    }
+    true
 }
 
 /// Instantiate the configured scheduler.
@@ -287,6 +793,11 @@ pub fn build_scheduler(cfg: &SchedConfig) -> Box<dyn Scheduler> {
     match cfg.scheduler {
         SchedulerKind::Fifo => Box::new(FifoScheduler::new()),
         SchedulerKind::Backfill => Box::new(BackfillScheduler::new(cfg.backfill_depth)),
+        SchedulerKind::ReservationBackfill => {
+            Box::new(ReservationBackfillScheduler::new(cfg.backfill_depth))
+        }
+        SchedulerKind::Sjf => Box::new(SjfScheduler::new()),
+        SchedulerKind::Srpt => Box::new(SrptScheduler::new()),
     }
 }
 
@@ -296,6 +807,8 @@ pub fn build_placer(kind: PlacerKind) -> Box<dyn Placer> {
         PlacerKind::WorstFit => Box::new(WorstFitPlacer),
         PlacerKind::FirstFit => Box::new(FirstFitPlacer),
         PlacerKind::BestFit => Box::new(BestFitPlacer),
+        PlacerKind::CpuAware => Box::new(CpuAwareFitPlacer),
+        PlacerKind::DotProduct => Box::new(DotProductFitPlacer),
     }
 }
 
@@ -308,7 +821,7 @@ fn place_app(
     now: f64,
     price: f64,
 ) -> Option<PlacementOutcome> {
-    let price = price.clamp(0.05, 1.0);
+    let price = price.clamp(PRICE_CLAMP.0, PRICE_CLAMP.1);
     let mut placed = Vec::new();
     // Cores first — all-or-nothing.
     for c in app.components.iter().filter(|c| c.is_core) {
@@ -452,8 +965,14 @@ mod tests {
     }
 
     /// Synthetic app: `n_core` core components of (1 cpu, 4 GB) each,
-    /// with component ids starting at `first_cid`.
-    fn toy_app(id: AppId, submit: f64, n_core: usize, first_cid: usize) -> Application {
+    /// with component ids starting at `first_cid`, `work` units of work.
+    fn toy_app_sized(
+        id: AppId,
+        submit: f64,
+        n_core: usize,
+        first_cid: usize,
+        work: f64,
+    ) -> Application {
         use crate::trace::patterns::{Pattern, PatternKind};
         let components = (0..n_core)
             .map(|k| crate::workload::Component {
@@ -470,14 +989,37 @@ mod tests {
             id,
             submit_time: submit,
             components,
-            total_work: 100.0,
+            total_work: work,
             state: AppState::Queued,
-            remaining_work: 100.0,
+            remaining_work: work,
             last_progress_at: 0.0,
             failures: 0,
             preemptions: 0,
             shaping_disabled: false,
         }
+    }
+
+    /// [`toy_app_sized`] with the default 100 units of work.
+    fn toy_app(id: AppId, submit: f64, n_core: usize, first_cid: usize) -> Application {
+        toy_app_sized(id, submit, n_core, first_cid, 100.0)
+    }
+
+    /// Mark `app` as running since `since` and place its components.
+    fn run_app(apps: &mut [Application], cluster: &mut Cluster, app: AppId, since: f64) {
+        for c in &apps[app].components {
+            let h = cluster.worst_fit(c.cpu_req, c.mem_req).expect("occupant must fit");
+            assert!(cluster.place(c.id, h, c.cpu_req, c.mem_req, since));
+        }
+        apps[app].state = AppState::Running { since };
+        apps[app].last_progress_at = since;
+    }
+
+    /// Remove a finished app's components and mark it Finished.
+    fn finish_app(apps: &mut [Application], cluster: &mut Cluster, app: AppId, at: f64) {
+        for c in &apps[app].components {
+            cluster.remove(c.id);
+        }
+        apps[app].state = AppState::Finished { at };
     }
 
     #[test]
@@ -505,6 +1047,20 @@ mod tests {
     }
 
     #[test]
+    fn backfill_depth_zero_is_strict_fifo() {
+        // seed semantics: the blocked head counts against the depth
+        // budget, so depth 0 never examines a candidate
+        let mut apps = vec![toy_app(0, 0.0, 2, 0), toy_app(1, 1.0, 1, 2)];
+        let mut c = Cluster::new(&ClusterConfig::uniform(1, 4.0, 6.0));
+        let mut bf = BackfillScheduler::new(0);
+        bf.enqueue(&apps, 0);
+        bf.enqueue(&apps, 1);
+        assert!(bf.try_schedule(&mut apps, &mut c, &WorstFitPlacer, 0.0, 1.0).is_empty());
+        assert_eq!(c.placed_count(), 0);
+        assert_eq!(bf.len(), 2);
+    }
+
+    #[test]
     fn backfill_depth_bounds_the_scan() {
         // Ten two-core apps on a host that fits exactly one core: every
         // candidate blocks, and the scan stops after depth+1 attempts
@@ -528,8 +1084,240 @@ mod tests {
         assert_eq!(build_scheduler(&sc).name(), "fifo");
         sc.scheduler = crate::config::SchedulerKind::Backfill;
         assert_eq!(build_scheduler(&sc).name(), "backfill");
-        assert_eq!(build_placer(PlacerKind::WorstFit).name(), "worst-fit");
-        assert_eq!(build_placer(PlacerKind::FirstFit).name(), "first-fit");
-        assert_eq!(build_placer(PlacerKind::BestFit).name(), "best-fit");
+        // every kind builds a scheduler whose name round-trips
+        for kind in crate::config::SchedulerKind::ALL {
+            sc.scheduler = kind;
+            assert_eq!(build_scheduler(&sc).name(), kind.name());
+        }
+        for kind in PlacerKind::ALL {
+            assert_eq!(build_placer(kind).name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn sjf_orders_by_total_work_then_submit_time() {
+        let apps = vec![
+            toy_app_sized(0, 0.0, 1, 0, 50.0),
+            toy_app_sized(1, 1.0, 1, 1, 20.0),
+            toy_app_sized(2, 0.5, 1, 2, 20.0),
+            toy_app_sized(3, 0.0, 1, 3, 90.0),
+        ];
+        let mut s = SjfScheduler::new();
+        for id in 0..4 {
+            s.enqueue(&apps, id);
+        }
+        // work 20 ties break by submit time (2 before 1), then 50, then 90
+        assert_eq!(s.queued(), vec![2, 1, 0, 3]);
+    }
+
+    #[test]
+    fn srpt_orders_by_remaining_work_at_enqueue() {
+        let mut apps = vec![
+            toy_app_sized(0, 0.0, 1, 0, 50.0),
+            toy_app_sized(1, 1.0, 1, 1, 20.0),
+            toy_app_sized(2, 2.0, 1, 2, 80.0),
+        ];
+        // app 2 is a resubmission with little work left: SRPT ranks it
+        // by what *remains*, SJF would rank it by its total size
+        apps[2].remaining_work = 5.0;
+        let mut srpt = SrptScheduler::new();
+        let mut sjf = SjfScheduler::new();
+        for id in 0..3 {
+            srpt.enqueue(&apps, id);
+            sjf.enqueue(&apps, id);
+        }
+        assert_eq!(srpt.queued(), vec![2, 1, 0]);
+        assert_eq!(sjf.queued(), vec![1, 0, 2]);
+
+        // admission on an uncontended cluster follows the queue order
+        let mut c = Cluster::new(&ClusterConfig::uniform(4, 32.0, 128.0));
+        let started = srpt.try_schedule(&mut apps, &mut c, &WorstFitPlacer, 3.0, 1.0);
+        let ids: Vec<AppId> = started.iter().map(|o| o.app).collect();
+        assert_eq!(ids, vec![2, 1, 0]);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn size_ordered_nan_work_sorts_last() {
+        let mut apps =
+            vec![toy_app_sized(0, 0.0, 1, 0, f64::NAN), toy_app_sized(1, 1.0, 1, 1, 10.0)];
+        apps[0].remaining_work = f64::NAN;
+        let mut sjf = SjfScheduler::new();
+        let mut srpt = SrptScheduler::new();
+        for id in 0..2 {
+            sjf.enqueue(&apps, id);
+            srpt.enqueue(&apps, id);
+        }
+        assert_eq!(sjf.queued(), vec![1, 0]);
+        assert_eq!(srpt.queued(), vec![1, 0]);
+    }
+
+    #[test]
+    fn reservation_backfill_only_admits_work_that_precedes_the_reserved_start() {
+        // Host (4 cpu, 10 GB). A running occupant (4 GB, ETA t=100)
+        // blocks the 2-core (8 GB) head. Two later 1-core candidates
+        // both physically fit the 6 free GB, but only the short one
+        // completes before the head's reserved start at t=100.
+        let mut apps = vec![
+            toy_app(0, 0.0, 1, 0),                    // occupant: ETA 0 + 100/1
+            toy_app(1, 1.0, 2, 1),                    // head: needs 8 GB
+            toy_app_sized(2, 2.0, 1, 3, 300.0),       // long: 5 + 300 > 100
+            toy_app_sized(3, 3.0, 1, 4, 20.0),        // short: 5 + 20 <= 100
+        ];
+        let mut c = Cluster::new(&ClusterConfig::uniform(1, 4.0, 10.0));
+        run_app(&mut apps, &mut c, 0, 0.0);
+
+        let mut rb = ReservationBackfillScheduler::new(16);
+        for id in 1..4 {
+            rb.enqueue(&apps, id);
+        }
+        let started = rb.try_schedule(&mut apps, &mut c, &WorstFitPlacer, 5.0, 1.0);
+        let ids: Vec<AppId> = started.iter().map(|o| o.app).collect();
+        assert_eq!(ids, vec![3], "only the short candidate may jump the reservation");
+        assert_eq!(rb.queued(), vec![1, 2]);
+        c.check_invariants().unwrap();
+
+        // contrast: aggressive backfill admits the long candidate first
+        let mut apps2 = vec![
+            toy_app(0, 0.0, 1, 0),
+            toy_app(1, 1.0, 2, 1),
+            toy_app_sized(2, 2.0, 1, 3, 300.0),
+            toy_app_sized(3, 3.0, 1, 4, 20.0),
+        ];
+        let mut c2 = Cluster::new(&ClusterConfig::uniform(1, 4.0, 10.0));
+        run_app(&mut apps2, &mut c2, 0, 0.0);
+        let mut bf = BackfillScheduler::new(16);
+        for id in 1..4 {
+            bf.enqueue(&apps2, id);
+        }
+        let started = bf.try_schedule(&mut apps2, &mut c2, &WorstFitPlacer, 5.0, 1.0);
+        let ids: Vec<AppId> = started.iter().map(|o| o.app).collect();
+        assert_eq!(ids, vec![2], "aggressive backfill takes the first fitting candidate");
+    }
+
+    #[test]
+    fn reservation_backfill_head_starts_once_capacity_frees() {
+        let mut apps = vec![toy_app(0, 0.0, 1, 0), toy_app(1, 1.0, 2, 1)];
+        let mut c = Cluster::new(&ClusterConfig::uniform(1, 4.0, 10.0));
+        run_app(&mut apps, &mut c, 0, 0.0);
+        let mut rb = ReservationBackfillScheduler::new(16);
+        rb.enqueue(&apps, 1);
+        assert!(rb.try_schedule(&mut apps, &mut c, &WorstFitPlacer, 5.0, 1.0).is_empty());
+        finish_app(&mut apps, &mut c, 0, 90.0);
+        let started = rb.try_schedule(&mut apps, &mut c, &WorstFitPlacer, 90.0, 1.0);
+        assert_eq!(started.len(), 1);
+        assert_eq!(started[0].app, 1);
+        c.check_invariants().unwrap();
+    }
+
+    /// Drive one backfill variant with an endless stream of short
+    /// fitting candidates past a blocked head; the bounded-overtake
+    /// invariant must suspend backfill after `MAX_HEAD_OVERTAKES`
+    /// placements, and the head must start the moment capacity frees.
+    fn starvation_regression(mut sched: impl Scheduler, occupant_work: f64) {
+        // Host (4 cpu, 10 GB): occupant holds 4 GB and keeps running;
+        // the 2-core head needs 8 GB and can never start around it.
+        let mut apps =
+            vec![toy_app_sized(0, 0.0, 1, 0, occupant_work), toy_app(1, 1.0, 2, 1)];
+        let mut c = Cluster::new(&ClusterConfig::uniform(1, 4.0, 10.0));
+        run_app(&mut apps, &mut c, 0, 0.0);
+        sched.enqueue(&apps, 1);
+
+        let mut overtakes: u64 = 0;
+        let mut suspended_at: Option<u64> = None;
+        for round in 0..MAX_HEAD_OVERTAKES + 20 {
+            let now = 10.0 + round as f64;
+            let id = apps.len();
+            apps.push(toy_app_sized(id, now, 1, 2 + id, 10.0));
+            sched.enqueue(&apps, id);
+            let started = sched.try_schedule(&mut apps, &mut c, &WorstFitPlacer, now, 1.0);
+            assert!(
+                !started.iter().any(|o| o.app == 1),
+                "head cannot start while the occupant holds its capacity"
+            );
+            if started.is_empty() {
+                suspended_at = Some(round);
+                break;
+            }
+            overtakes += started.len() as u64;
+            // retire the backfilled app so the next round's candidate fits
+            for o in started {
+                finish_app(&mut apps, &mut c, o.app, now);
+            }
+        }
+        assert!(
+            suspended_at.is_some(),
+            "{}: backfill never suspended; head overtaken {overtakes} times",
+            sched.name()
+        );
+        assert!(overtakes > 0, "{}: guard fired before any backfill", sched.name());
+        assert!(
+            overtakes <= MAX_HEAD_OVERTAKES,
+            "{}: {overtakes} overtakes exceed the documented bound",
+            sched.name()
+        );
+        // capacity frees -> the head starts even while backfill is suspended
+        finish_app(&mut apps, &mut c, 0, 1e6);
+        let started = sched.try_schedule(&mut apps, &mut c, &WorstFitPlacer, 1e6, 1.0);
+        assert!(started.iter().any(|o| o.app == 1), "{}: head must start", sched.name());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn backfill_blocked_head_is_never_overtaken_indefinitely() {
+        starvation_regression(BackfillScheduler::new(16), 1e6);
+    }
+
+    #[test]
+    fn overtake_budget_survives_head_displacement() {
+        // Host (8 cpu, 15 GB): occupant holds 4 GB forever; head A
+        // (3 cores = 12 GB) can never fit around it. Churn spends A's
+        // whole overtake budget, then an earlier-submitted app B is
+        // enqueued ahead of A, starts, and displaces A as head for one
+        // wake. A's spent budget must survive the displacement: the
+        // fresh fitting candidate may not jump even though it fits.
+        let mut apps = vec![toy_app_sized(0, 0.0, 1, 0, 1e6), toy_app(1, 1.0, 3, 1)];
+        let mut c = Cluster::new(&ClusterConfig::uniform(1, 8.0, 15.0));
+        run_app(&mut apps, &mut c, 0, 0.0);
+        let mut bf = BackfillScheduler::new(16);
+        bf.enqueue(&apps, 1);
+        let mut now = 10.0;
+        loop {
+            now += 1.0;
+            let id = apps.len();
+            apps.push(toy_app_sized(id, now, 1, 1 + 3 * id, 10.0));
+            bf.enqueue(&apps, id);
+            let started = bf.try_schedule(&mut apps, &mut c, &WorstFitPlacer, now, 1.0);
+            if started.is_empty() {
+                break; // budget spent, backfill suspended
+            }
+            for o in started {
+                finish_app(&mut apps, &mut c, o.app, now);
+            }
+            assert!(now < 10.0 + 2.0 * MAX_HEAD_OVERTAKES as f64, "never suspended");
+        }
+        // the suspension round's candidate is still queued behind A
+        let leftover = *bf.queued().last().unwrap();
+        // B (submit 0.5 < A's 1.0) jumps ahead, fits and starts; a new
+        // candidate also fits the remaining 7 GB but must stay queued
+        let b = apps.len();
+        apps.push(toy_app(b, 0.5, 1, 1 + 3 * b));
+        bf.enqueue(&apps, b);
+        let cand = apps.len();
+        apps.push(toy_app_sized(cand, now + 1.0, 1, 1 + 3 * cand, 10.0));
+        bf.enqueue(&apps, cand);
+        let started = bf.try_schedule(&mut apps, &mut c, &WorstFitPlacer, now + 1.0, 1.0);
+        let ids: Vec<AppId> = started.iter().map(|o| o.app).collect();
+        assert_eq!(ids, vec![b], "B starts head-of-line; the candidate must not backfill");
+        assert_eq!(bf.queued(), vec![1, leftover, cand]);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reservation_backfill_blocked_head_is_never_overtaken_indefinitely() {
+        // occupant ETA ~1e6: every short candidate precedes the reserved
+        // start, so only the overtake bound stands between the head and
+        // indefinite starvation
+        starvation_regression(ReservationBackfillScheduler::new(16), 1e6);
     }
 }

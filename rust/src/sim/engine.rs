@@ -122,6 +122,9 @@ pub struct Engine {
     comp_index: Vec<(AppId, usize)>,
     /// per-app finish-event version (invalidates stale finish events)
     finish_version: Vec<u64>,
+    /// per-app accumulated running time across attempts (service time:
+    /// the fairness metrics' wait/stretch denominators)
+    service_time: Vec<f64>,
     /// per-app count of currently placed elastic components
     placed_elastic: Vec<usize>,
     /// running apps, ascending — maintained on every state transition so
@@ -162,6 +165,22 @@ impl Engine {
     /// Build an engine with an explicit monitor gather mode (tests and
     /// benches; `new` defaults to the incremental path).
     pub fn with_monitor_mode(cfg: SimConfig, source: ForecastSource, mode: MonitorMode) -> Self {
+        let scheduler = build_scheduler(&cfg.sched);
+        let placer = build_placer(cfg.sched.placer);
+        Self::with_policies(cfg, source, mode, scheduler, placer)
+    }
+
+    /// Build an engine with explicit scheduler/placer instances instead
+    /// of the `cfg.sched`-built ones. The golden-equivalence suite
+    /// injects linear-reference oracle policies here to pin the default
+    /// FIFO + worst-fit behavior against an independent implementation.
+    pub fn with_policies(
+        cfg: SimConfig,
+        source: ForecastSource,
+        mode: MonitorMode,
+        scheduler: Box<dyn Scheduler>,
+        placer: Box<dyn Placer>,
+    ) -> Self {
         let wl = workload::generate(&cfg.workload, cfg.seed);
         let mut comp_index = vec![(0usize, 0usize); wl.num_components];
         for app in &wl.apps {
@@ -178,12 +197,13 @@ impl Engine {
             cluster,
             monitor: Monitor::new(n_comp, history_cap),
             metrics: Metrics::new(n_apps),
-            scheduler: build_scheduler(&cfg.sched),
-            placer: build_placer(cfg.sched.placer),
+            scheduler,
+            placer,
             queue: EventQueue::new(),
             apps: wl.apps,
             comp_index,
             finish_version: vec![0; n_apps],
+            service_time: vec![0.0; n_apps],
             placed_elastic: vec![0; n_apps],
             running: BTreeSet::new(),
             unfinished: n_apps,
@@ -372,10 +392,13 @@ impl Engine {
                 self.cluster.remove(cid);
                 self.monitor.reset(cid);
             }
+            let AppState::Running { since } = self.apps[a].state else { unreachable!() };
+            self.service_time[a] += (now - since).max(0.0);
             self.placed_elastic[a] = 0;
             self.apps[a].state = AppState::Finished { at: now };
             self.running.remove(&a);
-            self.metrics.record_finish(self.apps[a].submit_time, now);
+            self.metrics
+                .record_finish(self.apps[a].submit_time, now, self.service_time[a]);
             self.unfinished -= 1;
             self.queue.push(now, Event::SchedulerWake);
         } else {
@@ -780,9 +803,12 @@ impl Engine {
     /// Fully preempt (or fail) an app: all components removed, all work
     /// lost, resubmitted at original priority.
     fn preempt_app(&mut self, a: AppId, now: f64, is_failure: bool) {
-        if !matches!(self.apps[a].state, AppState::Running { .. }) {
+        let AppState::Running { since } = self.apps[a].state else {
             return;
-        }
+        };
+        // the lost attempt still counts as service: stretch measures time
+        // in the system, not useful progress (wasted_work tracks the loss)
+        self.service_time[a] += (now - since).max(0.0);
         self.update_progress(a, now);
         let done = self.apps[a].total_work - self.apps[a].remaining_work;
         // index loop: the removals need `&mut self`
@@ -1013,15 +1039,48 @@ mod tests {
         cfg.workload.num_apps = 20;
         cfg.forecast.kind = ForecasterKind::Oracle;
         cfg.shaper.policy = Policy::Pessimistic;
-        for sched in [SchedulerKind::Fifo, SchedulerKind::Backfill] {
-            for placer in [PlacerKind::WorstFit, PlacerKind::FirstFit, PlacerKind::BestFit] {
+        for sched in SchedulerKind::ALL {
+            for placer in PlacerKind::ALL {
                 cfg.sched.scheduler = sched;
                 cfg.sched.placer = placer;
                 let name = format!("{}-{}", sched.name(), placer.name());
                 let r = run_simulation(&cfg, None, &name).unwrap();
                 assert_eq!(r.completed, 20, "{name}: {}", r.summary());
+                // fairness instrumentation holds for every policy:
+                // wait + service = turnaround, so stretch >= 1 and the
+                // mean wait can never exceed the mean turnaround
+                assert!(r.stretch.min >= 1.0 - 1e-9, "{name}: {}", r.summary());
+                assert!(r.wait.mean <= r.turnaround.mean + 1e-9, "{name}");
+                assert!(r.wait.min >= 0.0, "{name}");
             }
         }
+    }
+
+    #[test]
+    fn wait_and_stretch_measure_queueing() {
+        // saturate a one-host cluster so late arrivals must queue: waits
+        // are strictly positive and stretch exceeds 1 for someone. The
+        // host is sized so any single app's cores fit (clamped samples:
+        // <= 3 cores x 6 cpus / 64 GB) but the 30-app burst cannot.
+        let mut cfg = tiny_cfg();
+        cfg.cluster = crate::config::ClusterConfig::uniform(1, 64.0, 256.0);
+        cfg.workload.runtime_scale = 5.0;
+        cfg.forecast.kind = ForecasterKind::Oracle;
+        cfg.shaper.policy = Policy::Baseline;
+        let r = run_simulation(&cfg, None, "queued").unwrap();
+        assert_eq!(r.completed, 30, "{}", r.summary());
+        assert_eq!(r.wait.n, r.completed);
+        assert_eq!(r.stretch.n, r.completed);
+        assert!(r.wait.max > 0.0, "nothing ever waited: {}", r.summary());
+        assert!(r.stretch.max > 1.0, "{}", r.summary());
+        // an uncontended run has no more waiting than the saturated one
+        let mut cfg2 = tiny_cfg();
+        cfg2.cluster = crate::config::ClusterConfig::uniform(64, 64.0, 256.0);
+        cfg2.workload.runtime_scale = 5.0;
+        cfg2.forecast.kind = ForecasterKind::Oracle;
+        cfg2.shaper.policy = Policy::Baseline;
+        let r2 = run_simulation(&cfg2, None, "idle").unwrap();
+        assert!(r2.wait.mean <= r.wait.mean, "{} vs {}", r2.wait.mean, r.wait.mean);
     }
 
     #[test]

@@ -8,10 +8,22 @@
 //! tier-1 configurations and demand identical `RunReport`s, and run the
 //! sharded pass under several `ZOE_WORKERS` settings to pin down
 //! worker-count independence.
+//!
+//! Since PR 4 the suite additionally pins the **default policies**
+//! themselves: a run under the indexed `FifoScheduler` + `WorstFitPlacer`
+//! must be bit-identical to one under independently implemented linear
+//! oracles of the same policies (the seed system's Vec-queue +
+//! scan-all-hosts semantics), so growing the policy family can never
+//! silently perturb default reports.
 
+use zoe_shaper::cluster::{Cluster, CAPACITY_EPS};
 use zoe_shaper::config::{ForecasterKind, Policy, SimConfig};
 use zoe_shaper::metrics::RunReport;
-use zoe_shaper::sim::engine::{run_simulation_with, MonitorMode};
+use zoe_shaper::scheduler::{Placer, PlacementOutcome, Scheduler};
+use zoe_shaper::sim::engine::{
+    run_simulation_with, Engine, ForecastSource, MonitorMode,
+};
+use zoe_shaper::workload::{AppId, Application, AppState, HostId};
 
 fn tier1_cfg() -> SimConfig {
     let mut cfg = SimConfig::small();
@@ -38,6 +50,12 @@ fn assert_reports_identical(a: &RunReport, b: &RunReport, ctx: &str) {
         (a.turnaround.mean, b.turnaround.mean, "turnaround.mean"),
         (a.turnaround.median, b.turnaround.median, "turnaround.median"),
         (a.turnaround.max, b.turnaround.max, "turnaround.max"),
+        (a.wait.mean, b.wait.mean, "wait.mean"),
+        (a.wait.median, b.wait.median, "wait.median"),
+        (a.wait.max, b.wait.max, "wait.max"),
+        (a.stretch.mean, b.stretch.mean, "stretch.mean"),
+        (a.stretch.median, b.stretch.median, "stretch.median"),
+        (a.stretch.max, b.stretch.max, "stretch.max"),
         (a.cpu_slack.mean, b.cpu_slack.mean, "cpu_slack.mean"),
         (a.mem_slack.mean, b.mem_slack.mean, "mem_slack.mean"),
         (a.failed_app_fraction, b.failed_app_fraction, "failed_app_fraction"),
@@ -137,6 +155,152 @@ fn incremental_matches_reference_across_seeds() {
         let reference =
             run_simulation_with(&cfg, None, "ref", MonitorMode::ReferenceScan).unwrap();
         assert_reports_identical(&inc, &reference, &format!("seed {seed}"));
+    }
+}
+
+// ----- default-policy pinning against independent linear oracles -------
+
+/// The seed system's worst-fit, reimplemented independently of the
+/// cluster's capacity indexes: scan every host, most free memory wins,
+/// ties to the highest id (`max_by` keeps the last maximum).
+struct LinearWorstFitOracle;
+
+impl Placer for LinearWorstFitOracle {
+    fn name(&self) -> &'static str {
+        "linear-worst-fit-oracle"
+    }
+
+    fn select(&self, cluster: &Cluster, cpus: f64, mem: f64) -> Option<HostId> {
+        cluster
+            .hosts
+            .iter()
+            .filter(|h| {
+                h.free_cpus() + CAPACITY_EPS >= cpus && h.free_mem() + CAPACITY_EPS >= mem
+            })
+            .max_by(|a, b| a.free_mem().total_cmp(&b.free_mem()))
+            .map(|h| h.id)
+    }
+}
+
+/// The seed system's FIFO, reimplemented as a plain sorted Vec queue:
+/// (submit time, app id) order, head-of-line blocking, all-or-nothing
+/// core placement with best-effort elastic.
+#[derive(Default)]
+struct LinearFifoOracle {
+    queue: Vec<AppId>,
+}
+
+impl LinearFifoOracle {
+    /// All-or-nothing cores, best-effort elastic — mirrors the engine's
+    /// admission contract without sharing its implementation.
+    fn try_place(
+        app: &Application,
+        cluster: &mut Cluster,
+        placer: &dyn Placer,
+        now: f64,
+        price: f64,
+    ) -> Option<PlacementOutcome> {
+        let price = price.clamp(0.05, 1.0);
+        let mut placed = Vec::new();
+        for c in app.components.iter().filter(|c| c.is_core) {
+            match placer.select(cluster, c.cpu_req * price, c.mem_req * price) {
+                Some(h) => {
+                    assert!(cluster.place(c.id, h, c.cpu_req * price, c.mem_req * price, now));
+                    placed.push(c.id);
+                }
+                None => {
+                    for &p in &placed {
+                        cluster.remove(p);
+                    }
+                    return None;
+                }
+            }
+        }
+        let mut skipped = Vec::new();
+        for c in app.components.iter().filter(|c| !c.is_core) {
+            match placer.select(cluster, c.cpu_req * price, c.mem_req * price) {
+                Some(h) => {
+                    assert!(cluster.place(c.id, h, c.cpu_req * price, c.mem_req * price, now));
+                    placed.push(c.id);
+                }
+                None => skipped.push(c.id),
+            }
+        }
+        Some(PlacementOutcome { app: app.id, placed, skipped_elastic: skipped })
+    }
+}
+
+impl Scheduler for LinearFifoOracle {
+    fn name(&self) -> &'static str {
+        "linear-fifo-oracle"
+    }
+
+    fn enqueue(&mut self, apps: &[Application], id: AppId) {
+        let pos = self.queue.partition_point(|&q| {
+            apps[q].submit_time < apps[id].submit_time
+                || (apps[q].submit_time == apps[id].submit_time && q < id)
+        });
+        self.queue.insert(pos, id);
+    }
+
+    fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn queued(&self) -> Vec<AppId> {
+        self.queue.clone()
+    }
+
+    fn try_schedule(
+        &mut self,
+        apps: &mut [Application],
+        cluster: &mut Cluster,
+        placer: &dyn Placer,
+        now: f64,
+        price: f64,
+    ) -> Vec<PlacementOutcome> {
+        let mut started = Vec::new();
+        while let Some(&head) = self.queue.first() {
+            match Self::try_place(&apps[head], cluster, placer, now, price) {
+                Some(outcome) => {
+                    apps[head].state = AppState::Running { since: now };
+                    apps[head].last_progress_at = now;
+                    self.queue.remove(0);
+                    started.push(outcome);
+                }
+                None => break,
+            }
+        }
+        started
+    }
+}
+
+/// The PR 4 policy expansion must never perturb the defaults: a run
+/// under the production `FifoScheduler` + `WorstFitPlacer` (B-tree
+/// queue, indexed fit queries) is bit-identical to one under the
+/// independent linear oracles above — i.e. to the seed system's
+/// admission semantics — for every shaping policy.
+#[test]
+fn default_policies_match_linear_reference_oracles() {
+    for policy in [Policy::Baseline, Policy::Optimistic, Policy::Pessimistic] {
+        let mut cfg = tier1_cfg();
+        cfg.shaper.policy = policy;
+        cfg.forecast.kind = ForecasterKind::Oracle;
+        let default_run =
+            run_simulation_with(&cfg, None, "default", MonitorMode::Incremental).unwrap();
+        let eng = Engine::with_policies(
+            cfg.clone(),
+            ForecastSource::Oracle,
+            MonitorMode::Incremental,
+            Box::new(LinearFifoOracle::default()),
+            Box::new(LinearWorstFitOracle),
+        );
+        let oracle_run = eng.run("linear-oracles");
+        assert_reports_identical(
+            &default_run,
+            &oracle_run,
+            &format!("linear oracle vs default, policy {}", policy.name()),
+        );
     }
 }
 

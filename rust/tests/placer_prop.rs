@@ -7,10 +7,22 @@
 
 use zoe_shaper::cluster::{Cluster, CAPACITY_EPS};
 use zoe_shaper::config::{ClusterConfig, HostClass};
-use zoe_shaper::scheduler::{BestFitPlacer, FirstFitPlacer, Placer, WorstFitPlacer};
+use zoe_shaper::scheduler::{
+    BestFitPlacer, CpuAwareFitPlacer, DotProductFitPlacer, FirstFitPlacer, Placer, WorstFitPlacer,
+};
 use zoe_shaper::util::rng::Pcg;
 
 const CASES: u64 = 200;
+
+/// Every placer the property suite covers — one list, so adding a
+/// placer extends all three tests at once.
+const ALL_PLACERS: [&dyn Placer; 5] = [
+    &WorstFitPlacer,
+    &FirstFitPlacer,
+    &BestFitPlacer,
+    &CpuAwareFitPlacer,
+    &DotProductFitPlacer,
+];
 
 /// A random cluster, possibly heterogeneous.
 fn random_cluster(rng: &mut Pcg) -> Cluster {
@@ -36,7 +48,6 @@ fn fits(c: &Cluster, h: usize, cpus: f64, mem: f64) -> bool {
 
 #[test]
 fn prop_placers_agree_with_linear_reference_under_churn() {
-    let placers: [&dyn Placer; 3] = [&WorstFitPlacer, &FirstFitPlacer, &BestFitPlacer];
     for seed in 0..CASES {
         let mut rng = Pcg::seeded(seed);
         let mut cluster = random_cluster(&mut rng);
@@ -47,7 +58,7 @@ fn prop_placers_agree_with_linear_reference_under_churn() {
             let roll = rng.f64();
             if roll < 0.5 || live.is_empty() {
                 let (cpus, mem) = (rng.uniform(0.1, 8.0), rng.uniform(0.1, 24.0));
-                let placer = placers[rng.index(3)];
+                let placer = ALL_PLACERS[rng.index(ALL_PLACERS.len())];
                 if let Some(h) = placer.select(&cluster, cpus, mem) {
                     assert!(
                         fits(&cluster, h, cpus, mem),
@@ -93,13 +104,35 @@ fn prop_placers_agree_with_linear_reference_under_churn() {
                 })
                 .map(|h| h.id);
             assert_eq!(cluster.best_fit(qc, qm), best_ref, "seed {seed}: best_fit");
+            // cpu-aware: most free cpu, ties to the highest id (max_by
+            // keeps the last maximum, i.e. the highest id)
+            let cpu_ref = cluster
+                .hosts
+                .iter()
+                .filter(|h| fits(&cluster, h.id, qc, qm))
+                .max_by(|a, b| a.free_cpus().total_cmp(&b.free_cpus()))
+                .map(|h| h.id);
+            assert_eq!(cluster.cpu_aware_fit(qc, qm), cpu_ref, "seed {seed}: cpu_aware_fit");
+            // dot-product: request-aligned free vector, same tie-break;
+            // the score expression mirrors the segment tree's exactly so
+            // float results are bit-identical
+            let dot_ref = cluster
+                .hosts
+                .iter()
+                .filter(|h| fits(&cluster, h.id, qc, qm))
+                .max_by(|a, b| {
+                    let sa = qc * a.free_cpus() + qm * a.free_mem();
+                    let sb = qc * b.free_cpus() + qm * b.free_mem();
+                    sa.total_cmp(&sb)
+                })
+                .map(|h| h.id);
+            assert_eq!(cluster.dot_product_fit(qc, qm), dot_ref, "seed {seed}: dot_product_fit");
         }
     }
 }
 
 #[test]
 fn prop_placer_none_means_no_host_fits() {
-    let placers: [&dyn Placer; 3] = [&WorstFitPlacer, &FirstFitPlacer, &BestFitPlacer];
     for seed in 0..CASES {
         let mut rng = Pcg::seeded(10_000 + seed);
         let mut cluster = random_cluster(&mut rng);
@@ -112,7 +145,7 @@ fn prop_placer_none_means_no_host_fits() {
                 cid += 1;
             }
         }
-        for placer in placers {
+        for placer in ALL_PLACERS {
             let (qc, qm) = (rng.uniform(0.1, 64.0), rng.uniform(0.1, 256.0));
             let got = placer.select(&cluster, qc, qm);
             let any = (0..cluster.len()).any(|h| fits(&cluster, h, qc, qm));
@@ -132,9 +165,8 @@ fn heterogeneous_placers_respect_per_host_capacity() {
     let mut cfg = ClusterConfig::uniform(2, 4.0, 8.0);
     cfg.extra_classes.push(HostClass { count: 2, cores: 64.0, mem_gb: 256.0 });
     let mut cluster = Cluster::new(&cfg);
-    let placers: [&dyn Placer; 3] = [&WorstFitPlacer, &FirstFitPlacer, &BestFitPlacer];
     let mut cid = 0;
-    for placer in placers {
+    for placer in ALL_PLACERS {
         for _ in 0..3 {
             let h = placer
                 .select(&cluster, 8.0, 16.0)
@@ -145,5 +177,5 @@ fn heterogeneous_placers_respect_per_host_capacity() {
         }
     }
     cluster.check_invariants().unwrap();
-    assert_eq!(cluster.placed_count(), 9);
+    assert_eq!(cluster.placed_count(), 15);
 }

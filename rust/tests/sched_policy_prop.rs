@@ -1,0 +1,160 @@
+//! Property tests for the size-ordered admission policies (PR 4):
+//! `SrptScheduler`'s admission order must equal a sorted linear
+//! reference — (remaining work at enqueue, submit time, app id) under
+//! IEEE total order — across arrival/completion/resubmission churn, and
+//! `SjfScheduler` the same with total work as the primary key.
+//! Hand-rolled driver: proptest is not in the offline crate set.
+
+use zoe_shaper::cluster::Cluster;
+use zoe_shaper::config::ClusterConfig;
+use zoe_shaper::scheduler::{Scheduler, SjfScheduler, SrptScheduler, WorstFitPlacer};
+use zoe_shaper::trace::patterns::{Pattern, PatternKind};
+use zoe_shaper::util::order;
+use zoe_shaper::util::rng::Pcg;
+use zoe_shaper::workload::{AppId, Application, AppState, Component};
+
+const CASES: u64 = 60;
+
+/// Minimal single-core app (0.5 cpu, 1 GB): everything fits the huge
+/// driver cluster, so admission order is purely the queue order.
+fn make_app(id: AppId, submit: f64, work: f64) -> Application {
+    Application {
+        id,
+        submit_time: submit,
+        components: vec![Component {
+            id,
+            app: id,
+            is_core: true,
+            cpu_req: 0.5,
+            mem_req: 1.0,
+            cpu_pattern: Pattern::new(PatternKind::Constant { level: 0.4 }, 1, 0.0),
+            mem_pattern: Pattern::new(PatternKind::Constant { level: 0.4 }, 2, 0.0),
+        }],
+        total_work: work,
+        state: AppState::Queued,
+        remaining_work: work,
+        last_progress_at: 0.0,
+        failures: 0,
+        preemptions: 0,
+        shaping_disabled: false,
+    }
+}
+
+/// The linear reference: keys snapshotted at enqueue time, sorted by
+/// total order — exactly what the scheduler's B-tree promises.
+#[derive(Default)]
+struct ReferenceQueue {
+    entries: Vec<(u64, u64, AppId)>,
+}
+
+impl ReferenceQueue {
+    fn enqueue(&mut self, primary: f64, submit: f64, id: AppId) {
+        self.entries.push((order::key(primary), order::key(submit), id));
+    }
+
+    fn drain_sorted(&mut self) -> Vec<AppId> {
+        self.entries.sort_unstable();
+        self.entries.drain(..).map(|(_, _, id)| id).collect()
+    }
+}
+
+/// Drive one size-ordered scheduler against the reference through
+/// random churn. `key_of` extracts the policy's primary key from the
+/// app state at enqueue time.
+fn churn_property(
+    seed: u64,
+    mut sched: impl Scheduler,
+    key_of: impl Fn(&Application) -> f64,
+    allow_partial_progress: bool,
+) {
+    let mut rng = Pcg::seeded(seed);
+    let mut cluster = Cluster::new(&ClusterConfig::uniform(64, 64.0, 256.0));
+    let mut apps: Vec<Application> = Vec::new();
+    let mut reference = ReferenceQueue::default();
+    let mut running: Vec<AppId> = Vec::new();
+
+    for round in 0..12 {
+        // a burst of arrivals, submit times deliberately shuffled so the
+        // queue cannot accidentally be insertion-ordered
+        for _ in 0..rng.int_range(1, 6) {
+            let id = apps.len();
+            let submit = rng.uniform(0.0, 1000.0);
+            let work = if rng.chance(0.1) { f64::NAN } else { rng.uniform(1.0, 500.0) };
+            apps.push(make_app(id, submit, work));
+            reference.enqueue(key_of(&apps[id]), submit, id);
+            sched.enqueue(&apps, id);
+        }
+        // completion churn: retire some running apps, resubmit others
+        // (resubmission re-keys SRPT by what *remains*)
+        let mut still_running = Vec::new();
+        for a in running.drain(..) {
+            let roll = rng.f64();
+            if roll < 0.4 {
+                cluster.remove(apps[a].components[0].id);
+                apps[a].state = AppState::Finished { at: round as f64 };
+            } else if roll < 0.6 {
+                cluster.remove(apps[a].components[0].id);
+                if allow_partial_progress && apps[a].remaining_work.is_finite() {
+                    // SRPT's distinguishing case: requeue with less work
+                    apps[a].remaining_work *= rng.uniform(0.1, 0.9);
+                }
+                apps[a].state = AppState::Queued;
+                reference.enqueue(key_of(&apps[a]), apps[a].submit_time, a);
+                sched.enqueue(&apps, a);
+            } else {
+                still_running.push(a);
+            }
+        }
+        running = still_running;
+
+        // the uncontended drain must admit in exactly sorted-key order
+        let expected = reference.drain_sorted();
+        let started = sched.try_schedule(&mut apps, &mut cluster, &WorstFitPlacer, round as f64, 1.0);
+        let got: Vec<AppId> = started.iter().map(|o| o.app).collect();
+        assert_eq!(got, expected, "seed {seed} round {round}: admission order diverged");
+        assert_eq!(sched.len(), 0, "seed {seed}: uncontended queue must drain fully");
+        running.extend(got);
+        cluster.check_invariants().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}
+
+#[test]
+fn prop_srpt_admission_order_matches_sorted_linear_reference() {
+    for seed in 0..CASES {
+        churn_property(
+            seed,
+            SrptScheduler::new(),
+            |a: &Application| a.remaining_work,
+            true,
+        );
+    }
+}
+
+#[test]
+fn prop_sjf_admission_order_matches_sorted_linear_reference() {
+    // SJF keys on the immutable total size, so partial-progress
+    // resubmission must *not* change its ordering key
+    for seed in 0..CASES {
+        churn_property(
+            seed,
+            SjfScheduler::new(),
+            |a: &Application| a.total_work,
+            true,
+        );
+    }
+}
+
+#[test]
+fn srpt_prefers_resubmitted_partial_work_over_equal_sized_fresh_jobs() {
+    let mut apps = vec![make_app(0, 0.0, 100.0), make_app(1, 1.0, 100.0)];
+    // app 1 previously ran and kept partial progress
+    apps[1].remaining_work = 30.0;
+    let mut srpt = SrptScheduler::new();
+    srpt.enqueue(&apps, 0);
+    srpt.enqueue(&apps, 1);
+    assert_eq!(srpt.queued(), vec![1, 0], "less remaining work goes first");
+    let mut sjf = SjfScheduler::new();
+    sjf.enqueue(&apps, 0);
+    sjf.enqueue(&apps, 1);
+    assert_eq!(sjf.queued(), vec![0, 1], "SJF ignores progress, ties break by submit");
+}

@@ -14,6 +14,10 @@ cargo build --release --benches --examples
 cargo bench --no-run
 cargo test -q
 
+# docs gate: rustdoc must build warning-free (broken intra-doc links,
+# bad code fences, missing docs on public items referenced from docs/)
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 # lint gate: clippy across every target (skipped gracefully on
 # toolchains without the clippy component)
 if cargo clippy --version >/dev/null 2>&1; then
