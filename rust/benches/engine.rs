@@ -9,10 +9,13 @@
 //! scheduling + shaping via `pump_until`), then times individual
 //! monitor and shaper passes: 250 hosts (the paper's simulation testbed)
 //! and 1000 hosts (the scale-up scenario). Placer select queries are
-//! timed on the warm 1000-host cluster as well, and the sliding-window
-//! GP's warm tick is timed in both factor-maintenance modes (rank-1
-//! slide vs per-tick refactorization) at the 250-host ≈ 10k-series
-//! paper scale. Results are appended to `BENCH_engine.json` keyed by
+//! timed on the warm 1000-host cluster as well; the reservation
+//! scheduler's shadow estimate (stale scan vs feedback ledger) and the
+//! shaper→scheduler feedback hand-off are timed on the warm 250-host
+//! cluster; and the sliding-window GP's warm tick is timed in both
+//! factor-maintenance modes (rank-1 slide vs per-tick refactorization)
+//! at the 250-host ≈ 10k-series paper scale. Results are appended to
+//! `BENCH_engine.json` keyed by
 //! git revision, so the cross-PR trajectory accumulates. `ZOE_WORKERS`
 //! caps the sampling-pass worker threads.
 
@@ -21,10 +24,15 @@ use std::time::Duration;
 use zoe_shaper::config::{ForecasterKind, KernelKind, Policy, SimConfig};
 use zoe_shaper::forecast::gp_incremental::{GpIncremental, SlideMode};
 use zoe_shaper::forecast::{Forecaster, SeriesRef};
+use zoe_shaper::scheduler::{
+    shadow_start_time, ReservationBackfillScheduler, Scheduler, SchedulerFeedback,
+};
+use zoe_shaper::shaper::ShapeActions;
 use zoe_shaper::sim::engine::{Engine, ForecastSource};
 use zoe_shaper::trace::patterns::Pattern;
 use zoe_shaper::util::bench::Bench;
 use zoe_shaper::util::rng::Pcg;
+use zoe_shaper::workload::AppState;
 
 /// Build and warm an engine: dense arrivals of long-running apps fill
 /// the cluster, then several monitor/shaper cycles reach steady state.
@@ -58,6 +66,11 @@ fn bench_scale(b: &mut Bench, hosts: usize, apps: usize) {
     b.run(&format!("engine_shaper_tick_{hosts}hosts"), || eng.shaper_tick_once());
     eng.cluster().check_invariants().expect("bench left the cluster inconsistent");
 
+    if hosts == 250 {
+        // the reservation path at the paper-scale warm cluster
+        bench_reservation_feedback(b, &eng);
+    }
+
     if hosts >= 1000 {
         let cluster = eng.cluster();
         b.run("placer_worst_fit_select_1000hosts", || cluster.worst_fit(1.0, 4.0));
@@ -66,6 +79,61 @@ fn bench_scale(b: &mut Bench, hosts: usize, apps: usize) {
         b.run("placer_cpu_aware_select_1000hosts", || cluster.cpu_aware_fit(1.0, 4.0));
         b.run("placer_dot_product_select_1000hosts", || cluster.dot_product_fit(1.0, 4.0));
     }
+}
+
+/// Reservation-scheduler cases over the warm 250-host cluster: the
+/// per-blocked-wake shadow estimate (stale cluster scan vs the
+/// feedback-ledger path) and the per-shaping-tick feedback hand-off
+/// (snapshot capture + `observe`). Appended to `BENCH_engine.json` like
+/// the rest, and compiled by `cargo bench --no-run` in scripts/ci.sh so
+/// the reservation path cannot rot under the bench profile.
+fn bench_reservation_feedback(b: &mut Bench, eng: &Engine) {
+    let apps = eng.apps();
+    let cluster = eng.cluster();
+    let now = eng.now();
+    let running: Vec<usize> = apps
+        .iter()
+        .filter(|a| matches!(a.state, AppState::Running { .. }))
+        .map(|a| a.id)
+        .collect();
+    // the head whose reservation gets estimated: a queued app if the
+    // warm state has one (it does at these scales), else any app
+    let head = apps
+        .iter()
+        .find(|a| matches!(a.state, AppState::Queued))
+        .map(|a| a.id)
+        .unwrap_or(0);
+    println!(
+        "  [reservation] {} running apps feed the shadow estimate; head = app {head}",
+        running.len()
+    );
+    b.run("shadow_start_time_250hosts", || {
+        shadow_start_time(apps, cluster, head, now, 1.0, None)
+    });
+    // a shaping-tick-shaped plan: every 16th running app fully
+    // preempted, every 7th losing one placed elastic component
+    let mut actions = ShapeActions::default();
+    for (i, &a) in running.iter().enumerate() {
+        if i % 16 == 0 {
+            actions.preempt_apps.push(a);
+        } else if i % 7 == 0 {
+            if let Some(c) = apps[a]
+                .components
+                .iter()
+                .find(|c| !c.is_core && cluster.placement(c.id).is_some())
+            {
+                actions.preempt_elastic.push(c.id);
+            }
+        }
+    }
+    let mut sched = ReservationBackfillScheduler::new(16);
+    b.run("feedback_capture_observe_250hosts", || {
+        sched.observe(SchedulerFeedback::capture(apps, cluster, &running, &actions, now));
+    });
+    let fb = SchedulerFeedback::capture(apps, cluster, &running, &actions, now);
+    b.run("shadow_start_time_feedback_250hosts", || {
+        shadow_start_time(apps, cluster, head, now, 1.0, Some(&fb))
+    });
 }
 
 /// A synthetic corpus of keyed sliding windows: every `tick()` advances

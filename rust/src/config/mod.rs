@@ -229,11 +229,26 @@ pub struct SchedConfig {
     /// before giving up for the tick (bounds head-of-line starvation
     /// scanning; ignored by strict FIFO).
     pub backfill_depth: usize,
+    /// Blocked applications holding simultaneous start-time reservations
+    /// under `reservation-backfill` (>= 1; 1 = the single-head
+    /// reservation, today's behavior). Ignored by the other schedulers.
+    pub reservations: usize,
+    /// Deliver the shaper's per-tick feedback snapshot (planned
+    /// preemptions + post-shaping ETA ledger) to the scheduler; false =
+    /// the stale cluster-scan ETA estimator. Only `reservation-backfill`
+    /// consumes it today.
+    pub feedback: bool,
 }
 
 impl Default for SchedConfig {
     fn default() -> Self {
-        SchedConfig { scheduler: SchedulerKind::Fifo, placer: PlacerKind::WorstFit, backfill_depth: 16 }
+        SchedConfig {
+            scheduler: SchedulerKind::Fifo,
+            placer: PlacerKind::WorstFit,
+            backfill_depth: 16,
+            reservations: 1,
+            feedback: true,
+        }
     }
 }
 
@@ -461,6 +476,12 @@ impl SimConfig {
             if let Some(v) = s.get("backfill_depth").and_then(Json::as_usize) {
                 self.sched.backfill_depth = v;
             }
+            if let Some(v) = s.get("reservations").and_then(Json::as_usize) {
+                self.sched.reservations = v;
+            }
+            if let Some(v) = s.get("feedback").and_then(Json::as_bool) {
+                self.sched.feedback = v;
+            }
         }
         if let Some(w) = j.get("workload") {
             if let Some(v) = w.get("num_apps").and_then(Json::as_usize) {
@@ -543,6 +564,9 @@ impl SimConfig {
             if c.cores <= 0.0 || c.mem_gb <= 0.0 {
                 return Err(format!("cluster class {i} resources must be positive"));
             }
+        }
+        if self.sched.reservations == 0 {
+            return Err("sched.reservations must be >= 1".into());
         }
         if !(0.0..=1.0).contains(&self.workload.elastic_fraction) {
             return Err("elastic_fraction must be in [0,1]".into());
@@ -664,13 +688,24 @@ mod tests {
         let c = SimConfig::small();
         assert_eq!(c.sched.scheduler, SchedulerKind::Fifo);
         assert_eq!(c.sched.placer, PlacerKind::WorstFit);
+        // one reservation == today's single-head reservation semantics
+        assert_eq!(c.sched.reservations, 1);
+        assert!(c.sched.feedback);
+    }
+
+    #[test]
+    fn zero_reservations_rejected() {
+        let mut c = SimConfig::small();
+        let j = Json::parse(r#"{"sched":{"reservations":0}}"#).unwrap();
+        assert!(c.apply_json(&j).is_err());
     }
 
     #[test]
     fn sched_and_classes_json_overrides() {
         let mut c = SimConfig::small();
         let j = Json::parse(
-            r#"{"sched":{"scheduler":"backfill","placer":"best-fit","backfill_depth":4},
+            r#"{"sched":{"scheduler":"backfill","placer":"best-fit","backfill_depth":4,
+                         "reservations":4,"feedback":false},
                 "cluster":{"classes":[{"count":2,"cores":64,"mem_gb":256}]}}"#,
         )
         .unwrap();
@@ -678,6 +713,8 @@ mod tests {
         assert_eq!(c.sched.scheduler, SchedulerKind::Backfill);
         assert_eq!(c.sched.placer, PlacerKind::BestFit);
         assert_eq!(c.sched.backfill_depth, 4);
+        assert_eq!(c.sched.reservations, 4);
+        assert!(!c.sched.feedback);
         assert_eq!(c.cluster.extra_classes.len(), 1);
         assert_eq!(c.cluster.total_hosts(), 8 + 2);
 

@@ -5,7 +5,13 @@
 //! (host-class skew is where placement policies separate), and reports
 //! turnaround, the fairness pair (wait, stretch), slack, failures and
 //! admission behavior side by side, the way Fig. 3 compares shaping
-//! policies.
+//! policies. The `reservation-backfill` scheduler additionally sweeps a
+//! reservation axis ([`RESERVATION_VARIANTS`]): the stale cluster-scan
+//! ETA baseline vs the shaper-feedback-corrected estimator at R = 1, and
+//! the multi-reservation R = 4 point — with a shadow-error column
+//! (mean |reserved start − actual start|) grading estimator fidelity,
+//! so EXPERIMENTS.md can answer whether feedback-corrected reservations
+//! beat the stale-ETA baseline on turnaround and stretch.
 //!
 //! Besides the rendered table, [`append_json`] appends one machine-
 //! readable run entry — every cell's summary keyed by the git revision,
@@ -22,6 +28,19 @@ pub const SCHEDULERS: [SchedulerKind; 5] = SchedulerKind::ALL;
 
 /// All placer kinds, sweep order.
 pub const PLACERS: [PlacerKind; 5] = PlacerKind::ALL;
+
+/// Reservation-count × feedback variants swept for the
+/// `reservation-backfill` scheduler, as `(label suffix, reservations,
+/// feedback)`: the stale cluster-scan ETA baseline, the
+/// feedback-corrected single-head default (suffix-free so labels stay
+/// comparable across PRs), and the multi-reservation R = 4 point. The
+/// shadow-error column compares the estimators head to head; every
+/// other scheduler holds no reservations, so it gets exactly one cell.
+pub const RESERVATION_VARIANTS: [(&str, usize, bool); 3] =
+    [("+stale", 1, false), ("", 1, true), ("+r4", 4, true)];
+
+/// The single default variant every reservation-less scheduler runs.
+const DEFAULT_VARIANT: [(&str, usize, bool); 1] = [("", 1, true)];
 
 /// Cluster-shape scenarios the sweep covers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -56,12 +75,17 @@ impl Scenario {
 /// Both scenarios, sweep order.
 pub const SCENARIOS: [Scenario; 2] = [Scenario::Uniform, Scenario::Heterogeneous];
 
-/// One sweep cell: the policy pair, the cluster scenario and its run.
+/// One sweep cell: the policy pair, the cluster scenario, the
+/// reservation-axis coordinates and the run.
 #[derive(Debug, Clone)]
 pub struct SweepCell {
     pub scenario: Scenario,
     pub scheduler: SchedulerKind,
     pub placer: PlacerKind,
+    /// Reservations held (`reservation-backfill` axis; 1 elsewhere).
+    pub reservations: usize,
+    /// Shaper→scheduler feedback consumed by the cell's scheduler.
+    pub feedback: bool,
     pub report: RunReport,
 }
 
@@ -141,17 +165,41 @@ pub fn run_filtered(
                 if only_placer.map_or(false, |p| p != placer) {
                     continue;
                 }
-                let mut cfg = scenario_cfg.clone();
-                cfg.sched.scheduler = sched;
-                cfg.sched.placer = placer;
-                let label = format!("{}/{}/{}", scenario.name(), sched.name(), placer.name());
-                crate::info!("running sweep cell '{label}'");
-                out.push(SweepCell {
-                    scenario,
-                    scheduler: sched,
-                    placer,
-                    report: run_simulation(&cfg, None, &label)?,
-                });
+                let variants: &[(&str, usize, bool)] =
+                    if sched == SchedulerKind::ReservationBackfill {
+                        &RESERVATION_VARIANTS
+                    } else {
+                        &DEFAULT_VARIANT
+                    };
+                for &(suffix, reservations, feedback) in variants {
+                    let mut cfg = scenario_cfg.clone();
+                    cfg.sched.scheduler = sched;
+                    cfg.sched.placer = placer;
+                    // the sweep owns the reservation axis: every cell's
+                    // coordinates come from its variant tuple (canonical
+                    // (1, true) for schedulers that hold no reservations
+                    // and ignore feedback), never from ambient config —
+                    // so a `--feedback off` base override can't mislabel
+                    // 40 non-reservation cells as the stale baseline
+                    cfg.sched.reservations = reservations;
+                    cfg.sched.feedback = feedback;
+                    let label = format!(
+                        "{}/{}{}/{}",
+                        scenario.name(),
+                        sched.name(),
+                        suffix,
+                        placer.name()
+                    );
+                    crate::info!("running sweep cell '{label}'");
+                    out.push(SweepCell {
+                        scenario,
+                        scheduler: sched,
+                        placer,
+                        reservations: cfg.sched.reservations,
+                        feedback: cfg.sched.feedback,
+                        report: run_simulation(&cfg, None, &label)?,
+                    });
+                }
             }
         }
     }
@@ -165,6 +213,7 @@ pub fn render(cells: &[SweepCell]) -> String {
         "turnaround med (s)",
         "wait med (s)",
         "stretch med",
+        "shadow |err| mean (s)",
         "mem slack mean",
         "failed %",
         "oom",
@@ -178,6 +227,11 @@ pub fn render(cells: &[SweepCell]) -> String {
             format!("{:.0}", r.turnaround.median),
             format!("{:.0}", r.wait.median),
             format!("{:.2}", r.stretch.median),
+            if r.shadow_error.n > 0 {
+                format!("{:.0}", r.shadow_abs_error_mean)
+            } else {
+                "-".to_string()
+            },
             format!("{:.3}", r.mem_slack.mean),
             format!("{:.2}", r.failed_app_fraction * 100.0),
             r.oom_events.to_string(),
@@ -203,9 +257,14 @@ fn cell_json(c: &SweepCell) -> Json {
         ("scenario", Json::Str(c.scenario.name().to_string())),
         ("scheduler", Json::Str(c.scheduler.name().to_string())),
         ("placer", Json::Str(c.placer.name().to_string())),
+        ("reservations", Json::Num(c.reservations as f64)),
+        ("feedback", Json::Bool(c.feedback)),
         ("turnaround", bs(&r.turnaround)),
         ("wait", bs(&r.wait)),
         ("stretch", bs(&r.stretch)),
+        ("shadow_error", bs(&r.shadow_error)),
+        ("shadow_abs_error_mean", Json::Num(r.shadow_abs_error_mean)),
+        ("shadow_error_n", Json::Num(r.shadow_error.n as f64)),
         ("mem_slack_mean", Json::Num(r.mem_slack.mean)),
         ("completed", Json::Num(r.completed as f64)),
         ("num_apps", Json::Num(r.num_apps as f64)),
@@ -261,7 +320,10 @@ mod tests {
     fn sweep_runs_the_full_grid() {
         let cfg = tiny_base();
         let cells = run(&cfg).unwrap();
-        assert_eq!(cells.len(), 2 * SCHEDULERS.len() * PLACERS.len());
+        // reservation-backfill expands into its variant axis; the other
+        // four schedulers keep one cell per placer
+        let per_scenario = (SCHEDULERS.len() - 1 + RESERVATION_VARIANTS.len()) * PLACERS.len();
+        assert_eq!(cells.len(), 2 * per_scenario);
         assert_eq!(cells[0].report.name, "uniform/fifo/worst-fit");
         assert_eq!(
             cells.last().unwrap().report.name,
@@ -274,7 +336,17 @@ mod tests {
         let rendered = render(&cells);
         assert!(rendered.contains("uniform/backfill/first-fit"));
         assert!(rendered.contains("heterogeneous/reservation-backfill/cpu-aware"));
+        assert!(rendered.contains("heterogeneous/reservation-backfill+stale/cpu-aware"));
+        assert!(rendered.contains("uniform/reservation-backfill+r4/worst-fit"));
         assert!(rendered.contains("stretch med"));
+        assert!(rendered.contains("shadow |err| mean"));
+        // the variant coordinates land in the cells
+        let r4: Vec<&SweepCell> = cells.iter().filter(|c| c.reservations == 4).collect();
+        assert_eq!(r4.len(), 2 * PLACERS.len());
+        assert!(r4.iter().all(|c| c.feedback && c.report.name.contains("+r4")));
+        let stale: Vec<&SweepCell> = cells.iter().filter(|c| !c.feedback).collect();
+        assert_eq!(stale.len(), 2 * PLACERS.len());
+        assert!(stale.iter().all(|c| c.report.name.contains("+stale")));
     }
 
     #[test]
@@ -357,6 +429,8 @@ mod tests {
             assert_eq!(results[0].get("scheduler").and_then(|s| s.as_str()), Some("fifo"));
             assert_eq!(results[0].get("scenario").and_then(|s| s.as_str()), Some("uniform"));
             assert!(results[0].get("stretch").and_then(|s| s.get("median")).is_some());
+            assert!(results[0].get("shadow_abs_error_mean").is_some());
+            assert_eq!(results[0].get("reservations").and_then(|r| r.as_usize()), Some(1));
         }
         let _ = std::fs::remove_file(&path);
     }

@@ -84,6 +84,16 @@ fn sim_args(name: &str, about: &str) -> Args {
             "",
             "component placer: worst-fit|first-fit|best-fit|cpu-aware|dot-product",
         )
+        .opt(
+            "reservations",
+            "",
+            "blocked apps holding start-time reservations (reservation-backfill; default 1)",
+        )
+        .opt(
+            "feedback",
+            "",
+            "shaper->scheduler preemption feedback for reservation ETAs: on|off (default on)",
+        )
         .opt("log", "info", "log level: error|warn|info|debug")
 }
 
@@ -116,6 +126,16 @@ fn load_cfg(a: &Args) -> Result<SimConfig, String> {
     if !a.get("placer").is_empty() {
         cfg.sched.placer = PlacerKind::parse(a.get("placer"))
             .ok_or_else(|| format!("bad --placer {}", a.get("placer")))?;
+    }
+    if !a.get("reservations").is_empty() {
+        cfg.sched.reservations = a.get_usize("reservations")?;
+    }
+    if !a.get("feedback").is_empty() {
+        cfg.sched.feedback = match a.get("feedback").to_ascii_lowercase().as_str() {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            other => return Err(format!("bad --feedback '{other}' (use on|off)")),
+        };
     }
     cfg.validate()?;
     Ok(cfg)

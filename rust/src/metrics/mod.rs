@@ -7,13 +7,31 @@
 //!
 //! * **wait** — turnaround minus service: total time spent queued
 //!   (initial wait plus any requeued spans after preemption/failure).
-//! * **stretch** — (wait + service) / service = turnaround / service,
-//!   where *service* is the total time spent running across attempts.
-//!   1.0 means the application never waited; size-blind policies inflate
-//!   it most for short applications.
+//! * **stretch** — **bounded slowdown**: turnaround over service time,
+//!   with the service denominator floored at the [`STRETCH_TAU`]
+//!   scheduling quantum and the ratio floored at 1. *Service* is the
+//!   total time spent running across attempts; 1.0 means the application
+//!   never waited (or ran too briefly for its slowdown to be
+//!   observable); size-blind policies inflate stretch most for short
+//!   applications.
+//!
+//! Since the preemption-feedback work the collector also grades the
+//! reservation scheduler's start-time estimates: **shadow error** is the
+//! signed difference (reserved start − actual start, seconds) per
+//! started application that held a reservation, the fidelity column the
+//! `sched-sweep` experiment compares the feedback-corrected estimator
+//! against the stale cluster-scan baseline on.
 
 use crate::util::json::{num_arr, obj, Json};
 use crate::util::stats::{boxstats, BoxStats, Welford};
+
+/// Service-time quantum (seconds) flooring the stretch denominator —
+/// the *bounded slowdown* convention (Feitelson et al.): an application
+/// with near-zero service but positive wait would otherwise record
+/// `turnaround / ε` ≈ 10¹² and destroy every mean/box stretch summary.
+/// One second is far below any real service time the workload generator
+/// produces, so ordinary stretches are unaffected.
+pub const STRETCH_TAU: f64 = 1.0;
 
 /// Per-application slack accumulators.
 #[derive(Debug, Clone, Default)]
@@ -29,8 +47,11 @@ pub struct Metrics {
     turnarounds: Vec<f64>,
     /// queued time per finished app (turnaround − service; seconds).
     waits: Vec<f64>,
-    /// slowdown per finished app: turnaround / service time.
+    /// bounded slowdown per finished app: turnaround / service time,
+    /// service floored at [`STRETCH_TAU`].
     stretches: Vec<f64>,
+    /// signed shadow-estimate errors (reserved start − actual start).
+    shadow_errors: Vec<f64>,
     /// per-app slack accumulators (indexed by app id).
     slack: Vec<AppSlack>,
     /// ids of apps that experienced >= 1 OOM failure.
@@ -65,6 +86,7 @@ impl Metrics {
             turnarounds: Vec::new(),
             waits: Vec::new(),
             stretches: Vec::new(),
+            shadow_errors: Vec::new(),
             slack: vec![AppSlack::default(); num_apps],
             failed_apps: std::collections::HashSet::new(),
             oom_events: 0,
@@ -83,19 +105,23 @@ impl Metrics {
 
     /// Record an app completion. `service_time` is the total time the
     /// app spent running across all attempts; wait (queued time) and
-    /// stretch (turnaround over service) follow from it.
+    /// stretch (bounded slowdown: turnaround over service floored at
+    /// [`STRETCH_TAU`], ratio floored at 1) follow from it.
     pub fn record_finish(&mut self, submit_time: f64, finish_time: f64, service_time: f64) {
         let turnaround = (finish_time - submit_time).max(0.0);
         self.turnarounds.push(turnaround);
         let service = service_time.clamp(0.0, turnaround);
         self.waits.push(turnaround - service);
-        // stretch >= 1 by construction; a zero-length run never waited,
-        // so the degenerate 0/0 records the floor, not 0
-        self.stretches.push(if turnaround <= 0.0 {
-            1.0
-        } else {
-            turnaround / service.max(1e-9)
-        });
+        // bounded slowdown: the tau floor keeps a near-zero-service app
+        // with positive wait from recording turnaround / ε ≈ 10¹²; the
+        // outer floor keeps stretch >= 1 when turnaround < tau
+        self.stretches.push((turnaround / service.max(STRETCH_TAU)).max(1.0));
+    }
+
+    /// Record one signed shadow-estimate error: reserved start − actual
+    /// start (seconds) for an application that held a reservation.
+    pub fn record_shadow_error(&mut self, signed_error: f64) {
+        self.shadow_errors.push(signed_error);
     }
 
     /// Record one slack sample for an app: fractions in [0,1].
@@ -149,6 +175,10 @@ impl Metrics {
             turnarounds: self.turnarounds.clone(),
             wait: boxstats(&self.waits),
             stretch: boxstats(&self.stretches),
+            shadow_error: boxstats(&self.shadow_errors),
+            shadow_abs_error_mean: crate::util::stats::mean(
+                &self.shadow_errors.iter().map(|e| e.abs()).collect::<Vec<_>>(),
+            ),
             cpu_slack: boxstats(&cpu_slack),
             mem_slack: boxstats(&mem_slack),
             mem_slacks: mem_slack,
@@ -179,9 +209,16 @@ pub struct RunReport {
     pub turnarounds: Vec<f64>,
     /// Queued time per finished app (fairness axis 1).
     pub wait: BoxStats,
-    /// Turnaround over service time per finished app (fairness axis 2;
-    /// 1.0 = never waited).
+    /// Bounded slowdown per finished app (fairness axis 2; service
+    /// floored at [`STRETCH_TAU`]; 1.0 = never waited).
     pub stretch: BoxStats,
+    /// Signed shadow-estimate error (reserved start − actual start,
+    /// seconds) per started app that held a reservation; empty (n = 0)
+    /// unless a reservation-holding scheduler ran.
+    pub shadow_error: BoxStats,
+    /// Mean |shadow error| — the fidelity scalar `sched-sweep` compares
+    /// estimators on (0 when no reservations were graded).
+    pub shadow_abs_error_mean: f64,
     pub cpu_slack: BoxStats,
     pub mem_slack: BoxStats,
     pub mem_slacks: Vec<f64>,
@@ -211,7 +248,8 @@ impl RunReport {
              wait        med {:.0}s mean {:.0}s max {:.0}s   stretch med {:.2} mean {:.2} max {:.2}\n\
              mem slack   med {:.3} mean {:.3}   cpu slack med {:.3} mean {:.3}\n\
              failures    {:.2}% of apps ({} OOM events)  preemptions: {} full / {} elastic\n\
-             wasted work {:.0} units; mean alloc cpu {:.2} mem {:.2}; peak host usage {:.2}; {} forecasts",
+             wasted work {:.0} units; mean alloc cpu {:.2} mem {:.2}; peak host usage {:.2}; {} forecasts\n\
+             shadow err  med {:.0}s mean {:.0}s |mean| {:.0}s (n={})",
             self.name,
             self.completed,
             self.num_apps,
@@ -239,6 +277,10 @@ impl RunReport {
             self.mean_alloc_mem,
             self.peak_host_usage,
             self.forecasts_issued,
+            self.shadow_error.median,
+            self.shadow_error.mean,
+            self.shadow_abs_error_mean,
+            self.shadow_error.n,
         )
     }
 
@@ -260,6 +302,8 @@ impl RunReport {
             ("turnaround", bs(&self.turnaround)),
             ("wait", bs(&self.wait)),
             ("stretch", bs(&self.stretch)),
+            ("shadow_error", bs(&self.shadow_error)),
+            ("shadow_abs_error_mean", Json::Num(self.shadow_abs_error_mean)),
             ("cpu_slack", bs(&self.cpu_slack)),
             ("mem_slack", bs(&self.mem_slack)),
             ("completed", Json::Num(self.completed as f64)),
@@ -348,6 +392,45 @@ mod tests {
         assert_eq!(r.wait.max, 0.0);
         assert_eq!(r.stretch.max, 1.0);
         assert_eq!(r.stretch.min, 1.0);
+    }
+
+    #[test]
+    fn stretch_is_bounded_slowdown_under_tiny_service() {
+        // regression: an app with near-zero service but a long wait used
+        // to record turnaround / 1e-9 ≈ 10¹², destroying every summary;
+        // bounded slowdown floors the denominator at STRETCH_TAU
+        let mut m = Metrics::new(3);
+        m.record_finish(0.0, 1000.0, 1e-12);
+        let r = m.report("tiny", 2000.0);
+        assert_eq!(r.stretch.max, 1000.0 / STRETCH_TAU);
+        assert!((r.wait.max - 1000.0).abs() < 1e-9);
+        // services above tau are untouched by the floor
+        let mut m2 = Metrics::new(1);
+        m2.record_finish(0.0, 100.0, 80.0);
+        let r2 = m2.report("norm", 200.0);
+        assert!((r2.stretch.max - 1.25).abs() < 1e-12);
+        // a sub-tau turnaround still never records stretch < 1
+        let mut m3 = Metrics::new(1);
+        m3.record_finish(0.0, 0.25, 0.25);
+        let r3 = m3.report("short", 1.0);
+        assert_eq!(r3.stretch.min, 1.0);
+    }
+
+    #[test]
+    fn shadow_errors_reported_signed_and_absolute() {
+        let mut m = Metrics::new(1);
+        m.record_shadow_error(-30.0); // reserved too early
+        m.record_shadow_error(90.0); // reserved too late
+        let r = m.report("s", 100.0);
+        assert_eq!(r.shadow_error.n, 2);
+        assert_eq!(r.shadow_error.min, -30.0);
+        assert_eq!(r.shadow_error.max, 90.0);
+        assert!((r.shadow_error.mean - 30.0).abs() < 1e-12);
+        assert!((r.shadow_abs_error_mean - 60.0).abs() < 1e-12);
+        // an estimator-less run grades nothing
+        let empty = Metrics::new(1).report("e", 1.0);
+        assert_eq!(empty.shadow_error.n, 0);
+        assert_eq!(empty.shadow_abs_error_mean, 0.0);
     }
 
     #[test]

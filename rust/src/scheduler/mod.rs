@@ -10,7 +10,8 @@
 //!   next. [`FifoScheduler`] is the paper's strict FIFO (§3 / [42]);
 //!   [`BackfillScheduler`] lets later applications jump a blocked head;
 //!   [`ReservationBackfillScheduler`] only lets them jump when they
-//!   cannot delay the head's reserved start; [`SjfScheduler`] and
+//!   cannot delay the reserved starts held by the first `R` blocked
+//!   applications (`sched.reservations`, default 1); [`SjfScheduler`] and
 //!   [`SrptScheduler`] order by job size instead of arrival (Stillwell
 //!   et al.-style size-aware admission — the fairness trade the
 //!   `sched-sweep` experiment quantifies via wait/stretch).
@@ -44,18 +45,54 @@
 //! components are placed best-effort. A resubmitted (preempted/failed)
 //! application retains its *original* submit-time priority (§3.2).
 //!
+//! ## Shaper → scheduler feedback (closing the information gap)
+//!
+//! The shaper preempts and resizes applications every tick, but the
+//! seed scheduler estimated reservation ETAs from a cluster scan that
+//! assumed no shaping would ever happen — exactly the usage/allocation
+//! information gap Flex (arXiv 2006.01354) closes and the open-loop
+//! estimate ADARES (arXiv 1812.01837) shows feedback beats. The engine
+//! therefore publishes a [`SchedulerFeedback`] snapshot after planning
+//! each shaping tick — the applications planned for full/elastic
+//! preemption plus a per-running-app completion ledger computed with the
+//! *post-shaping* elastic counts (including the lost-work charge-back of
+//! planned elastic preemptions) — through the default-no-op
+//! [`Scheduler::observe`] hook. [`ReservationBackfillScheduler`] consumes
+//! it in [`shadow_start_time`]: an application planned for preemption
+//! releases its capacity *now* rather than at its stale ETA, and ledger
+//! rates replace the cluster-scan rates. The signed error of every
+//! reservation estimate (reserved start − actual start) is drained by
+//! the engine through [`Scheduler::drain_shadow_errors`] into the run
+//! metrics, so experiments can quantify estimator fidelity.
+//!
+//! **Timing.** Today's engine applies a tick's actions synchronously
+//! right after publishing, so by the next scheduler wake the live
+//! cluster scan already reflects them and — because [`capture`] mirrors
+//! the engine's removal arithmetic bit for bit — ledger and scan agree
+//! exactly (the `sched-sweep` stale-vs-feedback axis pins that
+//! equivalence empirically). What the channel buys now is the
+//! releases-now semantics for any estimate taken while a planned
+//! preemption has not yet materialized (external `shadow_start_time`
+//! callers, a future deferred-apply engine), the per-estimate error
+//! instrumentation, and the seam for *predictive* feedback (see the
+//! ROADMAP follow-up).
+//!
+//! [`capture`]: SchedulerFeedback::capture
+//!
 //! Queue keys order by `(submit_time, app id)` through
 //! [`crate::util::order::key`], so a NaN submit time sorts to the back
 //! deterministically instead of panicking mid-`binary_search` the way
 //! the seed's `partial_cmp(..).unwrap()` did; enqueue/dequeue are
 //! O(log n) B-tree operations instead of `Vec::remove(0)` shifts.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeSet, HashMap, HashSet};
 
 use crate::cluster::{Cluster, CAPACITY_EPS};
 use crate::config::{PlacerKind, SchedConfig, SchedulerKind};
+use crate::shaper::ShapeActions;
+use crate::sim::engine::WORK_EPS;
 use crate::util::order;
-use crate::workload::{AppId, Application, AppState, HostId};
+use crate::workload::{AppId, Application, AppState, ComponentId, HostId};
 
 /// Maximum number of later placements that may overtake one blocked
 /// head-of-queue application before backfill suspends (see the module
@@ -79,6 +116,126 @@ pub struct PlacementOutcome {
     pub placed: Vec<usize>,
     /// Elastic components that did not fit (app still runs, slower).
     pub skipped_elastic: Vec<usize>,
+}
+
+/// One shaping tick's decisions, published by the engine to the
+/// scheduler **after planning and before applying** the tick's actions
+/// (see the module docs' feedback section): which applications are about
+/// to be preempted, and a post-shaping completion-time ledger for every
+/// running application.
+#[derive(Debug, Clone, Default)]
+pub struct SchedulerFeedback {
+    /// Simulated time of the shaping tick this snapshot describes.
+    pub tick: f64,
+    /// Applications planned for **full** preemption this tick: their
+    /// capacity releases now, not at their stale estimated completion.
+    pub full_preempt: HashSet<AppId>,
+    /// Applications planned to lose ≥ 1 elastic component this tick.
+    /// Informational: the slower post-shaping rate is already folded
+    /// into [`eta`], so no consumer must read this — it tells future
+    /// consumers (e.g. predictive feedback) *why* an ETA moved.
+    ///
+    /// [`eta`]: SchedulerFeedback::eta
+    pub elastic_preempt: HashSet<AppId>,
+    /// Estimated completion time per running application, computed with
+    /// the post-shaping elastic counts and the lost-work charge-back of
+    /// planned elastic preemptions. Fully-preempted applications carry
+    /// `tick` (release now).
+    pub eta: HashMap<AppId, f64>,
+}
+
+impl SchedulerFeedback {
+    /// Build the snapshot for one planned shaping tick. `running` is the
+    /// engine's running-app set at `now`; `actions` is the plan about to
+    /// be applied. For an application losing no elastic components the
+    /// ledger entry is **bit-identical** to the cluster-scan estimate
+    /// (`last_progress_at + remaining / rate`), so feedback-driven and
+    /// scan-driven reservations agree exactly while no preemption is
+    /// pending; for one losing `k` elastic components the entry mirrors
+    /// the engine's sequential per-component removal arithmetic
+    /// (progress to `now` at the current rate, then `k` rounds of
+    /// proportional lost-work charge-back at decreasing rates) and
+    /// extrapolates the remainder at the post-shaping rate.
+    pub fn capture(
+        apps: &[Application],
+        cluster: &Cluster,
+        running: &[AppId],
+        actions: &ShapeActions,
+        now: f64,
+    ) -> Self {
+        let removed: HashSet<ComponentId> = actions.preempt_elastic.iter().copied().collect();
+        let full_preempt: HashSet<AppId> = actions.preempt_apps.iter().copied().collect();
+        let mut elastic_preempt = HashSet::new();
+        let mut eta = HashMap::with_capacity(running.len());
+        for &a in running {
+            let app = &apps[a];
+            if !matches!(app.state, AppState::Running { .. }) {
+                continue;
+            }
+            if full_preempt.contains(&a) {
+                eta.insert(a, now);
+                continue;
+            }
+            let active = app
+                .components
+                .iter()
+                .filter(|c| !c.is_core && cluster.placement(c.id).is_some())
+                .count();
+            let losing = app
+                .components
+                .iter()
+                .filter(|c| !c.is_core && removed.contains(&c.id) && cluster.placement(c.id).is_some())
+                .count();
+            if losing == 0 {
+                // bit-identical to the scheduler's cluster-scan estimate
+                eta.insert(a, app.last_progress_at + app.remaining_work / app.rate(active).max(1e-9));
+                continue;
+            }
+            elastic_preempt.insert(a);
+            // mirror Engine::remove_elastic applied `losing` times: bring
+            // progress up to `now` (with the engine's sub-WORK_EPS
+            // snap-to-zero), then apply the shared per-removal loss
+            // arithmetic (`Application::charge_elastic_loss` — the same
+            // function the engine's apply calls) at decreasing elastic
+            // counts — bit-identical to the post-apply ledger state
+            let dt = (now - app.last_progress_at).max(0.0);
+            let progressed = app.remaining_work - app.rate(active) * dt;
+            let mut rem = if progressed <= WORK_EPS { 0.0 } else { progressed };
+            let mut act = active;
+            for _ in 0..losing {
+                rem = app.charge_elastic_loss(rem, act, WORK_EPS);
+                act -= 1;
+            }
+            eta.insert(a, now + rem / app.rate(act).max(1e-9));
+        }
+        SchedulerFeedback { tick: now, full_preempt, elastic_preempt, eta }
+    }
+
+    /// Ledger completion estimate for `app`, if the snapshot still
+    /// applies to it: the app must be running an attempt that began
+    /// **strictly before** the snapshot (an attempt started at or after
+    /// the tick carries state the snapshot never saw — in particular, an
+    /// app fully preempted at the tick and immediately re-admitted at
+    /// the same timestamp must not inherit its own "releases now" entry)
+    /// and its progress ledger must not have been touched **at or
+    /// after** the snapshot (every engine event that changes an app's
+    /// rate or remaining work — OOM elastic kills at monitor ticks,
+    /// finish rearms, the tick's own apply — stamps `last_progress_at`;
+    /// a same-timestamp monitor tick can even run *after* the shaper's,
+    /// so an equal stamp is already unverifiable). The fallback cluster
+    /// scan equals the ledger entry whenever the touch was the tick's
+    /// own apply, so nothing is lost by being strict. Otherwise the
+    /// caller falls back to the cluster scan.
+    fn eta_of(&self, app: &Application) -> Option<f64> {
+        let AppState::Running { since } = app.state else { return None };
+        if since >= self.tick || app.last_progress_at >= self.tick {
+            return None;
+        }
+        if self.full_preempt.contains(&app.id) {
+            return Some(self.tick); // releases now
+        }
+        self.eta.get(&app.id).copied()
+    }
 }
 
 /// Host-selection policy for one new component allocation.
@@ -186,6 +343,28 @@ pub trait Scheduler: Send {
 
     /// Queued ids in priority order (head first).
     fn queued(&self) -> Vec<AppId>;
+
+    /// Observe one shaping tick's feedback snapshot (planned preemptions
+    /// + post-shaping ETA ledger), taking ownership — the publisher has
+    /// no further use for it, so consumers keep it without a deep copy.
+    /// Default: drop it — only schedulers whose decisions rest on
+    /// completion estimates care.
+    fn observe(&mut self, _feedback: SchedulerFeedback) {}
+
+    /// True when this scheduler consumes [`SchedulerFeedback`]; the
+    /// engine skips building the snapshot (an O(running · components)
+    /// pass) for schedulers that would discard it.
+    fn wants_feedback(&self) -> bool {
+        false
+    }
+
+    /// Drain the signed shadow-estimate errors (reserved start − actual
+    /// start, seconds) of applications that started since the last
+    /// drain. Default: none — only reservation-holding schedulers
+    /// produce estimates to grade.
+    fn drain_shadow_errors(&mut self) -> Vec<f64> {
+        Vec::new()
+    }
 
     /// Attempt to start queued applications, placing their components on
     /// the cluster through `placer`. Returns the applications started
@@ -431,62 +610,6 @@ impl OvertakeGuard {
     }
 }
 
-/// Walk the FIFO queue past the (already blocked) head, starting any
-/// candidate that `eligible` accepts and that places. Shared cursor walk
-/// of both backfill variants: the scan examines at most `depth` blocked
-/// applications per wake **counting the already-blocked head** — the
-/// seed semantics, so `depth = 0` still means strict FIFO (a per-wake
-/// cost bound; the starvation bound is the [`OvertakeGuard`], not
-/// this). Stops when the guard's budget runs out; re-resolving the
-/// cursor through `range` stays correct across removals (only
-/// already-visited keys are ever removed).
-#[allow(clippy::too_many_arguments)]
-fn backfill_past_head(
-    queue: &mut BTreeSet<QueueKey>,
-    head_key: QueueKey,
-    guard: &mut OvertakeGuard,
-    depth: usize,
-    mut eligible: impl FnMut(&Application) -> bool,
-    apps: &mut [Application],
-    cluster: &mut Cluster,
-    placer: &dyn Placer,
-    now: f64,
-    price: f64,
-    started: &mut Vec<PlacementOutcome>,
-) {
-    let mut blocked = 1usize; // the head
-    if blocked > depth {
-        return; // depth 0: strict FIFO
-    }
-    let mut cursor = head_key;
-    while guard.backfill_allowed(head_key) {
-        let next = next_after(queue, cursor);
-        let Some(key @ (_, id)) = next else { break };
-        cursor = key;
-        let outcome = if eligible(&apps[id]) {
-            place_app(&apps[id], cluster, placer, now, price)
-        } else {
-            None
-        };
-        match outcome {
-            Some(outcome) => {
-                apps[id].state = AppState::Running { since: now };
-                apps[id].last_progress_at = now;
-                queue.remove(&key);
-                started.push(outcome);
-                guard.note_overtake(head_key);
-                guard.discharge(key);
-            }
-            None => {
-                blocked += 1;
-                if blocked > depth {
-                    break;
-                }
-            }
-        }
-    }
-}
-
 /// Next queue key strictly after `last`.
 fn next_after(queue: &BTreeSet<QueueKey>, last: QueueKey) -> Option<QueueKey> {
     use std::ops::Bound;
@@ -550,12 +673,16 @@ impl Scheduler for BackfillScheduler {
             return started;
         };
         self.guard.prune_started(&self.queue);
-        backfill_past_head(
+        // aggressive: zero reservations — an empty reservation list
+        // makes every candidate eligible and nothing is ever claimed
+        backfill_with_reservations(
             &mut self.queue,
             head_key,
             &mut self.guard,
             self.depth,
-            |_| true, // aggressive: any fitting candidate may jump
+            0,
+            &mut Vec::new(),
+            None,
             apps,
             cluster,
             placer,
@@ -580,28 +707,87 @@ impl Scheduler for BackfillScheduler {
 /// The reservation is an *estimate*: completion times assume no further
 /// preemption/failure churn (lost work extends a running app past its
 /// ETA), and the head still actually starts only when a real placement
-/// succeeds. The module-level bounded-overtake invariant backstops the
-/// estimate: even with a churn-degraded reservation, one head is jumped
-/// at most [`MAX_HEAD_OVERTAKES`] times before backfill suspends. A head
-/// whose core set cannot fit even an idle cluster holds a void
-/// reservation — such an application can never start anywhere, so
-/// backfill past it is unrestricted (up to the same overtake bound).
+/// succeeds. Shaping churn is fed back in through [`Scheduler::observe`]:
+/// with feedback enabled the estimate uses the shaper's post-shaping
+/// ETA ledger, and applications planned for preemption release their
+/// capacity *now* instead of at a stale ETA. The module-level
+/// bounded-overtake invariant backstops the estimate: even with a
+/// churn-degraded reservation, one head is jumped at most
+/// [`MAX_HEAD_OVERTAKES`] times before backfill suspends. A head whose
+/// core set cannot fit even an idle cluster holds a void reservation —
+/// such an application can never start anywhere, so backfill past it is
+/// unrestricted (up to the same overtake bound).
+///
+/// ## Multiple reservations
+///
+/// With `reservations = R > 1` (the `sched.reservations` config key /
+/// `--reservations`), not just the head but the first `R` blocked
+/// applications whose placement failed each hold an independent
+/// reservation, and a candidate may jump only when its worst-case
+/// completion precedes **every** held (non-void) reserved start. A
+/// candidate blocked purely by the reservation policy (it fits now but
+/// may not jump) claims no reservation — its start is policy-bound, not
+/// capacity-bound. `R = 1` is bit-for-bit today's single-head behavior.
+/// Each reservation is estimated independently (no cross-reservation
+/// capacity stacking); the overtake bound backstops the optimism.
 #[derive(Debug)]
 pub struct ReservationBackfillScheduler {
     queue: BTreeSet<QueueKey>,
     depth: usize,
+    /// Max blocked applications holding simultaneous reservations.
+    reservations: usize,
+    /// Consume [`SchedulerFeedback`] snapshots (false = the stale
+    /// cluster-scan estimator, today's pre-feedback behavior).
+    use_feedback: bool,
+    feedback: Option<SchedulerFeedback>,
     guard: OvertakeGuard,
+    /// Latest reserved-start estimate per still-queued application.
+    estimates: HashMap<AppId, f64>,
+    /// Signed estimate errors of started apps, drained by the engine.
+    errors: Vec<f64>,
 }
 
 impl ReservationBackfillScheduler {
     /// Empty scheduler examining at most `depth` blocked applications
     /// per wake, counting the head (a cost bound, not the starvation
-    /// mechanism; 0 = strict FIFO).
+    /// mechanism; 0 = strict FIFO). One reservation (the head), feedback
+    /// consumption on.
     pub fn new(depth: usize) -> Self {
         ReservationBackfillScheduler {
             queue: BTreeSet::new(),
             depth,
+            reservations: 1,
+            use_feedback: true,
+            feedback: None,
             guard: OvertakeGuard::default(),
+            estimates: HashMap::new(),
+            errors: Vec::new(),
+        }
+    }
+
+    /// Reserve for the first `r` blocked applications (see the type
+    /// docs' multiple-reservations section). `0` is clamped to 1 — one
+    /// head reservation is this scheduler's defining invariant — while
+    /// the config layer rejects `sched.reservations = 0` outright.
+    pub fn with_reservations(mut self, r: usize) -> Self {
+        self.reservations = r.max(1);
+        self
+    }
+
+    /// Enable/disable consumption of [`SchedulerFeedback`] snapshots
+    /// (disabled = the stale cluster-scan ETA estimator).
+    pub fn with_feedback(mut self, enabled: bool) -> Self {
+        self.use_feedback = enabled;
+        self
+    }
+
+    /// Record the signed estimate error of every just-started app that
+    /// held a reservation estimate, and discharge those estimates.
+    fn grade_starts(&mut self, started: &[PlacementOutcome], now: f64) {
+        for o in started {
+            if let Some(est) = self.estimates.remove(&o.app) {
+                self.errors.push(est - now);
+            }
         }
     }
 }
@@ -624,6 +810,22 @@ impl Scheduler for ReservationBackfillScheduler {
         self.queue.iter().map(|&(_, id)| id).collect()
     }
 
+    fn observe(&mut self, feedback: SchedulerFeedback) {
+        if self.use_feedback {
+            self.feedback = Some(feedback);
+        }
+    }
+
+    fn wants_feedback(&self) -> bool {
+        // depth 0 is strict FIFO: try_schedule early-returns before ever
+        // consulting feedback, so don't make the engine capture any
+        self.use_feedback && self.depth > 0
+    }
+
+    fn drain_shadow_errors(&mut self) -> Vec<f64> {
+        std::mem::take(&mut self.errors)
+    }
+
     fn try_schedule(
         &mut self,
         apps: &mut [Application],
@@ -636,26 +838,27 @@ impl Scheduler for ReservationBackfillScheduler {
             drain_head_of_line(&mut self.queue, |(_, id)| id, apps, cluster, placer, now, price);
         let Some(&head_key) = self.queue.iter().next() else {
             self.guard.clear();
+            self.grade_starts(&started, now);
             return started;
         };
         self.guard.prune_started(&self.queue);
         if !self.guard.backfill_allowed(head_key) || self.queue.len() == 1 || self.depth == 0 {
             // budget spent, nothing queued to backfill, or strict FIFO:
             // don't pay for a reservation estimate nobody will consult
+            self.grade_starts(&started, now);
             return started;
         }
-        let shadow = shadow_start_time(apps, cluster, head_key.1, now, price);
-        backfill_past_head(
+        let fb = if self.use_feedback { self.feedback.as_ref() } else { None };
+        let shadow = shadow_start_time(apps, cluster, head_key.1, now, price, fb);
+        let mut reserved: Vec<(AppId, Option<f64>)> = vec![(head_key.1, shadow)];
+        backfill_with_reservations(
             &mut self.queue,
             head_key,
             &mut self.guard,
             self.depth,
-            |candidate: &Application| match shadow {
-                // worst-case completion: remaining work at the minimum
-                // progress rate (1 work unit/s, zero elastic speedup)
-                Some(t) => now + candidate.remaining_work <= t + CAPACITY_EPS,
-                None => true, // void reservation: head can never fit
-            },
+            self.reservations,
+            &mut reserved,
+            fb,
             apps,
             cluster,
             placer,
@@ -663,7 +866,97 @@ impl Scheduler for ReservationBackfillScheduler {
             price,
             &mut started,
         );
+        // every held reservation — the head and any walk-claimed ones —
+        // is the latest estimate for its app; a void shadow clears any
+        // stale estimate so it is never graded
+        for &(id, s) in &reserved {
+            match s {
+                Some(t) => {
+                    self.estimates.insert(id, t);
+                }
+                None => {
+                    self.estimates.remove(&id);
+                }
+            }
+        }
+        self.grade_starts(&started, now);
         started
+    }
+}
+
+/// The shared backfill cursor walk past the (already blocked) head —
+/// both variants use it; they differ only in the reservation list.
+/// Candidates in queue order may start only when their worst-case
+/// completion — remaining work at the guaranteed minimum progress rate
+/// of 1 work unit/s — precedes every held (non-void) reserved start
+/// ([`BackfillScheduler`] passes an empty list and `max_reservations =
+/// 0`: every candidate is eligible, nothing is claimed). A candidate
+/// whose placement fails while `reserved` still has room
+/// (< `max_reservations` entries) claims the next reservation; a
+/// candidate rejected by the reservation policy alone does not (its
+/// start is policy-bound, not capacity-bound). Depth/guard accounting
+/// keeps the seed semantics: at most `depth` blocked applications
+/// examined per wake **counting the already-blocked head** (so
+/// `depth = 0` still means strict FIFO — a per-wake cost bound; the
+/// starvation bound is the [`OvertakeGuard`], not this), suspension
+/// when the head's overtake budget runs out; re-resolving the cursor
+/// through `range` stays correct across removals (only already-visited
+/// keys are ever removed).
+#[allow(clippy::too_many_arguments)]
+fn backfill_with_reservations(
+    queue: &mut BTreeSet<QueueKey>,
+    head_key: QueueKey,
+    guard: &mut OvertakeGuard,
+    depth: usize,
+    max_reservations: usize,
+    reserved: &mut Vec<(AppId, Option<f64>)>,
+    feedback: Option<&SchedulerFeedback>,
+    apps: &mut [Application],
+    cluster: &mut Cluster,
+    placer: &dyn Placer,
+    now: f64,
+    price: f64,
+    started: &mut Vec<PlacementOutcome>,
+) {
+    let mut blocked = 1usize; // the head
+    if blocked > depth {
+        return; // depth 0: strict FIFO
+    }
+    let mut cursor = head_key;
+    while guard.backfill_allowed(head_key) {
+        let next = next_after(queue, cursor);
+        let Some(key @ (_, id)) = next else { break };
+        cursor = key;
+        let eligible = reserved.iter().all(|&(_, s)| match s {
+            Some(t) => now + apps[id].remaining_work <= t + CAPACITY_EPS,
+            None => true, // void reservation constrains nothing
+        });
+        let outcome = if eligible {
+            place_app(&apps[id], cluster, placer, now, price)
+        } else {
+            None
+        };
+        match outcome {
+            Some(outcome) => {
+                apps[id].state = AppState::Running { since: now };
+                apps[id].last_progress_at = now;
+                queue.remove(&key);
+                started.push(outcome);
+                guard.note_overtake(head_key);
+                guard.discharge(key);
+            }
+            None => {
+                if eligible && reserved.len() < max_reservations {
+                    // capacity-blocked: the next reserved app
+                    let s = shadow_start_time(apps, cluster, id, now, price, feedback);
+                    reserved.push((id, s));
+                }
+                blocked += 1;
+                if blocked > depth {
+                    break;
+                }
+            }
+        }
     }
 }
 
@@ -672,6 +965,15 @@ impl Scheduler for ReservationBackfillScheduler {
 /// estimated completion times and nothing else arrives. Returns `None`
 /// when the cores do not fit even with every running allocation released
 /// (void reservation — the head can never start on this cluster).
+///
+/// With `feedback` (a [`SchedulerFeedback`] snapshot), release times come
+/// from the shaper's post-shaping ETA ledger instead of the cluster scan:
+/// an application planned for preemption releases its capacity *now*
+/// rather than at its stale scan ETA, and elastic-preempted applications
+/// release at their slower post-shaping rate. Ledger entries that no
+/// longer apply (the app restarted after the snapshot) fall back to the
+/// cluster scan; with `feedback = None` the estimate is exactly the
+/// pre-feedback cluster scan.
 ///
 /// The feasibility check is a greedy worst-fit packing of the head's
 /// priced core requests over scratch per-host free capacity — an
@@ -688,12 +990,13 @@ impl Scheduler for ReservationBackfillScheduler {
 /// plus O(log running) prefix replays of O(placed components), on top
 /// of one O(apps + running · components) ETA scan + sort — paid only on
 /// wakes with a blocked head and a non-empty backfill queue.
-fn shadow_start_time(
+pub fn shadow_start_time(
     apps: &[Application],
     cluster: &Cluster,
     head: AppId,
     now: f64,
     price: f64,
+    feedback: Option<&SchedulerFeedback>,
 ) -> Option<f64> {
     let price = price.clamp(PRICE_CLAMP.0, PRICE_CLAMP.1);
     let cores: Vec<(f64, f64)> = apps[head]
@@ -709,11 +1012,17 @@ fn shadow_start_time(
         // packing): treat the start as imminent — nothing may jump
         return Some(now);
     }
-    // (total-order ETA, app id): deterministic release order, NaN-safe
+    // (total-order ETA, app id): deterministic release order, NaN-safe;
+    // the ledger (when valid) overrides the cluster-scan estimate
     let mut releases: Vec<(u64, AppId)> = apps
         .iter()
         .filter(|a| matches!(a.state, AppState::Running { .. }))
-        .map(|a| (order::key(estimated_completion(a, cluster)), a.id))
+        .map(|a| {
+            let eta = feedback
+                .and_then(|fb| fb.eta_of(a))
+                .unwrap_or_else(|| estimated_completion(a, cluster));
+            (order::key(eta), a.id)
+        })
         .collect();
     releases.sort_unstable();
     // free capacity after the first `k` releases have drained
@@ -793,9 +1102,11 @@ pub fn build_scheduler(cfg: &SchedConfig) -> Box<dyn Scheduler> {
     match cfg.scheduler {
         SchedulerKind::Fifo => Box::new(FifoScheduler::new()),
         SchedulerKind::Backfill => Box::new(BackfillScheduler::new(cfg.backfill_depth)),
-        SchedulerKind::ReservationBackfill => {
-            Box::new(ReservationBackfillScheduler::new(cfg.backfill_depth))
-        }
+        SchedulerKind::ReservationBackfill => Box::new(
+            ReservationBackfillScheduler::new(cfg.backfill_depth)
+                .with_reservations(cfg.reservations)
+                .with_feedback(cfg.feedback),
+        ),
         SchedulerKind::Sjf => Box::new(SjfScheduler::new()),
         SchedulerKind::Srpt => Box::new(SrptScheduler::new()),
     }
@@ -1319,5 +1630,121 @@ mod tests {
         // start, so only the overtake bound stands between the head and
         // indefinite starvation
         starvation_regression(ReservationBackfillScheduler::new(16), 1e6);
+    }
+
+    #[test]
+    fn multi_reservation_starvation_guard_still_holds() {
+        starvation_regression(
+            ReservationBackfillScheduler::new(16).with_reservations(4),
+            1e6,
+        );
+    }
+
+    #[test]
+    fn second_reservation_blocks_candidates_that_delay_it() {
+        // Host (4 cpu, 12 GB); occupants A (ETA 50) and B (ETA 100) hold
+        // 4 GB each. The head (3 cores = 12 GB) reserves t=100 (both
+        // releases); the eligible-but-unplaceable app 3 (2 cores = 8 GB,
+        // short) reserves t=50 (A's release). The candidate (1 core,
+        // fits now, completes at t=53) precedes the head's reservation
+        // but delays app 3's: R = 1 admits it, R = 2 must not.
+        let world = || {
+            let apps = vec![
+                toy_app_sized(0, 0.0, 1, 0, 50.0),
+                toy_app_sized(1, 0.0, 1, 1, 100.0),
+                toy_app(2, 1.0, 3, 2),             // head
+                toy_app_sized(3, 2.0, 2, 5, 30.0), // second reserved app
+                toy_app_sized(4, 3.0, 1, 8, 48.0), // candidate
+            ];
+            let c = Cluster::new(&ClusterConfig::uniform(1, 4.0, 12.0));
+            (apps, c)
+        };
+        for (r, expect_started) in [(1usize, vec![4usize]), (2, vec![])] {
+            let (mut apps, mut c) = world();
+            run_app(&mut apps, &mut c, 0, 0.0);
+            run_app(&mut apps, &mut c, 1, 0.0);
+            let mut rb = ReservationBackfillScheduler::new(16).with_reservations(r);
+            for id in 2..5 {
+                rb.enqueue(&apps, id);
+            }
+            let started = rb.try_schedule(&mut apps, &mut c, &WorstFitPlacer, 5.0, 1.0);
+            let ids: Vec<AppId> = started.iter().map(|o| o.app).collect();
+            assert_eq!(ids, expect_started, "R = {r}");
+            c.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn capture_ledger_matches_cluster_scan_etas_when_no_preemptions() {
+        // with an empty action plan, every ledger entry must be
+        // bit-identical to the scheduler's own cluster-scan estimate —
+        // the feedback channel may never perturb a quiet tick
+        let (mut apps, mut c) = (
+            vec![toy_app_sized(0, 0.0, 1, 0, 80.0), toy_app_sized(1, 1.0, 2, 1, 200.0)],
+            Cluster::new(&ClusterConfig::uniform(2, 8.0, 32.0)),
+        );
+        run_app(&mut apps, &mut c, 0, 0.0);
+        run_app(&mut apps, &mut c, 1, 3.0);
+        apps[0].remaining_work = 37.5; // partial progress
+        apps[0].last_progress_at = 40.0;
+        let fb = SchedulerFeedback::capture(&apps, &c, &[0, 1], &ShapeActions::default(), 50.0);
+        for a in [0usize, 1] {
+            let scan = estimated_completion(&apps[a], &c);
+            assert_eq!(fb.eta[&a].to_bits(), scan.to_bits(), "app {a}");
+        }
+        assert!(fb.full_preempt.is_empty() && fb.elastic_preempt.is_empty());
+    }
+
+    #[test]
+    fn observed_preemption_tightens_reservation_and_blocks_jumpers() {
+        // the churn regression of the feedback loop: on the tick its
+        // blocker is planned for preemption, the head's reservation
+        // tightens to "now" (never loosens), so a candidate that could
+        // jump the stale t=100 reservation no longer may
+        let world = || {
+            let apps = vec![
+                toy_app(0, 0.0, 1, 0),              // occupant, ETA 100
+                toy_app(1, 1.0, 2, 1),              // head: needs 8 GB
+                toy_app_sized(2, 2.0, 1, 3, 20.0),  // short candidate
+            ];
+            let c = Cluster::new(&ClusterConfig::uniform(1, 4.0, 10.0));
+            (apps, c)
+        };
+        // stale estimator: the candidate jumps
+        let (mut apps, mut c) = world();
+        run_app(&mut apps, &mut c, 0, 0.0);
+        let mut rb = ReservationBackfillScheduler::new(16);
+        rb.enqueue(&apps, 1);
+        rb.enqueue(&apps, 2);
+        let started = rb.try_schedule(&mut apps, &mut c, &WorstFitPlacer, 5.0, 1.0);
+        assert_eq!(started.iter().map(|o| o.app).collect::<Vec<_>>(), vec![2]);
+
+        // feedback says the occupant is being preempted: its capacity
+        // releases now, the reservation tightens, nothing may jump
+        let (mut apps, mut c) = world();
+        run_app(&mut apps, &mut c, 0, 0.0);
+        let mut actions = ShapeActions::default();
+        actions.preempt_apps.push(0);
+        let fb = SchedulerFeedback::capture(&apps, &c, &[0], &actions, 5.0);
+        let stale = shadow_start_time(&apps, &c, 1, 5.0, 1.0, None);
+        let fed = shadow_start_time(&apps, &c, 1, 5.0, 1.0, Some(&fb));
+        assert_eq!(stale, Some(100.0));
+        assert_eq!(fed, Some(5.0), "planned preemption must release capacity now");
+        assert!(fed <= stale, "a planned preemption may tighten, never loosen");
+        let mut rb = ReservationBackfillScheduler::new(16);
+        rb.enqueue(&apps, 1);
+        rb.enqueue(&apps, 2);
+        rb.observe(fb);
+        let started = rb.try_schedule(&mut apps, &mut c, &WorstFitPlacer, 5.0, 1.0);
+        assert!(started.is_empty(), "tightened reservation admits no jumpers");
+
+        // the head starts once the capacity really frees; its estimate
+        // error is drained signed (reserved 5.0 − actual 90.0)
+        finish_app(&mut apps, &mut c, 0, 90.0);
+        let started = rb.try_schedule(&mut apps, &mut c, &WorstFitPlacer, 90.0, 1.0);
+        assert!(started.iter().any(|o| o.app == 1));
+        let errs = rb.drain_shadow_errors();
+        assert!(errs.contains(&(5.0 - 90.0)), "signed error for the head: {errs:?}");
+        assert!(rb.drain_shadow_errors().is_empty(), "drain empties the buffer");
     }
 }

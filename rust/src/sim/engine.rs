@@ -47,6 +47,24 @@
 //! batch length is now a logged release-mode event that falls back to
 //! current-allocation demands for the tick instead of a silent cpu/mem
 //! misalignment.
+//!
+//! ## Shaper → scheduler feedback (preemption-aware ETAs)
+//!
+//! After planning each shaping tick (and before applying it) the engine
+//! publishes a [`SchedulerFeedback`] snapshot — the applications planned
+//! for full/elastic preemption plus a per-running-app completion ledger
+//! computed with the post-shaping elastic counts — through
+//! `Scheduler::observe`, and drains the signed reservation-estimate
+//! errors (`reserved start − actual start`) of every started
+//! application into [`Metrics`] after each scheduler wake. Snapshot
+//! capture is skipped for schedulers that report `wants_feedback() ==
+//! false`, so default FIFO runs pay nothing. Because the actions are
+//! applied synchronously right after publishing, the ledger agrees bit
+//! for bit with the post-apply cluster scan at the following wake (see
+//! the scheduler module docs' timing note) — the snapshot's
+//! releases-now semantics bind whenever an estimate is taken before a
+//! planned preemption materializes, and the error grading quantifies
+//! estimator fidelity either way.
 
 use std::collections::{BTreeSet, HashMap};
 use std::sync::Arc;
@@ -56,7 +74,7 @@ use crate::config::{ForecasterKind, Policy, SimConfig};
 use crate::forecast::{Forecast, Forecaster, SeriesRef};
 use crate::metrics::{Metrics, RunReport};
 use crate::monitor::{Monitor, TickBuffers};
-use crate::scheduler::{build_placer, build_scheduler, Placer, Scheduler};
+use crate::scheduler::{build_placer, build_scheduler, Placer, Scheduler, SchedulerFeedback};
 use crate::shaper::{self, beta, Demand, PlanScratch, ShapeActions};
 use crate::sim::{Event, EventQueue};
 use crate::util::pool;
@@ -84,6 +102,13 @@ pub enum MonitorMode {
 /// Hard cap on processed events (runaway guard; generously above any
 /// legitimate run at the supported scales).
 const MAX_EVENTS: u64 = 200_000_000;
+
+/// Residual work below this counts as complete — the engine's
+/// work-completion epsilon, applied identically by the finish check and
+/// the progress clamp so the two can never disagree about whether an
+/// application is done (the work-ledger analogue of the PR 2/3
+/// `cluster::CAPACITY_EPS` unification).
+pub const WORK_EPS: f64 = 1e-6;
 
 /// Default max simulated time when the config leaves it at 0: 120 days.
 const DEFAULT_MAX_SIM_TIME: f64 = 120.0 * 86_400.0;
@@ -232,6 +257,13 @@ impl Engine {
         &self.cluster
     }
 
+    /// The application table (read-only bench/test hook: the reservation
+    /// benches estimate shadows over the warm state).
+    #[doc(hidden)]
+    pub fn apps(&self) -> &[Application] {
+        &self.apps
+    }
+
     /// Number of currently running applications.
     pub fn running_apps(&self) -> usize {
         self.running.len()
@@ -373,6 +405,11 @@ impl Engine {
             self.running.insert(a);
             self.schedule_finish(a);
         }
+        // grade the reservation estimates of apps that just started
+        // (signed: reserved start − actual start)
+        for err in self.scheduler.drain_shadow_errors() {
+            self.metrics.record_shadow_error(err);
+        }
     }
 
     fn on_finish(&mut self, a: AppId, version: u64) {
@@ -384,7 +421,7 @@ impl Engine {
         }
         let now = self.now();
         self.update_progress(a, now);
-        if self.apps[a].remaining_work <= 1e-6 {
+        if self.apps[a].remaining_work <= WORK_EPS {
             // completed; index loop: the removals need `&mut self`
             #[allow(clippy::needless_range_loop)]
             for k in 0..self.apps[a].components.len() {
@@ -715,6 +752,25 @@ impl Engine {
             "shaper planned an overcommit"
         );
 
+        // publish the tick's decisions to the scheduler before applying
+        // them — planned preemptions plus the post-shaping ETA ledger —
+        // so reservation estimates stop assuming shaping never happens
+        // (the ROADMAP's ETA-feedback fidelity step). Skipped entirely
+        // for schedulers that would discard the snapshot; the capture is
+        // O(running · components), the same order as the demand pass
+        // this tick already ran, so it adds a constant factor — not a
+        // new asymptotic cost — to consumers that opted in.
+        if self.scheduler.wants_feedback() {
+            let fb = SchedulerFeedback::capture(
+                &self.apps,
+                &self.cluster,
+                &self.running_ids,
+                &actions,
+                now,
+            );
+            self.scheduler.observe(fb);
+        }
+
         // apply: full preemptions first (controlled, not failures)
         for &a in &actions.preempt_apps {
             self.preempt_app(a, now, /*is_failure=*/ false);
@@ -755,13 +811,17 @@ impl Engine {
 
     // ----- mechanics ------------------------------------------------------
 
-    /// Bring an app's remaining work up to date at time `now`.
+    /// Bring an app's remaining work up to date at time `now`. A
+    /// residual below [`WORK_EPS`] snaps to zero — the same epsilon the
+    /// finish check applies, so the ledger and the finish event can
+    /// never disagree about completion.
     fn update_progress(&mut self, a: AppId, now: f64) {
         let app = &mut self.apps[a];
         if let AppState::Running { .. } = app.state {
             let dt = (now - app.last_progress_at).max(0.0);
             let rate = app.rate(self.placed_elastic[a]);
-            app.remaining_work = (app.remaining_work - rate * dt).max(0.0);
+            let rem = app.remaining_work - rate * dt;
+            app.remaining_work = if rem <= WORK_EPS { 0.0 } else { rem };
             app.last_progress_at = now;
         }
     }
@@ -781,19 +841,18 @@ impl Engine {
     }
 
     /// Remove one placed elastic component (preemption or OOM), charging
-    /// the proportional loss of the work it contributed so far.
+    /// the proportional loss of the work it contributed so far. The loss
+    /// arithmetic lives in [`Application::charge_elastic_loss`] — the
+    /// single copy the scheduler-feedback ledger mirrors.
     fn remove_elastic(&mut self, a: AppId, cid: ComponentId, now: f64) {
         self.update_progress(a, now);
-        let app = &self.apps[a];
-        let e_total = app.elastic_count().max(1);
-        let rate = app.rate(self.placed_elastic[a]);
-        // share of progress attributable to this single elastic component
-        let share = (workload::ELASTIC_SPEEDUP / e_total as f64) / rate;
-        let done = app.total_work - app.remaining_work;
-        let lost = done * share;
-        let app = &mut self.apps[a];
-        app.remaining_work = (app.remaining_work + lost).min(app.total_work);
-        self.metrics.wasted_work += lost;
+        let before = self.apps[a].remaining_work;
+        let after = self.apps[a].charge_elastic_loss(before, self.placed_elastic[a], WORK_EPS);
+        self.apps[a].remaining_work = after;
+        // charge the post-clamp delta: an app near total_work can only
+        // redo up to total_work − remaining, so the raw pre-clamp share
+        // would over-count work never actually re-done
+        self.metrics.wasted_work += after - before;
         self.cluster.remove(cid);
         self.monitor.reset(cid);
         self.placed_elastic[a] = self.placed_elastic[a].saturating_sub(1);
@@ -1081,6 +1140,54 @@ mod tests {
         cfg2.shaper.policy = Policy::Baseline;
         let r2 = run_simulation(&cfg2, None, "idle").unwrap();
         assert!(r2.wait.mean <= r.wait.mean, "{} vs {}", r2.wait.mean, r.wait.mean);
+    }
+
+    #[test]
+    fn wasted_work_charge_equals_post_clamp_delta() {
+        // regression (engine accounting): `remove_elastic` must charge
+        // exactly the work the app will re-do — the post-clamp
+        // remaining-work delta — never the raw pre-clamp share, even for
+        // an app whose ledger sits near total_work
+        let mut cfg = tiny_cfg();
+        cfg.shaper.policy = Policy::Baseline;
+        cfg.forecast.kind = ForecasterKind::Oracle;
+        let mut eng = Engine::new(cfg, ForecastSource::Oracle);
+        let mut cand = None;
+        for t in [60.0, 120.0, 300.0, 600.0, 1800.0] {
+            eng.pump_until(t);
+            cand = (0..eng.apps.len()).find(|&a| {
+                matches!(eng.apps[a].state, AppState::Running { .. })
+                    && eng.apps[a]
+                        .components
+                        .iter()
+                        .any(|c| !c.is_core && eng.cluster.placement(c.id).is_some())
+            });
+            if cand.is_some() {
+                break;
+            }
+        }
+        let a = cand.expect("no running app with a placed elastic component");
+        let cid = eng.apps[a]
+            .components
+            .iter()
+            .find(|c| !c.is_core && eng.cluster.placement(c.id).is_some())
+            .unwrap()
+            .id;
+        let now = eng.now();
+        eng.update_progress(a, now);
+        // mostly done: the proportional loss is as large as it gets
+        eng.apps[a].remaining_work = eng.apps[a].total_work * 0.01;
+        let rem_before = eng.apps[a].remaining_work;
+        let waste_before = eng.metrics.wasted_work;
+        eng.remove_elastic(a, cid, now);
+        let charged = eng.metrics.wasted_work - waste_before;
+        let redone = eng.apps[a].remaining_work - rem_before;
+        assert!(charged > 0.0, "a mostly-done app must lose some work");
+        assert!(
+            (charged - redone).abs() <= 1e-9,
+            "charged {charged} != re-done {redone}"
+        );
+        assert!(eng.apps[a].remaining_work <= eng.apps[a].total_work);
     }
 
     #[test]

@@ -97,6 +97,28 @@ impl Application {
     pub fn full_speed_runtime(&self) -> f64 {
         self.total_work / self.rate(self.elastic_count())
     }
+
+    /// Remaining work after one of `active` currently placed elastic
+    /// components is removed: the proportional share of completed work
+    /// attributable to that component is charged back (the §3.2
+    /// partial-preemption loss model), clamped to the total, with
+    /// sub-`work_eps` residuals snapped to zero like the engine's
+    /// progress updates. This is the **single copy** of the loss
+    /// arithmetic shared by the engine's apply (`remove_elastic`) and
+    /// the scheduler-feedback ledger's mirror
+    /// (`SchedulerFeedback::capture`), so the two can never drift;
+    /// `work_eps` is the engine's work-completion epsilon.
+    pub fn charge_elastic_loss(&self, remaining: f64, active: usize, work_eps: f64) -> f64 {
+        let e_total = self.elastic_count().max(1);
+        let share = (ELASTIC_SPEEDUP / e_total as f64) / self.rate(active);
+        let done = self.total_work - remaining;
+        let after = (remaining + done * share).min(self.total_work);
+        if after <= work_eps {
+            0.0
+        } else {
+            after
+        }
+    }
 }
 
 /// Generated workload: applications sorted by submit time.
@@ -237,6 +259,27 @@ mod tests {
         assert!((full - (1.0 + ELASTIC_SPEEDUP)).abs() < 1e-9);
         // full-speed runtime equals sampled base runtime by calibration
         assert!((a.total_work / full - a.full_speed_runtime()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn charge_elastic_loss_clamps_and_snaps() {
+        let w = wl();
+        let a = w.apps.iter().find(|a| a.elastic_count() >= 2).unwrap();
+        let eps = 1e-6;
+        // half done at full speed: loss is positive, bounded by done
+        let half = a.total_work / 2.0;
+        let after = a.charge_elastic_loss(half, a.elastic_count(), eps);
+        assert!(after > half, "charge-back must add work to redo");
+        assert!(after <= a.total_work, "never beyond the total");
+        let expected = half
+            + (a.total_work - half) * (ELASTIC_SPEEDUP / a.elastic_count() as f64)
+                / a.rate(a.elastic_count());
+        assert!((after - expected).abs() < 1e-9);
+        // nothing done yet: nothing to charge back
+        assert_eq!(a.charge_elastic_loss(a.total_work, 1, eps), a.total_work);
+        // the snap floor zeroes any post-charge residual at or below
+        // work_eps (exercised here with an artificially large epsilon)
+        assert_eq!(a.charge_elastic_loss(eps / 2.0, 0, a.total_work * 2.0), 0.0);
     }
 
     #[test]

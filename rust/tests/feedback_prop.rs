@@ -1,0 +1,217 @@
+//! Property and regression tests for the shaper → scheduler feedback
+//! channel (preemption-aware reservation ETAs).
+//!
+//! * With an **empty action plan**, the feedback ledger must be
+//!   bit-identical to the scheduler's cluster-scan estimates — observing
+//!   a quiet tick may never perturb a reservation. Checked over
+//!   generated workloads with randomized progress.
+//! * On the tick its blocker is planned for **full preemption**, a
+//!   head's reservation tightens (the blocker's capacity releases now)
+//!   and never loosens.
+//! * End to end, a `reservation-backfill` run with feedback grades its
+//!   estimates into `RunReport::shadow_error`, and on the seeded churn
+//!   scenario the feedback-corrected estimator's mean |error| is no
+//!   worse than the stale cluster-scan baseline's (the acceptance
+//!   comparison the `sched-sweep` shadow-error column reports).
+
+use zoe_shaper::cluster::Cluster;
+use zoe_shaper::config::{ClusterConfig, ForecasterKind, Policy, SchedulerKind, SimConfig};
+use zoe_shaper::scheduler::{shadow_start_time, SchedulerFeedback};
+use zoe_shaper::shaper::ShapeActions;
+use zoe_shaper::sim::engine::run_simulation;
+use zoe_shaper::util::rng::Pcg;
+use zoe_shaper::workload::{generate, AppId, Application, AppState};
+
+/// Place one generated app like the engine's admission does (cores
+/// all-or-nothing, elastic best-effort) and mark it running.
+fn place_running(
+    apps: &mut [Application],
+    cluster: &mut Cluster,
+    a: AppId,
+    since: f64,
+) -> bool {
+    let mut placed = Vec::new();
+    for c in apps[a].components.iter().filter(|c| c.is_core) {
+        match cluster.worst_fit(c.cpu_req, c.mem_req) {
+            Some(h) => {
+                assert!(cluster.place(c.id, h, c.cpu_req, c.mem_req, since));
+                placed.push(c.id);
+            }
+            None => {
+                for &p in &placed {
+                    cluster.remove(p);
+                }
+                return false;
+            }
+        }
+    }
+    for c in apps[a].components.iter().filter(|c| !c.is_core) {
+        if let Some(h) = cluster.worst_fit(c.cpu_req, c.mem_req) {
+            assert!(cluster.place(c.id, h, c.cpu_req, c.mem_req, since));
+        }
+    }
+    apps[a].state = AppState::Running { since };
+    apps[a].last_progress_at = since;
+    true
+}
+
+/// Independent reimplementation of the scheduler's cluster-scan ETA:
+/// `last_progress_at + remaining / rate(active elastic)`.
+fn scan_eta(app: &Application, cluster: &Cluster) -> f64 {
+    let active = app
+        .components
+        .iter()
+        .filter(|c| !c.is_core && cluster.placement(c.id).is_some())
+        .count();
+    app.last_progress_at + app.remaining_work / app.rate(active).max(1e-9)
+}
+
+/// A randomized running world over the generated workload: roughly the
+/// first 2/3 of apps are placed (cluster permitting) with jittered
+/// progress; the rest stay queued (reservation heads).
+fn random_world(seed: u64) -> (Vec<Application>, Cluster, Vec<AppId>) {
+    let mut cfg = SimConfig::small();
+    cfg.workload.num_apps = 40;
+    let mut wl = generate(&cfg.workload, seed);
+    let mut cluster = Cluster::new(&ClusterConfig::uniform(12, 64.0, 256.0));
+    let mut rng = Pcg::seeded(seed ^ 0xfeedbac);
+    let mut running = Vec::new();
+    let n = wl.apps.len();
+    for a in 0..(2 * n / 3) {
+        let since = rng.uniform(0.0, 500.0);
+        if place_running(&mut wl.apps, &mut cluster, a, since) {
+            let frac = rng.uniform(0.05, 0.95);
+            wl.apps[a].remaining_work = wl.apps[a].total_work * frac;
+            wl.apps[a].last_progress_at = since + rng.uniform(0.0, 200.0);
+            running.push(a);
+        }
+    }
+    (wl.apps, cluster, running)
+}
+
+#[test]
+fn quiet_tick_ledger_is_bit_identical_to_the_cluster_scan() {
+    for seed in [3u64, 17, 42, 99, 1234] {
+        let (apps, cluster, running) = random_world(seed);
+        assert!(!running.is_empty(), "seed {seed}: nothing placed");
+        let now = 900.0;
+        let fb = SchedulerFeedback::capture(&apps, &cluster, &running, &ShapeActions::default(), now);
+        assert!(fb.full_preempt.is_empty() && fb.elastic_preempt.is_empty());
+        for &a in &running {
+            let scan = scan_eta(&apps[a], &cluster);
+            let ledger = fb.eta[&a];
+            assert_eq!(
+                ledger.to_bits(),
+                scan.to_bits(),
+                "seed {seed} app {a}: ledger {ledger} vs scan {scan}"
+            );
+        }
+        // and therefore every queued head's reservation is unchanged by
+        // observing the quiet tick, bit for bit
+        for head in apps.iter().filter(|a| matches!(a.state, AppState::Queued)).map(|a| a.id) {
+            let stale = shadow_start_time(&apps, &cluster, head, now, 1.0, None);
+            let fed = shadow_start_time(&apps, &cluster, head, now, 1.0, Some(&fb));
+            assert_eq!(
+                stale.map(f64::to_bits),
+                fed.map(f64::to_bits),
+                "seed {seed} head {head}: {stale:?} vs {fed:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn planned_full_preemptions_tighten_reservations_never_loosen() {
+    for seed in [5u64, 42, 271] {
+        let (apps, cluster, running) = random_world(seed);
+        let now = 900.0;
+        let heads: Vec<AppId> = apps
+            .iter()
+            .filter(|a| matches!(a.state, AppState::Queued))
+            .map(|a| a.id)
+            .collect();
+        assert!(!heads.is_empty(), "seed {seed}: no queued heads");
+        // preempt every 3rd running app; capacity can only free earlier
+        for stride in [2usize, 3, 5] {
+            let mut actions = ShapeActions::default();
+            actions
+                .preempt_apps
+                .extend(running.iter().copied().step_by(stride));
+            let fb = SchedulerFeedback::capture(&apps, &cluster, &running, &actions, now);
+            for &head in &heads {
+                let stale = shadow_start_time(&apps, &cluster, head, now, 1.0, None);
+                let fed = shadow_start_time(&apps, &cluster, head, now, 1.0, Some(&fb));
+                match (stale, fed) {
+                    (Some(s), Some(f)) => {
+                        // a start cannot happen before `now` either way;
+                        // compare the effective (now-clamped) reservations
+                        assert!(
+                            f.max(now) <= s.max(now) + 1e-9,
+                            "seed {seed} stride {stride} head {head}: fed {f} loosens stale {s}"
+                        );
+                    }
+                    // feasibility on the fully drained cluster is
+                    // unchanged by *when* releases happen
+                    (None, None) => {}
+                    (s, f) => panic!("seed {seed} head {head}: voidness diverged {s:?} vs {f:?}"),
+                }
+            }
+        }
+    }
+}
+
+/// A churny reservation-backfill configuration: a scarce cluster under
+/// the pessimistic shaper, so full/elastic preemptions keep perturbing
+/// the running set the reservations are estimated from.
+fn churn_cfg(seed: u64, feedback: bool) -> SimConfig {
+    let mut cfg = SimConfig::small();
+    cfg.seed = seed;
+    cfg.workload.num_apps = 60;
+    cfg.cluster.hosts = 2;
+    cfg.workload.runtime_scale = 1.0;
+    cfg.forecast.kind = ForecasterKind::Oracle;
+    cfg.shaper.policy = Policy::Pessimistic;
+    cfg.sched.scheduler = SchedulerKind::ReservationBackfill;
+    cfg.sched.feedback = feedback;
+    cfg
+}
+
+#[test]
+fn reservation_feedback_run_grades_estimates_end_to_end() {
+    let r = run_simulation(&churn_cfg(42, true), None, "fb").unwrap();
+    assert_eq!(r.completed, 60, "{}", r.summary());
+    assert!(
+        r.shadow_error.n > 0,
+        "no reservation estimate was ever graded: {}",
+        r.summary()
+    );
+    assert!(r.shadow_abs_error_mean >= 0.0);
+    // multiple reservations keep the run correct and graded too
+    let mut cfg4 = churn_cfg(42, true);
+    cfg4.sched.reservations = 4;
+    let r4 = run_simulation(&cfg4, None, "fb-r4").unwrap();
+    assert_eq!(r4.completed, 60, "{}", r4.summary());
+}
+
+#[test]
+fn feedback_corrected_estimator_beats_or_matches_the_stale_baseline() {
+    // the acceptance comparison: aggregate mean |reserved − actual|
+    // across the seeded churn scenarios, feedback-corrected vs stale
+    let (mut fed_sum, mut stale_sum, mut graded) = (0.0f64, 0.0f64, 0usize);
+    for seed in [11u64, 42, 77] {
+        let fed = run_simulation(&churn_cfg(seed, true), None, "fb").unwrap();
+        let stale = run_simulation(&churn_cfg(seed, false), None, "stale").unwrap();
+        assert_eq!(fed.completed, 60, "{}", fed.summary());
+        assert_eq!(stale.completed, 60, "{}", stale.summary());
+        if fed.shadow_error.n > 0 && stale.shadow_error.n > 0 {
+            fed_sum += fed.shadow_abs_error_mean;
+            stale_sum += stale.shadow_abs_error_mean;
+            graded += 1;
+        }
+    }
+    assert!(graded > 0, "no scenario graded any reservation estimate");
+    assert!(
+        fed_sum <= stale_sum + 1e-6,
+        "feedback-corrected |error| {fed_sum} exceeds the stale baseline's {stale_sum}"
+    );
+}

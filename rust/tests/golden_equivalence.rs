@@ -56,6 +56,11 @@ fn assert_reports_identical(a: &RunReport, b: &RunReport, ctx: &str) {
         (a.stretch.mean, b.stretch.mean, "stretch.mean"),
         (a.stretch.median, b.stretch.median, "stretch.median"),
         (a.stretch.max, b.stretch.max, "stretch.max"),
+        (a.shadow_error.mean, b.shadow_error.mean, "shadow_error.mean"),
+        (a.shadow_error.median, b.shadow_error.median, "shadow_error.median"),
+        (a.shadow_error.min, b.shadow_error.min, "shadow_error.min"),
+        (a.shadow_error.max, b.shadow_error.max, "shadow_error.max"),
+        (a.shadow_abs_error_mean, b.shadow_abs_error_mean, "shadow_abs_error_mean"),
         (a.cpu_slack.mean, b.cpu_slack.mean, "cpu_slack.mean"),
         (a.mem_slack.mean, b.mem_slack.mean, "mem_slack.mean"),
         (a.failed_app_fraction, b.failed_app_fraction, "failed_app_fraction"),
@@ -68,6 +73,7 @@ fn assert_reports_identical(a: &RunReport, b: &RunReport, ctx: &str) {
     for (x, y, name) in exact {
         assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {name} {x} vs {y}");
     }
+    assert_eq!(a.shadow_error.n, b.shadow_error.n, "{ctx}: shadow_error.n");
     assert_eq!(a.turnarounds.len(), b.turnarounds.len(), "{ctx}: turnarounds len");
     for (i, (x, y)) in a.turnarounds.iter().zip(&b.turnarounds).enumerate() {
         assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: turnarounds[{i}]");
@@ -155,6 +161,27 @@ fn incremental_matches_reference_across_seeds() {
         let reference =
             run_simulation_with(&cfg, None, "ref", MonitorMode::ReferenceScan).unwrap();
         assert_reports_identical(&inc, &reference, &format!("seed {seed}"));
+    }
+}
+
+#[test]
+fn reservation_backfill_matches_reference_modes_stale_and_fed() {
+    // the reservation scheduler (both the stale cluster-scan estimator
+    // and the feedback-corrected one, at R ∈ {1, 4}) must be a pure
+    // function of the event stream: identical RunReports under both
+    // monitor gather modes
+    for (reservations, feedback) in [(1usize, false), (1, true), (4, true)] {
+        let mut cfg = tier1_cfg();
+        cfg.shaper.policy = Policy::Pessimistic;
+        cfg.forecast.kind = ForecasterKind::Oracle;
+        cfg.sched.scheduler = zoe_shaper::config::SchedulerKind::ReservationBackfill;
+        cfg.sched.reservations = reservations;
+        cfg.sched.feedback = feedback;
+        let ctx = format!("resv-backfill r{reservations} fb={feedback}");
+        let inc = run_simulation_with(&cfg, None, &ctx, MonitorMode::Incremental).unwrap();
+        let reference = run_simulation_with(&cfg, None, &ctx, MonitorMode::ReferenceScan).unwrap();
+        assert_reports_identical(&inc, &reference, &ctx);
+        assert_eq!(inc.completed, 120, "{}", inc.summary());
     }
 }
 
@@ -300,6 +327,191 @@ fn default_policies_match_linear_reference_oracles() {
             &default_run,
             &oracle_run,
             &format!("linear oracle vs default, policy {}", policy.name()),
+        );
+    }
+}
+
+// ----- pre-feedback reservation-backfill pinning ------------------------
+
+use std::collections::{HashMap, HashSet};
+
+use zoe_shaper::scheduler::{shadow_start_time, MAX_HEAD_OVERTAKES};
+
+/// Today's (pre-feedback, single-reservation) conservative backfill,
+/// reimplemented over a plain sorted Vec queue with its own overtake
+/// bookkeeping: head-of-line drain, one head reservation, candidates
+/// admitted only when their worst-case completion precedes it, depth
+/// counting the blocked head, bounded overtaking, and the same estimate
+/// grading (signed reserved − actual start). Injected via
+/// `Engine::with_policies` to pin that `reservations = 1` with feedback
+/// disabled reproduces the pre-feedback scheduler bit for bit.
+///
+/// Scope of independence: the queue, guard, depth and grading mechanics
+/// are reimplemented from scratch; the shadow estimate itself is the
+/// shared [`shadow_start_time`] with `feedback = None` — deliberately,
+/// because the estimator's binary-search prefix probe is specified only
+/// up to greedy-packing anomalies, so an "independent" smallest-prefix
+/// scan could legitimately diverge bitwise. This test therefore pins the
+/// *walk/generalization refactor* around the estimator, not the
+/// estimator's internals (those are covered by the scheduler unit tests
+/// and `tests/feedback_prop.rs`).
+struct LegacyReservationOracle {
+    queue: Vec<AppId>,
+    depth: usize,
+    overtakes: HashMap<AppId, u64>,
+    estimates: HashMap<AppId, f64>,
+    errors: Vec<f64>,
+}
+
+impl LegacyReservationOracle {
+    fn new(depth: usize) -> Self {
+        LegacyReservationOracle {
+            queue: Vec::new(),
+            depth,
+            overtakes: HashMap::new(),
+            estimates: HashMap::new(),
+            errors: Vec::new(),
+        }
+    }
+
+    fn head_allowed(&self, head: AppId) -> bool {
+        self.overtakes.get(&head).copied().unwrap_or(0) < MAX_HEAD_OVERTAKES
+    }
+
+    fn grade(&mut self, started: &[PlacementOutcome], now: f64) {
+        for o in started {
+            if let Some(est) = self.estimates.remove(&o.app) {
+                self.errors.push(est - now);
+            }
+        }
+    }
+}
+
+impl Scheduler for LegacyReservationOracle {
+    fn name(&self) -> &'static str {
+        "legacy-reservation-oracle"
+    }
+
+    fn enqueue(&mut self, apps: &[Application], id: AppId) {
+        let pos = self.queue.partition_point(|&q| {
+            apps[q].submit_time < apps[id].submit_time
+                || (apps[q].submit_time == apps[id].submit_time && q < id)
+        });
+        self.queue.insert(pos, id);
+    }
+
+    fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn queued(&self) -> Vec<AppId> {
+        self.queue.clone()
+    }
+
+    fn drain_shadow_errors(&mut self) -> Vec<f64> {
+        std::mem::take(&mut self.errors)
+    }
+
+    fn try_schedule(
+        &mut self,
+        apps: &mut [Application],
+        cluster: &mut Cluster,
+        placer: &dyn Placer,
+        now: f64,
+        price: f64,
+    ) -> Vec<PlacementOutcome> {
+        let mut started = Vec::new();
+        while let Some(&head) = self.queue.first() {
+            match LinearFifoOracle::try_place(&apps[head], cluster, placer, now, price) {
+                Some(outcome) => {
+                    apps[head].state = AppState::Running { since: now };
+                    apps[head].last_progress_at = now;
+                    self.queue.remove(0);
+                    started.push(outcome);
+                }
+                None => break,
+            }
+        }
+        let Some(&head) = self.queue.first() else {
+            self.overtakes.clear();
+            self.grade(&started, now);
+            return started;
+        };
+        let queued: HashSet<AppId> = self.queue.iter().copied().collect();
+        self.overtakes.retain(|a, _| queued.contains(a));
+        if !self.head_allowed(head) || self.queue.len() == 1 || self.depth == 0 {
+            self.grade(&started, now);
+            return started;
+        }
+        let shadow = shadow_start_time(apps, cluster, head, now, price, None);
+        match shadow {
+            Some(t) => {
+                self.estimates.insert(head, t);
+            }
+            None => {
+                self.estimates.remove(&head);
+            }
+        }
+        let mut blocked = 1usize;
+        let mut i = 1usize;
+        while blocked <= self.depth && self.head_allowed(head) && i < self.queue.len() {
+            let id = self.queue[i];
+            let eligible = match shadow {
+                Some(t) => now + apps[id].remaining_work <= t + CAPACITY_EPS,
+                None => true,
+            };
+            let outcome = if eligible {
+                LinearFifoOracle::try_place(&apps[id], cluster, placer, now, price)
+            } else {
+                None
+            };
+            match outcome {
+                Some(outcome) => {
+                    apps[id].state = AppState::Running { since: now };
+                    apps[id].last_progress_at = now;
+                    self.queue.remove(i);
+                    started.push(outcome);
+                    *self.overtakes.entry(head).or_insert(0) += 1;
+                    self.overtakes.remove(&id);
+                }
+                None => {
+                    blocked += 1;
+                    i += 1;
+                }
+            }
+        }
+        self.grade(&started, now);
+        started
+    }
+}
+
+/// Acceptance pin: `reservations = 1` with feedback disabled is today's
+/// `ReservationBackfillScheduler`, bit for bit — the multi-reservation
+/// generalization and the feedback plumbing may not perturb the legacy
+/// configuration under any shaping policy.
+#[test]
+fn stale_single_reservation_matches_legacy_oracle() {
+    for policy in [Policy::Baseline, Policy::Pessimistic] {
+        let mut cfg = tier1_cfg();
+        cfg.shaper.policy = policy;
+        cfg.forecast.kind = ForecasterKind::Oracle;
+        cfg.sched.scheduler = zoe_shaper::config::SchedulerKind::ReservationBackfill;
+        cfg.sched.reservations = 1;
+        cfg.sched.feedback = false;
+        let production =
+            run_simulation_with(&cfg, None, "production", MonitorMode::Incremental).unwrap();
+        let eng = Engine::with_policies(
+            cfg.clone(),
+            ForecastSource::Oracle,
+            MonitorMode::Incremental,
+            Box::new(LegacyReservationOracle::new(cfg.sched.backfill_depth)),
+            Box::new(LinearWorstFitOracle),
+        );
+        let oracle_run = eng.run("legacy-oracle");
+        assert_reports_identical(
+            &production,
+            &oracle_run,
+            &format!("legacy reservation oracle, policy {}", policy.name()),
         );
     }
 }
