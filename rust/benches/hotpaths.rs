@@ -8,7 +8,10 @@
 //! entry per run, keyed by git revision) so the perf trajectory
 //! accumulates across PRs, and prints the speedup of the
 //! workspace/parallel GP engine over the pre-workspace reference path.
-//! `ZOE_WORKERS` caps the worker threads (default: available cores).
+//! The lane-scaling (L ∈ {1, 4, 16}) and SIMD-on/off cases at the
+//! 10k-series fused tick self-report their ratios into the JSON via
+//! `Bench::record`. `ZOE_WORKERS` caps the worker threads (default:
+//! available cores).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -16,7 +19,10 @@ use std::time::Duration;
 
 use zoe_shaper::cluster::Cluster;
 use zoe_shaper::config::{ClusterConfig, ForecasterKind, KernelKind, Policy, SimConfig};
-use zoe_shaper::forecast::{anon_refs, arima::Arima, gp_native::GpNative, gp_pjrt::GpPjrt, Forecaster};
+use zoe_shaper::forecast::{
+    anon_refs, arima::Arima, gp_incremental::GpIncremental, gp_native::GpNative, gp_pjrt::GpPjrt,
+    Forecaster, SeriesRef,
+};
 use zoe_shaper::runtime::Runtime;
 use zoe_shaper::shaper::{plan_into, Demand, PlanScratch, ShapeActions};
 use zoe_shaper::sim::engine::run_simulation;
@@ -139,6 +145,59 @@ fn main() {
     b.run("gp_native_fused_tick_1000hosts_40k_series", || {
         gp1000.forecast_batch(&tick_1000_refs)
     });
+
+    // Lane scaling: the sliding-window engine at the 10k-series fused
+    // tick, steady state (caches warm, rank-1 slides only), as the
+    // workspace-cache lane count grows. Forecasts are bit-identical for
+    // every L (tests/forecast_lanes_prop.rs); this measures the
+    // wall-clock effect of letting the pool actually shard the batch.
+    let lane_corpus = series(10_000, 84, 17);
+    let lane_window = 20usize;
+    let mut lane_ns = Vec::new();
+    for lanes in [1usize, 4, 16] {
+        let mut gp = GpIncremental::new(KernelKind::Exp, 10).with_lanes(lanes);
+        let mut t = lane_window;
+        // warm pass: populate every series' cached factor so the timed
+        // region measures steady-state slides, not first-touch refits
+        let warm: Vec<SeriesRef<'_>> = lane_corpus
+            .iter()
+            .enumerate()
+            .map(|(i, s)| SeriesRef::keyed(i as u64, t as u64, &s[..t]))
+            .collect();
+        gp.forecast(&warm);
+        let ns = b
+            .run(&format!("gp_incr_fused_tick_10k_series_lanes{lanes}"), || {
+                t += 1;
+                if t > lane_corpus[0].len() {
+                    t = lane_window + 1;
+                }
+                let views: Vec<SeriesRef<'_>> = lane_corpus
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| SeriesRef::keyed(i as u64, t as u64, &s[..t]))
+                    .collect();
+                gp.forecast(&views)
+            })
+            .ns_per_iter();
+        lane_ns.push(ns);
+    }
+    b.record("gp_incr_lane_scaling_L1_over_L16", lane_ns[0] / lane_ns[2]);
+
+    // SIMD on vs off at the same 10k-series fused tick: the dispatcher
+    // is forced both ways so the ratio isolates the AVX2+FMA kernels
+    // from everything else (on non-AVX2 hardware both runs take the
+    // scalar path and the ratio hovers around 1.0).
+    zoe_shaper::util::simd::force_simd(true);
+    println!("  simd backend when forced on: {}", zoe_shaper::util::simd::active_backend());
+    let simd_on_ns = b
+        .run("gp_native_fused_tick_10k_series_simd_on", || gp250.forecast_batch(&tick_250_refs))
+        .ns_per_iter();
+    zoe_shaper::util::simd::force_simd(false);
+    let simd_off_ns = b
+        .run("gp_native_fused_tick_10k_series_simd_off", || gp250.forecast_batch(&tick_250_refs))
+        .ns_per_iter();
+    zoe_shaper::util::simd::reset_simd();
+    b.record("gp_native_simd_speedup_10k_series", simd_off_ns / simd_on_ns);
 
     let mut arima = Arima::auto();
     b.run("arima_auto_batch64", || arima.forecast(&corpus_refs));

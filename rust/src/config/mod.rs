@@ -316,6 +316,12 @@ pub struct ForecastConfig {
     pub monitor_interval_s: f64,
     /// Grace period before shaping starts (paper: 10 min).
     pub grace_period_s: f64,
+    /// Workspace-cache lanes for the sliding-window forecaster
+    /// (`gp-incr`): 0 = auto (worker count). The `ZOE_LANES` env var
+    /// overrides. Forecasts are identical for every setting — lane
+    /// sharding is deterministic by construction — only throughput
+    /// changes.
+    pub lanes: usize,
 }
 
 /// Resource-shaper parameters (§3.2).
@@ -368,6 +374,7 @@ impl SimConfig {
                 history: 10,
                 monitor_interval_s: 60.0,
                 grace_period_s: 600.0,
+                lanes: 0,
             },
             shaper: ShaperConfig {
                 policy: Policy::Pessimistic,
@@ -527,6 +534,9 @@ impl SimConfig {
             if let Some(v) = f.get("grace_period_s").and_then(Json::as_f64) {
                 self.forecast.grace_period_s = v;
             }
+            if let Some(v) = f.get("lanes").and_then(Json::as_usize) {
+                self.forecast.lanes = v;
+            }
         }
         if let Some(s) = j.get("shaper") {
             if let Some(v) = s.get("policy").and_then(Json::as_str) {
@@ -629,7 +639,7 @@ mod tests {
         let mut c = SimConfig::small();
         let j = Json::parse(
             r#"{"cluster":{"hosts":7},"shaper":{"k1":0.25,"policy":"optimistic"},
-                "forecast":{"kind":"arima","history":20}}"#,
+                "forecast":{"kind":"arima","history":20,"lanes":4}}"#,
         )
         .unwrap();
         c.apply_json(&j).unwrap();
@@ -638,6 +648,7 @@ mod tests {
         assert!((c.shaper.k1 - 0.25).abs() < 1e-12);
         assert_eq!(c.forecast.kind, ForecasterKind::Arima);
         assert_eq!(c.forecast.history, 20);
+        assert_eq!(c.forecast.lanes, 4);
     }
 
     #[test]

@@ -41,19 +41,31 @@
 //! `tests/gp_incremental_prop.rs`, and `benches/engine.rs` reports the
 //! warm-tick speedup of slide over refactorize.
 //!
-//! Batches are processed sequentially: the per-key cache is the point,
-//! and a slide tick is O(h²) per series — cheap enough that sharding
-//! would buy little (parallel key-laning is a ROADMAP open item).
+//! # Lane-parallel batches
+//!
+//! The per-key cache is partitioned into `L` lanes by stable `key % L`
+//! ([`WorkspaceCache`]): a series' entire slide/refit history lives in
+//! exactly one lane, so lanes execute on scoped worker threads
+//! (`util::pool::shard_for_each_mut`) with no synchronization — and
+//! because each forecast reads and writes only lane-local state under a
+//! global batch clock, results are **bit-for-bit identical for any lane
+//! or worker count** (pinned in `tests/forecast_lanes_prop.rs`).
+//! Eviction is decided on the *global* cache size and applied per lane,
+//! keeping the decision lane-count independent while the accounting
+//! stays lane-local. Lane count resolution: `ZOE_LANES` env, then the
+//! `forecast.lanes` config (0 = auto), then the worker count.
 
 use std::collections::HashMap;
 
-use super::gp_native::{kern, GpNative, GpWorkspace, JITTER, LS_GRID, NOISE};
+use super::gp_native::{kern, kern_row, GpNative, GpWorkspace, JITTER, LS_GRID, NOISE};
 use super::{naive_forecast, Forecast, Forecaster, SeriesRef, Standardizer};
 use crate::config::KernelKind;
 use crate::util::linalg::{
     chol_append_row, chol_delete_first, cholesky_in_place, solve_lower_in_place,
     solve_lower_t_in_place, Mat,
 };
+use crate::util::pool;
+use crate::util::simd;
 
 /// How the cached factor is maintained when the window slides.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -114,12 +126,18 @@ struct SeriesState {
 /// Reused numeric scratch (allocation-free steady state).
 #[derive(Debug, Default)]
 struct Scratch {
-    /// Raw squared-distance Gram, lower triangle (refits only).
+    /// Combined (time + value) squared-distance Gram, strict lower
+    /// triangle (refits only).
     d2: Vec<f64>,
     /// Old first factor column (`chol_delete_first`).
     col: Vec<f64>,
     /// New kernel row (`chol_append_row`).
     row: Vec<f64>,
+    /// Combined (time + value) squared-distance row, staged so the kern
+    /// application runs vectorized over a contiguous slice — and, being
+    /// lengthscale-independent, computed once per row instead of once
+    /// per grid entry.
+    drow: Vec<f64>,
     alpha: Vec<f64>,
     v: Vec<f64>,
     kxq: Vec<f64>,
@@ -141,8 +159,53 @@ struct Cfg {
 /// window: rows `i` and `j` cover `w[i..i+h]` and `w[j..j+h]`.
 #[inline]
 fn rawd2(w: &[f64], i: usize, j: usize, h: usize) -> f64 {
-    let (a, b) = (&w[i..i + h], &w[j..j + h]);
-    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    simd::sum_sq_diff(&w[i..i + h], &w[j..j + h])
+}
+
+/// One lane of the sharded workspace cache: the series states whose keys
+/// map to this lane, plus lane-local workspace, scratch and telemetry.
+/// A series' entire slide/refit history lives in exactly one lane, so
+/// lanes run on separate threads with no synchronization — and the math
+/// is identical for any lane or worker count.
+#[derive(Debug, Default)]
+struct WorkspaceCache {
+    states: HashMap<u64, SeriesState>,
+    /// Stateless-fallback workspace (anonymous keys, filling windows).
+    ws: GpWorkspace,
+    scratch: Scratch,
+    stats: IncrStats,
+    /// Batch scratch: input positions routed to this lane, input order.
+    idxs: Vec<usize>,
+    /// Batch scratch: forecasts for `idxs`, same order.
+    out: Vec<Forecast>,
+}
+
+/// Below this many series per worker, lane threads cost more than they
+/// save (mirrors `gp_native`'s batch clamp).
+const LANE_MIN_SERIES_PER_WORKER: usize = 16;
+
+/// Lane-count resolution for the sharded workspace cache: the
+/// `ZOE_LANES` environment variable (if set and >= 1) wins, then an
+/// explicit `requested` count (`forecast.lanes` config / `--lanes`),
+/// then the worker-count default ([`pool::num_workers`]). Forecasts are
+/// identical for every choice; only throughput changes.
+pub fn resolve_lanes(requested: usize) -> usize {
+    if let Ok(s) = std::env::var("ZOE_LANES") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    if requested >= 1 {
+        requested
+    } else {
+        pool::num_workers()
+    }
+}
+
+fn make_lanes(n: usize) -> Vec<WorkspaceCache> {
+    (0..n.max(1)).map(|_| WorkspaceCache::default()).collect()
 }
 
 /// Incremental GP forecaster. Config fields mirror [`GpNative`].
@@ -157,28 +220,27 @@ pub struct GpIncremental {
     mode: SlideMode,
     /// Slides between standardizer refreshes / full refactorizations.
     pub refresh_every: u32,
-    /// Cache size bound: when the cache outgrows this after a batch,
-    /// every state not touched by that batch is dropped (a dropped
-    /// series simply refits on its next appearance). Bounds memory on
-    /// workloads that churn through many components.
+    /// Cache size bound: when the whole cache (all lanes) outgrows this
+    /// after a batch, every state not touched by that batch is dropped
+    /// (a dropped series simply refits on its next appearance). Bounds
+    /// memory on workloads that churn through many components.
     pub max_cached: usize,
     /// Monotone batch counter (eviction generations).
     clock: u64,
     /// Squared time-coordinate distances `((d)/2h)²` for d in `0..=h`.
     tgrid: Vec<f64>,
-    states: HashMap<u64, SeriesState>,
-    stats: IncrStats,
+    /// Lane-sharded workspace caches (`key % lanes.len()`); never empty.
+    lanes: Vec<WorkspaceCache>,
     /// Stateless path for anonymous keys and not-yet-full windows —
     /// exactly `GpNative`'s math, so those forecasts are bit-identical
     /// to the batched engine's.
     fallback: GpNative,
-    ws: GpWorkspace,
-    scratch: Scratch,
 }
 
 impl GpIncremental {
     /// Standard configuration; refresh cadence defaults to one full
-    /// window turnover (`2h` slides).
+    /// window turnover (`2h` slides), lane count to [`resolve_lanes`]'s
+    /// auto default.
     pub fn new(kernel: KernelKind, history: usize) -> Self {
         let h = history.max(2);
         let t = (2 * h) as f64;
@@ -192,11 +254,8 @@ impl GpIncremental {
             max_cached: 65_536,
             clock: 0,
             tgrid: (0..=h).map(|d| (d as f64 / t) * (d as f64 / t)).collect(),
-            states: HashMap::new(),
-            stats: IncrStats::default(),
+            lanes: make_lanes(resolve_lanes(0)),
             fallback: GpNative::new(kernel, h),
-            ws: GpWorkspace::new(),
-            scratch: Scratch::default(),
         }
     }
 
@@ -207,111 +266,164 @@ impl GpIncremental {
         self
     }
 
-    /// Telemetry counters.
-    pub fn stats(&self) -> IncrStats {
-        self.stats
+    /// Pin the lane count exactly (benches/tests pin scaling points).
+    /// Unlike [`resolve_lanes`] no environment override applies here.
+    /// Drops any cached state.
+    pub fn with_lanes(mut self, lanes: usize) -> Self {
+        self.lanes = make_lanes(lanes);
+        self
     }
 
-    /// Cached series count (capacity planning; bounded by live
-    /// component count × 2 resources).
+    /// Lane count in use.
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Telemetry counters, aggregated over lanes.
+    pub fn stats(&self) -> IncrStats {
+        let mut t = IncrStats::default();
+        for lane in &self.lanes {
+            t.slides += lane.stats.slides;
+            t.refits += lane.stats.refits;
+            t.refactorizations += lane.stats.refactorizations;
+            t.fallbacks += lane.stats.fallbacks;
+            t.evictions += lane.stats.evictions;
+        }
+        t
+    }
+
+    /// Per-lane telemetry (eviction accounting stays lane-local).
+    pub fn lane_stats(&self) -> Vec<IncrStats> {
+        self.lanes.iter().map(|lane| lane.stats).collect()
+    }
+
+    /// Cached series count across all lanes (capacity planning; bounded
+    /// by live component count × 2 resources).
     pub fn cached_series(&self) -> usize {
-        self.states.len()
+        self.lanes.iter().map(|lane| lane.states.len()).sum()
     }
 
     /// Drop cached state (e.g. between unrelated workloads).
     pub fn clear_cache(&mut self) {
-        self.states.clear();
+        for lane in &mut self.lanes {
+            lane.states.clear();
+        }
     }
 
-    /// Forecast one view through the cache.
-    fn forecast_view(&mut self, r: &SeriesRef<'_>) -> Forecast {
-        let h = self.history;
-        let window = 2 * h;
-        if r.data.len() < 2 {
-            return naive_forecast(r.data);
-        }
-        if r.key == SeriesRef::ANON || r.data.len() < window {
-            // no identity to cache under, or the window is still filling:
-            // the stateless workspace path (== GpNative bit for bit)
-            self.stats.fallbacks += 1;
-            return self.fallback.forecast_one_with(&mut self.ws, r.data);
-        }
-        let cfg = Cfg {
+    /// Scalar configuration copy-out for the lane workers.
+    fn cfg(&self) -> Cfg {
+        Cfg {
             kernel: self.kernel,
             noise: self.noise,
-            h,
-            dim_scale: ((h + 1) as f64).sqrt(),
+            h: self.history,
+            dim_scale: ((self.history + 1) as f64).sqrt(),
             mode: self.mode,
             refresh_every: self.refresh_every,
-        };
-        let tail = &r.data[r.data.len() - window..];
-        let clock = self.clock;
-        // split borrows: the cache, scratch and stats move independently
-        let GpIncremental { states, stats, scratch, tgrid, ls_grid, .. } = self;
+        }
+    }
 
-        let st = states.entry(r.key).or_insert_with(|| SeriesState {
-            seq: u64::MAX, // forces the refit branch below
-            last_used: clock,
-            std: Standardizer { mean: 0.0, std: 1.0 },
-            inv_std2: 1.0,
-            win: Vec::with_capacity(window),
-            y: Vec::with_capacity(h),
-            grid: vec![LsFactor::default(); ls_grid.len()],
-            slides_since_refit: 0,
-        });
-        st.last_used = clock;
+    /// Forecast one view through its lane's cache (single-view path for
+    /// unit tests; batches go through [`Forecaster::forecast`]).
+    #[cfg(test)]
+    fn forecast_view(&mut self, r: &SeriesRef<'_>) -> Forecast {
+        let cfg = self.cfg();
+        let li = (r.key % self.lanes.len() as u64) as usize;
+        let GpIncremental { lanes, fallback, tgrid, ls_grid, clock, .. } = self;
+        lane_forecast_view(&mut lanes[li], fallback, cfg, ls_grid, tgrid, *clock, r)
+    }
+}
 
-        // decide: how many samples did this series advance since we last
-        // saw it, and is replaying them cheaper than refitting?
-        let same_epoch = (r.seq >> 32) == (st.seq >> 32);
-        let delta = r.seq.wrapping_sub(st.seq);
-        let slide_ok = st.seq != u64::MAX
-            && same_epoch
-            && r.seq >= st.seq
-            && (delta as usize) < h
-            && st.slides_since_refit.saturating_add(delta as u32) <= cfg.refresh_every;
+/// Forecast one view against its lane's cache. Per-series pure: reads
+/// and writes only lane-local state (plus the shared immutable config
+/// and fallback engine), which is what makes lane execution
+/// embarrassingly parallel *and* bit-for-bit independent of the lane
+/// and worker counts.
+fn lane_forecast_view(
+    lane: &mut WorkspaceCache,
+    fallback: &GpNative,
+    cfg: Cfg,
+    ls_grid: &[f64],
+    tgrid: &[f64],
+    clock: u64,
+    r: &SeriesRef<'_>,
+) -> Forecast {
+    let h = cfg.h;
+    let window = 2 * h;
+    if r.data.len() < 2 {
+        return naive_forecast(r.data);
+    }
+    if r.key == SeriesRef::ANON || r.data.len() < window {
+        // no identity to cache under, or the window is still filling:
+        // the stateless workspace path (== GpNative bit for bit)
+        lane.stats.fallbacks += 1;
+        return fallback.forecast_one_with(&mut lane.ws, r.data);
+    }
+    let tail = &r.data[r.data.len() - window..];
+    // split borrows: the cache, scratch and stats move independently
+    let WorkspaceCache { states, stats, scratch, .. } = lane;
 
-        let mut ok = true;
-        if slide_ok {
-            let s = delta as usize;
-            for &v in &tail[window - s..] {
-                slide_window_one(st, v);
-                if cfg.mode == SlideMode::Incremental {
-                    stats.slides += 1;
-                    if !slide_factors_one(st, cfg, ls_grid, tgrid, scratch) {
-                        ok = false;
-                        break;
-                    }
+    let st = states.entry(r.key).or_insert_with(|| SeriesState {
+        seq: u64::MAX, // forces the refit branch below
+        last_used: clock,
+        std: Standardizer { mean: 0.0, std: 1.0 },
+        inv_std2: 1.0,
+        win: Vec::with_capacity(window),
+        y: Vec::with_capacity(h),
+        grid: vec![LsFactor::default(); ls_grid.len()],
+        slides_since_refit: 0,
+    });
+    st.last_used = clock;
+
+    // decide: how many samples did this series advance since we last
+    // saw it, and is replaying them cheaper than refitting?
+    let same_epoch = (r.seq >> 32) == (st.seq >> 32);
+    let delta = r.seq.wrapping_sub(st.seq);
+    let slide_ok = st.seq != u64::MAX
+        && same_epoch
+        && r.seq >= st.seq
+        && (delta as usize) < h
+        && st.slides_since_refit.saturating_add(delta as u32) <= cfg.refresh_every;
+
+    let mut ok = true;
+    if slide_ok {
+        let s = delta as usize;
+        for &v in &tail[window - s..] {
+            slide_window_one(st, v);
+            if cfg.mode == SlideMode::Incremental {
+                stats.slides += 1;
+                if !slide_factors_one(st, cfg, ls_grid, tgrid, scratch) {
+                    ok = false;
+                    break;
                 }
             }
-            if ok {
-                debug_assert_eq!(st.win.as_slice(), tail, "sliding-window desync");
-            }
-            if ok && cfg.mode == SlideMode::Refactorize && s > 0 {
-                stats.refactorizations += 1;
-                build_factors(st, cfg, ls_grid, tgrid, scratch);
-            }
-            st.slides_since_refit += delta as u32;
         }
-        if !slide_ok || !ok {
-            if !ok {
-                crate::warn_log!(
-                    "gp-incr: rank-1 slide lost positive definiteness on series {}; refitting",
-                    r.key
-                );
-            }
-            stats.refits += 1;
-            refit_state(st, tail, cfg, ls_grid, tgrid, scratch);
+        if ok {
+            debug_assert_eq!(st.win.as_slice(), tail, "sliding-window desync");
         }
-        st.seq = r.seq;
+        if ok && cfg.mode == SlideMode::Refactorize && s > 0 {
+            stats.refactorizations += 1;
+            build_factors(st, cfg, ls_grid, tgrid, scratch);
+        }
+        st.slides_since_refit += delta as u32;
+    }
+    if !slide_ok || !ok {
+        if !ok {
+            crate::warn_log!(
+                "gp-incr: rank-1 slide lost positive definiteness on series {}; refitting",
+                r.key
+            );
+        }
+        stats.refits += 1;
+        refit_state(st, tail, cfg, ls_grid, tgrid, scratch);
+    }
+    st.seq = r.seq;
 
-        match posterior_best(st, cfg, ls_grid, tgrid, scratch) {
-            Some((mean_z, var_z)) => Forecast {
-                mean: st.std.inv_mean(mean_z),
-                var: st.std.inv_var(var_z).max(1e-8),
-            },
-            None => naive_forecast(r.data),
-        }
+    match posterior_best(st, cfg, ls_grid, tgrid, scratch) {
+        Some((mean_z, var_z)) => Forecast {
+            mean: st.std.inv_mean(mean_z),
+            var: st.std.inv_var(var_z).max(1e-8),
+        },
+        None => naive_forecast(r.data),
     }
 }
 
@@ -336,20 +448,25 @@ fn slide_factors_one(
     scratch: &mut Scratch,
 ) -> bool {
     let n = cfg.h;
+    let Scratch { col, row, drow, .. } = scratch;
+    // the new last row's squared-distance profile is lengthscale-
+    // independent: stage it once, reuse for every grid entry
+    drow.clear();
+    for j in 0..n - 1 {
+        drow.push(tgrid[n - 1 - j] + rawd2(&st.win, j, n - 1, cfg.h) * st.inv_std2);
+    }
     for (g, &ls_rel) in ls_grid.iter().enumerate() {
         let lst = &mut st.grid[g];
         if !lst.valid {
             continue;
         }
         let ls = ls_rel * cfg.dim_scale;
-        chol_delete_first(&mut lst.l, n, &mut scratch.col);
-        scratch.row.clear();
-        for j in 0..n - 1 {
-            let d = tgrid[n - 1 - j] + rawd2(&st.win, j, n - 1, cfg.h) * st.inv_std2;
-            scratch.row.push(kern(cfg.kernel, d, ls));
-        }
-        scratch.row.push(kern(cfg.kernel, 0.0, ls) + cfg.noise + JITTER);
-        if chol_append_row(&mut lst.l, &mut scratch.row).is_err() {
+        chol_delete_first(&mut lst.l, n, col);
+        row.clear();
+        row.resize(n - 1, 0.0);
+        kern_row(cfg.kernel, drow, ls, row);
+        row.push(kern(cfg.kernel, 0.0, ls) + cfg.noise + JITTER);
+        if chol_append_row(&mut lst.l, row).is_err() {
             return false;
         }
     }
@@ -366,12 +483,15 @@ fn build_factors(
     scratch: &mut Scratch,
 ) {
     let n = cfg.h;
-    // raw squared-distance Gram once; every lengthscale derives from it
-    scratch.d2.clear();
-    scratch.d2.resize(n * n, 0.0);
+    let Scratch { d2, .. } = scratch;
+    // combined (time + value) squared-distance Gram once; every
+    // lengthscale derives its kernel matrix from it with a vector
+    // kern-row pass over the contiguous strict-lower rows
+    d2.clear();
+    d2.resize(n * n, 0.0);
     for i in 0..n {
         for j in 0..i {
-            scratch.d2[i * n + j] = rawd2(&st.win, i, j, cfg.h);
+            d2[i * n + j] = tgrid[i - j] + rawd2(&st.win, i, j, cfg.h) * st.inv_std2;
         }
     }
     let mut failed = 0usize;
@@ -380,11 +500,9 @@ fn build_factors(
         let lst = &mut st.grid[g];
         lst.l.reset(n, n);
         for i in 0..n {
-            for j in 0..i {
-                let d = tgrid[i - j] + scratch.d2[i * n + j] * st.inv_std2;
-                lst.l[(i, j)] = kern(cfg.kernel, d, ls);
-            }
-            lst.l[(i, i)] = kern(cfg.kernel, 0.0, ls) + cfg.noise + JITTER;
+            let lrow = lst.l.row_mut(i);
+            kern_row(cfg.kernel, &d2[i * n..i * n + i], ls, &mut lrow[..i]);
+            lrow[i] = kern(cfg.kernel, 0.0, ls) + cfg.noise + JITTER;
         }
         lst.valid = cholesky_in_place(&mut lst.l).is_ok();
         if !lst.valid {
@@ -431,6 +549,13 @@ fn posterior_best(
     scratch: &mut Scratch,
 ) -> Option<(f64, f64)> {
     let n = cfg.h;
+    let Scratch { drow, alpha, v, kxq, .. } = scratch;
+    // query row: time coord (t-h)/t, history win[h..2h] — the distance
+    // profile is lengthscale-independent, staged once for the grid
+    drow.clear();
+    for j in 0..n {
+        drow.push(tgrid[n - j] + rawd2(&st.win, j, cfg.h, cfg.h) * st.inv_std2);
+    }
     let mut best: Option<(f64, f64, f64)> = None; // (lml, mean, var)
     for (g, &ls_rel) in ls_grid.iter().enumerate() {
         let lst = &st.grid[g];
@@ -438,26 +563,23 @@ fn posterior_best(
             continue;
         }
         let ls = ls_rel * cfg.dim_scale;
-        // query row: time coord (t-h)/t, history win[h..2h]
-        scratch.kxq.clear();
-        for j in 0..n {
-            let d = tgrid[n - j] + rawd2(&st.win, j, cfg.h, cfg.h) * st.inv_std2;
-            scratch.kxq.push(kern(cfg.kernel, d, ls));
-        }
-        scratch.alpha.clear();
-        scratch.alpha.extend_from_slice(&st.y);
-        solve_lower_in_place(&lst.l, &mut scratch.alpha);
-        solve_lower_t_in_place(&lst.l, &mut scratch.alpha);
-        let mean: f64 = scratch.kxq.iter().zip(&scratch.alpha).map(|(a, b)| a * b).sum();
-        scratch.v.clear();
-        scratch.v.extend_from_slice(&scratch.kxq);
-        solve_lower_in_place(&lst.l, &mut scratch.v);
-        let var = (1.0 - scratch.v.iter().map(|x| x * x).sum::<f64>()).max(0.0);
+        kxq.clear();
+        kxq.resize(n, 0.0);
+        kern_row(cfg.kernel, drow, ls, kxq);
+        alpha.clear();
+        alpha.extend_from_slice(&st.y);
+        solve_lower_in_place(&lst.l, alpha);
+        solve_lower_t_in_place(&lst.l, alpha);
+        let mean: f64 = simd::dot(kxq, alpha);
+        v.clear();
+        v.extend_from_slice(kxq);
+        solve_lower_in_place(&lst.l, v);
+        let var = (1.0 - simd::sum_sq(v)).max(0.0);
         let mut logdet_half = 0.0;
         for i in 0..n {
             logdet_half += lst.l[(i, i)].ln();
         }
-        let lml = -0.5 * st.y.iter().zip(&scratch.alpha).map(|(a, b)| a * b).sum::<f64>()
+        let lml = -0.5 * simd::dot(&st.y, alpha)
             - logdet_half
             - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln();
         if best.map(|(b, _, _)| lml > b).unwrap_or(true) {
@@ -478,15 +600,59 @@ impl Forecaster for GpIncremental {
 
     fn forecast(&mut self, series: &[SeriesRef<'_>]) -> Vec<Forecast> {
         self.clock += 1;
-        let out = series.iter().map(|r| self.forecast_view(r)).collect();
-        if self.states.len() > self.max_cached {
-            // keep only the states this batch touched: components that
-            // left the shaped set (finished, gave up, long-preempted)
-            // stop costing memory; a returner simply refits
-            let clock = self.clock;
-            let before = self.states.len();
-            self.states.retain(|_, st| st.last_used == clock);
-            self.stats.evictions += (before - self.states.len()) as u64;
+        let cfg = self.cfg();
+        let clock = self.clock;
+        let nlanes = self.lanes.len() as u64;
+        for lane in &mut self.lanes {
+            lane.idxs.clear();
+            lane.out.clear();
+        }
+        // stable partition by key: within a lane, views keep input
+        // order, so routing is identical for any lane/worker count
+        for (i, r) in series.iter().enumerate() {
+            self.lanes[(r.key % nlanes) as usize].idxs.push(i);
+        }
+        let workers = pool::num_workers()
+            .min(series.len() / LANE_MIN_SERIES_PER_WORKER)
+            .max(1)
+            .min(self.lanes.len());
+        {
+            let GpIncremental { lanes, fallback, tgrid, ls_grid, .. } = &mut *self;
+            let fallback: &GpNative = fallback;
+            let ls_grid: &[f64] = ls_grid;
+            let tgrid: &[f64] = tgrid;
+            pool::shard_for_each_mut(lanes, workers, |_li, lane| {
+                // detach the routing list so the lane stays mutably
+                // borrowable for the per-series math
+                let idxs = std::mem::take(&mut lane.idxs);
+                for &i in &idxs {
+                    let f =
+                        lane_forecast_view(lane, fallback, cfg, ls_grid, tgrid, clock, &series[i]);
+                    lane.out.push(f);
+                }
+                lane.idxs = idxs;
+            });
+        }
+        // scatter lane outputs back to input order
+        let mut out = vec![Forecast { mean: 0.0, var: 0.0 }; series.len()];
+        for lane in &self.lanes {
+            for (&i, f) in lane.idxs.iter().zip(&lane.out) {
+                out[i] = *f;
+            }
+        }
+        // eviction: decided on the GLOBAL cache size — a per-lane
+        // threshold would make the drop set depend on the lane count —
+        // then applied and accounted per lane. Keep only the states
+        // this batch touched: components that left the shaped set
+        // (finished, gave up, long-preempted) stop costing memory; a
+        // returner simply refits.
+        let total: usize = self.lanes.iter().map(|lane| lane.states.len()).sum();
+        if total > self.max_cached {
+            for lane in &mut self.lanes {
+                let before = lane.states.len();
+                lane.states.retain(|_, st| st.last_used == clock);
+                lane.stats.evictions += (before - lane.states.len()) as u64;
+            }
         }
         out
     }
@@ -622,6 +788,43 @@ mod tests {
         gp.forecast(&views_b);
         assert_eq!(gp.cached_series(), 6, "only batch B survives");
         assert_eq!(gp.stats().evictions, 6);
+    }
+
+    #[test]
+    fn lane_count_does_not_change_forecasts() {
+        let h = 6;
+        let window = 2 * h;
+        let ticks = 30usize;
+        let corpus: Vec<Vec<f64>> =
+            (0..10).map(|i| periodic(window + ticks, 40 + i as u64)).collect();
+        let run = |lanes: usize| {
+            let mut gp = GpIncremental::new(KernelKind::Exp, h).with_lanes(lanes);
+            assert_eq!(gp.lane_count(), lanes);
+            let mut all = Vec::new();
+            let mut t = window;
+            while t <= window + ticks {
+                let views: Vec<SeriesRef<'_>> = corpus
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| SeriesRef::keyed(i as u64, t as u64, &s[..t]))
+                    .collect();
+                all.extend(gp.forecast(&views));
+                t += 1 + (t % 2);
+            }
+            (all, gp.stats())
+        };
+        let (base, base_stats) = run(1);
+        assert!(base_stats.slides > 0);
+        for lanes in [2, 3, 8, 16] {
+            let (out, stats) = run(lanes);
+            assert_eq!(out.len(), base.len());
+            for (i, (a, b)) in out.iter().zip(&base).enumerate() {
+                assert_eq!(a.mean.to_bits(), b.mean.to_bits(), "lanes={lanes} view {i}");
+                assert_eq!(a.var.to_bits(), b.var.to_bits(), "lanes={lanes} view {i}");
+            }
+            assert_eq!(stats.slides, base_stats.slides, "lanes={lanes}");
+            assert_eq!(stats.refits, base_stats.refits, "lanes={lanes}");
+        }
     }
 
     #[test]

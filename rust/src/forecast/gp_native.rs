@@ -25,12 +25,14 @@
 //!   nothing;
 //! * [`GpNative::forecast_batch`] shards a batch across cores with the
 //!   scoped-thread pool (`util::pool`), one workspace per worker, with
-//!   results identical for any worker count.
+//!   results identical for any worker count;
+//! * the distance/kern-row/solve inner loops route through the
+//!   [`crate::util::simd`] dispatch layer — AVX2+FMA on capable CPUs,
+//!   the exact historical scalar sequence otherwise (`ZOE_SIMD=off`).
 //!
 //! [`gp_posterior`] is the slow-but-obvious reference implementation the
-//! workspace path is property-tested against (<= 1e-10; in practice the
-//! two are bit-identical because they perform the same float ops in the
-//! same order).
+//! workspace path is property-tested against (<= 1e-10; with the scalar
+//! SIMD backend the two perform the same float ops in the same order).
 
 use super::{
     build_patterns, build_patterns_into, naive_forecast, Forecast, Forecaster, PatternBufs,
@@ -42,6 +44,7 @@ use crate::util::linalg::{
     LinalgError, Mat,
 };
 use crate::util::pool;
+use crate::util::simd;
 
 /// Jitter matching `model.JITTER` on the python side.
 pub const JITTER: f64 = 1e-6;
@@ -65,10 +68,11 @@ pub struct GpPosterior {
     pub lml: f64,
 }
 
-/// Squared euclidean distance between two flattened pattern rows.
+/// Squared euclidean distance between two flattened pattern rows
+/// (vectorized through the SIMD dispatch layer).
 #[inline]
 fn sqdist(a: &[f64], b: &[f64]) -> f64 {
-    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    simd::sum_sq_diff(a, b)
 }
 
 /// Kernel value from a precomputed squared distance. Shared with the
@@ -85,6 +89,19 @@ pub(crate) fn kern(kind: KernelKind, d2: f64, ls: f64) -> f64 {
 /// Kernel function on flattened pattern rows.
 fn kval(kind: KernelKind, a: &[f64], b: &[f64], ls: f64) -> f64 {
     kern(kind, sqdist(a, b), ls)
+}
+
+/// Apply the kernel over a row of precomputed squared distances:
+/// `out[j] = kern(kind, d2[j], ls)`, vectorized where the SIMD layer is
+/// active. Bit-identical to calling [`kern`] per element (the vector
+/// path keeps `exp` scalar per lane — see `util::simd`). Shared with
+/// `gp_incremental`'s factor assembly.
+#[inline]
+pub(crate) fn kern_row(kind: KernelKind, d2: &[f64], ls: f64, out: &mut [f64]) {
+    match kind {
+        KernelKind::Exp => simd::kern_exp_row(d2, ls, out),
+        KernelKind::Rbf => simd::kern_rbf_row(d2, ls, out),
+    }
 }
 
 /// Exact GP posterior (mean, var, lml) for flattened inputs:
@@ -195,37 +212,35 @@ impl GpWorkspace {
         ls: f64,
         noise: f64,
     ) -> Result<GpPosterior, LinalgError> {
-        let n = self.n;
+        let GpWorkspace { pat, d2, d2q, kxx, kxq, alpha, v, n } = self;
+        let n = *n;
         assert!(n > 0, "posterior before load");
         // only the lower triangle is materialized: the in-place Cholesky
         // and both triangular solves never read above the diagonal
-        self.kxx.reset(n, n);
+        kxx.reset(n, n);
         for i in 0..n {
-            for j in 0..=i {
-                self.kxx[(i, j)] = kern(kind, self.d2[i * n + j], ls);
-            }
-            self.kxx[(i, i)] += noise + JITTER;
+            let row = kxx.row_mut(i);
+            kern_row(kind, &d2[i * n..i * n + i + 1], ls, &mut row[..=i]);
+            row[i] += noise + JITTER;
         }
-        cholesky_in_place(&mut self.kxx)?;
-        self.alpha.clear();
-        self.alpha.extend_from_slice(&self.pat.y);
-        solve_lower_in_place(&self.kxx, &mut self.alpha);
-        solve_lower_t_in_place(&self.kxx, &mut self.alpha);
-        self.kxq.clear();
-        for i in 0..n {
-            self.kxq.push(kern(kind, self.d2q[i], ls));
-        }
-        let mean: f64 = self.kxq.iter().zip(&self.alpha).map(|(a, b)| a * b).sum();
-        self.v.clear();
-        self.v.extend_from_slice(&self.kxq);
-        solve_lower_in_place(&self.kxx, &mut self.v);
-        let var = (1.0 - self.v.iter().map(|x| x * x).sum::<f64>()).max(0.0);
+        cholesky_in_place(kxx)?;
+        alpha.clear();
+        alpha.extend_from_slice(&pat.y);
+        solve_lower_in_place(kxx, alpha);
+        solve_lower_t_in_place(kxx, alpha);
+        kxq.clear();
+        kxq.resize(n, 0.0);
+        kern_row(kind, d2q, ls, kxq);
+        let mean: f64 = simd::dot(kxq, alpha);
+        v.clear();
+        v.extend_from_slice(kxq);
+        solve_lower_in_place(kxx, v);
+        let var = (1.0 - simd::sum_sq(v)).max(0.0);
         let mut logdet_half = 0.0;
         for i in 0..n {
-            logdet_half += self.kxx[(i, i)].ln();
+            logdet_half += kxx[(i, i)].ln();
         }
-        let lml = -0.5
-            * self.pat.y.iter().zip(&self.alpha).map(|(a, b)| a * b).sum::<f64>()
+        let lml = -0.5 * simd::dot(&pat.y, alpha)
             - logdet_half
             - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln();
         Ok(GpPosterior { mean, var, lml })

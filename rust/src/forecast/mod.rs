@@ -143,18 +143,25 @@ pub trait Forecaster: Send {
 /// Construct a forecaster by config. GP-PJRT needs a `runtime::Runtime`;
 /// callers holding one should use `gp_pjrt::GpPjrt::new` directly — this
 /// factory covers the self-contained kinds.
+///
+/// `lanes` is the workspace-cache lane count for the sliding-window
+/// forecaster (`forecast.lanes` config: 0 = auto); ignored by the
+/// stateless kinds. `ZOE_LANES` overrides it
+/// (`gp_incremental::resolve_lanes`).
 pub fn build(
     kind: ForecasterKind,
     kernel: KernelKind,
     history: usize,
+    lanes: usize,
 ) -> Box<dyn Forecaster> {
     match kind {
         ForecasterKind::LastValue => Box::new(last_value::LastValue::new()),
         ForecasterKind::Arima => Box::new(arima::Arima::auto()),
         ForecasterKind::GpNative => Box::new(gp_native::GpNative::new(kernel, history)),
-        ForecasterKind::GpIncremental => {
-            Box::new(gp_incremental::GpIncremental::new(kernel, history))
-        }
+        ForecasterKind::GpIncremental => Box::new(
+            gp_incremental::GpIncremental::new(kernel, history)
+                .with_lanes(gp_incremental::resolve_lanes(lanes)),
+        ),
         ForecasterKind::GpPjrt => {
             panic!("GP-PJRT requires a Runtime; use gp_pjrt::GpPjrt::new")
         }

@@ -94,6 +94,11 @@ fn sim_args(name: &str, about: &str) -> Args {
             "",
             "shaper->scheduler preemption feedback for reservation ETAs: on|off (default on)",
         )
+        .opt(
+            "lanes",
+            "",
+            "gp-incr workspace-cache lanes (0 = auto; ZOE_LANES env overrides)",
+        )
         .opt("log", "info", "log level: error|warn|info|debug")
 }
 
@@ -136,6 +141,9 @@ fn load_cfg(a: &Args) -> Result<SimConfig, String> {
             "off" | "false" | "0" => false,
             other => return Err(format!("bad --feedback '{other}' (use on|off)")),
         };
+    }
+    if !a.get("lanes").is_empty() {
+        cfg.forecast.lanes = a.get_usize("lanes")?;
     }
     cfg.validate()?;
     Ok(cfg)

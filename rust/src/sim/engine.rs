@@ -952,6 +952,7 @@ pub fn run_simulation_with(
             kind,
             cfg.forecast.kernel,
             cfg.forecast.history,
+            cfg.forecast.lanes,
         )),
     };
     let engine = Engine::with_monitor_mode(cfg.clone(), source, mode);

@@ -16,6 +16,9 @@ pub struct BenchResult {
     pub mean: Duration,
     pub min: Duration,
     pub max: Duration,
+    /// Derived scalar (e.g. a speedup ratio) recorded via
+    /// [`Bench::record`] instead of timed; `None` for timed cases.
+    pub value: Option<f64>,
 }
 
 impl BenchResult {
@@ -120,6 +123,7 @@ impl Bench {
             mean,
             min: times[0],
             max: times[times.len() - 1],
+            value: None,
         };
         println!(
             "  {:<44} median {:>12}  mean {:>12}  ({} iters)",
@@ -145,8 +149,25 @@ impl Bench {
             mean: el,
             min: el,
             max: el,
+            value: None,
         });
         (out, el)
+    }
+
+    /// Record a derived scalar (a speedup ratio, a count) as a named
+    /// result so it lands in the same JSON trajectory as the timed
+    /// cases. Not timed; `ns_per_iter`/`per_sec` are meaningless for it.
+    pub fn record(&mut self, name: &str, value: f64) {
+        println!("  {name:<44} value {value:>12.4}");
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: 0,
+            median: Duration::ZERO,
+            mean: Duration::ZERO,
+            min: Duration::ZERO,
+            max: Duration::ZERO,
+            value: Some(value),
+        });
     }
 
     /// Results collected so far.
@@ -176,6 +197,9 @@ impl Bench {
                     // honest value for trackers (never 0.0 = "slowest")
                     o.insert("per_sec".to_string(), Json::Num(r.per_sec()));
                     o.insert("iters".to_string(), Json::Num(r.iters as f64));
+                    if let Some(v) = r.value {
+                        o.insert("value".to_string(), Json::Num(v));
+                    }
                     Json::Obj(o)
                 })
                 .collect(),
@@ -264,15 +288,19 @@ mod tests {
     fn json_emission_roundtrips() {
         let mut b = Bench::new("jsontest").with_target(Duration::from_millis(10));
         b.run("noop", || 1 + 1);
+        b.record("speedup", 2.5);
         let path = std::env::temp_dir().join("zoe_bench_json_test.json");
         b.write_json(&path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let j = crate::util::json::Json::parse(&text).unwrap();
         assert_eq!(j.get("group").and_then(|g| g.as_str()), Some("jsontest"));
         let results = j.get("results").and_then(|r| r.as_arr()).unwrap();
-        assert_eq!(results.len(), 1);
+        assert_eq!(results.len(), 2);
         assert_eq!(results[0].get("name").and_then(|n| n.as_str()), Some("noop"));
         assert!(results[0].get("ns_per_iter").and_then(|n| n.as_f64()).is_some());
+        assert!(results[0].get("value").is_none(), "timed cases carry no value");
+        assert_eq!(results[1].get("name").and_then(|n| n.as_str()), Some("speedup"));
+        assert_eq!(results[1].get("value").and_then(|v| v.as_f64()), Some(2.5));
         let _ = std::fs::remove_file(&path);
     }
 

@@ -15,6 +15,15 @@
 //! refactorization — the primitive behind the incremental GP forecaster
 //! (`forecast::gp_incremental`). All of them are property-tested against
 //! full refactorization to ≤ 1e-9 (`tests/gp_incremental_prop.rs`).
+//!
+//! The inner loops (Cholesky/solve dot cores, rank-1 column sweeps)
+//! route through the [`crate::util::simd`] dispatch layer: AVX2+FMA
+//! when the CPU supports it, the exact historical scalar sequence
+//! otherwise (`ZOE_SIMD=off` forces the latter). The rank-1 sweeps are
+//! bit-identical either way; the reductions agree to ≤ 1e-12
+//! (`tests/simd_prop.rs`).
+
+use crate::util::simd;
 
 /// Row-major dense matrix of f64.
 #[derive(Debug, Clone, PartialEq)]
@@ -75,6 +84,13 @@ impl Mat {
     /// Borrow one row as a slice.
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Borrow one row as a mutable slice — row-granular writes for the
+    /// vectorized Gram-row assembly in the GP engines.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
     }
 
     /// Raw data (row-major).
@@ -197,17 +213,17 @@ pub fn cholesky_in_place(m: &mut Mat) -> Result<(), LinalgError> {
     let n = m.rows();
     for i in 0..n {
         for j in 0..=i {
-            let mut sum = m[(i, j)];
-            for k in 0..j {
-                sum -= m[(i, k)] * m[(j, k)];
-            }
+            // the inner loop is a dot of row prefixes — contiguous in
+            // row-major storage, so it vectorizes directly
+            let (ri, rj) = (i * n, j * n);
+            let sum = simd::sub_dot(m.data[ri + j], &m.data[ri..ri + j], &m.data[rj..rj + j]);
             if i == j {
                 if sum <= 0.0 {
                     return Err(LinalgError::NotPositiveDefinite(i, sum));
                 }
-                m[(i, j)] = sum.sqrt();
+                m.data[ri + j] = sum.sqrt();
             } else {
-                m[(i, j)] = sum / m[(j, j)];
+                m.data[ri + j] = sum / m.data[rj + j];
             }
         }
     }
@@ -219,12 +235,10 @@ pub fn cholesky_in_place(m: &mut Mat) -> Result<(), LinalgError> {
 pub fn solve_lower_in_place(l: &Mat, x: &mut [f64]) {
     let n = l.rows();
     assert_eq!(x.len(), n);
+    let c = l.cols;
     for i in 0..n {
-        let mut sum = x[i];
-        for k in 0..i {
-            sum -= l[(i, k)] * x[k];
-        }
-        x[i] = sum / l[(i, i)];
+        let sum = simd::sub_dot(x[i], &l.data[i * c..i * c + i], &x[..i]);
+        x[i] = sum / l.data[i * c + i];
     }
 }
 
@@ -233,6 +247,23 @@ pub fn solve_lower_in_place(l: &Mat, x: &mut [f64]) {
 pub fn solve_lower_t_in_place(l: &Mat, x: &mut [f64]) {
     let n = l.rows();
     assert_eq!(x.len(), n);
+    let c = l.cols;
+    if simd::simd_enabled() {
+        // Right-looking formulation: once x[i] is final, eliminate its
+        // contribution from all earlier equations in one contiguous pass
+        // over factor row i. The left-looking inner loop below walks a
+        // *column* of the row-major factor (stride n), which no vector
+        // load can use. Same solution, different summation order —
+        // pinned against the scalar path at ≤ 1e-12 in
+        // `tests/simd_prop.rs`.
+        for i in (0..n).rev() {
+            let (head, tail) = x.split_at_mut(i);
+            tail[0] /= l.data[i * c + i];
+            let xi = tail[0];
+            simd::axpy(head, -xi, &l.data[i * c..i * c + i]);
+        }
+        return;
+    }
     for i in (0..n).rev() {
         let mut sum = x[i];
         for k in i + 1..n {
@@ -254,16 +285,48 @@ pub fn solve_lower_t_in_place(l: &Mat, x: &mut [f64]) {
 pub fn chol_update_in_place(l: &mut Mat, x: &mut [f64]) {
     let m = x.len();
     assert!(m <= l.rows().min(l.cols()), "update block exceeds factor");
+    let vector = simd::simd_enabled();
     for k in 0..m {
         let lkk = l[(k, k)];
         let r = (lkk * lkk + x[k] * x[k]).sqrt();
         let c = r / lkk;
         let s = x[k] / lkk;
         l[(k, k)] = r;
-        for i in k + 1..m {
-            l[(i, k)] = (l[(i, k)] + s * x[i]) / c;
-            x[i] = c * x[i] - s * l[(i, k)];
+        if vector {
+            sweep_column(l, k, m, x, c, s, false);
+        } else {
+            for i in k + 1..m {
+                l[(i, k)] = (l[(i, k)] + s * x[i]) / c;
+                x[i] = c * x[i] - s * l[(i, k)];
+            }
         }
+    }
+}
+
+/// Column-`k` sweep of the rank-1 rotation, vector path: the factor
+/// column is strided in row-major storage, so rows `k+1..m` are staged
+/// through a small stack tile, swept with the elementwise SIMD kernel
+/// (bit-identical to the scalar recurrence — see `util::simd`), and
+/// scattered back. `x[k+1..m]` is rotated in place alongside.
+fn sweep_column(l: &mut Mat, k: usize, m: usize, x: &mut [f64], c: f64, s: f64, down: bool) {
+    const TILE: usize = 64;
+    let mut tile = [0.0f64; TILE];
+    let cols = l.cols;
+    let mut i = k + 1;
+    while i < m {
+        let t = (m - i).min(TILE);
+        for (j, slot) in tile[..t].iter_mut().enumerate() {
+            *slot = l.data[(i + j) * cols + k];
+        }
+        if down {
+            simd::rank1_downdate_sweep(&mut tile[..t], &mut x[i..i + t], c, s);
+        } else {
+            simd::rank1_update_sweep(&mut tile[..t], &mut x[i..i + t], c, s);
+        }
+        for (j, &v) in tile[..t].iter().enumerate() {
+            l.data[(i + j) * cols + k] = v;
+        }
+        i += t;
     }
 }
 
@@ -276,6 +339,7 @@ pub fn chol_update_in_place(l: &mut Mat, x: &mut [f64]) {
 pub fn chol_downdate_in_place(l: &mut Mat, x: &mut [f64]) -> Result<(), LinalgError> {
     let m = x.len();
     assert!(m <= l.rows().min(l.cols()), "downdate block exceeds factor");
+    let vector = simd::simd_enabled();
     for k in 0..m {
         let lkk = l[(k, k)];
         let d = lkk * lkk - x[k] * x[k];
@@ -286,9 +350,13 @@ pub fn chol_downdate_in_place(l: &mut Mat, x: &mut [f64]) -> Result<(), LinalgEr
         let c = r / lkk;
         let s = x[k] / lkk;
         l[(k, k)] = r;
-        for i in k + 1..m {
-            l[(i, k)] = (l[(i, k)] - s * x[i]) / c;
-            x[i] = c * x[i] - s * l[(i, k)];
+        if vector {
+            sweep_column(l, k, m, x, c, s, true);
+        } else {
+            for i in k + 1..m {
+                l[(i, k)] = (l[(i, k)] - s * x[i]) / c;
+                x[i] = c * x[i] - s * l[(i, k)];
+            }
         }
     }
     Ok(())
@@ -330,15 +398,13 @@ pub fn chol_append_row(l: &mut Mat, row: &mut [f64]) -> Result<(), LinalgError> 
     let n = row.len();
     assert!(n >= 1 && n <= l.rows().min(l.cols()), "block exceeds factor");
     let m = n - 1;
+    let c = l.cols;
     // forward solve on the leading block: w = L⁻¹ k
     for i in 0..m {
-        let mut sum = row[i];
-        for k in 0..i {
-            sum -= l[(i, k)] * row[k];
-        }
-        row[i] = sum / l[(i, i)];
+        let sum = simd::sub_dot(row[i], &l.data[i * c..i * c + i], &row[..i]);
+        row[i] = sum / l.data[i * c + i];
     }
-    let d = row[m] - row[..m].iter().map(|w| w * w).sum::<f64>();
+    let d = row[m] - simd::sum_sq(&row[..m]);
     if d <= 0.0 {
         return Err(LinalgError::NotPositiveDefinite(m, d));
     }

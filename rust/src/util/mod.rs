@@ -10,5 +10,6 @@ pub mod logger;
 pub mod order;
 pub mod pool;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod table;

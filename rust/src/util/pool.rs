@@ -131,6 +131,44 @@ where
     });
 }
 
+/// Run `f` over contiguous shards of a **mutable** slice on up to
+/// `workers` scoped threads — the owned-state dual of [`shard_map`]: the
+/// items themselves carry the per-shard state (e.g. the forecast layer's
+/// lane caches), so there is no `init` scratch and no output buffer.
+///
+/// `f` receives `(global_index, &mut item)` and runs exactly once per
+/// item; sharding is contiguous, so which thread visits an item depends
+/// on `workers` but per-item effects do not. `workers <= 1` (or a slice
+/// of <= 1 item) runs inline on the caller's thread.
+pub fn shard_for_each_mut<T, F>(items: &mut [T], workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return;
+    }
+    let w = workers.max(1).min(n);
+    if w == 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let chunk = chunk_size(n, w);
+    std::thread::scope(|scope| {
+        for (ci, shard) in items.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                for (j, item) in shard.iter_mut().enumerate() {
+                    f(ci * chunk + j, item);
+                }
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,5 +249,37 @@ mod tests {
     fn shard_map_into_length_mismatch_panics() {
         let mut out = vec![0; 2];
         shard_map_into(&[1, 2, 3], &mut out, 2, || (), |_, _, &x| x);
+    }
+
+    #[test]
+    fn shard_for_each_mut_visits_every_item_once() {
+        for w in [1, 2, 3, 8, 64, 200] {
+            let mut items: Vec<(usize, u32)> = (0..103).map(|i| (i, 0)).collect();
+            shard_for_each_mut(&mut items, w, |i, item| {
+                assert_eq!(i, item.0, "global index must match input position");
+                item.1 += 1;
+            });
+            assert!(items.iter().all(|&(_, hits)| hits == 1), "w={w}");
+        }
+    }
+
+    #[test]
+    fn shard_for_each_mut_worker_count_does_not_change_results() {
+        let reference: Vec<f64> = {
+            let mut items: Vec<f64> = (0..57).map(|i| i as f64 * 0.37).collect();
+            shard_for_each_mut(&mut items, 1, |_, x| *x = x.sin() * 2.0);
+            items
+        };
+        for w in [2, 5, 16] {
+            let mut items: Vec<f64> = (0..57).map(|i| i as f64 * 0.37).collect();
+            shard_for_each_mut(&mut items, w, |_, x| *x = x.sin() * 2.0);
+            assert_eq!(items, reference, "w={w}");
+        }
+    }
+
+    #[test]
+    fn shard_for_each_mut_empty_ok() {
+        let mut items: Vec<i32> = Vec::new();
+        shard_for_each_mut(&mut items, 4, |_, _| panic!("must not run"));
     }
 }

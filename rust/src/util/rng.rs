@@ -158,7 +158,7 @@ impl Empirical {
     /// Build from raw observations (any order).
     pub fn fit(mut values: Vec<f64>) -> Self {
         assert!(!values.is_empty(), "empirical distribution needs data");
-        values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        values.sort_by(f64::total_cmp);
         Empirical { sorted: values }
     }
 

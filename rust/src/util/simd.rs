@@ -1,0 +1,601 @@
+//! Runtime-dispatched SIMD kernels for the forecast/linalg hot loops.
+//!
+//! `util::linalg` and the GP engines call the *dispatchers* in this
+//! module ([`dot`], [`sub_dot`], [`kern_exp_row`], ...). Each dispatcher
+//! picks between
+//!
+//! * the [`scalar`] twin — always compiled, on every architecture, and
+//!   written to perform the **exact** floating-point operation sequence
+//!   the pre-SIMD code performed, so the forced-scalar path reproduces
+//!   historical results bit for bit; and
+//! * an AVX2+FMA implementation (`x86_64` only), selected once at
+//!   runtime via `is_x86_feature_detected!` the first time any
+//!   dispatcher runs.
+//!
+//! # Numerical contract
+//!
+//! Elementwise kernels ([`axpy`], [`kern_exp_row`], [`kern_rbf_row`],
+//! [`rank1_update_sweep`], [`rank1_downdate_sweep`]) use only IEEE
+//! correctly-rounded lane operations (add/sub/mul/div/sqrt) in the same
+//! per-element order as their scalar twin, so their results are
+//! **bit-identical** to scalar — the transcendental `exp` inside the
+//! kern rows deliberately stays scalar per lane for the same reason.
+//! Reductions ([`dot`], [`sum_sq`], [`sum_sq_diff`], [`sub_dot`])
+//! reassociate the sum across SIMD lanes (and use FMA), so they may
+//! differ from scalar in the last bits; `tests/simd_prop.rs` pins every
+//! kernel to its twin at ≤ 1e-12 and end-to-end forecast agreement at
+//! ≤ 1e-10.
+//!
+//! # Escape hatch
+//!
+//! `ZOE_SIMD=off` (also `0`, `false`, `scalar`) forces the scalar path —
+//! the fallback `scripts/ci.sh` exercises with a second full test pass.
+//! [`force_simd`] / [`reset_simd`] override the resolution
+//! programmatically (benches and the e2e agreement test).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Dispatch state: resolved lazily on first use, cached for the process.
+static STATE: AtomicU8 = AtomicU8::new(UNINIT);
+const UNINIT: u8 = 0;
+const SCALAR: u8 = 1;
+const VECTOR: u8 = 2;
+
+/// True when the vector backend is active (env allows it and the CPU
+/// supports AVX2+FMA). Resolved once and cached; see [`force_simd`].
+#[inline]
+pub fn simd_enabled() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        UNINIT => init(),
+        s => s == VECTOR,
+    }
+}
+
+#[cold]
+fn init() -> bool {
+    let env_off = matches!(
+        std::env::var("ZOE_SIMD").as_deref().map(str::trim),
+        Ok("off") | Ok("0") | Ok("false") | Ok("scalar")
+    );
+    let on = !env_off && detect();
+    STATE.store(if on { VECTOR } else { SCALAR }, Ordering::Relaxed);
+    on
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect() -> bool {
+    false
+}
+
+/// Force the backend for the whole process (benches, the e2e agreement
+/// test). Requesting the vector backend only takes effect when the CPU
+/// supports it; the return value is the backend actually active.
+pub fn force_simd(on: bool) -> bool {
+    let state = if on && detect() { VECTOR } else { SCALAR };
+    STATE.store(state, Ordering::Relaxed);
+    state == VECTOR
+}
+
+/// Drop a [`force_simd`] override: the next dispatcher call re-resolves
+/// from `ZOE_SIMD` + CPU detection.
+pub fn reset_simd() {
+    STATE.store(UNINIT, Ordering::Relaxed);
+}
+
+/// Human-readable name of the active backend (bench reports).
+pub fn active_backend() -> &'static str {
+    if simd_enabled() {
+        "avx2+fma"
+    } else {
+        "scalar"
+    }
+}
+
+/// Dot product `Σ aᵢ·bᵢ` over `min(a.len(), b.len())` elements.
+/// Reduction: the SIMD sum reassociates (≤ 1e-12 vs [`scalar::dot`]).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_enabled() {
+            // SAFETY: VECTOR state implies runtime-detected avx2+fma.
+            return unsafe { avx2::dot(a, b) };
+        }
+    }
+    scalar::dot(a, b)
+}
+
+/// Sum of squares `Σ aᵢ²`. Reduction (≤ 1e-12 vs [`scalar::sum_sq`]).
+#[inline]
+pub fn sum_sq(a: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_enabled() {
+            // SAFETY: VECTOR state implies runtime-detected avx2+fma.
+            return unsafe { avx2::sum_sq(a) };
+        }
+    }
+    scalar::sum_sq(a)
+}
+
+/// Squared euclidean distance `Σ (aᵢ−bᵢ)²` over `min(len, len)`
+/// elements. Reduction (≤ 1e-12 vs [`scalar::sum_sq_diff`]).
+#[inline]
+pub fn sum_sq_diff(a: &[f64], b: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_enabled() {
+            // SAFETY: VECTOR state implies runtime-detected avx2+fma.
+            return unsafe { avx2::sum_sq_diff(a, b) };
+        }
+    }
+    scalar::sum_sq_diff(a, b)
+}
+
+/// `init − Σ aᵢ·bᵢ` — the inner-product core of the triangular solves
+/// and the Cholesky inner loop. The scalar twin subtracts sequentially
+/// (the exact historical operation order); the SIMD path computes
+/// `init − dot(a, b)` (reduction, ≤ 1e-12).
+#[inline]
+pub fn sub_dot(init: f64, a: &[f64], b: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_enabled() {
+            // SAFETY: VECTOR state implies runtime-detected avx2+fma.
+            return init - unsafe { avx2::dot(a, b) };
+        }
+    }
+    scalar::sub_dot(init, a, b)
+}
+
+/// `y[i] += a · x[i]` over `min(y.len(), x.len())` elements.
+/// Elementwise: bit-identical to [`scalar::axpy`].
+#[inline]
+pub fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_enabled() {
+            // SAFETY: VECTOR state implies runtime-detected avx2+fma.
+            unsafe { avx2::axpy(y, a, x) };
+            return;
+        }
+    }
+    scalar::axpy(y, a, x)
+}
+
+/// Exponential-kernel row: `out[j] = exp(−sqrt(d2[j] + 1e-12) / ls)`.
+/// Elementwise (scalar `exp` per lane): bit-identical to
+/// [`scalar::kern_exp_row`]. Lengths must match.
+#[inline]
+pub fn kern_exp_row(d2: &[f64], ls: f64, out: &mut [f64]) {
+    assert_eq!(d2.len(), out.len(), "kern row length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_enabled() {
+            // SAFETY: VECTOR state implies runtime-detected avx2+fma.
+            unsafe { avx2::kern_exp_row(d2, ls, out) };
+            return;
+        }
+    }
+    scalar::kern_exp_row(d2, ls, out)
+}
+
+/// RBF-kernel row: `out[j] = exp(−0.5 · d2[j] / ls²)`. Elementwise
+/// (scalar `exp` per lane): bit-identical to [`scalar::kern_rbf_row`].
+/// Lengths must match.
+#[inline]
+pub fn kern_rbf_row(d2: &[f64], ls: f64, out: &mut [f64]) {
+    assert_eq!(d2.len(), out.len(), "kern row length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_enabled() {
+            // SAFETY: VECTOR state implies runtime-detected avx2+fma.
+            unsafe { avx2::kern_rbf_row(d2, ls, out) };
+            return;
+        }
+    }
+    scalar::kern_rbf_row(d2, ls, out)
+}
+
+/// One column sweep of the rank-1 Cholesky **update** rotation:
+/// `col[i] = (col[i] + s·x[i]) / c; x[i] = c·x[i] − s·col[i]` (using the
+/// new `col[i]`). Elementwise: bit-identical to
+/// [`scalar::rank1_update_sweep`]. Lengths must match.
+#[inline]
+pub fn rank1_update_sweep(col: &mut [f64], x: &mut [f64], c: f64, s: f64) {
+    assert_eq!(col.len(), x.len(), "sweep length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_enabled() {
+            // SAFETY: VECTOR state implies runtime-detected avx2+fma.
+            unsafe { avx2::rank1_update_sweep(col, x, c, s) };
+            return;
+        }
+    }
+    scalar::rank1_update_sweep(col, x, c, s)
+}
+
+/// One column sweep of the rank-1 Cholesky **downdate** rotation:
+/// `col[i] = (col[i] − s·x[i]) / c; x[i] = c·x[i] − s·col[i]`.
+/// Elementwise: bit-identical to [`scalar::rank1_downdate_sweep`].
+/// Lengths must match.
+#[inline]
+pub fn rank1_downdate_sweep(col: &mut [f64], x: &mut [f64], c: f64, s: f64) {
+    assert_eq!(col.len(), x.len(), "sweep length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_enabled() {
+            // SAFETY: VECTOR state implies runtime-detected avx2+fma.
+            unsafe { avx2::rank1_downdate_sweep(col, x, c, s) };
+            return;
+        }
+    }
+    scalar::rank1_downdate_sweep(col, x, c, s)
+}
+
+/// The always-compiled scalar twins. Public so the property tests can
+/// pin the dispatched kernels against them regardless of backend.
+pub mod scalar {
+    /// `Σ aᵢ·bᵢ`, accumulated left to right.
+    #[inline]
+    pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for (x, y) in a.iter().zip(b) {
+            s += x * y;
+        }
+        s
+    }
+
+    /// `Σ aᵢ²`, accumulated left to right.
+    #[inline]
+    pub fn sum_sq(a: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for &x in a {
+            s += x * x;
+        }
+        s
+    }
+
+    /// `Σ (aᵢ−bᵢ)²`, accumulated left to right.
+    #[inline]
+    pub fn sum_sq_diff(a: &[f64], b: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for (x, y) in a.iter().zip(b) {
+            s += (x - y) * (x - y);
+        }
+        s
+    }
+
+    /// `init − Σ aᵢ·bᵢ` with sequential subtraction — the exact
+    /// operation order of the pre-SIMD triangular solves and Cholesky
+    /// inner loops.
+    #[inline]
+    pub fn sub_dot(init: f64, a: &[f64], b: &[f64]) -> f64 {
+        let mut s = init;
+        for (x, y) in a.iter().zip(b) {
+            s -= x * y;
+        }
+        s
+    }
+
+    /// `y[i] += a · x[i]` (mul then add — no fused multiply-add, so the
+    /// vector path can match bit for bit).
+    #[inline]
+    pub fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi += a * xi;
+        }
+    }
+
+    /// Exponential kernel over precomputed squared distances.
+    #[inline]
+    pub fn kern_exp_row(d2: &[f64], ls: f64, out: &mut [f64]) {
+        for (o, &d) in out.iter_mut().zip(d2) {
+            *o = (-(d + 1e-12).sqrt() / ls).exp();
+        }
+    }
+
+    /// RBF kernel over precomputed squared distances.
+    #[inline]
+    pub fn kern_rbf_row(d2: &[f64], ls: f64, out: &mut [f64]) {
+        for (o, &d) in out.iter_mut().zip(d2) {
+            *o = (-0.5 * d / (ls * ls)).exp();
+        }
+    }
+
+    /// Update-rotation sweep (see the dispatcher for the recurrence).
+    #[inline]
+    pub fn rank1_update_sweep(col: &mut [f64], x: &mut [f64], c: f64, s: f64) {
+        for (l, xi) in col.iter_mut().zip(x.iter_mut()) {
+            let t = (*l + s * *xi) / c;
+            *xi = c * *xi - s * t;
+            *l = t;
+        }
+    }
+
+    /// Downdate-rotation sweep (see the dispatcher for the recurrence).
+    #[inline]
+    pub fn rank1_downdate_sweep(col: &mut [f64], x: &mut [f64], c: f64, s: f64) {
+        for (l, xi) in col.iter_mut().zip(x.iter_mut()) {
+            let t = (*l - s * *xi) / c;
+            *xi = c * *xi - s * t;
+            *l = t;
+        }
+    }
+}
+
+/// AVX2+FMA lanes (4 × f64). Every function is `unsafe` because it must
+/// only run after runtime feature detection — the dispatchers guarantee
+/// that. Tails shorter than one vector delegate to the scalar twin.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::scalar;
+    use core::arch::x86_64::*;
+
+    /// Horizontal sum of one 4-lane accumulator.
+    #[inline]
+    unsafe fn hsum(v: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(v);
+        let hi = _mm256_extractf128_pd(v, 1);
+        let s = _mm_add_pd(lo, hi);
+        let h = _mm_unpackhi_pd(s, s);
+        _mm_cvtsd_f64(_mm_add_sd(s, h))
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len().min(b.len());
+        let main = n - n % 4;
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0;
+        while i < main {
+            let va = _mm256_loadu_pd(a.as_ptr().add(i));
+            let vb = _mm256_loadu_pd(b.as_ptr().add(i));
+            acc = _mm256_fmadd_pd(va, vb, acc);
+            i += 4;
+        }
+        hsum(acc) + scalar::dot(&a[main..n], &b[main..n])
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn sum_sq(a: &[f64]) -> f64 {
+        let n = a.len();
+        let main = n - n % 4;
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0;
+        while i < main {
+            let va = _mm256_loadu_pd(a.as_ptr().add(i));
+            acc = _mm256_fmadd_pd(va, va, acc);
+            i += 4;
+        }
+        hsum(acc) + scalar::sum_sq(&a[main..])
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn sum_sq_diff(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len().min(b.len());
+        let main = n - n % 4;
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0;
+        while i < main {
+            let va = _mm256_loadu_pd(a.as_ptr().add(i));
+            let vb = _mm256_loadu_pd(b.as_ptr().add(i));
+            let d = _mm256_sub_pd(va, vb);
+            acc = _mm256_fmadd_pd(d, d, acc);
+            i += 4;
+        }
+        hsum(acc) + scalar::sum_sq_diff(&a[main..n], &b[main..n])
+    }
+
+    // no FMA in the elementwise kernels below: mul-then-add matches the
+    // scalar twin bit for bit, a fused op would not
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+        let n = y.len().min(x.len());
+        let main = n - n % 4;
+        let va = _mm256_set1_pd(a);
+        let mut i = 0;
+        while i < main {
+            let vy = _mm256_loadu_pd(y.as_ptr().add(i));
+            let vx = _mm256_loadu_pd(x.as_ptr().add(i));
+            let r = _mm256_add_pd(vy, _mm256_mul_pd(va, vx));
+            _mm256_storeu_pd(y.as_mut_ptr().add(i), r);
+            i += 4;
+        }
+        scalar::axpy(&mut y[main..n], a, &x[main..n]);
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn kern_exp_row(d2: &[f64], ls: f64, out: &mut [f64]) {
+        let n = d2.len();
+        let main = n - n % 4;
+        let eps = _mm256_set1_pd(1e-12);
+        let vls = _mm256_set1_pd(ls);
+        let mut buf = [0.0f64; 4];
+        let mut i = 0;
+        while i < main {
+            let vd = _mm256_loadu_pd(d2.as_ptr().add(i));
+            // sqrt and div are correctly rounded; the final negate is
+            // exact — so `exp` sees the identical argument the scalar
+            // twin computes
+            let q = _mm256_div_pd(_mm256_sqrt_pd(_mm256_add_pd(vd, eps)), vls);
+            _mm256_storeu_pd(buf.as_mut_ptr(), q);
+            out[i] = (-buf[0]).exp();
+            out[i + 1] = (-buf[1]).exp();
+            out[i + 2] = (-buf[2]).exp();
+            out[i + 3] = (-buf[3]).exp();
+            i += 4;
+        }
+        scalar::kern_exp_row(&d2[main..], ls, &mut out[main..]);
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn kern_rbf_row(d2: &[f64], ls: f64, out: &mut [f64]) {
+        let n = d2.len();
+        let main = n - n % 4;
+        let half = _mm256_set1_pd(-0.5);
+        let ls2 = _mm256_set1_pd(ls * ls);
+        let mut buf = [0.0f64; 4];
+        let mut i = 0;
+        while i < main {
+            let vd = _mm256_loadu_pd(d2.as_ptr().add(i));
+            let q = _mm256_div_pd(_mm256_mul_pd(half, vd), ls2);
+            _mm256_storeu_pd(buf.as_mut_ptr(), q);
+            out[i] = buf[0].exp();
+            out[i + 1] = buf[1].exp();
+            out[i + 2] = buf[2].exp();
+            out[i + 3] = buf[3].exp();
+            i += 4;
+        }
+        scalar::kern_rbf_row(&d2[main..], ls, &mut out[main..]);
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn rank1_update_sweep(col: &mut [f64], x: &mut [f64], c: f64, s: f64) {
+        let n = col.len().min(x.len());
+        let main = n - n % 4;
+        let vc = _mm256_set1_pd(c);
+        let vs = _mm256_set1_pd(s);
+        let mut i = 0;
+        while i < main {
+            let p = col.as_mut_ptr().add(i);
+            let q = x.as_mut_ptr().add(i);
+            let vl = _mm256_loadu_pd(p);
+            let vx = _mm256_loadu_pd(q);
+            let t = _mm256_div_pd(_mm256_add_pd(vl, _mm256_mul_pd(vs, vx)), vc);
+            let xn = _mm256_sub_pd(_mm256_mul_pd(vc, vx), _mm256_mul_pd(vs, t));
+            _mm256_storeu_pd(p, t);
+            _mm256_storeu_pd(q, xn);
+            i += 4;
+        }
+        scalar::rank1_update_sweep(&mut col[main..n], &mut x[main..n], c, s);
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn rank1_downdate_sweep(col: &mut [f64], x: &mut [f64], c: f64, s: f64) {
+        let n = col.len().min(x.len());
+        let main = n - n % 4;
+        let vc = _mm256_set1_pd(c);
+        let vs = _mm256_set1_pd(s);
+        let mut i = 0;
+        while i < main {
+            let p = col.as_mut_ptr().add(i);
+            let q = x.as_mut_ptr().add(i);
+            let vl = _mm256_loadu_pd(p);
+            let vx = _mm256_loadu_pd(q);
+            let t = _mm256_div_pd(_mm256_sub_pd(vl, _mm256_mul_pd(vs, vx)), vc);
+            let xn = _mm256_sub_pd(_mm256_mul_pd(vc, vx), _mm256_mul_pd(vs, t));
+            _mm256_storeu_pd(p, t);
+            _mm256_storeu_pd(q, xn);
+            i += 4;
+        }
+        scalar::rank1_downdate_sweep(&mut col[main..n], &mut x[main..n], c, s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    // Lengths that cover empty, sub-vector, exact-vector and ragged
+    // tails around the 4-lane width.
+    const LENS: [usize; 10] = [0, 1, 3, 4, 5, 8, 15, 16, 17, 100];
+
+    fn vecs(rng: &mut Pcg, n: usize) -> (Vec<f64>, Vec<f64>) {
+        let a = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let b = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        (a, b)
+    }
+
+    /// These tests compare whatever backend the dispatcher resolves
+    /// against the scalar twin: on an AVX2 machine they pin the vector
+    /// kernels, elsewhere they are trivially exact. The cross-backend
+    /// pinning with a *forced* backend lives in `tests/simd_prop.rs`
+    /// (process-global override; kept out of the parallel unit suite).
+    #[test]
+    fn reductions_match_scalar_twins() {
+        let mut rng = Pcg::seeded(99);
+        for &n in &LENS {
+            let (a, b) = vecs(&mut rng, n);
+            assert!((dot(&a, &b) - scalar::dot(&a, &b)).abs() <= 1e-12, "dot n={n}");
+            assert!((sum_sq(&a) - scalar::sum_sq(&a)).abs() <= 1e-12, "sum_sq n={n}");
+            assert!(
+                (sum_sq_diff(&a, &b) - scalar::sum_sq_diff(&a, &b)).abs() <= 1e-12,
+                "sum_sq_diff n={n}"
+            );
+            assert!(
+                (sub_dot(0.7, &a, &b) - scalar::sub_dot(0.7, &a, &b)).abs() <= 1e-12,
+                "sub_dot n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn elementwise_kernels_are_bit_identical_to_scalar() {
+        let mut rng = Pcg::seeded(7);
+        for &n in &LENS {
+            let (a, b) = vecs(&mut rng, n);
+            let d2: Vec<f64> = a.iter().map(|x| x * x).collect();
+            for ls in [0.3, 1.7] {
+                let mut out = vec![0.0; n];
+                let mut twin = vec![0.0; n];
+                kern_exp_row(&d2, ls, &mut out);
+                scalar::kern_exp_row(&d2, ls, &mut twin);
+                assert_eq!(bits(&out), bits(&twin), "exp n={n} ls={ls}");
+                kern_rbf_row(&d2, ls, &mut out);
+                scalar::kern_rbf_row(&d2, ls, &mut twin);
+                assert_eq!(bits(&out), bits(&twin), "rbf n={n} ls={ls}");
+            }
+            let (mut y1, x) = (b.clone(), a.clone());
+            let mut y2 = b.clone();
+            axpy(&mut y1, 0.37, &x);
+            scalar::axpy(&mut y2, 0.37, &x);
+            assert_eq!(bits(&y1), bits(&y2), "axpy n={n}");
+
+            let (c, s) = (1.25, 0.4);
+            let (mut c1, mut x1) = (a.clone(), b.clone());
+            let (mut c2, mut x2) = (a.clone(), b.clone());
+            rank1_update_sweep(&mut c1, &mut x1, c, s);
+            scalar::rank1_update_sweep(&mut c2, &mut x2, c, s);
+            assert_eq!(bits(&c1), bits(&c2), "update col n={n}");
+            assert_eq!(bits(&x1), bits(&x2), "update x n={n}");
+            rank1_downdate_sweep(&mut c1, &mut x1, c, s);
+            scalar::rank1_downdate_sweep(&mut c2, &mut x2, c, s);
+            assert_eq!(bits(&c1), bits(&c2), "downdate col n={n}");
+            assert_eq!(bits(&x1), bits(&x2), "downdate x n={n}");
+        }
+    }
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn scalar_kernels_basic_values() {
+        assert_eq!(scalar::dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_eq!(scalar::sum_sq(&[3.0, 4.0]), 25.0);
+        assert_eq!(scalar::sum_sq_diff(&[1.0, 1.0], &[0.0, 3.0]), 5.0);
+        assert_eq!(scalar::sub_dot(10.0, &[1.0, 2.0], &[3.0, 4.0]), -1.0);
+        let mut y = [1.0, 1.0];
+        scalar::axpy(&mut y, 2.0, &[1.0, 3.0]);
+        assert_eq!(y, [3.0, 7.0]);
+        // mismatched lengths clamp to the shorter side
+        assert_eq!(scalar::dot(&[1.0, 2.0, 3.0], &[2.0]), 2.0);
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[2.0]), 2.0);
+    }
+
+    #[test]
+    fn backend_reporting_is_consistent() {
+        let enabled = simd_enabled();
+        assert_eq!(enabled, active_backend() == "avx2+fma");
+        // calling again returns the cached resolution
+        assert_eq!(simd_enabled(), enabled);
+    }
+}

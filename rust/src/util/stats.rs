@@ -51,7 +51,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, p)
 }
 
@@ -80,7 +80,7 @@ pub fn boxstats(xs: &[f64]) -> BoxStats {
         return BoxStats { min: 0.0, q1: 0.0, median: 0.0, q3: 0.0, max: 0.0, mean: 0.0, n: 0 };
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     BoxStats {
         min: v[0],
         q1: percentile_sorted(&v, 25.0),
@@ -181,6 +181,18 @@ mod tests {
         assert!((b.median - 50.5).abs() < 1e-9);
         assert!((b.mean - 50.5).abs() < 1e-9);
         assert_eq!(b.n, 100);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_inputs() {
+        // `total_cmp` sorts NaNs to the end instead of panicking mid-sort;
+        // finite quantiles stay meaningful and nothing unwraps.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-9);
+        let b = boxstats(&xs);
+        assert_eq!(b.min, 1.0);
+        assert!(b.max.is_nan());
     }
 
     #[test]

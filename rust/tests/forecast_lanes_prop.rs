@@ -1,0 +1,151 @@
+//! Lane/worker-count independence of the lane-sharded incremental GP
+//! (PR 6): `GpIncremental` partitioned into L workspace-cache lanes and
+//! executed over W pool workers must produce **bit-identical** forecasts
+//! for every (L, W) combination, including under cache-eviction churn,
+//! because each series' state lives in exactly one lane (stable
+//! `key % L`), the batch clock is global, and eviction is decided
+//! globally before being applied per-lane.
+//!
+//! This is the only test in this binary ON PURPOSE: it mutates
+//! process-global environment variables (`ZOE_LANES`, `ZOE_WORKERS`),
+//! and Rust runs same-binary tests on parallel threads, where concurrent
+//! setenv/getenv is undefined behavior in glibc. A separate integration
+//! test file = a separate process.
+
+use zoe_shaper::config::KernelKind;
+use zoe_shaper::forecast::gp_incremental::GpIncremental;
+use zoe_shaper::forecast::{Forecaster, SeriesRef};
+use zoe_shaper::trace::patterns::Pattern;
+use zoe_shaper::util::rng::Pcg;
+
+fn random_series(rng: &mut Pcg, len: usize) -> Vec<f64> {
+    if rng.chance(0.7) {
+        let p = Pattern::sample(rng, true);
+        (0..len as u64).map(|s| p.at_step(s)).collect()
+    } else {
+        let mut v = rng.uniform(0.1, 0.9);
+        (0..len)
+            .map(|_| {
+                v = (v + 0.05 * rng.normal()).clamp(0.0, 1.0);
+                v
+            })
+            .collect()
+    }
+}
+
+/// Multi-stride sliding drive; returns the raw bits of every forecast.
+/// `key_stride` spreads keys out so they land in different lanes for
+/// every tested lane count; `key_flip` alternates between two disjoint
+/// key populations per tick (eviction churn).
+fn drive(
+    gp: &mut GpIncremental,
+    corpus: &[Vec<f64>],
+    window: usize,
+    ticks: usize,
+    key_stride: u64,
+    key_flip: bool,
+) -> Vec<(u64, u64)> {
+    let mut out = Vec::new();
+    let mut t = window;
+    let mut tick = 0u64;
+    while t <= window + ticks {
+        let base = if key_flip && tick % 2 == 1 { 100_000 } else { 0 };
+        let views: Vec<SeriesRef<'_>> = corpus
+            .iter()
+            .enumerate()
+            .map(|(i, s)| SeriesRef::keyed(base + key_stride * i as u64, t as u64, &s[..t]))
+            .collect();
+        for f in gp.forecast(&views) {
+            out.push((f.mean.to_bits(), f.var.to_bits()));
+        }
+        // vary the stride: multi-sample slides must replay exactly
+        t += 1 + (t % 3);
+        tick += 1;
+    }
+    out
+}
+
+#[test]
+fn lane_sharded_forecasts_are_bit_identical_to_sequential() {
+    let h = 8;
+    let window = 2 * h;
+    let ticks = 30usize;
+    let kind = KernelKind::Exp;
+    // 64 series: enough for the batch to actually shard across several
+    // worker threads (the engine holds back threading below 16
+    // series/worker), so the grid below genuinely runs multi-threaded.
+    let mut rng = Pcg::seeded(909);
+    let corpus: Vec<Vec<f64>> =
+        (0..64).map(|_| random_series(&mut rng, window + ticks)).collect();
+
+    std::env::remove_var("ZOE_LANES");
+    std::env::set_var("ZOE_WORKERS", "1");
+    let mut oracle = GpIncremental::new(kind, h).with_lanes(1);
+    let expect = drive(&mut oracle, &corpus, window, ticks, 3, false);
+    let ostats = oracle.stats();
+    assert!(ostats.slides > 0 && ostats.refits > 0, "oracle drive too trivial");
+
+    for lanes in [1usize, 2, 8] {
+        for workers in ["1", "2", "8"] {
+            std::env::set_var("ZOE_WORKERS", workers);
+            let mut gp = GpIncremental::new(kind, h).with_lanes(lanes);
+            assert_eq!(gp.lane_count(), lanes, "with_lanes must pin the lane count");
+            let got = drive(&mut gp, &corpus, window, ticks, 3, false);
+            assert_eq!(
+                expect.len(),
+                got.len(),
+                "lanes={lanes} workers={workers}: forecast count"
+            );
+            for (i, (e, g)) in expect.iter().zip(&got).enumerate() {
+                assert_eq!(
+                    e, g,
+                    "lanes={lanes} workers={workers}: forecast {i} bits diverged"
+                );
+            }
+            // aggregate counters must match the sequential oracle, and
+            // the per-lane breakdown must sum to the aggregate
+            let s = gp.stats();
+            assert_eq!(s.slides, ostats.slides, "lanes={lanes} workers={workers}: slides");
+            assert_eq!(s.refits, ostats.refits, "lanes={lanes} workers={workers}: refits");
+            assert_eq!(gp.lane_stats().len(), lanes);
+            let lane_sum: u64 = gp.lane_stats().iter().map(|ls| ls.slides).sum();
+            assert_eq!(lane_sum, s.slides, "lanes={lanes}: lane_stats must sum to stats");
+            assert_eq!(gp.cached_series(), oracle.cached_series());
+        }
+    }
+
+    // the ZOE_LANES env override steers auto-resolution at construction
+    // time and must not change results either
+    std::env::set_var("ZOE_LANES", "5");
+    std::env::set_var("ZOE_WORKERS", "8");
+    let mut env_gp = GpIncremental::new(kind, h);
+    assert_eq!(env_gp.lane_count(), 5, "ZOE_LANES must win lane resolution");
+    let got = drive(&mut env_gp, &corpus, window, ticks, 3, false);
+    assert_eq!(expect, got, "ZOE_LANES=5: forecasts diverged from sequential");
+    std::env::remove_var("ZOE_LANES");
+
+    // eviction churn: alternate two disjoint key populations per tick
+    // over a cache far too small for both, forcing mass eviction +
+    // re-admission every tick. Still bit-for-bit across lane counts,
+    // with identical eviction totals.
+    let churn: Vec<Vec<f64>> =
+        (0..24).map(|_| random_series(&mut rng, window + ticks)).collect();
+    std::env::set_var("ZOE_WORKERS", "1");
+    let mut seq = GpIncremental::new(kind, h).with_lanes(1);
+    seq.max_cached = 10;
+    let expect_churn = drive(&mut seq, &churn, window, ticks, 3, true);
+    assert!(seq.stats().evictions > 0, "churn drive never evicted");
+    for lanes in [2usize, 8] {
+        std::env::set_var("ZOE_WORKERS", "8");
+        let mut gp = GpIncremental::new(kind, h).with_lanes(lanes);
+        gp.max_cached = 10;
+        let got = drive(&mut gp, &churn, window, ticks, 3, true);
+        assert_eq!(expect_churn, got, "lanes={lanes}: churn forecasts diverged");
+        assert_eq!(
+            gp.stats().evictions,
+            seq.stats().evictions,
+            "lanes={lanes}: eviction totals diverged"
+        );
+    }
+    std::env::remove_var("ZOE_WORKERS");
+}

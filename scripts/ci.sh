@@ -13,6 +13,10 @@ cargo build --release --benches --examples
 # and under the bench profile specifically, so bench-only code can't rot
 cargo bench --no-run
 cargo test -q
+# scalar-fallback gate: the whole suite must also pass with the SIMD
+# dispatcher forced off (ZOE_SIMD=off), pinning the portable code path
+# on machines where the vector path is what usually runs
+ZOE_SIMD=off cargo test -q
 
 # docs gate: rustdoc must build warning-free (broken intra-doc links,
 # bad code fences, missing docs on public items referenced from docs/)
