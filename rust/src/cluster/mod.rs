@@ -201,6 +201,13 @@ pub struct Cluster {
     /// (total-order key of free_mem, host id), ascending by free memory.
     mem_index: BTreeSet<(u64, HostId)>,
     fit_tree: FitTree,
+    /// Bumped on every observable allocation change (place, remove, and
+    /// resizes that actually move an allocation). Version stamps let the
+    /// event-driven engine invalidate projected-OOM events and cached
+    /// shaping plans with the same discipline `Event::Finish` uses for
+    /// stale finish events: consumers capture `version()` with a
+    /// projection and discard it on mismatch.
+    version: u64,
 }
 
 impl Cluster {
@@ -241,7 +248,17 @@ impl Cluster {
             placed: BTreeSet::new(),
             mem_index,
             fit_tree,
+            version: 0,
         }
+    }
+
+    /// Allocation-state version: changes iff a placement was added,
+    /// removed, or resized to a different allocation since the last
+    /// observation. A no-op resize (same cpus and mem) keeps the version,
+    /// so steady-state shaping plans that re-confirm current allocations
+    /// do not invalidate caches keyed on it.
+    pub fn version(&self) -> u64 {
+        self.version
     }
 
     /// Number of hosts.
@@ -319,6 +336,7 @@ impl Cluster {
         self.host_comps[host].push(c);
         self.slots[c] = Some(Placement { host, alloc_cpus: cpus, alloc_mem: mem, placed_at: now, host_slot });
         self.placed.insert(c);
+        self.version = self.version.wrapping_add(1);
         true
     }
 
@@ -350,6 +368,7 @@ impl Cluster {
                 h.alloc_mem
             );
         });
+        self.version = self.version.wrapping_add(1);
         Some(p)
     }
 
@@ -373,12 +392,19 @@ impl Cluster {
                 h.total_cpus, h.total_mem
             ));
         }
+        // no-op resizes (steady-state plans re-confirming the current
+        // allocation) keep the version stamp, so projected-OOM events and
+        // cached plans keyed on it stay valid
+        let changed = p.alloc_cpus != cpus || p.alloc_mem != mem;
         p.alloc_cpus = cpus;
         p.alloc_mem = mem;
         self.update_host(host, |h| {
             h.alloc_cpus = new_cpus;
             h.alloc_mem = new_mem;
         });
+        if changed {
+            self.version = self.version.wrapping_add(1);
+        }
         Ok(())
     }
 
@@ -541,6 +567,30 @@ mod tests {
         assert_eq!(c.hosts[0].free_cpus(), 8.0);
         assert!(c.remove(0).is_none());
         c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn version_tracks_observable_allocation_changes() {
+        let mut c = cluster(2);
+        let v0 = c.version();
+        assert!(c.place(0, 0, 2.0, 4.0, 0.0));
+        let v1 = c.version();
+        assert_ne!(v0, v1, "place bumps the version");
+        // a resize to the same allocation is observably a no-op
+        c.resize(0, 2.0, 4.0).unwrap();
+        assert_eq!(c.version(), v1, "no-op resize keeps the version");
+        c.resize(0, 1.0, 4.0).unwrap();
+        let v2 = c.version();
+        assert_ne!(v1, v2, "real resize bumps the version");
+        // a rejected resize leaves the version alone
+        assert!(c.resize(0, 100.0, 4.0).is_err());
+        assert_eq!(c.version(), v2);
+        c.remove(0).unwrap();
+        assert_ne!(c.version(), v2, "remove bumps the version");
+        // removing an unplaced component is a no-op
+        let v3 = c.version();
+        assert!(c.remove(0).is_none());
+        assert_eq!(c.version(), v3);
     }
 
     #[test]

@@ -109,6 +109,39 @@ impl KernelKind {
     }
 }
 
+/// How the engine advances simulated time (`sim::engine`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineMode {
+    /// Dispatch every monitor tick as a full engine wakeup — the
+    /// original loop, kept as the golden-equivalence oracle.
+    FixedTick,
+    /// Elide quiet monitor ticks: fast-forward across stretches with no
+    /// state-changing event, synthesizing the missed samples in one
+    /// batched pass and bounding stretches with projected-OOM events.
+    /// Bit-for-bit `RunReport`-identical to `FixedTick` by contract
+    /// (tests/golden_equivalence.rs, tests/event_engine_prop.rs).
+    EventDriven,
+}
+
+impl EngineMode {
+    /// Parse from CLI text.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fixed-tick" | "fixedtick" | "fixed" | "tick" => Some(Self::FixedTick),
+            "event-driven" | "eventdriven" | "event" => Some(Self::EventDriven),
+            _ => None,
+        }
+    }
+
+    /// Stable display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::FixedTick => "fixed-tick",
+            Self::EventDriven => "event-driven",
+        }
+    }
+}
+
 /// Which application scheduler runs admission (control-plane trait
 /// `scheduler::Scheduler`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -350,6 +383,8 @@ pub struct SimConfig {
     pub max_sim_time_s: f64,
     /// Max failures per app before the shaper stops shaping it (§4.2).
     pub max_failures_before_giveup: u32,
+    /// Time-advance strategy; `ZOE_ENGINE_MODE` overrides at run time.
+    pub engine_mode: EngineMode,
 }
 
 impl SimConfig {
@@ -385,6 +420,7 @@ impl SimConfig {
             sched: SchedConfig::default(),
             max_sim_time_s: 0.0,
             max_failures_before_giveup: 5,
+            engine_mode: EngineMode::FixedTick,
         }
     }
 
@@ -553,6 +589,12 @@ impl SimConfig {
                 self.shaper.shaping_interval_s = v;
             }
         }
+        if let Some(e) = j.get("engine") {
+            if let Some(v) = e.get("mode").and_then(Json::as_str) {
+                self.engine_mode =
+                    EngineMode::parse(v).ok_or_else(|| format!("bad engine mode '{v}'"))?;
+            }
+        }
         if let Some(v) = j.get("max_sim_time_s").and_then(Json::as_f64) {
             self.max_sim_time_s = v;
         }
@@ -685,6 +727,11 @@ mod tests {
         assert_eq!(PlacerKind::DotProduct.name(), "dot-product");
         assert!(SchedulerKind::parse("lottery").is_none());
         assert!(PlacerKind::parse("random").is_none());
+        assert_eq!(EngineMode::parse("event-driven"), Some(EngineMode::EventDriven));
+        assert_eq!(EngineMode::parse("FIXED-TICK"), Some(EngineMode::FixedTick));
+        assert_eq!(EngineMode::EventDriven.name(), "event-driven");
+        assert_eq!(EngineMode::FixedTick.name(), "fixed-tick");
+        assert!(EngineMode::parse("warp").is_none());
         // every kind round-trips through its display name
         for k in SchedulerKind::ALL {
             assert_eq!(SchedulerKind::parse(k.name()), Some(k));
@@ -702,6 +749,17 @@ mod tests {
         // one reservation == today's single-head reservation semantics
         assert_eq!(c.sched.reservations, 1);
         assert!(c.sched.feedback);
+    }
+
+    #[test]
+    fn engine_mode_json_override() {
+        let mut c = SimConfig::small();
+        assert_eq!(c.engine_mode, EngineMode::FixedTick, "fixed-tick is the default oracle");
+        let j = Json::parse(r#"{"engine":{"mode":"event-driven"}}"#).unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.engine_mode, EngineMode::EventDriven);
+        let bad = Json::parse(r#"{"engine":{"mode":"warp"}}"#).unwrap();
+        assert!(SimConfig::small().apply_json(&bad).is_err());
     }
 
     #[test]

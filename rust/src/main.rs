@@ -10,7 +10,9 @@
 
 use std::sync::Arc;
 
-use zoe_shaper::config::{ForecasterKind, KernelKind, PlacerKind, Policy, SchedulerKind, SimConfig};
+use zoe_shaper::config::{
+    EngineMode, ForecasterKind, KernelKind, PlacerKind, Policy, SchedulerKind, SimConfig,
+};
 use zoe_shaper::experiments::{fig2, fig3, fig4, fig5, sched_sweep};
 use zoe_shaper::runtime::Runtime;
 use zoe_shaper::sim::engine::run_simulation;
@@ -99,6 +101,11 @@ fn sim_args(name: &str, about: &str) -> Args {
             "",
             "gp-incr workspace-cache lanes (0 = auto; ZOE_LANES env overrides)",
         )
+        .opt(
+            "engine-mode",
+            "",
+            "time advance: fixed-tick|event-driven (quiet-tick elision; identical reports)",
+        )
         .opt("log", "info", "log level: error|warn|info|debug")
 }
 
@@ -144,6 +151,10 @@ fn load_cfg(a: &Args) -> Result<SimConfig, String> {
     }
     if !a.get("lanes").is_empty() {
         cfg.forecast.lanes = a.get_usize("lanes")?;
+    }
+    if !a.get("engine-mode").is_empty() {
+        cfg.engine_mode = EngineMode::parse(a.get("engine-mode"))
+            .ok_or_else(|| format!("bad --engine-mode {}", a.get("engine-mode")))?;
     }
     cfg.validate()?;
     Ok(cfg)

@@ -196,6 +196,10 @@ impl Metrics {
             shaper_ticks: self.shaper_ticks,
             peak_host_usage: self.peak_host_usage,
             sim_time,
+            // the engine overwrites both after the loop ends; a collector
+            // finalized outside a run legitimately reports 0 / complete
+            events: 0,
+            truncated: false,
         }
     }
 }
@@ -237,13 +241,19 @@ pub struct RunReport {
     pub shaper_ticks: u64,
     pub peak_host_usage: f64,
     pub sim_time: f64,
+    /// Events dispatched by the engine loop (synthesized quiet-tick
+    /// samples count as one each, so both engine modes agree).
+    pub events: u64,
+    /// True when the run hit the engine's event cap and stopped early —
+    /// a capped run used to be indistinguishable from a completed one.
+    pub truncated: bool,
 }
 
 impl RunReport {
     /// Multi-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "run '{}': {}/{} completed in {:.0}s sim-time\n\
+            "run '{}': {}/{} completed in {:.0}s sim-time{}\n\
              turnaround  med {:.0}s mean {:.0}s p75 {:.0}s max {:.0}s\n\
              wait        med {:.0}s mean {:.0}s max {:.0}s   stretch med {:.2} mean {:.2} max {:.2}\n\
              mem slack   med {:.3} mean {:.3}   cpu slack med {:.3} mean {:.3}\n\
@@ -254,6 +264,11 @@ impl RunReport {
             self.completed,
             self.num_apps,
             self.sim_time,
+            if self.truncated {
+                format!(" [TRUNCATED at event cap: {} events]", self.events)
+            } else {
+                String::new()
+            },
             self.turnaround.median,
             self.turnaround.mean,
             self.turnaround.q3,
@@ -318,6 +333,8 @@ impl RunReport {
             ("monitor_ticks", Json::Num(self.monitor_ticks as f64)),
             ("shaper_ticks", Json::Num(self.shaper_ticks as f64)),
             ("sim_time", Json::Num(self.sim_time)),
+            ("events", Json::Num(self.events as f64)),
+            ("truncated", Json::Bool(self.truncated)),
             ("turnarounds_sample", num_arr(&sample(&self.turnarounds, 200))),
             ("mem_slacks_sample", num_arr(&sample(&self.mem_slacks, 200))),
         ])
@@ -448,5 +465,20 @@ mod tests {
         let s = m.report("hello", 5.0).summary();
         assert!(s.contains("hello"));
         assert!(s.contains("turnaround"));
+    }
+
+    #[test]
+    fn truncation_surfaces_in_summary_and_json() {
+        let m = Metrics::new(1);
+        let mut r = m.report("capped", 5.0);
+        assert!(!r.truncated, "a fresh report is not truncated");
+        assert!(!r.summary().contains("TRUNCATED"));
+        r.truncated = true;
+        r.events = 12345;
+        assert!(r.summary().contains("TRUNCATED"));
+        assert!(r.summary().contains("12345"));
+        let j = Json::parse(&r.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.get("truncated").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("events").and_then(Json::as_f64), Some(12345.0));
     }
 }

@@ -233,6 +233,65 @@ impl Monitor {
         self.samples_taken += 1;
     }
 
+    /// Record `cpu.len()` (cpu, mem) samples for one component in a
+    /// single columnar pass — observably identical to calling
+    /// [`Monitor::record`] once per pair, which is the contract the
+    /// event-driven engine's quiet-stretch catch-up relies on (and the
+    /// `monitor_record_many_prop` suite pins): same window contents,
+    /// same `len`, same `seq`, same `samples_taken`.
+    ///
+    /// The batched form hoists the slot lookup and turns the filling and
+    /// sliding phases into chunked `copy_from_slice` appends; only the
+    /// once-per-`cap` compaction steps run sample-at-a-time.
+    pub fn record_many(&mut self, c: ComponentId, cpu: &[f64], mem: &[f64]) {
+        assert_eq!(cpu.len(), mem.len(), "cpu/mem sample batches must pair up");
+        if cpu.is_empty() {
+            return; // no samples: no slot assignment either (lazy-slot parity)
+        }
+        let cap = self.cap;
+        let region = self.region;
+        let slot = self.slot_for(c);
+        let off = slot * 2 * region;
+        let mut i = 0;
+        while i < cpu.len() {
+            let m = &self.meta[slot];
+            let (start, len) = (m.start as usize, m.len as usize);
+            let remaining = cpu.len() - i;
+            if len < cap {
+                // filling phase: append a chunk at the window end
+                let n = remaining.min(cap - len);
+                let at = off + start + len;
+                self.data[at..at + n].copy_from_slice(&cpu[i..i + n]);
+                self.data[at + region..at + region + n].copy_from_slice(&mem[i..i + n]);
+                self.meta[slot].len += n as u32;
+                i += n;
+            } else if start + cap < region {
+                // sliding phase: consecutive writes land at consecutive
+                // indices past the window, so a chunk append advances the
+                // start by its length in one go
+                let n = remaining.min(region - (start + cap));
+                let at = off + start + cap;
+                self.data[at..at + n].copy_from_slice(&cpu[i..i + n]);
+                self.data[at + region..at + region + n].copy_from_slice(&mem[i..i + n]);
+                self.meta[slot].start += n as u32;
+                i += n;
+            } else {
+                // region exhausted: one compaction step (identical to
+                // `record`'s), then the loop re-enters the sliding phase
+                self.data.copy_within(off + start + 1..off + start + cap, off);
+                self.data[off + cap - 1] = cpu[i];
+                let mo = off + region;
+                self.data.copy_within(mo + start + 1..mo + start + cap, mo);
+                self.data[mo + cap - 1] = mem[i];
+                self.meta[slot].start = 0;
+                i += 1;
+            }
+        }
+        let m = &mut self.meta[slot];
+        m.count = m.count.wrapping_add(cpu.len() as u32);
+        self.samples_taken += cpu.len() as u64;
+    }
+
     /// Clear a component's history (on preemption/restart: the next
     /// attempt is a fresh process with fresh behavior). The slot is kept;
     /// the epoch bump makes the new life's `seq` disjoint from the old.
@@ -404,6 +463,37 @@ mod tests {
         assert_eq!(m.seq(1), 0);
         m.record(1, 0.5, 0.5);
         assert_eq!(m.seq(1), 1);
+    }
+
+    #[test]
+    fn record_many_equals_repeated_record() {
+        let cap = 4;
+        let mut batched = Monitor::new(2, cap);
+        let mut reference = Monitor::new(2, cap);
+        let samples: Vec<(f64, f64)> =
+            (0..23).map(|i| ((i as f64 * 0.7).sin(), (i as f64 * 0.3).cos())).collect();
+        // split the stream into uneven batches that straddle the filling,
+        // sliding and compaction phases
+        let mut at = 0;
+        for &n in &[1usize, 3, 0, 7, 2, 10] {
+            let chunk = &samples[at..at + n];
+            let cpu: Vec<f64> = chunk.iter().map(|&(c, _)| c).collect();
+            let mem: Vec<f64> = chunk.iter().map(|&(_, m)| m).collect();
+            batched.record_many(0, &cpu, &mem);
+            for &(c, m) in chunk {
+                reference.record(0, c, m);
+            }
+            at += n;
+            assert_eq!(batched.cpu_series(0), reference.cpu_series(0), "after {at} samples");
+            assert_eq!(batched.mem_series(0), reference.mem_series(0), "after {at} samples");
+            assert_eq!(batched.len(0), reference.len(0));
+            assert_eq!(batched.seq(0), reference.seq(0));
+            assert_eq!(batched.samples_taken(), reference.samples_taken());
+        }
+        // an empty batch assigns no slot (lazy-slot parity with `record`)
+        batched.record_many(1, &[], &[]);
+        assert_eq!(batched.len(1), 0);
+        assert_eq!(batched.seq(1), 0);
     }
 
     #[test]

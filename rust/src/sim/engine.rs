@@ -65,12 +65,35 @@
 //! releases-now semantics bind whenever an estimate is taken before a
 //! planned preemption materializes, and the error grading quantifies
 //! estimator fidelity either way.
+//!
+//! ## Quiet-tick elision (event-driven core)
+//!
+//! Under [`EngineMode::EventDriven`] the per-step cost is O(active
+//! events) instead of O(placed components) per `monitor_interval_s`:
+//! when no state-changing event (arrival, finish, shaper tick,
+//! scheduler wake) lies between consecutive monitor ticks, the engine
+//! fast-forwards the stretch, synthesizing the missed samples
+//! analytically from the deterministic per-app step patterns and
+//! appending them per series in one batched [`Monitor::record_many`]
+//! pass. A stretch tick that *would* OOM-kill is never synthesized:
+//! the engine pushes a versioned [`Event::ProjectedOom`] plus the real
+//! monitor tick at that time, so the kill runs through the ordinary
+//! handler (the version stamp goes stale on any place/remove/resize,
+//! the `Event::Finish` discipline). Shaping ticks whose forecast input
+//! set is unchanged (per-series [`Monitor::seq`] counters + cluster
+//! allocation version) reuse the previous tick's demands instead of
+//! re-gathering and re-forecasting. `FixedTick` remains the golden
+//! oracle: both modes are bit-for-bit `RunReport`-identical
+//! (tests/golden_equivalence.rs, tests/event_engine_prop.rs), which is
+//! only possible because synthesized ticks repeat the fixed-tick
+//! arithmetic exactly — same step formula, same accumulation order,
+//! same re-arm time iteration.
 
 use std::collections::{BTreeSet, HashMap};
 use std::sync::Arc;
 
 use crate::cluster::Cluster;
-use crate::config::{ForecasterKind, Policy, SimConfig};
+use crate::config::{EngineMode, ForecasterKind, Policy, SimConfig};
 use crate::forecast::{Forecast, Forecaster, SeriesRef};
 use crate::metrics::{Metrics, RunReport};
 use crate::monitor::{Monitor, TickBuffers};
@@ -78,7 +101,7 @@ use crate::scheduler::{build_placer, build_scheduler, Placer, Scheduler, Schedul
 use crate::shaper::{self, beta, Demand, PlanScratch, ShapeActions};
 use crate::sim::{Event, EventQueue};
 use crate::util::pool;
-use crate::workload::{self, AppId, Application, AppState, ComponentId};
+use crate::workload::{self, AppId, Application, AppState, ComponentId, HostId};
 
 /// Where forecasts come from.
 pub enum ForecastSource {
@@ -100,8 +123,20 @@ pub enum MonitorMode {
 }
 
 /// Hard cap on processed events (runaway guard; generously above any
-/// legitimate run at the supported scales).
+/// legitimate run at the supported scales). A capped run surfaces as
+/// `RunReport::truncated` — it is no longer indistinguishable from a
+/// completed one.
 const MAX_EVENTS: u64 = 200_000_000;
+
+/// §5 hard-limit semantics under *optimistic* reclamation: a component
+/// whose usage exceeds its (reclaimed) allocation by more than this
+/// factor is killed by the OS outright. Shared by the monitor tick and
+/// the quiet-stretch kill projection so both judge the same boundary.
+const HARD_LIMIT_TOLERANCE: f64 = 1.10;
+
+/// Monitor samples buffered per quiet stretch before a `record_many`
+/// flush (bounds fast-forward scratch memory at rows × this × 2 f64s).
+const FF_FLUSH_TICKS: usize = 512;
 
 /// Residual work below this counts as complete — the engine's
 /// work-completion epsilon, applied identically by the finish check and
@@ -130,6 +165,38 @@ fn shard_threshold() -> usize {
         .ok()
         .and_then(|s| s.trim().parse().ok())
         .unwrap_or(SHARD_THRESHOLD)
+}
+
+/// Resolve the time-advance mode: `ZOE_ENGINE_MODE` (how ci.sh runs the
+/// whole suite under the event-driven core) overrides the config;
+/// tests that compare modes explicitly use `Engine::set_engine_mode`.
+fn engine_mode(cfg: &SimConfig) -> EngineMode {
+    std::env::var("ZOE_ENGINE_MODE")
+        .ok()
+        .and_then(|s| EngineMode::parse(s.trim()))
+        .unwrap_or(cfg.engine_mode)
+}
+
+/// Engine-internal efficiency counters — *not* part of [`RunReport`]
+/// (they describe how the engine ran, not what the cluster did, and
+/// must differ between modes while reports stay bit-identical). The
+/// equivalence suites assert on them: an `EventDriven` long-idle run
+/// must show `host_scans + quiet_ticks_elided == monitor_ticks` with
+/// zero full scans inside quiet stretches.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Monitor ticks synthesized analytically during quiet stretches
+    /// (no gather, no per-host scan — one batched append at flush).
+    pub quiet_ticks_elided: u64,
+    /// Monitor ticks that ran the full gather + per-host OOM scan.
+    pub host_scans: u64,
+    /// Shaper ticks that reused cached demands (unchanged input set).
+    pub shaper_skips: u64,
+    /// `ProjectedOom` events pushed by the fast-forward kill projection.
+    pub projected_oom_events: u64,
+    /// `ProjectedOom` events popped stale (cluster version moved on
+    /// between projection and dispatch).
+    pub projected_oom_stale: u64,
 }
 
 /// The simulation engine.
@@ -177,6 +244,31 @@ pub struct Engine {
     /// min sampled rows before the pattern pass is sharded
     shard_threshold: usize,
     monitor_mode: MonitorMode,
+    /// time-advance strategy (quiet-tick elision on/off)
+    mode: EngineMode,
+    /// event cap for this run (tests shrink it to pin truncation)
+    event_cap: u64,
+    /// efficiency counters (quiet ticks elided, scans, skips)
+    stats: EngineStats,
+    /// shaper work-skip key: forecast input set of the last computed
+    /// tick as (component, series seq) pairs in gather order
+    shaper_key: Vec<(ComponentId, u64)>,
+    /// cluster allocation version the cached demands were planned
+    /// against; None = no valid cache (start, or forecaster mismatch)
+    shaper_key_version: Option<u64>,
+    /// fast-forward scratch: per-row `Running.since` snapshot
+    ff_since: Vec<f64>,
+    /// fast-forward scratch: buffered cpu/mem fractions, tick-major
+    ff_cpu: Vec<f64>,
+    ff_mem: Vec<f64>,
+    /// fast-forward scratch: per-series contiguous flush staging
+    ff_flush_cpu: Vec<f64>,
+    ff_flush_mem: Vec<f64>,
+    /// fast-forward scratch: per-host usage sum / any-row-over flag
+    ff_host_usage: Vec<f64>,
+    ff_host_over: Vec<bool>,
+    /// fast-forward scratch: hosts with >= 1 sampled row, ascending
+    ff_touched: Vec<u32>,
     /// initial events pushed (idempotence guard for `pump_until`/`run`)
     primed: bool,
 }
@@ -240,11 +332,43 @@ impl Engine {
             plan_scratch: PlanScratch::default(),
             actions: ShapeActions::default(),
             source,
-            cfg,
             shard_threshold: shard_threshold(),
             monitor_mode: mode,
+            mode: engine_mode(&cfg),
+            cfg,
+            event_cap: MAX_EVENTS,
+            stats: EngineStats::default(),
+            shaper_key: Vec::new(),
+            shaper_key_version: None,
+            ff_since: Vec::new(),
+            ff_cpu: Vec::new(),
+            ff_mem: Vec::new(),
+            ff_flush_cpu: Vec::new(),
+            ff_flush_mem: Vec::new(),
+            ff_host_usage: Vec::new(),
+            ff_host_over: Vec::new(),
+            ff_touched: Vec::new(),
             primed: false,
         }
+    }
+
+    /// Override the time-advance mode (tests pin modes regardless of the
+    /// `ZOE_ENGINE_MODE` env override the constructor honors).
+    #[doc(hidden)]
+    pub fn set_engine_mode(&mut self, mode: EngineMode) {
+        self.mode = mode;
+    }
+
+    /// Shrink the event cap (the truncation regression test drives a
+    /// tiny cap instead of 200M events).
+    #[doc(hidden)]
+    pub fn set_event_cap(&mut self, cap: u64) {
+        self.event_cap = cap;
+    }
+
+    /// Efficiency counters accumulated so far (see [`EngineStats`]).
+    pub fn stats(&self) -> EngineStats {
+        self.stats
     }
 
     /// Current simulated time.
@@ -277,20 +401,36 @@ impl Engine {
     /// Run pacing simulated time against the wall clock at `accel`×
     /// real time (the live prototype mode of §5; `accel = ∞` degenerates
     /// to as-fast-as-possible discrete-event execution).
-    pub fn run_paced(mut self, run_name: &str, accel: f64) -> RunReport {
+    pub fn run_paced(self, run_name: &str, accel: f64) -> RunReport {
+        self.run_paced_collect(run_name, accel).0
+    }
+
+    /// `run` also returning the engine's efficiency counters (the
+    /// equivalence suites assert stretches really were elided).
+    pub fn run_collect(self, run_name: &str) -> (RunReport, EngineStats) {
+        self.run_paced_collect(run_name, f64::INFINITY)
+    }
+
+    /// The engine loop: `run`/`run_paced`/`run_collect` all land here.
+    pub fn run_paced_collect(mut self, run_name: &str, accel: f64) -> (RunReport, EngineStats) {
         let max_t = if self.cfg.max_sim_time_s > 0.0 {
             self.cfg.max_sim_time_s
         } else {
             DEFAULT_MAX_SIM_TIME
         };
         self.prime();
+        // fast-forward requires free-running time: pacing must wake at
+        // every tick to hold the wall-clock schedule
+        let paced = accel.is_finite() && accel > 0.0;
+        let fast_forward = self.mode == EngineMode::EventDriven && !paced;
         let mut events: u64 = 0;
+        let mut truncated = false;
         let wall_start = std::time::Instant::now();
         while let Some((t, ev)) = self.queue.pop() {
             if t > max_t || self.unfinished == 0 {
                 break;
             }
-            if accel.is_finite() && accel > 0.0 {
+            if paced {
                 // pace: wall-clock deadline for this event
                 let deadline = t / accel;
                 let elapsed = wall_start.elapsed().as_secs_f64();
@@ -300,17 +440,36 @@ impl Engine {
                     ));
                 }
             }
-            events += 1;
-            if events > MAX_EVENTS {
+            if let Event::ProjectedOom { version, .. } = ev {
+                // bookkeeping only — never counted toward the cap, so
+                // both engine modes agree on `events` bit for bit
+                if version != self.cluster.version() {
+                    self.stats.projected_oom_stale += 1;
+                }
+                continue;
+            }
+            if events >= self.event_cap {
+                truncated = true;
                 crate::warn_log!("event cap hit at t={t:.0}; aborting run");
                 break;
             }
-            self.dispatch(ev);
+            if fast_forward && matches!(ev, Event::MonitorTick) {
+                // synthesized ticks count one event each, and the
+                // stretch budget makes a capped run truncate at the
+                // same tick the fixed-tick loop would
+                events += self.monitor_stretch(max_t, self.event_cap - events);
+            } else {
+                events += 1;
+                self.dispatch(ev);
+            }
         }
         // the final popped event may lie past the horizon; report the
         // effective simulated span
         let sim_time = self.now().min(max_t);
-        self.metrics.report(run_name, sim_time)
+        let mut report = self.metrics.report(run_name, sim_time);
+        report.events = events;
+        report.truncated = truncated;
+        (report, self.stats)
     }
 
     /// Push the initial event set exactly once.
@@ -337,6 +496,9 @@ impl Engine {
             Event::Finish { app, version } => self.on_finish(app, version),
             Event::MonitorTick => self.on_monitor_tick(),
             Event::ShaperTick => self.on_shaper_tick(),
+            // no-op by design: exists to bound quiet stretches; the real
+            // monitor tick queued at the same time performs any kill
+            Event::ProjectedOom { .. } => {}
         }
     }
 
@@ -503,9 +665,22 @@ impl Engine {
     }
 
     fn on_monitor_tick(&mut self) {
+        self.monitor_tick_at();
+        if self.unfinished > 0 {
+            self.queue
+                .push_in(self.cfg.forecast.monitor_interval_s, Event::MonitorTick);
+        }
+    }
+
+    /// One full monitor pass at the current time, *without* re-arming
+    /// the next tick — `on_monitor_tick` (fixed-tick) re-arms one
+    /// interval out; the quiet-stretch fast-forward re-arms wherever
+    /// the stretch ends.
+    fn monitor_tick_at(&mut self) {
         let now = self.now();
         let interval = self.cfg.forecast.monitor_interval_s;
         self.metrics.monitor_ticks += 1;
+        self.stats.host_scans += 1;
         // 1) sample utilization into the columnar buffers
         match self.monitor_mode {
             MonitorMode::Incremental => self.gather_incremental(now, interval),
@@ -539,7 +714,6 @@ impl Engine {
         //     pessimistic/baseline kills happen only under host pressure
         //     (step 2b).
         if self.cfg.shaper.policy == Policy::Optimistic {
-            const HARD_LIMIT_TOLERANCE: f64 = 1.10;
             let victims: Vec<(ComponentId, bool, AppId)> = (0..n)
                 .filter(|&i| self.tick.used_mem[i] > self.tick.alloc_mem[i] * HARD_LIMIT_TOLERANCE)
                 .map(|i| (self.tick.comp[i], self.tick.is_core[i], self.tick.app[i]))
@@ -594,10 +768,178 @@ impl Engine {
         // 3) cluster-level allocation accounting
         let (fc, fm) = self.cluster.allocation_fraction();
         self.metrics.record_allocation(fc, fm);
+    }
 
-        if self.unfinished > 0 {
-            self.queue.push_in(interval, Event::MonitorTick);
+    /// Quiet-stretch fast-forward, entered from the run loop on a popped
+    /// `MonitorTick` in event-driven mode. Runs the real pass for this
+    /// tick, then — as long as the next tick lies strictly before every
+    /// pending event (the single-MonitorTick invariant makes the queue
+    /// head the stretch barrier), within the horizon and the event
+    /// budget — synthesizes each missed tick analytically: identical
+    /// step formula, identical slack arithmetic in tick-major/row-minor
+    /// order, identical re-arm time iteration (`next = cur + interval`,
+    /// the bits `push_in` would produce), so reports match the
+    /// fixed-tick loop exactly. Samples are buffered and appended per
+    /// series via `Monitor::record_many`. A tick that would OOM-kill is
+    /// rolled back and bounded by `ProjectedOom` + a real tick at that
+    /// time. Returns the number of ticks processed (each counts one
+    /// event, like the dispatches they replace).
+    fn monitor_stretch(&mut self, max_t: f64, budget: u64) -> u64 {
+        let interval = self.cfg.forecast.monitor_interval_s;
+        let ooms_before = self.metrics.oom_events;
+        self.monitor_tick_at();
+        let mut cur = self.now();
+        let mut count: u64 = 1;
+        if self.metrics.oom_events != ooms_before || self.unfinished == 0 {
+            // kills changed placements (and pushed wakes): no stretch
+            self.queue.push(cur + interval, Event::MonitorTick);
+            return count;
         }
+        let barrier = self.queue.peek_time().unwrap_or(f64::INFINITY);
+        let n = self.tick.len();
+        let optimistic = self.cfg.shaper.policy == Policy::Optimistic;
+        // freeze the per-row state the synthesized ticks depend on: the
+        // tick buffers' static columns stay valid until the next gather,
+        // and nothing can re-place/resize before the barrier
+        self.ff_since.clear();
+        for i in 0..n {
+            let AppState::Running { since } = self.apps[self.tick.app[i]].state else {
+                unreachable!("sampled row on a non-running app after a kill-free tick")
+            };
+            self.ff_since.push(since);
+        }
+        self.ff_host_usage.resize(self.cluster.len(), 0.0);
+        self.ff_host_over.resize(self.cluster.len(), false);
+        self.ff_touched.clear();
+        for h in 0..self.cluster.len() {
+            if !self.tick.host_samples[h].is_empty() {
+                self.ff_touched.push(h as u32);
+            }
+        }
+        let (fc, fm) = self.cluster.allocation_fraction();
+        self.ff_cpu.clear();
+        self.ff_mem.clear();
+        let mut buffered = 0usize;
+        loop {
+            let next = cur + interval;
+            if next > max_t || next >= barrier || count >= budget {
+                break;
+            }
+            // evaluate every row's pattern at this tick's step
+            let base = self.ff_cpu.len();
+            {
+                let Engine { apps, comp_index, tick, ff_cpu, ff_mem, ff_since, .. } = self;
+                for i in 0..n {
+                    let step = ((next - ff_since[i]) / interval).max(0.0) as u64;
+                    let (a, k) = comp_index[tick.comp[i]];
+                    let c = &apps[a].components[k];
+                    ff_cpu.push(c.cpu_pattern.at_step(step));
+                    ff_mem.push(c.mem_pattern.at_step(step));
+                }
+            }
+            // kill projection *before* any metric mutation: a tick the
+            // real handler would kill on must run through the real
+            // handler, so roll it back untouched if one triggers
+            for &h in &self.ff_touched {
+                self.ff_host_usage[h as usize] = 0.0;
+                self.ff_host_over[h as usize] = false;
+            }
+            let mut kill: Option<HostId> = None;
+            for i in 0..n {
+                let used_mem = self.ff_mem[base + i] * self.tick.mem_req[i];
+                let h = self.tick.host[i];
+                self.ff_host_usage[h] += used_mem;
+                if used_mem > self.tick.alloc_mem[i] + 1e-9 {
+                    self.ff_host_over[h] = true;
+                }
+                if optimistic
+                    && kill.is_none()
+                    && used_mem > self.tick.alloc_mem[i] * HARD_LIMIT_TOLERANCE
+                {
+                    kill = Some(h);
+                }
+            }
+            if kill.is_none() {
+                for &h in &self.ff_touched {
+                    let h = h as usize;
+                    // saturated host with no over-limit row: the real
+                    // handler would kill nothing — still a quiet tick
+                    if self.ff_host_usage[h] > self.cluster.hosts[h].total_mem + 1e-9
+                        && self.ff_host_over[h]
+                    {
+                        kill = Some(h);
+                        break;
+                    }
+                }
+            }
+            if let Some(h) = kill {
+                self.ff_cpu.truncate(base);
+                self.ff_mem.truncate(base);
+                self.stats.projected_oom_events += 1;
+                // push order gives ProjectedOom the smaller sequence, so
+                // it pops (as a no-op) just before the kill-running tick
+                self.queue
+                    .push(next, Event::ProjectedOom { host: h, version: self.cluster.version() });
+                self.queue.push(next, Event::MonitorTick);
+                self.flush_ff(n, buffered);
+                return count;
+            }
+            // commit the quiet tick: exactly what the real pass records,
+            // minus the gather and the per-host scan
+            for i in 0..n {
+                let used_cpu = self.ff_cpu[base + i] * self.tick.cpu_req[i];
+                let used_mem = self.ff_mem[base + i] * self.tick.mem_req[i];
+                let alloc_cpus = self.tick.alloc_cpus[i];
+                let alloc_mem = self.tick.alloc_mem[i];
+                let cpu_slack = ((alloc_cpus - used_cpu) / alloc_cpus.max(1e-9)).max(0.0);
+                let mem_slack = ((alloc_mem - used_mem) / alloc_mem.max(1e-9)).max(0.0);
+                self.metrics.record_slack(self.tick.app[i], cpu_slack, mem_slack);
+            }
+            for &h in &self.ff_touched {
+                let h = h as usize;
+                let frac = self.ff_host_usage[h] / self.cluster.hosts[h].total_mem;
+                if frac > self.metrics.peak_host_usage {
+                    self.metrics.peak_host_usage = frac;
+                }
+            }
+            self.metrics.record_allocation(fc, fm);
+            self.metrics.monitor_ticks += 1;
+            self.stats.quiet_ticks_elided += 1;
+            count += 1;
+            buffered += 1;
+            cur = next;
+            if buffered >= FF_FLUSH_TICKS {
+                self.flush_ff(n, buffered);
+                buffered = 0;
+            }
+        }
+        self.flush_ff(n, buffered);
+        self.queue.push(cur + interval, Event::MonitorTick);
+        count
+    }
+
+    /// Append the buffered fast-forward samples — `ticks` ticks ×
+    /// `rows` rows, tick-major — per series in one `record_many` call
+    /// each, then reset the buffers.
+    fn flush_ff(&mut self, rows: usize, ticks: usize) {
+        if rows == 0 || ticks == 0 {
+            self.ff_cpu.clear();
+            self.ff_mem.clear();
+            return;
+        }
+        debug_assert_eq!(self.ff_cpu.len(), rows * ticks);
+        let Engine { monitor, tick, ff_cpu, ff_mem, ff_flush_cpu, ff_flush_mem, .. } = self;
+        for i in 0..rows {
+            ff_flush_cpu.clear();
+            ff_flush_mem.clear();
+            for j in 0..ticks {
+                ff_flush_cpu.push(ff_cpu[j * rows + i]);
+                ff_flush_mem.push(ff_mem[j * rows + i]);
+            }
+            monitor.record_many(tick.comp[i], ff_flush_cpu, ff_flush_mem);
+        }
+        ff_cpu.clear();
+        ff_mem.clear();
     }
 
     fn on_shaper_tick(&mut self) {
@@ -623,7 +965,6 @@ impl Engine {
         // touched here: rows carry ids + requests only.
         self.running_ids.clear();
         self.running_ids.extend(self.running.iter().copied());
-        self.demands.clear();
         self.batch_ids.clear();
         self.oracle_rows.clear();
         for &a in &self.running_ids {
@@ -645,6 +986,34 @@ impl Engine {
                     self.batch_ids.push((comp.id, comp.cpu_req, comp.mem_req));
                 }
             }
+        }
+
+        // Shaper work-skip (event-driven mode, model forecasters only):
+        // when the forecast input set is unchanged — same components in
+        // the same order, each series at the same `Monitor::seq`, and
+        // the cluster allocation version untouched since the demands
+        // were applied — re-forecasting would reproduce last tick's
+        // demands bit for bit (keyed sliding-window caches make repeat
+        // calls with identical inputs deterministic no-ops), so reuse
+        // them. The oracle path is never cached: its demands depend on
+        // the current step, which advances every tick.
+        let skip = !is_oracle
+            && self.mode == EngineMode::EventDriven
+            && self.shaper_key_version == Some(self.cluster.version())
+            && self.shaper_key.len() == self.batch_ids.len()
+            && self
+                .shaper_key
+                .iter()
+                .zip(&self.batch_ids)
+                .all(|(&(c0, s0), &(c1, _, _))| c0 == c1 && s0 == self.monitor.seq(c1));
+        let mut key_valid = skip;
+        if skip {
+            self.stats.shaper_skips += 1;
+            // identical inputs ⟹ identical forecasts: credit as issued
+            // so perf accounting matches the fixed-tick oracle run
+            self.metrics.forecasts_issued += 2 * self.batch_ids.len() as u64;
+        } else {
+            self.demands.clear();
         }
 
         if is_oracle && !self.oracle_rows.is_empty() {
@@ -694,7 +1063,7 @@ impl Engine {
         }
 
         if let ForecastSource::Model(model) = &mut self.source {
-            if !self.batch_ids.is_empty() {
+            if !skip && !self.batch_ids.is_empty() {
                 // one fused batch per tick — cpu series then mem series —
                 // so batched/parallel forecasters see the tick's entire
                 // workload in a single call instead of two serial halves.
@@ -733,6 +1102,14 @@ impl Engine {
                             },
                         );
                     }
+                    // fresh demands: remember the input set they came
+                    // from for the next tick's work-skip check
+                    key_valid = true;
+                    self.shaper_key.clear();
+                    let monitor = &self.monitor;
+                    self.shaper_key.extend(
+                        self.batch_ids.iter().map(|&(cid, _, _)| (cid, monitor.seq(cid))),
+                    );
                 }
             }
         }
@@ -803,6 +1180,11 @@ impl Engine {
         }
         // hand the action buffers back for reuse next tick
         self.actions = actions;
+        // bind the demands cache to the *post-apply* allocation state:
+        // any place/remove/real-resize before the next shaping tick
+        // moves the cluster version and forces a recompute
+        self.shaper_key_version =
+            if key_valid { Some(self.cluster.version()) } else { None };
         self.queue.push(now, Event::SchedulerWake);
         if self.unfinished > 0 {
             self.queue.push_in(shaping_interval, Event::ShaperTick);
@@ -925,15 +1307,13 @@ pub fn run_simulation(
     run_simulation_with(cfg, runtime, run_name, MonitorMode::Incremental)
 }
 
-/// `run_simulation` with an explicit monitor gather mode (the golden-
-/// equivalence suite runs both modes and compares reports).
-pub fn run_simulation_with(
+/// Build the forecast source a config asks for (`runtime` is required
+/// only for `ForecasterKind::GpPjrt`).
+pub fn build_source(
     cfg: &SimConfig,
     runtime: Option<Arc<crate::runtime::Runtime>>,
-    run_name: &str,
-    mode: MonitorMode,
-) -> anyhow::Result<RunReport> {
-    let source = match cfg.forecast.kind {
+) -> anyhow::Result<ForecastSource> {
+    Ok(match cfg.forecast.kind {
         ForecasterKind::Oracle => ForecastSource::Oracle,
         ForecasterKind::GpPjrt => {
             let rt = match runtime {
@@ -954,9 +1334,37 @@ pub fn run_simulation_with(
             cfg.forecast.history,
             cfg.forecast.lanes,
         )),
-    };
+    })
+}
+
+/// `run_simulation` with an explicit monitor gather mode (the golden-
+/// equivalence suite runs both modes and compares reports).
+pub fn run_simulation_with(
+    cfg: &SimConfig,
+    runtime: Option<Arc<crate::runtime::Runtime>>,
+    run_name: &str,
+    mode: MonitorMode,
+) -> anyhow::Result<RunReport> {
+    let source = build_source(cfg, runtime)?;
     let engine = Engine::with_monitor_mode(cfg.clone(), source, mode);
     Ok(engine.run(run_name))
+}
+
+/// Fully-pinned entry point: explicit monitor *and* engine mode
+/// (overriding any `ZOE_ENGINE_MODE` env), returning the report plus
+/// the engine's efficiency counters. The equivalence suites compare
+/// both modes through this regardless of how the suite is invoked.
+pub fn run_simulation_full(
+    cfg: &SimConfig,
+    runtime: Option<Arc<crate::runtime::Runtime>>,
+    run_name: &str,
+    monitor_mode: MonitorMode,
+    engine_mode: EngineMode,
+) -> anyhow::Result<(RunReport, EngineStats)> {
+    let source = build_source(cfg, runtime)?;
+    let mut engine = Engine::with_monitor_mode(cfg.clone(), source, monitor_mode);
+    engine.set_engine_mode(engine_mode);
+    Ok(engine.run_collect(run_name))
 }
 
 #[cfg(test)]
@@ -1189,6 +1597,73 @@ mod tests {
             "charged {charged} != re-done {redone}"
         );
         assert!(eng.apps[a].remaining_work <= eng.apps[a].total_work);
+    }
+
+    #[test]
+    fn event_cap_truncation_is_surfaced() {
+        let mut cfg = tiny_cfg();
+        cfg.forecast.kind = ForecasterKind::Oracle;
+        cfg.shaper.policy = Policy::Baseline;
+        // uncapped reference: completes, reports its event count
+        let full = run_simulation(&cfg, None, "full").unwrap();
+        assert!(!full.truncated, "{}", full.summary());
+        assert!(full.events > 100, "tiny run still dispatches > 100 events");
+        // regression: a capped run used to warn_log and break, leaving
+        // the report indistinguishable from a completed one
+        let mut eng = Engine::new(cfg.clone(), ForecastSource::Oracle);
+        eng.set_event_cap(100);
+        let r = eng.run("capped");
+        assert!(r.truncated, "{}", r.summary());
+        assert_eq!(r.events, 100);
+        assert!(r.completed <= full.completed);
+        assert!(r.summary().contains("TRUNCATED"));
+        assert_eq!(r.to_json().get("truncated").and_then(crate::util::json::Json::as_bool), Some(true));
+        // both engine modes truncate at the identical point
+        let mut e2 = Engine::new(cfg, ForecastSource::Oracle);
+        e2.set_event_cap(100);
+        e2.set_engine_mode(EngineMode::EventDriven);
+        let r2 = e2.run("capped-ed");
+        assert!(r2.truncated);
+        assert_eq!(r2.events, 100);
+        assert_eq!(r2.sim_time.to_bits(), r.sim_time.to_bits());
+        assert_eq!(r2.monitor_ticks, r.monitor_ticks);
+        assert_eq!(r2.completed, r.completed);
+    }
+
+    #[test]
+    fn event_driven_matches_fixed_tick_smoke() {
+        // the full matrix lives in tests/golden_equivalence.rs and
+        // tests/event_engine_prop.rs; this pins the core contract close
+        // to the implementation
+        for policy in [Policy::Baseline, Policy::Pessimistic, Policy::Optimistic] {
+            let mut cfg = tiny_cfg();
+            cfg.forecast.kind = ForecasterKind::Oracle;
+            cfg.shaper.policy = policy;
+            let (ft, fts) = run_simulation_full(
+                &cfg, None, "ft", MonitorMode::Incremental, EngineMode::FixedTick,
+            )
+            .unwrap();
+            let (ed, eds) = run_simulation_full(
+                &cfg, None, "ed", MonitorMode::Incremental, EngineMode::EventDriven,
+            )
+            .unwrap();
+            let p = policy.name();
+            assert_eq!(ft.completed, ed.completed, "{p}");
+            assert_eq!(ft.events, ed.events, "{p}");
+            assert_eq!(ft.monitor_ticks, ed.monitor_ticks, "{p}");
+            assert_eq!(ft.oom_events, ed.oom_events, "{p}");
+            assert_eq!(ft.turnaround.mean.to_bits(), ed.turnaround.mean.to_bits(), "{p}");
+            assert_eq!(ft.mem_slack.mean.to_bits(), ed.mem_slack.mean.to_bits(), "{p}");
+            assert_eq!(ft.cpu_slack.mean.to_bits(), ed.cpu_slack.mean.to_bits(), "{p}");
+            assert_eq!(ft.peak_host_usage.to_bits(), ed.peak_host_usage.to_bits(), "{p}");
+            assert_eq!(ft.mean_alloc_mem.to_bits(), ed.mean_alloc_mem.to_bits(), "{p}");
+            assert_eq!(ft.sim_time.to_bits(), ed.sim_time.to_bits(), "{p}");
+            // fixed-tick never elides; event-driven accounts every tick
+            // as either a full scan or an elision
+            assert_eq!(fts.quiet_ticks_elided, 0, "{p}");
+            assert_eq!(fts.host_scans, ft.monitor_ticks, "{p}");
+            assert_eq!(eds.host_scans + eds.quiet_ticks_elided, ed.monitor_ticks, "{p}");
+        }
     }
 
     #[test]

@@ -8,7 +8,7 @@ pub mod engine;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use crate::workload::AppId;
+use crate::workload::{AppId, HostId};
 
 /// Simulation events.
 #[derive(Debug, Clone, PartialEq)]
@@ -24,6 +24,15 @@ pub enum Event {
     ShaperTick,
     /// Try to dequeue applications (resources may have been freed).
     SchedulerWake,
+    /// The event-driven engine projects that `host` will hit its memory
+    /// capacity (or a component its hard limit) at this tick, computed
+    /// from current allocations + usage patterns during quiet-stretch
+    /// fast-forward. `version` is the cluster allocation version at
+    /// projection time — any place/remove/real-resize since makes the
+    /// projection stale, the same stamp discipline as `Event::Finish`.
+    /// Dispatch is a no-op either way: the event exists to bound quiet
+    /// stretches so the *real* monitor tick at this time runs the kill.
+    ProjectedOom { host: HostId, version: u64 },
 }
 
 /// Queue entry ordered by (time, sequence) — sequence keeps FIFO order of
@@ -78,7 +87,13 @@ impl EventQueue {
     }
 
     /// Schedule `event` at absolute time `at` (clamped to now).
+    ///
+    /// Entry ordering is NaN-total via `f64::total_cmp` (`util::order`
+    /// class of cleanups), but a non-finite time is still a caller bug —
+    /// a NaN or ∞ deadline would silently sink an event to the back of
+    /// the queue forever — so debug builds reject it here at the source.
     pub fn push(&mut self, at: f64, event: Event) {
+        debug_assert!(at.is_finite(), "non-finite event time {at} for {event:?}");
         let t = if at < self.now { self.now } else { at };
         self.heap.push(Entry { time: t, seq: self.seq, event });
         self.seq += 1;
@@ -86,6 +101,7 @@ impl EventQueue {
 
     /// Schedule `event` after a delay.
     pub fn push_in(&mut self, delay: f64, event: Event) {
+        debug_assert!(delay.is_finite(), "non-finite event delay {delay} for {event:?}");
         self.push(self.now + delay.max(0.0), event);
     }
 
@@ -172,5 +188,61 @@ mod tests {
         q.pop();
         q.push_in(5.0, Event::ShaperTick);
         assert_eq!(q.pop().unwrap().0, 15.0);
+    }
+
+    #[test]
+    fn simultaneous_events_fifo_under_adversarial_times() {
+        // The hazard class: f64 "equality" under ieee arithmetic. Times
+        // that *print* the same may not be the same bits (0.1 + 0.2 vs
+        // 0.3), and -0.0 == 0.0 under PartialOrd but not total_cmp.
+        // Pin the contract precisely: bitwise-identical times are FIFO
+        // by sequence; distinct bits order by total_cmp.
+        let mut q = EventQueue::new();
+        // 0.1 + 0.2 > 0.3 in f64: the "same" instant is actually later
+        q.push(0.1 + 0.2, Event::Arrival(10));
+        q.push(0.3, Event::Arrival(11));
+        assert_eq!(q.pop().unwrap().1, Event::Arrival(11));
+        assert_eq!(q.pop().unwrap().1, Event::Arrival(10));
+
+        // bitwise-equal times from different arithmetic stay FIFO
+        let mut q = EventQueue::new();
+        let a = 60.0 + 60.0; // 120.0
+        let b = 2.0 * 60.0; // 120.0, same bits
+        assert_eq!(a.to_bits(), b.to_bits());
+        q.push(a, Event::Arrival(1));
+        q.push(b, Event::Arrival(2));
+        q.push(a, Event::Arrival(3));
+        let ids: Vec<_> = std::iter::from_fn(|| q.pop())
+            .map(|(_, e)| match e {
+                Event::Arrival(i) => i,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ids, vec![1, 2, 3], "equal-time events pop in push order");
+
+        // -0.0 at the epoch: not clamped (−0.0 < 0.0 is false under
+        // PartialOrd), ordered before +0.0 by total_cmp — deterministic,
+        // never a heap-invariant violation
+        let mut q = EventQueue::new();
+        q.push(0.0, Event::Arrival(5));
+        q.push(-0.0, Event::Arrival(6));
+        assert_eq!(q.pop().unwrap().1, Event::Arrival(6));
+        assert_eq!(q.pop().unwrap().1, Event::Arrival(5));
+        assert_eq!(q.now(), 0.0);
+
+        // denormal-scale separations still order strictly
+        let mut q = EventQueue::new();
+        q.push(f64::MIN_POSITIVE, Event::Arrival(8));
+        q.push(0.0, Event::Arrival(7));
+        assert_eq!(q.pop().unwrap().1, Event::Arrival(7));
+        assert_eq!(q.pop().unwrap().1, Event::Arrival(8));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    #[cfg(debug_assertions)]
+    fn non_finite_push_rejected_in_debug() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, Event::MonitorTick);
     }
 }

@@ -1,0 +1,192 @@
+//! Property suite for the PR 7 event-driven engine core.
+//!
+//! `EngineMode::EventDriven` (quiet-tick elision: analytic fast-forward
+//! across event-free stretches, bounded by projected-OOM events) is
+//! required to be an *observationally invisible* optimization: for any
+//! seed, policy and event cap, its `RunReport` — every counter and
+//! every f64 bit — must equal the fixed-tick oracle's. This suite
+//! sweeps a seed × policy grid, pins truncation parity under tiny event
+//! caps (both modes must abort at the same event count with the same
+//! partial report), and checks the `EngineStats` accounting invariants.
+
+use zoe_shaper::config::{EngineMode, ForecasterKind, Policy, SimConfig};
+use zoe_shaper::metrics::RunReport;
+use zoe_shaper::sim::engine::{
+    run_simulation_full, Engine, EngineStats, ForecastSource, MonitorMode,
+};
+
+fn grid_cfg(seed: u64, policy: Policy) -> SimConfig {
+    let mut cfg = SimConfig::small();
+    cfg.seed = seed;
+    cfg.workload.num_apps = 40;
+    cfg.cluster.hosts = 4;
+    cfg.shaper.policy = policy;
+    cfg.forecast.kind = ForecasterKind::Oracle;
+    cfg
+}
+
+/// Compact bitwise report comparison (the exhaustive field-by-field
+/// version lives in tests/golden_equivalence.rs; this one covers the
+/// fields that could plausibly diverge under elision: event counts,
+/// tick counts, kill counts, slack statistics, peaks and the horizon).
+fn assert_bit_identical(a: &RunReport, b: &RunReport, ctx: &str) {
+    assert_eq!(a.completed, b.completed, "{ctx}: completed");
+    assert_eq!(a.oom_events, b.oom_events, "{ctx}: oom_events");
+    assert_eq!(a.app_preemptions, b.app_preemptions, "{ctx}: app_preemptions");
+    assert_eq!(a.monitor_ticks, b.monitor_ticks, "{ctx}: monitor_ticks");
+    assert_eq!(a.shaper_ticks, b.shaper_ticks, "{ctx}: shaper_ticks");
+    assert_eq!(a.forecasts_issued, b.forecasts_issued, "{ctx}: forecasts_issued");
+    assert_eq!(a.events, b.events, "{ctx}: events");
+    assert_eq!(a.truncated, b.truncated, "{ctx}: truncated");
+    let exact = [
+        (a.turnaround.mean, b.turnaround.mean, "turnaround.mean"),
+        (a.turnaround.max, b.turnaround.max, "turnaround.max"),
+        (a.wait.mean, b.wait.mean, "wait.mean"),
+        (a.cpu_slack.mean, b.cpu_slack.mean, "cpu_slack.mean"),
+        (a.mem_slack.mean, b.mem_slack.mean, "mem_slack.mean"),
+        (a.mean_alloc_cpu, b.mean_alloc_cpu, "mean_alloc_cpu"),
+        (a.mean_alloc_mem, b.mean_alloc_mem, "mean_alloc_mem"),
+        (a.peak_host_usage, b.peak_host_usage, "peak_host_usage"),
+        (a.wasted_work, b.wasted_work, "wasted_work"),
+        (a.sim_time, b.sim_time, "sim_time"),
+    ];
+    for (x, y, name) in exact {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {name} {x} vs {y}");
+    }
+    assert_eq!(a.mem_slacks.len(), b.mem_slacks.len(), "{ctx}: mem_slacks len");
+    for (i, (x, y)) in a.mem_slacks.iter().zip(&b.mem_slacks).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: mem_slacks[{i}]");
+    }
+}
+
+/// The accounting invariants both modes must satisfy: the fixed-tick
+/// loop never elides and scans on every monitor tick; the event-driven
+/// loop accounts every monitor tick as exactly one of {real host scan,
+/// elided quiet tick}, and can only observe stale projected-OOM pops
+/// for events it actually pushed.
+fn assert_stats_sane(fts: &EngineStats, eds: &EngineStats, ft: &RunReport, ed: &RunReport, ctx: &str) {
+    assert_eq!(fts.quiet_ticks_elided, 0, "{ctx}: fixed-tick elided");
+    assert_eq!(fts.shaper_skips, 0, "{ctx}: fixed-tick shaper skips");
+    assert_eq!(fts.projected_oom_events, 0, "{ctx}: fixed-tick projections");
+    assert_eq!(fts.host_scans, ft.monitor_ticks, "{ctx}: fixed-tick scans");
+    assert_eq!(
+        eds.host_scans + eds.quiet_ticks_elided,
+        ed.monitor_ticks,
+        "{ctx}: event-driven tick accounting"
+    );
+    assert!(
+        eds.projected_oom_stale <= eds.projected_oom_events,
+        "{ctx}: stale pops {} exceed pushes {}",
+        eds.projected_oom_stale,
+        eds.projected_oom_events
+    );
+}
+
+#[test]
+fn bit_identity_over_seed_policy_grid() {
+    for seed in [3u64, 31, 3141] {
+        for policy in [Policy::Baseline, Policy::Optimistic, Policy::Pessimistic] {
+            let cfg = grid_cfg(seed, policy);
+            let ctx = format!("seed {seed} policy {}", policy.name());
+            let (ft, fts) = run_simulation_full(
+                &cfg,
+                None,
+                "ft",
+                MonitorMode::Incremental,
+                EngineMode::FixedTick,
+            )
+            .unwrap();
+            let (ed, eds) = run_simulation_full(
+                &cfg,
+                None,
+                "ed",
+                MonitorMode::Incremental,
+                EngineMode::EventDriven,
+            )
+            .unwrap();
+            assert_bit_identical(&ft, &ed, &ctx);
+            assert_stats_sane(&fts, &eds, &ft, &ed, &ctx);
+        }
+    }
+}
+
+/// A model forecaster on top of the grid: the shaper work-skip and the
+/// batched history appends must stay invisible when allocations are
+/// driven by monitored series rather than oracle patterns (this is the
+/// configuration where a stale series or a skipped-but-changed forecast
+/// would actually perturb allocations and kills).
+#[test]
+fn bit_identity_with_model_forecaster() {
+    for seed in [5u64, 55] {
+        let mut cfg = grid_cfg(seed, Policy::Pessimistic);
+        cfg.workload.num_apps = 25;
+        cfg.workload.runtime_scale = 0.5;
+        cfg.forecast.kind = ForecasterKind::LastValue;
+        cfg.forecast.grace_period_s = 180.0;
+        let ctx = format!("last-value seed {seed}");
+        let (ft, fts) =
+            run_simulation_full(&cfg, None, "ft", MonitorMode::Incremental, EngineMode::FixedTick)
+                .unwrap();
+        let (ed, eds) = run_simulation_full(
+            &cfg,
+            None,
+            "ed",
+            MonitorMode::Incremental,
+            EngineMode::EventDriven,
+        )
+        .unwrap();
+        assert_bit_identical(&ft, &ed, &ctx);
+        assert_stats_sane(&fts, &eds, &ft, &ed, &ctx);
+    }
+}
+
+/// Truncation parity: under any event cap, both modes must stop at the
+/// same event count with the same partial report — a synthesized quiet
+/// tick spends exactly one event from the budget, so the cap cuts the
+/// run at the same simulated tick regardless of mode.
+#[test]
+fn truncation_parity_under_tiny_event_caps() {
+    let cfg = grid_cfg(7, Policy::Pessimistic);
+    let run = |mode: EngineMode, cap: u64| -> (RunReport, EngineStats) {
+        let mut eng = Engine::with_monitor_mode(
+            cfg.clone(),
+            ForecastSource::Oracle,
+            MonitorMode::Incremental,
+        );
+        eng.set_engine_mode(mode);
+        eng.set_event_cap(cap);
+        eng.run_collect("capped")
+    };
+    // full-length reference to size the caps against
+    let (full, _) = run_simulation_full(
+        &cfg,
+        None,
+        "full",
+        MonitorMode::Incremental,
+        EngineMode::FixedTick,
+    )
+    .unwrap();
+    assert!(!full.truncated, "uncapped run must not truncate");
+    assert!(full.events > 30, "grid run too small to cap: {} events", full.events);
+    // caps sized off the observed run: deep (mid-warmup), middling, and
+    // one event short of completion — all three must truncate
+    for cap in [(full.events / 10).max(1), (full.events / 3).max(2), full.events - 1] {
+        let ctx = format!("cap {cap}");
+        let (ft, _) = run(EngineMode::FixedTick, cap);
+        let (ed, eds) = run(EngineMode::EventDriven, cap);
+        assert!(ft.truncated, "{ctx}: fixed-tick not truncated");
+        assert_eq!(ft.events, cap, "{ctx}: fixed-tick event count");
+        assert_bit_identical(&ft, &ed, &ctx);
+        assert_eq!(
+            eds.host_scans + eds.quiet_ticks_elided,
+            ed.monitor_ticks,
+            "{ctx}: capped tick accounting"
+        );
+    }
+    // a cap above the run length must be invisible in both modes
+    let (ft, _) = run(EngineMode::FixedTick, full.events + 10);
+    let (ed, _) = run(EngineMode::EventDriven, full.events + 10);
+    assert!(!ft.truncated && !ed.truncated, "generous cap must not truncate");
+    assert_bit_identical(&ft, &ed, "generous cap");
+    assert_bit_identical(&ft, &full, "generous cap vs uncapped");
+}

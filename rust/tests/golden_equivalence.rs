@@ -15,13 +15,20 @@
 //! oracles of the same policies (the seed system's Vec-queue +
 //! scan-all-hosts semantics), so growing the policy family can never
 //! silently perturb default reports.
+//!
+//! Since PR 7 the suite also pins the **event-driven engine core**
+//! (`EngineMode::EventDriven`, quiet-tick elision): the fixed-tick loop
+//! is the oracle, and the elided runs must reproduce its `RunReport`s
+//! bit for bit across policies, monitor modes and forecasters, while
+//! the `EngineStats` counters prove the quiet stretches were actually
+//! skipped rather than replayed.
 
 use zoe_shaper::cluster::{Cluster, CAPACITY_EPS};
-use zoe_shaper::config::{ForecasterKind, Policy, SimConfig};
+use zoe_shaper::config::{EngineMode, ForecasterKind, Policy, SimConfig};
 use zoe_shaper::metrics::RunReport;
 use zoe_shaper::scheduler::{Placer, PlacementOutcome, Scheduler};
 use zoe_shaper::sim::engine::{
-    run_simulation_with, Engine, ForecastSource, MonitorMode,
+    run_simulation_full, run_simulation_with, Engine, ForecastSource, MonitorMode,
 };
 use zoe_shaper::workload::{AppId, Application, AppState, HostId};
 
@@ -45,6 +52,8 @@ fn assert_reports_identical(a: &RunReport, b: &RunReport, ctx: &str) {
     assert_eq!(a.forecasts_issued, b.forecasts_issued, "{ctx}: forecasts_issued");
     assert_eq!(a.monitor_ticks, b.monitor_ticks, "{ctx}: monitor_ticks");
     assert_eq!(a.shaper_ticks, b.shaper_ticks, "{ctx}: shaper_ticks");
+    assert_eq!(a.events, b.events, "{ctx}: events");
+    assert_eq!(a.truncated, b.truncated, "{ctx}: truncated");
     // f64 fields: to_bits comparison = true bit-for-bit equality
     let exact = [
         (a.turnaround.mean, b.turnaround.mean, "turnaround.mean"),
@@ -514,6 +523,133 @@ fn stale_single_reservation_matches_legacy_oracle() {
             &format!("legacy reservation oracle, policy {}", policy.name()),
         );
     }
+}
+
+// ----- PR 7: event-driven engine core vs the fixed-tick oracle ----------
+
+/// Run one configuration under both engine modes and demand bit-for-bit
+/// identical reports, plus the stats invariants that prove the two
+/// modes did *different work* to reach the same answer: the fixed-tick
+/// run scans hosts on every monitor tick and elides nothing, while the
+/// event-driven run accounts for every monitor tick as either a real
+/// scan or an elided quiet tick.
+fn assert_modes_identical(cfg: &SimConfig, monitor_mode: MonitorMode, ctx: &str) {
+    let (ft, fts) =
+        run_simulation_full(cfg, None, "fixed-tick", monitor_mode, EngineMode::FixedTick)
+            .unwrap();
+    let (ed, eds) =
+        run_simulation_full(cfg, None, "event-driven", monitor_mode, EngineMode::EventDriven)
+            .unwrap();
+    assert_reports_identical(&ft, &ed, ctx);
+    assert_eq!(fts.quiet_ticks_elided, 0, "{ctx}: fixed-tick elided ticks");
+    assert_eq!(fts.host_scans, ft.monitor_ticks, "{ctx}: fixed-tick scan accounting");
+    assert_eq!(
+        eds.host_scans + eds.quiet_ticks_elided,
+        ed.monitor_ticks,
+        "{ctx}: event-driven tick accounting (scans {} + elided {})",
+        eds.host_scans,
+        eds.quiet_ticks_elided
+    );
+}
+
+/// The elision core under perfect forecasts: every shaping policy,
+/// under both monitor gather modes, reproduces the fixed-tick oracle
+/// bit for bit.
+#[test]
+fn event_driven_matches_fixed_tick_for_all_oracle_policies() {
+    for policy in [Policy::Baseline, Policy::Optimistic, Policy::Pessimistic] {
+        for monitor_mode in [MonitorMode::Incremental, MonitorMode::ReferenceScan] {
+            let mut cfg = tier1_cfg();
+            cfg.shaper.policy = policy;
+            cfg.forecast.kind = ForecasterKind::Oracle;
+            let ctx = format!("event-driven {} / {:?}", policy.name(), monitor_mode);
+            assert_modes_identical(&cfg, monitor_mode, &ctx);
+        }
+    }
+}
+
+/// Model forecasters exercise the monitor-history path: the batched
+/// catch-up append (`Monitor::record_many`) must leave every
+/// per-component series — and therefore every forecast, allocation and
+/// downstream report field — bitwise indistinguishable from the
+/// sample-at-a-time fixed-tick run. `GpIncremental` additionally pins
+/// the factor caches (slides, epochs) as a pure function of the stream.
+#[test]
+fn event_driven_matches_fixed_tick_with_model_forecasters() {
+    for (kind, name) in [
+        (ForecasterKind::LastValue, "last-value"),
+        (ForecasterKind::GpIncremental, "gp-incremental"),
+    ] {
+        let mut cfg = tier1_cfg();
+        cfg.workload.num_apps = 25;
+        cfg.workload.runtime_scale = 0.5;
+        cfg.shaper.policy = Policy::Pessimistic;
+        cfg.forecast.kind = kind;
+        cfg.forecast.grace_period_s = 180.0;
+        assert_modes_identical(&cfg, MonitorMode::Incremental, &format!("event-driven {name}"));
+    }
+}
+
+/// The sparse long-idle scenario the elision exists for: a 7-day trace
+/// whose arrivals are hours apart, so almost every monitor tick falls
+/// inside a quiet stretch. Reports must still be identical, and the
+/// engine counters must show that inside those stretches the
+/// event-driven core performed *zero* per-tick host scans — every
+/// monitor tick is accounted as either a real scan (at a stretch
+/// boundary) or an analytically synthesized one, and the elided kind
+/// dominates.
+#[test]
+fn event_driven_elides_quiet_stretches_on_sparse_seven_day_trace() {
+    let mut cfg = SimConfig::small();
+    cfg.workload.num_apps = 40;
+    cfg.workload.burst_prob = 0.0;
+    cfg.workload.gap_mean_s = 4.0 * 3600.0;
+    cfg.workload.runtime_scale = 0.05;
+    cfg.cluster.hosts = 4;
+    cfg.shaper.policy = Policy::Baseline;
+    cfg.forecast.kind = ForecasterKind::Oracle;
+    cfg.max_sim_time_s = 7.0 * 86_400.0;
+    let (ft, fts) = run_simulation_full(
+        &cfg,
+        None,
+        "sparse-fixed",
+        MonitorMode::Incremental,
+        EngineMode::FixedTick,
+    )
+    .unwrap();
+    let (ed, eds) = run_simulation_full(
+        &cfg,
+        None,
+        "sparse-event",
+        MonitorMode::Incremental,
+        EngineMode::EventDriven,
+    )
+    .unwrap();
+    assert_reports_identical(&ft, &ed, "sparse 7-day");
+    assert_eq!(fts.quiet_ticks_elided, 0, "fixed-tick must never elide");
+    // Every monitor tick was either a real host scan or an elided quiet
+    // tick — there is no third bucket, i.e. no scan happened *inside* a
+    // quiet stretch.
+    assert_eq!(
+        eds.host_scans + eds.quiet_ticks_elided,
+        ed.monitor_ticks,
+        "tick accounting: scans {} + elided {} vs {} ticks",
+        eds.host_scans,
+        eds.quiet_ticks_elided,
+        ed.monitor_ticks
+    );
+    // Hours-long gaps between arrivals ⟹ the elided ticks dominate.
+    assert!(
+        eds.quiet_ticks_elided > ed.monitor_ticks / 2,
+        "expected a mostly-quiet trace: elided {} of {} monitor ticks",
+        eds.quiet_ticks_elided,
+        ed.monitor_ticks
+    );
+    assert!(
+        ed.monitor_ticks > 1_000,
+        "trace too short to be meaningful: {} monitor ticks",
+        ed.monitor_ticks
+    );
 }
 
 // The ZOE_WORKERS sweep lives in tests/monitor_shard_workers.rs: it

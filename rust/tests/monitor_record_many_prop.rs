@@ -1,0 +1,134 @@
+//! Property suite for `Monitor::record_many` (PR 7).
+//!
+//! The event-driven engine's quiet-stretch fast-forward synthesizes
+//! whole runs of monitor samples and appends them in one columnar batch
+//! per component. The bit-for-bit equivalence of the two engine modes
+//! rests on a single arena-level contract: `record_many(c, cpu, mem)`
+//! must leave the monitor in *exactly* the state that the same samples
+//! pushed one at a time through `record` would — across every phase of
+//! the ring arena (filling, sliding, compaction) and every way a batch
+//! can straddle the phase boundaries. This suite drives both paths with
+//! seeded adversarial chunkings and demands identical series bits,
+//! lengths, sequence numbers and global sample counts after every
+//! chunk.
+
+use zoe_shaper::monitor::Monitor;
+use zoe_shaper::util::rng::Pcg;
+
+/// Full observable-state comparison of two monitors over `comps`
+/// component ids: per-series bits, lengths, seqs, and the global
+/// sample counter.
+fn assert_monitors_equal(a: &Monitor, b: &Monitor, comps: usize, ctx: &str) {
+    assert_eq!(a.samples_taken(), b.samples_taken(), "{ctx}: samples_taken");
+    for c in 0..comps {
+        assert_eq!(a.len(c), b.len(c), "{ctx}: len of component {c}");
+        assert_eq!(a.seq(c), b.seq(c), "{ctx}: seq of component {c}");
+        assert_eq!(
+            a.cpu_series(c).len(),
+            b.cpu_series(c).len(),
+            "{ctx}: cpu series len of component {c}"
+        );
+        for (i, (x, y)) in a.cpu_series(c).iter().zip(b.cpu_series(c)).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: cpu[{i}] of component {c}");
+        }
+        for (i, (x, y)) in a.mem_series(c).iter().zip(b.mem_series(c)).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: mem[{i}] of component {c}");
+        }
+    }
+}
+
+/// Seeded adversarial chunkings: for several arena capacities, feed an
+/// identical per-component sample stream through `record_many` in
+/// random-size chunks (including empty ones) and through `record` one
+/// sample at a time, interleaving components so batches land in every
+/// arena phase in every order. States must match after every chunk.
+#[test]
+fn batched_record_matches_one_at_a_time_across_phases() {
+    const COMPS: usize = 3;
+    for cap in [2usize, 3, 5, 8, 16] {
+        for seed in [11u64, 222, 3333] {
+            let mut rng = Pcg::seeded(seed ^ (cap as u64) << 32);
+            let mut batched = Monitor::new(COMPS, cap);
+            let mut reference = Monitor::new(COMPS, cap);
+            let mut fed = 0usize;
+            let mut chunk = 0usize;
+            let mut cpu = Vec::new();
+            let mut mem = Vec::new();
+            while fed < 400 {
+                let c = rng.index(COMPS);
+                let n = rng.index(8); // 0..=7 samples; 0 pins the empty-batch path
+                cpu.clear();
+                mem.clear();
+                for _ in 0..n {
+                    cpu.push(rng.f64());
+                    mem.push(rng.f64());
+                }
+                batched.record_many(c, &cpu, &mem);
+                for i in 0..n {
+                    reference.record(c, cpu[i], mem[i]);
+                }
+                fed += n;
+                chunk += 1;
+                assert_monitors_equal(
+                    &batched,
+                    &reference,
+                    COMPS,
+                    &format!("cap {cap} seed {seed} chunk {chunk}"),
+                );
+            }
+        }
+    }
+}
+
+/// Chunk sizes chosen to straddle each boundary exactly: smaller than
+/// the headroom, exactly the headroom, headroom + 1, a full capacity,
+/// and several capacities at once (multiple wraps inside one batch).
+#[test]
+fn boundary_straddling_chunks_match() {
+    for cap in [4usize, 7] {
+        let mut batched = Monitor::new(1, cap);
+        let mut reference = Monitor::new(1, cap);
+        let mut value = 0.0f64;
+        let mut feed = |batched: &mut Monitor, reference: &mut Monitor, n: usize| {
+            let cpu: Vec<f64> = (0..n).map(|i| value + i as f64 * 0.125).collect();
+            let mem: Vec<f64> = cpu.iter().map(|x| 1.0 - x * 0.5).collect();
+            value += n as f64;
+            batched.record_many(0, &cpu, &mem);
+            for i in 0..n {
+                reference.record(0, cpu[i], mem[i]);
+            }
+        };
+        // filling: under, exactly to, and past the first capacity edge
+        for n in [cap - 1, 1, 1, cap, 3 * cap + 1, 0, 2 * cap, 1] {
+            feed(&mut batched, &mut reference, n);
+            assert_monitors_equal(&batched, &reference, 1, &format!("cap {cap} chunk {n}"));
+        }
+    }
+}
+
+/// `reset` (preemption) in the middle of a batched stream: both paths
+/// must agree on the post-reset arena phase and keep agreeing as the
+/// series refills.
+#[test]
+fn reset_mid_stream_preserves_equivalence() {
+    const COMPS: usize = 2;
+    let cap = 6usize;
+    let mut rng = Pcg::seeded(0xfeed);
+    let mut batched = Monitor::new(COMPS, cap);
+    let mut reference = Monitor::new(COMPS, cap);
+    for round in 0..200 {
+        let c = rng.index(COMPS);
+        if rng.chance(0.15) {
+            batched.reset(c);
+            reference.reset(c);
+        }
+        let n = rng.index(2 * cap + 2);
+        let cpu: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let mem: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        batched.record_many(c, &cpu, &mem);
+        for i in 0..n {
+            reference.record(c, cpu[i], mem[i]);
+        }
+        assert_monitors_equal(&batched, &reference, COMPS, &format!("round {round}"));
+    }
+}

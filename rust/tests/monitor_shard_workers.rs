@@ -8,8 +8,8 @@
 //! threads, where concurrent setenv/getenv is undefined behavior in
 //! glibc. A separate integration-test file = a separate process.
 
-use zoe_shaper::config::{ForecasterKind, Policy, SimConfig};
-use zoe_shaper::sim::engine::{run_simulation_with, MonitorMode};
+use zoe_shaper::config::{EngineMode, ForecasterKind, Policy, SimConfig};
+use zoe_shaper::sim::engine::{run_simulation_full, run_simulation_with, MonitorMode};
 
 #[test]
 fn sharded_monitor_pass_is_worker_count_independent() {
@@ -48,8 +48,52 @@ fn sharded_monitor_pass_is_worker_count_independent() {
             run_simulation_with(&gp_cfg, None, "gpw", MonitorMode::Incremental).unwrap(),
         ));
     }
+    // PR 7: the event-driven core's batched catch-up path must also be
+    // worker-count independent — quiet-stretch pattern evaluation and
+    // the boundary-tick sharded gathers both run under ZOE_WORKERS, and
+    // each sweep entry must still equal the fixed-tick run above.
+    let mut ed_reports = Vec::new();
+    for workers in ["1", "2", "8"] {
+        std::env::set_var("ZOE_WORKERS", workers);
+        let (r, stats) = run_simulation_full(
+            &cfg,
+            None,
+            "edw",
+            MonitorMode::Incremental,
+            EngineMode::EventDriven,
+        )
+        .unwrap();
+        assert_eq!(
+            stats.host_scans + stats.quiet_ticks_elided,
+            r.monitor_ticks,
+            "event-driven tick accounting, ZOE_WORKERS={workers}"
+        );
+        ed_reports.push((workers, r));
+    }
     std::env::remove_var("ZOE_WORKERS");
     std::env::remove_var("ZOE_SHARD_THRESHOLD");
+
+    for (workers, r) in &ed_reports {
+        let base = &reports[0].1;
+        assert_eq!(base.completed, r.completed, "event-driven ZOE_WORKERS={workers}");
+        assert_eq!(base.oom_events, r.oom_events, "event-driven ZOE_WORKERS={workers}");
+        assert_eq!(base.monitor_ticks, r.monitor_ticks, "event-driven ZOE_WORKERS={workers}");
+        assert_eq!(
+            base.turnaround.mean.to_bits(),
+            r.turnaround.mean.to_bits(),
+            "event-driven ZOE_WORKERS={workers}: turnaround.mean"
+        );
+        assert_eq!(
+            base.mem_slack.mean.to_bits(),
+            r.mem_slack.mean.to_bits(),
+            "event-driven ZOE_WORKERS={workers}: mem_slack.mean"
+        );
+        assert_eq!(
+            base.sim_time.to_bits(),
+            r.sim_time.to_bits(),
+            "event-driven ZOE_WORKERS={workers}: sim_time"
+        );
+    }
 
     let (_, gp_first) = &gp_reports[0];
     for (workers, r) in &gp_reports[1..] {

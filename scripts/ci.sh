@@ -17,6 +17,12 @@ cargo test -q
 # dispatcher forced off (ZOE_SIMD=off), pinning the portable code path
 # on machines where the vector path is what usually runs
 ZOE_SIMD=off cargo test -q
+# engine-mode gate: the whole suite must also pass with the
+# event-driven core (quiet-tick elision) as the default engine —
+# every run_simulation* call that doesn't pin a mode then exercises
+# the elided path, and the golden suites keep pinning both modes
+# explicitly regardless of this override
+ZOE_ENGINE_MODE=event-driven cargo test -q
 
 # docs gate: rustdoc must build warning-free (broken intra-doc links,
 # bad code fences, missing docs on public items referenced from docs/)
