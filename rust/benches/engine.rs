@@ -16,7 +16,10 @@
 //! factor-maintenance modes (rank-1 slide vs per-tick refactorization)
 //! at the 250-host ≈ 10k-series paper scale. The idle-horizon case
 //! (PR 7) times whole sparse-trace runs under both engine modes and
-//! records the quiet-tick-elision speedup. Results are appended to
+//! records the quiet-tick-elision speedup. The churn-fault case (PR 8)
+//! re-times the 250-host tick under a live fault plan — crash churn
+//! plus telemetry dropout/corruption windows — to price the fault
+//! layer's per-row disposition check. Results are appended to
 //! `BENCH_engine.json` keyed by
 //! git revision, so the cross-PR trajectory accumulates. `ZOE_WORKERS`
 //! caps the sampling-pass worker threads.
@@ -267,6 +270,43 @@ fn bench_idle_horizon(b: &mut Bench) {
     );
 }
 
+/// Churn-fault tick case (PR 8): the warm 250-host tick cost with a
+/// live fault plan — host crash/recovery churn plus telemetry windows
+/// covering a slice of the fleet. Measures what the per-row fault
+/// disposition check and the down-host bookkeeping add to the monitor
+/// and shaper passes relative to the clean `engine_*_tick_250hosts`
+/// cases above (an empty plan adds exactly zero — pinned by
+/// tests/fault_determinism.rs — so any delta here is the live-plan
+/// cost, not wiring overhead).
+fn bench_churn_faults(b: &mut Bench) {
+    let mut cfg = SimConfig::small();
+    cfg.cluster.hosts = 250;
+    cfg.workload.num_apps = 3000;
+    cfg.workload.max_elastic = 32;
+    cfg.workload.burst_prob = 1.0;
+    cfg.workload.burst_mean_s = 1.0;
+    cfg.workload.runtime_scale = 50.0;
+    cfg.forecast.kind = ForecasterKind::Oracle;
+    cfg.shaper.policy = Policy::Pessimistic;
+    cfg.faults.crash_rate_per_host_day = 2.0;
+    cfg.faults.crash_downtime_mean_s = 1800.0;
+    cfg.faults.dropout_rate_per_day = 24.0;
+    cfg.faults.dropout_coverage = 0.3;
+    cfg.faults.corruption_rate_per_day = 12.0;
+    let mut eng = Engine::new(cfg, ForecastSource::Oracle);
+    assert!(!eng.fault_plan().is_empty(), "churn bench compiled an empty fault plan");
+    eng.pump_until(3000.0 + 1800.0);
+    println!(
+        "  [churn faults] warm state: {} components placed, {} apps running",
+        eng.cluster().placed_count(),
+        eng.running_apps()
+    );
+    assert!(eng.cluster().placed_count() > 0, "churn-fault warmup placed nothing");
+    b.run("engine_monitor_tick_churn_faults_250hosts", || eng.monitor_tick_once());
+    b.run("engine_shaper_tick_churn_faults_250hosts", || eng.shaper_tick_once());
+    eng.cluster().check_invariants().expect("churn-fault bench left the cluster inconsistent");
+}
+
 fn main() {
     let mut b = Bench::new("engine").with_target(Duration::from_millis(700));
 
@@ -274,6 +314,9 @@ fn main() {
     bench_scale(&mut b, 250, 3000);
     // scale-up scenario: 1000 hosts
     bench_scale(&mut b, 1000, 10_000);
+
+    // PR 8: the same 250-host tick under live crash + telemetry churn
+    bench_churn_faults(&mut b);
 
     // the forecast pipeline's warm tick: incremental vs refactorize
     bench_incremental_gp(&mut b);

@@ -199,8 +199,15 @@ pub struct Cluster {
     /// Per-host placement lists (unordered; swap-remove maintained).
     host_comps: Vec<Vec<ComponentId>>,
     /// (total-order key of free_mem, host id), ascending by free memory.
+    /// Down hosts are absent — `worst_fit`/`best_fit` never see them.
     mem_index: BTreeSet<(u64, HostId)>,
     fit_tree: FitTree,
+    /// Per-host down flag (fault injection). A down host is excluded
+    /// from both capacity indexes: its `mem_index` entry is removed and
+    /// its `FitTree` leaf is parked at −∞ (the same representation as
+    /// padding leaves, which `fits()` always rejects), so every fit
+    /// query skips it without a per-query branch.
+    down: Vec<bool>,
     /// Bumped on every observable allocation change (place, remove, and
     /// resizes that actually move an allocation). Version stamps let the
     /// event-driven engine invalidate projected-OOM events and cached
@@ -243,6 +250,7 @@ impl Cluster {
         }
         Cluster {
             host_comps: vec![Vec::new(); hosts.len()],
+            down: vec![false; hosts.len()],
             hosts,
             slots: Vec::new(),
             placed: BTreeSet::new(),
@@ -299,8 +307,49 @@ impl Cluster {
         self.placed.len()
     }
 
+    /// Is host `h` crashed (fault injection)?
+    pub fn is_down(&self, h: HostId) -> bool {
+        self.down[h]
+    }
+
+    /// Number of hosts currently down.
+    pub fn down_count(&self) -> usize {
+        self.down.iter().filter(|&&d| d).count()
+    }
+
+    /// Take host `h` out of service (fault injection). The caller must
+    /// have removed every placement on it first — a crash kills its
+    /// components before the capacity disappears. The host leaves both
+    /// capacity indexes (no fit query can select it) until
+    /// [`Cluster::set_host_up`].
+    pub fn set_host_down(&mut self, h: HostId) {
+        assert!(!self.down[h], "host {h} already down");
+        assert!(
+            self.host_comps[h].is_empty(),
+            "host {h} taken down with {} placements still on it",
+            self.host_comps[h].len()
+        );
+        let removed = self.mem_index.remove(&(order::key(self.hosts[h].free_mem()), h));
+        debug_assert!(removed, "mem index out of sync for host {h}");
+        self.fit_tree.update(h, f64::NEG_INFINITY, f64::NEG_INFINITY);
+        self.down[h] = true;
+        self.version = self.version.wrapping_add(1);
+    }
+
+    /// Return a crashed host to service: it rejoins both capacity
+    /// indexes with its (idle) free capacity.
+    pub fn set_host_up(&mut self, h: HostId) {
+        assert!(self.down[h], "host {h} is not down");
+        self.down[h] = false;
+        let host = &self.hosts[h];
+        self.mem_index.insert((order::key(host.free_mem()), h));
+        self.fit_tree.update(h, host.free_cpus(), host.free_mem());
+        self.version = self.version.wrapping_add(1);
+    }
+
     /// Mutate one host's ledger, keeping both capacity indexes in sync.
     fn update_host<F: FnOnce(&mut Host)>(&mut self, h: HostId, f: F) {
+        debug_assert!(!self.down[h], "allocation change on down host {h}");
         let old_key = (order::key(self.hosts[h].free_mem()), h);
         let removed = self.mem_index.remove(&old_key);
         debug_assert!(removed, "mem index out of sync for host {h}");
@@ -324,6 +373,9 @@ impl Cluster {
             self.slots.resize_with(c + 1, || None);
         }
         assert!(self.slots[c].is_none(), "component {c} already placed");
+        if self.down[host] {
+            return false; // crashed hosts accept nothing
+        }
         let h = &self.hosts[host];
         if h.free_cpus() + CAPACITY_EPS < cpus || h.free_mem() + CAPACITY_EPS < mem {
             return false;
@@ -471,10 +523,16 @@ impl Cluster {
         self.fit_tree.max_weighted_fit(cpus, mem, cpus.max(0.0), mem.max(0.0))
     }
 
-    /// Aggregate allocated fraction of total capacity: (cpu, mem) in [0,1].
+    /// Aggregate allocated fraction of total capacity: (cpu, mem) in
+    /// [0,1]. Down hosts contribute neither allocation (they hold none)
+    /// nor capacity — a crash shrinks the denominator, so the fraction
+    /// reflects the capacity that actually exists right now.
     pub fn allocation_fraction(&self) -> (f64, f64) {
         let (mut ac, mut tc, mut am, mut tm) = (0.0, 0.0, 0.0, 0.0);
         for h in &self.hosts {
+            if self.down[h.id] {
+                continue;
+            }
             ac += h.alloc_cpus;
             tc += h.total_cpus;
             am += h.alloc_mem;
@@ -519,10 +577,26 @@ impl Cluster {
             if h.alloc_cpus > h.total_cpus + CAPACITY_EPS || h.alloc_mem > h.total_mem + CAPACITY_EPS {
                 return Err(format!("host {} overcommitted", h.id));
             }
+            let leaf = self.fit_tree.base + h.id;
+            if self.down[h.id] {
+                // down host: no placements, absent from the memory index,
+                // fit-tree leaf parked at -inf
+                if !self.host_comps[h.id].is_empty() {
+                    return Err(format!("down host {} still holds placements", h.id));
+                }
+                if self.mem_index.contains(&(order::key(h.free_mem()), h.id)) {
+                    return Err(format!("down host {} still in the free-memory index", h.id));
+                }
+                if self.fit_tree.cpu[leaf] != f64::NEG_INFINITY
+                    || self.fit_tree.mem[leaf] != f64::NEG_INFINITY
+                {
+                    return Err(format!("down host {} fit-tree leaf not parked", h.id));
+                }
+                continue;
+            }
             if !self.mem_index.contains(&(order::key(h.free_mem()), h.id)) {
                 return Err(format!("host {} missing from the free-memory index", h.id));
             }
-            let leaf = self.fit_tree.base + h.id;
             if self.fit_tree.cpu[leaf].to_bits() != h.free_cpus().to_bits()
                 || self.fit_tree.mem[leaf].to_bits() != h.free_mem().to_bits()
             {
@@ -536,11 +610,12 @@ impl Cluster {
                 ));
             }
         }
-        if self.mem_index.len() != self.hosts.len() {
+        let up = self.hosts.len() - self.down_count();
+        if self.mem_index.len() != up {
             return Err(format!(
-                "free-memory index holds {} entries for {} hosts",
+                "free-memory index holds {} entries for {} up hosts",
                 self.mem_index.len(),
-                self.hosts.len()
+                up
             ));
         }
         Ok(())
@@ -726,6 +801,60 @@ mod tests {
         let mut c = cluster(1);
         assert!(c.place(0, 0, 1.0, 1.0, 0.0));
         c.place(0, 0, 1.0, 1.0, 0.0);
+    }
+
+    #[test]
+    fn down_host_is_invisible_to_every_fit_query() {
+        let mut c = cluster(3);
+        // load hosts 0 and 1 so host 2 would win every spread query
+        assert!(c.place(0, 0, 6.0, 30.0, 0.0));
+        assert!(c.place(1, 1, 4.0, 20.0, 0.0));
+        assert_eq!(c.worst_fit(1.0, 1.0), Some(2));
+        c.set_host_down(2);
+        assert!(c.is_down(2));
+        assert_eq!(c.down_count(), 1);
+        // every query now lands on an up host (or nothing)
+        assert_eq!(c.worst_fit(1.0, 1.0), Some(1));
+        assert_eq!(c.best_fit(1.0, 1.0), Some(0));
+        assert_eq!(c.first_fit(1.0, 1.0), Some(0));
+        assert_eq!(c.cpu_aware_fit(1.0, 1.0), Some(1));
+        assert_eq!(c.dot_product_fit(1.0, 1.0), Some(1));
+        // only the down host could hold this request
+        assert_eq!(c.first_fit(5.0, 10.0), None);
+        // and placing on it directly is rejected
+        assert!(!c.place(9, 2, 1.0, 1.0, 0.0));
+        c.check_invariants().unwrap();
+        c.set_host_up(2);
+        assert!(!c.is_down(2));
+        assert_eq!(c.worst_fit(1.0, 1.0), Some(2));
+        assert_eq!(c.first_fit(5.0, 10.0), Some(2));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn host_down_up_bumps_version_and_excludes_capacity() {
+        let mut c = cluster(2);
+        assert!(c.place(0, 0, 4.0, 16.0, 0.0));
+        let (fc, fm) = c.allocation_fraction();
+        let v0 = c.version();
+        c.set_host_down(1);
+        assert_ne!(c.version(), v0, "down bumps the version");
+        // denominator shrank to host 0 alone: fractions double
+        let (fc2, fm2) = c.allocation_fraction();
+        assert!((fc2 - 2.0 * fc).abs() < 1e-9);
+        assert!((fm2 - 2.0 * fm).abs() < 1e-9);
+        let v1 = c.version();
+        c.set_host_up(1);
+        assert_ne!(c.version(), v1, "up bumps the version");
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "placements still on it")]
+    fn down_with_live_placements_panics() {
+        let mut c = cluster(2);
+        assert!(c.place(0, 1, 1.0, 1.0, 0.0));
+        c.set_host_down(1);
     }
 
     // The churn property comparing every indexed fit query against a

@@ -370,6 +370,97 @@ pub struct ShaperConfig {
     pub shaping_interval_s: f64,
 }
 
+/// Fault-injection parameters (`faults` module). All rates default to
+/// zero: the compiled `FaultPlan` is then empty and the engine is
+/// bit-for-bit identical to a build without the fault layer (pinned by
+/// tests/fault_determinism.rs). Every injected fault is derived from
+/// the run seed, so faulted runs are fully deterministic too.
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    /// Expected host crashes per host per simulated day (Poisson; 0 =
+    /// no crashes).
+    pub crash_rate_per_host_day: f64,
+    /// Mean downtime after a crash, seconds (exponential, floored at
+    /// one monitor interval so a recovery never lands inside the same
+    /// tick as its crash).
+    pub crash_downtime_mean_s: f64,
+    /// Expected telemetry *dropout* windows per simulated day (Poisson;
+    /// 0 = none). During a window, covered components record no monitor
+    /// samples — their series go stale.
+    pub dropout_rate_per_day: f64,
+    /// Mean dropout window length, seconds (exponential).
+    pub dropout_duration_mean_s: f64,
+    /// Fraction of components covered by each telemetry window, chosen
+    /// per window by a seeded hash of the component id.
+    pub dropout_coverage: f64,
+    /// Expected telemetry *corruption* windows per simulated day
+    /// (Poisson; 0 = none). Covered components deliver non-finite
+    /// samples, which `Monitor::record`'s guard drops.
+    pub corruption_rate_per_day: f64,
+    /// Mean corruption window length, seconds (exponential).
+    pub corruption_duration_mean_s: f64,
+    /// Expected forecaster fault windows per simulated day (Poisson;
+    /// 0 = none). Covered series get NaN model outputs, driving the
+    /// quarantine ladder.
+    pub forecast_fault_rate_per_day: f64,
+    /// Mean forecaster fault window length, seconds (exponential).
+    pub forecast_fault_duration_mean_s: f64,
+    /// First retry delay for a crash-displaced application, seconds.
+    pub retry_base_delay_s: f64,
+    /// Retry delay ceiling, seconds (exponential backoff doubles the
+    /// base until it hits this).
+    pub retry_max_delay_s: f64,
+    /// Jitter fraction in [0,1): each backoff delay is scaled by a
+    /// seeded uniform draw from [1-jitter, 1+jitter].
+    pub retry_jitter: f64,
+    /// Crash displacements an application may accumulate before the
+    /// graded retry policy gives up on shaping it (counted in
+    /// `RunReport::gave_up`).
+    pub max_crash_retries: u32,
+    /// Consecutive bad forecasts (non-finite output or stale input)
+    /// before a series is quarantined onto the degradation ladder.
+    pub quarantine_strikes: u32,
+    /// Shaper ticks a quarantined series waits before probing the model
+    /// again (doubles on each failed probe).
+    pub quarantine_backoff_ticks: u32,
+    /// Probe backoff ceiling, in shaper ticks.
+    pub quarantine_max_backoff_ticks: u32,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            crash_rate_per_host_day: 0.0,
+            crash_downtime_mean_s: 1800.0,
+            dropout_rate_per_day: 0.0,
+            dropout_duration_mean_s: 600.0,
+            dropout_coverage: 0.25,
+            corruption_rate_per_day: 0.0,
+            corruption_duration_mean_s: 300.0,
+            forecast_fault_rate_per_day: 0.0,
+            forecast_fault_duration_mean_s: 600.0,
+            retry_base_delay_s: 30.0,
+            retry_max_delay_s: 3600.0,
+            retry_jitter: 0.5,
+            max_crash_retries: 5,
+            quarantine_strikes: 3,
+            quarantine_backoff_ticks: 4,
+            quarantine_max_backoff_ticks: 64,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// True when every injection rate is zero — the compiled plan will
+    /// be empty and the fault layer adds no events and no state.
+    pub fn is_inert(&self) -> bool {
+        self.crash_rate_per_host_day == 0.0
+            && self.dropout_rate_per_day == 0.0
+            && self.corruption_rate_per_day == 0.0
+            && self.forecast_fault_rate_per_day == 0.0
+    }
+}
+
 /// Top-level simulation configuration.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
@@ -385,6 +476,9 @@ pub struct SimConfig {
     pub max_failures_before_giveup: u32,
     /// Time-advance strategy; `ZOE_ENGINE_MODE` overrides at run time.
     pub engine_mode: EngineMode,
+    /// Fault injection; inert (all rates zero) by default. `ZOE_FAULTS=off`
+    /// force-disables injection at run time regardless of this config.
+    pub faults: FaultConfig,
 }
 
 impl SimConfig {
@@ -421,6 +515,7 @@ impl SimConfig {
             max_sim_time_s: 0.0,
             max_failures_before_giveup: 5,
             engine_mode: EngineMode::FixedTick,
+            faults: FaultConfig::default(),
         }
     }
 
@@ -595,6 +690,56 @@ impl SimConfig {
                     EngineMode::parse(v).ok_or_else(|| format!("bad engine mode '{v}'"))?;
             }
         }
+        if let Some(f) = j.get("faults") {
+            if let Some(v) = f.get("crash_rate_per_host_day").and_then(Json::as_f64) {
+                self.faults.crash_rate_per_host_day = v;
+            }
+            if let Some(v) = f.get("crash_downtime_mean_s").and_then(Json::as_f64) {
+                self.faults.crash_downtime_mean_s = v;
+            }
+            if let Some(v) = f.get("dropout_rate_per_day").and_then(Json::as_f64) {
+                self.faults.dropout_rate_per_day = v;
+            }
+            if let Some(v) = f.get("dropout_duration_mean_s").and_then(Json::as_f64) {
+                self.faults.dropout_duration_mean_s = v;
+            }
+            if let Some(v) = f.get("dropout_coverage").and_then(Json::as_f64) {
+                self.faults.dropout_coverage = v;
+            }
+            if let Some(v) = f.get("corruption_rate_per_day").and_then(Json::as_f64) {
+                self.faults.corruption_rate_per_day = v;
+            }
+            if let Some(v) = f.get("corruption_duration_mean_s").and_then(Json::as_f64) {
+                self.faults.corruption_duration_mean_s = v;
+            }
+            if let Some(v) = f.get("forecast_fault_rate_per_day").and_then(Json::as_f64) {
+                self.faults.forecast_fault_rate_per_day = v;
+            }
+            if let Some(v) = f.get("forecast_fault_duration_mean_s").and_then(Json::as_f64) {
+                self.faults.forecast_fault_duration_mean_s = v;
+            }
+            if let Some(v) = f.get("retry_base_delay_s").and_then(Json::as_f64) {
+                self.faults.retry_base_delay_s = v;
+            }
+            if let Some(v) = f.get("retry_max_delay_s").and_then(Json::as_f64) {
+                self.faults.retry_max_delay_s = v;
+            }
+            if let Some(v) = f.get("retry_jitter").and_then(Json::as_f64) {
+                self.faults.retry_jitter = v;
+            }
+            if let Some(v) = f.get("max_crash_retries").and_then(Json::as_usize) {
+                self.faults.max_crash_retries = v as u32;
+            }
+            if let Some(v) = f.get("quarantine_strikes").and_then(Json::as_usize) {
+                self.faults.quarantine_strikes = v as u32;
+            }
+            if let Some(v) = f.get("quarantine_backoff_ticks").and_then(Json::as_usize) {
+                self.faults.quarantine_backoff_ticks = v as u32;
+            }
+            if let Some(v) = f.get("quarantine_max_backoff_ticks").and_then(Json::as_usize) {
+                self.faults.quarantine_max_backoff_ticks = v as u32;
+            }
+        }
         if let Some(v) = j.get("max_sim_time_s").and_then(Json::as_f64) {
             self.max_sim_time_s = v;
         }
@@ -634,6 +779,44 @@ impl SimConfig {
         }
         if self.forecast.monitor_interval_s <= 0.0 {
             return Err("monitor_interval_s must be positive".into());
+        }
+        let fl = &self.faults;
+        for (name, rate) in [
+            ("faults.crash_rate_per_host_day", fl.crash_rate_per_host_day),
+            ("faults.dropout_rate_per_day", fl.dropout_rate_per_day),
+            ("faults.corruption_rate_per_day", fl.corruption_rate_per_day),
+            ("faults.forecast_fault_rate_per_day", fl.forecast_fault_rate_per_day),
+        ] {
+            if !rate.is_finite() || rate < 0.0 {
+                return Err(format!("{name} must be finite and >= 0"));
+            }
+        }
+        for (name, dur) in [
+            ("faults.crash_downtime_mean_s", fl.crash_downtime_mean_s),
+            ("faults.dropout_duration_mean_s", fl.dropout_duration_mean_s),
+            ("faults.corruption_duration_mean_s", fl.corruption_duration_mean_s),
+            ("faults.forecast_fault_duration_mean_s", fl.forecast_fault_duration_mean_s),
+            ("faults.retry_base_delay_s", fl.retry_base_delay_s),
+            ("faults.retry_max_delay_s", fl.retry_max_delay_s),
+        ] {
+            if !dur.is_finite() || dur <= 0.0 {
+                return Err(format!("{name} must be finite and positive"));
+            }
+        }
+        if fl.retry_base_delay_s > fl.retry_max_delay_s {
+            return Err("faults.retry_base_delay_s must be <= retry_max_delay_s".into());
+        }
+        if !(0.0..=1.0).contains(&fl.dropout_coverage) {
+            return Err("faults.dropout_coverage must be in [0,1]".into());
+        }
+        if !(0.0..1.0).contains(&fl.retry_jitter) {
+            return Err("faults.retry_jitter must be in [0,1)".into());
+        }
+        if fl.quarantine_strikes == 0 {
+            return Err("faults.quarantine_strikes must be >= 1".into());
+        }
+        if fl.quarantine_backoff_ticks == 0 || fl.quarantine_max_backoff_ticks == 0 {
+            return Err("faults.quarantine backoff ticks must be >= 1".into());
         }
         Ok(())
     }
@@ -767,6 +950,44 @@ mod tests {
         let mut c = SimConfig::small();
         let j = Json::parse(r#"{"sched":{"reservations":0}}"#).unwrap();
         assert!(c.apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn fault_defaults_are_inert_and_json_overrides_apply() {
+        let c = SimConfig::small();
+        assert!(c.faults.is_inert(), "default config must inject nothing");
+        let mut c = SimConfig::small();
+        let j = Json::parse(
+            r#"{"faults":{"crash_rate_per_host_day":0.5,"crash_downtime_mean_s":900,
+                          "dropout_rate_per_day":4,"dropout_coverage":0.5,
+                          "corruption_rate_per_day":2,
+                          "forecast_fault_rate_per_day":1,
+                          "retry_base_delay_s":10,"retry_max_delay_s":600,
+                          "retry_jitter":0.25,"max_crash_retries":3,
+                          "quarantine_strikes":2,"quarantine_backoff_ticks":8,
+                          "quarantine_max_backoff_ticks":32}}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert!(!c.faults.is_inert());
+        assert!((c.faults.crash_rate_per_host_day - 0.5).abs() < 1e-12);
+        assert!((c.faults.crash_downtime_mean_s - 900.0).abs() < 1e-12);
+        assert!((c.faults.dropout_rate_per_day - 4.0).abs() < 1e-12);
+        assert!((c.faults.dropout_coverage - 0.5).abs() < 1e-12);
+        assert_eq!(c.faults.max_crash_retries, 3);
+        assert_eq!(c.faults.quarantine_strikes, 2);
+        assert_eq!(c.faults.quarantine_backoff_ticks, 8);
+        // invalid values are rejected by validate()
+        for bad in [
+            r#"{"faults":{"crash_rate_per_host_day":-1}}"#,
+            r#"{"faults":{"dropout_coverage":1.5}}"#,
+            r#"{"faults":{"retry_jitter":1.0}}"#,
+            r#"{"faults":{"retry_base_delay_s":100,"retry_max_delay_s":10}}"#,
+            r#"{"faults":{"quarantine_strikes":0}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(SimConfig::small().apply_json(&j).is_err(), "{bad} accepted");
+        }
     }
 
     #[test]

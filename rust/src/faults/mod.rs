@@ -1,0 +1,346 @@
+//! Deterministic fault injection: compiles [`crate::config::FaultConfig`]
+//! into a seeded [`FaultPlan`] — host crash/recover windows, telemetry
+//! dropout/corruption windows and forecaster fault windows — that the
+//! engine primes onto the event queue alongside arrivals.
+//!
+//! Everything here is a pure function of `(config, seed, horizon)`:
+//! window times come from per-purpose [`Pcg`] streams forked off the run
+//! seed, and per-window component coverage is a seeded hash of the
+//! component id, so a faulted run is exactly as reproducible as a
+//! healthy one — bit-identical across `ZOE_WORKERS`/`ZOE_LANES` sweeps,
+//! both engine modes, and repeated runs. An inert config (all rates
+//! zero) compiles to an *empty* plan: the engine then pushes no fault
+//! events and touches no fault state, keeping its `RunReport` bit-for-bit
+//! identical to a build without this module (tests/fault_determinism.rs).
+//!
+//! The graceful-degradation half lives with the subsystems it protects:
+//! host up/down state in `cluster`, the non-finite sample guard in
+//! `monitor`, the quarantine ladder in `forecast::quarantine`, and the
+//! retry/backoff pipeline in `sim::engine` (which also owns the
+//! [`backoff_delay`] schedule defined here).
+
+use crate::config::FaultConfig;
+use crate::util::rng::Pcg;
+use crate::workload::{ComponentId, HostId};
+
+/// Stream id separating fault-plan draws from every other consumer of
+/// the run seed (workload generation uses the seed directly).
+const FAULT_STREAM: u64 = 0xFA_17;
+
+/// One injected host outage: the host crashes at `crash_at` (every
+/// placement on it is killed) and rejoins the capacity indexes at
+/// `recover_at`. Windows for the same host never overlap.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CrashWindow {
+    pub host: HostId,
+    pub crash_at: f64,
+    pub recover_at: f64,
+}
+
+/// What a telemetry fault window does to covered components' samples.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TelemetryFault {
+    /// Samples are silently lost: the monitor records nothing and the
+    /// series goes stale.
+    Dropout,
+    /// Samples arrive non-finite (NaN): `Monitor::record`'s guard drops
+    /// them — same staleness, plus the once-per-component error log and
+    /// the dropped-sample counter.
+    Corruption,
+}
+
+/// A telemetry fault window: between `start` and `end`, components
+/// covered by the seeded hash lose their monitor samples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetryWindow {
+    pub start: f64,
+    pub end: f64,
+    pub kind: TelemetryFault,
+    /// Fraction of components covered, in [0,1].
+    pub coverage: f64,
+    /// Per-window hash salt: which components are covered differs from
+    /// window to window but is fixed within one.
+    pub salt: u64,
+}
+
+impl TelemetryWindow {
+    /// Is component `c` covered by this window?
+    pub fn covers(&self, c: ComponentId) -> bool {
+        covered(c as u64, self.salt, self.coverage)
+    }
+}
+
+/// A forecaster fault window: between `start` and `end`, every model
+/// forecast comes back non-finite (simulated numerical failure),
+/// driving covered series onto the quarantine ladder.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ForecastFaultWindow {
+    pub start: f64,
+    pub end: f64,
+}
+
+/// The compiled, fully deterministic fault schedule for one run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Host outages, host-major then chronological per host.
+    pub crashes: Vec<CrashWindow>,
+    /// Telemetry windows, dropouts first then corruptions, each
+    /// chronological and non-overlapping within its kind.
+    pub telemetry: Vec<TelemetryWindow>,
+    /// Forecaster fault windows, chronological, non-overlapping.
+    pub forecast: Vec<ForecastFaultWindow>,
+}
+
+impl FaultPlan {
+    /// No injected faults at all — the engine skips the fault layer
+    /// entirely (no events, no state, bit-identical reports).
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty() && self.telemetry.is_empty() && self.forecast.is_empty()
+    }
+
+    /// Total number of events this plan will prime (each window
+    /// contributes its start and end).
+    pub fn event_count(&self) -> usize {
+        2 * (self.crashes.len() + self.telemetry.len() + self.forecast.len())
+    }
+
+    /// Compile the config into a concrete schedule over `[0, horizon_s]`
+    /// for a cluster of `hosts` machines. `min_window_s` floors every
+    /// window length (the engine passes the monitor interval, so no
+    /// window closes inside the tick that opened it). Returns the empty
+    /// plan for an inert config or when `ZOE_FAULTS=off`.
+    pub fn compile(
+        cfg: &FaultConfig,
+        hosts: usize,
+        seed: u64,
+        horizon_s: f64,
+        min_window_s: f64,
+    ) -> FaultPlan {
+        if cfg.is_inert() || !injection_enabled() || horizon_s <= 0.0 {
+            return FaultPlan::default();
+        }
+        let mut root = Pcg::new(seed, FAULT_STREAM);
+        let mut plan = FaultPlan::default();
+        // Host crashes: an independent renewal process per host, so one
+        // host's schedule never perturbs another's.
+        if cfg.crash_rate_per_host_day > 0.0 {
+            let gap_mean = 86_400.0 / cfg.crash_rate_per_host_day;
+            let mut crash_rng = root.fork(1);
+            for host in 0..hosts {
+                let mut rng = crash_rng.fork(host as u64);
+                let mut t = rng.exponential(gap_mean);
+                while t < horizon_s {
+                    let downtime = rng.exponential(cfg.crash_downtime_mean_s).max(min_window_s);
+                    plan.crashes.push(CrashWindow {
+                        host,
+                        crash_at: t,
+                        recover_at: t + downtime,
+                    });
+                    t += downtime + rng.exponential(gap_mean).max(min_window_s);
+                }
+            }
+        }
+        let mut telemetry_windows = |rng: &mut Pcg,
+                                     rate_per_day: f64,
+                                     duration_mean: f64,
+                                     kind: TelemetryFault,
+                                     out: &mut Vec<TelemetryWindow>| {
+            if rate_per_day <= 0.0 {
+                return;
+            }
+            let gap_mean = 86_400.0 / rate_per_day;
+            let mut t = rng.exponential(gap_mean);
+            while t < horizon_s {
+                let dur = rng.exponential(duration_mean).max(min_window_s);
+                out.push(TelemetryWindow {
+                    start: t,
+                    end: t + dur,
+                    kind,
+                    coverage: cfg.dropout_coverage,
+                    salt: rng.next_u64(),
+                });
+                t += dur + rng.exponential(gap_mean).max(min_window_s);
+            }
+        };
+        let mut drop_rng = root.fork(2);
+        telemetry_windows(
+            &mut drop_rng,
+            cfg.dropout_rate_per_day,
+            cfg.dropout_duration_mean_s,
+            TelemetryFault::Dropout,
+            &mut plan.telemetry,
+        );
+        let mut corrupt_rng = root.fork(3);
+        telemetry_windows(
+            &mut corrupt_rng,
+            cfg.corruption_rate_per_day,
+            cfg.corruption_duration_mean_s,
+            TelemetryFault::Corruption,
+            &mut plan.telemetry,
+        );
+        if cfg.forecast_fault_rate_per_day > 0.0 {
+            let gap_mean = 86_400.0 / cfg.forecast_fault_rate_per_day;
+            let mut rng = root.fork(4);
+            let mut t = rng.exponential(gap_mean);
+            while t < horizon_s {
+                let dur = rng.exponential(cfg.forecast_fault_duration_mean_s).max(min_window_s);
+                plan.forecast.push(ForecastFaultWindow { start: t, end: t + dur });
+                t += dur + rng.exponential(gap_mean).max(min_window_s);
+            }
+        }
+        plan
+    }
+}
+
+/// Deterministic exponential backoff with seeded jitter for attempt
+/// `attempt` (1-based) of re-enqueueing crash-displaced application
+/// `app`. Derived from `(seed, app, attempt)` alone — independent of
+/// event interleaving, worker count and engine mode — so retry times
+/// are as reproducible as the rest of the run.
+pub fn backoff_delay(cfg: &FaultConfig, seed: u64, app: usize, attempt: u32) -> f64 {
+    let exp = attempt.saturating_sub(1).min(32);
+    let base = (cfg.retry_base_delay_s * f64::from(1u32 << exp.min(30)))
+        .min(cfg.retry_max_delay_s);
+    let mut rng = Pcg::new(
+        seed ^ FAULT_STREAM.rotate_left(32),
+        ((app as u64) << 8) | u64::from(attempt & 0xFF),
+    );
+    let jitter = 1.0 + cfg.retry_jitter * (2.0 * rng.f64() - 1.0);
+    base * jitter
+}
+
+/// `ZOE_FAULTS=off|0|false` force-disables injection (the compiled plan
+/// is empty) regardless of the config — the A/B switch for comparing a
+/// chaos config against its healthy twin without editing it.
+fn injection_enabled() -> bool {
+    match std::env::var("ZOE_FAULTS") {
+        Ok(v) => !matches!(v.to_ascii_lowercase().as_str(), "off" | "0" | "false"),
+        Err(_) => true,
+    }
+}
+
+/// Seeded membership hash: maps `x` (a component id or series key) under
+/// `salt` to a uniform draw in [0,1) and compares against `coverage`.
+/// SplitMix64 finalizer — avalanche is what matters here, not sequence
+/// quality, since each (x, salt) pair is hashed exactly once.
+fn covered(x: u64, salt: u64, coverage: f64) -> bool {
+    let mut z = (x ^ salt).wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    ((z >> 11) as f64) * (1.0 / (1u64 << 53) as f64) < coverage
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chaos_cfg() -> FaultConfig {
+        FaultConfig {
+            crash_rate_per_host_day: 2.0,
+            dropout_rate_per_day: 6.0,
+            corruption_rate_per_day: 3.0,
+            forecast_fault_rate_per_day: 2.0,
+            ..FaultConfig::default()
+        }
+    }
+
+    #[test]
+    fn inert_config_compiles_to_empty_plan() {
+        let plan = FaultPlan::compile(&FaultConfig::default(), 8, 42, 86_400.0, 60.0);
+        assert!(plan.is_empty());
+        assert_eq!(plan.event_count(), 0);
+    }
+
+    #[test]
+    fn compile_is_deterministic_in_the_seed() {
+        let cfg = chaos_cfg();
+        let a = FaultPlan::compile(&cfg, 8, 42, 86_400.0, 60.0);
+        let b = FaultPlan::compile(&cfg, 8, 42, 86_400.0, 60.0);
+        assert_eq!(a, b, "same seed must give the identical plan");
+        assert!(!a.is_empty());
+        let c = FaultPlan::compile(&cfg, 8, 43, 86_400.0, 60.0);
+        assert_ne!(a, c, "different seeds must diverge");
+    }
+
+    #[test]
+    fn windows_are_well_formed() {
+        let cfg = chaos_cfg();
+        let horizon = 7.0 * 86_400.0;
+        let plan = FaultPlan::compile(&cfg, 6, 7, horizon, 60.0);
+        for w in &plan.crashes {
+            assert!(w.host < 6);
+            assert!(w.crash_at >= 0.0 && w.crash_at < horizon);
+            assert!(w.recover_at >= w.crash_at + 60.0, "downtime floored at a tick");
+        }
+        // per-host crash windows never overlap
+        for h in 0..6 {
+            let mut last_end = f64::NEG_INFINITY;
+            for w in plan.crashes.iter().filter(|w| w.host == h) {
+                assert!(w.crash_at > last_end, "host {h} windows overlap");
+                last_end = w.recover_at;
+            }
+        }
+        for w in &plan.telemetry {
+            assert!(w.start >= 0.0 && w.start < horizon);
+            assert!(w.end >= w.start + 60.0);
+            assert!((0.0..=1.0).contains(&w.coverage));
+        }
+        for w in &plan.forecast {
+            assert!(w.start >= 0.0 && w.start < horizon);
+            assert!(w.end >= w.start + 60.0);
+        }
+        assert_eq!(
+            plan.event_count(),
+            2 * (plan.crashes.len() + plan.telemetry.len() + plan.forecast.len())
+        );
+    }
+
+    #[test]
+    fn coverage_hash_respects_bounds_and_rate() {
+        let all = TelemetryWindow {
+            start: 0.0,
+            end: 1.0,
+            kind: TelemetryFault::Dropout,
+            coverage: 1.0,
+            salt: 99,
+        };
+        let none = TelemetryWindow { coverage: 0.0, ..all.clone() };
+        let half = TelemetryWindow { coverage: 0.5, ..all.clone() };
+        let n = 10_000usize;
+        let hit = (0..n).filter(|&c| half.covers(c)).count();
+        for c in 0..n {
+            assert!(all.covers(c));
+            assert!(!none.covers(c));
+        }
+        let frac = hit as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.03, "coverage 0.5 hit {frac}");
+        // membership is stable per window but differs across salts
+        let other = TelemetryWindow { salt: 100, ..half.clone() };
+        let differs = (0..n).filter(|&c| half.covers(c) != other.covers(c)).count();
+        assert!(differs > n / 4, "salts must reshuffle coverage ({differs} differ)");
+    }
+
+    #[test]
+    fn backoff_grows_caps_and_jitters_deterministically() {
+        let cfg = FaultConfig { retry_jitter: 0.5, ..FaultConfig::default() };
+        let d1 = backoff_delay(&cfg, 42, 7, 1);
+        let d5 = backoff_delay(&cfg, 42, 7, 5);
+        assert!(d1 >= cfg.retry_base_delay_s * 0.5 && d1 <= cfg.retry_base_delay_s * 1.5);
+        assert!(d5 > d1, "backoff must grow with attempts ({d1} vs {d5})");
+        // the cap holds even at absurd attempt counts (no overflow)
+        let dmax = backoff_delay(&cfg, 42, 7, 200);
+        assert!(dmax <= cfg.retry_max_delay_s * 1.5);
+        assert!(dmax.is_finite());
+        // deterministic: same inputs, same delay; inputs matter
+        assert_eq!(backoff_delay(&cfg, 42, 7, 3), backoff_delay(&cfg, 42, 7, 3));
+        assert_ne!(backoff_delay(&cfg, 42, 7, 3), backoff_delay(&cfg, 42, 8, 3));
+        assert_ne!(backoff_delay(&cfg, 42, 7, 3), backoff_delay(&cfg, 43, 7, 3));
+    }
+
+    #[test]
+    fn zero_horizon_compiles_empty() {
+        let plan = FaultPlan::compile(&chaos_cfg(), 4, 42, 0.0, 60.0);
+        assert!(plan.is_empty());
+    }
+}

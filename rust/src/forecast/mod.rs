@@ -52,6 +52,7 @@ pub mod gp_incremental;
 pub mod gp_native;
 pub mod gp_pjrt;
 pub mod last_value;
+pub mod quarantine;
 
 use crate::config::{ForecasterKind, KernelKind};
 
@@ -69,6 +70,11 @@ use crate::config::{ForecasterKind, KernelKind};
 pub struct SeriesRef<'a> {
     pub key: u64,
     pub seq: u64,
+    /// True when the monitor flagged this series stale (telemetry
+    /// dropout, or its latest sample was rejected as non-finite): the
+    /// window data is real but *old*, so health-tracking consumers
+    /// (`quarantine::HealthTracker`) discount forecasts drawn from it.
+    pub stale: bool,
     pub data: &'a [f64],
 }
 
@@ -79,12 +85,17 @@ impl<'a> SeriesRef<'a> {
 
     /// Identity-free view.
     pub fn anon(data: &'a [f64]) -> Self {
-        SeriesRef { key: Self::ANON, seq: 0, data }
+        SeriesRef { key: Self::ANON, seq: 0, stale: false, data }
     }
 
     /// View with a stable identity and sample counter.
     pub fn keyed(key: u64, seq: u64, data: &'a [f64]) -> Self {
-        SeriesRef { key, seq, data }
+        SeriesRef { key, seq, stale: false, data }
+    }
+
+    /// Same view with the staleness flag set from the monitor.
+    pub fn with_stale(self, stale: bool) -> Self {
+        SeriesRef { stale, ..self }
     }
 
     /// Series key for a component's CPU history.
@@ -302,6 +313,11 @@ mod tests {
         let k = SeriesRef::keyed(SeriesRef::cpu_key(7), 42, &owned[1]);
         assert_eq!(k.key, 14);
         assert_eq!(k.seq, 42);
+        assert!(!k.stale, "constructors default to fresh");
+        let s = k.with_stale(true);
+        assert!(s.stale);
+        assert_eq!(s.key, k.key);
+        assert_eq!(s.data, k.data);
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Per-series forecast health tracking (fault-injection PR): quarantine
+//! series whose forecasts keep failing and serve graded fallbacks while
+//! they are benched.
+//!
+//! The engine screens every shaper-tick forecast batch through a
+//! [`HealthTracker`] *after* the model runs. A forecast is **bad** when
+//! its mean or variance is non-finite (numerical failure, injected
+//! forecaster fault) or when its input series is stale (telemetry
+//! dropout — the window data is real but old, see `Monitor::mark_stale`).
+//! Bad forecasts are never forwarded: they are replaced on the spot by a
+//! [`naive_forecast`] over the same window, so a single NaN can't reach
+//! the shaper's β-buffer arithmetic.
+//!
+//! Repeated badness escalates. After `strikes_to_quarantine` consecutive
+//! bad ticks a series is quarantined onto the degradation ladder:
+//!
+//! * **level 0** — trust the model (healthy).
+//! * **level 1** — last-value fallback ([`naive_forecast`]) every tick.
+//! * **level 2** — [`Action::KeepAllocation`]: don't forecast a demand at
+//!   all; the engine leaves the component's current allocation in place.
+//!
+//! While quarantined the tracker serves the ladder fallback and counts
+//! down `backoff` evaluated ticks to the next **probe**: the model's
+//! output is re-examined, and a good probe fully recovers the series to
+//! level 0 while a bad one escalates the ladder and doubles the backoff
+//! (capped at `max_backoff`). All state is keyed by the stable series key
+//! (`SeriesRef::cpu_key`/`mem_key`) in a `BTreeMap`, so screening is
+//! deterministic in batch order and independent of worker count — the
+//! run-level bit-for-bit reproducibility discipline extends through the
+//! fault layer.
+
+use std::collections::BTreeMap;
+
+use super::{naive_forecast, Forecast, SeriesRef};
+
+/// What the engine should do with one screened forecast.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Forward the (possibly fallback-replaced) forecast to the shaper.
+    Use,
+    /// Ladder level 2: skip the demand entry entirely and keep the
+    /// component's current allocation this tick.
+    KeepAllocation,
+}
+
+/// Per-series quarantine state. `level` is the ladder rung (0 healthy,
+/// 1 last-value, 2 keep-allocation); `probe_in` counts evaluated ticks
+/// until the next probe while quarantined; `backoff` is the current
+/// probe spacing.
+#[derive(Debug, Clone, Copy, Default)]
+struct SeriesHealth {
+    strikes: u32,
+    level: u8,
+    probe_in: u32,
+    backoff: u32,
+}
+
+/// Screens forecast batches and tracks per-series health (module docs).
+#[derive(Debug)]
+pub struct HealthTracker {
+    strikes_to_quarantine: u32,
+    base_backoff: u32,
+    max_backoff: u32,
+    state: BTreeMap<u64, SeriesHealth>,
+    quarantined: u64,
+    fallback_ticks: u64,
+    recoveries: u64,
+}
+
+impl HealthTracker {
+    /// Tracker with the config knobs (`faults.quarantine_*`). All three
+    /// are clamped to ≥ 1, matching config validation.
+    pub fn new(strikes_to_quarantine: u32, base_backoff: u32, max_backoff: u32) -> Self {
+        let base = base_backoff.max(1);
+        HealthTracker {
+            strikes_to_quarantine: strikes_to_quarantine.max(1),
+            base_backoff: base,
+            max_backoff: max_backoff.max(base),
+            state: BTreeMap::new(),
+            quarantined: 0,
+            fallback_ticks: 0,
+            recoveries: 0,
+        }
+    }
+
+    /// Screen one shaper tick's forecast batch: sanitize/replace each
+    /// forecast in place and emit one [`Action`] per series into
+    /// `actions` (cleared first, kept aligned with `series`).
+    pub fn screen(
+        &mut self,
+        series: &[SeriesRef<'_>],
+        forecasts: &mut [Forecast],
+        actions: &mut Vec<Action>,
+    ) {
+        debug_assert_eq!(series.len(), forecasts.len(), "batch must align");
+        actions.clear();
+        actions.reserve(series.len());
+        for (s, f) in series.iter().zip(forecasts.iter_mut()) {
+            actions.push(self.step(s, f));
+        }
+    }
+
+    /// One series' state-machine step for this evaluated tick.
+    fn step(&mut self, s: &SeriesRef<'_>, f: &mut Forecast) -> Action {
+        let bad = !(f.mean.is_finite() && f.var.is_finite()) || s.stale;
+        if s.key == SeriesRef::ANON {
+            // Identity-free batches can't carry state: sanitize only.
+            if bad {
+                *f = naive_forecast(s.data);
+                self.fallback_ticks += 1;
+            }
+            return Action::Use;
+        }
+        let h = self.state.entry(s.key).or_default();
+        if h.level == 0 {
+            if !bad {
+                h.strikes = 0;
+                return Action::Use;
+            }
+            h.strikes += 1;
+            if h.strikes >= self.strikes_to_quarantine {
+                h.level = 1;
+                h.backoff = self.base_backoff;
+                h.probe_in = h.backoff;
+                self.quarantined += 1;
+            }
+            // Transient strike or fresh quarantine: either way a bad
+            // forecast is never forwarded.
+            *f = naive_forecast(s.data);
+            self.fallback_ticks += 1;
+            return Action::Use;
+        }
+        if h.probe_in > 1 {
+            // Benched: serve the ladder fallback, count down to probe.
+            h.probe_in -= 1;
+        } else if !bad {
+            // Probe succeeded: full recovery.
+            *h = SeriesHealth::default();
+            self.recoveries += 1;
+            return Action::Use;
+        } else {
+            // Probe failed: escalate the ladder, double the backoff.
+            h.level = (h.level + 1).min(2);
+            h.backoff = h.backoff.saturating_mul(2).min(self.max_backoff);
+            h.probe_in = h.backoff;
+        }
+        let level = h.level;
+        self.fallback_ticks += 1;
+        if level >= 2 {
+            Action::KeepAllocation
+        } else {
+            *f = naive_forecast(s.data);
+            Action::Use
+        }
+    }
+
+    /// Ladder level for a series key (0 when never seen / healthy).
+    pub fn level(&self, key: u64) -> u8 {
+        self.state.get(&key).map_or(0, |h| h.level)
+    }
+
+    /// True when the series is currently on the ladder (level ≥ 1).
+    pub fn is_quarantined(&self, key: u64) -> bool {
+        self.level(key) > 0
+    }
+
+    /// Series currently quarantined.
+    pub fn quarantined_now(&self) -> u64 {
+        self.state.values().filter(|h| h.level > 0).count() as u64
+    }
+
+    /// Quarantine entries over the run (a series re-entering counts again).
+    pub fn quarantined_total(&self) -> u64 {
+        self.quarantined
+    }
+
+    /// Series-ticks served by a fallback (sanitize, last-value, or
+    /// keep-allocation) instead of the model's own output.
+    pub fn fallback_ticks(&self) -> u64 {
+        self.fallback_ticks
+    }
+
+    /// Successful probes that returned a series to level 0.
+    pub fn recoveries(&self) -> u64 {
+        self.recoveries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: Forecast = Forecast { mean: 0.4, var: 0.01 };
+    const BAD: Forecast = Forecast { mean: f64::NAN, var: 0.01 };
+
+    /// Drive one series one tick through the tracker.
+    fn tick(
+        t: &mut HealthTracker,
+        key: u64,
+        stale: bool,
+        f: Forecast,
+        data: &[f64],
+    ) -> (Forecast, Action) {
+        let series = [SeriesRef::keyed(key, 0, data).with_stale(stale)];
+        let mut fs = [f];
+        let mut actions = Vec::new();
+        t.screen(&series, &mut fs, &mut actions);
+        (fs[0], actions[0])
+    }
+
+    #[test]
+    fn healthy_series_pass_through_untouched() {
+        let mut t = HealthTracker::new(3, 4, 64);
+        let data = [0.3, 0.4, 0.5];
+        for _ in 0..10 {
+            let (f, a) = tick(&mut t, 2, false, GOOD, &data);
+            assert_eq!(a, Action::Use);
+            assert_eq!(f, GOOD, "healthy forecasts are forwarded bit-for-bit");
+        }
+        assert_eq!(t.fallback_ticks(), 0);
+        assert_eq!(t.quarantined_total(), 0);
+    }
+
+    #[test]
+    fn transient_failure_is_sanitized_but_not_quarantined() {
+        let mut t = HealthTracker::new(3, 4, 64);
+        let data = [0.3, 0.4, 0.5];
+        let (f, a) = tick(&mut t, 2, false, BAD, &data);
+        assert_eq!(a, Action::Use);
+        assert!(f.mean.is_finite(), "NaN never reaches the shaper");
+        assert_eq!(f.mean, 0.5, "last-value stand-in");
+        assert_eq!(t.fallback_ticks(), 1);
+        assert!(!t.is_quarantined(2));
+        // one good tick resets the strike count: two more bads don't trip
+        tick(&mut t, 2, false, GOOD, &data);
+        tick(&mut t, 2, false, BAD, &data);
+        tick(&mut t, 2, false, BAD, &data);
+        assert!(!t.is_quarantined(2), "strikes reset by the good tick");
+        assert_eq!(t.quarantined_total(), 0);
+    }
+
+    #[test]
+    fn stale_input_counts_as_a_strike_even_with_finite_output() {
+        let mut t = HealthTracker::new(2, 4, 64);
+        let data = [0.3, 0.4];
+        let (f, a) = tick(&mut t, 6, true, GOOD, &data);
+        assert_eq!(a, Action::Use);
+        assert_eq!(f.mean, 0.4, "stale-input forecast replaced by last value");
+        let _ = tick(&mut t, 6, true, GOOD, &data);
+        assert!(t.is_quarantined(6), "two stale ticks trip a 2-strike tracker");
+    }
+
+    #[test]
+    fn ladder_escalates_backoff_doubles_and_probe_recovers() {
+        // strikes=1: first bad tick quarantines. backoff=2, cap=8.
+        let mut t = HealthTracker::new(1, 2, 8);
+        let data = [0.1, 0.2, 0.3];
+        let key = 10;
+        tick(&mut t, key, false, BAD, &data);
+        assert_eq!(t.level(key), 1);
+        assert_eq!(t.quarantined_total(), 1);
+        // backoff 2: one benched tick, then the probe tick
+        let (f, a) = tick(&mut t, key, false, BAD, &data);
+        assert_eq!((f.mean, a), (0.3, Action::Use), "level 1 serves last-value");
+        tick(&mut t, key, false, BAD, &data); // failed probe -> level 2, backoff 4
+        assert_eq!(t.level(key), 2);
+        for _ in 0..3 {
+            let (_, a) = tick(&mut t, key, false, BAD, &data);
+            assert_eq!(a, Action::KeepAllocation, "level 2 skips the demand");
+        }
+        tick(&mut t, key, false, BAD, &data); // failed probe -> backoff 8 (cap)
+        assert_eq!(t.level(key), 2, "ladder tops out at level 2");
+        // ride out backoff 8: 7 benched ticks, then a *good* probe
+        for _ in 0..7 {
+            let (_, a) = tick(&mut t, key, false, BAD, &data);
+            assert_eq!(a, Action::KeepAllocation);
+        }
+        let (f, a) = tick(&mut t, key, false, GOOD, &data);
+        assert_eq!(a, Action::Use);
+        assert_eq!(f, GOOD, "good probe forwards the model forecast");
+        assert_eq!(t.level(key), 0);
+        assert_eq!(t.recoveries(), 1);
+        assert_eq!(t.quarantined_now(), 0);
+        // re-entry counts as a fresh quarantine
+        tick(&mut t, key, false, BAD, &data);
+        assert_eq!(t.quarantined_total(), 2);
+    }
+
+    #[test]
+    fn anon_series_are_sanitized_without_growing_state() {
+        let mut t = HealthTracker::new(1, 2, 8);
+        let data = [0.7, 0.8];
+        for _ in 0..5 {
+            let (f, a) = tick(&mut t, SeriesRef::ANON, false, BAD, &data);
+            assert_eq!(a, Action::Use);
+            assert_eq!(f.mean, 0.8);
+        }
+        assert_eq!(t.quarantined_total(), 0, "anon series never quarantine");
+        assert_eq!(t.state.len(), 0, "no state for identity-free batches");
+        assert_eq!(t.fallback_ticks(), 5);
+    }
+
+    #[test]
+    fn independent_series_track_independently() {
+        let mut t = HealthTracker::new(1, 2, 8);
+        let data = [0.5];
+        tick(&mut t, 0, false, BAD, &data);
+        let (f, a) = tick(&mut t, 1, false, GOOD, &data);
+        assert_eq!((f, a), (GOOD, Action::Use));
+        assert!(t.is_quarantined(0));
+        assert!(!t.is_quarantined(1));
+        assert_eq!(t.quarantined_now(), 1);
+    }
+}

@@ -24,6 +24,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod faults;
 pub mod forecast;
 pub mod metrics;
 pub mod monitor;

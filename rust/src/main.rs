@@ -106,6 +106,23 @@ fn sim_args(name: &str, about: &str) -> Args {
             "",
             "time advance: fixed-tick|event-driven (quiet-tick elision; identical reports)",
         )
+        .opt(
+            "crash-rate",
+            "",
+            "injected host crashes per host per day (seeded; ZOE_FAULTS=off disables)",
+        )
+        .opt(
+            "crash-downtime",
+            "",
+            "mean injected host downtime, seconds (default 1800)",
+        )
+        .opt("dropout-rate", "", "telemetry dropout windows per day (seeded)")
+        .opt("corruption-rate", "", "telemetry corruption (NaN) windows per day (seeded)")
+        .opt(
+            "forecast-fault-rate",
+            "",
+            "forecaster fault windows per day (non-finite model output; seeded)",
+        )
         .opt("log", "info", "log level: error|warn|info|debug")
 }
 
@@ -155,6 +172,21 @@ fn load_cfg(a: &Args) -> Result<SimConfig, String> {
     if !a.get("engine-mode").is_empty() {
         cfg.engine_mode = EngineMode::parse(a.get("engine-mode"))
             .ok_or_else(|| format!("bad --engine-mode {}", a.get("engine-mode")))?;
+    }
+    if !a.get("crash-rate").is_empty() {
+        cfg.faults.crash_rate_per_host_day = a.get_f64("crash-rate")?;
+    }
+    if !a.get("crash-downtime").is_empty() {
+        cfg.faults.crash_downtime_mean_s = a.get_f64("crash-downtime")?;
+    }
+    if !a.get("dropout-rate").is_empty() {
+        cfg.faults.dropout_rate_per_day = a.get_f64("dropout-rate")?;
+    }
+    if !a.get("corruption-rate").is_empty() {
+        cfg.faults.corruption_rate_per_day = a.get_f64("corruption-rate")?;
+    }
+    if !a.get("forecast-fault-rate").is_empty() {
+        cfg.faults.forecast_fault_rate_per_day = a.get_f64("forecast-fault-rate")?;
     }
     cfg.validate()?;
     Ok(cfg)

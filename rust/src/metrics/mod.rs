@@ -62,6 +62,10 @@ pub struct Metrics {
     pub app_preemptions: u64,
     /// controlled elastic-component preemptions.
     pub elastic_preemptions: u64,
+    /// applications whose shaping was permanently disabled after
+    /// exhausting their failure / crash-retry budget (the formerly
+    /// silent give-up path).
+    pub gave_up: u64,
     /// work units destroyed by kills/preemptions.
     pub wasted_work: f64,
     /// allocation-fraction samples (cluster level), for utilization plots.
@@ -92,6 +96,7 @@ impl Metrics {
             oom_events: 0,
             app_preemptions: 0,
             elastic_preemptions: 0,
+            gave_up: 0,
             wasted_work: 0.0,
             alloc_cpu_samples: Vec::new(),
             alloc_mem_samples: Vec::new(),
@@ -188,6 +193,7 @@ impl Metrics {
             oom_events: self.oom_events,
             app_preemptions: self.app_preemptions,
             elastic_preemptions: self.elastic_preemptions,
+            gave_up: self.gave_up,
             wasted_work: self.wasted_work,
             mean_alloc_cpu: crate::util::stats::mean(&self.alloc_cpu_samples),
             mean_alloc_mem: crate::util::stats::mean(&self.alloc_mem_samples),
@@ -200,7 +206,47 @@ impl Metrics {
             // finalized outside a run legitimately reports 0 / complete
             events: 0,
             truncated: false,
+            // likewise copied in by the engine after the loop
+            faults: FaultStats::default(),
         }
+    }
+}
+
+/// Fault-injection accounting for one run (`faults::FaultPlan`): what was
+/// injected and how the degradation machinery absorbed it. All-zero
+/// (`is_zero`) whenever the fault layer was inert, which keeps the
+/// summary free of fault noise on ordinary runs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultStats {
+    /// Host crash events dispatched.
+    pub crashes_injected: u64,
+    /// Host recovery events dispatched.
+    pub recoveries: u64,
+    /// Running/placed applications killed by host crashes.
+    pub apps_displaced: u64,
+    /// Crash-displaced re-enqueues performed after a backoff delay.
+    pub retries: u64,
+    /// Total backoff delay scheduled across those retries (seconds).
+    pub backoff_seconds: f64,
+    /// Applications that exhausted `max_crash_retries` and fell back to
+    /// unshaped (request-sized) execution.
+    pub crash_giveups: u64,
+    /// Reservation-scheduler start estimates voided by capacity loss.
+    pub reservations_voided: u64,
+    /// Telemetry samples suppressed by dropout windows or rejected as
+    /// non-finite by the monitor guard.
+    pub samples_dropped: u64,
+    /// Forecast-series quarantine entries (`forecast::quarantine`).
+    pub quarantined_series: u64,
+    /// Series-ticks served by a degradation-ladder fallback instead of
+    /// the model's own forecast.
+    pub fallback_ticks: u64,
+}
+
+impl FaultStats {
+    /// True when nothing fault-related happened (inert plan).
+    pub fn is_zero(&self) -> bool {
+        *self == FaultStats::default()
     }
 }
 
@@ -233,6 +279,10 @@ pub struct RunReport {
     pub oom_events: u64,
     pub app_preemptions: u64,
     pub elastic_preemptions: u64,
+    /// Applications that exhausted a retry/failure budget and now run
+    /// unshaped at request size (previously invisible: they only set an
+    /// internal `shaping_disabled` flag).
+    pub gave_up: u64,
     pub wasted_work: f64,
     pub mean_alloc_cpu: f64,
     pub mean_alloc_mem: f64,
@@ -247,17 +297,20 @@ pub struct RunReport {
     /// True when the run hit the engine's event cap and stopped early —
     /// a capped run used to be indistinguishable from a completed one.
     pub truncated: bool,
+    /// Fault-injection accounting; all-zero when the fault layer was
+    /// inert (the engine copies real counts in after the loop).
+    pub faults: FaultStats,
 }
 
 impl RunReport {
     /// Multi-line human summary.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "run '{}': {}/{} completed in {:.0}s sim-time{}\n\
              turnaround  med {:.0}s mean {:.0}s p75 {:.0}s max {:.0}s\n\
              wait        med {:.0}s mean {:.0}s max {:.0}s   stretch med {:.2} mean {:.2} max {:.2}\n\
              mem slack   med {:.3} mean {:.3}   cpu slack med {:.3} mean {:.3}\n\
-             failures    {:.2}% of apps ({} OOM events)  preemptions: {} full / {} elastic\n\
+             failures    {:.2}% of apps ({} OOM events)  preemptions: {} full / {} elastic; {} gave up\n\
              wasted work {:.0} units; mean alloc cpu {:.2} mem {:.2}; peak host usage {:.2}; {} forecasts\n\
              shadow err  med {:.0}s mean {:.0}s |mean| {:.0}s (n={})",
             self.name,
@@ -287,6 +340,7 @@ impl RunReport {
             self.oom_events,
             self.app_preemptions,
             self.elastic_preemptions,
+            self.gave_up,
             self.wasted_work,
             self.mean_alloc_cpu,
             self.mean_alloc_mem,
@@ -296,7 +350,26 @@ impl RunReport {
             self.shadow_error.mean,
             self.shadow_abs_error_mean,
             self.shadow_error.n,
-        )
+        );
+        if !self.faults.is_zero() {
+            let f = &self.faults;
+            s.push_str(&format!(
+                "\nfaults      {} crashes / {} recoveries; {} apps displaced, {} retries \
+                 ({:.0}s backoff), {} crash give-ups, {} reservations voided\n\
+                 degradation {} samples dropped; {} series quarantined, {} fallback ticks",
+                f.crashes_injected,
+                f.recoveries,
+                f.apps_displaced,
+                f.retries,
+                f.backoff_seconds,
+                f.crash_giveups,
+                f.reservations_voided,
+                f.samples_dropped,
+                f.quarantined_series,
+                f.fallback_ticks,
+            ));
+        }
+        s
     }
 
     /// JSON export for EXPERIMENTS.md regeneration.
@@ -327,6 +400,7 @@ impl RunReport {
             ("oom_events", Json::Num(self.oom_events as f64)),
             ("app_preemptions", Json::Num(self.app_preemptions as f64)),
             ("elastic_preemptions", Json::Num(self.elastic_preemptions as f64)),
+            ("gave_up", Json::Num(self.gave_up as f64)),
             ("wasted_work", Json::Num(self.wasted_work)),
             ("mean_alloc_cpu", Json::Num(self.mean_alloc_cpu)),
             ("mean_alloc_mem", Json::Num(self.mean_alloc_mem)),
@@ -335,6 +409,24 @@ impl RunReport {
             ("sim_time", Json::Num(self.sim_time)),
             ("events", Json::Num(self.events as f64)),
             ("truncated", Json::Bool(self.truncated)),
+            (
+                "faults",
+                obj(vec![
+                    ("crashes_injected", Json::Num(self.faults.crashes_injected as f64)),
+                    ("recoveries", Json::Num(self.faults.recoveries as f64)),
+                    ("apps_displaced", Json::Num(self.faults.apps_displaced as f64)),
+                    ("retries", Json::Num(self.faults.retries as f64)),
+                    ("backoff_seconds", Json::Num(self.faults.backoff_seconds)),
+                    ("crash_giveups", Json::Num(self.faults.crash_giveups as f64)),
+                    (
+                        "reservations_voided",
+                        Json::Num(self.faults.reservations_voided as f64),
+                    ),
+                    ("samples_dropped", Json::Num(self.faults.samples_dropped as f64)),
+                    ("quarantined_series", Json::Num(self.faults.quarantined_series as f64)),
+                    ("fallback_ticks", Json::Num(self.faults.fallback_ticks as f64)),
+                ]),
+            ),
             ("turnarounds_sample", num_arr(&sample(&self.turnarounds, 200))),
             ("mem_slacks_sample", num_arr(&sample(&self.mem_slacks, 200))),
         ])
@@ -465,6 +557,39 @@ mod tests {
         let s = m.report("hello", 5.0).summary();
         assert!(s.contains("hello"));
         assert!(s.contains("turnaround"));
+    }
+
+    #[test]
+    fn gave_up_and_fault_stats_surface_in_summary_and_json() {
+        let mut m = Metrics::new(4);
+        m.gave_up = 2;
+        let mut r = m.report("faulty", 50.0);
+        assert_eq!(r.gave_up, 2);
+        assert!(r.summary().contains("2 gave up"), "give-ups are no longer silent");
+        assert!(r.faults.is_zero(), "inert fault layer reports all-zero stats");
+        assert!(!r.summary().contains("faults "), "no fault noise on clean runs");
+        r.faults = FaultStats {
+            crashes_injected: 3,
+            recoveries: 3,
+            apps_displaced: 5,
+            retries: 7,
+            backoff_seconds: 420.0,
+            crash_giveups: 1,
+            reservations_voided: 2,
+            samples_dropped: 11,
+            quarantined_series: 4,
+            fallback_ticks: 99,
+        };
+        assert!(!r.faults.is_zero());
+        let s = r.summary();
+        assert!(s.contains("3 crashes"), "summary: {s}");
+        assert!(s.contains("4 series quarantined"), "summary: {s}");
+        let j = Json::parse(&r.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.get("gave_up").and_then(Json::as_f64), Some(2.0));
+        let f = j.get("faults").unwrap();
+        assert_eq!(f.get("crashes_injected").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(f.get("backoff_seconds").and_then(Json::as_f64), Some(420.0));
+        assert_eq!(f.get("fallback_ticks").and_then(Json::as_f64), Some(99.0));
     }
 
     #[test]

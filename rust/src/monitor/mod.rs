@@ -164,6 +164,16 @@ pub struct Monitor {
     slots: Vec<u32>,
     meta: Vec<SlotMeta>,
     samples_taken: u64,
+    /// Per-component staleness flag: set by [`Monitor::mark_stale`]
+    /// (telemetry dropout) or by the non-finite record guard, cleared by
+    /// the next successfully recorded sample. Surfaced to the forecast
+    /// layer through `SeriesRef::stale`.
+    stale: Vec<bool>,
+    /// Samples rejected by the non-finite guard (never enter a window).
+    nonfinite_dropped: u64,
+    /// Components already warned about — the guard logs once per
+    /// component, not once per poisoned sample.
+    nonfinite_logged: Vec<bool>,
 }
 
 impl Monitor {
@@ -180,6 +190,24 @@ impl Monitor {
             slots: vec![SLOT_NONE; num_components],
             meta: Vec::new(),
             samples_taken: 0,
+            stale: vec![false; num_components],
+            nonfinite_dropped: 0,
+            nonfinite_logged: vec![false; num_components],
+        }
+    }
+
+    /// Non-finite sample guard: count and drop, leaving the series window
+    /// untouched (a NaN in a window would poison every forecast drawn
+    /// from it). The series is flagged stale until a finite sample lands.
+    fn reject_nonfinite(&mut self, c: ComponentId, cpu_frac: f64, mem_frac: f64) {
+        self.nonfinite_dropped += 1;
+        self.stale[c] = true;
+        if !self.nonfinite_logged[c] {
+            self.nonfinite_logged[c] = true;
+            crate::error_log!(
+                "dropping non-finite utilization sample ({cpu_frac}, {mem_frac}) \
+                 for component {c}; further drops for it are silent"
+            );
         }
     }
 
@@ -198,8 +226,15 @@ impl Monitor {
 
     /// Record one (cpu, mem) utilization-fraction sample for a component.
     /// In-place arena write; allocation-free after the component's first
-    /// sample.
+    /// sample. Non-finite samples are dropped (counted, logged once per
+    /// component) rather than entering the window — see
+    /// [`Monitor::nonfinite_dropped`].
     pub fn record(&mut self, c: ComponentId, cpu_frac: f64, mem_frac: f64) {
+        if !(cpu_frac.is_finite() && mem_frac.is_finite()) {
+            self.reject_nonfinite(c, cpu_frac, mem_frac);
+            return;
+        }
+        self.stale[c] = false;
         let cap = self.cap;
         let region = self.region;
         let slot = self.slot_for(c);
@@ -248,6 +283,16 @@ impl Monitor {
         if cpu.is_empty() {
             return; // no samples: no slot assignment either (lazy-slot parity)
         }
+        if cpu.iter().zip(mem).any(|(a, b)| !(a.is_finite() && b.is_finite())) {
+            // Corrupted batch: fall back to sample-at-a-time so the
+            // non-finite guard (drop + stale flag + count) applies with
+            // exactly the per-sample semantics of repeated `record`.
+            for (&a, &b) in cpu.iter().zip(mem) {
+                self.record(c, a, b);
+            }
+            return;
+        }
+        self.stale[c] = false;
         let cap = self.cap;
         let region = self.region;
         let slot = self.slot_for(c);
@@ -296,6 +341,7 @@ impl Monitor {
     /// attempt is a fresh process with fresh behavior). The slot is kept;
     /// the epoch bump makes the new life's `seq` disjoint from the old.
     pub fn reset(&mut self, c: ComponentId) {
+        self.stale[c] = false; // new life, no carried-over staleness
         let s = self.slots[c];
         if s == SLOT_NONE {
             return;
@@ -359,6 +405,26 @@ impl Monitor {
     /// Total samples recorded over the run (monitor overhead metric).
     pub fn samples_taken(&self) -> u64 {
         self.samples_taken
+    }
+
+    /// Flag a component's series as stale without touching its window —
+    /// how telemetry dropouts are represented: the gap leaves no samples,
+    /// and the staleness travels to the forecast layer via
+    /// `SeriesRef::stale` so consumers can discount the (old) window.
+    pub fn mark_stale(&mut self, c: ComponentId) {
+        self.stale[c] = true;
+    }
+
+    /// True when the component's series is stale: its latest observation
+    /// was dropped (non-finite) or suppressed (telemetry dropout).
+    /// Cleared by the next successfully recorded sample.
+    pub fn is_stale(&self, c: ComponentId) -> bool {
+        self.stale[c]
+    }
+
+    /// Samples rejected by the non-finite guard over the run.
+    pub fn nonfinite_dropped(&self) -> u64 {
+        self.nonfinite_dropped
     }
 }
 
@@ -494,6 +560,78 @@ mod tests {
         batched.record_many(1, &[], &[]);
         assert_eq!(batched.len(1), 0);
         assert_eq!(batched.seq(1), 0);
+    }
+
+    #[test]
+    fn nan_sample_cannot_poison_series_window() {
+        // Regression (fault-injection PR): a NaN/∞ sample used to be
+        // written straight into the arena, poisoning every forecast drawn
+        // from that window. The guard must drop it without touching
+        // window contents, length, or seq.
+        let mut m = Monitor::new(2, 4);
+        m.record(0, 0.1, 1.0);
+        m.record(0, 0.2, 2.0);
+        let (cpu_before, mem_before) = (m.cpu_series(0).to_vec(), m.mem_series(0).to_vec());
+        let seq_before = m.seq(0);
+        m.record(0, f64::NAN, 0.5);
+        m.record(0, 0.5, f64::INFINITY);
+        m.record(0, f64::NEG_INFINITY, f64::NAN);
+        assert_eq!(m.cpu_series(0), &cpu_before[..], "window contents untouched");
+        assert_eq!(m.mem_series(0), &mem_before[..], "window contents untouched");
+        assert_eq!(m.seq(0), seq_before, "dropped samples do not advance seq");
+        assert_eq!(m.nonfinite_dropped(), 3);
+        assert!(m.is_stale(0), "rejected sample flags the series stale");
+        assert!(!m.is_stale(1), "other components unaffected");
+        assert!(m.cpu_series(0).iter().chain(m.mem_series(0)).all(|v| v.is_finite()));
+        // a first-ever sample that is non-finite assigns no slot
+        m.record(1, f64::NAN, f64::NAN);
+        assert_eq!(m.len(1), 0);
+        assert!(m.is_stale(1));
+        // the next finite sample clears staleness and lands normally
+        m.record(0, 0.3, 3.0);
+        assert!(!m.is_stale(0));
+        assert_eq!(m.len(0), 3);
+        assert_eq!(m.seq(0), seq_before + 1);
+    }
+
+    #[test]
+    fn record_many_with_nonfinite_matches_repeated_record() {
+        let mut batched = Monitor::new(1, 4);
+        let mut reference = Monitor::new(1, 4);
+        let cpu = [0.1, f64::NAN, 0.3, 0.4, f64::INFINITY, 0.6, 0.7];
+        let mem = [1.0, 2.0, f64::NAN, 4.0, 5.0, 6.0, 7.0];
+        batched.record_many(0, &cpu, &mem);
+        for (&c, &m) in cpu.iter().zip(&mem) {
+            reference.record(0, c, m);
+        }
+        assert_eq!(batched.cpu_series(0), reference.cpu_series(0));
+        assert_eq!(batched.mem_series(0), reference.mem_series(0));
+        assert_eq!(batched.seq(0), reference.seq(0));
+        assert_eq!(batched.samples_taken(), reference.samples_taken());
+        assert_eq!(batched.nonfinite_dropped(), reference.nonfinite_dropped());
+        assert_eq!(batched.is_stale(0), reference.is_stale(0));
+        assert!(!batched.is_stale(0), "last sample was finite");
+        // batch ending on a poisoned sample leaves the series stale
+        batched.record_many(0, &[0.9, f64::NAN], &[9.0, 9.0]);
+        assert!(batched.is_stale(0));
+    }
+
+    #[test]
+    fn mark_stale_is_sticky_until_next_finite_sample() {
+        let mut m = Monitor::new(1, 4);
+        m.record(0, 0.1, 1.0);
+        assert!(!m.is_stale(0));
+        m.mark_stale(0);
+        assert!(m.is_stale(0), "dropout-marked series reads stale");
+        assert_eq!(m.len(0), 1, "marking touches no window data");
+        m.mark_stale(0); // idempotent
+        assert!(m.is_stale(0));
+        m.record(0, 0.2, 2.0);
+        assert!(!m.is_stale(0), "fresh sample clears the flag");
+        // reset clears staleness along with the window
+        m.mark_stale(0);
+        m.reset(0);
+        assert!(!m.is_stale(0));
     }
 
     #[test]

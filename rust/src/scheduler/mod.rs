@@ -366,6 +366,17 @@ pub trait Scheduler: Send {
         Vec::new()
     }
 
+    /// Notification that cluster capacity was lost abruptly (a host
+    /// crashed, `faults`): every estimate derived from the pre-crash
+    /// capacity — reserved-start ETAs, the shaper-feedback ledger — is
+    /// now wrong, and grading it against reality would charge the
+    /// estimator for the fault. Returns the number of reservation
+    /// estimates voided (run accounting). Default: stateless schedulers
+    /// hold nothing to void.
+    fn on_capacity_loss(&mut self) -> usize {
+        0
+    }
+
     /// Attempt to start queued applications, placing their components on
     /// the cluster through `placer`. Returns the applications started
     /// (their state is set to Running).
@@ -826,6 +837,17 @@ impl Scheduler for ReservationBackfillScheduler {
         std::mem::take(&mut self.errors)
     }
 
+    fn on_capacity_loss(&mut self) -> usize {
+        // Drop (don't grade) every outstanding reserved-start estimate:
+        // they were computed against capacity that no longer exists. The
+        // feedback snapshot is equally pre-crash, so it goes too; the
+        // next shaper tick republishes a fresh one.
+        let voided = self.estimates.len();
+        self.estimates.clear();
+        self.feedback = None;
+        voided
+    }
+
     fn try_schedule(
         &mut self,
         apps: &mut [Application],
@@ -1197,6 +1219,30 @@ mod tests {
         // app 5 failed and is resubmitted later: still goes to the head
         s.enqueue(&apps, 5);
         assert_eq!(s.queued()[0], 5);
+    }
+
+    #[test]
+    fn capacity_loss_voids_reservation_estimates_and_feedback() {
+        let (apps, _c, _s) = setup(4);
+        let mut r = ReservationBackfillScheduler::new(4);
+        r.estimates.insert(3, 500.0);
+        r.estimates.insert(7, 900.0);
+        r.errors.push(-12.0);
+        r.feedback = Some(SchedulerFeedback::default());
+        assert_eq!(r.on_capacity_loss(), 2, "both held estimates voided");
+        assert!(r.estimates.is_empty());
+        assert!(r.feedback.is_none(), "pre-crash feedback snapshot dropped");
+        assert_eq!(
+            r.drain_shadow_errors(),
+            vec![-12.0],
+            "already-graded errors are history, not estimates — kept"
+        );
+        assert_eq!(r.on_capacity_loss(), 0, "idempotent once empty");
+        // stateless schedulers default to a no-op
+        let mut f = FifoScheduler::new();
+        f.enqueue(&apps, 1);
+        assert_eq!(f.on_capacity_loss(), 0);
+        assert_eq!(f.len(), 1, "queue untouched — queued apps still want to start");
     }
 
     #[test]

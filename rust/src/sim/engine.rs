@@ -94,8 +94,10 @@ use std::sync::Arc;
 
 use crate::cluster::Cluster;
 use crate::config::{EngineMode, ForecasterKind, Policy, SimConfig};
+use crate::faults::{self, FaultPlan, TelemetryFault};
+use crate::forecast::quarantine::{Action, HealthTracker};
 use crate::forecast::{Forecast, Forecaster, SeriesRef};
-use crate::metrics::{Metrics, RunReport};
+use crate::metrics::{FaultStats, Metrics, RunReport};
 use crate::monitor::{Monitor, TickBuffers};
 use crate::scheduler::{build_placer, build_scheduler, Placer, Scheduler, SchedulerFeedback};
 use crate::shaper::{self, beta, Demand, PlanScratch, ShapeActions};
@@ -175,6 +177,28 @@ fn engine_mode(cfg: &SimConfig) -> EngineMode {
         .ok()
         .and_then(|s| EngineMode::parse(s.trim()))
         .unwrap_or(cfg.engine_mode)
+}
+
+/// Which open telemetry window (if any) faults component `c`'s samples
+/// right now. Dropout dominates corruption when windows of both kinds
+/// cover the same component. Free function (not a method) so the
+/// destructured fast-forward flush can call it alongside `&mut Monitor`.
+fn telemetry_fault_for(
+    plan: &FaultPlan,
+    open: &[usize],
+    c: ComponentId,
+) -> Option<TelemetryFault> {
+    let mut hit = None;
+    for &w in open {
+        let win = &plan.telemetry[w];
+        if win.covers(c) {
+            if win.kind == TelemetryFault::Dropout {
+                return Some(TelemetryFault::Dropout);
+            }
+            hit = Some(TelemetryFault::Corruption);
+        }
+    }
+    hit
 }
 
 /// Engine-internal efficiency counters — *not* part of [`RunReport`]
@@ -271,6 +295,24 @@ pub struct Engine {
     ff_touched: Vec<u32>,
     /// initial events pushed (idempotence guard for `pump_until`/`run`)
     primed: bool,
+    /// compiled fault schedule; the empty plan keeps the whole fault
+    /// layer inert (no events primed, no per-tick checks taken)
+    fault_plan: FaultPlan,
+    /// indices into `fault_plan.telemetry` of currently-open windows
+    telemetry_open: Vec<usize>,
+    /// currently-open forecaster fault windows (a count: windows from
+    /// independent renewal draws may overlap)
+    forecast_faults_open: usize,
+    /// per-app crash displacement count (drives the retry backoff ladder)
+    crash_retries: HashMap<AppId, u32>,
+    /// fault + degradation accounting, folded into `RunReport::faults`
+    fault_stats: FaultStats,
+    /// monitor samples suppressed by open dropout windows
+    dropout_skipped: u64,
+    /// per-series forecast health: the quarantine/degradation ladder
+    health: HealthTracker,
+    /// scratch: per-series quarantine actions for the current batch
+    screen_actions: Vec<Action>,
 }
 
 impl Engine {
@@ -309,6 +351,21 @@ impl Engine {
         let n_apps = wl.apps.len();
         let n_comp = wl.num_components;
         let cluster = Cluster::new(&cfg.cluster);
+        // the fault schedule is fixed before the first event: a pure
+        // function of (config, seed, horizon), never of run state
+        let horizon = if cfg.max_sim_time_s > 0.0 { cfg.max_sim_time_s } else { DEFAULT_MAX_SIM_TIME };
+        let fault_plan = FaultPlan::compile(
+            &cfg.faults,
+            cluster.len(),
+            cfg.seed,
+            horizon,
+            cfg.forecast.monitor_interval_s,
+        );
+        let health = HealthTracker::new(
+            cfg.faults.quarantine_strikes,
+            cfg.faults.quarantine_backoff_ticks,
+            cfg.faults.quarantine_max_backoff_ticks,
+        );
         Engine {
             tick: TickBuffers::new(cluster.len()),
             cluster,
@@ -349,6 +406,14 @@ impl Engine {
             ff_host_over: Vec::new(),
             ff_touched: Vec::new(),
             primed: false,
+            fault_plan,
+            telemetry_open: Vec::new(),
+            forecast_faults_open: 0,
+            crash_retries: HashMap::new(),
+            fault_stats: FaultStats::default(),
+            dropout_skipped: 0,
+            health,
+            screen_actions: Vec::new(),
         }
     }
 
@@ -364,6 +429,22 @@ impl Engine {
     #[doc(hidden)]
     pub fn set_event_cap(&mut self, cap: u64) {
         self.event_cap = cap;
+    }
+
+    /// Replace the compiled fault plan before the run starts. The
+    /// determinism suite injects an *empty* plan under a chaos config to
+    /// pin that the wired engine and an unwired build are bit-identical.
+    #[doc(hidden)]
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        assert!(!self.primed, "fault plan must be set before the run is primed");
+        self.fault_plan = plan;
+    }
+
+    /// The compiled fault plan (tests cross-check `FaultStats` against
+    /// the injected schedule).
+    #[doc(hidden)]
+    pub fn fault_plan(&self) -> &FaultPlan {
+        &self.fault_plan
     }
 
     /// Efficiency counters accumulated so far (see [`EngineStats`]).
@@ -466,9 +547,16 @@ impl Engine {
         // the final popped event may lie past the horizon; report the
         // effective simulated span
         let sim_time = self.now().min(max_t);
+        // fold the degradation counters owned by subsystems into the
+        // fault ledger before reporting (all zero on an empty plan in a
+        // healthy run, so `FaultStats::is_zero` keeps summaries quiet)
+        self.fault_stats.samples_dropped = self.dropout_skipped + self.monitor.nonfinite_dropped();
+        self.fault_stats.quarantined_series = self.health.quarantined_total();
+        self.fault_stats.fallback_ticks = self.health.fallback_ticks();
         let mut report = self.metrics.report(run_name, sim_time);
         report.events = events;
         report.truncated = truncated;
+        report.faults = self.fault_stats.clone();
         (report, self.stats)
     }
 
@@ -487,6 +575,24 @@ impl Engine {
             self.queue
                 .push(self.cfg.shaper.shaping_interval_s, Event::ShaperTick);
         }
+        // fault schedule: ordinary queue events, dispatched (and counted)
+        // identically in both engine modes; an empty plan pushes nothing,
+        // keeping event sequence numbers bit-identical to a faultless
+        // build
+        if !self.fault_plan.is_empty() {
+            for w in &self.fault_plan.crashes {
+                self.queue.push(w.crash_at, Event::HostCrash { host: w.host });
+                self.queue.push(w.recover_at, Event::HostRecover { host: w.host });
+            }
+            for (i, w) in self.fault_plan.telemetry.iter().enumerate() {
+                self.queue.push(w.start, Event::TelemetryFaultStart { window: i });
+                self.queue.push(w.end, Event::TelemetryFaultEnd { window: i });
+            }
+            for (i, w) in self.fault_plan.forecast.iter().enumerate() {
+                self.queue.push(w.start, Event::ForecastFaultStart { window: i });
+                self.queue.push(w.end, Event::ForecastFaultEnd { window: i });
+            }
+        }
     }
 
     fn dispatch(&mut self, ev: Event) {
@@ -499,6 +605,21 @@ impl Engine {
             // no-op by design: exists to bound quiet stretches; the real
             // monitor tick queued at the same time performs any kill
             Event::ProjectedOom { .. } => {}
+            Event::HostCrash { host } => self.on_host_crash(host),
+            Event::HostRecover { host } => self.on_host_recover(host),
+            Event::TelemetryFaultStart { window } => {
+                self.telemetry_open.push(window);
+                // sorted so coverage lookups probe windows in a fixed order
+                self.telemetry_open.sort_unstable();
+            }
+            Event::TelemetryFaultEnd { window } => {
+                self.telemetry_open.retain(|&w| w != window);
+            }
+            Event::ForecastFaultStart { .. } => self.forecast_faults_open += 1,
+            Event::ForecastFaultEnd { .. } => {
+                self.forecast_faults_open = self.forecast_faults_open.saturating_sub(1);
+            }
+            Event::RetryApp { app } => self.on_retry_app(app),
         }
     }
 
@@ -700,7 +821,19 @@ impl Engine {
             let alloc_mem = self.tick.alloc_mem[i];
             let cpu_slack = ((alloc_cpus - used_cpu) / alloc_cpus.max(1e-9)).max(0.0);
             let mem_slack = ((alloc_mem - used_mem) / alloc_mem.max(1e-9)).max(0.0);
-            self.monitor.record(self.tick.comp[i], cpu_frac, mem_frac);
+            // telemetry faults bend what the *monitor* sees, never the
+            // ground truth: slack/usage/OOM arithmetic below stays on the
+            // real fractions (the cluster doesn't idle because a sample
+            // was lost in flight)
+            let c = self.tick.comp[i];
+            match telemetry_fault_for(&self.fault_plan, &self.telemetry_open, c) {
+                None => self.monitor.record(c, cpu_frac, mem_frac),
+                Some(TelemetryFault::Dropout) => {
+                    self.dropout_skipped += 1;
+                    self.monitor.mark_stale(c);
+                }
+                Some(TelemetryFault::Corruption) => self.monitor.record(c, f64::NAN, f64::NAN),
+            }
             self.metrics.record_slack(self.tick.app[i], cpu_slack, mem_slack);
             let h = self.tick.host[i];
             self.tick.used_mem.push(used_mem);
@@ -928,8 +1061,44 @@ impl Engine {
             return;
         }
         debug_assert_eq!(self.ff_cpu.len(), rows * ticks);
-        let Engine { monitor, tick, ff_cpu, ff_mem, ff_flush_cpu, ff_flush_mem, .. } = self;
+        let Engine {
+            monitor,
+            tick,
+            ff_cpu,
+            ff_mem,
+            ff_flush_cpu,
+            ff_flush_mem,
+            fault_plan,
+            telemetry_open,
+            dropout_skipped,
+            ..
+        } = self;
         for i in 0..rows {
+            // telemetry window edges are queue events, so they bound the
+            // stretch: one disposition holds for all `ticks` samples, and
+            // the batched append reproduces the per-tick path exactly
+            let c = tick.comp[i];
+            match telemetry_fault_for(fault_plan, telemetry_open, c) {
+                None => {}
+                Some(TelemetryFault::Dropout) => {
+                    // the per-tick path skips each record and re-marks
+                    // staleness (idempotent); nothing lands in the series
+                    *dropout_skipped += ticks as u64;
+                    monitor.mark_stale(c);
+                    continue;
+                }
+                Some(TelemetryFault::Corruption) => {
+                    // the per-tick path records NaN each tick; the
+                    // batched guard falls back to the same per-sample
+                    // drops, counters and once-per-component log
+                    ff_flush_cpu.clear();
+                    ff_flush_mem.clear();
+                    ff_flush_cpu.resize(ticks, f64::NAN);
+                    ff_flush_mem.resize(ticks, f64::NAN);
+                    monitor.record_many(c, ff_flush_cpu, ff_flush_mem);
+                    continue;
+                }
+            }
             ff_flush_cpu.clear();
             ff_flush_mem.clear();
             for j in 0..ticks {
@@ -996,9 +1165,12 @@ impl Engine {
         // demands bit for bit (keyed sliding-window caches make repeat
         // calls with identical inputs deterministic no-ops), so reuse
         // them. The oracle path is never cached: its demands depend on
-        // the current step, which advances every tick.
+        // the current step, which advances every tick. A live fault plan
+        // also disables the cache: the quarantine tracker must step on
+        // every forecast batch identically in both engine modes.
         let skip = !is_oracle
             && self.mode == EngineMode::EventDriven
+            && self.fault_plan.is_empty()
             && self.shaper_key_version == Some(self.cluster.version())
             && self.shaper_key.len() == self.batch_ids.len()
             && self
@@ -1074,11 +1246,13 @@ impl Engine {
                 let mut views: Vec<SeriesRef<'_>> = Vec::with_capacity(2 * k);
                 views.extend(self.batch_ids.iter().map(|&(cid, _, _)| {
                     SeriesRef::keyed(SeriesRef::cpu_key(cid), monitor.seq(cid), monitor.cpu_series(cid))
+                        .with_stale(monitor.is_stale(cid))
                 }));
                 views.extend(self.batch_ids.iter().map(|&(cid, _, _)| {
                     SeriesRef::keyed(SeriesRef::mem_key(cid), monitor.seq(cid), monitor.mem_series(cid))
+                        .with_stale(monitor.is_stale(cid))
                 }));
-                let all = model.forecast(&views);
+                let mut all = model.forecast(&views);
                 if all.len() != 2 * k {
                     // a forecaster that drops series would silently
                     // misalign every cpu/mem pair after the gap; charge
@@ -1093,14 +1267,49 @@ impl Engine {
                     );
                 } else {
                     self.metrics.forecasts_issued += 2 * k as u64;
-                    for (i, &(cid, cpu_req, mem_req)) in self.batch_ids.iter().enumerate() {
-                        self.demands.insert(
-                            cid,
-                            Demand {
-                                cpus: beta::desired_fraction(&all[i], k1, k2) * cpu_req,
-                                mem: beta::desired_fraction(&all[k + i], k1, k2) * mem_req,
-                            },
-                        );
+                    if !self.fault_plan.is_empty() {
+                        // an open forecaster fault window turns every
+                        // model output non-finite (simulated numerical
+                        // failure) — the quarantine screen below is what
+                        // keeps the tick serviceable
+                        if self.forecast_faults_open > 0 {
+                            for f in all.iter_mut() {
+                                *f = Forecast { mean: f64::NAN, var: f64::NAN };
+                            }
+                        }
+                        // degradation ladder: bad or stale-input series
+                        // strike toward quarantine; quarantined series
+                        // serve last-value fallbacks, and the deepest
+                        // rung keeps the current allocation. Run only
+                        // under a live plan so an empty plan reproduces
+                        // the unscreened engine bit for bit.
+                        let mut screen = std::mem::take(&mut self.screen_actions);
+                        self.health.screen(&views, &mut all, &mut screen);
+                        for (i, &(cid, cpu_req, mem_req)) in self.batch_ids.iter().enumerate() {
+                            if screen[i] == Action::KeepAllocation
+                                || screen[k + i] == Action::KeepAllocation
+                            {
+                                continue; // absent from `demands` = keep allocation
+                            }
+                            self.demands.insert(
+                                cid,
+                                Demand {
+                                    cpus: beta::desired_fraction(&all[i], k1, k2) * cpu_req,
+                                    mem: beta::desired_fraction(&all[k + i], k1, k2) * mem_req,
+                                },
+                            );
+                        }
+                        self.screen_actions = screen;
+                    } else {
+                        for (i, &(cid, cpu_req, mem_req)) in self.batch_ids.iter().enumerate() {
+                            self.demands.insert(
+                                cid,
+                                Demand {
+                                    cpus: beta::desired_fraction(&all[i], k1, k2) * cpu_req,
+                                    mem: beta::desired_fraction(&all[k + i], k1, k2) * mem_req,
+                                },
+                            );
+                        }
                     }
                     // fresh demands: remember the input set they came
                     // from for the next tick's work-skip check
@@ -1267,10 +1476,14 @@ impl Engine {
         self.running.remove(&a);
         self.finish_version[a] += 1; // invalidate in-flight finish
         if is_failure {
-            let app = &mut self.apps[a];
-            app.failures += 1;
-            if app.failures >= self.cfg.max_failures_before_giveup {
-                app.shaping_disabled = true;
+            self.apps[a].failures += 1;
+            if self.apps[a].failures >= self.cfg.max_failures_before_giveup
+                && !self.apps[a].shaping_disabled
+            {
+                // graded-degradation endpoint: the app keeps running,
+                // just unshaped — counted, not silently flagged
+                self.apps[a].shaping_disabled = true;
+                self.metrics.gave_up += 1;
             }
         } else {
             self.apps[a].preemptions += 1;
@@ -1292,6 +1505,113 @@ impl Engine {
             self.remove_elastic(a, cid, now);
         }
         self.queue.push(now, Event::SchedulerWake);
+    }
+
+    // ----- fault injection ------------------------------------------------
+
+    /// A planned host crash: every placement on the host dies — apps
+    /// with a *core* component there lose everything and enter the
+    /// retry pipeline; apps with only elastic components there lose
+    /// just those — then the host leaves both capacity indexes and
+    /// reservation estimates derived from pre-crash capacity are voided.
+    fn on_host_crash(&mut self, h: HostId) {
+        let now = self.now();
+        self.fault_stats.crashes_injected += 1;
+        // snapshot + sort: `components_on` is unordered (swap_remove
+        // maintenance), and victims must be processed in a fixed order
+        let mut victims: Vec<ComponentId> = self.cluster.components_on(h).to_vec();
+        victims.sort_unstable();
+        let mut displaced: BTreeSet<AppId> = BTreeSet::new();
+        for &cid in &victims {
+            let (a, k) = self.comp_index[cid];
+            if self.apps[a].components[k].is_core {
+                displaced.insert(a);
+            }
+        }
+        for &a in &displaced {
+            self.crash_displace(a, now);
+        }
+        for &cid in &victims {
+            let (a, k) = self.comp_index[cid];
+            if displaced.contains(&a) {
+                continue; // already removed with its app
+            }
+            debug_assert!(!self.apps[a].components[k].is_core);
+            if self.cluster.placement(cid).is_some() {
+                self.remove_elastic(a, cid, now);
+            }
+        }
+        self.cluster.set_host_down(h);
+        self.fault_stats.reservations_voided += self.scheduler.on_capacity_loss() as u64;
+        // displacement freed capacity on the *surviving* hosts
+        self.queue.push(now, Event::SchedulerWake);
+    }
+
+    /// The crashed host rejoins both capacity indexes, empty.
+    fn on_host_recover(&mut self, h: HostId) {
+        self.fault_stats.recoveries += 1;
+        self.cluster.set_host_up(h);
+        self.queue.push(self.now(), Event::SchedulerWake);
+    }
+
+    /// Kill a crash-displaced app — all components removed, all work
+    /// lost, the crash analogue of `preempt_app` — and route it into the
+    /// graded retry pipeline: re-enqueue after a seeded exponential
+    /// backoff, or, past `max_crash_retries` displacements, give up on
+    /// shaping it and resubmit immediately (graded degradation instead
+    /// of a silent cliff). Crash displacements deliberately do not touch
+    /// the OOM `failures` ledger: the app did nothing wrong.
+    fn crash_displace(&mut self, a: AppId, now: f64) {
+        let AppState::Running { since } = self.apps[a].state else {
+            return;
+        };
+        self.service_time[a] += (now - since).max(0.0);
+        self.update_progress(a, now);
+        let done = self.apps[a].total_work - self.apps[a].remaining_work;
+        // index loop: the removals need `&mut self`
+        #[allow(clippy::needless_range_loop)]
+        for k in 0..self.apps[a].components.len() {
+            let cid = self.apps[a].components[k].id;
+            self.cluster.remove(cid);
+            self.monitor.reset(cid);
+        }
+        self.placed_elastic[a] = 0;
+        let app = &mut self.apps[a];
+        app.remaining_work = app.total_work; // work lost
+        app.state = AppState::Queued;
+        app.last_progress_at = now;
+        self.running.remove(&a);
+        self.finish_version[a] += 1; // invalidate in-flight finish
+        self.metrics.wasted_work += done;
+        self.fault_stats.apps_displaced += 1;
+        let attempts = self.crash_retries.entry(a).or_insert(0);
+        *attempts += 1;
+        let attempt = *attempts;
+        if attempt > self.cfg.faults.max_crash_retries {
+            if !self.apps[a].shaping_disabled {
+                self.apps[a].shaping_disabled = true;
+                self.metrics.gave_up += 1;
+            }
+            self.fault_stats.crash_giveups += 1;
+            self.scheduler.enqueue(&self.apps, a);
+        } else {
+            // backoff is a pure function of (seed, app, attempt):
+            // independent of interleaving, worker count and engine mode
+            let delay = faults::backoff_delay(&self.cfg.faults, self.cfg.seed, a, attempt);
+            self.fault_stats.backoff_seconds += delay;
+            self.queue.push_in(delay, Event::RetryApp { app: a });
+        }
+    }
+
+    /// Backoff expiry for a crash-displaced app: hand it back to the
+    /// scheduler at its original priority.
+    fn on_retry_app(&mut self, a: AppId) {
+        if !matches!(self.apps[a].state, AppState::Queued) {
+            return; // defensive: displaced apps sit Queued until here
+        }
+        self.fault_stats.retries += 1;
+        self.scheduler.enqueue(&self.apps, a);
+        self.queue.push(self.now(), Event::SchedulerWake);
     }
 }
 
@@ -1664,6 +1984,44 @@ mod tests {
             assert_eq!(fts.host_scans, ft.monitor_ticks, "{p}");
             assert_eq!(eds.host_scans + eds.quiet_ticks_elided, ed.monitor_ticks, "{p}");
         }
+    }
+
+    #[test]
+    fn give_up_cliff_is_counted_in_the_report() {
+        // regression: apps crossing `max_failures_before_giveup` used to
+        // just set `shaping_disabled` — invisible in every report
+        let mut cfg = tiny_cfg();
+        cfg.forecast.kind = ForecasterKind::Oracle;
+        cfg.shaper.policy = Policy::Pessimistic;
+        cfg.max_failures_before_giveup = 2;
+        let mut eng = Engine::new(cfg, ForecastSource::Oracle);
+        for t in [600.0, 1800.0, 3600.0, 7200.0] {
+            eng.pump_until(t);
+            if !eng.running.is_empty() {
+                break;
+            }
+        }
+        let a = *eng.running.iter().next().expect("no running app after warmup");
+        let now = eng.now();
+        eng.preempt_app(a, now, /*is_failure=*/ true);
+        assert_eq!(eng.metrics.gave_up, 0, "one failure is below the threshold");
+        // resubmit + fail again: crosses the threshold exactly once
+        eng.apps[a].state = AppState::Running { since: now };
+        eng.running.insert(a);
+        eng.preempt_app(a, now, true);
+        assert!(eng.apps[a].shaping_disabled);
+        assert_eq!(eng.metrics.gave_up, 1);
+        // a third failure past the cliff must not double-count
+        eng.apps[a].state = AppState::Running { since: now };
+        eng.running.insert(a);
+        eng.preempt_app(a, now, true);
+        assert_eq!(eng.metrics.gave_up, 1);
+        let r = eng.metrics.report("giveup", now);
+        assert_eq!(r.gave_up, 1);
+        assert_eq!(
+            r.to_json().get("gave_up").and_then(crate::util::json::Json::as_f64),
+            Some(1.0)
+        );
     }
 
     #[test]

@@ -33,6 +33,31 @@ pub enum Event {
     /// Dispatch is a no-op either way: the event exists to bound quiet
     /// stretches so the *real* monitor tick at this time runs the kill.
     ProjectedOom { host: HostId, version: u64 },
+    /// Fault injection (`faults::FaultPlan`): `host` crashes — every
+    /// placement on it is killed, displaced applications enter the
+    /// retry/backoff pipeline, and the host leaves both capacity
+    /// indexes until its paired [`Event::HostRecover`].
+    HostCrash { host: HostId },
+    /// Fault injection: a crashed `host` comes back up and rejoins the
+    /// capacity indexes.
+    HostRecover { host: HostId },
+    /// Fault injection: telemetry fault window `window` (an index into
+    /// the compiled plan's window list) opens. Being a queue event —
+    /// rather than a time-range check at each tick — also makes the
+    /// window boundary a quiet-stretch barrier, so fast-forwarded
+    /// monitor ticks never straddle a telemetry-coverage change.
+    TelemetryFaultStart { window: usize },
+    /// Fault injection: telemetry fault window `window` closes.
+    TelemetryFaultEnd { window: usize },
+    /// Fault injection: forecaster fault window `window` opens (model
+    /// outputs for covered series are corrupted until the paired end).
+    ForecastFaultStart { window: usize },
+    /// Fault injection: forecaster fault window `window` closes.
+    ForecastFaultEnd { window: usize },
+    /// A crash-displaced application's backoff delay expired: re-enqueue
+    /// it with the scheduler (the retry half of the graded
+    /// retry → give-up policy).
+    RetryApp { app: AppId },
 }
 
 /// Queue entry ordered by (time, sequence) — sequence keeps FIFO order of

@@ -1,0 +1,229 @@
+//! Fault-injection determinism suite (PR 8).
+//!
+//! The fault layer's contract has two halves:
+//!
+//! * **Inert means invisible.** An empty `FaultPlan` — the default
+//!   config — pushes no events and takes no per-tick branches, so a run
+//!   through the fully wired engine must be bit-for-bit identical to a
+//!   build without the fault layer. Pinned here by injecting
+//!   `FaultPlan::default()` into an engine whose *config* asks for
+//!   chaos and comparing against a plain run of the healthy twin.
+//!
+//! * **Chaos is reproducible.** A seeded plan yields bit-identical
+//!   `RunReport`s (including `FaultStats`) across repeated runs and
+//!   across both engine modes: fault events are ordinary queue events,
+//!   dispatched and counted the same way whether ticks are elided or
+//!   not, and retry backoff is a pure function of (seed, app, attempt).
+//!   The `ZOE_WORKERS` sweep lives in tests/monitor_shard_workers.rs
+//!   (env mutation needs its own test binary).
+
+use zoe_shaper::config::{EngineMode, ForecasterKind, Policy, SimConfig};
+use zoe_shaper::faults::FaultPlan;
+use zoe_shaper::metrics::RunReport;
+use zoe_shaper::sim::engine::{build_source, run_simulation_full, Engine, MonitorMode};
+
+/// A small world with every fault category switched on hard enough to
+/// fire several windows inside the horizon.
+fn chaos_cfg() -> SimConfig {
+    let mut cfg = SimConfig::small();
+    cfg.workload.num_apps = 80;
+    cfg.cluster.hosts = 6;
+    // long jobs keep the cluster busy for the whole horizon, so the
+    // fault windows (exponential gaps, ~hours) always find live prey —
+    // every `> 0` assertion below is then a certainty of the seeded
+    // schedule, not a race against early completion
+    cfg.workload.runtime_scale = 20.0;
+    cfg.max_sim_time_s = 3.0 * 86_400.0;
+    cfg.forecast.kind = ForecasterKind::Oracle;
+    cfg.shaper.policy = Policy::Pessimistic;
+    cfg.faults.crash_rate_per_host_day = 1.0;
+    cfg.faults.crash_downtime_mean_s = 3600.0;
+    cfg.faults.dropout_rate_per_day = 4.0;
+    cfg.faults.dropout_coverage = 0.4;
+    cfg.faults.corruption_rate_per_day = 2.0;
+    cfg.faults.forecast_fault_rate_per_day = 2.0;
+    cfg
+}
+
+/// The healthy twin: same world, inert fault layer.
+fn inert_cfg() -> SimConfig {
+    let mut cfg = chaos_cfg();
+    cfg.faults = Default::default();
+    cfg
+}
+
+/// Bit-for-bit comparison of the report fields chaos runs exercise.
+fn assert_identical(a: &RunReport, b: &RunReport, ctx: &str) {
+    assert_eq!(a.completed, b.completed, "{ctx}: completed");
+    assert_eq!(a.oom_events, b.oom_events, "{ctx}: oom_events");
+    assert_eq!(a.app_preemptions, b.app_preemptions, "{ctx}: app_preemptions");
+    assert_eq!(a.elastic_preemptions, b.elastic_preemptions, "{ctx}: elastic_preemptions");
+    assert_eq!(a.gave_up, b.gave_up, "{ctx}: gave_up");
+    assert_eq!(a.forecasts_issued, b.forecasts_issued, "{ctx}: forecasts_issued");
+    assert_eq!(a.monitor_ticks, b.monitor_ticks, "{ctx}: monitor_ticks");
+    assert_eq!(a.shaper_ticks, b.shaper_ticks, "{ctx}: shaper_ticks");
+    assert_eq!(a.events, b.events, "{ctx}: events");
+    assert_eq!(a.truncated, b.truncated, "{ctx}: truncated");
+    // FaultStats derives PartialEq; its one f64 (backoff_seconds) is a
+    // sum of seed-pure draws accumulated in event order, so == is exact
+    assert_eq!(a.faults, b.faults, "{ctx}: fault stats");
+    let exact = [
+        (a.turnaround.mean, b.turnaround.mean, "turnaround.mean"),
+        (a.wait.mean, b.wait.mean, "wait.mean"),
+        (a.stretch.mean, b.stretch.mean, "stretch.mean"),
+        (a.cpu_slack.mean, b.cpu_slack.mean, "cpu_slack.mean"),
+        (a.mem_slack.mean, b.mem_slack.mean, "mem_slack.mean"),
+        (a.wasted_work, b.wasted_work, "wasted_work"),
+        (a.mean_alloc_cpu, b.mean_alloc_cpu, "mean_alloc_cpu"),
+        (a.mean_alloc_mem, b.mean_alloc_mem, "mean_alloc_mem"),
+        (a.peak_host_usage, b.peak_host_usage, "peak_host_usage"),
+        (a.failed_app_fraction, b.failed_app_fraction, "failed_app_fraction"),
+        (a.sim_time, b.sim_time, "sim_time"),
+    ];
+    for (x, y, name) in exact {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {name} {x} vs {y}");
+    }
+}
+
+#[test]
+fn chaos_run_is_bit_identical_across_engine_modes() {
+    // crash + dropout + corruption + forecaster faults, oracle forecasts
+    let cfg = chaos_cfg();
+    let (ft, _) =
+        run_simulation_full(&cfg, None, "ft", MonitorMode::Incremental, EngineMode::FixedTick)
+            .unwrap();
+    let (ed, _) =
+        run_simulation_full(&cfg, None, "ed", MonitorMode::Incremental, EngineMode::EventDriven)
+            .unwrap();
+    assert!(!ft.faults.is_zero(), "chaos config must inject something");
+    assert!(ft.faults.crashes_injected > 0, "{}", ft.summary());
+    assert!(ft.faults.samples_dropped > 0, "{}", ft.summary());
+    assert_identical(&ft, &ed, "oracle chaos ft vs ed");
+    // and the incremental gather still matches the reference scan
+    let (rs, _) =
+        run_simulation_full(&cfg, None, "rs", MonitorMode::ReferenceScan, EngineMode::FixedTick)
+            .unwrap();
+    assert_identical(&ft, &rs, "oracle chaos incremental vs reference");
+}
+
+#[test]
+fn model_chaos_run_exercises_quarantine_identically_in_both_modes() {
+    // a model forecaster under forecaster faults + dropouts: the
+    // quarantine ladder must fire, and must step identically whether or
+    // not quiet ticks are elided (the shaper work-skip is disabled
+    // under a live plan for exactly this reason)
+    let mut cfg = chaos_cfg();
+    cfg.forecast.kind = ForecasterKind::LastValue;
+    cfg.forecast.grace_period_s = 600.0;
+    cfg.faults.crash_rate_per_host_day = 0.5;
+    cfg.faults.forecast_fault_rate_per_day = 6.0;
+    cfg.faults.quarantine_strikes = 2;
+    let (ft, _) =
+        run_simulation_full(&cfg, None, "ft", MonitorMode::Incremental, EngineMode::FixedTick)
+            .unwrap();
+    let (ed, _) =
+        run_simulation_full(&cfg, None, "ed", MonitorMode::Incremental, EngineMode::EventDriven)
+            .unwrap();
+    assert!(ft.faults.fallback_ticks > 0, "no fallbacks served: {}", ft.summary());
+    assert!(
+        ft.faults.quarantined_series > 0,
+        "forecaster faults never drove a series into quarantine: {}",
+        ft.summary()
+    );
+    assert_identical(&ft, &ed, "model chaos ft vs ed");
+}
+
+#[test]
+fn chaos_run_is_repeatable() {
+    let cfg = chaos_cfg();
+    let (a, _) =
+        run_simulation_full(&cfg, None, "a", MonitorMode::Incremental, EngineMode::EventDriven)
+            .unwrap();
+    let (b, _) =
+        run_simulation_full(&cfg, None, "b", MonitorMode::Incremental, EngineMode::EventDriven)
+            .unwrap();
+    assert_identical(&a, &b, "same seed, same chaos");
+    // a different seed re-rolls the fault schedule too
+    let mut cfg2 = chaos_cfg();
+    cfg2.seed = 43;
+    let (c, _) =
+        run_simulation_full(&cfg2, None, "c", MonitorMode::Incremental, EngineMode::EventDriven)
+            .unwrap();
+    assert_ne!(
+        a.faults, c.faults,
+        "different seeds must draw different fault schedules"
+    );
+}
+
+#[test]
+fn empty_plan_is_bit_identical_to_the_unwired_engine() {
+    // the healthy twin, run normally: its compiled plan is empty, so the
+    // fault layer never primes an event or takes a branch
+    for mode in [EngineMode::FixedTick, EngineMode::EventDriven] {
+        let plain = {
+            let src = build_source(&inert_cfg(), None).unwrap();
+            let mut e = Engine::new(inert_cfg(), src);
+            e.set_engine_mode(mode);
+            e.run("plain")
+        };
+        // the chaos config with its compiled plan *replaced* by the empty
+        // plan: every fault knob is hot, yet nothing may differ — the
+        // wired engine degenerates to the unwired one
+        let neutered = {
+            let src = build_source(&chaos_cfg(), None).unwrap();
+            let mut e = Engine::new(chaos_cfg(), src);
+            assert!(!e.fault_plan().is_empty(), "chaos config must compile a real plan");
+            e.set_fault_plan(FaultPlan::default());
+            e.set_engine_mode(mode);
+            e.run("neutered")
+        };
+        assert!(plain.faults.is_zero());
+        assert_identical(&plain, &neutered, "empty plan vs unwired");
+    }
+}
+
+#[test]
+fn fault_stats_match_the_injected_schedule() {
+    let cfg = chaos_cfg();
+    let horizon = cfg.max_sim_time_s;
+    let plan = FaultPlan::compile(
+        &cfg.faults,
+        cfg.cluster.hosts,
+        cfg.seed,
+        horizon,
+        cfg.forecast.monitor_interval_s,
+    );
+    let (r, _) =
+        run_simulation_full(&cfg, None, "r", MonitorMode::Incremental, EngineMode::EventDriven)
+            .unwrap();
+    let f = &r.faults;
+    // every dispatched crash event is one compiled window whose start
+    // lies inside the simulated span (boundary events may tie with the
+    // final pop, hence the one-sided bounds)
+    let lo = plan.crashes.iter().filter(|w| w.crash_at < r.sim_time).count() as u64;
+    let hi = plan.crashes.iter().filter(|w| w.crash_at <= r.sim_time).count() as u64;
+    assert!(
+        (lo..=hi).contains(&f.crashes_injected),
+        "crashes_injected {} outside [{lo}, {hi}] of the compiled schedule",
+        f.crashes_injected
+    );
+    assert!(f.crashes_injected > 0);
+    assert!(f.recoveries <= f.crashes_injected, "{f:?}");
+    // each displacement schedules exactly one retry or one give-up;
+    // retries count at dispatch, so backoffs still pending at the end
+    // leave the sum short, never over
+    assert!(f.retries + f.crash_giveups <= f.apps_displaced, "{f:?}");
+    assert!(f.backoff_seconds >= 0.0 && f.backoff_seconds.is_finite());
+    assert!(f.samples_dropped > 0, "dropout+corruption windows dropped nothing: {f:?}");
+}
+
+#[test]
+fn zoe_faults_off_summary_note() {
+    // `ZOE_FAULTS=off` is covered by the env-isolated binary
+    // (tests/monitor_shard_workers.rs); here we only pin that the
+    // default config is inert without any env override
+    let cfg = SimConfig::small();
+    assert!(cfg.faults.is_inert());
+    let plan = FaultPlan::compile(&cfg.faults, cfg.cluster.hosts, cfg.seed, 86_400.0, 60.0);
+    assert!(plan.is_empty());
+}

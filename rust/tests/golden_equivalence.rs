@@ -54,6 +54,10 @@ fn assert_reports_identical(a: &RunReport, b: &RunReport, ctx: &str) {
     assert_eq!(a.shaper_ticks, b.shaper_ticks, "{ctx}: shaper_ticks");
     assert_eq!(a.events, b.events, "{ctx}: events");
     assert_eq!(a.truncated, b.truncated, "{ctx}: truncated");
+    assert_eq!(a.gave_up, b.gave_up, "{ctx}: gave_up");
+    // FaultStats derives PartialEq; backoff_seconds is the one f64 and
+    // is a sum of seed-pure draws, so == is bit-for-bit here too
+    assert_eq!(a.faults, b.faults, "{ctx}: fault stats");
     // f64 fields: to_bits comparison = true bit-for-bit equality
     let exact = [
         (a.turnaround.mean, b.turnaround.mean, "turnaround.mean"),

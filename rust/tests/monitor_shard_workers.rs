@@ -4,9 +4,12 @@
 //!
 //! This is the only test in this binary ON PURPOSE: it mutates
 //! process-global environment variables (`ZOE_WORKERS`,
-//! `ZOE_SHARD_THRESHOLD`), and Rust runs same-binary tests on parallel
-//! threads, where concurrent setenv/getenv is undefined behavior in
-//! glibc. A separate integration-test file = a separate process.
+//! `ZOE_SHARD_THRESHOLD`, `ZOE_FAULTS`), and Rust runs same-binary
+//! tests on parallel threads, where concurrent setenv/getenv is
+//! undefined behavior in glibc. A separate integration-test file = a
+//! separate process. PR 8 adds a chaos-config sweep (fault injection
+//! must be worker-count independent) and the `ZOE_FAULTS=off`
+//! kill-switch check here for the same reason.
 
 use zoe_shaper::config::{EngineMode, ForecasterKind, Policy, SimConfig};
 use zoe_shaper::sim::engine::{run_simulation_full, run_simulation_with, MonitorMode};
@@ -110,6 +113,114 @@ fn sharded_monitor_pass_is_worker_count_independent() {
             "gp ZOE_WORKERS={workers}: mem_slack.mean"
         );
     }
+
+    // PR 8: a chaos run (crashes + dropouts + corruption + forecaster
+    // faults) must also be worker-count independent — fault events are
+    // ordinary queue events and the dropout/corruption disposition is
+    // per-row, so sharding the gather cannot reorder anything. The
+    // fixed-tick run with one worker is the baseline; the event-driven
+    // sweep must match it bit-for-bit, fault stats included.
+    let mut chaos = SimConfig::small();
+    chaos.workload.num_apps = 80;
+    chaos.cluster.hosts = 6;
+    // long jobs: the cluster stays busy across the whole horizon, so
+    // the seeded fault windows always hit live components
+    chaos.workload.runtime_scale = 20.0;
+    chaos.max_sim_time_s = 3.0 * 86_400.0;
+    chaos.shaper.policy = Policy::Pessimistic;
+    chaos.forecast.kind = ForecasterKind::Oracle;
+    chaos.faults.crash_rate_per_host_day = 1.0;
+    chaos.faults.crash_downtime_mean_s = 3600.0;
+    chaos.faults.dropout_rate_per_day = 4.0;
+    chaos.faults.dropout_coverage = 0.4;
+    chaos.faults.corruption_rate_per_day = 2.0;
+    chaos.faults.forecast_fault_rate_per_day = 2.0;
+    std::env::set_var("ZOE_SHARD_THRESHOLD", "1");
+    std::env::set_var("ZOE_WORKERS", "1");
+    let (chaos_base, _) = run_simulation_full(
+        &chaos,
+        None,
+        "chaos-ft",
+        MonitorMode::Incremental,
+        EngineMode::FixedTick,
+    )
+    .unwrap();
+    assert!(chaos_base.faults.crashes_injected > 0, "chaos baseline injected nothing");
+    for workers in ["1", "2", "8"] {
+        std::env::set_var("ZOE_WORKERS", workers);
+        let (r, _) = run_simulation_full(
+            &chaos,
+            None,
+            "chaos-edw",
+            MonitorMode::Incremental,
+            EngineMode::EventDriven,
+        )
+        .unwrap();
+        assert_eq!(chaos_base.completed, r.completed, "chaos ZOE_WORKERS={workers}");
+        assert_eq!(chaos_base.oom_events, r.oom_events, "chaos ZOE_WORKERS={workers}");
+        assert_eq!(chaos_base.monitor_ticks, r.monitor_ticks, "chaos ZOE_WORKERS={workers}");
+        assert_eq!(chaos_base.gave_up, r.gave_up, "chaos ZOE_WORKERS={workers}");
+        assert_eq!(chaos_base.faults, r.faults, "chaos ZOE_WORKERS={workers}: fault stats");
+        assert_eq!(
+            chaos_base.turnaround.mean.to_bits(),
+            r.turnaround.mean.to_bits(),
+            "chaos ZOE_WORKERS={workers}: turnaround.mean"
+        );
+        assert_eq!(
+            chaos_base.mem_slack.mean.to_bits(),
+            r.mem_slack.mean.to_bits(),
+            "chaos ZOE_WORKERS={workers}: mem_slack.mean"
+        );
+        assert_eq!(
+            chaos_base.wasted_work.to_bits(),
+            r.wasted_work.to_bits(),
+            "chaos ZOE_WORKERS={workers}: wasted_work"
+        );
+        assert_eq!(
+            chaos_base.sim_time.to_bits(),
+            r.sim_time.to_bits(),
+            "chaos ZOE_WORKERS={workers}: sim_time"
+        );
+    }
+    std::env::remove_var("ZOE_WORKERS");
+
+    // `ZOE_FAULTS=off` neuters the chaos config at compile time: the run
+    // must be bit-identical to the healthy twin (inert fault config)
+    std::env::set_var("ZOE_FAULTS", "off");
+    let (off, _) = run_simulation_full(
+        &chaos,
+        None,
+        "chaos-off",
+        MonitorMode::Incremental,
+        EngineMode::EventDriven,
+    )
+    .unwrap();
+    std::env::remove_var("ZOE_FAULTS");
+    let mut healthy = chaos.clone();
+    healthy.faults = Default::default();
+    let (twin, _) = run_simulation_full(
+        &healthy,
+        None,
+        "healthy-twin",
+        MonitorMode::Incremental,
+        EngineMode::EventDriven,
+    )
+    .unwrap();
+    assert!(off.faults.is_zero(), "ZOE_FAULTS=off still injected faults");
+    assert_eq!(off.completed, twin.completed, "ZOE_FAULTS=off vs healthy twin");
+    assert_eq!(off.oom_events, twin.oom_events, "ZOE_FAULTS=off vs healthy twin");
+    assert_eq!(off.events, twin.events, "ZOE_FAULTS=off vs healthy twin: events");
+    assert_eq!(
+        off.turnaround.mean.to_bits(),
+        twin.turnaround.mean.to_bits(),
+        "ZOE_FAULTS=off vs healthy twin: turnaround.mean"
+    );
+    assert_eq!(
+        off.sim_time.to_bits(),
+        twin.sim_time.to_bits(),
+        "ZOE_FAULTS=off vs healthy twin: sim_time"
+    );
+    std::env::remove_var("ZOE_SHARD_THRESHOLD");
 
     let (_, first) = &reports[0];
     for (workers, r) in &reports[1..] {

@@ -24,6 +24,38 @@ ZOE_SIMD=off cargo test -q
 # explicitly regardless of this override
 ZOE_ENGINE_MODE=event-driven cargo test -q
 
+# chaos smoke: a seeded fault-injection run (crashes + telemetry
+# dropouts/corruption + forecaster faults) must complete and report
+# non-zero fault accounting in the JSON — the graceful-degradation path
+# stays alive end-to-end, not just under the unit/property suites.
+# Long jobs pin the cluster busy across the whole 3-day horizon so the
+# seeded fault windows always land on live components; the corruption
+# rate rides in via CLI flag to smoke that plumbing too.
+CHAOS_CFG="$(mktemp)" CHAOS_JSON="$(mktemp)"
+cat > "$CHAOS_CFG" <<'EOF'
+{
+  "cluster": { "hosts": 6 },
+  "workload": { "num_apps": 80, "runtime_scale": 20.0 },
+  "max_sim_time_s": 259200,
+  "faults": {
+    "crash_rate_per_host_day": 1.0, "crash_downtime_mean_s": 3600.0,
+    "dropout_rate_per_day": 4.0, "forecast_fault_rate_per_day": 2.0
+  }
+}
+EOF
+./target/release/zoe-shaper simulate --preset small --config "$CHAOS_CFG" \
+    --corruption-rate 2 --json-out "$CHAOS_JSON" >/dev/null
+grep -q '"crashes_injected":' "$CHAOS_JSON"
+if grep -q '"crashes_injected": *0[,}]' "$CHAOS_JSON"; then
+    echo "chaos smoke: no crashes injected" >&2
+    exit 1
+fi
+if grep -q '"samples_dropped": *0[,}]' "$CHAOS_JSON"; then
+    echo "chaos smoke: no telemetry samples dropped" >&2
+    exit 1
+fi
+rm -f "$CHAOS_CFG" "$CHAOS_JSON"
+
 # docs gate: rustdoc must build warning-free (broken intra-doc links,
 # bad code fences, missing docs on public items referenced from docs/)
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
