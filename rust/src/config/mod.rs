@@ -286,7 +286,7 @@ impl Default for SchedConfig {
 }
 
 /// A batch of identical hosts appended to the homogeneous base cluster.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct HostClass {
     pub count: usize,
     pub cores: f64,
@@ -336,6 +336,12 @@ pub struct WorkloadConfig {
     pub burst_mean_s: f64,
     /// Mean inter-arrival between bursts (seconds).
     pub gap_mean_s: f64,
+    /// Lower clamp on sampled runtimes, seconds (default 30 s — the
+    /// historical hard floor; lower it to admit the short-job mass the
+    /// bursty scenario family needs).
+    pub runtime_clamp_min_s: f64,
+    /// Upper clamp on sampled runtimes, seconds (default three weeks).
+    pub runtime_clamp_max_s: f64,
 }
 
 /// Forecasting parameters (§3.1).
@@ -479,6 +485,11 @@ pub struct SimConfig {
     /// Fault injection; inert (all rates zero) by default. `ZOE_FAULTS=off`
     /// force-disables injection at run time regardless of this config.
     pub faults: FaultConfig,
+    /// Optional declarative timed scenario (loaded from a scenario file
+    /// via `--scenario-file`). `None` — the default everywhere — leaves
+    /// the engine bit-for-bit identical to a build without the scenario
+    /// layer (pinned by tests/scenario_prop.rs).
+    pub scenario: Option<crate::scenario::ScenarioSpec>,
 }
 
 impl SimConfig {
@@ -496,6 +507,8 @@ impl SimConfig {
                 burst_prob: 0.7,
                 burst_mean_s: 5.0,
                 gap_mean_s: 60.0,
+                runtime_clamp_min_s: 30.0,
+                runtime_clamp_max_s: 3.0 * 7.0 * 86_400.0,
             },
             forecast: ForecastConfig {
                 kind: ForecasterKind::GpNative,
@@ -516,6 +529,7 @@ impl SimConfig {
             max_failures_before_giveup: 5,
             engine_mode: EngineMode::FixedTick,
             faults: FaultConfig::default(),
+            scenario: None,
         }
     }
 
@@ -646,6 +660,12 @@ impl SimConfig {
             if let Some(v) = w.get("gap_mean_s").and_then(Json::as_f64) {
                 self.workload.gap_mean_s = v;
             }
+            if let Some(v) = w.get("runtime_clamp_min_s").and_then(Json::as_f64) {
+                self.workload.runtime_clamp_min_s = v;
+            }
+            if let Some(v) = w.get("runtime_clamp_max_s").and_then(Json::as_f64) {
+                self.workload.runtime_clamp_max_s = v;
+            }
         }
         if let Some(f) = j.get("forecast") {
             if let Some(v) = f.get("kind").and_then(Json::as_str) {
@@ -768,6 +788,16 @@ impl SimConfig {
         if !(0.0..=1.0).contains(&self.workload.elastic_fraction) {
             return Err("elastic_fraction must be in [0,1]".into());
         }
+        let w = &self.workload;
+        if !w.runtime_clamp_min_s.is_finite() || w.runtime_clamp_min_s < 0.0 {
+            return Err("workload.runtime_clamp_min_s must be finite and >= 0".into());
+        }
+        if !w.runtime_clamp_max_s.is_finite() || w.runtime_clamp_max_s <= 0.0 {
+            return Err("workload.runtime_clamp_max_s must be finite and positive".into());
+        }
+        if w.runtime_clamp_min_s > w.runtime_clamp_max_s {
+            return Err("workload.runtime_clamp_min_s must be <= runtime_clamp_max_s".into());
+        }
         if !(0.0..=1.0).contains(&self.shaper.k1) {
             return Err("k1 must be in [0,1] (fraction of reservation)".into());
         }
@@ -817,6 +847,9 @@ impl SimConfig {
         }
         if fl.quarantine_backoff_ticks == 0 || fl.quarantine_max_backoff_ticks == 0 {
             return Err("faults.quarantine backoff ticks must be >= 1".into());
+        }
+        if let Some(s) = &self.scenario {
+            s.validate()?;
         }
         Ok(())
     }

@@ -1,7 +1,9 @@
 //! Experiment harnesses: one module per figure of the paper's evaluation
 //! (DESIGN.md §4 experiment index). Each exposes a `run(...)` that
 //! returns printable results and is shared by examples, benches and
-//! integration tests.
+//! integration tests. `sched_sweep` additionally sweeps the bundled
+//! timed-scenario library (`scenario::LIBRARY_IDS`) via
+//! `--scenario library|all|<id>`.
 
 pub mod fig2;
 pub mod fig3;

@@ -42,7 +42,9 @@ pub const RESERVATION_VARIANTS: [(&str, usize, bool); 3] =
 /// The single default variant every reservation-less scheduler runs.
 const DEFAULT_VARIANT: [(&str, usize, bool); 1] = [("", 1, true)];
 
-/// Cluster-shape scenarios the sweep covers.
+/// Sweep scenarios: the two cluster-shape axes plus every bundled timed
+/// scenario from `scenario::LIBRARY_IDS` (PR 9 — workload-family and
+/// reshape dynamics as first-class sweep coordinates).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scenario {
     /// The configured cluster as-is (homogeneous unless the config
@@ -51,29 +53,44 @@ pub enum Scenario {
     /// The configured cluster reshaped into three host classes (see
     /// [`heterogeneous_variant`]).
     Heterogeneous,
+    /// A bundled timed scenario — the index into
+    /// [`crate::scenario::LIBRARY_IDS`] — replayed on the configured
+    /// cluster via `cfg.scenario`.
+    Library(usize),
 }
 
 impl Scenario {
-    /// Parse from CLI text ("both" is handled by the caller).
+    /// Parse from CLI text ("both"/"library"/"all" are handled by the
+    /// caller); bundled library ids resolve to [`Scenario::Library`].
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "uniform" => Some(Self::Uniform),
             "heterogeneous" | "hetero" => Some(Self::Heterogeneous),
-            _ => None,
+            other => crate::scenario::LIBRARY_IDS
+                .iter()
+                .position(|id| *id == other)
+                .map(Self::Library),
         }
     }
 
-    /// Stable display name.
+    /// Stable display name (the scenario id for library entries).
     pub fn name(&self) -> &'static str {
         match self {
             Self::Uniform => "uniform",
             Self::Heterogeneous => "heterogeneous",
+            Self::Library(i) => crate::scenario::LIBRARY_IDS[*i],
         }
     }
 }
 
-/// Both scenarios, sweep order.
+/// Both cluster-shape scenarios, sweep order (the pre-PR-9 default pair;
+/// library scenarios join via `--scenario library|all|<id>`).
 pub const SCENARIOS: [Scenario; 2] = [Scenario::Uniform, Scenario::Heterogeneous];
+
+/// Every bundled timed scenario as a sweep axis, library order.
+pub fn library_scenarios() -> Vec<Scenario> {
+    (0..crate::scenario::LIBRARY_IDS.len()).map(Scenario::Library).collect()
+}
 
 /// One sweep cell: the policy pair, the cluster scenario, the
 /// reservation-axis coordinates and the run.
@@ -156,6 +173,11 @@ pub fn run_filtered(
         let scenario_cfg = match scenario {
             Scenario::Uniform => base.clone(),
             Scenario::Heterogeneous => heterogeneous_variant(base),
+            Scenario::Library(i) => {
+                let mut cfg = base.clone();
+                cfg.scenario = Some(crate::scenario::library()[i].clone());
+                cfg
+            }
         };
         for sched in SCHEDULERS {
             if only_scheduler.map_or(false, |s| s != sched) {
@@ -273,6 +295,7 @@ fn cell_json(c: &SweepCell) -> Json {
         ("app_preemptions", Json::Num(r.app_preemptions as f64)),
         ("elastic_preemptions", Json::Num(r.elastic_preemptions as f64)),
         ("mean_alloc_mem", Json::Num(r.mean_alloc_mem)),
+        ("scenario_steps", Json::Num(r.scenario_steps as f64)),
         ("sim_time", Json::Num(r.sim_time)),
     ])
 }
@@ -370,6 +393,39 @@ mod tests {
         .unwrap();
         assert_eq!(one.len(), 1);
         assert_eq!(one[0].report.name, "heterogeneous/sjf/dot-product");
+    }
+
+    #[test]
+    fn library_scenario_cells_replay_the_timed_scenario() {
+        let cfg = tiny_base();
+        // "diurnal" is a pure generation-shape scenario: cheap, and its
+        // t=0 set-family step always fires
+        let diurnal = Scenario::parse("diurnal").unwrap();
+        assert_eq!(diurnal, Scenario::Library(0));
+        assert_eq!(diurnal.name(), "diurnal");
+        let cells = run_filtered(
+            &cfg,
+            &[diurnal],
+            Some(SchedulerKind::Fifo),
+            Some(PlacerKind::WorstFit),
+        )
+        .unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].report.name, "diurnal/fifo/worst-fit");
+        assert!(
+            cells[0].report.scenario_steps >= 1,
+            "timed scenario replayed no steps: {}",
+            cells[0].report.summary()
+        );
+        // every bundled id parses to its library index, and the JSON row
+        // carries the replayed-step counter for EXPERIMENTS.md
+        assert_eq!(library_scenarios().len(), crate::scenario::LIBRARY_IDS.len());
+        for (i, id) in crate::scenario::LIBRARY_IDS.iter().enumerate() {
+            assert_eq!(Scenario::parse(id), Some(Scenario::Library(i)));
+        }
+        let j = cell_json(&cells[0]);
+        assert_eq!(j.get("scenario").and_then(|s| s.as_str()), Some("diurnal"));
+        assert!(j.get("scenario_steps").and_then(|s| s.as_f64()).unwrap() >= 1.0);
     }
 
     #[test]

@@ -211,8 +211,9 @@ pub fn backoff_delay(cfg: &FaultConfig, seed: u64, app: usize, attempt: u32) -> 
 
 /// `ZOE_FAULTS=off|0|false` force-disables injection (the compiled plan
 /// is empty) regardless of the config — the A/B switch for comparing a
-/// chaos config against its healthy twin without editing it.
-fn injection_enabled() -> bool {
+/// chaos config against its healthy twin without editing it. Public so
+/// the scenario compiler honors the same switch for its fault windows.
+pub fn injection_enabled() -> bool {
     match std::env::var("ZOE_FAULTS") {
         Ok(v) => !matches!(v.to_ascii_lowercase().as_str(), "off" | "0" | "false"),
         Err(_) => true,

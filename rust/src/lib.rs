@@ -29,6 +29,7 @@ pub mod forecast;
 pub mod metrics;
 pub mod monitor;
 pub mod runtime;
+pub mod scenario;
 pub mod scheduler;
 pub mod shaper;
 pub mod sim;

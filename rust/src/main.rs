@@ -6,6 +6,7 @@
 //!   forecast-eval  prediction-error comparison (Fig. 2)
 //!   sweep          K1×K2 heat maps (Fig. 4)
 //!   live           paced prototype run, baseline vs shaped (Fig. 5)
+//!   scenarios      list/validate declarative timed-scenario files
 //!   artifacts      list AOT artifacts visible to the runtime
 
 use std::sync::Arc;
@@ -15,6 +16,7 @@ use zoe_shaper::config::{
 };
 use zoe_shaper::experiments::{fig2, fig3, fig4, fig5, sched_sweep};
 use zoe_shaper::runtime::Runtime;
+use zoe_shaper::scenario;
 use zoe_shaper::sim::engine::run_simulation;
 use zoe_shaper::util::cli::Args;
 use zoe_shaper::util::json::Json;
@@ -29,6 +31,7 @@ fn main() {
         Some("forecast-eval") => dispatch(cmd_forecast_eval, &argv[1..]),
         Some("sweep") => dispatch(cmd_sweep, &argv[1..]),
         Some("live") => dispatch(cmd_live, &argv[1..]),
+        Some("scenarios") => dispatch(cmd_scenarios, &argv[1..]),
         Some("artifacts") => dispatch(cmd_artifacts, &argv[1..]),
         Some("--help") | Some("-h") | None => {
             println!("{}", top_help());
@@ -52,6 +55,7 @@ fn top_help() -> &'static str {
        forecast-eval   Fig. 2: ARIMA vs GP prediction-error distributions\n\
        sweep           Fig. 4: K1 x K2 heat maps (ARIMA or GP)\n\
        live            Fig. 5: paced prototype, baseline vs shaped\n\
+       scenarios       list bundled timed scenarios / validate scenario files\n\
        artifacts       list AOT artifacts and PJRT platform\n\n\
      Run `zoe-shaper <subcommand> --help` for options."
 }
@@ -105,6 +109,11 @@ fn sim_args(name: &str, about: &str) -> Args {
             "engine-mode",
             "",
             "time advance: fixed-tick|event-driven (quiet-tick elision; identical reports)",
+        )
+        .opt(
+            "scenario-file",
+            "",
+            "timed-scenario JSON file, or a bundled id (see `zoe-shaper scenarios --list`)",
         )
         .opt(
             "crash-rate",
@@ -188,6 +197,15 @@ fn load_cfg(a: &Args) -> Result<SimConfig, String> {
     if !a.get("forecast-fault-rate").is_empty() {
         cfg.faults.forecast_fault_rate_per_day = a.get_f64("forecast-fault-rate")?;
     }
+    let sf = a.get("scenario-file");
+    if !sf.is_empty() {
+        // A bundled library id (e.g. "diurnal") resolves without touching
+        // the filesystem; anything else is a path to a scenario file.
+        cfg.scenario = Some(match scenario::library_spec(sf) {
+            Some(spec) => spec,
+            None => scenario::ScenarioSpec::load(sf)?,
+        });
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -256,7 +274,11 @@ fn cmd_sched_sweep(argv: &[String]) -> Result<(), String> {
     )
     .opt("policy", "pessimistic", "baseline|optimistic|pessimistic")
     .opt("forecaster", "oracle", "oracle|last-value|arima|gp-native|gp-incr|gp")
-    .opt("scenario", "both", "cluster shape axis: uniform|heterogeneous|both")
+    .opt(
+        "scenario",
+        "both",
+        "sweep axis: uniform|heterogeneous|both|library|all|<bundled scenario id>",
+    )
     .opt(
         "json-out",
         "SCHED_SWEEP.json",
@@ -272,6 +294,12 @@ fn cmd_sched_sweep(argv: &[String]) -> Result<(), String> {
     let scenarios: Vec<sched_sweep::Scenario> = match a.get("scenario").to_ascii_lowercase().as_str()
     {
         "both" => sched_sweep::SCENARIOS.to_vec(),
+        "library" => sched_sweep::library_scenarios(),
+        "all" => {
+            let mut v = sched_sweep::SCENARIOS.to_vec();
+            v.extend(sched_sweep::library_scenarios());
+            v
+        }
         s => vec![sched_sweep::Scenario::parse(s).ok_or_else(|| format!("bad --scenario {s}"))?],
     };
     // --scheduler/--placer pin one axis; the sweep covers the others
@@ -369,6 +397,34 @@ fn cmd_live(argv: &[String]) -> Result<(), String> {
     let accel = a.get_f64("accel")?;
     let out = fig5::run(&cfg, None, accel).map_err(|e| format!("{e:#}"))?;
     println!("{}", fig5::render(&out));
+    Ok(())
+}
+
+fn cmd_scenarios(argv: &[String]) -> Result<(), String> {
+    let spec = Args::new(
+        "zoe-shaper scenarios",
+        "list bundled timed scenarios, or parse + validate scenario files",
+    )
+    .opt(
+        "validate",
+        "",
+        "comma-separated scenario files to parse + validate (no simulation)",
+    )
+    .flag("list", "list the bundled scenario library (default when no --validate)");
+    let a = parse_or_help(spec, argv)?;
+    let paths = a.get("validate");
+    if paths.is_empty() {
+        let mut t = zoe_shaper::util::table::Table::new(&["id", "name", "steps", "description"]);
+        for s in scenario::library() {
+            t.row(&[s.id.clone(), s.name.clone(), s.steps.len().to_string(), s.description.clone()]);
+        }
+        println!("{}", t.render());
+        return Ok(());
+    }
+    for path in paths.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let s = scenario::ScenarioSpec::load(path)?;
+        println!("{path}: ok ({} steps, id \"{}\")", s.steps.len(), s.id);
+    }
     Ok(())
 }
 

@@ -208,6 +208,7 @@ impl Metrics {
             truncated: false,
             // likewise copied in by the engine after the loop
             faults: FaultStats::default(),
+            scenario_steps: 0,
         }
     }
 }
@@ -300,6 +301,10 @@ pub struct RunReport {
     /// Fault-injection accounting; all-zero when the fault layer was
     /// inert (the engine copies real counts in after the loop).
     pub faults: FaultStats,
+    /// Scenario-replay steps dispatched (`scenario::ScenarioPlan`);
+    /// zero when no scenario was configured (the engine copies the real
+    /// count in after the loop).
+    pub scenario_steps: u64,
 }
 
 impl RunReport {
@@ -369,6 +374,9 @@ impl RunReport {
                 f.fallback_ticks,
             ));
         }
+        if self.scenario_steps > 0 {
+            s.push_str(&format!("\nscenario    {} steps replayed", self.scenario_steps));
+        }
         s
     }
 
@@ -427,6 +435,7 @@ impl RunReport {
                     ("fallback_ticks", Json::Num(self.faults.fallback_ticks as f64)),
                 ]),
             ),
+            ("scenario_steps", Json::Num(self.scenario_steps as f64)),
             ("turnarounds_sample", num_arr(&sample(&self.turnarounds, 200))),
             ("mem_slacks_sample", num_arr(&sample(&self.mem_slacks, 200))),
         ])

@@ -1,0 +1,870 @@
+//! Declarative timed scenarios (PR 9): a versioned JSON format —
+//! `{id, name, description, steps: [{at, action}]}` — describing *when*
+//! the demand model, the cluster shape or the fault schedule changes
+//! mid-run, compiled into ordinary discrete-event-queue events the same
+//! way `faults::FaultPlan` is (PR 8): everything is a pure function of
+//! `(spec, config, seed, horizon)`, so a scenario replays bit-for-bit
+//! across repeats, engine modes and `ZOE_WORKERS` sweeps, and an absent
+//! or empty scenario leaves the engine bit-for-bit identical to a build
+//! without this module (tests/scenario_prop.rs).
+//!
+//! ## Actions
+//!
+//! * `set-family` — switch the synthetic workload family
+//!   ([`crate::trace::families::FamilyKind`]) from this step on.
+//! * `set-arrivals` / `ramp-arrivals` — step or linearly ramp the
+//!   arrival-rate factor.
+//! * `add-hosts` / `remove-hosts` / `restore-hosts` / `resize-hosts` —
+//!   reshape the cluster: add a batch of new machines, drain the
+//!   highest-id live machines, bring drained machines back, or replace
+//!   machines with a differently-shaped batch in one step.
+//! * `fault-window` — inject one explicitly-timed fault window
+//!   (telemetry `dropout`/`corruption`, `forecast` faults, or a host
+//!   `crash`) on top of whatever `FaultConfig` schedules.
+//!
+//! ## End semantics
+//!
+//! An optional top-level `end_s` compiles a final cleanup step: drained
+//! base hosts come back, scenario-added hosts drain, and the demand
+//! model returns to the baseline family at factor 1.0. Fault windows are
+//! clamped to `end_s`. Without `end_s`, step effects persist to the end
+//! of the run.
+//!
+//! Loader errors name the offending step (`step 3 ("surge"): ...`) so a
+//! broken library file is diagnosable from the message alone.
+
+use crate::cluster::Cluster;
+use crate::config::{ClusterConfig, HostClass};
+use crate::faults::{
+    self, CrashWindow, FaultPlan, ForecastFaultWindow, TelemetryFault, TelemetryWindow,
+};
+use crate::trace::families::{FamilyKind, GenTimeline};
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+use crate::workload::HostId;
+
+/// The scenario file format version this build understands.
+pub const SCENARIO_FORMAT_VERSION: u64 = 1;
+
+/// Stream id separating scenario-compile draws (crash host picks,
+/// telemetry salts) from the fault plan's `FAULT_STREAM` and the
+/// workload generator's direct use of the seed.
+const SCENARIO_STREAM: u64 = 0x5CE_A410;
+
+/// Ids of the in-tree scenario library (`scenarios/*.json`), in display
+/// order. `sched-sweep --scenario <id>` and `scenarios --run <id>`
+/// resolve against this list.
+pub const LIBRARY_IDS: [&str; 5] = [
+    "diurnal",
+    "bursty-onoff",
+    "heavy-tail",
+    "anti-forecast",
+    "mixed-stress",
+];
+
+const LIBRARY_SOURCES: [&str; 5] = [
+    include_str!("../../../scenarios/diurnal.json"),
+    include_str!("../../../scenarios/bursty_onoff.json"),
+    include_str!("../../../scenarios/heavy_tail.json"),
+    include_str!("../../../scenarios/anti_forecast.json"),
+    include_str!("../../../scenarios/mixed_stress.json"),
+];
+
+/// What a scenario `fault-window` step injects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultWindowKind {
+    /// Telemetry dropout: covered components record no samples.
+    Dropout,
+    /// Telemetry corruption: covered components deliver NaN samples.
+    Corruption,
+    /// Forecaster fault: model outputs come back non-finite.
+    Forecast,
+    /// Host crash + recovery at window end.
+    Crash,
+}
+
+impl FaultWindowKind {
+    /// Parse from scenario-file text.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "dropout" => Some(Self::Dropout),
+            "corruption" => Some(Self::Corruption),
+            "forecast" => Some(Self::Forecast),
+            "crash" => Some(Self::Crash),
+            _ => None,
+        }
+    }
+
+    /// Stable display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Dropout => "dropout",
+            Self::Corruption => "corruption",
+            Self::Forecast => "forecast",
+            Self::Crash => "crash",
+        }
+    }
+}
+
+/// One scenario action (see the module doc for the JSON encoding).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScenarioAction {
+    /// Switch the synthetic workload family from this step on.
+    SetFamily { family: FamilyKind },
+    /// Set the arrival-rate factor (multiplier on the base rate).
+    SetArrivals { factor: f64 },
+    /// Linearly ramp the arrival-rate factor to `to_factor` over
+    /// `over_s` seconds.
+    RampArrivals { to_factor: f64, over_s: f64 },
+    /// Bring `count` new hosts of the given shape online.
+    AddHosts { count: usize, cores: f64, mem_gb: f64 },
+    /// Drain the `count` highest-id live hosts (components on them are
+    /// displaced and re-queued).
+    RemoveHosts { count: usize },
+    /// Bring back up to `count` previously drained hosts (most recently
+    /// drained first).
+    RestoreHosts { count: usize },
+    /// Replace the `count` highest-id live hosts with `count` new hosts
+    /// of a different shape, in one step.
+    ResizeHosts { count: usize, cores: f64, mem_gb: f64 },
+    /// Inject one explicitly-timed fault window starting at the step.
+    FaultWindow {
+        kind: FaultWindowKind,
+        duration_s: f64,
+        /// Component coverage for telemetry kinds, in [0,1] (ignored for
+        /// `forecast` and `crash`).
+        coverage: f64,
+        /// Crash target host (base-cluster id); seeded pick when absent.
+        host: Option<HostId>,
+    },
+}
+
+/// One timed step: `action` takes effect at simulated time `at`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioStep {
+    pub at: f64,
+    /// Optional human label, used in validation errors.
+    pub name: Option<String>,
+    pub action: ScenarioAction,
+}
+
+/// A parsed, validated scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Stable machine id (library lookup key).
+    pub id: String,
+    /// Human-readable title.
+    pub name: String,
+    /// What the scenario exercises.
+    pub description: String,
+    /// Optional cleanup time: at `end_s` the cluster returns to its
+    /// configured shape and the demand model to the baseline.
+    pub end_s: Option<f64>,
+    /// Timed steps, ascending by `at`.
+    pub steps: Vec<ScenarioStep>,
+}
+
+/// `"step 3"` or `"step 3 (\"surge\")"` — every loader error leads with
+/// this so the offending step is nameable from the message alone.
+fn step_label(idx: usize, name: Option<&str>) -> String {
+    match name {
+        Some(n) => format!("step {idx} (\"{n}\")"),
+        None => format!("step {idx}"),
+    }
+}
+
+impl ScenarioSpec {
+    /// Parse and validate a scenario document.
+    pub fn from_json(src: &str) -> Result<ScenarioSpec, String> {
+        let doc = Json::parse(src).map_err(|e| format!("scenario: {e}"))?;
+        let version = doc
+            .get("version")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| "scenario: missing numeric \"version\"".to_string())?;
+        if version != SCENARIO_FORMAT_VERSION as f64 {
+            return Err(format!(
+                "scenario: unsupported scenario version {version} (supported: {SCENARIO_FORMAT_VERSION})"
+            ));
+        }
+        let id = doc
+            .get("id")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "scenario: missing string \"id\"".to_string())?
+            .to_string();
+        let name = doc.get("name").and_then(Json::as_str).unwrap_or(&id).to_string();
+        let description = doc
+            .get("description")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
+        let end_s = doc.get("end_s").and_then(Json::as_f64);
+        let raw_steps = doc
+            .get("steps")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "scenario: missing array \"steps\"".to_string())?;
+        let mut steps = Vec::with_capacity(raw_steps.len());
+        for (idx, raw) in raw_steps.iter().enumerate() {
+            steps.push(parse_step(idx, raw)?);
+        }
+        let spec = ScenarioSpec { id, name, description, end_s, steps };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load and validate a scenario file.
+    pub fn load(path: &str) -> Result<ScenarioSpec, String> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("scenario: cannot read {path}: {e}"))?;
+        Self::from_json(&src).map_err(|e| format!("{path}: {e}"))
+    }
+
+    /// Semantic validation (also run by [`ScenarioSpec::from_json`] and
+    /// delegated to from `SimConfig::validate`). Every error names the
+    /// offending step.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.id.is_empty() {
+            return Err("scenario: \"id\" must be non-empty".into());
+        }
+        if let Some(end) = self.end_s {
+            if !end.is_finite() || end <= 0.0 {
+                return Err("scenario: \"end_s\" must be finite and positive".into());
+            }
+        }
+        let mut prev_at = 0.0f64;
+        for (idx, step) in self.steps.iter().enumerate() {
+            let label = step_label(idx, step.name.as_deref());
+            if !step.at.is_finite() || step.at < 0.0 {
+                return Err(format!("scenario: {label}: \"at\" must be finite and >= 0"));
+            }
+            if step.at < prev_at {
+                return Err(format!(
+                    "scenario: {label}: steps must be sorted by \"at\" ({} < {prev_at})",
+                    step.at
+                ));
+            }
+            prev_at = step.at;
+            if let Some(end) = self.end_s {
+                if step.at > end {
+                    return Err(format!(
+                        "scenario: {label}: \"at\" {} is past \"end_s\" {end}",
+                        step.at
+                    ));
+                }
+            }
+            validate_action(&label, &step.action)?;
+        }
+        Ok(())
+    }
+}
+
+fn validate_action(label: &str, action: &ScenarioAction) -> Result<(), String> {
+    match action {
+        ScenarioAction::SetFamily { .. } => Ok(()),
+        ScenarioAction::SetArrivals { factor } => {
+            if !factor.is_finite() || *factor <= 0.0 {
+                return Err(format!("scenario: {label}: \"factor\" must be finite and > 0"));
+            }
+            Ok(())
+        }
+        ScenarioAction::RampArrivals { to_factor, over_s } => {
+            if !to_factor.is_finite() || *to_factor <= 0.0 {
+                return Err(format!("scenario: {label}: \"to_factor\" must be finite and > 0"));
+            }
+            if !over_s.is_finite() || *over_s < 0.0 {
+                return Err(format!("scenario: {label}: \"over_s\" must be finite and >= 0"));
+            }
+            Ok(())
+        }
+        ScenarioAction::AddHosts { count, cores, mem_gb }
+        | ScenarioAction::ResizeHosts { count, cores, mem_gb } => {
+            if *count == 0 {
+                return Err(format!("scenario: {label}: \"count\" must be >= 1"));
+            }
+            if !cores.is_finite() || *cores <= 0.0 || !mem_gb.is_finite() || *mem_gb <= 0.0 {
+                return Err(format!(
+                    "scenario: {label}: \"cores\" and \"mem_gb\" must be finite and > 0"
+                ));
+            }
+            Ok(())
+        }
+        ScenarioAction::RemoveHosts { count } | ScenarioAction::RestoreHosts { count } => {
+            if *count == 0 {
+                return Err(format!("scenario: {label}: \"count\" must be >= 1"));
+            }
+            Ok(())
+        }
+        ScenarioAction::FaultWindow { duration_s, coverage, .. } => {
+            if !duration_s.is_finite() || *duration_s <= 0.0 {
+                return Err(format!("scenario: {label}: \"duration_s\" must be finite and > 0"));
+            }
+            if !(0.0..=1.0).contains(coverage) {
+                return Err(format!("scenario: {label}: \"coverage\" must be in [0,1]"));
+            }
+            Ok(())
+        }
+    }
+}
+
+fn parse_step(idx: usize, raw: &Json) -> Result<ScenarioStep, String> {
+    let name = raw.get("name").and_then(Json::as_str).map(str::to_string);
+    let label = step_label(idx, name.as_deref());
+    let at = raw
+        .get("at")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("scenario: {label}: missing numeric \"at\""))?;
+    let action_obj = raw
+        .get("action")
+        .ok_or_else(|| format!("scenario: {label}: missing \"action\""))?;
+    let ty = action_obj
+        .get("type")
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("scenario: {label}: action missing string \"type\""))?;
+    let f64_field = |key: &str| -> Result<f64, String> {
+        action_obj
+            .get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("scenario: {label}: action missing numeric \"{key}\""))
+    };
+    let count_field = || -> Result<usize, String> {
+        action_obj
+            .get("count")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| format!("scenario: {label}: action missing numeric \"count\""))
+    };
+    let action = match ty {
+        "set-family" => {
+            let fam = action_obj
+                .get("family")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("scenario: {label}: action missing string \"family\""))?;
+            let family = FamilyKind::parse(fam).ok_or_else(|| {
+                format!("scenario: {label}: unknown workload family \"{fam}\"")
+            })?;
+            ScenarioAction::SetFamily { family }
+        }
+        "set-arrivals" => ScenarioAction::SetArrivals { factor: f64_field("factor")? },
+        "ramp-arrivals" => ScenarioAction::RampArrivals {
+            to_factor: f64_field("to_factor")?,
+            over_s: f64_field("over_s")?,
+        },
+        "add-hosts" => ScenarioAction::AddHosts {
+            count: count_field()?,
+            cores: f64_field("cores")?,
+            mem_gb: f64_field("mem_gb")?,
+        },
+        "remove-hosts" => ScenarioAction::RemoveHosts { count: count_field()? },
+        "restore-hosts" => ScenarioAction::RestoreHosts { count: count_field()? },
+        "resize-hosts" => ScenarioAction::ResizeHosts {
+            count: count_field()?,
+            cores: f64_field("cores")?,
+            mem_gb: f64_field("mem_gb")?,
+        },
+        "fault-window" => {
+            let kind_str = action_obj
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("scenario: {label}: action missing string \"kind\""))?;
+            let kind = FaultWindowKind::parse(kind_str).ok_or_else(|| {
+                format!("scenario: {label}: unknown fault-window kind \"{kind_str}\"")
+            })?;
+            ScenarioAction::FaultWindow {
+                kind,
+                duration_s: f64_field("duration_s")?,
+                coverage: action_obj.get("coverage").and_then(Json::as_f64).unwrap_or(1.0),
+                host: action_obj.get("host").and_then(Json::as_usize),
+            }
+        }
+        other => {
+            return Err(format!("scenario: {label}: unknown action type \"{other}\""));
+        }
+    };
+    Ok(ScenarioStep { at, name, action })
+}
+
+/// The cluster half of one compiled step: hosts to bring up and hosts
+/// to drain when the step's event fires. Generation-only steps compile
+/// to an empty pair — the event still fires (it counts in
+/// `RunReport::scenario_steps` and bounds quiet-stretch elision).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CompiledStep {
+    pub at: f64,
+    /// Hosts returning to service at `at`.
+    pub up: Vec<HostId>,
+    /// Hosts draining at `at` (placements displaced and re-queued).
+    pub down: Vec<HostId>,
+}
+
+/// The compiled, fully deterministic schedule for one run — the
+/// scenario analogue of [`FaultPlan`]. `Default` (the no-scenario case)
+/// is completely inert: no events primed, the base generator used
+/// verbatim, the cluster built straight from the config.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ScenarioPlan {
+    /// One entry per surviving scenario step (plus the `end_s` cleanup
+    /// step when present), chronological.
+    pub steps: Vec<CompiledStep>,
+    /// Host classes the scenario appends to the configured cluster.
+    /// These hosts exist from construction but start *down*; `add` /
+    /// `resize` steps bring them up.
+    pub added_classes: Vec<HostClass>,
+    /// Generation-time demand timeline (family switches, rate changes).
+    pub timeline: GenTimeline,
+    /// Explicitly-timed fault windows, merged into the config-compiled
+    /// [`FaultPlan`] before priming.
+    pub extra_faults: FaultPlan,
+}
+
+impl ScenarioPlan {
+    /// True when the plan changes nothing: the engine then behaves
+    /// bit-for-bit as if the scenario module did not exist.
+    pub fn is_inert(&self) -> bool {
+        self.steps.is_empty()
+            && self.added_classes.is_empty()
+            && self.timeline.is_default()
+            && self.extra_faults.is_empty()
+    }
+
+    /// Total number of hosts the engine's cluster will hold (configured
+    /// hosts plus scenario-added classes).
+    pub fn total_hosts(&self, cluster: &ClusterConfig) -> usize {
+        cluster.total_hosts() + self.added_classes.iter().map(|c| c.count).sum::<usize>()
+    }
+
+    /// Build the engine's cluster for this plan: the configured shape
+    /// plus any scenario-added classes, with every added host parked
+    /// *down* until its step fires.
+    pub fn build_cluster(&self, cfg: &ClusterConfig) -> Cluster {
+        if self.added_classes.is_empty() {
+            return Cluster::new(cfg);
+        }
+        let mut shaped = cfg.clone();
+        shaped.extra_classes.extend(self.added_classes.iter().cloned());
+        let mut cluster = Cluster::new(&shaped);
+        for h in cfg.total_hosts()..cluster.len() {
+            cluster.set_host_down(h);
+        }
+        cluster
+    }
+
+    /// Merge the scenario's explicitly-timed fault windows into the
+    /// config-compiled plan. Scenario crash windows overlapping a base
+    /// window for the same host are dropped deterministically (the base
+    /// schedule wins — per-host windows must stay non-overlapping so the
+    /// engine's crash/recover pairing holds). Telemetry and forecaster
+    /// windows stack freely, as overlapping windows already do within
+    /// `FaultPlan::compile`'s independent renewal streams.
+    pub fn merge_faults_into(&self, base: &mut FaultPlan) {
+        if self.extra_faults.is_empty() {
+            return;
+        }
+        for w in &self.extra_faults.crashes {
+            let overlaps = base
+                .crashes
+                .iter()
+                .any(|b| b.host == w.host && w.crash_at < b.recover_at && b.crash_at < w.recover_at);
+            if !overlaps {
+                base.crashes.push(w.clone());
+            }
+        }
+        base.telemetry.extend(self.extra_faults.telemetry.iter().cloned());
+        base.forecast.extend(self.extra_faults.forecast.iter().cloned());
+    }
+
+    /// Compile a scenario over `[0, horizon_s]` for the configured
+    /// cluster. Pure function of its arguments: same spec, config and
+    /// seed ⇒ identical plan. `None` (or a step-less spec without
+    /// `end_s`) compiles to the inert default. `min_window_s` floors
+    /// fault-window lengths exactly as `FaultPlan::compile` does.
+    pub fn compile(
+        spec: Option<&ScenarioSpec>,
+        cluster: &ClusterConfig,
+        seed: u64,
+        horizon_s: f64,
+        min_window_s: f64,
+    ) -> ScenarioPlan {
+        let spec = match spec {
+            Some(s) => s,
+            None => return ScenarioPlan::default(),
+        };
+        let mut plan = ScenarioPlan::default();
+        let base_hosts = cluster.total_hosts();
+        let mut next_id = base_hosts;
+        // Live-host tracking during compilation: base hosts start up,
+        // scenario-added hosts down. `drained` is the restore stack
+        // (most recently drained on top).
+        let mut up: Vec<bool> = vec![true; base_hosts];
+        let mut drained: Vec<HostId> = Vec::new();
+        // Per-host end of the last scenario crash window, for intra-plan
+        // non-overlap (the engine drops cross-plan overlaps on merge).
+        let mut crash_end: Vec<f64> = vec![f64::NEG_INFINITY; base_hosts];
+        let mut rng = Pcg::new(seed, SCENARIO_STREAM);
+        let end_limit = spec.end_s.unwrap_or(horizon_s).min(horizon_s);
+        let fault_on = faults::injection_enabled();
+        for step in &spec.steps {
+            if step.at > horizon_s {
+                continue; // never fires; keep the plan minimal
+            }
+            let mut compiled = CompiledStep { at: step.at, up: Vec::new(), down: Vec::new() };
+            match &step.action {
+                ScenarioAction::SetFamily { family } => {
+                    plan.timeline.push_family(step.at, *family);
+                }
+                ScenarioAction::SetArrivals { factor } => {
+                    plan.timeline.push_set(step.at, *factor);
+                }
+                ScenarioAction::RampArrivals { to_factor, over_s } => {
+                    plan.timeline.push_ramp(step.at, *to_factor, *over_s);
+                }
+                ScenarioAction::AddHosts { count, cores, mem_gb } => {
+                    plan.added_classes.push(HostClass {
+                        count: *count,
+                        cores: *cores,
+                        mem_gb: *mem_gb,
+                    });
+                    for _ in 0..*count {
+                        compiled.up.push(next_id);
+                        up.push(true);
+                        crash_end.push(f64::NEG_INFINITY);
+                        next_id += 1;
+                    }
+                }
+                ScenarioAction::RemoveHosts { count } => {
+                    drain(*count, &mut up, &mut drained, &mut compiled.down);
+                }
+                ScenarioAction::RestoreHosts { count } => {
+                    for _ in 0..*count {
+                        match drained.pop() {
+                            Some(h) => {
+                                up[h] = true;
+                                compiled.up.push(h);
+                            }
+                            None => break,
+                        }
+                    }
+                }
+                ScenarioAction::ResizeHosts { count, cores, mem_gb } => {
+                    // Drain-and-replace in one step: the old hosts go
+                    // onto the restore stack, the replacements come up.
+                    drain(*count, &mut up, &mut drained, &mut compiled.down);
+                    plan.added_classes.push(HostClass {
+                        count: *count,
+                        cores: *cores,
+                        mem_gb: *mem_gb,
+                    });
+                    for _ in 0..*count {
+                        compiled.up.push(next_id);
+                        up.push(true);
+                        crash_end.push(f64::NEG_INFINITY);
+                        next_id += 1;
+                    }
+                }
+                ScenarioAction::FaultWindow { kind, duration_s, coverage, host } => {
+                    // Draws happen unconditionally so ZOE_FAULTS=off
+                    // changes only the fault plan, never later picks.
+                    let salt = rng.next_u64();
+                    let picked = host.unwrap_or_else(|| rng.index(base_hosts.max(1)));
+                    let start = step.at;
+                    let end = (start + duration_s.max(min_window_s)).min(end_limit);
+                    if fault_on && end > start {
+                        match kind {
+                            FaultWindowKind::Dropout | FaultWindowKind::Corruption => {
+                                plan.extra_faults.telemetry.push(TelemetryWindow {
+                                    start,
+                                    end,
+                                    kind: if *kind == FaultWindowKind::Dropout {
+                                        TelemetryFault::Dropout
+                                    } else {
+                                        TelemetryFault::Corruption
+                                    },
+                                    coverage: *coverage,
+                                    salt,
+                                });
+                            }
+                            FaultWindowKind::Forecast => {
+                                plan.extra_faults
+                                    .forecast
+                                    .push(ForecastFaultWindow { start, end });
+                            }
+                            FaultWindowKind::Crash => {
+                                // Only base-cluster hosts crash (added
+                                // hosts have their own up/down steps),
+                                // one window per host at a time.
+                                if picked < base_hosts && start >= crash_end[picked] {
+                                    crash_end[picked] = end;
+                                    plan.extra_faults.crashes.push(CrashWindow {
+                                        host: picked,
+                                        crash_at: start,
+                                        recover_at: end,
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            plan.steps.push(compiled);
+        }
+        // End semantics: restore the configured cluster shape. The
+        // demand timeline needs no cleanup entry — generation consults
+        // it only at submit times, and `end_s` caps the interesting
+        // window by construction of the library scenarios.
+        if let Some(end) = spec.end_s {
+            if end <= horizon_s {
+                let mut cleanup = CompiledStep { at: end, up: Vec::new(), down: Vec::new() };
+                // Drained base hosts come back…
+                for h in 0..base_hosts {
+                    if !up[h] {
+                        cleanup.up.push(h);
+                    }
+                }
+                // …and every scenario-added host drains.
+                for (h, live) in up.iter().enumerate().skip(base_hosts) {
+                    if *live {
+                        cleanup.down.push(h);
+                    }
+                }
+                plan.timeline.push_family(end, FamilyKind::Baseline);
+                plan.timeline.push_set(end, 1.0);
+                plan.steps.push(cleanup);
+            }
+        }
+        plan
+    }
+}
+
+/// Drain `count` of the highest-id live hosts: flip them down, push them
+/// onto the restore stack and record them in the step's `down` list. At
+/// least one host always stays up.
+fn drain(count: usize, up: &mut [bool], drained: &mut Vec<HostId>, down_out: &mut Vec<HostId>) {
+    let live = up.iter().filter(|&&u| u).count();
+    let take = count.min(live.saturating_sub(1));
+    for _ in 0..take {
+        if let Some(h) = up.iter().rposition(|&u| u) {
+            up[h] = false;
+            drained.push(h);
+            down_out.push(h);
+        }
+    }
+}
+
+/// The in-tree scenario library, parsed and validated. Panics only if a
+/// bundled file is broken — which `scripts/ci.sh` and the unit tests
+/// below catch first.
+pub fn library() -> Vec<ScenarioSpec> {
+    LIBRARY_SOURCES
+        .iter()
+        .map(|src| ScenarioSpec::from_json(src).expect("bundled scenario invalid"))
+        .collect()
+}
+
+/// Look up one library scenario by id.
+pub fn library_spec(id: &str) -> Option<ScenarioSpec> {
+    library().into_iter().find(|s| s.id == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_spec() -> ScenarioSpec {
+        ScenarioSpec::from_json(
+            r#"{
+              "version": 1, "id": "demo", "name": "Demo", "description": "d",
+              "end_s": 7200,
+              "steps": [
+                {"at": 0, "action": {"type": "set-family", "family": "diurnal"}},
+                {"at": 600, "name": "surge",
+                 "action": {"type": "ramp-arrivals", "to_factor": 2.5, "over_s": 300}},
+                {"at": 900, "action": {"type": "add-hosts", "count": 2, "cores": 8, "mem_gb": 24}},
+                {"at": 1800, "action": {"type": "remove-hosts", "count": 1}},
+                {"at": 2400, "action": {"type": "restore-hosts", "count": 1}},
+                {"at": 3000, "action": {"type": "resize-hosts", "count": 1, "cores": 16, "mem_gb": 48}},
+                {"at": 3600, "action": {"type": "fault-window", "kind": "dropout",
+                                        "duration_s": 600, "coverage": 0.5}},
+                {"at": 4200, "action": {"type": "fault-window", "kind": "crash",
+                                        "duration_s": 600, "host": 0}}
+              ]
+            }"#,
+        )
+        .expect("demo spec parses")
+    }
+
+    #[test]
+    fn parse_round_trip_covers_every_action() {
+        let s = demo_spec();
+        assert_eq!(s.id, "demo");
+        assert_eq!(s.steps.len(), 8);
+        assert_eq!(s.end_s, Some(7200.0));
+        assert!(matches!(
+            s.steps[0].action,
+            ScenarioAction::SetFamily { family: FamilyKind::Diurnal }
+        ));
+        assert_eq!(s.steps[1].name.as_deref(), Some("surge"));
+    }
+
+    #[test]
+    fn errors_name_the_offending_step() {
+        let unsorted = r#"{"version":1,"id":"x","steps":[
+          {"at": 100, "action": {"type": "set-arrivals", "factor": 2}},
+          {"at": 50, "name": "late", "action": {"type": "set-arrivals", "factor": 1}}]}"#;
+        let e = ScenarioSpec::from_json(unsorted).unwrap_err();
+        assert!(e.contains("step 1 (\"late\")"), "{e}");
+        assert!(e.contains("sorted"), "{e}");
+
+        let unknown = r#"{"version":1,"id":"x","steps":[
+          {"at": 0, "action": {"type": "warp-drive"}}]}"#;
+        let e = ScenarioSpec::from_json(unknown).unwrap_err();
+        assert!(e.contains("step 0"), "{e}");
+        assert!(e.contains("warp-drive"), "{e}");
+
+        let bad_version = r#"{"version":2,"id":"x","steps":[]}"#;
+        let e = ScenarioSpec::from_json(bad_version).unwrap_err();
+        assert!(e.contains("unsupported scenario version 2"), "{e}");
+
+        let bad_factor = r#"{"version":1,"id":"x","steps":[
+          {"at": 0, "action": {"type": "set-arrivals", "factor": 0}}]}"#;
+        let e = ScenarioSpec::from_json(bad_factor).unwrap_err();
+        assert!(e.contains("step 0") && e.contains("factor"), "{e}");
+
+        let bad_family = r#"{"version":1,"id":"x","steps":[
+          {"at": 0, "action": {"type": "set-family", "family": "mystery"}}]}"#;
+        let e = ScenarioSpec::from_json(bad_family).unwrap_err();
+        assert!(e.contains("step 0") && e.contains("mystery"), "{e}");
+    }
+
+    #[test]
+    fn compile_none_or_empty_is_inert() {
+        let cluster = ClusterConfig::uniform(4, 8.0, 16.0);
+        let plan = ScenarioPlan::compile(None, &cluster, 42, 86_400.0, 60.0);
+        assert!(plan.is_inert());
+        assert_eq!(plan, ScenarioPlan::default());
+        let empty = ScenarioSpec {
+            id: "empty".into(),
+            name: "Empty".into(),
+            description: String::new(),
+            end_s: None,
+            steps: Vec::new(),
+        };
+        let plan = ScenarioPlan::compile(Some(&empty), &cluster, 42, 86_400.0, 60.0);
+        assert!(plan.is_inert());
+    }
+
+    #[test]
+    fn compile_is_deterministic_and_tracks_hosts() {
+        let cluster = ClusterConfig::uniform(4, 8.0, 16.0);
+        let spec = demo_spec();
+        let a = ScenarioPlan::compile(Some(&spec), &cluster, 42, 86_400.0, 60.0);
+        let b = ScenarioPlan::compile(Some(&spec), &cluster, 42, 86_400.0, 60.0);
+        assert_eq!(a, b);
+        assert!(!a.is_inert());
+        // 8 steps + 1 cleanup
+        assert_eq!(a.steps.len(), 9);
+        // add-hosts (2) + resize-hosts (1) ⇒ two added classes, 3 hosts
+        assert_eq!(a.added_classes.len(), 2);
+        assert_eq!(a.total_hosts(&cluster), 7);
+        // step 2 brings up the first added pair (ids 4, 5)
+        assert_eq!(a.steps[2].up, vec![4, 5]);
+        // remove drains the highest live id (5), restore brings it back
+        assert_eq!(a.steps[3].down, vec![5]);
+        assert_eq!(a.steps[4].up, vec![5]);
+        // resize drains the new highest (5) and raises replacement id 6
+        assert_eq!(a.steps[5].down, vec![5]);
+        assert_eq!(a.steps[5].up, vec![6]);
+        // fault windows landed in the extra plan
+        assert_eq!(a.extra_faults.telemetry.len(), 1);
+        assert_eq!(a.extra_faults.crashes.len(), 1);
+        assert_eq!(a.extra_faults.crashes[0].host, 0);
+        // cleanup restores the configured shape: drained base hosts up
+        // (none here), added-and-live hosts down (ids 4 and 6; 5 was
+        // drained by the resize)
+        let cleanup = a.steps.last().unwrap();
+        assert_eq!(cleanup.at, 7200.0);
+        assert_eq!(cleanup.up, vec![5]);
+        assert_eq!(cleanup.down, vec![4, 6]);
+    }
+
+    #[test]
+    fn drain_never_empties_the_cluster() {
+        let cluster = ClusterConfig::uniform(2, 8.0, 16.0);
+        let spec = ScenarioSpec {
+            id: "x".into(),
+            name: "x".into(),
+            description: String::new(),
+            end_s: None,
+            steps: vec![ScenarioStep {
+                at: 10.0,
+                name: None,
+                action: ScenarioAction::RemoveHosts { count: 99 },
+            }],
+        };
+        let plan = ScenarioPlan::compile(Some(&spec), &cluster, 1, 86_400.0, 60.0);
+        assert_eq!(plan.steps[0].down, vec![1], "one host must stay up");
+    }
+
+    #[test]
+    fn build_cluster_parks_added_hosts_down() {
+        let cluster_cfg = ClusterConfig::uniform(3, 8.0, 16.0);
+        let spec = demo_spec();
+        let plan = ScenarioPlan::compile(Some(&spec), &cluster_cfg, 42, 86_400.0, 60.0);
+        let cluster = plan.build_cluster(&cluster_cfg);
+        assert_eq!(cluster.len(), plan.total_hosts(&cluster_cfg));
+        for h in 0..3 {
+            assert!(!cluster.is_down(h));
+        }
+        for h in 3..cluster.len() {
+            assert!(cluster.is_down(h), "added host {h} must start down");
+        }
+    }
+
+    #[test]
+    fn library_parses_and_covers_every_family() {
+        let lib = library();
+        assert_eq!(lib.len(), LIBRARY_IDS.len());
+        for (spec, id) in lib.iter().zip(LIBRARY_IDS) {
+            assert_eq!(spec.id, id);
+            assert!(!spec.steps.is_empty(), "{id} has no steps");
+        }
+        for id in LIBRARY_IDS {
+            assert!(library_spec(id).is_some());
+        }
+        // each non-baseline family appears somewhere in the library
+        for fam in [
+            FamilyKind::Diurnal,
+            FamilyKind::BurstyOnOff,
+            FamilyKind::HeavyTail,
+            FamilyKind::AntiForecast,
+        ] {
+            let used = library().iter().any(|s| {
+                s.steps.iter().any(|st| {
+                    matches!(st.action, ScenarioAction::SetFamily { family } if family == fam)
+                })
+            });
+            assert!(used, "{} unused by the library", fam.name());
+        }
+    }
+
+    #[test]
+    fn steps_past_the_horizon_are_dropped() {
+        let cluster = ClusterConfig::uniform(2, 8.0, 16.0);
+        let spec = ScenarioSpec {
+            id: "x".into(),
+            name: "x".into(),
+            description: String::new(),
+            end_s: None,
+            steps: vec![
+                ScenarioStep {
+                    at: 100.0,
+                    name: None,
+                    action: ScenarioAction::SetArrivals { factor: 2.0 },
+                },
+                ScenarioStep {
+                    at: 1e9,
+                    name: None,
+                    action: ScenarioAction::SetArrivals { factor: 3.0 },
+                },
+            ],
+        };
+        let plan = ScenarioPlan::compile(Some(&spec), &cluster, 1, 86_400.0, 60.0);
+        assert_eq!(plan.steps.len(), 1);
+    }
+}

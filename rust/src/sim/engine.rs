@@ -99,11 +99,13 @@ use crate::forecast::quarantine::{Action, HealthTracker};
 use crate::forecast::{Forecast, Forecaster, SeriesRef};
 use crate::metrics::{FaultStats, Metrics, RunReport};
 use crate::monitor::{Monitor, TickBuffers};
+use crate::scenario::ScenarioPlan;
 use crate::scheduler::{build_placer, build_scheduler, Placer, Scheduler, SchedulerFeedback};
 use crate::shaper::{self, beta, Demand, PlanScratch, ShapeActions};
 use crate::sim::{Event, EventQueue};
+use crate::trace::families;
 use crate::util::pool;
-use crate::workload::{self, AppId, Application, AppState, ComponentId, HostId};
+use crate::workload::{AppId, Application, AppState, ComponentId, HostId};
 
 /// Where forecasts come from.
 pub enum ForecastSource {
@@ -298,6 +300,16 @@ pub struct Engine {
     /// compiled fault schedule; the empty plan keeps the whole fault
     /// layer inert (no events primed, no per-tick checks taken)
     fault_plan: FaultPlan,
+    /// compiled scenario schedule; the inert default primes no events
+    /// and leaves generation/cluster construction untouched
+    scenario_plan: ScenarioPlan,
+    /// scenario steps dispatched so far → `RunReport::scenario_steps`
+    scenario_steps_fired: u64,
+    /// which hosts are down *because of a crash* (as opposed to a
+    /// scenario drain): crash state takes precedence — a scenario step
+    /// neither downs a crashed host again nor revives it early, and a
+    /// crash recovery never resurrects a scenario-drained host
+    crash_down: Vec<bool>,
     /// indices into `fault_plan.telemetry` of currently-open windows
     telemetry_open: Vec<usize>,
     /// currently-open forecaster fault windows (a count: windows from
@@ -340,7 +352,19 @@ impl Engine {
         scheduler: Box<dyn Scheduler>,
         placer: Box<dyn Placer>,
     ) -> Self {
-        let wl = workload::generate(&cfg.workload, cfg.seed);
+        // both schedules are fixed before the first event: pure
+        // functions of (config, seed, horizon), never of run state
+        let horizon = if cfg.max_sim_time_s > 0.0 { cfg.max_sim_time_s } else { DEFAULT_MAX_SIM_TIME };
+        let scenario_plan = ScenarioPlan::compile(
+            cfg.scenario.as_ref(),
+            &cfg.cluster,
+            cfg.seed,
+            horizon,
+            cfg.forecast.monitor_interval_s,
+        );
+        // with a default timeline this IS `workload::generate` (the
+        // no-scenario path cannot drift from the pre-scenario generator)
+        let wl = families::generate(&cfg.workload, cfg.seed, &scenario_plan.timeline);
         let mut comp_index = vec![(0usize, 0usize); wl.num_components];
         for app in &wl.apps {
             for (k, c) in app.components.iter().enumerate() {
@@ -350,17 +374,23 @@ impl Engine {
         let history_cap = (cfg.forecast.history * 2).max(64);
         let n_apps = wl.apps.len();
         let n_comp = wl.num_components;
-        let cluster = Cluster::new(&cfg.cluster);
-        // the fault schedule is fixed before the first event: a pure
-        // function of (config, seed, horizon), never of run state
-        let horizon = if cfg.max_sim_time_s > 0.0 { cfg.max_sim_time_s } else { DEFAULT_MAX_SIM_TIME };
-        let fault_plan = FaultPlan::compile(
+        // configured shape plus any scenario-added classes (those hosts
+        // start down until their step fires); scenario-less plans build
+        // `Cluster::new(&cfg.cluster)` verbatim
+        let cluster = scenario_plan.build_cluster(&cfg.cluster);
+        // config-scheduled crashes target only the *configured* hosts
+        // (`total_hosts()` == `cluster.len()` without a scenario, so the
+        // compiled plan is unchanged); scenario-added hosts are managed
+        // by their own up/down steps
+        let mut fault_plan = FaultPlan::compile(
             &cfg.faults,
-            cluster.len(),
+            cfg.cluster.total_hosts(),
             cfg.seed,
             horizon,
             cfg.forecast.monitor_interval_s,
         );
+        scenario_plan.merge_faults_into(&mut fault_plan);
+        let crash_down = vec![false; cluster.len()];
         let health = HealthTracker::new(
             cfg.faults.quarantine_strikes,
             cfg.faults.quarantine_backoff_ticks,
@@ -407,6 +437,9 @@ impl Engine {
             ff_touched: Vec::new(),
             primed: false,
             fault_plan,
+            scenario_plan,
+            scenario_steps_fired: 0,
+            crash_down,
             telemetry_open: Vec::new(),
             forecast_faults_open: 0,
             crash_retries: HashMap::new(),
@@ -445,6 +478,30 @@ impl Engine {
     #[doc(hidden)]
     pub fn fault_plan(&self) -> &FaultPlan {
         &self.fault_plan
+    }
+
+    /// Replace the compiled scenario plan before the run starts. The
+    /// scenario determinism suite injects the *inert* plan to pin that a
+    /// wired engine and a scenario-less build are bit-identical.
+    /// Generation-time and cluster-shape effects are fixed at
+    /// construction; this only clears/replaces the event-time schedule,
+    /// so inject it on engines whose scenario (if any) had no
+    /// generation or reshape steps.
+    #[doc(hidden)]
+    pub fn set_scenario_plan(&mut self, plan: ScenarioPlan) {
+        assert!(!self.primed, "scenario plan must be set before the run is primed");
+        assert!(
+            plan.added_classes.is_empty() && plan.timeline.is_default(),
+            "construction-time scenario effects cannot be swapped post-build"
+        );
+        self.scenario_plan = plan;
+    }
+
+    /// The compiled scenario plan (tests cross-check step counts
+    /// against the injected schedule).
+    #[doc(hidden)]
+    pub fn scenario_plan(&self) -> &ScenarioPlan {
+        &self.scenario_plan
     }
 
     /// Efficiency counters accumulated so far (see [`EngineStats`]).
@@ -557,6 +614,7 @@ impl Engine {
         report.events = events;
         report.truncated = truncated;
         report.faults = self.fault_stats.clone();
+        report.scenario_steps = self.scenario_steps_fired;
         (report, self.stats)
     }
 
@@ -593,6 +651,14 @@ impl Engine {
                 self.queue.push(w.end, Event::ForecastFaultEnd { window: i });
             }
         }
+        // scenario steps: the same pattern — ordinary queue events, an
+        // inert plan pushes nothing and the event stream stays
+        // bit-identical to a scenario-less build
+        if !self.scenario_plan.steps.is_empty() {
+            for (i, s) in self.scenario_plan.steps.iter().enumerate() {
+                self.queue.push(s.at, Event::ScenarioStep { idx: i });
+            }
+        }
     }
 
     fn dispatch(&mut self, ev: Event) {
@@ -620,6 +686,7 @@ impl Engine {
                 self.forecast_faults_open = self.forecast_faults_open.saturating_sub(1);
             }
             Event::RetryApp { app } => self.on_retry_app(app),
+            Event::ScenarioStep { idx } => self.on_scenario_step(idx),
         }
     }
 
@@ -1171,6 +1238,7 @@ impl Engine {
         let skip = !is_oracle
             && self.mode == EngineMode::EventDriven
             && self.fault_plan.is_empty()
+            && self.scenario_plan.steps.is_empty()
             && self.shaper_key_version == Some(self.cluster.version())
             && self.shaper_key.len() == self.batch_ids.len()
             && self
@@ -1515,6 +1583,12 @@ impl Engine {
     /// just those — then the host leaves both capacity indexes and
     /// reservation estimates derived from pre-crash capacity are voided.
     fn on_host_crash(&mut self, h: HostId) {
+        if self.cluster.is_down(h) {
+            // scenario-drained host: nothing to crash (per-plan windows
+            // never overlap, so this triggers only with a live scenario
+            // and never perturbs a scenario-less run)
+            return;
+        }
         let now = self.now();
         self.fault_stats.crashes_injected += 1;
         // snapshot + sort: `components_on` is unordered (swap_remove
@@ -1542,6 +1616,7 @@ impl Engine {
             }
         }
         self.cluster.set_host_down(h);
+        self.crash_down[h] = true;
         self.fault_stats.reservations_voided += self.scheduler.on_capacity_loss() as u64;
         // displacement freed capacity on the *surviving* hosts
         self.queue.push(now, Event::SchedulerWake);
@@ -1549,6 +1624,12 @@ impl Engine {
 
     /// The crashed host rejoins both capacity indexes, empty.
     fn on_host_recover(&mut self, h: HostId) {
+        if !self.crash_down[h] {
+            // the paired crash was skipped (host was scenario-drained):
+            // recovering would resurrect a host the scenario removed
+            return;
+        }
+        self.crash_down[h] = false;
         self.fault_stats.recoveries += 1;
         self.cluster.set_host_up(h);
         self.queue.push(self.now(), Event::SchedulerWake);
@@ -1612,6 +1693,97 @@ impl Engine {
         self.fault_stats.retries += 1;
         self.scheduler.enqueue(&self.apps, a);
         self.queue.push(self.now(), Event::SchedulerWake);
+    }
+
+    // ----- scenario replay ------------------------------------------------
+
+    /// Compiled scenario step `idx` fires: drain the step's `down`
+    /// hosts (placements displaced and immediately re-queued — a
+    /// planned reshape, not a fault, so no retry backoff and no fault
+    /// accounting) and return its `up` hosts to service. Crash state
+    /// takes precedence in both directions (see `crash_down`).
+    fn on_scenario_step(&mut self, idx: usize) {
+        self.scenario_steps_fired += 1;
+        let now = self.now();
+        let step = self.scenario_plan.steps[idx].clone();
+        let mut changed = false;
+        for &h in &step.down {
+            if self.cluster.is_down(h) {
+                continue; // crashed (or already drained): leave it be
+            }
+            self.scenario_drain(h, now);
+            changed = true;
+        }
+        for &h in &step.up {
+            if self.cluster.is_down(h) && !self.crash_down[h] {
+                self.cluster.set_host_up(h);
+                changed = true;
+            }
+        }
+        if changed {
+            self.queue.push(now, Event::SchedulerWake);
+        }
+    }
+
+    /// Drain one host for a scenario reshape: like `on_host_crash`, but
+    /// displaced applications are re-enqueued immediately (no backoff
+    /// ladder, no give-up grading, no fault ledger) — the operator is
+    /// reshaping the cluster, the apps did nothing wrong and the
+    /// "failure" is planned.
+    fn scenario_drain(&mut self, h: HostId, now: f64) {
+        let mut victims: Vec<ComponentId> = self.cluster.components_on(h).to_vec();
+        victims.sort_unstable();
+        let mut displaced: BTreeSet<AppId> = BTreeSet::new();
+        for &cid in &victims {
+            let (a, k) = self.comp_index[cid];
+            if self.apps[a].components[k].is_core {
+                displaced.insert(a);
+            }
+        }
+        for &a in &displaced {
+            self.scenario_displace(a, now);
+        }
+        for &cid in &victims {
+            let (a, k) = self.comp_index[cid];
+            if displaced.contains(&a) {
+                continue; // already removed with its app
+            }
+            debug_assert!(!self.apps[a].components[k].is_core);
+            if self.cluster.placement(cid).is_some() {
+                self.remove_elastic(a, cid, now);
+            }
+        }
+        self.cluster.set_host_down(h);
+        // start-time reservations estimated against the pre-reshape
+        // capacity are void either way
+        let _ = self.scheduler.on_capacity_loss();
+    }
+
+    /// Remove a reshape-displaced app (work lost, like `crash_displace`)
+    /// and hand it straight back to the scheduler.
+    fn scenario_displace(&mut self, a: AppId, now: f64) {
+        let AppState::Running { since } = self.apps[a].state else {
+            return;
+        };
+        self.service_time[a] += (now - since).max(0.0);
+        self.update_progress(a, now);
+        let done = self.apps[a].total_work - self.apps[a].remaining_work;
+        // index loop: the removals need `&mut self`
+        #[allow(clippy::needless_range_loop)]
+        for k in 0..self.apps[a].components.len() {
+            let cid = self.apps[a].components[k].id;
+            self.cluster.remove(cid);
+            self.monitor.reset(cid);
+        }
+        self.placed_elastic[a] = 0;
+        let app = &mut self.apps[a];
+        app.remaining_work = app.total_work; // work lost
+        app.state = AppState::Queued;
+        app.last_progress_at = now;
+        self.running.remove(&a);
+        self.finish_version[a] += 1; // invalidate in-flight finish
+        self.metrics.wasted_work += done;
+        self.scheduler.enqueue(&self.apps, a);
     }
 }
 

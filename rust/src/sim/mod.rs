@@ -58,6 +58,12 @@ pub enum Event {
     /// it with the scheduler (the retry half of the graded
     /// retry → give-up policy).
     RetryApp { app: AppId },
+    /// Scenario replay (`scenario::ScenarioPlan`): compiled step `idx`
+    /// fires — hosts in its `up`/`down` lists change state, the
+    /// scenario-step counter bumps, and (like the fault-window events
+    /// above) the step time bounds quiet-stretch elision so both engine
+    /// modes observe the reshape at the same instant.
+    ScenarioStep { idx: usize },
 }
 
 /// Queue entry ordered by (time, sequence) — sequence keeps FIFO order of

@@ -1,0 +1,367 @@
+//! Synthetic workload families for the scenario subsystem (PR 9).
+//!
+//! The base generator (`workload::generate`) reproduces one shape: the
+//! Google-trace-like bi-modal arrivals + lognormal runtimes of §4.1.
+//! Scenario steps can switch the *family* of the demand instead, so
+//! forecaster/scheduler claims get exercised on qualitatively different
+//! traffic:
+//!
+//! * [`FamilyKind::Diurnal`] — arrivals modulated by a 24 h sinusoid
+//!   (day/night load swings).
+//! * [`FamilyKind::BurstyOnOff`] — a square-wave duty cycle: short ON
+//!   windows at several times the base rate, long near-idle OFF gaps.
+//! * [`FamilyKind::HeavyTail`] — runtimes drawn from a Pareto tail
+//!   (index [`PARETO_ALPHA`]) instead of the lognormal empirical fit.
+//! * [`FamilyKind::AntiForecast`] — an adversarial square wave whose
+//!   phase inverts every period, so any period-locked or last-value
+//!   forecast is wrong half the time by construction.
+//!
+//! Everything here is a pure function of `(config, seed, timeline)`:
+//! the same scenario replays bit-for-bit. A default (empty)
+//! [`GenTimeline`] delegates to `workload::generate` untouched, so the
+//! no-scenario path is byte-identical to the pre-scenario generator.
+
+use crate::config::WorkloadConfig;
+use crate::trace::google::TraceDistributions;
+use crate::trace::patterns::Pattern;
+use crate::util::rng::Pcg;
+use crate::workload::{AppState, Application, Component, Workload};
+
+/// A synthetic workload family selectable per scenario step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FamilyKind {
+    /// The unmodulated Google-trace-like base shape.
+    Baseline,
+    /// Sinusoid-modulated arrivals with a 24 h period.
+    Diurnal,
+    /// On/off square-wave arrivals ([`BURSTY_DUTY`] duty cycle).
+    BurstyOnOff,
+    /// Pareto-tailed runtimes (arrivals stay at the base shape).
+    HeavyTail,
+    /// Phase-alternating square-wave arrivals (anti-forecast).
+    AntiForecast,
+}
+
+impl FamilyKind {
+    /// Parse from scenario-file / CLI text.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "baseline" | "base" | "google" => Some(Self::Baseline),
+            "diurnal" => Some(Self::Diurnal),
+            "bursty-onoff" | "bursty" | "onoff" => Some(Self::BurstyOnOff),
+            "heavy-tail" | "heavytail" | "pareto" => Some(Self::HeavyTail),
+            "anti-forecast" | "antiforecast" | "adversarial" => Some(Self::AntiForecast),
+            _ => None,
+        }
+    }
+
+    /// Stable display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Baseline => "baseline",
+            Self::Diurnal => "diurnal",
+            Self::BurstyOnOff => "bursty-onoff",
+            Self::HeavyTail => "heavy-tail",
+            Self::AntiForecast => "anti-forecast",
+        }
+    }
+
+    /// All families, in display order.
+    pub const ALL: [FamilyKind; 5] = [
+        FamilyKind::Baseline,
+        FamilyKind::Diurnal,
+        FamilyKind::BurstyOnOff,
+        FamilyKind::HeavyTail,
+        FamilyKind::AntiForecast,
+    ];
+}
+
+/// Diurnal sinusoid period (one day).
+pub const DIURNAL_PERIOD_S: f64 = 86_400.0;
+/// Diurnal modulation depth: rate swings `1 ± amplitude`.
+pub const DIURNAL_AMPLITUDE: f64 = 0.8;
+/// Bursty on/off square-wave period.
+pub const BURSTY_PERIOD_S: f64 = 3_600.0;
+/// Fraction of each bursty period spent ON.
+pub const BURSTY_DUTY: f64 = 0.25;
+/// Arrival-rate factor inside a bursty ON window.
+pub const BURSTY_ON_FACTOR: f64 = 4.0;
+/// Arrival-rate factor inside a bursty OFF window.
+pub const BURSTY_OFF_FACTOR: f64 = 0.2;
+/// Pareto tail index of the heavy-tail runtime family (α < 2: infinite
+/// variance, the classic datacenter-job regime).
+pub const PARETO_ALPHA: f64 = 1.5;
+/// Pareto scale (minimum runtime before `runtime_scale`), seconds.
+pub const PARETO_XM_S: f64 = 30.0;
+/// Anti-forecast square-wave period.
+pub const ANTI_FORECAST_PERIOD_S: f64 = 1_800.0;
+/// Anti-forecast high-phase arrival-rate factor.
+pub const ANTI_FORECAST_HIGH: f64 = 3.0;
+/// Anti-forecast low-phase arrival-rate factor.
+pub const ANTI_FORECAST_LOW: f64 = 0.25;
+/// Floor on the combined arrival-rate factor (keeps inter-arrival
+/// draws finite when a scenario stacks deep troughs).
+pub const MIN_RATE_FACTOR: f64 = 0.05;
+
+/// Instantaneous arrival-rate factor of a family at simulated time `t`
+/// (multiplier on the base arrival rate; 1.0 = unmodulated). Pure and
+/// total: every family returns a finite factor `>=` [`MIN_RATE_FACTOR`]
+/// for every finite `t >= 0`.
+pub fn rate_factor(kind: FamilyKind, t: f64) -> f64 {
+    let f = match kind {
+        FamilyKind::Baseline | FamilyKind::HeavyTail => 1.0,
+        FamilyKind::Diurnal => {
+            1.0 + DIURNAL_AMPLITUDE * (2.0 * std::f64::consts::PI * t / DIURNAL_PERIOD_S).sin()
+        }
+        FamilyKind::BurstyOnOff => {
+            if t.rem_euclid(BURSTY_PERIOD_S) < BURSTY_DUTY * BURSTY_PERIOD_S {
+                BURSTY_ON_FACTOR
+            } else {
+                BURSTY_OFF_FACTOR
+            }
+        }
+        FamilyKind::AntiForecast => {
+            // The phase inverts every period: cycle k is high in its
+            // first half when k is even, in its second half when k is
+            // odd — so `factor(t + period)` is always the *opposite*
+            // phase of `factor(t)`, defeating period-locked forecasts.
+            let cycle = (t / ANTI_FORECAST_PERIOD_S).floor() as i64;
+            let first_half = t.rem_euclid(ANTI_FORECAST_PERIOD_S) < ANTI_FORECAST_PERIOD_S / 2.0;
+            let high = if cycle.rem_euclid(2) == 0 { first_half } else { !first_half };
+            if high {
+                ANTI_FORECAST_HIGH
+            } else {
+                ANTI_FORECAST_LOW
+            }
+        }
+    };
+    f.max(MIN_RATE_FACTOR)
+}
+
+/// One time-ordered change to the generation-time demand model.
+#[derive(Debug, Clone, PartialEq)]
+enum TimelineChange {
+    /// Switch the active family at `at`.
+    Family { at: f64, kind: FamilyKind },
+    /// Set the scenario arrival-rate factor to `factor` at `at`.
+    Set { at: f64, factor: f64 },
+    /// Ramp the scenario arrival-rate factor linearly from its current
+    /// value to `to` over `over_s` seconds, starting at `at`.
+    Ramp { at: f64, to: f64, over_s: f64 },
+}
+
+impl TimelineChange {
+    fn at(&self) -> f64 {
+        match self {
+            TimelineChange::Family { at, .. }
+            | TimelineChange::Set { at, .. }
+            | TimelineChange::Ramp { at, .. } => *at,
+        }
+    }
+}
+
+/// The generation-time half of a compiled scenario: a sorted sequence
+/// of family switches and arrival-rate changes evaluated while the
+/// workload is synthesized. The default (empty) timeline means "use
+/// `workload::generate` verbatim".
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GenTimeline {
+    changes: Vec<TimelineChange>,
+}
+
+impl GenTimeline {
+    /// True when no change was recorded — [`generate`] then delegates
+    /// to `workload::generate` byte-for-byte.
+    pub fn is_default(&self) -> bool {
+        self.changes.is_empty()
+    }
+
+    /// Record a family switch at `at` (callers push in `at` order).
+    pub fn push_family(&mut self, at: f64, kind: FamilyKind) {
+        debug_assert!(self.changes.last().map_or(true, |c| c.at() <= at));
+        self.changes.push(TimelineChange::Family { at, kind });
+    }
+
+    /// Record an arrival-rate set at `at`.
+    pub fn push_set(&mut self, at: f64, factor: f64) {
+        debug_assert!(self.changes.last().map_or(true, |c| c.at() <= at));
+        self.changes.push(TimelineChange::Set { at, factor });
+    }
+
+    /// Record a linear arrival-rate ramp starting at `at`.
+    pub fn push_ramp(&mut self, at: f64, to: f64, over_s: f64) {
+        debug_assert!(self.changes.last().map_or(true, |c| c.at() <= at));
+        self.changes.push(TimelineChange::Ramp { at, to, over_s });
+    }
+
+    /// The family in effect at time `t` (last switch at or before `t`;
+    /// [`FamilyKind::Baseline`] before any switch).
+    pub fn family_at(&self, t: f64) -> FamilyKind {
+        let mut fam = FamilyKind::Baseline;
+        for c in &self.changes {
+            if c.at() > t {
+                break;
+            }
+            if let TimelineChange::Family { kind, .. } = c {
+                fam = *kind;
+            }
+        }
+        fam
+    }
+
+    /// The scenario arrival-rate factor at time `t`: sets and ramps
+    /// applied sequentially (a ramp interpolates from whatever factor
+    /// the previous changes produced). Family modulation is *not*
+    /// included — see [`GenTimeline::total_rate_factor`].
+    pub fn arrival_factor(&self, t: f64) -> f64 {
+        let mut f = 1.0;
+        for c in &self.changes {
+            if c.at() > t {
+                break;
+            }
+            match c {
+                TimelineChange::Family { .. } => {}
+                TimelineChange::Set { factor, .. } => f = *factor,
+                TimelineChange::Ramp { at, to, over_s } => {
+                    let frac = if *over_s <= 0.0 { 1.0 } else { ((t - at) / over_s).clamp(0.0, 1.0) };
+                    f += (to - f) * frac;
+                }
+            }
+        }
+        f
+    }
+
+    /// Combined arrival-rate factor at `t`: scenario factor × family
+    /// modulation, floored at [`MIN_RATE_FACTOR`].
+    pub fn total_rate_factor(&self, t: f64) -> f64 {
+        (self.arrival_factor(t) * rate_factor(self.family_at(t), t)).max(MIN_RATE_FACTOR)
+    }
+}
+
+/// Generate a seeded workload under a scenario timeline. With the
+/// default timeline this IS `workload::generate` (delegated, so the
+/// no-scenario path cannot drift from the pre-scenario generator). With
+/// a live timeline, the same sampling structure runs with inter-arrival
+/// gaps divided by the instantaneous rate factor and runtimes swapped
+/// to the Pareto tail while [`FamilyKind::HeavyTail`] is active.
+pub fn generate(cfg: &WorkloadConfig, seed: u64, timeline: &GenTimeline) -> Workload {
+    if timeline.is_default() {
+        return crate::workload::generate(cfg, seed);
+    }
+    let mut rng = Pcg::seeded(seed);
+    let mut dists = TraceDistributions::fit(cfg, &mut rng);
+    let mut apps = Vec::with_capacity(cfg.num_apps);
+    let mut t = 0.0;
+    let mut next_component = 0;
+    for app_id in 0..cfg.num_apps {
+        // A thinned renewal process: the base gap is stretched or
+        // compressed by the rate factor in effect when the gap starts.
+        t += dists.interarrival_s.sample(&mut rng) / timeline.total_rate_factor(t);
+        let elastic = rng.chance(cfg.elastic_fraction);
+        let n_core = if elastic { 3 } else { rng.int_range(1, 3) as usize };
+        let n_elastic = if elastic {
+            let lo = 1.0f64;
+            let hi = cfg.max_elastic.max(2) as f64;
+            (lo * (hi / lo).powf(rng.f64())).round() as usize
+        } else {
+            0
+        };
+        // Components of one application share pattern class and phase
+        // (same correlation argument as workload::generate): only the
+        // observation noise differs per component.
+        let mut arng = rng.fork(app_id as u64);
+        let app_cpu_pattern = Pattern::sample(&mut arng, false);
+        let app_mem_pattern = Pattern::sample(&mut arng, true);
+        let mut components = Vec::with_capacity(n_core + n_elastic);
+        for k in 0..n_core + n_elastic {
+            let mut crng = rng.fork(next_component as u64);
+            components.push(Component {
+                id: next_component,
+                app: app_id,
+                is_core: k < n_core,
+                cpu_req: dists.cpus.sample(&mut rng),
+                mem_req: dists.mem_gb.sample(&mut rng),
+                cpu_pattern: app_cpu_pattern.with_noise_seed(crng.next_u64()),
+                mem_pattern: app_mem_pattern.with_noise_seed(crng.next_u64()),
+            });
+            next_component += 1;
+        }
+        // The lognormal draw is consumed unconditionally so a family
+        // switch never shifts the RNG stream of later applications;
+        // HeavyTail substitutes a Pareto runtime on top.
+        let mut base_runtime = dists.runtime_s.sample(&mut rng);
+        if timeline.family_at(t) == FamilyKind::HeavyTail {
+            base_runtime = (rng.pareto(PARETO_XM_S, PARETO_ALPHA) * cfg.runtime_scale)
+                .clamp(cfg.runtime_clamp_min_s, cfg.runtime_clamp_max_s);
+        }
+        let tmp = Application {
+            id: app_id,
+            submit_time: t,
+            components,
+            total_work: 0.0,
+            state: AppState::Queued,
+            remaining_work: 0.0,
+            last_progress_at: 0.0,
+            failures: 0,
+            preemptions: 0,
+            shaping_disabled: false,
+        };
+        let full_rate = tmp.rate(tmp.elastic_count());
+        let total_work = base_runtime * full_rate;
+        let mut app = tmp;
+        app.total_work = total_work;
+        app.remaining_work = total_work;
+        apps.push(app);
+    }
+    Workload { apps, num_components: next_component }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    #[test]
+    fn family_names_round_trip() {
+        for f in FamilyKind::ALL {
+            assert_eq!(FamilyKind::parse(f.name()), Some(f));
+        }
+        assert!(FamilyKind::parse("mystery").is_none());
+    }
+
+    #[test]
+    fn default_timeline_delegates_byte_identically() {
+        let cfg = SimConfig::small().workload;
+        let a = crate::workload::generate(&cfg, 7);
+        let b = generate(&cfg, 7, &GenTimeline::default());
+        assert_eq!(a.num_components, b.num_components);
+        for (x, y) in a.apps.iter().zip(&b.apps) {
+            assert_eq!(x.submit_time.to_bits(), y.submit_time.to_bits());
+            assert_eq!(x.total_work.to_bits(), y.total_work.to_bits());
+            assert_eq!(x.components.len(), y.components.len());
+        }
+    }
+
+    #[test]
+    fn rate_factors_are_finite_and_floored() {
+        for f in FamilyKind::ALL {
+            for i in 0..2_000 {
+                let t = i as f64 * 97.0;
+                let r = rate_factor(f, t);
+                assert!(r.is_finite() && r >= MIN_RATE_FACTOR, "{f:?} at {t}: {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn timeline_set_and_ramp_compose() {
+        let mut tl = GenTimeline::default();
+        tl.push_set(100.0, 2.0);
+        tl.push_ramp(200.0, 4.0, 100.0);
+        assert_eq!(tl.arrival_factor(0.0), 1.0);
+        assert_eq!(tl.arrival_factor(150.0), 2.0);
+        assert!((tl.arrival_factor(250.0) - 3.0).abs() < 1e-12);
+        assert_eq!(tl.arrival_factor(1_000.0), 4.0);
+        assert!(!tl.is_default());
+    }
+}

@@ -53,10 +53,12 @@ impl TraceDistributions {
             // cpus: mostly fractional-to-2 cores, up to 6
             cpus.push(rng.lognormal(-0.4, 0.8).clamp(0.1, 6.0));
 
-            // runtime: heavy tail, 30 s .. 3 weeks (scaled per preset)
+            // runtime: heavy tail, defaults 30 s .. 3 weeks (scaled per
+            // preset; clamp bounds are config so short-job families can
+            // reach below the historical 30 s floor)
             runtime.push(
                 (rng.lognormal(6.2, 1.6) * cfg.runtime_scale)
-                    .clamp(30.0, 3.0 * 7.0 * 86_400.0),
+                    .clamp(cfg.runtime_clamp_min_s, cfg.runtime_clamp_max_s),
             );
         }
         TraceDistributions {
@@ -121,6 +123,23 @@ mod tests {
         let med = d.runtime_s.quantile(0.5);
         let q99 = d.runtime_s.quantile(0.99);
         assert!(q99 / med > 20.0, "tail ratio {}", q99 / med);
+    }
+
+    #[test]
+    fn configurable_clamp_allows_sub_30s_runtimes() {
+        // Regression: the 30 s lower clamp used to be hardcoded, silently
+        // flooring the short-job mass a sub-30 s-mean config asks for.
+        let mut cfg = SimConfig::small().workload;
+        cfg.runtime_scale = 0.01; // lognormal(6.2, 1.6) median ~493 s -> ~4.9 s
+        cfg.runtime_clamp_min_s = 0.01;
+        let mut rng = Pcg::seeded(7);
+        let d = TraceDistributions::fit(&cfg, &mut rng);
+        assert!(
+            d.runtime_s.quantile(0.5) < 30.0,
+            "median runtime {} should drop below the old 30 s floor",
+            d.runtime_s.quantile(0.5)
+        );
+        assert!(d.runtime_s.quantile(0.0) >= 0.01);
     }
 
     #[test]

@@ -10,8 +10,10 @@
 //! pattern classes (constant / periodic / ramp / bursty / quasi-walk)
 //! matching the taxonomy of Zhang et al. [66].
 
+pub mod families;
 pub mod google;
 pub mod patterns;
 
+pub use families::{FamilyKind, GenTimeline};
 pub use google::TraceDistributions;
 pub use patterns::{Pattern, PatternKind};

@@ -55,6 +55,7 @@ fn assert_reports_identical(a: &RunReport, b: &RunReport, ctx: &str) {
     assert_eq!(a.events, b.events, "{ctx}: events");
     assert_eq!(a.truncated, b.truncated, "{ctx}: truncated");
     assert_eq!(a.gave_up, b.gave_up, "{ctx}: gave_up");
+    assert_eq!(a.scenario_steps, b.scenario_steps, "{ctx}: scenario_steps");
     // FaultStats derives PartialEq; backoff_seconds is the one f64 and
     // is a sum of seed-pure draws, so == is bit-for-bit here too
     assert_eq!(a.faults, b.faults, "{ctx}: fault stats");
@@ -195,6 +196,31 @@ fn reservation_backfill_matches_reference_modes_stale_and_fed() {
         let reference = run_simulation_with(&cfg, None, &ctx, MonitorMode::ReferenceScan).unwrap();
         assert_reports_identical(&inc, &reference, &ctx);
         assert_eq!(inc.completed, 120, "{}", inc.summary());
+    }
+}
+
+// ----- PR 9: timed scenarios through the monitor-equivalence lens -------
+
+/// Timed scenarios perturb the demand model mid-run; the incremental
+/// monitor path must stay bit-identical to the reference scan under
+/// them, for every shaping policy — a scenario is just another seeded
+/// input, not an excuse for the gather modes to drift.
+#[test]
+fn incremental_matches_reference_under_library_scenarios() {
+    for scenario_id in ["diurnal", "bursty-onoff"] {
+        for policy in [Policy::Baseline, Policy::Optimistic, Policy::Pessimistic] {
+            let mut cfg = tier1_cfg();
+            cfg.shaper.policy = policy;
+            cfg.forecast.kind = ForecasterKind::Oracle;
+            cfg.scenario =
+                Some(zoe_shaper::scenario::library_spec(scenario_id).expect("bundled scenario"));
+            let ctx = format!("{scenario_id}/{}", policy.name());
+            let inc = run_simulation_with(&cfg, None, &ctx, MonitorMode::Incremental).unwrap();
+            let reference =
+                run_simulation_with(&cfg, None, &ctx, MonitorMode::ReferenceScan).unwrap();
+            assert_reports_identical(&inc, &reference, &ctx);
+            assert!(inc.scenario_steps > 0, "{ctx}: no scenario steps replayed");
+        }
     }
 }
 
@@ -340,6 +366,36 @@ fn default_policies_match_linear_reference_oracles() {
             &default_run,
             &oracle_run,
             &format!("linear oracle vs default, policy {}", policy.name()),
+        );
+    }
+}
+
+/// The linear-oracle pin again, this time with the diurnal scenario
+/// live: a generation-shape scenario changes *what* arrives, never *how*
+/// admission decides — so the indexed production policies must still be
+/// bit-identical to the seed-semantics linear oracles under it.
+#[test]
+fn default_policies_match_linear_oracles_under_diurnal_scenario() {
+    for policy in [Policy::Baseline, Policy::Optimistic, Policy::Pessimistic] {
+        let mut cfg = tier1_cfg();
+        cfg.shaper.policy = policy;
+        cfg.forecast.kind = ForecasterKind::Oracle;
+        cfg.scenario = Some(zoe_shaper::scenario::library_spec("diurnal").expect("bundled"));
+        let default_run =
+            run_simulation_with(&cfg, None, "default", MonitorMode::Incremental).unwrap();
+        let eng = Engine::with_policies(
+            cfg.clone(),
+            ForecastSource::Oracle,
+            MonitorMode::Incremental,
+            Box::new(LinearFifoOracle::default()),
+            Box::new(LinearWorstFitOracle),
+        );
+        let oracle_run = eng.run("linear-oracles-diurnal");
+        assert!(default_run.scenario_steps > 0, "diurnal scenario never fired");
+        assert_reports_identical(
+            &default_run,
+            &oracle_run,
+            &format!("diurnal linear oracle vs default, policy {}", policy.name()),
         );
     }
 }

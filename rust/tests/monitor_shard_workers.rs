@@ -9,7 +9,9 @@
 //! undefined behavior in glibc. A separate integration-test file = a
 //! separate process. PR 8 adds a chaos-config sweep (fault injection
 //! must be worker-count independent) and the `ZOE_FAULTS=off`
-//! kill-switch check here for the same reason.
+//! kill-switch check here for the same reason; PR 9 adds the
+//! timed-scenario replay sweep (same scenario file, same report, any
+//! worker count).
 
 use zoe_shaper::config::{EngineMode, ForecasterKind, Policy, SimConfig};
 use zoe_shaper::sim::engine::{run_simulation_full, run_simulation_with, MonitorMode};
@@ -220,6 +222,68 @@ fn sharded_monitor_pass_is_worker_count_independent() {
         twin.sim_time.to_bits(),
         "ZOE_FAULTS=off vs healthy twin: sim_time"
     );
+    // PR 9: timed-scenario replay must be worker-count independent too —
+    // scenario steps are ordinary queue events and the generation-time
+    // timeline is consumed before any worker pool exists, so the
+    // mixed-stress library scenario (family switch, ramps, reshapes,
+    // fault windows, cleanup) must replay bit-identically across
+    // ZOE_WORKERS ∈ {1, 2, 8} and both engine modes.
+    let mut scen = SimConfig::small();
+    scen.workload.num_apps = 60;
+    scen.cluster.hosts = 6;
+    scen.workload.runtime_scale = 20.0;
+    scen.max_sim_time_s = 3.0 * 3600.0;
+    scen.shaper.policy = Policy::Pessimistic;
+    scen.forecast.kind = ForecasterKind::Oracle;
+    scen.scenario =
+        Some(zoe_shaper::scenario::library_spec("mixed-stress").expect("bundled scenario"));
+    std::env::set_var("ZOE_WORKERS", "1");
+    let (scen_base, _) = run_simulation_full(
+        &scen,
+        None,
+        "scen-ft",
+        MonitorMode::Incremental,
+        EngineMode::FixedTick,
+    )
+    .unwrap();
+    assert!(scen_base.scenario_steps > 0, "scenario baseline replayed no steps");
+    for workers in ["1", "2", "8"] {
+        std::env::set_var("ZOE_WORKERS", workers);
+        let (r, _) = run_simulation_full(
+            &scen,
+            None,
+            "scen-edw",
+            MonitorMode::Incremental,
+            EngineMode::EventDriven,
+        )
+        .unwrap();
+        assert_eq!(scen_base.scenario_steps, r.scenario_steps, "scenario ZOE_WORKERS={workers}");
+        assert_eq!(scen_base.completed, r.completed, "scenario ZOE_WORKERS={workers}");
+        assert_eq!(scen_base.oom_events, r.oom_events, "scenario ZOE_WORKERS={workers}");
+        assert_eq!(scen_base.monitor_ticks, r.monitor_ticks, "scenario ZOE_WORKERS={workers}");
+        assert_eq!(scen_base.faults, r.faults, "scenario ZOE_WORKERS={workers}: fault stats");
+        assert_eq!(
+            scen_base.turnaround.mean.to_bits(),
+            r.turnaround.mean.to_bits(),
+            "scenario ZOE_WORKERS={workers}: turnaround.mean"
+        );
+        assert_eq!(
+            scen_base.mem_slack.mean.to_bits(),
+            r.mem_slack.mean.to_bits(),
+            "scenario ZOE_WORKERS={workers}: mem_slack.mean"
+        );
+        assert_eq!(
+            scen_base.wasted_work.to_bits(),
+            r.wasted_work.to_bits(),
+            "scenario ZOE_WORKERS={workers}: wasted_work"
+        );
+        assert_eq!(
+            scen_base.sim_time.to_bits(),
+            r.sim_time.to_bits(),
+            "scenario ZOE_WORKERS={workers}: sim_time"
+        );
+    }
+    std::env::remove_var("ZOE_WORKERS");
     std::env::remove_var("ZOE_SHARD_THRESHOLD");
 
     let (_, first) = &reports[0];

@@ -1,0 +1,304 @@
+//! Scenario-replay determinism suite (PR 9).
+//!
+//! The timed-scenario layer inherits the fault layer's contract
+//! (tests/fault_determinism.rs) and adds a third leg:
+//!
+//! * **Inert means invisible.** `cfg.scenario = None` — the default —
+//!   compiles to `ScenarioPlan::default()`: no events primed, the base
+//!   workload generator used verbatim, the cluster built straight from
+//!   the config. A run must be bit-for-bit identical to a build without
+//!   the scenario module, in both engine modes. An explicit *empty*
+//!   scenario (zero steps, no `end_s`) must be exactly as invisible.
+//!
+//! * **Replay is reproducible.** The same scenario file yields
+//!   bit-identical `RunReport`s across repeats, across
+//!   FixedTick/EventDriven, and across Incremental/ReferenceScan monitor
+//!   gathers — scenario steps are ordinary queue events, so elision and
+//!   sharding cannot reorder their effects. The `ZOE_WORKERS` ∈ {1,2,8}
+//!   sweep lives in tests/monitor_shard_workers.rs (env mutation needs
+//!   its own test binary).
+//!
+//! * **Bad files are diagnosable.** Malformed scenario files (unsorted
+//!   steps, unknown action types, unsupported versions) are rejected
+//!   with errors that name the offending step.
+
+use zoe_shaper::config::{EngineMode, ForecasterKind, Policy, SimConfig};
+use zoe_shaper::faults::FaultPlan;
+use zoe_shaper::metrics::RunReport;
+use zoe_shaper::scenario::{self, ScenarioAction, ScenarioPlan, ScenarioSpec, ScenarioStep};
+use zoe_shaper::sim::engine::{build_source, run_simulation_full, Engine, MonitorMode};
+
+/// A small world busy enough that every library-scenario step fires
+/// while applications are still live (long jobs, modest cluster).
+fn base_cfg() -> SimConfig {
+    let mut cfg = SimConfig::small();
+    cfg.workload.num_apps = 60;
+    cfg.cluster.hosts = 6;
+    cfg.workload.runtime_scale = 20.0;
+    cfg.max_sim_time_s = 3.0 * 3600.0;
+    cfg.forecast.kind = ForecasterKind::Oracle;
+    cfg.shaper.policy = Policy::Pessimistic;
+    cfg
+}
+
+/// `base_cfg` replaying the bundled mixed-stress scenario — the one
+/// library entry that exercises every action category (family switch,
+/// ramp, add/remove/restore/resize hosts, dropout + crash windows,
+/// `end_s` cleanup).
+fn stress_cfg() -> SimConfig {
+    let mut cfg = base_cfg();
+    cfg.scenario = Some(scenario::library_spec("mixed-stress").expect("bundled scenario"));
+    cfg
+}
+
+/// Bit-for-bit comparison of the report fields scenario runs exercise.
+fn assert_identical(a: &RunReport, b: &RunReport, ctx: &str) {
+    assert_eq!(a.completed, b.completed, "{ctx}: completed");
+    assert_eq!(a.scenario_steps, b.scenario_steps, "{ctx}: scenario_steps");
+    assert_eq!(a.oom_events, b.oom_events, "{ctx}: oom_events");
+    assert_eq!(a.app_preemptions, b.app_preemptions, "{ctx}: app_preemptions");
+    assert_eq!(a.elastic_preemptions, b.elastic_preemptions, "{ctx}: elastic_preemptions");
+    assert_eq!(a.gave_up, b.gave_up, "{ctx}: gave_up");
+    assert_eq!(a.forecasts_issued, b.forecasts_issued, "{ctx}: forecasts_issued");
+    assert_eq!(a.monitor_ticks, b.monitor_ticks, "{ctx}: monitor_ticks");
+    assert_eq!(a.shaper_ticks, b.shaper_ticks, "{ctx}: shaper_ticks");
+    assert_eq!(a.events, b.events, "{ctx}: events");
+    assert_eq!(a.truncated, b.truncated, "{ctx}: truncated");
+    assert_eq!(a.faults, b.faults, "{ctx}: fault stats");
+    let exact = [
+        (a.turnaround.mean, b.turnaround.mean, "turnaround.mean"),
+        (a.wait.mean, b.wait.mean, "wait.mean"),
+        (a.stretch.mean, b.stretch.mean, "stretch.mean"),
+        (a.cpu_slack.mean, b.cpu_slack.mean, "cpu_slack.mean"),
+        (a.mem_slack.mean, b.mem_slack.mean, "mem_slack.mean"),
+        (a.wasted_work, b.wasted_work, "wasted_work"),
+        (a.mean_alloc_cpu, b.mean_alloc_cpu, "mean_alloc_cpu"),
+        (a.mean_alloc_mem, b.mean_alloc_mem, "mean_alloc_mem"),
+        (a.peak_host_usage, b.peak_host_usage, "peak_host_usage"),
+        (a.failed_app_fraction, b.failed_app_fraction, "failed_app_fraction"),
+        (a.sim_time, b.sim_time, "sim_time"),
+    ];
+    for (x, y, name) in exact {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {name} {x} vs {y}");
+    }
+}
+
+#[test]
+fn scenario_replay_is_bit_identical_across_engine_modes() {
+    let cfg = stress_cfg();
+    let (ft, _) =
+        run_simulation_full(&cfg, None, "ft", MonitorMode::Incremental, EngineMode::FixedTick)
+            .unwrap();
+    let (ed, _) =
+        run_simulation_full(&cfg, None, "ed", MonitorMode::Incremental, EngineMode::EventDriven)
+            .unwrap();
+    assert!(
+        ft.scenario_steps > 0,
+        "mixed-stress scenario replayed no steps: {}",
+        ft.summary()
+    );
+    assert_identical(&ft, &ed, "mixed-stress ft vs ed");
+    // and the incremental gather still matches the reference scan
+    let (rs, _) =
+        run_simulation_full(&cfg, None, "rs", MonitorMode::ReferenceScan, EngineMode::FixedTick)
+            .unwrap();
+    assert_identical(&ft, &rs, "mixed-stress incremental vs reference");
+}
+
+#[test]
+fn scenario_replay_is_repeatable() {
+    let cfg = stress_cfg();
+    let (a, _) =
+        run_simulation_full(&cfg, None, "a", MonitorMode::Incremental, EngineMode::EventDriven)
+            .unwrap();
+    let (b, _) =
+        run_simulation_full(&cfg, None, "b", MonitorMode::Incremental, EngineMode::EventDriven)
+            .unwrap();
+    assert_identical(&a, &b, "same scenario, same seed");
+    // a different seed re-rolls the workload (and the scenario's seeded
+    // draws) but replays the same step schedule
+    let mut cfg2 = stress_cfg();
+    cfg2.seed = 43;
+    let (c, _) =
+        run_simulation_full(&cfg2, None, "c", MonitorMode::Incremental, EngineMode::EventDriven)
+            .unwrap();
+    assert_eq!(a.scenario_steps, c.scenario_steps, "step schedule is seed-independent");
+    assert_ne!(
+        a.turnaround.mean.to_bits(),
+        c.turnaround.mean.to_bits(),
+        "different seeds must draw different workloads"
+    );
+}
+
+#[test]
+fn every_library_scenario_replays_identically_in_both_modes() {
+    for spec in scenario::library() {
+        let mut cfg = base_cfg();
+        // keep the full-library sweep cheap: fewer apps per entry
+        cfg.workload.num_apps = 24;
+        cfg.scenario = Some(spec.clone());
+        cfg.validate().unwrap();
+        let (ft, _) =
+            run_simulation_full(&cfg, None, "ft", MonitorMode::Incremental, EngineMode::FixedTick)
+                .unwrap();
+        let (ed, _) = run_simulation_full(
+            &cfg,
+            None,
+            "ed",
+            MonitorMode::Incremental,
+            EngineMode::EventDriven,
+        )
+        .unwrap();
+        assert!(ft.scenario_steps > 0, "{}: no steps replayed", spec.id);
+        assert_identical(&ft, &ed, &format!("library {}", spec.id));
+    }
+}
+
+#[test]
+fn no_scenario_and_empty_scenario_are_bit_identical() {
+    // `None` (the default) and an explicit zero-step scenario both
+    // compile to the inert plan: nothing primed, nothing branched
+    let empty = ScenarioSpec {
+        id: "empty".into(),
+        name: "Empty".into(),
+        description: String::new(),
+        end_s: None,
+        steps: Vec::new(),
+    };
+    for mode in [EngineMode::FixedTick, EngineMode::EventDriven] {
+        let (plain, _) =
+            run_simulation_full(&base_cfg(), None, "plain", MonitorMode::Incremental, mode)
+                .unwrap();
+        let mut cfg = base_cfg();
+        cfg.scenario = Some(empty.clone());
+        cfg.validate().unwrap();
+        let (noop, _) =
+            run_simulation_full(&cfg, None, "noop", MonitorMode::Incremental, mode).unwrap();
+        assert_eq!(plain.scenario_steps, 0);
+        assert_identical(&plain, &noop, "empty scenario vs none");
+    }
+}
+
+#[test]
+fn neutered_plan_is_bit_identical_to_the_unwired_engine() {
+    // A fault-window-only scenario leaves construction-time state (the
+    // workload generator, the cluster shape) untouched, so its compiled
+    // plan can be swapped for the inert default post-build: every
+    // scenario knob in the config is hot, yet nothing may differ — the
+    // wired engine degenerates to the unwired one (the FaultPlan
+    // analogue lives in tests/fault_determinism.rs).
+    let windows = ScenarioSpec {
+        id: "windows".into(),
+        name: "Windows".into(),
+        description: String::new(),
+        end_s: None,
+        steps: vec![
+            ScenarioStep {
+                at: 600.0,
+                name: None,
+                action: ScenarioAction::FaultWindow {
+                    kind: scenario::FaultWindowKind::Dropout,
+                    duration_s: 900.0,
+                    coverage: 0.5,
+                    host: None,
+                },
+            },
+            ScenarioStep {
+                at: 1800.0,
+                name: None,
+                action: ScenarioAction::FaultWindow {
+                    kind: scenario::FaultWindowKind::Crash,
+                    duration_s: 600.0,
+                    coverage: 1.0,
+                    host: Some(0),
+                },
+            },
+        ],
+    };
+    for mode in [EngineMode::FixedTick, EngineMode::EventDriven] {
+        let plain = {
+            let src = build_source(&base_cfg(), None).unwrap();
+            let mut e = Engine::new(base_cfg(), src);
+            e.set_engine_mode(mode);
+            e.run("plain")
+        };
+        let neutered = {
+            let mut cfg = base_cfg();
+            cfg.scenario = Some(windows.clone());
+            let src = build_source(&cfg, None).unwrap();
+            let mut e = Engine::new(cfg, src);
+            assert!(!e.scenario_plan().steps.is_empty(), "scenario must compile real steps");
+            assert!(!e.fault_plan().is_empty(), "scenario windows must reach the fault plan");
+            e.set_scenario_plan(ScenarioPlan::default());
+            e.set_fault_plan(FaultPlan::default());
+            e.set_engine_mode(mode);
+            e.run("neutered")
+        };
+        assert_eq!(neutered.scenario_steps, 0);
+        assert_identical(&plain, &neutered, "neutered plan vs unwired");
+    }
+}
+
+#[test]
+fn malformed_scenario_files_are_rejected_with_step_naming_errors() {
+    let write_tmp = |name: &str, text: &str| -> String {
+        let p = std::env::temp_dir().join(name);
+        std::fs::write(&p, text).unwrap();
+        p.to_str().unwrap().to_string()
+    };
+
+    let unsorted = write_tmp(
+        "zoe_scenario_unsorted.json",
+        r#"{"version":1,"id":"x","steps":[
+          {"at": 100, "action": {"type": "set-arrivals", "factor": 2}},
+          {"at": 50, "name": "late", "action": {"type": "set-arrivals", "factor": 1}}]}"#,
+    );
+    let e = ScenarioSpec::load(&unsorted).unwrap_err();
+    assert!(e.contains(&unsorted), "error must lead with the path: {e}");
+    assert!(e.contains("step 1 (\"late\")"), "{e}");
+    assert!(e.contains("sorted"), "{e}");
+
+    let unknown = write_tmp(
+        "zoe_scenario_unknown.json",
+        r#"{"version":1,"id":"x","steps":[
+          {"at": 0, "action": {"type": "warp-drive"}}]}"#,
+    );
+    let e = ScenarioSpec::load(&unknown).unwrap_err();
+    assert!(e.contains("step 0") && e.contains("warp-drive"), "{e}");
+
+    let bad_version = write_tmp(
+        "zoe_scenario_badver.json",
+        r#"{"version":9,"id":"x","steps":[]}"#,
+    );
+    let e = ScenarioSpec::load(&bad_version).unwrap_err();
+    assert!(e.contains("unsupported scenario version 9"), "{e}");
+
+    let e = ScenarioSpec::load("/nonexistent/zoe_scenario.json").unwrap_err();
+    assert!(e.contains("cannot read"), "{e}");
+
+    for p in [unsorted, unknown, bad_version] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn sim_config_validate_delegates_to_the_scenario() {
+    // a structurally valid config holding a semantically broken scenario
+    // must fail validation with the step-naming error, so `--config` +
+    // `--scenario-file` users see the same diagnostics as the loader
+    let mut cfg = base_cfg();
+    cfg.scenario = Some(ScenarioSpec {
+        id: "bad".into(),
+        name: "Bad".into(),
+        description: String::new(),
+        end_s: None,
+        steps: vec![ScenarioStep {
+            at: 0.0,
+            name: Some("zero".into()),
+            action: ScenarioAction::SetArrivals { factor: 0.0 },
+        }],
+    });
+    let e = cfg.validate().unwrap_err();
+    assert!(e.contains("step 0 (\"zero\")"), "{e}");
+    assert!(e.contains("factor"), "{e}");
+}

@@ -56,6 +56,26 @@ if grep -q '"samples_dropped": *0[,}]' "$CHAOS_JSON"; then
 fi
 rm -f "$CHAOS_CFG" "$CHAOS_JSON"
 
+# scenario gate: every bundled scenario file must parse + validate
+# through the real loader (no simulation), so a broken scenarios/*.json
+# can never ship — loader errors name the offending step.
+for f in ../scenarios/*.json; do
+    ./target/release/zoe-shaper scenarios --validate "$f" >/dev/null
+done
+
+# scenario smoke: one fast library scenario end-to-end — the replayed
+# step counter in the report JSON must be non-zero, proving the timed
+# steps actually fired rather than the scenario silently compiling away.
+SCEN_JSON="$(mktemp)"
+./target/release/zoe-shaper simulate --preset small --apps 40 \
+    --scenario-file ../scenarios/diurnal.json --json-out "$SCEN_JSON" >/dev/null
+grep -q '"scenario_steps":' "$SCEN_JSON"
+if grep -q '"scenario_steps": *0[,}]' "$SCEN_JSON"; then
+    echo "scenario smoke: no scenario steps replayed" >&2
+    exit 1
+fi
+rm -f "$SCEN_JSON"
+
 # docs gate: rustdoc must build warning-free (broken intra-doc links,
 # bad code fences, missing docs on public items referenced from docs/)
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
