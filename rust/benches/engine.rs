@@ -19,18 +19,25 @@
 //! records the quiet-tick-elision speedup. The churn-fault case (PR 8)
 //! re-times the 250-host tick under a live fault plan — crash churn
 //! plus telemetry dropout/corruption windows — to price the fault
-//! layer's per-row disposition check. Results are appended to
+//! layer's per-row disposition check. The federation case (PR 10)
+//! pairs a monolithic and a 4-shard warm 250-host tick and prices a
+//! cross-shard overflow probe chain against a home-shard hit.
+//! Results are appended to
 //! `BENCH_engine.json` keyed by
 //! git revision, so the cross-PR trajectory accumulates. `ZOE_WORKERS`
 //! caps the sampling-pass worker threads.
 
+use std::sync::Arc;
 use std::time::Duration;
 
+use zoe_shaper::cluster::Cluster;
 use zoe_shaper::config::{EngineMode, ForecasterKind, KernelKind, Policy, SimConfig};
+use zoe_shaper::federation::{FederatedPlacer, ShardPlan};
 use zoe_shaper::forecast::gp_incremental::{GpIncremental, SlideMode};
 use zoe_shaper::forecast::{Forecaster, SeriesRef};
 use zoe_shaper::scheduler::{
-    shadow_start_time, ReservationBackfillScheduler, Scheduler, SchedulerFeedback,
+    shadow_start_time, Placer, ReservationBackfillScheduler, Scheduler, SchedulerFeedback,
+    WorstFitPlacer,
 };
 use zoe_shaper::shaper::ShapeActions;
 use zoe_shaper::sim::engine::{run_simulation_full, Engine, ForecastSource, MonitorMode};
@@ -42,6 +49,13 @@ use zoe_shaper::workload::AppState;
 /// Build and warm an engine: dense arrivals of long-running apps fill
 /// the cluster, then several monitor/shaper cycles reach steady state.
 fn warm_engine(hosts: usize, apps: usize) -> Engine {
+    warm_engine_sharded(hosts, apps, 1)
+}
+
+/// `warm_engine` with a pinned coordinator shard count (PR 10); shards
+/// must be set before the first pump, so the whole warm phase runs
+/// under the federated control plane being measured.
+fn warm_engine_sharded(hosts: usize, apps: usize, shards: usize) -> Engine {
     let mut cfg = SimConfig::small();
     cfg.cluster.hosts = hosts;
     cfg.workload.num_apps = apps;
@@ -54,6 +68,9 @@ fn warm_engine(hosts: usize, apps: usize) -> Engine {
     cfg.forecast.kind = ForecasterKind::Oracle;
     cfg.shaper.policy = Policy::Pessimistic;
     let mut eng = Engine::new(cfg, ForecastSource::Oracle);
+    if shards > 1 {
+        eng.set_shards(shards);
+    }
     // arrivals span ~`apps` seconds; warm a comfortable margin past them
     eng.pump_until(apps as f64 + 1800.0);
     eng
@@ -307,6 +324,70 @@ fn bench_churn_faults(b: &mut Bench) {
     eng.cluster().check_invariants().expect("churn-fault bench left the cluster inconsistent");
 }
 
+/// Federation cases (PR 10): the warm 250-host monitor and shaper tick
+/// under 4 coordinator shards, paired with a fresh monolithic warm-up
+/// of the identical config so the overhead of the per-shard control
+/// planes (arena routing, per-shard forecast batches, sequential
+/// federated shaping) is a same-run ratio rather than a cross-run
+/// comparison against `engine_*_tick_250hosts`. The overflow case then
+/// prices one cross-shard admission probe chain on a cluster whose
+/// home shard is saturated — the worst-case `FederatedPlacer::select`
+/// walk — against the home-shard hit on an empty shard.
+fn bench_federation(b: &mut Bench) {
+    let mut mono = warm_engine_sharded(250, 3000, 1);
+    let mut fed = warm_engine_sharded(250, 3000, 4);
+    println!(
+        "  [federation] warm state: monolithic {} / federated4 {} components placed",
+        mono.cluster().placed_count(),
+        fed.cluster().placed_count()
+    );
+    assert!(mono.cluster().placed_count() > 0, "monolithic warmup placed nothing");
+    assert!(fed.cluster().placed_count() > 0, "federated warmup placed nothing");
+    let m_mon =
+        b.run("engine_monitor_tick_monolithic_250hosts", || mono.monitor_tick_once()).ns_per_iter();
+    let f_mon =
+        b.run("engine_monitor_tick_federated4_250hosts", || fed.monitor_tick_once()).ns_per_iter();
+    let m_shp =
+        b.run("engine_shaper_tick_monolithic_250hosts", || mono.shaper_tick_once()).ns_per_iter();
+    let f_shp =
+        b.run("engine_shaper_tick_federated4_250hosts", || fed.shaper_tick_once()).ns_per_iter();
+    mono.cluster().check_invariants().expect("federation bench left the monolithic cluster inconsistent");
+    fed.cluster().check_invariants().expect("federation bench left the federated cluster inconsistent");
+    println!(
+        "  -> 4-shard overhead on the warm tick: monitor {:.2}x, shaper {:.2}x",
+        f_mon / m_mon.max(1e-9),
+        f_shp / m_shp.max(1e-9)
+    );
+
+    // overflow routing: 256 hosts in 4 shards, shard 0 saturated, so a
+    // shard-0-homed admission must probe the ring before it places
+    let mut cfg = SimConfig::small();
+    cfg.cluster.hosts = 256;
+    let mut cluster = Cluster::new(&cfg.cluster);
+    let plan = ShardPlan::new(cluster.len(), 4);
+    let inner: Arc<dyn Placer> = Arc::new(WorstFitPlacer);
+    let overflow = FederatedPlacer::new(Arc::clone(&inner), plan.clone(), 0, 0);
+    let home_hit = FederatedPlacer::new(Arc::clone(&inner), plan.clone(), 1, 0);
+    let (lo, hi) = plan.range(0);
+    let cap_cpu = cluster.hosts[0].total_cpus;
+    let cap_mem = cluster.hosts[0].total_mem;
+    for (cid, h) in (lo..hi).enumerate() {
+        assert!(
+            cluster.place(500_000 + cid, h, cap_cpu * 0.95, cap_mem * 0.95, 0.0),
+            "could not saturate host {h} of the home shard"
+        );
+    }
+    let (req_cpu, req_mem) = (cap_cpu * 0.5, cap_mem * 0.5);
+    assert!(
+        overflow.select(&cluster, req_cpu, req_mem).map(|h| h >= hi).unwrap_or(false),
+        "overflow case must route off the saturated home shard"
+    );
+    b.run("federated_placer_overflow_route_256hosts", || {
+        overflow.select(&cluster, req_cpu, req_mem)
+    });
+    b.run("federated_placer_home_hit_256hosts", || home_hit.select(&cluster, req_cpu, req_mem));
+}
+
 fn main() {
     let mut b = Bench::new("engine").with_target(Duration::from_millis(700));
 
@@ -317,6 +398,9 @@ fn main() {
 
     // PR 8: the same 250-host tick under live crash + telemetry churn
     bench_churn_faults(&mut b);
+
+    // PR 10: warm tick under 4 coordinator shards + overflow routing
+    bench_federation(&mut b);
 
     // the forecast pipeline's warm tick: incremental vs refactorize
     bench_incremental_gp(&mut b);

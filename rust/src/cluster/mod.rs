@@ -138,6 +138,43 @@ impl FitTree {
             .or_else(|| self.search(2 * k + 1, cpus, mem))
     }
 
+    /// Range-restricted [`FitTree::first_fit`]: lowest fitting host id in
+    /// `[lo, hi)`. Same left-first descent with the extra prune of
+    /// subtrees disjoint from the range, so over the full range the
+    /// visit order — and therefore the answer — is identical to
+    /// `first_fit`.
+    fn first_fit_in(&self, lo: usize, hi: usize, cpus: f64, mem: f64) -> Option<usize> {
+        if lo >= hi {
+            return None;
+        }
+        self.search_in(1, 0, self.base, lo, hi, cpus, mem)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn search_in(
+        &self,
+        k: usize,
+        node_lo: usize,
+        node_hi: usize,
+        lo: usize,
+        hi: usize,
+        cpus: f64,
+        mem: f64,
+    ) -> Option<usize> {
+        if node_hi <= lo || node_lo >= hi || !self.fits(k, cpus, mem) {
+            return None;
+        }
+        if k >= self.base {
+            // the node interval [node_lo, node_hi) = [i, i+1) already
+            // intersects [lo, hi), so the leaf is in range
+            let i = k - self.base;
+            return if i < self.n { Some(i) } else { None };
+        }
+        let mid = (node_lo + node_hi) / 2;
+        self.search_in(2 * k, node_lo, mid, lo, hi, cpus, mem)
+            .or_else(|| self.search_in(2 * k + 1, mid, node_hi, lo, hi, cpus, mem))
+    }
+
     /// Fitting host maximizing `wc·free_cpu + wm·free_mem` (weights must
     /// be non-negative), ties resolved to the highest host id. Branch &
     /// bound on the per-node maxima: `wc·max_cpu + wm·max_mem` is an
@@ -185,6 +222,64 @@ impl FitTree {
         self.weighted_search(2 * k + 1, cpus, mem, wc, wm, best);
         self.weighted_search(2 * k, cpus, mem, wc, wm, best);
     }
+
+    /// Range-restricted [`FitTree::max_weighted_fit`]: best host in
+    /// `[lo, hi)`. A node's maxima over its whole subtree remain a valid
+    /// upper bound for the leaves inside the range, so the branch &
+    /// bound stays exact; over the full range the descent is identical
+    /// to `max_weighted_fit`.
+    fn max_weighted_fit_in(
+        &self,
+        lo: usize,
+        hi: usize,
+        cpus: f64,
+        mem: f64,
+        wc: f64,
+        wm: f64,
+    ) -> Option<usize> {
+        debug_assert!(wc >= 0.0 && wm >= 0.0, "weights must be non-negative");
+        if lo >= hi {
+            return None;
+        }
+        let mut best: Option<(f64, usize)> = None;
+        self.weighted_search_in(1, 0, self.base, lo, hi, cpus, mem, wc, wm, &mut best);
+        best.map(|(_, h)| h)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn weighted_search_in(
+        &self,
+        k: usize,
+        node_lo: usize,
+        node_hi: usize,
+        lo: usize,
+        hi: usize,
+        cpus: f64,
+        mem: f64,
+        wc: f64,
+        wm: f64,
+        best: &mut Option<(f64, usize)>,
+    ) {
+        if node_hi <= lo || node_lo >= hi || !self.fits(k, cpus, mem) {
+            return;
+        }
+        let bound = wc * self.cpu[k] + wm * self.mem[k];
+        if let Some((score, _)) = *best {
+            if bound <= score {
+                return;
+            }
+        }
+        if k >= self.base {
+            let i = k - self.base;
+            if i < self.n {
+                *best = Some((bound, i));
+            }
+            return;
+        }
+        let mid = (node_lo + node_hi) / 2;
+        self.weighted_search_in(2 * k + 1, mid, node_hi, lo, hi, cpus, mem, wc, wm, best);
+        self.weighted_search_in(2 * k, node_lo, mid, lo, hi, cpus, mem, wc, wm, best);
+    }
 }
 
 /// The whole cluster: hosts plus the arena-backed placement table and
@@ -215,6 +310,14 @@ pub struct Cluster {
     /// stale finish events: consumers capture `version()` with a
     /// projection and discard it on mismatch.
     version: u64,
+    /// Per-host class index: hosts sharing a construction-time
+    /// (total_cpus, total_mem) shape share a class, numbered in
+    /// first-appearance order (0 = the base class). Fixed at
+    /// construction — the fairness breakdown's grouping key, not a live
+    /// capacity fact (a scenario resize does not re-class a host).
+    host_class: Vec<u16>,
+    /// Number of distinct construction-time host shapes.
+    num_classes: usize,
 }
 
 impl Cluster {
@@ -248,6 +351,16 @@ impl Cluster {
             mem_index.insert((order::key(h.free_mem()), h.id));
             fit_tree.update(h.id, h.free_cpus(), h.free_mem());
         }
+        // class = distinct (cpus, mem) shape, first-appearance numbering
+        let mut class_ids: std::collections::BTreeMap<(u64, u64), u16> =
+            std::collections::BTreeMap::new();
+        let host_class: Vec<u16> = shapes
+            .iter()
+            .map(|&(c, m)| {
+                let next = class_ids.len() as u16;
+                *class_ids.entry((c.to_bits(), m.to_bits())).or_insert(next)
+            })
+            .collect();
         Cluster {
             host_comps: vec![Vec::new(); hosts.len()],
             down: vec![false; hosts.len()],
@@ -257,6 +370,8 @@ impl Cluster {
             mem_index,
             fit_tree,
             version: 0,
+            num_classes: class_ids.len(),
+            host_class,
         }
     }
 
@@ -305,6 +420,17 @@ impl Cluster {
     /// Number of placed components.
     pub fn placed_count(&self) -> usize {
         self.placed.len()
+    }
+
+    /// Construction-time class of host `h` (0 = the base class; hosts
+    /// with the same configured shape share a class).
+    pub fn class_of(&self, h: HostId) -> u16 {
+        self.host_class[h]
+    }
+
+    /// Number of distinct construction-time host classes.
+    pub fn class_count(&self) -> usize {
+        self.num_classes
     }
 
     /// Is host `h` crashed (fault injection)?
@@ -523,13 +649,88 @@ impl Cluster {
         self.fit_tree.max_weighted_fit(cpus, mem, cpus.max(0.0), mem.max(0.0))
     }
 
+    /// Range-restricted [`Cluster::first_fit`]: lowest-id fitting host
+    /// in `[lo, hi)`. Over the full range the segment-tree descent is
+    /// identical to `first_fit` — same answer, bit for bit. The
+    /// federation layer's per-shard admission runs on these `_in`
+    /// queries with the shard's host range.
+    pub fn first_fit_in(&self, lo: HostId, hi: HostId, cpus: f64, mem: f64) -> Option<HostId> {
+        self.fit_tree.first_fit_in(lo, hi.min(self.hosts.len()), cpus, mem)
+    }
+
+    /// Range-restricted [`Cluster::worst_fit`]: most free memory among
+    /// hosts in `[lo, hi)` (ties to the highest id, as for the full
+    /// query). Walks the same free-memory index, skipping out-of-range
+    /// hosts.
+    pub fn worst_fit_in(&self, lo: HostId, hi: HostId, cpus: f64, mem: f64) -> Option<HostId> {
+        for &(k, h) in self.mem_index.iter().rev() {
+            if order::unkey(k) + CAPACITY_EPS < mem {
+                break; // every remaining host has less free memory
+            }
+            if !(lo..hi).contains(&h) {
+                continue;
+            }
+            if self.hosts[h].free_cpus() + CAPACITY_EPS >= cpus {
+                return Some(h);
+            }
+        }
+        None
+    }
+
+    /// Range-restricted [`Cluster::best_fit`]: least free memory that
+    /// still fits among hosts in `[lo, hi)` (ties to the lowest id).
+    pub fn best_fit_in(&self, lo: HostId, hi: HostId, cpus: f64, mem: f64) -> Option<HostId> {
+        let start = (order::key(mem - 2.0 * CAPACITY_EPS), 0usize);
+        for &(_, h) in self.mem_index.range(start..) {
+            if !(lo..hi).contains(&h) {
+                continue;
+            }
+            let host = &self.hosts[h];
+            if host.free_cpus() + CAPACITY_EPS >= cpus && host.free_mem() + CAPACITY_EPS >= mem {
+                return Some(h);
+            }
+        }
+        None
+    }
+
+    /// Range-restricted [`Cluster::cpu_aware_fit`] over hosts `[lo, hi)`.
+    pub fn cpu_aware_fit_in(&self, lo: HostId, hi: HostId, cpus: f64, mem: f64) -> Option<HostId> {
+        self.fit_tree.max_weighted_fit_in(lo, hi.min(self.hosts.len()), cpus, mem, 1.0, 0.0)
+    }
+
+    /// Range-restricted [`Cluster::dot_product_fit`] over hosts `[lo, hi)`.
+    pub fn dot_product_fit_in(
+        &self,
+        lo: HostId,
+        hi: HostId,
+        cpus: f64,
+        mem: f64,
+    ) -> Option<HostId> {
+        self.fit_tree.max_weighted_fit_in(
+            lo,
+            hi.min(self.hosts.len()),
+            cpus,
+            mem,
+            cpus.max(0.0),
+            mem.max(0.0),
+        )
+    }
+
     /// Aggregate allocated fraction of total capacity: (cpu, mem) in
     /// [0,1]. Down hosts contribute neither allocation (they hold none)
     /// nor capacity — a crash shrinks the denominator, so the fraction
     /// reflects the capacity that actually exists right now.
     pub fn allocation_fraction(&self) -> (f64, f64) {
+        self.allocation_fraction_in(0, self.hosts.len())
+    }
+
+    /// [`Cluster::allocation_fraction`] restricted to hosts `[lo, hi)` —
+    /// the federation layer's per-shard load signal. Over the full range
+    /// the accumulation order is identical to the historical full-cluster
+    /// loop, so the unrestricted wrapper stays bit-for-bit.
+    pub fn allocation_fraction_in(&self, lo: HostId, hi: HostId) -> (f64, f64) {
         let (mut ac, mut tc, mut am, mut tm) = (0.0, 0.0, 0.0, 0.0);
-        for h in &self.hosts {
+        for h in &self.hosts[lo..hi.min(self.hosts.len())] {
             if self.down[h.id] {
                 continue;
             }
@@ -857,7 +1058,93 @@ mod tests {
         c.set_host_down(1);
     }
 
+    #[test]
+    fn host_classes_number_shapes_in_first_appearance_order() {
+        let mut cfg = ClusterConfig::uniform(2, 8.0, 32.0);
+        cfg.extra_classes.push(crate::config::HostClass { count: 2, cores: 64.0, mem_gb: 256.0 });
+        cfg.extra_classes.push(crate::config::HostClass { count: 1, cores: 8.0, mem_gb: 32.0 });
+        let c = Cluster::new(&cfg);
+        assert_eq!(c.class_count(), 2, "identical shapes share a class");
+        assert_eq!(c.class_of(0), 0);
+        assert_eq!(c.class_of(1), 0);
+        assert_eq!(c.class_of(2), 1);
+        assert_eq!(c.class_of(3), 1);
+        assert_eq!(c.class_of(4), 0, "base-shaped extra class folds into class 0");
+        let uniform = cluster(4);
+        assert_eq!(uniform.class_count(), 1);
+    }
+
+    #[test]
+    fn full_range_in_queries_match_unrestricted_queries() {
+        let mut c = cluster(5);
+        assert!(c.place(0, 0, 6.0, 30.0, 0.0));
+        assert!(c.place(1, 1, 1.0, 4.0, 0.0));
+        assert!(c.place(2, 3, 4.0, 20.0, 0.0));
+        let n = c.len();
+        for &(cpus, mem) in &[(1.0, 1.0), (4.0, 8.0), (1.0, 2.0), (2.0, 28.0), (100.0, 1.0)] {
+            assert_eq!(c.first_fit_in(0, n, cpus, mem), c.first_fit(cpus, mem));
+            assert_eq!(c.worst_fit_in(0, n, cpus, mem), c.worst_fit(cpus, mem));
+            assert_eq!(c.best_fit_in(0, n, cpus, mem), c.best_fit(cpus, mem));
+            assert_eq!(c.cpu_aware_fit_in(0, n, cpus, mem), c.cpu_aware_fit(cpus, mem));
+            assert_eq!(c.dot_product_fit_in(0, n, cpus, mem), c.dot_product_fit(cpus, mem));
+        }
+        let (fc, fm) = c.allocation_fraction();
+        let (fc2, fm2) = c.allocation_fraction_in(0, n);
+        assert_eq!(fc.to_bits(), fc2.to_bits());
+        assert_eq!(fm.to_bits(), fm2.to_bits());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn range_queries_respect_the_range() {
+        let mut c = cluster(6);
+        assert!(c.place(0, 0, 6.0, 30.0, 0.0)); // host 0 nearly full
+        assert!(c.place(1, 4, 1.0, 4.0, 0.0));
+        // restricted to [2, 4): only hosts 2 and 3 are candidates
+        assert_eq!(c.first_fit_in(2, 4, 1.0, 1.0), Some(2));
+        assert_eq!(c.worst_fit_in(2, 4, 1.0, 1.0), Some(3), "ties to highest in range");
+        assert_eq!(c.best_fit_in(2, 4, 1.0, 1.0), Some(2), "ties to lowest in range");
+        assert_eq!(c.cpu_aware_fit_in(2, 4, 1.0, 1.0), Some(3));
+        assert_eq!(c.dot_product_fit_in(2, 4, 1.0, 1.0), Some(3));
+        // a request only host 4 can hold is invisible from [0, 4)
+        assert!(c.place(2, 2, 6.0, 30.0, 0.0));
+        assert!(c.place(3, 3, 6.0, 30.0, 0.0));
+        assert!(c.place(4, 5, 6.0, 30.0, 0.0));
+        assert!(c.place(5, 1, 6.0, 30.0, 0.0));
+        assert_eq!(c.first_fit_in(0, 4, 4.0, 8.0), None);
+        assert_eq!(c.first_fit_in(0, 6, 4.0, 8.0), Some(4));
+        assert_eq!(c.worst_fit_in(0, 4, 4.0, 8.0), None);
+        assert_eq!(c.best_fit_in(0, 4, 4.0, 8.0), None);
+        assert_eq!(c.cpu_aware_fit_in(0, 4, 4.0, 8.0), None);
+        assert_eq!(c.dot_product_fit_in(0, 4, 4.0, 8.0), None);
+        // empty and clamped ranges
+        assert_eq!(c.first_fit_in(3, 3, 0.1, 0.1), None);
+        assert_eq!(c.worst_fit_in(4, 2, 0.1, 0.1), None);
+        assert_eq!(c.first_fit_in(0, 100, 4.0, 8.0), Some(4), "hi clamps to len");
+        // per-range allocation fractions
+        let (fc, _) = c.allocation_fraction_in(0, 2); // host 0 loaded, 1 idle
+        let (fc2, _) = c.allocation_fraction_in(4, 6); // host 4 light, 5 loaded
+        assert!(fc > 0.0 && fc2 > 0.0);
+        let (full_c, full_m) = c.allocation_fraction();
+        assert!(full_c > 0.0 && full_m > 0.0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn range_queries_skip_down_hosts() {
+        let mut c = cluster(4);
+        c.set_host_down(2);
+        assert_eq!(c.first_fit_in(2, 4, 1.0, 1.0), Some(3));
+        assert_eq!(c.worst_fit_in(2, 4, 1.0, 1.0), Some(3));
+        assert_eq!(c.best_fit_in(2, 4, 1.0, 1.0), Some(3));
+        assert_eq!(c.cpu_aware_fit_in(2, 3, 1.0, 1.0), None);
+        let (fc, fm) = c.allocation_fraction_in(2, 3);
+        assert_eq!((fc, fm), (0.0, 0.0), "down-only range has no capacity");
+        c.check_invariants().unwrap();
+    }
+
     // The churn property comparing every indexed fit query against a
     // brute-force linear scan lives in tests/placer_prop.rs (one oracle,
-    // 200 seeds) — not duplicated here.
+    // 200 seeds) — not duplicated here; the random-range twin for the
+    // `_in` queries lives there too.
 }

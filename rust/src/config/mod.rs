@@ -467,6 +467,44 @@ impl FaultConfig {
     }
 }
 
+/// Federation parameters (`federation` module): how many coordinator
+/// shards partition the cluster, and the cross-shard overflow/migration
+/// policy above them. `shards = 1` — the default everywhere — is the
+/// monolithic engine, bit-for-bit (pinned by tests/federation_prop.rs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FederationConfig {
+    /// Coordinator shard count (>= 1). Hosts are partitioned into
+    /// contiguous id ranges (`federation::ShardPlan`); each shard gets
+    /// its own scheduler, placer, monitor arena and forecast batches.
+    /// `ZOE_SHARDS` overrides at run time; CLI: `--shards`.
+    pub shards: usize,
+    /// Foreign shards probed (in deterministic `home+1, home+2, ...`
+    /// wrap-around order) when the home shard cannot fit a component.
+    /// 0 = unbounded (probe every other shard).
+    pub overflow_probes: usize,
+    /// Cross-shard migration check cadence, seconds. 0 = migration off
+    /// (the default: admission routing + overflow only).
+    pub migrate_interval_s: f64,
+    /// Allocation-fraction spread (max shard − min shard) that counts as
+    /// imbalance for one migration check.
+    pub migrate_imbalance: f64,
+    /// Consecutive imbalanced checks required before one application is
+    /// migrated (re-homed hottest → coldest shard).
+    pub migrate_sustain: u32,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        FederationConfig {
+            shards: 1,
+            overflow_probes: 0,
+            migrate_interval_s: 0.0,
+            migrate_imbalance: 0.25,
+            migrate_sustain: 3,
+        }
+    }
+}
+
 /// Top-level simulation configuration.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
@@ -485,6 +523,9 @@ pub struct SimConfig {
     /// Fault injection; inert (all rates zero) by default. `ZOE_FAULTS=off`
     /// force-disables injection at run time regardless of this config.
     pub faults: FaultConfig,
+    /// Coordinator federation; `shards = 1` (the default) is the
+    /// monolithic engine bit-for-bit. `ZOE_SHARDS` overrides at run time.
+    pub federation: FederationConfig,
     /// Optional declarative timed scenario (loaded from a scenario file
     /// via `--scenario-file`). `None` — the default everywhere — leaves
     /// the engine bit-for-bit identical to a build without the scenario
@@ -529,6 +570,7 @@ impl SimConfig {
             max_failures_before_giveup: 5,
             engine_mode: EngineMode::FixedTick,
             faults: FaultConfig::default(),
+            federation: FederationConfig::default(),
             scenario: None,
         }
     }
@@ -760,6 +802,23 @@ impl SimConfig {
                 self.faults.quarantine_max_backoff_ticks = v as u32;
             }
         }
+        if let Some(f) = j.get("federation") {
+            if let Some(v) = f.get("shards").and_then(Json::as_usize) {
+                self.federation.shards = v;
+            }
+            if let Some(v) = f.get("overflow_probes").and_then(Json::as_usize) {
+                self.federation.overflow_probes = v;
+            }
+            if let Some(v) = f.get("migrate_interval_s").and_then(Json::as_f64) {
+                self.federation.migrate_interval_s = v;
+            }
+            if let Some(v) = f.get("migrate_imbalance").and_then(Json::as_f64) {
+                self.federation.migrate_imbalance = v;
+            }
+            if let Some(v) = f.get("migrate_sustain").and_then(Json::as_usize) {
+                self.federation.migrate_sustain = v as u32;
+            }
+        }
         if let Some(v) = j.get("max_sim_time_s").and_then(Json::as_f64) {
             self.max_sim_time_s = v;
         }
@@ -847,6 +906,19 @@ impl SimConfig {
         }
         if fl.quarantine_backoff_ticks == 0 || fl.quarantine_max_backoff_ticks == 0 {
             return Err("faults.quarantine backoff ticks must be >= 1".into());
+        }
+        let fed = &self.federation;
+        if fed.shards == 0 {
+            return Err("federation.shards must be >= 1".into());
+        }
+        if !fed.migrate_interval_s.is_finite() || fed.migrate_interval_s < 0.0 {
+            return Err("federation.migrate_interval_s must be finite and >= 0".into());
+        }
+        if !fed.migrate_imbalance.is_finite() || fed.migrate_imbalance <= 0.0 {
+            return Err("federation.migrate_imbalance must be finite and positive".into());
+        }
+        if fed.migrate_interval_s > 0.0 && fed.migrate_sustain == 0 {
+            return Err("federation.migrate_sustain must be >= 1 when migration is on".into());
         }
         if let Some(s) = &self.scenario {
             s.validate()?;
@@ -1017,6 +1089,36 @@ mod tests {
             r#"{"faults":{"retry_jitter":1.0}}"#,
             r#"{"faults":{"retry_base_delay_s":100,"retry_max_delay_s":10}}"#,
             r#"{"faults":{"quarantine_strikes":0}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(SimConfig::small().apply_json(&j).is_err(), "{bad} accepted");
+        }
+    }
+
+    #[test]
+    fn federation_defaults_and_json_overrides() {
+        let c = SimConfig::small();
+        assert_eq!(c.federation, FederationConfig::default());
+        assert_eq!(c.federation.shards, 1, "monolithic by default");
+        assert_eq!(c.federation.migrate_interval_s, 0.0, "migration off by default");
+        let mut c = SimConfig::small();
+        let j = Json::parse(
+            r#"{"federation":{"shards":4,"overflow_probes":2,
+                              "migrate_interval_s":600,"migrate_imbalance":0.3,
+                              "migrate_sustain":5}}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.federation.shards, 4);
+        assert_eq!(c.federation.overflow_probes, 2);
+        assert!((c.federation.migrate_interval_s - 600.0).abs() < 1e-12);
+        assert!((c.federation.migrate_imbalance - 0.3).abs() < 1e-12);
+        assert_eq!(c.federation.migrate_sustain, 5);
+        for bad in [
+            r#"{"federation":{"shards":0}}"#,
+            r#"{"federation":{"migrate_interval_s":-1}}"#,
+            r#"{"federation":{"migrate_imbalance":0}}"#,
+            r#"{"federation":{"migrate_interval_s":60,"migrate_sustain":0}}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(SimConfig::small().apply_json(&j).is_err(), "{bad} accepted");

@@ -11,7 +11,12 @@
 //! the multi-reservation R = 4 point — with a shadow-error column
 //! (mean |reserved start − actual start|) grading estimator fidelity,
 //! so EXPERIMENTS.md can answer whether feedback-corrected reservations
-//! beat the stale-ETA baseline on turnaround and stretch.
+//! beat the stale-ETA baseline on turnaround and stretch. PR 10 adds the
+//! federation axis: `--shards 1,4` reruns every cell under N coordinator
+//! shards (label suffix `+s{N}` for N > 1), pinned via
+//! [`run_simulation_sharded`] so the axis is immune to an ambient
+//! `ZOE_SHARDS`, with the per-shard fairness lanes landing in each
+//! cell's JSON row.
 //!
 //! Besides the rendered table, [`append_json`] appends one machine-
 //! readable run entry — every cell's summary keyed by the git revision,
@@ -20,7 +25,7 @@
 
 use crate::config::{HostClass, PlacerKind, SchedulerKind, SimConfig};
 use crate::metrics::RunReport;
-use crate::sim::engine::run_simulation;
+use crate::sim::engine::run_simulation_sharded;
 use crate::util::json::{obj, Json};
 
 /// All scheduler kinds, sweep order.
@@ -103,6 +108,9 @@ pub struct SweepCell {
     pub reservations: usize,
     /// Shaper→scheduler feedback consumed by the cell's scheduler.
     pub feedback: bool,
+    /// Coordinator shards the cell ran under (`--shards` axis; 1 =
+    /// monolithic).
+    pub shards: usize,
     pub report: RunReport,
 }
 
@@ -156,17 +164,20 @@ pub fn heterogeneous_variant(base: &SimConfig) -> SimConfig {
 /// workload. Cells come back in sweep order, named
 /// `<scenario>/<scheduler>/<placer>`.
 pub fn run(base: &SimConfig) -> anyhow::Result<Vec<SweepCell>> {
-    run_filtered(base, &SCENARIOS, None, None)
+    run_filtered(base, &SCENARIOS, None, None, &[1])
 }
 
 /// Like [`run`], but restricted to the given scenarios and, when given,
 /// one scheduler and/or one placer (`--scheduler`/`--placer` on the
-/// `sched-sweep` subcommand sweep only the other axis).
+/// `sched-sweep` subcommand sweep only the other axis). Each surviving
+/// cell reruns once per entry of `shards_axis` (the `--shards` list;
+/// pass `&[1]` for the monolithic-only sweep).
 pub fn run_filtered(
     base: &SimConfig,
     scenarios: &[Scenario],
     only_scheduler: Option<SchedulerKind>,
     only_placer: Option<PlacerKind>,
+    shards_axis: &[usize],
 ) -> anyhow::Result<Vec<SweepCell>> {
     let mut out = Vec::new();
     for &scenario in scenarios {
@@ -194,33 +205,44 @@ pub fn run_filtered(
                         &DEFAULT_VARIANT
                     };
                 for &(suffix, reservations, feedback) in variants {
-                    let mut cfg = scenario_cfg.clone();
-                    cfg.sched.scheduler = sched;
-                    cfg.sched.placer = placer;
-                    // the sweep owns the reservation axis: every cell's
-                    // coordinates come from its variant tuple (canonical
-                    // (1, true) for schedulers that hold no reservations
-                    // and ignore feedback), never from ambient config —
-                    // so a `--feedback off` base override can't mislabel
-                    // 40 non-reservation cells as the stale baseline
-                    cfg.sched.reservations = reservations;
-                    cfg.sched.feedback = feedback;
-                    let label = format!(
-                        "{}/{}{}/{}",
-                        scenario.name(),
-                        sched.name(),
-                        suffix,
-                        placer.name()
-                    );
-                    crate::info!("running sweep cell '{label}'");
-                    out.push(SweepCell {
-                        scenario,
-                        scheduler: sched,
-                        placer,
-                        reservations: cfg.sched.reservations,
-                        feedback: cfg.sched.feedback,
-                        report: run_simulation(&cfg, None, &label)?,
-                    });
+                    for &shards in shards_axis {
+                        let shards = shards.max(1);
+                        let mut cfg = scenario_cfg.clone();
+                        cfg.sched.scheduler = sched;
+                        cfg.sched.placer = placer;
+                        // the sweep owns the reservation axis: every cell's
+                        // coordinates come from its variant tuple (canonical
+                        // (1, true) for schedulers that hold no reservations
+                        // and ignore feedback), never from ambient config —
+                        // so a `--feedback off` base override can't mislabel
+                        // 40 non-reservation cells as the stale baseline.
+                        // Same ownership for the shard axis: the count is
+                        // pinned through `run_simulation_sharded`, so an
+                        // ambient ZOE_SHARDS can't mislabel cells either.
+                        cfg.sched.reservations = reservations;
+                        cfg.sched.feedback = feedback;
+                        cfg.federation.shards = shards;
+                        let shard_suffix =
+                            if shards > 1 { format!("+s{shards}") } else { String::new() };
+                        let label = format!(
+                            "{}/{}{}/{}{}",
+                            scenario.name(),
+                            sched.name(),
+                            suffix,
+                            placer.name(),
+                            shard_suffix
+                        );
+                        crate::info!("running sweep cell '{label}'");
+                        out.push(SweepCell {
+                            scenario,
+                            scheduler: sched,
+                            placer,
+                            reservations: cfg.sched.reservations,
+                            feedback: cfg.sched.feedback,
+                            shards,
+                            report: run_simulation_sharded(&cfg, None, &label, shards)?,
+                        });
+                    }
                 }
             }
         }
@@ -281,6 +303,30 @@ fn cell_json(c: &SweepCell) -> Json {
         ("placer", Json::Str(c.placer.name().to_string())),
         ("reservations", Json::Num(c.reservations as f64)),
         ("feedback", Json::Bool(c.feedback)),
+        // federation coordinates + the per-shard fairness lanes (the
+        // report's actual shard count — the requested axis value after
+        // `ShardPlan`'s host-count clamp)
+        ("shards", Json::Num(r.federation.shards as f64)),
+        ("overflow_placements", Json::Num(r.federation.overflow_placements as f64)),
+        ("migrations", Json::Num(r.federation.migrations as f64)),
+        (
+            "per_shard",
+            Json::Arr(
+                r.federation
+                    .per_shard
+                    .iter()
+                    .map(|l| {
+                        obj(vec![
+                            ("wait", bs(&l.wait)),
+                            ("stretch", bs(&l.stretch)),
+                            ("completed", Json::Num(l.completed as f64)),
+                            ("share_cpu", Json::Num(l.share_cpu)),
+                            ("share_mem", Json::Num(l.share_mem)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
         ("turnaround", bs(&r.turnaround)),
         ("wait", bs(&r.wait)),
         ("stretch", bs(&r.stretch)),
@@ -380,6 +426,7 @@ mod tests {
             &[Scenario::Uniform],
             Some(SchedulerKind::Fifo),
             None,
+            &[1],
         )
         .unwrap();
         assert_eq!(only.len(), PLACERS.len());
@@ -389,6 +436,7 @@ mod tests {
             &[Scenario::Heterogeneous],
             Some(SchedulerKind::Sjf),
             Some(PlacerKind::DotProduct),
+            &[1],
         )
         .unwrap();
         assert_eq!(one.len(), 1);
@@ -408,6 +456,7 @@ mod tests {
             &[diurnal],
             Some(SchedulerKind::Fifo),
             Some(PlacerKind::WorstFit),
+            &[1],
         )
         .unwrap();
         assert_eq!(cells.len(), 1);
@@ -426,6 +475,43 @@ mod tests {
         let j = cell_json(&cells[0]);
         assert_eq!(j.get("scenario").and_then(|s| s.as_str()), Some("diurnal"));
         assert!(j.get("scenario_steps").and_then(|s| s.as_f64()).unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn shards_axis_expands_cells_with_pinned_counts() {
+        let cfg = tiny_base(); // 4 hosts
+        let cells = run_filtered(
+            &cfg,
+            &[Scenario::Uniform],
+            Some(SchedulerKind::Fifo),
+            Some(PlacerKind::WorstFit),
+            &[1, 2],
+        )
+        .unwrap();
+        assert_eq!(cells.len(), 2, "each shard-axis entry is one cell");
+        // monolithic cell: suffix-free label, 1-shard report — pinned
+        // through the setter, so an ambient ZOE_SHARDS can't skew it
+        assert_eq!(cells[0].shards, 1);
+        assert_eq!(cells[0].report.name, "uniform/fifo/worst-fit");
+        assert_eq!(cells[0].report.federation.shards, 1);
+        // federated cell: labeled, and the report carries one fairness
+        // lane per shard with every completion homed somewhere
+        assert_eq!(cells[1].shards, 2);
+        assert_eq!(cells[1].report.name, "uniform/fifo/worst-fit+s2");
+        assert_eq!(cells[1].report.federation.shards, 2);
+        assert_eq!(cells[1].report.federation.per_shard.len(), 2);
+        assert_eq!(cells[1].report.completed, 8, "{}", cells[1].report.summary());
+        let homed: usize =
+            cells[1].report.federation.per_shard.iter().map(|l| l.completed).sum();
+        assert_eq!(homed, cells[1].report.completed);
+        let j = cell_json(&cells[1]);
+        assert_eq!(j.get("shards").and_then(|s| s.as_usize()), Some(2));
+        let lanes = j.get("per_shard").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(lanes.len(), 2);
+        assert!(lanes[0].get("stretch").and_then(|s| s.get("median")).is_some());
+        assert!(lanes[0].get("share_mem").and_then(|s| s.as_f64()).is_some());
+        let rendered = render(&cells);
+        assert!(rendered.contains("uniform/fifo/worst-fit+s2"));
     }
 
     #[test]
@@ -467,9 +553,14 @@ mod tests {
     fn append_json_accumulates_runs_keyed_by_rev() {
         let mut cfg = tiny_base();
         cfg.workload.num_apps = 3;
-        let cells =
-            run_filtered(&cfg, &[Scenario::Uniform], Some(SchedulerKind::Fifo), Some(PlacerKind::WorstFit))
-                .unwrap();
+        let cells = run_filtered(
+            &cfg,
+            &[Scenario::Uniform],
+            Some(SchedulerKind::Fifo),
+            Some(PlacerKind::WorstFit),
+            &[1],
+        )
+        .unwrap();
         let path = std::env::temp_dir().join("zoe_sched_sweep_append_test.json");
         let _ = std::fs::remove_file(&path);
         append_json(&cells, &path).unwrap();

@@ -214,10 +214,7 @@ pub fn backoff_delay(cfg: &FaultConfig, seed: u64, app: usize, attempt: u32) -> 
 /// chaos config against its healthy twin without editing it. Public so
 /// the scenario compiler honors the same switch for its fault windows.
 pub fn injection_enabled() -> bool {
-    match std::env::var("ZOE_FAULTS") {
-        Ok(v) => !matches!(v.to_ascii_lowercase().as_str(), "off" | "0" | "false"),
-        Err(_) => true,
-    }
+    !crate::util::env::is_off("ZOE_FAULTS", &[])
 }
 
 /// Seeded membership hash: maps `x` (a component id or series key) under

@@ -1,0 +1,342 @@
+//! Sharded multi-coordinator federation: deterministic partitioning of
+//! one simulated cluster into `N` coordinator shards, each owning a
+//! contiguous sub-cluster and its own control-plane state (scheduler
+//! queue, placer, monitor arena, shaper scratch — see
+//! [`crate::sim::engine`]), glued together by a cross-shard
+//! admission/overflow layer that stays bit-for-bit deterministic.
+//!
+//! ## Partition rule
+//!
+//! [`ShardPlan::new`] reuses the worker-pool chunk discipline
+//! ([`crate::util::pool`]): `hosts` are split into `ceil(hosts / w)`
+//! contiguous chunks of `chunk = ceil(hosts / w)` hosts where
+//! `w = shards.clamp(1, hosts)`, so host `h` belongs to shard
+//! `h / chunk` — a pure function of host id, independent of workload,
+//! repeat, engine mode and `ZOE_WORKERS`. Requesting more shards than
+//! hosts clamps (no empty shards); the last shard may be short.
+//! Applications are assigned a **home shard** by
+//! [`ShardPlan::home_of_app`] (`app_id % shards`) — also a pure
+//! function of the id, so admission routing is reproducible by
+//! construction.
+//!
+//! ## Admission and overflow probing
+//!
+//! Each shard's scheduler sees a [`FederatedPlacer`] wrapping the run's
+//! configured placer. A placement probe first consults the home shard's
+//! host range through [`Placer::select_in`]; on failure it probes the
+//! remaining shards in deterministic wrap-around order (home+1, home+2,
+//! … mod `N`), bounded by `federation.overflow_probes` foreign shards
+//! (`0` = probe all). Placements landing outside the component's home
+//! shard are counted by the engine as *overflow placements* in the run
+//! metrics. With `N = 1` the wrapper delegates to the inner placer's
+//! unrestricted [`Placer::select`] verbatim, which is how `shards = 1`
+//! stays bit-identical to the monolithic control plane.
+//!
+//! ## Migration on sustained imbalance
+//!
+//! [`MigrationTracker`] watches per-shard allocation fractions
+//! ([`crate::cluster::Cluster::allocation_fraction_in`]); when the
+//! hottest and coldest shard differ by more than
+//! `federation.migrate_imbalance` for `federation.migrate_sustain`
+//! consecutive checks, it fires one deterministic migration decision
+//! (hottest → coldest). Migration is off by default
+//! (`migrate_interval_s = 0`), keeping the default federation purely
+//! admission-time.
+
+use std::sync::Arc;
+
+use crate::cluster::Cluster;
+use crate::scheduler::Placer;
+use crate::workload::{AppId, HostId};
+
+/// Deterministic stable partition of `hosts` host ids into contiguous
+/// shard ranges (see the module docs' partition rule).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    hosts: usize,
+    chunk: usize,
+    shards: usize,
+}
+
+impl ShardPlan {
+    /// Partition `hosts` into at most `shards` contiguous ranges using
+    /// the pool chunk discipline. `shards` is clamped to `[1, hosts]`
+    /// (and to 1 when `hosts = 0`), then reduced further if the ceiling
+    /// chunk size leaves trailing chunks empty — every shard in the
+    /// resulting plan owns at least one host.
+    pub fn new(hosts: usize, shards: usize) -> Self {
+        let w = shards.max(1).min(hosts.max(1));
+        // the pool chunk idiom: ceil(hosts / w) without div_ceil
+        let chunk = {
+            let q = hosts / w;
+            if hosts % w == 0 {
+                q
+            } else {
+                q + 1
+            }
+        }
+        .max(1);
+        let shards = {
+            let q = hosts / chunk;
+            if hosts % chunk == 0 {
+                q
+            } else {
+                q + 1
+            }
+        }
+        .max(1);
+        ShardPlan { hosts, chunk, shards }
+    }
+
+    /// Number of (non-empty) shards in the plan.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Total hosts partitioned.
+    pub fn hosts(&self) -> usize {
+        self.hosts
+    }
+
+    /// Half-open host-id range `[lo, hi)` owned by shard `s`.
+    pub fn range(&self, s: usize) -> (usize, usize) {
+        let lo = (s * self.chunk).min(self.hosts);
+        let hi = ((s + 1) * self.chunk).min(self.hosts);
+        (lo, hi)
+    }
+
+    /// Shard owning host `h`.
+    pub fn shard_of_host(&self, h: HostId) -> usize {
+        (h / self.chunk).min(self.shards.saturating_sub(1))
+    }
+
+    /// Home shard of application `a` (admission routing).
+    pub fn home_of_app(&self, a: AppId) -> usize {
+        a % self.shards
+    }
+}
+
+/// Per-shard placement policy: home-shard probe first, then bounded
+/// deterministic wrap-around overflow probing (see the module docs).
+/// One `FederatedPlacer` is built per shard, wrapping the run's single
+/// configured placer.
+pub struct FederatedPlacer {
+    inner: Arc<dyn Placer>,
+    plan: ShardPlan,
+    home: usize,
+    /// Max foreign shards probed after the home shard; 0 = all.
+    overflow_probes: usize,
+}
+
+impl FederatedPlacer {
+    /// Wrap `inner` for the shard `home` of `plan`.
+    pub fn new(inner: Arc<dyn Placer>, plan: ShardPlan, home: usize, overflow_probes: usize) -> Self {
+        debug_assert!(home < plan.shards());
+        FederatedPlacer { inner, plan, home, overflow_probes }
+    }
+
+    /// The shard this placer probes first.
+    pub fn home(&self) -> usize {
+        self.home
+    }
+}
+
+impl Placer for FederatedPlacer {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn select(&self, cluster: &Cluster, cpus: f64, mem: f64) -> Option<HostId> {
+        let n = self.plan.shards();
+        if n == 1 {
+            // verbatim delegation: shards = 1 is the monolithic placer,
+            // bit for bit — no range query in the path
+            return self.inner.select(cluster, cpus, mem);
+        }
+        let overflow =
+            if self.overflow_probes == 0 { n - 1 } else { self.overflow_probes.min(n - 1) };
+        for i in 0..=overflow {
+            let s = (self.home + i) % n;
+            let (lo, hi) = self.plan.range(s);
+            if let Some(h) = self.inner.select_in(cluster, lo, hi, cpus, mem) {
+                return Some(h);
+            }
+        }
+        None
+    }
+
+    fn select_in(&self, cluster: &Cluster, lo: usize, hi: usize, cpus: f64, mem: f64) -> Option<HostId> {
+        // already range-restricted by the caller: no further federation
+        self.inner.select_in(cluster, lo, hi, cpus, mem)
+    }
+}
+
+/// Sustained-imbalance detector driving optional cross-shard migration
+/// (see the module docs). Purely deterministic: argmax/argmin tie-break
+/// to the lowest shard index, and the streak resets both on firing and
+/// whenever the imbalance dips below the threshold.
+#[derive(Debug, Clone)]
+pub struct MigrationTracker {
+    imbalance: f64,
+    sustain: u32,
+    streak: u32,
+}
+
+impl MigrationTracker {
+    /// Fire after `sustain` consecutive observations whose max−min
+    /// shard load exceeds `imbalance`.
+    pub fn new(imbalance: f64, sustain: u32) -> Self {
+        MigrationTracker { imbalance, sustain: sustain.max(1), streak: 0 }
+    }
+
+    /// Feed one observation of per-shard loads (allocation fractions).
+    /// Returns `Some((hottest, coldest))` when the imbalance has been
+    /// sustained — a migration should re-home one app from `hottest`
+    /// to `coldest` — else `None`.
+    pub fn observe(&mut self, loads: &[f64]) -> Option<(usize, usize)> {
+        if loads.len() < 2 {
+            self.streak = 0;
+            return None;
+        }
+        let (mut hot, mut cold) = (0usize, 0usize);
+        for (s, &v) in loads.iter().enumerate() {
+            if v > loads[hot] {
+                hot = s;
+            }
+            if v < loads[cold] {
+                cold = s;
+            }
+        }
+        if loads[hot] - loads[cold] > self.imbalance {
+            self.streak += 1;
+            if self.streak >= self.sustain {
+                self.streak = 0;
+                return Some((hot, cold));
+            }
+        } else {
+            self.streak = 0;
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::scheduler::{FirstFitPlacer, WorstFitPlacer};
+
+    #[test]
+    fn shard_plan_partitions_exactly_with_no_empty_shards() {
+        for hosts in [1usize, 2, 3, 7, 10, 16, 250] {
+            for shards in [1usize, 2, 3, 4, 8, 300] {
+                let p = ShardPlan::new(hosts, shards);
+                assert!(p.shards() >= 1 && p.shards() <= hosts, "hosts={hosts} shards={shards}");
+                let mut covered = 0usize;
+                for s in 0..p.shards() {
+                    let (lo, hi) = p.range(s);
+                    assert!(lo < hi, "empty shard {s} for hosts={hosts} shards={shards}");
+                    assert_eq!(lo, covered, "non-contiguous partition");
+                    for h in lo..hi {
+                        assert_eq!(p.shard_of_host(h), s);
+                    }
+                    covered = hi;
+                }
+                assert_eq!(covered, hosts, "partition must cover every host exactly once");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_plan_matches_pool_chunking() {
+        // 10 hosts over 4 shards: ceil(10/4)=3 → [0,3) [3,6) [6,9) [9,10)
+        let p = ShardPlan::new(10, 4);
+        assert_eq!(p.shards(), 4);
+        assert_eq!(p.range(0), (0, 3));
+        assert_eq!(p.range(3), (9, 10));
+        // 4 hosts over 8 shards clamps to 4 singleton shards
+        let p = ShardPlan::new(4, 8);
+        assert_eq!(p.shards(), 4);
+        assert_eq!(p.range(2), (2, 3));
+        // 8 hosts over 3 shards: chunk 3 → shards [0,3) [3,6) [6,8)
+        let p = ShardPlan::new(8, 3);
+        assert_eq!(p.shards(), 3);
+        assert_eq!(p.range(2), (6, 8));
+        // degenerate: zero hosts still yields one (empty-range) shard
+        let p = ShardPlan::new(0, 4);
+        assert_eq!(p.shards(), 1);
+        assert_eq!(p.range(0), (0, 0));
+    }
+
+    #[test]
+    fn home_of_app_round_robins_over_shards() {
+        let p = ShardPlan::new(8, 4);
+        for a in 0..16usize {
+            assert_eq!(p.home_of_app(a), a % 4);
+        }
+    }
+
+    #[test]
+    fn federated_placer_prefers_home_then_probes_wrap_around() {
+        // 4 hosts, 2 shards of 2; home = shard 1 (hosts 2, 3)
+        let mut c = Cluster::new(&ClusterConfig::uniform(4, 8.0, 32.0));
+        let plan = ShardPlan::new(4, 2);
+        let p = FederatedPlacer::new(Arc::new(WorstFitPlacer), plan.clone(), 1, 0);
+        // home shard has room: stays home (worst-fit ties → highest id)
+        assert_eq!(p.select(&c, 1.0, 1.0), Some(3));
+        // fill the home shard: overflow into shard 0
+        assert!(c.place(0, 2, 8.0, 32.0, 0.0));
+        assert!(c.place(1, 3, 8.0, 32.0, 0.0));
+        assert_eq!(p.select(&c, 1.0, 1.0), Some(1));
+        // nothing anywhere: None
+        assert!(c.place(2, 0, 8.0, 32.0, 0.0));
+        assert!(c.place(3, 1, 8.0, 32.0, 0.0));
+        assert_eq!(p.select(&c, 1.0, 1.0), None);
+    }
+
+    #[test]
+    fn overflow_probe_bound_limits_foreign_shards() {
+        // 4 singleton shards; only shard 3 (host 3) has room
+        let mut c = Cluster::new(&ClusterConfig::uniform(4, 8.0, 32.0));
+        for h in 0..3usize {
+            assert!(c.place(h, h, 8.0, 32.0, 0.0));
+        }
+        let plan = ShardPlan::new(4, 4);
+        // home 0, one foreign probe: reaches only shard 1 → None
+        let bounded = FederatedPlacer::new(Arc::new(FirstFitPlacer), plan.clone(), 0, 1);
+        assert_eq!(bounded.select(&c, 1.0, 1.0), None);
+        // home 0, unbounded: wraps to shard 3
+        let unbounded = FederatedPlacer::new(Arc::new(FirstFitPlacer), plan.clone(), 0, 0);
+        assert_eq!(unbounded.select(&c, 1.0, 1.0), Some(3));
+        // home 2, one foreign probe: shard 3 is the first probe → hit
+        let near = FederatedPlacer::new(Arc::new(FirstFitPlacer), plan, 2, 1);
+        assert_eq!(near.select(&c, 1.0, 1.0), Some(3));
+    }
+
+    #[test]
+    fn single_shard_delegates_to_the_unrestricted_placer() {
+        let c = Cluster::new(&ClusterConfig::uniform(3, 8.0, 32.0));
+        let plan = ShardPlan::new(3, 1);
+        let p = FederatedPlacer::new(Arc::new(WorstFitPlacer), plan, 0, 0);
+        assert_eq!(p.select(&c, 1.0, 1.0), WorstFitPlacer.select(&c, 1.0, 1.0));
+    }
+
+    #[test]
+    fn migration_tracker_requires_sustained_imbalance() {
+        let mut t = MigrationTracker::new(0.25, 3);
+        let hot = [0.9, 0.1, 0.5];
+        assert_eq!(t.observe(&hot), None);
+        assert_eq!(t.observe(&hot), None);
+        assert_eq!(t.observe(&hot), Some((0, 1)), "third consecutive breach fires");
+        assert_eq!(t.observe(&hot), None, "streak resets after firing");
+        // a calm observation resets the streak
+        assert_eq!(t.observe(&hot), None);
+        assert_eq!(t.observe(&[0.5, 0.5, 0.5]), None);
+        assert_eq!(t.observe(&hot), None);
+        assert_eq!(t.observe(&hot), None);
+        assert_eq!(t.observe(&hot), Some((0, 1)));
+        // single-shard loads never fire
+        let mut one = MigrationTracker::new(0.0, 1);
+        assert_eq!(one.observe(&[1.0]), None);
+    }
+}

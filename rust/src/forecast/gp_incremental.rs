@@ -190,12 +190,8 @@ const LANE_MIN_SERIES_PER_WORKER: usize = 16;
 /// then the worker-count default ([`pool::num_workers`]). Forecasts are
 /// identical for every choice; only throughput changes.
 pub fn resolve_lanes(requested: usize) -> usize {
-    if let Ok(s) = std::env::var("ZOE_LANES") {
-        if let Ok(n) = s.trim().parse::<usize>() {
-            if n >= 1 {
-                return n;
-            }
-        }
+    if let Some(n) = crate::util::env::usize_at_least("ZOE_LANES", 1) {
+        return n;
     }
     if requested >= 1 {
         requested

@@ -25,6 +25,7 @@ pub mod config;
 pub mod coordinator;
 pub mod experiments;
 pub mod faults;
+pub mod federation;
 pub mod forecast;
 pub mod metrics;
 pub mod monitor;

@@ -111,6 +111,12 @@ fn sim_args(name: &str, about: &str) -> Args {
             "time advance: fixed-tick|event-driven (quiet-tick elision; identical reports)",
         )
         .opt(
+            "shards",
+            "",
+            "coordinator shards (1 = monolithic; ZOE_SHARDS env overrides; \
+             sched-sweep accepts a comma list as a sweep axis)",
+        )
+        .opt(
             "scenario-file",
             "",
             "timed-scenario JSON file, or a bundled id (see `zoe-shaper scenarios --list`)",
@@ -181,6 +187,13 @@ fn load_cfg(a: &Args) -> Result<SimConfig, String> {
     if !a.get("engine-mode").is_empty() {
         cfg.engine_mode = EngineMode::parse(a.get("engine-mode"))
             .ok_or_else(|| format!("bad --engine-mode {}", a.get("engine-mode")))?;
+    }
+    // a comma list is the sched-sweep shard *axis*, expanded by that
+    // subcommand itself; a single value is the run's shard count
+    let sh = a.get("shards");
+    if !sh.is_empty() && !sh.contains(',') {
+        cfg.federation.shards =
+            sh.trim().parse().map_err(|e| format!("bad --shards '{sh}': {e}"))?;
     }
     if !a.get("crash-rate").is_empty() {
         cfg.faults.crash_rate_per_host_day = a.get_f64("crash-rate")?;
@@ -305,7 +318,18 @@ fn cmd_sched_sweep(argv: &[String]) -> Result<(), String> {
     // --scheduler/--placer pin one axis; the sweep covers the others
     let only_sched = if a.get("scheduler").is_empty() { None } else { Some(cfg.sched.scheduler) };
     let only_placer = if a.get("placer").is_empty() { None } else { Some(cfg.sched.placer) };
-    let cells = sched_sweep::run_filtered(&cfg, &scenarios, only_sched, only_placer)
+    // --shards "1,4" reruns every cell per shard count (labels +s{N})
+    let shards_axis: Vec<usize> = if a.get("shards").is_empty() {
+        vec![cfg.federation.shards.max(1)]
+    } else {
+        a.get("shards")
+            .split(',')
+            .map(|s| {
+                s.trim().parse::<usize>().map_err(|e| format!("bad --shards value '{s}': {e}"))
+            })
+            .collect::<Result<_, _>>()?
+    };
+    let cells = sched_sweep::run_filtered(&cfg, &scenarios, only_sched, only_placer, &shards_axis)
         .map_err(|e| format!("{e:#}"))?;
     println!("{}", sched_sweep::render(&cells));
     let out = a.get("json-out");

@@ -40,11 +40,78 @@ struct AppSlack {
     mem: Welford,
 }
 
+/// Grouping labels attached to one application completion, driving the
+/// fairness breakdowns ([`group_box`]): which federation shard the app
+/// called home, which host class served its first placed core, and
+/// which total-work size decile it fell in. The untagged
+/// [`Metrics::record_finish`] records the all-zero default — correct
+/// for monolithic single-class runs and for pre-federation callers.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FinishTag {
+    /// Home shard ([`crate::federation::ShardPlan::home_of_app`]).
+    pub shard: u16,
+    /// Host class ([`crate::cluster::Cluster::class_of`]) of the host
+    /// serving the app's first placed core component.
+    pub class: u16,
+    /// App-size decile 0..=9 by `(total_work, id)` rank over the run's
+    /// applications.
+    pub decile: u8,
+}
+
+/// Group per-finish samples by a parallel group-index slice into
+/// `groups` box summaries — the shared fairness-breakdown helper behind
+/// the per-host-class, per-size-decile and per-shard wait/stretch
+/// reports. Out-of-range indices are dropped (defensive; taggers are
+/// expected to stay in range), and empty groups summarize as the
+/// all-zero [`BoxStats`].
+pub fn group_box(values: &[f64], group: &[usize], groups: usize) -> Vec<BoxStats> {
+    let mut buckets: Vec<Vec<f64>> = vec![Vec::new(); groups];
+    for (i, &v) in values.iter().enumerate() {
+        if let Some(b) = group.get(i).and_then(|&g| buckets.get_mut(g)) {
+            b.push(v);
+        }
+    }
+    buckets.iter().map(|b| boxstats(b)).collect()
+}
+
+/// One federation shard's fairness lane in the run report.
+#[derive(Debug, Clone, Default)]
+pub struct ShardLane {
+    /// Queued time of apps homed in this shard.
+    pub wait: BoxStats,
+    /// Bounded slowdown of apps homed in this shard.
+    pub stretch: BoxStats,
+    /// Completions homed in this shard.
+    pub completed: usize,
+    /// Mean cpu allocation fraction over the shard's sub-cluster.
+    pub share_cpu: f64,
+    /// Mean mem allocation fraction over the shard's sub-cluster.
+    pub share_mem: f64,
+}
+
+/// Federation accounting for one run: shard count, cross-shard traffic
+/// and the per-shard fairness lanes. `shards <= 1` means the run was
+/// monolithic (a single control plane).
+#[derive(Debug, Clone, Default)]
+pub struct FederationStats {
+    /// Coordinator shards in the run (1 = monolithic).
+    pub shards: usize,
+    /// Component placements that landed outside the owning
+    /// application's home shard (overflow probing).
+    pub overflow_placements: u64,
+    /// Cross-shard re-homing migrations performed.
+    pub migrations: u64,
+    /// One fairness lane per shard.
+    pub per_shard: Vec<ShardLane>,
+}
+
 /// Metrics collector, updated by the engine during a run.
 #[derive(Debug)]
 pub struct Metrics {
     /// turnaround per finished app (seconds).
     turnarounds: Vec<f64>,
+    /// fairness grouping labels, parallel to `turnarounds`.
+    tags: Vec<FinishTag>,
     /// queued time per finished app (turnaround − service; seconds).
     waits: Vec<f64>,
     /// bounded slowdown per finished app: turnaround / service time,
@@ -81,6 +148,18 @@ pub struct Metrics {
     pub peak_host_usage: f64,
     /// number of apps in the run.
     num_apps: usize,
+    /// coordinator shards driving the run (1 = monolithic); set by the
+    /// engine before any tagged finish is recorded.
+    pub shards: usize,
+    /// distinct host classes in the cluster (grouping width for the
+    /// per-class fairness breakdown); set by the engine.
+    pub num_classes: usize,
+    /// placements landing outside the owning app's home shard.
+    pub overflow_placements: u64,
+    /// cross-shard re-homing migrations performed.
+    pub migrations: u64,
+    /// per-shard allocation-fraction accumulators (cpu, mem).
+    shard_alloc: Vec<(Welford, Welford)>,
 }
 
 impl Metrics {
@@ -88,6 +167,7 @@ impl Metrics {
     pub fn new(num_apps: usize) -> Self {
         Metrics {
             turnarounds: Vec::new(),
+            tags: Vec::new(),
             waits: Vec::new(),
             stretches: Vec::new(),
             shadow_errors: Vec::new(),
@@ -105,6 +185,11 @@ impl Metrics {
             shaper_ticks: 0,
             peak_host_usage: 0.0,
             num_apps,
+            shards: 1,
+            num_classes: 1,
+            overflow_placements: 0,
+            migrations: 0,
+            shard_alloc: Vec::new(),
         }
     }
 
@@ -113,6 +198,19 @@ impl Metrics {
     /// stretch (bounded slowdown: turnaround over service floored at
     /// [`STRETCH_TAU`], ratio floored at 1) follow from it.
     pub fn record_finish(&mut self, submit_time: f64, finish_time: f64, service_time: f64) {
+        self.record_finish_tagged(submit_time, finish_time, service_time, FinishTag::default());
+    }
+
+    /// [`record_finish`](Metrics::record_finish) carrying the fairness
+    /// grouping labels (shard / host class / size decile); the tag
+    /// vector stays parallel to the turnaround/wait/stretch vectors.
+    pub fn record_finish_tagged(
+        &mut self,
+        submit_time: f64,
+        finish_time: f64,
+        service_time: f64,
+        tag: FinishTag,
+    ) {
         let turnaround = (finish_time - submit_time).max(0.0);
         self.turnarounds.push(turnaround);
         let service = service_time.clamp(0.0, turnaround);
@@ -121,6 +219,7 @@ impl Metrics {
         // with positive wait from recording turnaround / ε ≈ 10¹²; the
         // outer floor keeps stretch >= 1 when turnaround < tau
         self.stretches.push((turnaround / service.max(STRETCH_TAU)).max(1.0));
+        self.tags.push(tag);
     }
 
     /// Record one signed shadow-estimate error: reserved start − actual
@@ -160,6 +259,18 @@ impl Metrics {
         self.alloc_mem_samples.push(mem);
     }
 
+    /// Record one shard's sub-cluster allocation fractions (cpu, mem) —
+    /// the per-shard *share* axis of the federation fairness report.
+    /// The accumulator grows on demand, so a monolithic run that never
+    /// records shard samples pays nothing.
+    pub fn record_shard_allocation(&mut self, shard: usize, cpu: f64, mem: f64) {
+        if self.shard_alloc.len() <= shard {
+            self.shard_alloc.resize(shard + 1, (Welford::default(), Welford::default()));
+        }
+        self.shard_alloc[shard].0.push(cpu);
+        self.shard_alloc[shard].1.push(mem);
+    }
+
     /// Finalize into a report.
     pub fn report(&self, name: &str, sim_time: f64) -> RunReport {
         let mem_slack: Vec<f64> = self
@@ -173,6 +284,36 @@ impl Metrics {
             .iter()
             .filter(|s| s.cpu.count() > 0)
             .map(|s| s.cpu.mean())
+            .collect();
+        // fairness breakdowns: group widths never shrink below what the
+        // tags actually reference (defensive against a missed setter)
+        let classes = self
+            .num_classes
+            .max(self.tags.iter().map(|t| t.class as usize + 1).max().unwrap_or(1));
+        let shards = self
+            .shards
+            .max(self.tags.iter().map(|t| t.shard as usize + 1).max().unwrap_or(1))
+            .max(self.shard_alloc.len());
+        let class_idx: Vec<usize> = self.tags.iter().map(|t| t.class as usize).collect();
+        let decile_idx: Vec<usize> = self.tags.iter().map(|t| t.decile as usize).collect();
+        let shard_idx: Vec<usize> = self.tags.iter().map(|t| t.shard as usize).collect();
+        let shard_wait = group_box(&self.waits, &shard_idx, shards);
+        let shard_stretch = group_box(&self.stretches, &shard_idx, shards);
+        let per_shard: Vec<ShardLane> = (0..shards)
+            .map(|s| {
+                let (cpu, mem) = self
+                    .shard_alloc
+                    .get(s)
+                    .map(|(c, m)| (c.mean(), m.mean()))
+                    .unwrap_or((0.0, 0.0));
+                ShardLane {
+                    wait: shard_wait[s].clone(),
+                    stretch: shard_stretch[s].clone(),
+                    completed: shard_idx.iter().filter(|&&g| g == s).count(),
+                    share_cpu: cpu,
+                    share_mem: mem,
+                }
+            })
             .collect();
         RunReport {
             name: name.to_string(),
@@ -209,6 +350,16 @@ impl Metrics {
             // likewise copied in by the engine after the loop
             faults: FaultStats::default(),
             scenario_steps: 0,
+            wait_by_class: group_box(&self.waits, &class_idx, classes),
+            stretch_by_class: group_box(&self.stretches, &class_idx, classes),
+            wait_by_decile: group_box(&self.waits, &decile_idx, 10),
+            stretch_by_decile: group_box(&self.stretches, &decile_idx, 10),
+            federation: FederationStats {
+                shards,
+                overflow_placements: self.overflow_placements,
+                migrations: self.migrations,
+                per_shard,
+            },
         }
     }
 }
@@ -305,6 +456,18 @@ pub struct RunReport {
     /// zero when no scenario was configured (the engine copies the real
     /// count in after the loop).
     pub scenario_steps: u64,
+    /// Queued-time summary per host class (index = class id); a single
+    /// entry on homogeneous clusters.
+    pub wait_by_class: Vec<BoxStats>,
+    /// Bounded-slowdown summary per host class.
+    pub stretch_by_class: Vec<BoxStats>,
+    /// Queued-time summary per app-size decile (always 10 entries;
+    /// decile 0 = smallest total work).
+    pub wait_by_decile: Vec<BoxStats>,
+    /// Bounded-slowdown summary per app-size decile.
+    pub stretch_by_decile: Vec<BoxStats>,
+    /// Federation shard accounting (shards = 1 for monolithic runs).
+    pub federation: FederationStats,
 }
 
 impl RunReport {
@@ -377,6 +540,46 @@ impl RunReport {
         if self.scenario_steps > 0 {
             s.push_str(&format!("\nscenario    {} steps replayed", self.scenario_steps));
         }
+        if self.wait_by_class.len() > 1 {
+            for (k, (w, st)) in
+                self.wait_by_class.iter().zip(&self.stretch_by_class).enumerate()
+            {
+                s.push_str(&format!(
+                    "\nclass {k}     wait med {:.0}s mean {:.0}s   stretch med {:.2} mean {:.2} (n={})",
+                    w.median, w.mean, st.median, st.mean, w.n
+                ));
+            }
+        }
+        if self.stretch_by_decile.iter().any(|b| b.n > 0) {
+            let sm: Vec<String> =
+                self.stretch_by_decile.iter().map(|b| format!("{:.2}", b.median)).collect();
+            let wm: Vec<String> =
+                self.wait_by_decile.iter().map(|b| format!("{:.0}", b.median)).collect();
+            s.push_str(&format!(
+                "\nsize decile stretch med [{}]  wait med [{}]",
+                sm.join(" "),
+                wm.join(" ")
+            ));
+        }
+        if self.federation.shards > 1 {
+            s.push_str(&format!(
+                "\nfederation  {} shards; {} overflow placements, {} migrations",
+                self.federation.shards,
+                self.federation.overflow_placements,
+                self.federation.migrations
+            ));
+            for (k, lane) in self.federation.per_shard.iter().enumerate() {
+                s.push_str(&format!(
+                    "\n  shard {k}: {} completed; wait med {:.0}s stretch med {:.2}; \
+                     share cpu {:.2} mem {:.2}",
+                    lane.completed,
+                    lane.wait.median,
+                    lane.stretch.median,
+                    lane.share_cpu,
+                    lane.share_mem
+                ));
+            }
+        }
         s
     }
 
@@ -436,6 +639,42 @@ impl RunReport {
                 ]),
             ),
             ("scenario_steps", Json::Num(self.scenario_steps as f64)),
+            ("wait_by_class", Json::Arr(self.wait_by_class.iter().map(&bs).collect())),
+            ("stretch_by_class", Json::Arr(self.stretch_by_class.iter().map(&bs).collect())),
+            ("wait_by_decile", Json::Arr(self.wait_by_decile.iter().map(&bs).collect())),
+            (
+                "stretch_by_decile",
+                Json::Arr(self.stretch_by_decile.iter().map(&bs).collect()),
+            ),
+            (
+                "federation",
+                obj(vec![
+                    ("shards", Json::Num(self.federation.shards as f64)),
+                    (
+                        "overflow_placements",
+                        Json::Num(self.federation.overflow_placements as f64),
+                    ),
+                    ("migrations", Json::Num(self.federation.migrations as f64)),
+                    (
+                        "per_shard",
+                        Json::Arr(
+                            self.federation
+                                .per_shard
+                                .iter()
+                                .map(|l| {
+                                    obj(vec![
+                                        ("wait", bs(&l.wait)),
+                                        ("stretch", bs(&l.stretch)),
+                                        ("completed", Json::Num(l.completed as f64)),
+                                        ("share_cpu", Json::Num(l.share_cpu)),
+                                        ("share_mem", Json::Num(l.share_mem)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
             ("turnarounds_sample", num_arr(&sample(&self.turnarounds, 200))),
             ("mem_slacks_sample", num_arr(&sample(&self.mem_slacks, 200))),
         ])
@@ -599,6 +838,82 @@ mod tests {
         assert_eq!(f.get("crashes_injected").and_then(Json::as_f64), Some(3.0));
         assert_eq!(f.get("backoff_seconds").and_then(Json::as_f64), Some(420.0));
         assert_eq!(f.get("fallback_ticks").and_then(Json::as_f64), Some(99.0));
+    }
+
+    #[test]
+    fn group_box_partitions_by_index_and_keeps_empty_groups() {
+        let values = [10.0, 20.0, 30.0, 40.0];
+        let groups = group_box(&values, &[0, 2, 0, 2], 4);
+        assert_eq!(groups.len(), 4);
+        assert_eq!(groups[0].n, 2);
+        assert_eq!(groups[0].max, 30.0);
+        assert_eq!(groups[1].n, 0, "empty group summarizes as zeros");
+        assert_eq!(groups[2].mean, 30.0);
+        // out-of-range indices are dropped, not panicking
+        let clipped = group_box(&values, &[0, 9, 0, 9], 2);
+        assert_eq!(clipped[0].n, 2);
+        assert_eq!(clipped[1].n, 0);
+    }
+
+    #[test]
+    fn untagged_finishes_report_a_monolithic_federation_block() {
+        let mut m = Metrics::new(2);
+        m.record_finish(0.0, 100.0, 50.0);
+        let r = m.report("mono", 500.0);
+        assert_eq!(r.federation.shards, 1);
+        assert_eq!(r.federation.overflow_placements, 0);
+        assert_eq!(r.federation.per_shard.len(), 1);
+        assert_eq!(r.federation.per_shard[0].completed, 1);
+        assert_eq!(r.wait_by_class.len(), 1);
+        assert_eq!(r.wait_by_decile.len(), 10);
+        assert_eq!(r.wait_by_decile[0].n, 1, "default tag lands in decile 0");
+        assert!(
+            !r.summary().contains("federation"),
+            "single-shard runs keep the summary federation-free"
+        );
+    }
+
+    #[test]
+    fn fairness_breakdowns_group_by_tag() {
+        let mut m = Metrics::new(4);
+        m.shards = 2;
+        m.num_classes = 2;
+        m.record_finish_tagged(0.0, 100.0, 50.0, FinishTag { shard: 0, class: 0, decile: 0 });
+        m.record_finish_tagged(0.0, 200.0, 100.0, FinishTag { shard: 1, class: 1, decile: 9 });
+        m.record_shard_allocation(0, 0.5, 0.25);
+        m.record_shard_allocation(0, 0.7, 0.35);
+        m.record_shard_allocation(1, 0.1, 0.05);
+        m.overflow_placements = 3;
+        m.migrations = 1;
+        let r = m.report("fed", 1000.0);
+        assert_eq!(r.federation.shards, 2);
+        assert_eq!(r.federation.overflow_placements, 3);
+        assert_eq!(r.federation.migrations, 1);
+        assert_eq!(r.federation.per_shard.len(), 2);
+        assert_eq!(r.federation.per_shard[0].completed, 1);
+        assert!((r.federation.per_shard[0].share_cpu - 0.6).abs() < 1e-12);
+        assert!((r.federation.per_shard[1].share_mem - 0.05).abs() < 1e-12);
+        assert_eq!(r.federation.per_shard[1].wait.max, 100.0, "shard 1's finish waited 100s");
+        assert_eq!(r.wait_by_class.len(), 2);
+        assert_eq!(r.wait_by_class[1].n, 1);
+        assert_eq!(r.stretch_by_decile.len(), 10);
+        assert_eq!(r.stretch_by_decile[9].n, 1);
+        assert_eq!(r.stretch_by_decile[5].n, 0);
+        let s = r.summary();
+        assert!(s.contains("federation  2 shards"), "summary: {s}");
+        assert!(s.contains("3 overflow placements, 1 migrations"), "summary: {s}");
+        assert!(s.contains("class 1"), "summary: {s}");
+        assert!(s.contains("size decile stretch"), "summary: {s}");
+        let j = Json::parse(&r.to_json().to_string_pretty()).unwrap();
+        let fed = j.get("federation").unwrap();
+        assert_eq!(fed.get("shards").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(fed.get("overflow_placements").and_then(Json::as_f64), Some(3.0));
+        let lanes = fed.get("per_shard").and_then(Json::as_arr).unwrap();
+        assert_eq!(lanes.len(), 2);
+        assert_eq!(lanes[1].get("completed").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(lanes[1].get("share_cpu").and_then(Json::as_f64), Some(0.1));
+        assert_eq!(j.get("wait_by_decile").and_then(Json::as_arr).unwrap().len(), 10);
+        assert_eq!(j.get("stretch_by_class").and_then(Json::as_arr).unwrap().len(), 2);
     }
 
     #[test]

@@ -245,6 +245,22 @@ pub trait Placer: Send + Sync {
 
     /// Choose a host able to hold (cpus, mem) of *new* allocation.
     fn select(&self, cluster: &Cluster, cpus: f64, mem: f64) -> Option<HostId>;
+
+    /// Choose a host in the half-open id range `[lo, hi)` able to hold
+    /// (cpus, mem) of *new* allocation — the range-restricted variant
+    /// the federation layer uses to confine each probe to one shard's
+    /// contiguous sub-cluster (see [`crate::federation`]). Contract:
+    /// with the full range `[0, hosts)` this must agree with
+    /// [`select`](Placer::select) **bit for bit** — the cluster's `_in`
+    /// capacity indexes guarantee that for the built-in placers.
+    fn select_in(
+        &self,
+        cluster: &Cluster,
+        lo: usize,
+        hi: usize,
+        cpus: f64,
+        mem: f64,
+    ) -> Option<HostId>;
 }
 
 /// Most free memory first (the seed's only policy): spreads load, which
@@ -260,6 +276,10 @@ impl Placer for WorstFitPlacer {
     fn select(&self, cluster: &Cluster, cpus: f64, mem: f64) -> Option<HostId> {
         cluster.worst_fit(cpus, mem)
     }
+
+    fn select_in(&self, cluster: &Cluster, lo: usize, hi: usize, cpus: f64, mem: f64) -> Option<HostId> {
+        cluster.worst_fit_in(lo, hi, cpus, mem)
+    }
 }
 
 /// Lowest host id that fits: cheap and cache-friendly, fragments more.
@@ -273,6 +293,10 @@ impl Placer for FirstFitPlacer {
 
     fn select(&self, cluster: &Cluster, cpus: f64, mem: f64) -> Option<HostId> {
         cluster.first_fit(cpus, mem)
+    }
+
+    fn select_in(&self, cluster: &Cluster, lo: usize, hi: usize, cpus: f64, mem: f64) -> Option<HostId> {
+        cluster.first_fit_in(lo, hi, cpus, mem)
     }
 }
 
@@ -288,6 +312,10 @@ impl Placer for BestFitPlacer {
 
     fn select(&self, cluster: &Cluster, cpus: f64, mem: f64) -> Option<HostId> {
         cluster.best_fit(cpus, mem)
+    }
+
+    fn select_in(&self, cluster: &Cluster, lo: usize, hi: usize, cpus: f64, mem: f64) -> Option<HostId> {
+        cluster.best_fit_in(lo, hi, cpus, mem)
     }
 }
 
@@ -305,6 +333,10 @@ impl Placer for CpuAwareFitPlacer {
     fn select(&self, cluster: &Cluster, cpus: f64, mem: f64) -> Option<HostId> {
         cluster.cpu_aware_fit(cpus, mem)
     }
+
+    fn select_in(&self, cluster: &Cluster, lo: usize, hi: usize, cpus: f64, mem: f64) -> Option<HostId> {
+        cluster.cpu_aware_fit_in(lo, hi, cpus, mem)
+    }
 }
 
 /// Largest dot product between the request vector (cpus, mem) and the
@@ -321,6 +353,10 @@ impl Placer for DotProductFitPlacer {
 
     fn select(&self, cluster: &Cluster, cpus: f64, mem: f64) -> Option<HostId> {
         cluster.dot_product_fit(cpus, mem)
+    }
+
+    fn select_in(&self, cluster: &Cluster, lo: usize, hi: usize, cpus: f64, mem: f64) -> Option<HostId> {
+        cluster.dot_product_fit_in(lo, hi, cpus, mem)
     }
 }
 

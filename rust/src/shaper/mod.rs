@@ -106,11 +106,38 @@ pub fn plan_into(
     scratch: &mut PlanScratch,
     out: &mut ShapeActions,
 ) {
+    plan_federated(policy, cluster, apps, running, demands, &[], scratch, out);
+}
+
+/// [`plan_into`] restricted to one federation shard's control plane:
+/// `running` holds only the shard's home applications, and `foreign`
+/// lists the *placed* components owned by other shards' applications
+/// (overflow placements land them on any host). Foreign components are
+/// pre-charged at their **current allocation** into the pessimistic
+/// pass's fresh free arrays — they are immovable from this shard's
+/// perspective (their own shard's pass resizes them), exactly like the
+/// optimistic pass, whose live `free_cpus()`/`free_mem()` arrays already
+/// account every current allocation. With `foreign` empty this is
+/// [`plan_into`] bit for bit — the monolithic planner is the one-shard
+/// special case, not a separate code path.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_federated(
+    policy: Policy,
+    cluster: &Cluster,
+    apps: &[Application],
+    running: &[AppId],
+    demands: &HashMap<ComponentId, Demand>,
+    foreign: &[ComponentId],
+    scratch: &mut PlanScratch,
+    out: &mut ShapeActions,
+) {
     out.clear();
     match policy {
         Policy::Baseline => {}
         Policy::Optimistic => plan_optimistic(cluster, apps, running, demands, scratch, out),
-        Policy::Pessimistic => plan_pessimistic(cluster, apps, running, demands, scratch, out),
+        Policy::Pessimistic => {
+            plan_pessimistic(cluster, apps, running, demands, foreign, scratch, out)
+        }
     }
 }
 
@@ -196,11 +223,17 @@ fn priority_order_into(apps: &[Application], running: &[AppId], order: &mut Vec<
 /// The trial arrays live in `scratch` and are refreshed by
 /// `copy_from_slice`/`swap` instead of the seed's per-app `clone()`, so
 /// the pass never allocates once warm.
+///
+/// `foreign` components (other shards' placements, see
+/// [`plan_federated`]) are pre-charged at current allocation before the
+/// walk; the monolithic callers pass `&[]`, leaving the fresh-totals
+/// free arrays untouched.
 fn plan_pessimistic(
     cluster: &Cluster,
     apps: &[Application],
     running: &[AppId],
     demands: &HashMap<ComponentId, Demand>,
+    foreign: &[ComponentId],
     scratch: &mut PlanScratch,
     out: &mut ShapeActions,
 ) {
@@ -210,6 +243,12 @@ fn plan_pessimistic(
     free_cpu.extend(cluster.hosts.iter().map(|h| h.total_cpus));
     free_mem.clear();
     free_mem.extend(cluster.hosts.iter().map(|h| h.total_mem));
+    for &c in foreign {
+        if let Some(p) = cluster.placement(c) {
+            free_cpu[p.host] -= p.alloc_cpus;
+            free_mem[p.host] -= p.alloc_mem;
+        }
+    }
     priority_order_into(apps, running, order);
 
     for &a in order.iter() {
@@ -435,6 +474,36 @@ mod tests {
         let a = plan(Policy::Pessimistic, &cluster, &apps, &running, &d);
         assert_eq!(a.preempt_apps, vec![2]);
         validate_actions(&cluster, &apps, &a).unwrap();
+    }
+
+    #[test]
+    fn foreign_precharge_reserves_other_shards_allocations() {
+        // two apps share host 0; plan only app 1 as running, with app 0's
+        // components foreign (another shard's overflow placements): their
+        // live allocation (2 × 1 cpu) must be held back from the walk
+        let (apps, cluster) = toy(2, 1, 8.0, 32.0);
+        let running = vec![1];
+        let foreign: Vec<ComponentId> = apps[0].components.iter().map(|c| c.id).collect();
+        let mut scratch = PlanScratch::default();
+        let mut out = ShapeActions::default();
+        // effective cpu room 8 − 2 = 6: core 3 + elastic 3 fits exactly
+        let d = uniform_demand(&apps, 3.0, 0.5);
+        plan_federated(
+            Policy::Pessimistic, &cluster, &apps, &running, &d, &foreign, &mut scratch, &mut out,
+        );
+        assert!(out.preempt_apps.is_empty());
+        assert!(out.preempt_elastic.is_empty());
+        // core 3.5 + elastic 3.5 = 7 > 6: the elastic overflows
+        let d = uniform_demand(&apps, 3.5, 0.5);
+        plan_federated(
+            Policy::Pessimistic, &cluster, &apps, &running, &d, &foreign, &mut scratch, &mut out,
+        );
+        assert!(out.preempt_apps.is_empty());
+        assert_eq!(out.preempt_elastic, vec![apps[1].components[1].id]);
+        // monolithic view of the same demand fits (7 ≤ 8): empty foreign
+        // really is the unrestricted planner
+        plan_into(Policy::Pessimistic, &cluster, &apps, &running, &d, &mut scratch, &mut out);
+        assert!(out.preempt_elastic.is_empty());
     }
 
     #[test]

@@ -88,6 +88,29 @@
 //! only possible because synthesized ticks repeat the fixed-tick
 //! arithmetic exactly — same step formula, same accumulation order,
 //! same re-arm time iteration.
+//!
+//! ## Sharded multi-coordinator federation
+//!
+//! With `federation.shards = N` (or `ZOE_SHARDS=N`) the run is
+//! partitioned into `N` coordinator shards by
+//! [`crate::federation::ShardPlan`]: each shard owns a contiguous
+//! sub-cluster plus its own control-plane state — scheduler queue,
+//! [`crate::federation::FederatedPlacer`] (home-shard probe + bounded
+//! deterministic overflow probing), and monitor arena — while the
+//! engine keeps **one** global event queue, clock, forecast source and
+//! `RunReport`. Applications are admission-routed to a *home shard*
+//! (`app_id % N`, re-homed only by explicit migration); each scheduler
+//! wake drains every shard's queue in ascending shard order, and each
+//! shaping tick plans per shard through [`shaper::plan_federated`] with
+//! the other shards' placed components pre-charged as foreign load, so
+//! the per-shard pessimistic plans can never jointly overcommit a host.
+//! Monitor samples route to the arena of the shard owning the sampled
+//! host; per-shard wait/stretch/share fairness lanes land in
+//! [`crate::metrics::FederationStats`]. `shards = 1` takes the
+//! monolithic code paths verbatim (the federated placer and the
+//! per-shard loops degenerate to the exact pre-federation call
+//! sequence), which is how the bit-for-bit contract pinned by
+//! tests/federation_prop.rs holds in both engine modes.
 
 use std::collections::{BTreeSet, HashMap};
 use std::sync::Arc;
@@ -95,9 +118,10 @@ use std::sync::Arc;
 use crate::cluster::Cluster;
 use crate::config::{EngineMode, ForecasterKind, Policy, SimConfig};
 use crate::faults::{self, FaultPlan, TelemetryFault};
+use crate::federation::{FederatedPlacer, MigrationTracker, ShardPlan};
 use crate::forecast::quarantine::{Action, HealthTracker};
 use crate::forecast::{Forecast, Forecaster, SeriesRef};
-use crate::metrics::{FaultStats, Metrics, RunReport};
+use crate::metrics::{FaultStats, FinishTag, Metrics, RunReport};
 use crate::monitor::{Monitor, TickBuffers};
 use crate::scenario::ScenarioPlan;
 use crate::scheduler::{build_placer, build_scheduler, Placer, Scheduler, SchedulerFeedback};
@@ -165,20 +189,45 @@ const OPTIMISTIC_ADMISSION_PRICE: f64 = 1.0;
 const SHARD_THRESHOLD: usize = 1024;
 
 fn shard_threshold() -> usize {
-    std::env::var("ZOE_SHARD_THRESHOLD")
-        .ok()
-        .and_then(|s| s.trim().parse().ok())
-        .unwrap_or(SHARD_THRESHOLD)
+    crate::util::env::usize_at_least("ZOE_SHARD_THRESHOLD", 0).unwrap_or(SHARD_THRESHOLD)
 }
 
 /// Resolve the time-advance mode: `ZOE_ENGINE_MODE` (how ci.sh runs the
 /// whole suite under the event-driven core) overrides the config;
 /// tests that compare modes explicitly use `Engine::set_engine_mode`.
 fn engine_mode(cfg: &SimConfig) -> EngineMode {
-    std::env::var("ZOE_ENGINE_MODE")
-        .ok()
-        .and_then(|s| EngineMode::parse(s.trim()))
-        .unwrap_or(cfg.engine_mode)
+    crate::util::env::parse_or_warn("ZOE_ENGINE_MODE", "fixed-tick or event-driven", |s| {
+        EngineMode::parse(s)
+    })
+    .unwrap_or(cfg.engine_mode)
+}
+
+/// Resolve the coordinator shard count: `ZOE_SHARDS` (how ci.sh runs
+/// the whole suite federated) overrides the config; tests that pin a
+/// shard count regardless of the environment use [`Engine::set_shards`].
+fn resolve_shards(cfg: &SimConfig) -> usize {
+    crate::util::env::usize_at_least("ZOE_SHARDS", 1).unwrap_or(cfg.federation.shards.max(1))
+}
+
+/// The monitor arena owning component `c`'s series: the arena of the
+/// shard that owns the host `c` is placed on (samples are recorded by
+/// host, so reads must route identically). Unplaced components fall
+/// back to arena 0 — their series were reset on removal either way.
+/// Free function (not a method) so borrow-split call sites can pass the
+/// disjoint fields they already hold.
+fn monitor_for<'a>(
+    monitors: &'a [Monitor],
+    cluster: &Cluster,
+    plan: &ShardPlan,
+    c: ComponentId,
+) -> &'a Monitor {
+    if monitors.len() == 1 {
+        return &monitors[0];
+    }
+    match cluster.placement(c) {
+        Some(p) => &monitors[plan.shard_of_host(p.host)],
+        None => &monitors[0],
+    }
 }
 
 /// Which open telemetry window (if any) faults component `c`'s samples
@@ -230,9 +279,34 @@ pub struct Engine {
     cfg: SimConfig,
     apps: Vec<Application>,
     cluster: Cluster,
-    scheduler: Box<dyn Scheduler>,
-    placer: Box<dyn Placer>,
-    monitor: Monitor,
+    /// per-shard scheduler queues; index 0 is the injected/configured
+    /// scheduler, extra shards get fresh `cfg.sched`-built instances
+    schedulers: Vec<Box<dyn Scheduler>>,
+    /// the run's configured placer, shared by every shard's federated
+    /// wrapper (and used directly when `shards == 1`)
+    placer_base: Arc<dyn Placer>,
+    /// per-shard home-then-overflow placement wrappers; empty when
+    /// `shards == 1` (the monolithic path uses `placer_base` verbatim)
+    placers: Vec<FederatedPlacer>,
+    /// static host → shard partition (`shards = 1` ⇒ one full-range shard)
+    shard_plan: ShardPlan,
+    /// per-app home shard (admission routing; migration re-homes)
+    home: Vec<u16>,
+    /// per-app size decile 0..=9 by `(total_work, id)` rank — fixed at
+    /// construction, a pure function of the generated workload
+    decile: Vec<u8>,
+    /// sustained-imbalance detector for optional cross-shard migration
+    migration: MigrationTracker,
+    /// scratch: per-shard load observations for the migration tracker
+    shard_loads: Vec<f64>,
+    /// scratch: one shard's running apps for the federated shaper pass
+    shard_running_ids: Vec<AppId>,
+    /// scratch: other shards' placed components (federated pre-charge)
+    foreign_ids: Vec<ComponentId>,
+    /// fast-forward scratch: frozen per-shard allocation fractions
+    ff_shard_alloc: Vec<(f64, f64)>,
+    /// per-shard monitor arenas; `monitors[0]` is the monolithic arena
+    monitors: Vec<Monitor>,
     metrics: Metrics,
     queue: EventQueue,
     source: ForecastSource,
@@ -396,13 +470,39 @@ impl Engine {
             cfg.faults.quarantine_backoff_ticks,
             cfg.faults.quarantine_max_backoff_ticks,
         );
-        Engine {
+        // size deciles: rank by (total_work, id) — a pure function of the
+        // generated workload, so the fairness grouping is identical
+        // across repeats, engine modes and shard counts
+        let decile = {
+            let mut order: Vec<AppId> = (0..n_apps).collect();
+            order.sort_unstable_by(|&x, &y| {
+                wl.apps[x].total_work.total_cmp(&wl.apps[y].total_work).then(x.cmp(&y))
+            });
+            let mut dec = vec![0u8; n_apps];
+            for (rank, &a) in order.iter().enumerate() {
+                dec[a] = ((rank * 10) / n_apps.max(1)) as u8;
+            }
+            dec
+        };
+        let migration =
+            MigrationTracker::new(cfg.federation.migrate_imbalance, cfg.federation.migrate_sustain);
+        let shards = resolve_shards(&cfg);
+        let mut engine = Engine {
             tick: TickBuffers::new(cluster.len()),
+            shard_plan: ShardPlan::new(cluster.len(), 1),
             cluster,
-            monitor: Monitor::new(n_comp, history_cap),
+            monitors: vec![Monitor::new(n_comp, history_cap)],
             metrics: Metrics::new(n_apps),
-            scheduler,
-            placer,
+            schedulers: vec![scheduler],
+            placer_base: Arc::from(placer),
+            placers: Vec::new(),
+            home: vec![0; n_apps],
+            decile,
+            migration,
+            shard_loads: Vec::new(),
+            shard_running_ids: Vec::new(),
+            foreign_ids: Vec::new(),
+            ff_shard_alloc: Vec::new(),
             queue: EventQueue::new(),
             apps: wl.apps,
             comp_index,
@@ -447,7 +547,56 @@ impl Engine {
             dropout_skipped: 0,
             health,
             screen_actions: Vec::new(),
+        };
+        engine.metrics.num_classes = engine.cluster.class_count().max(1);
+        engine.set_shards(shards);
+        engine
+    }
+
+    /// Re-partition the run into `shards` coordinator shards (clamped to
+    /// the host count by [`ShardPlan::new`]). Must run before the first
+    /// event: shard state is construction-time, like the fault plan.
+    /// Shard 0 keeps the (possibly injected) scheduler; extra shards get
+    /// fresh `cfg.sched`-built instances. Tests pin a shard count with
+    /// this regardless of any `ZOE_SHARDS` in the environment.
+    #[doc(hidden)]
+    pub fn set_shards(&mut self, shards: usize) {
+        assert!(!self.primed, "shard count must be set before the run is primed");
+        let plan = ShardPlan::new(self.cluster.len(), shards);
+        let n = plan.shards();
+        while self.schedulers.len() < n {
+            self.schedulers.push(build_scheduler(&self.cfg.sched));
         }
+        self.schedulers.truncate(n);
+        let history_cap = (self.cfg.forecast.history * 2).max(64);
+        let n_comp = self.comp_index.len();
+        while self.monitors.len() < n {
+            self.monitors.push(Monitor::new(n_comp, history_cap));
+        }
+        self.monitors.truncate(n);
+        self.placers.clear();
+        if n > 1 {
+            for s in 0..n {
+                self.placers.push(FederatedPlacer::new(
+                    Arc::clone(&self.placer_base),
+                    plan.clone(),
+                    s,
+                    self.cfg.federation.overflow_probes,
+                ));
+            }
+        }
+        for (a, home) in self.home.iter_mut().enumerate() {
+            *home = plan.home_of_app(a) as u16;
+        }
+        self.metrics.shards = n;
+        self.shard_plan = plan;
+    }
+
+    /// The active host → shard partition (tests and benches inspect
+    /// ranges; `shards() == 1` means the monolithic control plane).
+    #[doc(hidden)]
+    pub fn shard_plan(&self) -> &ShardPlan {
+        &self.shard_plan
     }
 
     /// Override the time-advance mode (tests pin modes regardless of the
@@ -607,7 +756,8 @@ impl Engine {
         // fold the degradation counters owned by subsystems into the
         // fault ledger before reporting (all zero on an empty plan in a
         // healthy run, so `FaultStats::is_zero` keeps summaries quiet)
-        self.fault_stats.samples_dropped = self.dropout_skipped + self.monitor.nonfinite_dropped();
+        self.fault_stats.samples_dropped = self.dropout_skipped
+            + self.monitors.iter().map(Monitor::nonfinite_dropped).sum::<u64>();
         self.fault_stats.quarantined_series = self.health.quarantined_total();
         self.fault_stats.fallback_ticks = self.health.fallback_ticks();
         let mut report = self.metrics.report(run_name, sim_time);
@@ -632,6 +782,14 @@ impl Engine {
         if self.cfg.shaper.policy != Policy::Baseline {
             self.queue
                 .push(self.cfg.shaper.shaping_interval_s, Event::ShaperTick);
+        }
+        // cross-shard migration cadence: off by default
+        // (`migrate_interval_s = 0`), and never armed monolithic — a
+        // `shards = 1` run pushes nothing, keeping its event stream
+        // bit-identical to the pre-federation engine
+        if self.shard_plan.shards() > 1 && self.cfg.federation.migrate_interval_s > 0.0 {
+            self.queue
+                .push(self.cfg.federation.migrate_interval_s, Event::MigrationTick);
         }
         // fault schedule: ordinary queue events, dispatched (and counted)
         // identically in both engine modes; an empty plan pushes nothing,
@@ -687,6 +845,7 @@ impl Engine {
             }
             Event::RetryApp { app } => self.on_retry_app(app),
             Event::ScenarioStep { idx } => self.on_scenario_step(idx),
+            Event::MigrationTick => self.on_migration_tick(),
         }
     }
 
@@ -719,8 +878,14 @@ impl Engine {
 
     // ----- event handlers -------------------------------------------------
 
+    /// Route an application to its home shard's queue.
+    fn enqueue_home(&mut self, a: AppId) {
+        let s = self.home[a] as usize;
+        self.schedulers[s].enqueue(&self.apps, a);
+    }
+
     fn on_arrival(&mut self, a: AppId) {
-        self.scheduler.enqueue(&self.apps, a);
+        self.enqueue_home(a);
         self.queue.push(self.now(), Event::SchedulerWake);
     }
 
@@ -734,31 +899,53 @@ impl Engine {
         } else {
             1.0
         };
-        let started = self.scheduler.try_schedule(
-            &mut self.apps,
-            &mut self.cluster,
-            self.placer.as_ref(),
-            now,
-            price,
-        );
-        for outcome in started {
-            let a = outcome.app;
-            let elastic_placed = outcome
-                .placed
-                .iter()
-                .filter(|&&c| {
-                    let (app, k) = self.comp_index[c];
-                    !self.apps[app].components[k].is_core
-                })
-                .count();
-            self.placed_elastic[a] = elastic_placed;
-            self.running.insert(a);
-            self.schedule_finish(a);
+        // drain every shard's queue in ascending shard order — one
+        // deterministic pass; `shards == 1` is exactly the monolithic
+        // wake (one scheduler, the unrestricted configured placer)
+        let shards = self.shard_plan.shards();
+        for s in 0..shards {
+            let placer: &dyn Placer =
+                if shards == 1 { self.placer_base.as_ref() } else { &self.placers[s] };
+            let started = self.schedulers[s].try_schedule(
+                &mut self.apps,
+                &mut self.cluster,
+                placer,
+                now,
+                price,
+            );
+            for outcome in started {
+                let a = outcome.app;
+                let elastic_placed = outcome
+                    .placed
+                    .iter()
+                    .filter(|&&c| {
+                        let (app, k) = self.comp_index[c];
+                        !self.apps[app].components[k].is_core
+                    })
+                    .count();
+                if shards > 1 {
+                    // overflow accounting: components the federated
+                    // placer had to land outside the app's home shard
+                    let home = self.home[a] as usize;
+                    for &c in &outcome.placed {
+                        if let Some(p) = self.cluster.placement(c) {
+                            if self.shard_plan.shard_of_host(p.host) != home {
+                                self.metrics.overflow_placements += 1;
+                            }
+                        }
+                    }
+                }
+                self.placed_elastic[a] = elastic_placed;
+                self.running.insert(a);
+                self.schedule_finish(a);
+            }
         }
         // grade the reservation estimates of apps that just started
         // (signed: reserved start − actual start)
-        for err in self.scheduler.drain_shadow_errors() {
-            self.metrics.record_shadow_error(err);
+        for s in 0..shards {
+            for err in self.schedulers[s].drain_shadow_errors() {
+                self.metrics.record_shadow_error(err);
+            }
         }
     }
 
@@ -772,25 +959,45 @@ impl Engine {
         let now = self.now();
         self.update_progress(a, now);
         if self.apps[a].remaining_work <= WORK_EPS {
+            // fairness grouping labels, captured before the placements
+            // vanish: host class of the first placed core component
+            let class = self.apps[a]
+                .components
+                .iter()
+                .find(|c| c.is_core)
+                .and_then(|c| self.cluster.placement(c.id))
+                .map_or(0, |p| self.cluster.class_of(p.host));
             // completed; index loop: the removals need `&mut self`
             #[allow(clippy::needless_range_loop)]
             for k in 0..self.apps[a].components.len() {
                 let cid = self.apps[a].components[k].id;
                 self.cluster.remove(cid);
-                self.monitor.reset(cid);
+                self.reset_series(cid);
             }
             let AppState::Running { since } = self.apps[a].state else { unreachable!() };
             self.service_time[a] += (now - since).max(0.0);
             self.placed_elastic[a] = 0;
             self.apps[a].state = AppState::Finished { at: now };
             self.running.remove(&a);
+            let tag = FinishTag { shard: self.home[a], class, decile: self.decile[a] };
             self.metrics
-                .record_finish(self.apps[a].submit_time, now, self.service_time[a]);
+                .record_finish_tagged(self.apps[a].submit_time, now, self.service_time[a], tag);
             self.unfinished -= 1;
             self.queue.push(now, Event::SchedulerWake);
         } else {
             // rate changed since the event was scheduled; rearm
             self.schedule_finish(a);
+        }
+    }
+
+    /// Drop component `cid`'s monitored history in every shard arena.
+    /// Reset happens after (or interleaved with) `Cluster::remove`, when
+    /// the owning shard can no longer be derived from a placement —
+    /// resetting all arenas is equivalent: a series only ever has data
+    /// in the arena it was last recorded into, and reset is idempotent.
+    fn reset_series(&mut self, cid: ComponentId) {
+        for m in &mut self.monitors {
+            m.reset(cid);
         }
     }
 
@@ -893,16 +1100,20 @@ impl Engine {
             // real fractions (the cluster doesn't idle because a sample
             // was lost in flight)
             let c = self.tick.comp[i];
+            let h = self.tick.host[i];
+            // samples route to the arena of the shard owning the host
+            let ms = self.shard_plan.shard_of_host(h);
             match telemetry_fault_for(&self.fault_plan, &self.telemetry_open, c) {
-                None => self.monitor.record(c, cpu_frac, mem_frac),
+                None => self.monitors[ms].record(c, cpu_frac, mem_frac),
                 Some(TelemetryFault::Dropout) => {
                     self.dropout_skipped += 1;
-                    self.monitor.mark_stale(c);
+                    self.monitors[ms].mark_stale(c);
                 }
-                Some(TelemetryFault::Corruption) => self.monitor.record(c, f64::NAN, f64::NAN),
+                Some(TelemetryFault::Corruption) => {
+                    self.monitors[ms].record(c, f64::NAN, f64::NAN)
+                }
             }
             self.metrics.record_slack(self.tick.app[i], cpu_slack, mem_slack);
-            let h = self.tick.host[i];
             self.tick.used_mem.push(used_mem);
             self.tick.host_usage_mem[h] += used_mem;
             self.tick.host_samples[h].push(i as u32);
@@ -965,9 +1176,23 @@ impl Engine {
                 self.kill_oom(self.tick.app[i], cid, self.tick.is_core[i], now);
             }
         }
-        // 3) cluster-level allocation accounting
+        // 3) cluster-level allocation accounting, plus the per-shard
+        //    share lanes of the federation fairness report. At
+        //    `shards == 1` the lone shard's range is the whole cluster,
+        //    so reusing the already-computed pair is the range query's
+        //    result bit for bit (`allocation_fraction` delegates to the
+        //    full-range `allocation_fraction_in`).
         let (fc, fm) = self.cluster.allocation_fraction();
         self.metrics.record_allocation(fc, fm);
+        if self.shard_plan.shards() == 1 {
+            self.metrics.record_shard_allocation(0, fc, fm);
+        } else {
+            for s in 0..self.shard_plan.shards() {
+                let (lo, hi) = self.shard_plan.range(s);
+                let (sc, sm) = self.cluster.allocation_fraction_in(lo, hi);
+                self.metrics.record_shard_allocation(s, sc, sm);
+            }
+        }
     }
 
     /// Quiet-stretch fast-forward, entered from the run loop on a popped
@@ -1017,6 +1242,18 @@ impl Engine {
             }
         }
         let (fc, fm) = self.cluster.allocation_fraction();
+        // freeze the per-shard shares alongside the global pair: nothing
+        // can place/remove/resize before the barrier, so every
+        // synthesized tick records exactly what the real pass would
+        self.ff_shard_alloc.clear();
+        if self.shard_plan.shards() == 1 {
+            self.ff_shard_alloc.push((fc, fm));
+        } else {
+            for s in 0..self.shard_plan.shards() {
+                let (lo, hi) = self.shard_plan.range(s);
+                self.ff_shard_alloc.push(self.cluster.allocation_fraction_in(lo, hi));
+            }
+        }
         self.ff_cpu.clear();
         self.ff_mem.clear();
         let mut buffered = 0usize;
@@ -1103,6 +1340,9 @@ impl Engine {
                 }
             }
             self.metrics.record_allocation(fc, fm);
+            for (s, &(sc, sm)) in self.ff_shard_alloc.iter().enumerate() {
+                self.metrics.record_shard_allocation(s, sc, sm);
+            }
             self.metrics.monitor_ticks += 1;
             self.stats.quiet_ticks_elided += 1;
             count += 1;
@@ -1129,7 +1369,8 @@ impl Engine {
         }
         debug_assert_eq!(self.ff_cpu.len(), rows * ticks);
         let Engine {
-            monitor,
+            monitors,
+            shard_plan,
             tick,
             ff_cpu,
             ff_mem,
@@ -1145,6 +1386,8 @@ impl Engine {
             // stretch: one disposition holds for all `ticks` samples, and
             // the batched append reproduces the per-tick path exactly
             let c = tick.comp[i];
+            // same per-host-shard arena routing as the per-tick path
+            let monitor = &mut monitors[shard_plan.shard_of_host(tick.host[i])];
             match telemetry_fault_for(fault_plan, telemetry_open, c) {
                 None => {}
                 Some(TelemetryFault::Dropout) => {
@@ -1209,10 +1452,12 @@ impl Engine {
             }
             let AppState::Running { since } = self.apps[a].state else { unreachable!() };
             for comp in &self.apps[a].components {
-                if self.cluster.placement(comp.id).is_none() {
+                let Some(p) = self.cluster.placement(comp.id) else {
                     continue;
-                }
-                if self.monitor.len(comp.id) < grace_steps {
+                };
+                // series live in the arena of the shard owning the host
+                let ms = self.shard_plan.shard_of_host(p.host);
+                if self.monitors[ms].len(comp.id) < grace_steps {
                     continue; // grace period: keep current allocation
                 }
                 if is_oracle {
@@ -1241,11 +1486,11 @@ impl Engine {
             && self.scenario_plan.steps.is_empty()
             && self.shaper_key_version == Some(self.cluster.version())
             && self.shaper_key.len() == self.batch_ids.len()
-            && self
-                .shaper_key
-                .iter()
-                .zip(&self.batch_ids)
-                .all(|(&(c0, s0), &(c1, _, _))| c0 == c1 && s0 == self.monitor.seq(c1));
+            && self.shaper_key.iter().zip(&self.batch_ids).all(|(&(c0, s0), &(c1, _, _))| {
+                c0 == c1
+                    && s0
+                        == monitor_for(&self.monitors, &self.cluster, &self.shard_plan, c1).seq(c1)
+            });
         let mut key_valid = skip;
         if skip {
             self.stats.shaper_skips += 1;
@@ -1310,15 +1555,19 @@ impl Engine {
                 // Inputs are zero-copy views into the monitor arena,
                 // keyed so sliding-window caches persist across ticks.
                 let k = self.batch_ids.len();
-                let monitor = &self.monitor;
+                let monitors = &self.monitors;
+                let cluster = &self.cluster;
+                let shard_plan = &self.shard_plan;
                 let mut views: Vec<SeriesRef<'_>> = Vec::with_capacity(2 * k);
                 views.extend(self.batch_ids.iter().map(|&(cid, _, _)| {
-                    SeriesRef::keyed(SeriesRef::cpu_key(cid), monitor.seq(cid), monitor.cpu_series(cid))
-                        .with_stale(monitor.is_stale(cid))
+                    let m = monitor_for(monitors, cluster, shard_plan, cid);
+                    SeriesRef::keyed(SeriesRef::cpu_key(cid), m.seq(cid), m.cpu_series(cid))
+                        .with_stale(m.is_stale(cid))
                 }));
                 views.extend(self.batch_ids.iter().map(|&(cid, _, _)| {
-                    SeriesRef::keyed(SeriesRef::mem_key(cid), monitor.seq(cid), monitor.mem_series(cid))
-                        .with_stale(monitor.is_stale(cid))
+                    let m = monitor_for(monitors, cluster, shard_plan, cid);
+                    SeriesRef::keyed(SeriesRef::mem_key(cid), m.seq(cid), m.mem_series(cid))
+                        .with_stale(m.is_stale(cid))
                 }));
                 let mut all = model.forecast(&views);
                 if all.len() != 2 * k {
@@ -1383,48 +1632,125 @@ impl Engine {
                     // from for the next tick's work-skip check
                     key_valid = true;
                     self.shaper_key.clear();
-                    let monitor = &self.monitor;
-                    self.shaper_key.extend(
-                        self.batch_ids.iter().map(|&(cid, _, _)| (cid, monitor.seq(cid))),
-                    );
+                    let monitors = &self.monitors;
+                    let cluster = &self.cluster;
+                    let shard_plan = &self.shard_plan;
+                    self.shaper_key.extend(self.batch_ids.iter().map(|&(cid, _, _)| {
+                        (cid, monitor_for(monitors, cluster, shard_plan, cid).seq(cid))
+                    }));
                 }
             }
         }
 
         let mut actions = std::mem::take(&mut self.actions);
-        shaper::plan_into(
-            policy,
-            &self.cluster,
-            &self.apps,
-            &self.running_ids,
-            &self.demands,
-            &mut self.plan_scratch,
-            &mut actions,
-        );
-        debug_assert!(
-            shaper::validate_actions(&self.cluster, &self.apps, &actions).is_ok(),
-            "shaper planned an overcommit"
-        );
-
-        // publish the tick's decisions to the scheduler before applying
-        // them — planned preemptions plus the post-shaping ETA ledger —
-        // so reservation estimates stop assuming shaping never happens
-        // (the ROADMAP's ETA-feedback fidelity step). Skipped entirely
-        // for schedulers that would discard the snapshot; the capture is
-        // O(running · components), the same order as the demand pass
-        // this tick already ran, so it adds a constant factor — not a
-        // new asymptotic cost — to consumers that opted in.
-        if self.scheduler.wants_feedback() {
-            let fb = SchedulerFeedback::capture(
-                &self.apps,
+        let shards = self.shard_plan.shards();
+        if shards == 1 {
+            // the monolithic plan: one pass over every running app
+            // (`plan_into` delegates to `plan_federated` with an empty
+            // foreign set — the identical pre-federation arithmetic)
+            shaper::plan_into(
+                policy,
                 &self.cluster,
+                &self.apps,
                 &self.running_ids,
-                &actions,
-                now,
+                &self.demands,
+                &mut self.plan_scratch,
+                &mut actions,
             );
-            self.scheduler.observe(fb);
-        }
+            debug_assert!(
+                shaper::validate_actions(&self.cluster, &self.apps, &actions).is_ok(),
+                "shaper planned an overcommit"
+            );
 
+            // publish the tick's decisions to the scheduler before applying
+            // them — planned preemptions plus the post-shaping ETA ledger —
+            // so reservation estimates stop assuming shaping never happens
+            // (the ROADMAP's ETA-feedback fidelity step). Skipped entirely
+            // for schedulers that would discard the snapshot; the capture is
+            // O(running · components), the same order as the demand pass
+            // this tick already ran, so it adds a constant factor — not a
+            // new asymptotic cost — to consumers that opted in.
+            if self.schedulers[0].wants_feedback() {
+                let fb = SchedulerFeedback::capture(
+                    &self.apps,
+                    &self.cluster,
+                    &self.running_ids,
+                    &actions,
+                    now,
+                );
+                self.schedulers[0].observe(fb);
+            }
+            self.apply_shape_actions(&actions, now);
+        } else {
+            // federated: each shard plans over the apps it is home to,
+            // with every other shard's placed components pre-charged as
+            // foreign load, then applies before the next shard plans —
+            // sequential in ascending shard order, so shard `s+1` sees
+            // shard `s`'s post-apply cluster state (one deterministic
+            // serialization of the N control planes)
+            let mut shard_ids = std::mem::take(&mut self.shard_running_ids);
+            let mut foreign = std::mem::take(&mut self.foreign_ids);
+            for s in 0..shards {
+                shard_ids.clear();
+                foreign.clear();
+                for &a in &self.running_ids {
+                    if self.home[a] as usize == s {
+                        shard_ids.push(a);
+                    } else {
+                        for comp in &self.apps[a].components {
+                            if self.cluster.placement(comp.id).is_some() {
+                                foreign.push(comp.id);
+                            }
+                        }
+                    }
+                }
+                shaper::plan_federated(
+                    policy,
+                    &self.cluster,
+                    &self.apps,
+                    &shard_ids,
+                    &self.demands,
+                    &foreign,
+                    &mut self.plan_scratch,
+                    &mut actions,
+                );
+                debug_assert!(
+                    shaper::validate_actions(&self.cluster, &self.apps, &actions).is_ok(),
+                    "shard {s} planned an overcommit"
+                );
+                if self.schedulers[s].wants_feedback() {
+                    let fb = SchedulerFeedback::capture(
+                        &self.apps,
+                        &self.cluster,
+                        &shard_ids,
+                        &actions,
+                        now,
+                    );
+                    self.schedulers[s].observe(fb);
+                }
+                self.apply_shape_actions(&actions, now);
+            }
+            self.shard_running_ids = shard_ids;
+            self.foreign_ids = foreign;
+        }
+        // hand the action buffers back for reuse next tick
+        self.actions = actions;
+        // bind the demands cache to the *post-apply* allocation state:
+        // any place/remove/real-resize before the next shaping tick
+        // moves the cluster version and forces a recompute
+        self.shaper_key_version =
+            if key_valid { Some(self.cluster.version()) } else { None };
+        self.queue.push(now, Event::SchedulerWake);
+        if self.unfinished > 0 {
+            self.queue.push_in(shaping_interval, Event::ShaperTick);
+        }
+    }
+
+    /// Apply one planned action set: full preemptions, then partial
+    /// elastic preemptions, then resizes on the survivors — the order
+    /// the monolithic shaper tick always used; the federated path runs
+    /// it once per shard.
+    fn apply_shape_actions(&mut self, actions: &ShapeActions, now: f64) {
         // apply: full preemptions first (controlled, not failures)
         for &a in &actions.preempt_apps {
             self.preempt_app(a, now, /*is_failure=*/ false);
@@ -1455,16 +1781,50 @@ impl Engine {
                 crate::warn_log!("resize rejected: {e}");
             }
         }
-        // hand the action buffers back for reuse next tick
-        self.actions = actions;
-        // bind the demands cache to the *post-apply* allocation state:
-        // any place/remove/real-resize before the next shaping tick
-        // moves the cluster version and forces a recompute
-        self.shaper_key_version =
-            if key_valid { Some(self.cluster.version()) } else { None };
-        self.queue.push(now, Event::SchedulerWake);
+    }
+
+    /// Periodic cross-shard migration check (armed only when
+    /// `shards > 1` and `federation.migrate_interval_s > 0`): feed the
+    /// per-shard memory allocation fractions to the sustained-imbalance
+    /// tracker; when it fires, re-home the *youngest* running app (max
+    /// `(submit_time, id)` — the least sunk service) from the hottest
+    /// shard to the coldest and preempt it there, so its next admission
+    /// runs through the cold shard's control plane. One migration per
+    /// firing keeps the knob gentle and the decision sequence obvious.
+    fn on_migration_tick(&mut self) {
+        let n = self.shard_plan.shards();
+        self.shard_loads.clear();
+        for s in 0..n {
+            let (lo, hi) = self.shard_plan.range(s);
+            let (_, fm) = self.cluster.allocation_fraction_in(lo, hi);
+            self.shard_loads.push(fm);
+        }
+        let fired = self.migration.observe(&self.shard_loads);
+        if let Some((hot, cold)) = fired {
+            let victim = self
+                .running
+                .iter()
+                .copied()
+                .filter(|&a| self.home[a] as usize == hot)
+                .max_by(|&x, &y| {
+                    self.apps[x]
+                        .submit_time
+                        .total_cmp(&self.apps[y].submit_time)
+                        .then(x.cmp(&y))
+                });
+            if let Some(a) = victim {
+                let now = self.now();
+                self.home[a] = cold as u16;
+                self.metrics.migrations += 1;
+                // a controlled preemption: `preempt_app` re-enqueues via
+                // `enqueue_home`, which now routes to the cold shard
+                self.preempt_app(a, now, /*is_failure=*/ false);
+                self.queue.push(now, Event::SchedulerWake);
+            }
+        }
         if self.unfinished > 0 {
-            self.queue.push_in(shaping_interval, Event::ShaperTick);
+            self.queue
+                .push_in(self.cfg.federation.migrate_interval_s, Event::MigrationTick);
         }
     }
 
@@ -1513,7 +1873,7 @@ impl Engine {
         // would over-count work never actually re-done
         self.metrics.wasted_work += after - before;
         self.cluster.remove(cid);
-        self.monitor.reset(cid);
+        self.reset_series(cid);
         self.placed_elastic[a] = self.placed_elastic[a].saturating_sub(1);
         self.schedule_finish(a);
     }
@@ -1534,7 +1894,7 @@ impl Engine {
         for k in 0..self.apps[a].components.len() {
             let cid = self.apps[a].components[k].id;
             self.cluster.remove(cid);
-            self.monitor.reset(cid);
+            self.reset_series(cid);
         }
         self.placed_elastic[a] = 0;
         let app = &mut self.apps[a];
@@ -1557,7 +1917,7 @@ impl Engine {
             self.apps[a].preemptions += 1;
             self.metrics.record_preemption(true, done);
         }
-        self.scheduler.enqueue(&self.apps, a);
+        self.enqueue_home(a);
     }
 
     /// OOM kill decided by the "OS" on a saturated host.
@@ -1617,7 +1977,9 @@ impl Engine {
         }
         self.cluster.set_host_down(h);
         self.crash_down[h] = true;
-        self.fault_stats.reservations_voided += self.scheduler.on_capacity_loss() as u64;
+        for sch in &mut self.schedulers {
+            self.fault_stats.reservations_voided += sch.on_capacity_loss() as u64;
+        }
         // displacement freed capacity on the *surviving* hosts
         self.queue.push(now, Event::SchedulerWake);
     }
@@ -1654,7 +2016,7 @@ impl Engine {
         for k in 0..self.apps[a].components.len() {
             let cid = self.apps[a].components[k].id;
             self.cluster.remove(cid);
-            self.monitor.reset(cid);
+            self.reset_series(cid);
         }
         self.placed_elastic[a] = 0;
         let app = &mut self.apps[a];
@@ -1674,7 +2036,7 @@ impl Engine {
                 self.metrics.gave_up += 1;
             }
             self.fault_stats.crash_giveups += 1;
-            self.scheduler.enqueue(&self.apps, a);
+            self.enqueue_home(a);
         } else {
             // backoff is a pure function of (seed, app, attempt):
             // independent of interleaving, worker count and engine mode
@@ -1691,7 +2053,7 @@ impl Engine {
             return; // defensive: displaced apps sit Queued until here
         }
         self.fault_stats.retries += 1;
-        self.scheduler.enqueue(&self.apps, a);
+        self.enqueue_home(a);
         self.queue.push(self.now(), Event::SchedulerWake);
     }
 
@@ -1756,7 +2118,9 @@ impl Engine {
         self.cluster.set_host_down(h);
         // start-time reservations estimated against the pre-reshape
         // capacity are void either way
-        let _ = self.scheduler.on_capacity_loss();
+        for sch in &mut self.schedulers {
+            let _ = sch.on_capacity_loss();
+        }
     }
 
     /// Remove a reshape-displaced app (work lost, like `crash_displace`)
@@ -1773,7 +2137,7 @@ impl Engine {
         for k in 0..self.apps[a].components.len() {
             let cid = self.apps[a].components[k].id;
             self.cluster.remove(cid);
-            self.monitor.reset(cid);
+            self.reset_series(cid);
         }
         self.placed_elastic[a] = 0;
         let app = &mut self.apps[a];
@@ -1783,7 +2147,7 @@ impl Engine {
         self.running.remove(&a);
         self.finish_version[a] += 1; // invalidate in-flight finish
         self.metrics.wasted_work += done;
-        self.scheduler.enqueue(&self.apps, a);
+        self.enqueue_home(a);
     }
 }
 
@@ -1839,6 +2203,22 @@ pub fn run_simulation_with(
 ) -> anyhow::Result<RunReport> {
     let source = build_source(cfg, runtime)?;
     let engine = Engine::with_monitor_mode(cfg.clone(), source, mode);
+    Ok(engine.run(run_name))
+}
+
+/// `run_simulation` with a pinned coordinator shard count — setter
+/// precedence over any `ZOE_SHARDS` in the environment, so the
+/// sched-sweep `--shards` axis means what each cell's label says
+/// regardless of ambient env.
+pub fn run_simulation_sharded(
+    cfg: &SimConfig,
+    runtime: Option<Arc<crate::runtime::Runtime>>,
+    run_name: &str,
+    shards: usize,
+) -> anyhow::Result<RunReport> {
+    let source = build_source(cfg, runtime)?;
+    let mut engine = Engine::with_monitor_mode(cfg.clone(), source, MonitorMode::Incremental);
+    engine.set_shards(shards);
     Ok(engine.run(run_name))
 }
 

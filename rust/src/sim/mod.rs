@@ -64,6 +64,13 @@ pub enum Event {
     /// above) the step time bounds quiet-stretch elision so both engine
     /// modes observe the reshape at the same instant.
     ScenarioStep { idx: usize },
+    /// Federation (`federation::MigrationTracker`): periodic sustained-
+    /// imbalance check across coordinator shards; may re-home one
+    /// application from the hottest to the coldest shard. Armed only
+    /// when `shards > 1` *and* `federation.migrate_interval_s > 0`, so
+    /// monolithic and default-federated event streams are untouched.
+    /// A queue event, hence a quiet-stretch barrier in both modes.
+    MigrationTick,
 }
 
 /// Queue entry ordered by (time, sequence) — sequence keeps FIFO order of

@@ -1,0 +1,174 @@
+//! Unified `ZOE_*` environment-variable parsing.
+//!
+//! Every runtime env knob (`ZOE_WORKERS`, `ZOE_LANES`, `ZOE_SIMD`,
+//! `ZOE_FAULTS`, `ZOE_ENGINE_MODE`, `ZOE_SHARD_THRESHOLD`, `ZOE_SHARDS`)
+//! resolves through this module instead of ad-hoc `std::env::var` +
+//! `parse` snippets scattered per subsystem. Two rules hold everywhere:
+//!
+//! * **Precedence**: explicit setter > environment variable > config
+//!   value. Call sites express this by consulting the env helper first
+//!   and falling back to the configured/requested value on `None`
+//!   (programmatic setters such as `force_simd` bypass the env lookup
+//!   entirely).
+//! * **Parse failures warn once and fall back.** A set-but-unparsable
+//!   value (e.g. `ZOE_WORKERS=lots`) logs a single `WARN` line for the
+//!   whole process, then behaves exactly as if the variable were unset.
+//!   Unset or empty variables are silent. No knob ever panics.
+
+use std::sync::Mutex;
+
+/// Names that have already produced a parse-failure warning; a plain
+/// `Vec` because a process touches at most a handful of `ZOE_*` names.
+/// (`Vec::new` is `const`, so no lazy-init cell is needed.)
+static WARNED: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+/// Emit the one-per-process parse-failure warning for `name`.
+fn warn_once(name: &str, raw: &str, expected: &str) {
+    let mut seen = WARNED.lock().unwrap_or_else(|e| e.into_inner());
+    if seen.iter().any(|s| s == name) {
+        return;
+    }
+    seen.push(name.to_string());
+    crate::warn_log!("ignoring {name}={raw:?} (expected {expected}); falling back");
+}
+
+/// Test hook: forget which names have warned, so warn-once behavior is
+/// observable from a fresh state.
+#[cfg(test)]
+fn reset_warnings() {
+    WARNED.lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+/// Has `name` warned already? (Tests assert the warn-once contract.)
+fn has_warned(name: &str) -> bool {
+    let seen = WARNED.lock().unwrap_or_else(|e| e.into_inner());
+    seen.iter().any(|s| s == name)
+}
+
+/// Raw trimmed value of `name`, if set and non-empty after trimming.
+/// Unset, non-UTF-8 and whitespace-only values all read as absent.
+pub fn var(name: &str) -> Option<String> {
+    match std::env::var(name) {
+        Ok(v) => {
+            let t = v.trim();
+            if t.is_empty() {
+                None
+            } else {
+                Some(t.to_string())
+            }
+        }
+        Err(_) => None,
+    }
+}
+
+/// Parse `name` through `parse` (which returns `None` on bad input).
+/// Absent → `None` silently; present-but-unparsable → warn once
+/// (describing `expected`) and `None`.
+pub fn parse_or_warn<T>(
+    name: &str,
+    expected: &str,
+    parse: impl FnOnce(&str) -> Option<T>,
+) -> Option<T> {
+    let raw = var(name)?;
+    match parse(&raw) {
+        Some(v) => Some(v),
+        None => {
+            warn_once(name, &raw, expected);
+            None
+        }
+    }
+}
+
+/// `name` as a `usize >= min`; warn-once fallback on anything else.
+pub fn usize_at_least(name: &str, min: usize) -> Option<usize> {
+    parse_or_warn(name, &format!("an integer >= {min}"), |s| {
+        s.parse::<usize>().ok().filter(|&n| n >= min)
+    })
+}
+
+/// Is `name` set to an "off" token? `off` / `0` / `false` plus any
+/// `extra` tokens (e.g. `ZOE_SIMD` also accepts `scalar`), matched
+/// case-insensitively. Any *other* non-empty value is not an error —
+/// the historical knobs treat it as "leave the default on" — so this
+/// never warns.
+pub fn is_off(name: &str, extra: &[&str]) -> bool {
+    match var(name) {
+        Some(v) => {
+            let v = v.to_ascii_lowercase();
+            v == "off" || v == "0" || v == "false" || extra.iter().any(|e| *e == v)
+        }
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Env mutation is process-global, so every test here uses its own
+    // variable name and the suite stays order-independent. (Rust runs
+    // tests on parallel threads; `set_var` on *distinct* names is safe
+    // in practice on the platforms we build for.)
+
+    #[test]
+    fn absent_and_empty_read_as_none() {
+        std::env::remove_var("ZOE_ENV_TEST_ABSENT");
+        assert_eq!(var("ZOE_ENV_TEST_ABSENT"), None);
+        std::env::set_var("ZOE_ENV_TEST_EMPTY", "   ");
+        assert_eq!(var("ZOE_ENV_TEST_EMPTY"), None);
+        assert_eq!(usize_at_least("ZOE_ENV_TEST_EMPTY", 1), None);
+        assert!(!is_off("ZOE_ENV_TEST_EMPTY", &[]));
+    }
+
+    #[test]
+    fn values_are_trimmed() {
+        std::env::set_var("ZOE_ENV_TEST_TRIM", "  7 ");
+        assert_eq!(var("ZOE_ENV_TEST_TRIM").as_deref(), Some("7"));
+        assert_eq!(usize_at_least("ZOE_ENV_TEST_TRIM", 1), Some(7));
+    }
+
+    #[test]
+    fn usize_floor_is_enforced_with_warn_once() {
+        reset_warnings();
+        std::env::set_var("ZOE_ENV_TEST_FLOOR", "0");
+        assert_eq!(usize_at_least("ZOE_ENV_TEST_FLOOR", 1), None);
+        assert!(has_warned("ZOE_ENV_TEST_FLOOR"));
+        // second failure stays silent (already registered)
+        assert_eq!(usize_at_least("ZOE_ENV_TEST_FLOOR", 1), None);
+        std::env::set_var("ZOE_ENV_TEST_OK", "3");
+        assert_eq!(usize_at_least("ZOE_ENV_TEST_OK", 1), Some(3));
+        assert!(!has_warned("ZOE_ENV_TEST_OK"));
+    }
+
+    #[test]
+    fn garbage_warns_once_and_falls_back() {
+        reset_warnings();
+        std::env::set_var("ZOE_ENV_TEST_GARBAGE", "lots");
+        assert_eq!(usize_at_least("ZOE_ENV_TEST_GARBAGE", 1), None);
+        assert!(has_warned("ZOE_ENV_TEST_GARBAGE"));
+    }
+
+    #[test]
+    fn off_tokens_match_case_insensitively() {
+        for v in ["off", "OFF", "0", "false", "False"] {
+            std::env::set_var("ZOE_ENV_TEST_OFF", v);
+            assert!(is_off("ZOE_ENV_TEST_OFF", &[]), "{v}");
+        }
+        std::env::set_var("ZOE_ENV_TEST_OFF", "scalar");
+        assert!(!is_off("ZOE_ENV_TEST_OFF", &[]));
+        assert!(is_off("ZOE_ENV_TEST_OFF", &["scalar"]));
+        std::env::set_var("ZOE_ENV_TEST_OFF", "on");
+        assert!(!is_off("ZOE_ENV_TEST_OFF", &["scalar"]));
+    }
+
+    #[test]
+    fn parse_or_warn_custom_parser() {
+        std::env::set_var("ZOE_ENV_TEST_MODE", "event-driven");
+        let got = parse_or_warn("ZOE_ENV_TEST_MODE", "a mode name", |s| match s {
+            "fixed-tick" => Some(1),
+            "event-driven" => Some(2),
+            _ => None,
+        });
+        assert_eq!(got, Some(2));
+    }
+}

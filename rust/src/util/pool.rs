@@ -8,17 +8,14 @@
 //! parallelism without any synchronization on the hot path.
 //!
 //! Worker count resolution: `ZOE_WORKERS` (if set and >= 1) overrides the
-//! detected `available_parallelism`.
+//! detected `available_parallelism` (`util::env` parsing rules: a bad
+//! value warns once and falls back).
 
 /// Default worker count: `ZOE_WORKERS` env override, else the machine's
 /// available parallelism, else 1.
 pub fn num_workers() -> usize {
-    if let Ok(s) = std::env::var("ZOE_WORKERS") {
-        if let Ok(n) = s.trim().parse::<usize>() {
-            if n >= 1 {
-                return n;
-            }
-        }
+    if let Some(n) = crate::util::env::usize_at_least("ZOE_WORKERS", 1) {
+        return n;
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }

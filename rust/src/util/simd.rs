@@ -53,10 +53,7 @@ pub fn simd_enabled() -> bool {
 
 #[cold]
 fn init() -> bool {
-    let env_off = matches!(
-        std::env::var("ZOE_SIMD").as_deref().map(str::trim),
-        Ok("off") | Ok("0") | Ok("false") | Ok("scalar")
-    );
+    let env_off = crate::util::env::is_off("ZOE_SIMD", &["scalar"]);
     let on = !env_off && detect();
     STATE.store(if on { VECTOR } else { SCALAR }, Ordering::Relaxed);
     on

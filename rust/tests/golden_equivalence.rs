@@ -96,6 +96,70 @@ fn assert_reports_identical(a: &RunReport, b: &RunReport, ctx: &str) {
     for (i, (x, y)) in a.mem_slacks.iter().zip(&b.mem_slacks).enumerate() {
         assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: mem_slacks[{i}]");
     }
+    // PR 10 fairness breakdowns: the grouped BoxStats vectors and the
+    // federation lanes are derived from per-app tags and per-shard share
+    // series, so they must be bit-identical too
+    let grouped = [
+        (&a.wait_by_class, &b.wait_by_class, "wait_by_class"),
+        (&a.stretch_by_class, &b.stretch_by_class, "stretch_by_class"),
+        (&a.wait_by_decile, &b.wait_by_decile, "wait_by_decile"),
+        (&a.stretch_by_decile, &b.stretch_by_decile, "stretch_by_decile"),
+    ];
+    for (xs, ys, name) in grouped {
+        assert_eq!(xs.len(), ys.len(), "{ctx}: {name} len");
+        for (i, (x, y)) in xs.iter().zip(ys.iter()).enumerate() {
+            assert_boxstats_identical(x, y, &format!("{ctx}: {name}[{i}]"));
+        }
+    }
+    assert_eq!(a.federation.shards, b.federation.shards, "{ctx}: federation.shards");
+    assert_eq!(
+        a.federation.overflow_placements, b.federation.overflow_placements,
+        "{ctx}: federation.overflow_placements"
+    );
+    assert_eq!(a.federation.migrations, b.federation.migrations, "{ctx}: federation.migrations");
+    assert_eq!(
+        a.federation.per_shard.len(),
+        b.federation.per_shard.len(),
+        "{ctx}: federation.per_shard len"
+    );
+    for (i, (x, y)) in a.federation.per_shard.iter().zip(&b.federation.per_shard).enumerate() {
+        assert_eq!(x.completed, y.completed, "{ctx}: shard[{i}].completed");
+        assert_boxstats_identical(&x.wait, &y.wait, &format!("{ctx}: shard[{i}].wait"));
+        assert_boxstats_identical(&x.stretch, &y.stretch, &format!("{ctx}: shard[{i}].stretch"));
+        assert_eq!(
+            x.share_cpu.to_bits(),
+            y.share_cpu.to_bits(),
+            "{ctx}: shard[{i}].share_cpu {} vs {}",
+            x.share_cpu,
+            y.share_cpu
+        );
+        assert_eq!(
+            x.share_mem.to_bits(),
+            y.share_mem.to_bits(),
+            "{ctx}: shard[{i}].share_mem {} vs {}",
+            x.share_mem,
+            y.share_mem
+        );
+    }
+}
+
+/// Bitwise equality for one grouped-fairness BoxStats entry.
+fn assert_boxstats_identical(
+    x: &zoe_shaper::util::stats::BoxStats,
+    y: &zoe_shaper::util::stats::BoxStats,
+    ctx: &str,
+) {
+    assert_eq!(x.n, y.n, "{ctx}.n");
+    for (u, v, f) in [
+        (x.min, y.min, "min"),
+        (x.q1, y.q1, "q1"),
+        (x.median, y.median, "median"),
+        (x.q3, y.q3, "q3"),
+        (x.max, y.max, "max"),
+        (x.mean, y.mean, "mean"),
+    ] {
+        assert_eq!(u.to_bits(), v.to_bits(), "{ctx}.{f} {u} vs {v}");
+    }
 }
 
 #[test]
@@ -246,6 +310,21 @@ impl Placer for LinearWorstFitOracle {
             .max_by(|a, b| a.free_mem().total_cmp(&b.free_mem()))
             .map(|h| h.id)
     }
+
+    fn select_in(&self, cluster: &Cluster, lo: usize, hi: usize, cpus: f64, mem: f64) -> Option<HostId> {
+        // the same linear scan confined to the id range — the oracle the
+        // indexed `_in` capacity queries are pinned against in
+        // tests/placer_prop.rs
+        cluster
+            .hosts
+            .iter()
+            .filter(|h| (lo..hi).contains(&h.id))
+            .filter(|h| {
+                h.free_cpus() + CAPACITY_EPS >= cpus && h.free_mem() + CAPACITY_EPS >= mem
+            })
+            .max_by(|a, b| a.free_mem().total_cmp(&b.free_mem()))
+            .map(|h| h.id)
+    }
 }
 
 /// The seed system's FIFO, reimplemented as a plain sorted Vec queue:
@@ -352,15 +431,21 @@ fn default_policies_match_linear_reference_oracles() {
         let mut cfg = tier1_cfg();
         cfg.shaper.policy = policy;
         cfg.forecast.kind = ForecasterKind::Oracle;
-        let default_run =
-            run_simulation_with(&cfg, None, "default", MonitorMode::Incremental).unwrap();
-        let eng = Engine::with_policies(
+        // both engines pinned monolithic: the linear oracles encode the
+        // *seed* admission semantics, so an ambient ZOE_SHARDS must not
+        // re-partition either side of the comparison
+        let mut default_eng =
+            Engine::with_monitor_mode(cfg.clone(), ForecastSource::Oracle, MonitorMode::Incremental);
+        default_eng.set_shards(1);
+        let default_run = default_eng.run("default");
+        let mut eng = Engine::with_policies(
             cfg.clone(),
             ForecastSource::Oracle,
             MonitorMode::Incremental,
             Box::new(LinearFifoOracle::default()),
             Box::new(LinearWorstFitOracle),
         );
+        eng.set_shards(1);
         let oracle_run = eng.run("linear-oracles");
         assert_reports_identical(
             &default_run,
@@ -381,15 +466,18 @@ fn default_policies_match_linear_oracles_under_diurnal_scenario() {
         cfg.shaper.policy = policy;
         cfg.forecast.kind = ForecasterKind::Oracle;
         cfg.scenario = Some(zoe_shaper::scenario::library_spec("diurnal").expect("bundled"));
-        let default_run =
-            run_simulation_with(&cfg, None, "default", MonitorMode::Incremental).unwrap();
-        let eng = Engine::with_policies(
+        let mut default_eng =
+            Engine::with_monitor_mode(cfg.clone(), ForecastSource::Oracle, MonitorMode::Incremental);
+        default_eng.set_shards(1);
+        let default_run = default_eng.run("default");
+        let mut eng = Engine::with_policies(
             cfg.clone(),
             ForecastSource::Oracle,
             MonitorMode::Incremental,
             Box::new(LinearFifoOracle::default()),
             Box::new(LinearWorstFitOracle),
         );
+        eng.set_shards(1);
         let oracle_run = eng.run("linear-oracles-diurnal");
         assert!(default_run.scenario_steps > 0, "diurnal scenario never fired");
         assert_reports_identical(
@@ -567,15 +655,18 @@ fn stale_single_reservation_matches_legacy_oracle() {
         cfg.sched.scheduler = zoe_shaper::config::SchedulerKind::ReservationBackfill;
         cfg.sched.reservations = 1;
         cfg.sched.feedback = false;
-        let production =
-            run_simulation_with(&cfg, None, "production", MonitorMode::Incremental).unwrap();
-        let eng = Engine::with_policies(
+        let mut production_eng =
+            Engine::with_monitor_mode(cfg.clone(), ForecastSource::Oracle, MonitorMode::Incremental);
+        production_eng.set_shards(1);
+        let production = production_eng.run("production");
+        let mut eng = Engine::with_policies(
             cfg.clone(),
             ForecastSource::Oracle,
             MonitorMode::Incremental,
             Box::new(LegacyReservationOracle::new(cfg.sched.backfill_depth)),
             Box::new(LinearWorstFitOracle),
         );
+        eng.set_shards(1);
         let oracle_run = eng.run("legacy-oracle");
         assert_reports_identical(
             &production,
@@ -710,6 +801,41 @@ fn event_driven_elides_quiet_stretches_on_sparse_seven_day_trace() {
         "trace too short to be meaningful: {} monitor ticks",
         ed.monitor_ticks
     );
+}
+
+// ----- PR 10: federated control plane through the equivalence lens ------
+
+/// The 4-shard federation under both engine modes: quiet-stretch elision
+/// must reproduce per-shard monitor routing, overflow probing, the
+/// sequential shard shaper passes and the per-shard fairness lanes bit
+/// for bit. The shard count is pinned through `set_shards`, so the pin
+/// holds regardless of any ambient `ZOE_SHARDS`.
+#[test]
+fn event_driven_matches_fixed_tick_with_four_shards() {
+    for monitor_mode in [MonitorMode::Incremental, MonitorMode::ReferenceScan] {
+        let mut cfg = tier1_cfg();
+        cfg.shaper.policy = Policy::Pessimistic;
+        cfg.forecast.kind = ForecasterKind::Oracle;
+        let run = |engine_mode| {
+            let mut eng =
+                Engine::with_monitor_mode(cfg.clone(), ForecastSource::Oracle, monitor_mode);
+            eng.set_engine_mode(engine_mode);
+            eng.set_shards(4);
+            eng.run_collect("shards4")
+        };
+        let (ft, fts) = run(EngineMode::FixedTick);
+        let (ed, eds) = run(EngineMode::EventDriven);
+        let ctx = format!("4-shard {monitor_mode:?}");
+        assert_eq!(ft.federation.shards, 4, "{ctx}: shard count");
+        assert_eq!(ft.federation.per_shard.len(), 4, "{ctx}: fairness lanes");
+        assert_reports_identical(&ft, &ed, &ctx);
+        assert_eq!(fts.quiet_ticks_elided, 0, "{ctx}: fixed-tick elided ticks");
+        assert_eq!(
+            eds.host_scans + eds.quiet_ticks_elided,
+            ed.monitor_ticks,
+            "{ctx}: event-driven tick accounting"
+        );
+    }
 }
 
 // The ZOE_WORKERS sweep lives in tests/monitor_shard_workers.rs: it

@@ -13,8 +13,15 @@
 //! timed-scenario replay sweep (same scenario file, same report, any
 //! worker count).
 
+//! PR 10 adds the `ZOE_SHARDS` sweep: env-steered federation must equal
+//! the `Engine::set_shards`-pinned run, for any worker count and engine
+//! mode — and it lives here because `ZOE_SHARDS` is process-global env
+//! like the rest.
+
 use zoe_shaper::config::{EngineMode, ForecasterKind, Policy, SimConfig};
-use zoe_shaper::sim::engine::{run_simulation_full, run_simulation_with, MonitorMode};
+use zoe_shaper::sim::engine::{
+    build_source, run_simulation_full, run_simulation_with, Engine, MonitorMode,
+};
 
 #[test]
 fn sharded_monitor_pass_is_worker_count_independent() {
@@ -321,4 +328,77 @@ fn sharded_monitor_pass_is_worker_count_independent() {
         reference.mem_slack.mean.to_bits(),
         "vs reference: mem_slack.mean"
     );
+
+    // PR 10: the coordinator-federation env axis. For each
+    // ZOE_SHARDS in {1, 2, 4}, the env-steered run must be
+    // bit-identical to the `Engine::set_shards`-pinned run (proving
+    // the util::env plumbing and setter-precedence contract), and
+    // must stay bit-identical across ZOE_WORKERS in {1, 2, 8} and
+    // both engine modes at that shard count.
+    std::env::set_var("ZOE_SHARD_THRESHOLD", "1");
+    let mut fed_cfg = SimConfig::small();
+    fed_cfg.workload.num_apps = 60;
+    fed_cfg.cluster.hosts = 8;
+    fed_cfg.shaper.policy = Policy::Pessimistic;
+    fed_cfg.forecast.kind = ForecasterKind::Oracle;
+    for shards_s in ["1", "2", "4"] {
+        let shards: usize = shards_s.parse().unwrap();
+        // setter-pinned baseline with no ZOE_SHARDS in the env
+        std::env::remove_var("ZOE_SHARDS");
+        std::env::set_var("ZOE_WORKERS", "1");
+        let source = build_source(&fed_cfg, None).unwrap();
+        let mut eng =
+            Engine::with_monitor_mode(fed_cfg.clone(), source, MonitorMode::Incremental);
+        eng.set_shards(shards);
+        let pinned = eng.run("fed");
+        assert_eq!(pinned.federation.shards, shards, "pinned shard count");
+        assert!(pinned.completed > 0, "shards={shards_s}: pinned run completed nothing");
+
+        std::env::set_var("ZOE_SHARDS", shards_s);
+        for workers in ["1", "2", "8"] {
+            std::env::set_var("ZOE_WORKERS", workers);
+            for mode in [EngineMode::FixedTick, EngineMode::EventDriven] {
+                let (r, _) = run_simulation_full(
+                    &fed_cfg,
+                    None,
+                    "fed",
+                    MonitorMode::Incremental,
+                    mode,
+                )
+                .unwrap();
+                let ctx = format!("ZOE_SHARDS={shards_s} ZOE_WORKERS={workers} mode={mode:?}");
+                assert_eq!(r.federation.shards, shards, "{ctx}: env-steered shard count");
+                assert_eq!(pinned.completed, r.completed, "{ctx}: completed");
+                assert_eq!(
+                    pinned.federation.overflow_placements,
+                    r.federation.overflow_placements,
+                    "{ctx}: overflow_placements"
+                );
+                assert_eq!(
+                    pinned.turnaround.mean.to_bits(),
+                    r.turnaround.mean.to_bits(),
+                    "{ctx}: turnaround.mean"
+                );
+                assert_eq!(
+                    pinned.mem_slack.mean.to_bits(),
+                    r.mem_slack.mean.to_bits(),
+                    "{ctx}: mem_slack.mean"
+                );
+                assert_eq!(
+                    pinned.mean_alloc_mem.to_bits(),
+                    r.mean_alloc_mem.to_bits(),
+                    "{ctx}: mean_alloc_mem"
+                );
+                assert_eq!(pinned.sim_time.to_bits(), r.sim_time.to_bits(), "{ctx}: sim_time");
+                assert_eq!(
+                    pinned.to_json().to_string_compact(),
+                    r.to_json().to_string_compact(),
+                    "{ctx}: full report"
+                );
+            }
+        }
+    }
+    std::env::remove_var("ZOE_SHARDS");
+    std::env::remove_var("ZOE_WORKERS");
+    std::env::remove_var("ZOE_SHARD_THRESHOLD");
 }

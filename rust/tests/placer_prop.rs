@@ -158,6 +158,142 @@ fn prop_placer_none_means_no_host_fits() {
     }
 }
 
+/// PR 10: the range-restricted `_in` queries — the federation layer's
+/// per-shard admission and load-signal path — against brute-force
+/// linear scans over random sub-ranges, including empty, full, and
+/// past-the-end ranges (the `_in` queries clamp `hi`). Also pins the
+/// `Placer::select_in` contract for every placer: in-range, fitting,
+/// `None` only when nothing in the range fits, and full-range
+/// `select_in` degenerating to the unrestricted `select` — the exact
+/// identity the monolithic `shards = 1` engine path rides on.
+#[test]
+fn prop_range_queries_agree_with_linear_reference_under_churn() {
+    for seed in 0..CASES {
+        let mut rng = Pcg::seeded(20_000 + seed);
+        let mut cluster = random_cluster(&mut rng);
+        let mut live: Vec<usize> = Vec::new();
+        let mut next_cid = 0usize;
+        for _op in 0..40 {
+            if rng.f64() < 0.6 || live.is_empty() {
+                let (cpus, mem) = (rng.uniform(0.1, 8.0), rng.uniform(0.1, 24.0));
+                if let Some(h) = cluster.worst_fit(cpus, mem) {
+                    assert!(cluster.place(next_cid, h, cpus, mem, 0.0), "seed {seed}");
+                    live.push(next_cid);
+                    next_cid += 1;
+                }
+            } else {
+                let id = live.swap_remove(rng.index(live.len()));
+                assert!(cluster.remove(id).is_some(), "seed {seed}");
+            }
+            cluster.check_invariants().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+
+            let a = rng.index(cluster.len() + 1);
+            let b = rng.index(cluster.len() + 2);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let end = hi.min(cluster.len());
+            let (qc, qm) = (rng.uniform(0.1, 16.0), rng.uniform(0.1, 64.0));
+
+            let first_ref = (lo..end).find(|&h| fits(&cluster, h, qc, qm));
+            assert_eq!(
+                cluster.first_fit_in(lo, hi, qc, qm),
+                first_ref,
+                "seed {seed}: first_fit_in [{lo},{hi})"
+            );
+            // worst: most free mem, ties to the highest id (max_by
+            // keeps the last maximum over the ascending id scan)
+            let worst_ref = (lo..end).filter(|&h| fits(&cluster, h, qc, qm)).max_by(|&x, &y| {
+                cluster.hosts[x].free_mem().total_cmp(&cluster.hosts[y].free_mem())
+            });
+            assert_eq!(
+                cluster.worst_fit_in(lo, hi, qc, qm),
+                worst_ref,
+                "seed {seed}: worst_fit_in [{lo},{hi})"
+            );
+            // best: least free mem that fits, ties to the lowest id
+            let best_ref = (lo..end).filter(|&h| fits(&cluster, h, qc, qm)).min_by(|&x, &y| {
+                cluster.hosts[x]
+                    .free_mem()
+                    .total_cmp(&cluster.hosts[y].free_mem())
+                    .then(x.cmp(&y))
+            });
+            assert_eq!(
+                cluster.best_fit_in(lo, hi, qc, qm),
+                best_ref,
+                "seed {seed}: best_fit_in [{lo},{hi})"
+            );
+            let cpu_ref = (lo..end).filter(|&h| fits(&cluster, h, qc, qm)).max_by(|&x, &y| {
+                cluster.hosts[x].free_cpus().total_cmp(&cluster.hosts[y].free_cpus())
+            });
+            assert_eq!(
+                cluster.cpu_aware_fit_in(lo, hi, qc, qm),
+                cpu_ref,
+                "seed {seed}: cpu_aware_fit_in [{lo},{hi})"
+            );
+            let dot_ref = (lo..end).filter(|&h| fits(&cluster, h, qc, qm)).max_by(|&x, &y| {
+                let sx = qc * cluster.hosts[x].free_cpus() + qm * cluster.hosts[x].free_mem();
+                let sy = qc * cluster.hosts[y].free_cpus() + qm * cluster.hosts[y].free_mem();
+                sx.total_cmp(&sy)
+            });
+            assert_eq!(
+                cluster.dot_product_fit_in(lo, hi, qc, qm),
+                dot_ref,
+                "seed {seed}: dot_product_fit_in [{lo},{hi})"
+            );
+
+            let any = (lo..end).any(|h| fits(&cluster, h, qc, qm));
+            for placer in ALL_PLACERS {
+                match placer.select_in(&cluster, lo, hi, qc, qm) {
+                    Some(h) => {
+                        assert!(
+                            (lo..end).contains(&h),
+                            "seed {seed}: {} left the range [{lo},{hi})",
+                            placer.name()
+                        );
+                        assert!(
+                            fits(&cluster, h, qc, qm),
+                            "seed {seed}: {} chose an unfitting host",
+                            placer.name()
+                        );
+                    }
+                    None => assert!(
+                        !any,
+                        "seed {seed}: {} missed a fitting host in [{lo},{hi})",
+                        placer.name()
+                    ),
+                }
+                assert_eq!(
+                    placer.select_in(&cluster, 0, cluster.len(), qc, qm),
+                    placer.select(&cluster, qc, qm),
+                    "seed {seed}: {} full-range select_in != select",
+                    placer.name()
+                );
+            }
+
+            // the per-shard load signal mirrors the historical loop's
+            // accumulation order, so the comparison is exact (no down
+            // hosts in this test)
+            let (fc, fm) = cluster.allocation_fraction_in(lo, hi);
+            let (mut ac, mut tc, mut am, mut tm) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+            for host in &cluster.hosts[lo..end] {
+                ac += host.alloc_cpus;
+                tc += host.total_cpus;
+                am += host.alloc_mem;
+                tm += host.total_mem;
+            }
+            assert_eq!(
+                fc.to_bits(),
+                (ac / tc.max(1e-9)).to_bits(),
+                "seed {seed}: allocation_fraction_in cpu [{lo},{hi})"
+            );
+            assert_eq!(
+                fm.to_bits(),
+                (am / tm.max(1e-9)).to_bits(),
+                "seed {seed}: allocation_fraction_in mem [{lo},{hi})"
+            );
+        }
+    }
+}
+
 #[test]
 fn heterogeneous_placers_respect_per_host_capacity() {
     // 2 small + 2 big hosts: a component bigger than any small host must

@@ -23,6 +23,13 @@ ZOE_SIMD=off cargo test -q
 # the elided path, and the golden suites keep pinning both modes
 # explicitly regardless of this override
 ZOE_ENGINE_MODE=event-driven cargo test -q
+# federation gate: the whole suite must also pass with 4 coordinator
+# shards as the default control plane — every run_simulation* call that
+# doesn't pin a shard count then exercises the federated admission /
+# overflow path, while the golden and property suites pin their shard
+# counts via Engine::set_shards and so keep asserting the monolithic
+# and N-shard contracts explicitly regardless of this override
+ZOE_SHARDS=4 cargo test -q
 
 # chaos smoke: a seeded fault-injection run (crashes + telemetry
 # dropouts/corruption + forecaster faults) must complete and report
